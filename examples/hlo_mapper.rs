@@ -1,0 +1,82 @@
+//! End-to-end three-layer driver: the Pallas-backed AOT kernels on the map
+//! AND solve paths, executed from rust via PJRT — python never runs.
+//!
+//! ```sh
+//! make artifacts   # once: lowers L1/L2 to artifacts/*.hlo.txt
+//! cargo run --release --example hlo_mapper
+//! ```
+//!
+//! This is the EXPERIMENTS.md §E2E run: statistics through the
+//! `chunk_stats` artifact (L1 gram kernel inside), coordinate descent
+//! through the `cd_sweep` artifact, cross-checked against the pure-rust
+//! f64 path and the raw-data serial oracle.
+
+use plrmr::baselines::serial::serial_cd;
+use plrmr::data::synth::{generate, SynthSpec};
+use plrmr::runtime::{default_artifacts_dir, Catalog, HloCdSolver, HloStatsMapper};
+use plrmr::solver::penalty::Penalty;
+use plrmr::solver::{solve_cd, CdSettings};
+use plrmr::stats::SuffStats;
+use plrmr::util::rel_l2_err;
+use plrmr::util::timer::{fmt_secs, time_it};
+
+fn main() -> anyhow::Result<()> {
+    let dir = default_artifacts_dir();
+    let catalog = Catalog::load(&dir)?;
+    println!(
+        "artifact catalog: {} artifacts, chunk_stats widths {:?}",
+        catalog.artifacts.len(),
+        catalog.chunk_stats_widths()
+    );
+
+    let p = 32;
+    let lambda = 0.05;
+    let spec = SynthSpec::sparse_linear(200_000, p, 0.2, 2024);
+    let data = generate(&spec);
+
+    // --- L1/L2 map path: chunk_stats artifact (Pallas gram kernel inside)
+    let mut mapper = HloStatsMapper::new(&catalog, p)?;
+    let mut stats = SuffStats::new(p);
+    let (_, map_s) = time_it(|| mapper.fold_rows(&data.x, &data.y, &mut stats));
+    println!(
+        "\nmap phase on PJRT: {} blocks x {} rows + {} CPU tail rows in {} ({:.0} rows/s)",
+        mapper.hlo_blocks,
+        mapper.block_n,
+        mapper.cpu_rows,
+        fmt_secs(map_s),
+        data.n() as f64 / map_s,
+    );
+
+    // --- CPU map path for comparison
+    let mut cpu_stats = SuffStats::new(p);
+    let (_, cpu_s) = time_it(|| {
+        for i in 0..data.n() {
+            cpu_stats.push(data.row(i), data.y[i]);
+        }
+    });
+    println!("map phase on CPU f64:  {} ({:.0} rows/s)", fmt_secs(cpu_s), data.n() as f64 / cpu_s);
+
+    // --- L1/L2 solve path: cd_sweep artifact
+    let q = stats.quad_form();
+    let mut hlo_cd = HloCdSolver::new(&catalog, p)?;
+    let (beta_hlo, solve_s) = time_it(|| hlo_cd.solve(&q, lambda, 1.0, 1e-7, 500));
+    let beta_hlo = beta_hlo?;
+    println!(
+        "\nsolve on PJRT: {} kernel calls ({} fused sweeps each) in {}",
+        hlo_cd.calls, hlo_cd.sweeps_per_call, fmt_secs(solve_s)
+    );
+    let sol = solve_cd(&q, Penalty::lasso(), lambda, None, CdSettings::default());
+    let (_, beta_hlo_orig) = q.to_original_scale(&beta_hlo);
+    let (_, beta_cpu_orig) = q.to_original_scale(&sol.beta);
+
+    // --- ground truth
+    let (oracle, _) = serial_cd(&data, Penalty::lasso(), lambda, 1e-12, 50_000);
+    println!("\nagreement (rel L2 err on original-scale beta):");
+    println!("  HLO stats + HLO cd  vs oracle: {:.3e}", rel_l2_err(&beta_hlo_orig, &oracle.beta));
+    println!("  HLO stats + rust cd vs oracle: {:.3e}", rel_l2_err(&beta_cpu_orig, &oracle.beta));
+    let agree = rel_l2_err(&beta_hlo_orig, &beta_cpu_orig);
+    println!("  HLO cd vs rust cd (same stats): {agree:.3e}");
+    assert!(agree < 1e-3, "kernel and rust solver must agree");
+    println!("\nthree-layer stack verified: pallas kernel -> HLO text -> PJRT -> rust ✔");
+    Ok(())
+}

@@ -1,0 +1,124 @@
+"""AOT bridge: lower the L2 model to HLO *text* artifacts + manifest.
+
+Run once by `make artifacts`; python never appears on the request path.
+
+Interchange is HLO text, NOT `.serialize()`: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts are static-shape, so we emit a catalog of (block_n, p) variants;
+`manifest.json` describes every artifact (kind, shapes, dtypes, outputs) and
+the rust `runtime::artifact` module is the single consumer of that schema.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# The shape catalog.  p values cover the experiments in DESIGN.md; block_n
+# is the static row count per chunk_stats invocation (rust pads nothing:
+# partial blocks take the CPU path).
+CHUNK_STATS_SHAPES = [
+    # (block_n, p)
+    (1024, 8),
+    (1024, 32),
+    (1024, 64),
+    (4096, 32),
+]
+CD_SWEEP_PS = [8, 32, 64, 256]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype="f32"):
+    return {"shape": list(shape), "dtype": dtype}
+
+
+def build_catalog():
+    """Yield (name, lowered, manifest_entry) for every artifact."""
+    f32 = jnp.float32
+    for bn, p in CHUNK_STATS_SHAPES:
+        name = f"chunk_stats_n{bn}_p{p}"
+        fn = lambda x, y: model.chunk_stats(x, y)
+        lowered = jax.jit(fn).lower(
+            jax.ShapeDtypeStruct((bn, p), f32), jax.ShapeDtypeStruct((bn,), f32)
+        )
+        entry = {
+            "name": name,
+            "kind": "chunk_stats",
+            "params": {"block_n": bn, "p": p},
+            "file": f"{name}.hlo.txt",
+            "inputs": [_spec((bn, p)), _spec((bn,))],
+            "outputs": [_spec((p + 1,)), _spec((p + 1, p + 1))],
+        }
+        yield name, lowered, entry
+    for p in CD_SWEEP_PS:
+        name = f"cd_sweep_p{p}"
+        fn = lambda g, c, b, lam, alpha: model.cd_sweep(g, c, b, lam, alpha)
+        lowered = jax.jit(fn).lower(
+            jax.ShapeDtypeStruct((p, p), f32),
+            jax.ShapeDtypeStruct((p,), f32),
+            jax.ShapeDtypeStruct((p,), f32),
+            jax.ShapeDtypeStruct((), f32),
+            jax.ShapeDtypeStruct((), f32),
+        )
+        entry = {
+            "name": name,
+            "kind": "cd_sweep",
+            "params": {"p": p, "n_sweeps": model.N_SWEEPS},
+            "file": f"{name}.hlo.txt",
+            "inputs": [
+                _spec((p, p)),
+                _spec((p,)),
+                _spec((p,)),
+                _spec(()),
+                _spec(()),
+            ],
+            "outputs": [_spec((p,)), _spec(())],
+        }
+        yield name, lowered, entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    # kept for Makefile compatibility: --out <file> sets out-dir to its parent
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    out_dir = os.path.dirname(args.out) if args.out else args.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {"format": 1, "artifacts": []}
+    for name, lowered, entry in build_catalog():
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, entry["file"])
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(entry)
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {out_dir}/manifest.json ({len(manifest['artifacts'])} artifacts)")
+    # Makefile stamps on a single file; touch it if --out was given.
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write("\n".join(e["file"] for e in manifest["artifacts"]) + "\n")
+
+
+if __name__ == "__main__":
+    main()

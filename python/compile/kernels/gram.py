@@ -1,0 +1,130 @@
+"""Layer-1 Pallas kernel: blocked Gram matrix G = Z^T Z.
+
+This is the compute hot-spot of the paper's map phase: every mapper folds a
+block of rows into the additive sufficient statistics (10), whose dominant
+cost is the rank-`bn` update Z^T Z += Z_blk^T Z_blk (O(n p^2) overall).
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the grid iterates
+(row-block, col-tile-i, col-tile-j); each step issues a (bp x bn)(bn x bp)
+matmul — an MXU systolic-array contraction — into an f32 VMEM accumulator
+tile that is revisited across the row-block (reduction) axis.  On this image
+we always lower with ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); correctness is validated against ``ref.py`` and TPU
+utilization is estimated analytically.
+
+Padding contract: callers may zero-pad the *column* axis up to a tile
+multiple — zero columns produce zero rows/cols in G, which the consumer
+slices away.  Row padding is NOT allowed here when the caller also needs a
+row mean; the rust runtime routes partial row-blocks to its CPU path
+instead (exactness over cleverness).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes.  bn is the row (reduction) block; bp the column tile.
+# Chosen so 2 input tiles + 1 accumulator tile fit comfortably in ~16 MiB
+# VMEM with room for double buffering (see DESIGN.md).
+DEFAULT_BLOCK_ROWS = 256
+DEFAULT_BLOCK_COLS = 128
+
+
+def _gram_tile_kernel(z_i_ref, z_j_ref, o_ref):
+    """One grid step: o[ti, tj] += z[rb, ti]^T @ z[rb, tj].
+
+    Grid layout is (col_tile_i, col_tile_j, row_block); the row-block axis is
+    innermost so the output tile stays resident while the reduction streams.
+    """
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # MXU contraction: (bp, bn) @ (bn, bp) accumulated in f32.
+    o_ref[...] += jax.lax.dot_general(
+        z_i_ref[...],
+        z_j_ref[...],
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _pick_tiles(n: int, p: int, block_rows: int, block_cols: int):
+    bn = min(block_rows, n)
+    bp = min(block_cols, p)
+    if n % bn != 0:
+        raise ValueError(f"rows {n} not a multiple of row block {bn}")
+    if p % bp != 0:
+        raise ValueError(f"cols {p} not a multiple of col tile {bp}")
+    return bn, bp
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_rows", "block_cols", "interpret")
+)
+def gram(
+    z: jax.Array,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    block_cols: int = DEFAULT_BLOCK_COLS,
+    interpret: bool = True,
+) -> jax.Array:
+    """Blocked G = z^T @ z for z of shape (n, p); returns (p, p) f32.
+
+    ``n`` must be a multiple of ``block_rows`` (or equal to it) and ``p`` a
+    multiple of ``block_cols`` (or smaller, in which case one tile is used).
+    """
+    n, p = z.shape
+    bn, bp = _pick_tiles(n, p, block_rows, block_cols)
+    grid = (p // bp, p // bp, n // bn)
+    return pl.pallas_call(
+        _gram_tile_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bp), lambda i, j, r: (r, i)),
+            pl.BlockSpec((bn, bp), lambda i, j, r: (r, j)),
+        ],
+        out_specs=pl.BlockSpec((bp, bp), lambda i, j, r: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((p, p), jnp.float32),
+        interpret=interpret,
+    )(z, z)
+
+
+def _colsum_kernel(z_ref, o_ref):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.sum(z_ref[...], axis=0, keepdims=True)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_rows", "block_cols", "interpret")
+)
+def colsum(
+    z: jax.Array,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    block_cols: int = DEFAULT_BLOCK_COLS,
+    interpret: bool = True,
+) -> jax.Array:
+    """Blocked column sums of z (n, p) -> (1, p) f32 (companion reduction).
+
+    Used by the L2 model to form the block mean before centering; kept as a
+    Pallas kernel so the whole chunk-statistics HLO is kernel-backed.
+    """
+    n, p = z.shape
+    bn, bp = _pick_tiles(n, p, block_rows, block_cols)
+    grid = (p // bp, n // bn)
+    return pl.pallas_call(
+        _colsum_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bn, bp), lambda j, r: (r, j))],
+        out_specs=pl.BlockSpec((1, bp), lambda j, r: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, p), jnp.float32),
+        interpret=interpret,
+    )(z)

@@ -1,0 +1,114 @@
+"""Layer-2 JAX model: the paper's per-chunk computation, kernel-backed.
+
+Two computations are AOT-lowered for the rust coordinator:
+
+``chunk_stats(x, y)`` — the map-phase body of Algorithm 1, line 5: fold a
+block of rows into the robust additive statistics of §2.1.  We return the
+*centered* form (block mean + centered scatter matrix), which is exactly
+the state the rust `stats::Moments` accumulator merges with Chan's update
+(paper eq. 14); centered blocks are the numerically robust representation
+the paper argues for (means stay O(1), the scatter never sees the n^2
+cancellation of naive sum-of-squares aggregation).
+
+``cd_sweep(gram, xty, beta, lam, alpha)`` — `N_SWEEPS` full cycles of
+covariance-update coordinate descent (Friedman et al. [2], the solver the
+paper's CV phase calls per (fold, lambda)).  The rust solver uses this as
+its accelerated dense path and finishes convergence checks on the CPU.
+
+Both lower into a single HLO module per static shape (see aot.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import gram as gram_kernels
+
+# Number of full coordinate-descent cycles fused into one cd_sweep artifact.
+# The rust caller invokes the artifact repeatedly until its own convergence
+# criterion fires, so this only controls host<->XLA round-trip granularity.
+N_SWEEPS = 4
+
+
+def chunk_stats(x: jax.Array, y: jax.Array, *, block_rows: int | None = None):
+    """Map-phase statistics for one full block: (mean_z, centered scatter).
+
+    x: (bn, p) f32, y: (bn,) f32 with bn a multiple of the kernel row block
+    (the rust runtime routes partial blocks to its CPU path instead).
+
+    Returns:
+      mean_z: (p+1,) column means of z = [x | y]
+      m2:     (p+1, p+1) centered scatter (z - mean)^T (z - mean)
+
+    Together with the static row count bn these are the paper's statistics
+    (10) in robust form: XtX, Xty, sum y^2 are recovered from m2 + mean as
+    in §2.1's final remark.
+    """
+    bn = x.shape[0]
+    z = jnp.concatenate([x.astype(jnp.float32), y.astype(jnp.float32)[:, None]], axis=1)
+    p1 = z.shape[1]
+    br = block_rows if block_rows is not None else min(gram_kernels.DEFAULT_BLOCK_ROWS, bn)
+    # Column-tile only when the width is tile-divisible; odd widths (p+1 is
+    # often odd) use a single column tile — interpret-mode Pallas is fine
+    # with that, and the TPU story pads columns instead (DESIGN.md).
+    bc = gram_kernels.DEFAULT_BLOCK_COLS
+    if p1 % bc != 0:
+        bc = p1
+    sums = gram_kernels.colsum(z, block_rows=br, block_cols=bc)[0]
+    mean = sums / jnp.float32(bn)
+    zc = z - mean
+    m2 = gram_kernels.gram(zc, block_rows=br, block_cols=bc)
+    return mean, m2
+
+
+def _soft(r, thr):
+    return jnp.sign(r) * jnp.maximum(jnp.abs(r) - thr, 0.0)
+
+
+def cd_sweep(
+    gram: jax.Array,
+    xty: jax.Array,
+    beta: jax.Array,
+    lam: jax.Array,
+    alpha: jax.Array,
+    *,
+    n_sweeps: int = N_SWEEPS,
+):
+    """`n_sweeps` cycles of exact coordinate descent on the quadratic form.
+
+    Objective: 0.5 b^T G b - c^T b + lam*(alpha |b|_1 + 0.5 (1-alpha)|b|_2^2).
+    Update:    b_j <- S(c_j - sum_{k!=j} G_jk b_k, lam*alpha) / (G_jj + lam*(1-alpha))
+
+    Returns (beta, max_abs_delta) so the rust caller can test convergence
+    without re-reading the full vector when it only needs the delta.
+    """
+    p = beta.shape[0]
+    la = lam * alpha
+    lr = lam * (1.0 - alpha)
+
+    def coord(j, carry):
+        b, dmax = carry
+        gj = jax.lax.dynamic_slice_in_dim(gram, j, 1, axis=0)[0]  # (p,)
+        gjj = gj[j]
+        r = xty[j] - (gj @ b - gjj * b[j])
+        num = _soft(r, la)
+        denom = gjj + lr
+        bj_new = jnp.where(denom > 0, num / denom, 0.0)
+        dmax = jnp.maximum(dmax, jnp.abs(bj_new - b[j]))
+        b = b.at[j].set(bj_new)
+        return b, dmax
+
+    def sweep(_, carry):
+        b, _ = carry
+        return jax.lax.fori_loop(0, p, coord, (b, jnp.float32(0.0)))
+
+    beta_out, dmax = jax.lax.fori_loop(0, n_sweeps, sweep, (beta, jnp.float32(0.0)))
+    return beta_out, dmax
+
+
+@functools.partial(jax.jit, static_argnames=("n_sweeps",))
+def cd_sweep_jit(gram, xty, beta, lam, alpha, *, n_sweeps: int = N_SWEEPS):
+    return cd_sweep(gram, xty, beta, lam, alpha, n_sweeps=n_sweeps)

@@ -1,0 +1,42 @@
+"""AOT catalog sanity: every artifact lowers, parses, and matches its manifest entry."""
+
+import json
+
+from compile import aot, model
+
+
+def test_catalog_entries_consistent():
+    names = set()
+    for name, lowered, entry in aot.build_catalog():
+        assert name == entry["name"] and name not in names
+        names.add(name)
+        assert entry["file"] == f"{name}.hlo.txt"
+        assert entry["kind"] in ("chunk_stats", "cd_sweep")
+        if entry["kind"] == "chunk_stats":
+            bn, p = entry["params"]["block_n"], entry["params"]["p"]
+            assert entry["inputs"][0]["shape"] == [bn, p]
+            assert entry["outputs"][1]["shape"] == [p + 1, p + 1]
+        else:
+            p = entry["params"]["p"]
+            assert entry["params"]["n_sweeps"] == model.N_SWEEPS
+            assert entry["inputs"][0]["shape"] == [p, p]
+            assert entry["outputs"][0]["shape"] == [p]
+
+
+def test_hlo_text_emits_entry_computation():
+    # Lower the smallest artifact and check the text looks like parseable HLO.
+    for name, lowered, entry in aot.build_catalog():
+        if entry["params"].get("p") == 8 and entry["kind"] == "cd_sweep":
+            text = aot.to_hlo_text(lowered)
+            assert "ENTRY" in text and "HloModule" in text
+            # return_tuple=True: root must be a tuple
+            assert "tuple(" in text or "(f32[" in text
+            return
+    raise AssertionError("p=8 cd_sweep not in catalog")
+
+
+def test_manifest_round_trips_json():
+    entries = [e for _, _, e in aot.build_catalog()]
+    blob = json.dumps({"format": 1, "artifacts": entries})
+    back = json.loads(blob)
+    assert len(back["artifacts"]) == len(entries)

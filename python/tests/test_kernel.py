@@ -1,0 +1,117 @@
+"""Kernel-vs-oracle correctness: the CORE signal for the L1 layer.
+
+Hypothesis sweeps shapes and dtypes of the Pallas kernels against the
+pure-jnp oracles in kernels/ref.py.  All kernels run under interpret=True
+(the only executable Pallas mode on CPU PJRT).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import gram as K
+from compile.kernels import ref
+
+
+def _rand(shape, dtype, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal(shape).astype(np.float32) * 3.0
+    return jnp.asarray(a, dtype=dtype)
+
+
+# ---------------------------------------------------------------- gram ----
+
+BLOCKY = st.sampled_from([1, 2, 3, 4])  # row blocks per input
+TILEY = st.sampled_from([1, 2, 3])  # col tiles per input
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    rb=BLOCKY,
+    ct=TILEY,
+    bn=st.sampled_from([8, 16, 32]),
+    bp=st.sampled_from([4, 8]),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gram_matches_ref(rb, ct, bn, bp, dtype, seed):
+    n, p = rb * bn, ct * bp
+    z = _rand((n, p), dtype, seed)
+    got = K.gram(z, block_rows=bn, block_cols=bp)
+    want = ref.gram_ref(z)
+    assert got.shape == (p, p) and got.dtype == jnp.float32
+    tol = 1e-4 if dtype == jnp.float32 else 2e-1
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=tol, atol=tol)
+
+
+def test_gram_single_tile_odd_width():
+    # p+1 widths (odd) fall back to one column tile.
+    z = _rand((64, 33), jnp.float32, 7)
+    got = K.gram(z, block_rows=32, block_cols=33)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref.gram_ref(z)), rtol=1e-4)
+
+
+def test_gram_symmetry():
+    z = _rand((128, 16), jnp.float32, 11)
+    g = np.asarray(K.gram(z, block_rows=32, block_cols=8))
+    np.testing.assert_allclose(g, g.T, rtol=0, atol=1e-3)
+
+
+def test_gram_psd_diagonal_nonnegative():
+    z = _rand((96, 12), jnp.float32, 13)
+    g = np.asarray(K.gram(z, block_rows=32, block_cols=12))
+    assert (np.diag(g) >= 0).all()
+
+
+def test_gram_rejects_indivisible_rows():
+    z = _rand((33, 8), jnp.float32, 3)
+    with pytest.raises(ValueError):
+        K.gram(z, block_rows=32, block_cols=8)
+
+
+def test_gram_rejects_indivisible_cols():
+    z = _rand((32, 9), jnp.float32, 3)
+    with pytest.raises(ValueError):
+        K.gram(z, block_rows=32, block_cols=8)
+
+
+def test_gram_zero_input():
+    z = jnp.zeros((64, 8), jnp.float32)
+    g = np.asarray(K.gram(z, block_rows=32, block_cols=8))
+    assert (g == 0).all()
+
+
+def test_gram_zero_padded_columns_exact():
+    # The padding contract: zero columns contribute exactly nothing.
+    z = _rand((64, 6), jnp.float32, 5)
+    zp = jnp.pad(z, ((0, 0), (0, 2)))
+    g = np.asarray(K.gram(zp, block_rows=32, block_cols=8))
+    np.testing.assert_allclose(g[:6, :6], np.asarray(ref.gram_ref(z)), rtol=1e-4)
+    assert (g[6:, :] == 0).all() and (g[:, 6:] == 0).all()
+
+
+# -------------------------------------------------------------- colsum ----
+
+@settings(max_examples=30, deadline=None)
+@given(
+    rb=BLOCKY,
+    ct=TILEY,
+    bn=st.sampled_from([8, 32]),
+    bp=st.sampled_from([4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_colsum_matches_ref(rb, ct, bn, bp, seed):
+    n, p = rb * bn, ct * bp
+    z = _rand((n, p), jnp.float32, seed)
+    got = K.colsum(z, block_rows=bn, block_cols=bp)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(ref.colsum_ref(z)), rtol=1e-4, atol=1e-3
+    )
+
+
+def test_colsum_constant_input():
+    z = jnp.full((40, 8), 2.5, jnp.float32)
+    got = np.asarray(K.colsum(z, block_rows=8, block_cols=8))
+    np.testing.assert_allclose(got, np.full((1, 8), 100.0), rtol=1e-6)

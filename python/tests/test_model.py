@@ -1,0 +1,126 @@
+"""L2 model correctness: chunk_stats and cd_sweep vs oracles."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+
+def _xy(n, p, seed, scale=1.0, shift=0.0):
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal((n, p)) * scale + shift).astype(np.float32)
+    y = (rng.standard_normal(n) * scale + shift).astype(np.float32)
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+# --------------------------------------------------------- chunk_stats ----
+
+@settings(max_examples=25, deadline=None)
+@given(
+    nb=st.sampled_from([1, 2, 4]),
+    p=st.sampled_from([3, 7, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_chunk_stats_matches_ref(nb, p, seed):
+    n = nb * 32
+    x, y = _xy(n, p, seed)
+    mean, m2 = model.chunk_stats(x, y, block_rows=32)
+    mean_ref, m2_ref = ref.chunk_stats_ref(x, y)
+    np.testing.assert_allclose(np.asarray(mean), np.asarray(mean_ref), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(m2), np.asarray(m2_ref), rtol=1e-3, atol=1e-2)
+
+
+def test_chunk_stats_recovers_raw_moments():
+    # §2.1 final remark: raw X^T X is recoverable from centered form.
+    n, p = 128, 5
+    x, y = _xy(n, p, 42)
+    mean, m2 = model.chunk_stats(x, y, block_rows=32)
+    mean = np.asarray(mean, dtype=np.float64)
+    m2 = np.asarray(m2, dtype=np.float64)
+    z = np.concatenate([np.asarray(x), np.asarray(y)[:, None]], axis=1).astype(np.float64)
+    raw = m2 + n * np.outer(mean, mean)
+    np.testing.assert_allclose(raw, z.T @ z, rtol=1e-3, atol=1e-2)
+
+
+def test_chunk_stats_shifted_data_is_robust():
+    # Large common offset: centered scatter must not blow up (C4).
+    n, p = 256, 4
+    x, y = _xy(n, p, 7, scale=1.0, shift=1e4)
+    mean, m2 = model.chunk_stats(x, y, block_rows=64)
+    # scatter of unit-scale noise stays O(n), even with 1e4 offsets
+    assert np.abs(np.asarray(m2)).max() < 10 * n
+    assert np.allclose(np.asarray(mean), 1e4, rtol=1e-2)
+
+
+# ------------------------------------------------------------ cd_sweep ----
+
+def _quad_problem(p, seed, lam=0.3, alpha=1.0):
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((4 * p, p)).astype(np.float32)
+    g = (a.T @ a / (4 * p)).astype(np.float32)
+    c = rng.standard_normal(p).astype(np.float32)
+    b0 = np.zeros(p, np.float32)
+    return g, c, b0, np.float32(lam), np.float32(alpha)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    p=st.sampled_from([2, 3, 5, 8, 16]),
+    lam=st.sampled_from([0.0, 0.05, 0.3, 1.0]),
+    alpha=st.sampled_from([0.0, 0.5, 1.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_cd_sweep_matches_ref(p, lam, alpha, seed):
+    g, c, b0, _, _ = _quad_problem(p, seed)
+    got, dmax = model.cd_sweep_jit(
+        jnp.asarray(g), jnp.asarray(c), jnp.asarray(b0),
+        jnp.float32(lam), jnp.float32(alpha), n_sweeps=3,
+    )
+    want = ref.cd_sweep_ref(g, c, b0, lam, alpha, 3)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-3, atol=1e-4)
+    assert float(dmax) >= 0.0
+
+
+def test_cd_sweep_converges_to_lasso_kkt():
+    # After many sweeps the iterate satisfies the subgradient KKT conditions.
+    p = 6
+    g, c, b0, lam, alpha = _quad_problem(p, 3, lam=0.2, alpha=1.0)
+    b = jnp.asarray(b0)
+    for _ in range(50):
+        b, _ = model.cd_sweep_jit(
+            jnp.asarray(g), jnp.asarray(c), b, lam, alpha, n_sweeps=4
+        )
+    b = np.asarray(b, dtype=np.float64)
+    grad = g.astype(np.float64) @ b - c.astype(np.float64)
+    for j in range(p):
+        if abs(b[j]) > 1e-8:
+            assert abs(grad[j] + lam * np.sign(b[j])) < 1e-3
+        else:
+            assert abs(grad[j]) <= lam + 1e-3
+
+
+def test_cd_sweep_lambda_huge_gives_zero():
+    p = 5
+    g, c, b0, _, _ = _quad_problem(p, 9)
+    b, _ = model.cd_sweep_jit(
+        jnp.asarray(g), jnp.asarray(c), jnp.asarray(b0),
+        jnp.float32(1e6), jnp.float32(1.0), n_sweeps=2,
+    )
+    assert (np.asarray(b) == 0).all()
+
+
+def test_cd_sweep_ridge_matches_closed_form():
+    # alpha=0 (pure ridge): converged CD equals (G + lam I)^{-1} c.
+    p = 5
+    g, c, b0, _, _ = _quad_problem(p, 13)
+    lam = np.float32(0.5)
+    b = jnp.asarray(b0)
+    for _ in range(80):
+        b, _ = model.cd_sweep_jit(
+            jnp.asarray(g), jnp.asarray(c), b, lam, jnp.float32(0.0), n_sweeps=4
+        )
+    want = np.linalg.solve(g.astype(np.float64) + lam * np.eye(p), c.astype(np.float64))
+    np.testing.assert_allclose(np.asarray(b), want, rtol=1e-4, atol=1e-5)

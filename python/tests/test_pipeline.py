@@ -1,0 +1,114 @@
+"""End-to-end python-side pipeline tests: the L2 outputs compose under the
+paper's §2.1 merge algebra exactly the way the rust reducer uses them."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+
+def chan_merge(na, mean_a, m2_a, nb, mean_b, m2_b):
+    """Paper eq. (13)+(14) on block states (numpy reference)."""
+    n = na + nb
+    delta = mean_b - mean_a
+    mean = mean_a + delta * (nb / n)
+    m2 = m2_a + m2_b + np.outer(delta, delta) * (na * nb / n)
+    return n, mean, m2
+
+
+def _xy(n, p, seed, shift=0.0):
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal((n, p)) + shift).astype(np.float32)
+    y = rng.standard_normal(n).astype(np.float32)
+    return x, y
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    blocks=st.integers(2, 5),
+    p=st.sampled_from([3, 5, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_chunk_stats_blocks_merge_to_whole(blocks, p, seed):
+    """chunk_stats over B blocks + Chan merges == chunk_stats over all rows."""
+    bn = 64
+    x, y = _xy(blocks * bn, p, seed)
+    # whole-data reference
+    mean_ref, m2_ref = ref.chunk_stats_ref(jnp.asarray(x), jnp.asarray(y))
+    mean_ref = np.asarray(mean_ref, dtype=np.float64)
+    m2_ref = np.asarray(m2_ref, dtype=np.float64)
+    # per-block kernel outputs, merged
+    state = None
+    for b in range(blocks):
+        xb = jnp.asarray(x[b * bn:(b + 1) * bn])
+        yb = jnp.asarray(y[b * bn:(b + 1) * bn])
+        mean_b, m2_b = model.chunk_stats(xb, yb, block_rows=32)
+        mean_b = np.asarray(mean_b, dtype=np.float64)
+        m2_b = np.asarray(m2_b, dtype=np.float64)
+        if state is None:
+            state = (bn, mean_b, m2_b)
+        else:
+            state = chan_merge(state[0], state[1], state[2], bn, mean_b, m2_b)
+    n, mean, m2 = state
+    assert n == blocks * bn
+    np.testing.assert_allclose(mean, mean_ref, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(m2, m2_ref, rtol=5e-3, atol=5e-2)
+
+
+def test_merged_blocks_robust_at_offset():
+    """The blockwise pipeline keeps §2.1 robustness at a 1e5 offset."""
+    p, bn, blocks = 4, 128, 4
+    x, y = _xy(blocks * bn, p, 7, shift=1e5)
+    state = None
+    for b in range(blocks):
+        mean_b, m2_b = model.chunk_stats(
+            jnp.asarray(x[b * bn:(b + 1) * bn]),
+            jnp.asarray(y[b * bn:(b + 1) * bn]),
+            block_rows=32,
+        )
+        mb = (bn, np.asarray(mean_b, np.float64), np.asarray(m2_b, np.float64))
+        state = mb if state is None else chan_merge(*state, *mb)
+    _, mean, m2 = state
+    # variance of unit noise must survive (f32 kernel at 1e5 offset keeps ~2
+    # digits of the centered scatter; the naive f32 raw-moment route would
+    # lose everything: 1e10 * 512 vs f32 eps 6e-8 -> O(600) absolute error)
+    var = np.diag(m2)[:p] / (blocks * bn)
+    assert np.all(np.abs(var - 1.0) < 0.3), var
+
+
+def test_cd_sweep_then_back_transform_recovers_model():
+    """Full L2 math: stats -> standardized quad form -> cd_sweep -> (a, b)."""
+    rng = np.random.default_rng(3)
+    n, p = 512, 6
+    beta_true = np.array([2.0, 0.0, -1.0, 0.0, 0.5, 0.0])
+    x = rng.standard_normal((n, p)).astype(np.float32)
+    y = (x @ beta_true + 3.0 + 0.1 * rng.standard_normal(n)).astype(np.float32)
+
+    mean, m2 = model.chunk_stats(jnp.asarray(x), jnp.asarray(y), block_rows=64)
+    mean = np.asarray(mean, np.float64)
+    m2 = np.asarray(m2, np.float64)
+    sxx, sxy, syy = m2[:p, :p], m2[:p, p], m2[p, p]
+    scale = np.sqrt(np.diag(sxx) / n)
+    gram = sxx / (n * np.outer(scale, scale))
+    xty = sxy / (n * scale)
+
+    beta = jnp.zeros(p, jnp.float32)
+    lam, alpha = 0.01, 1.0
+    for _ in range(50):
+        beta, dmax = model.cd_sweep_jit(
+            jnp.asarray(gram, jnp.float32),
+            jnp.asarray(xty, jnp.float32),
+            beta,
+            jnp.float32(lam),
+            jnp.float32(alpha),
+        )
+        if float(dmax) < 1e-8:
+            break
+    beta_std = np.asarray(beta, np.float64)
+    b = beta_std / scale
+    a = mean[p] - mean[:p] @ b
+    assert abs(a - 3.0) < 0.05, a
+    np.testing.assert_allclose(b, beta_true, atol=0.08)

@@ -1,0 +1,131 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!   A1 active-set iteration on/off (solver)
+//!   A2 warm-started path vs cold fits (solver/path)
+//!   A3 split size (engine task granularity)
+//!   A4 serial vs parallel CV phase (the paper's §4 extension)
+//!
+//! Run: `cargo bench --bench ablations [-- --quick]`
+
+use plrmr::bench::{bench, BenchConfig};
+use plrmr::config::FitConfig;
+use plrmr::coordinator::Driver;
+use plrmr::cv::{cross_validate, cross_validate_parallel, FoldStats};
+use plrmr::data::synth::{generate, SynthSpec};
+use plrmr::mapreduce::EngineConfig;
+use plrmr::solver::path::{fit_path, lambda_grid};
+use plrmr::solver::{solve_cd, CdSettings, Penalty};
+use plrmr::stats::SuffStats;
+use plrmr::util::table::{sig, Table};
+use plrmr::util::timer::fmt_secs;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let cfg = if quick { BenchConfig::quick() } else { BenchConfig::default() };
+    let n = if quick { 20_000 } else { 100_000 };
+    let p = 64;
+
+    let data = generate(&SynthSpec::sparse_linear(n, p, 0.15, 11));
+    let mut s = SuffStats::new(p);
+    for i in 0..data.n() {
+        s.push(data.row(i), data.y[i]);
+    }
+    let q = s.quad_form();
+    let grid = lambda_grid(q.lambda_max(1.0), 50, 1e-3);
+
+    let mut t = Table::new(vec!["ablation", "variant", "time", "ratio"]);
+
+    // A1: active set
+    let lam = q.lambda_max(1.0) * 0.02;
+    let on = bench("cd active-set on", cfg, || {
+        solve_cd(&q, Penalty::lasso(), lam, None, CdSettings::default()).sweeps
+    });
+    let off = bench("cd active-set off", cfg, || {
+        solve_cd(
+            &q,
+            Penalty::lasso(),
+            lam,
+            None,
+            CdSettings { active_set: false, ..Default::default() },
+        )
+        .sweeps
+    });
+    t.row(vec!["A1 active set".into(), "on".into(), fmt_secs(on.mean_s), "1.00".into()]);
+    t.row(vec![
+        "A1 active set".into(),
+        "off".into(),
+        fmt_secs(off.mean_s),
+        sig(off.mean_s / on.mean_s, 3),
+    ]);
+
+    // A2: warm path vs cold fits
+    let warm = bench("path warm", cfg, || {
+        fit_path(&q, Penalty::lasso(), &grid, CdSettings::default()).len()
+    });
+    let cold = bench("path cold", cfg, || {
+        grid.iter()
+            .map(|&l| solve_cd(&q, Penalty::lasso(), l, None, CdSettings::default()).sweeps)
+            .sum::<usize>()
+    });
+    t.row(vec!["A2 lambda path".into(), "warm starts".into(), fmt_secs(warm.mean_s), "1.00".into()]);
+    t.row(vec![
+        "A2 lambda path".into(),
+        "cold fits".into(),
+        fmt_secs(cold.mean_s),
+        sig(cold.mean_s / warm.mean_s, 3),
+    ]);
+
+    // A3: split size (task granularity through the whole map phase)
+    let mut base = f64::NAN;
+    for (label, split) in [("4k rows", 4096usize), ("64k rows", 65_536), ("1 giant split", usize::MAX)] {
+        let split_rows = split.min(data.n());
+        let fit_cfg = FitConfig { split_rows, folds: 5, n_lambdas: 10, ..Default::default() };
+        let st = bench(&format!("map split={label}"), cfg, || {
+            Driver::new(fit_cfg).compute_fold_stats(&data).unwrap().1.records
+        });
+        if base.is_nan() {
+            base = st.mean_s;
+        }
+        t.row(vec![
+            "A3 split size".into(),
+            label.into(),
+            fmt_secs(st.mean_s),
+            sig(st.mean_s / base, 3),
+        ]);
+    }
+
+    // A4: serial vs parallel CV phase
+    let folds = {
+        let mut fs: Vec<SuffStats> = (0..10).map(|_| SuffStats::new(p)).collect();
+        for i in 0..data.n() {
+            fs[i % 10].push(data.row(i), data.y[i]);
+        }
+        FoldStats::new(fs).unwrap()
+    };
+    let serial = bench("cv serial", cfg, || {
+        cross_validate(&folds, Penalty::lasso(), &grid, CdSettings::default())
+            .unwrap()
+            .lambda_opt
+    });
+    let parallel = bench("cv parallel", cfg, || {
+        cross_validate_parallel(
+            &folds,
+            Penalty::lasso(),
+            &grid,
+            CdSettings::default(),
+            &EngineConfig::default(),
+        )
+        .unwrap()
+        .lambda_opt
+    });
+    t.row(vec!["A4 CV phase".into(), "serial".into(), fmt_secs(serial.mean_s), "1.00".into()]);
+    t.row(vec![
+        "A4 CV phase".into(),
+        "MapReduce job (paper §4)".into(),
+        fmt_secs(parallel.mean_s),
+        sig(parallel.mean_s / serial.mean_s, 3),
+    ]);
+
+    println!("## ablations (n={n}, p={p})\n");
+    println!("{}", t.render());
+    println!("\nratio > 1 means the ablated variant is slower than the shipped default.");
+}

@@ -1,0 +1,17 @@
+//! cargo-bench entry for experiment f1 — regenerates the corresponding
+//! EXPERIMENTS.md table/figure (F1: scaling in n (paper claims C1/C5)).
+//! Pass --quick (after --) to shrink the workload ~10x.
+
+use plrmr::experiments::{self, ExpOptions};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let opts = ExpOptions { quick, workers: 0 };
+    match experiments::run("f1", opts) {
+        Ok(report) => println!("{report}"),
+        Err(e) => {
+            eprintln!("f1_scaling_n failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,17 @@
+//! cargo-bench entry for experiment f2 — regenerates the corresponding
+//! EXPERIMENTS.md table/figure (F2: scaling in p (paper claim C5)).
+//! Pass --quick (after --) to shrink the workload ~10x.
+
+use plrmr::experiments::{self, ExpOptions};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let opts = ExpOptions { quick, workers: 0 };
+    match experiments::run("f2", opts) {
+        Ok(report) => println!("{report}"),
+        Err(e) => {
+            eprintln!("f2_scaling_p failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,17 @@
+//! cargo-bench entry for experiment f3 — regenerates the corresponding
+//! EXPERIMENTS.md table/figure (F3: the CV curve pre(lambda) (paper claim C3)).
+//! Pass --quick (after --) to shrink the workload ~10x.
+
+use plrmr::experiments::{self, ExpOptions};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let opts = ExpOptions { quick, workers: 0 };
+    match experiments::run("f3", opts) {
+        Ok(report) => println!("{report}"),
+        Err(e) => {
+            eprintln!("f3_cv_curve failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,133 @@
+//! Micro-benchmarks of the hot paths (§Perf of EXPERIMENTS.md):
+//!   * `Moments::push` — the mapper inner loop (O(p²)/row)
+//!   * `Moments::merge` / `Moments::sub` — combiner/CV algebra (O(p²))
+//!   * `solve_cd` cold and warm — the per-(fold, λ) solver
+//!   * full CV sweep — the driver-side phase
+//!   * HLO chunk_stats block + cd_sweep call — the PJRT path (if artifacts
+//!     are built)
+//!
+//! Run: `cargo bench --offline` (all benches) or `cargo bench --bench micro`.
+
+use plrmr::bench::{bench, render, render_throughput, BenchConfig};
+use plrmr::cv::{cross_validate, FoldStats};
+use plrmr::data::synth::{generate, SynthSpec};
+use plrmr::rng::Rng;
+use plrmr::solver::path::lambda_grid;
+use plrmr::solver::{solve_cd, CdSettings, Penalty};
+use plrmr::stats::{Moments, SuffStats};
+
+fn main() {
+    let cfg = BenchConfig::default();
+    let mut rows_results = Vec::new();
+    let mut op_results = Vec::new();
+
+    // --- Moments push at several widths (the map hot loop):
+    //     scalar rank-1 per row vs the blocked centered-gram path (§Perf)
+    for p in [8usize, 32, 128] {
+        let d = p + 1;
+        let mut rng = Rng::seed_from(1);
+        let block: Vec<f64> = (0..4096 * d).map(|_| rng.normal()).collect();
+        let scalar = bench(&format!("moments_push scalar p={p} (4096 rows)"), cfg, || {
+            let mut m = Moments::new(d);
+            for row in block.chunks_exact(d) {
+                m.push(row);
+            }
+            m.count()
+        });
+        rows_results.push((scalar, 4096.0, "rows"));
+        let blocked = bench(&format!("moments_push blocked p={p} (4096 rows)"), cfg, || {
+            let mut m = Moments::new(d);
+            m.push_block(&block);
+            m.count()
+        });
+        rows_results.push((blocked, 4096.0, "rows"));
+    }
+
+    // --- merge / sub at p=64 ---
+    {
+        let p = 64;
+        let data = generate(&SynthSpec::sparse_linear(4000, p, 0.3, 3));
+        let mut a = SuffStats::new(p);
+        let mut b = SuffStats::new(p);
+        for i in 0..2000 {
+            a.push(data.row(i), data.y[i]);
+            b.push(data.row(i + 2000), data.y[i + 2000]);
+        }
+        op_results.push(bench("suffstats_merge p=64", cfg, || {
+            let mut acc = a.clone();
+            acc.merge(&b);
+            acc.count()
+        }));
+        let mut total = a.clone();
+        total.merge(&b);
+        op_results.push(bench("suffstats_sub p=64", cfg, || total.sub(&a).count()));
+        op_results.push(bench("quad_form p=64", cfg, || total.quad_form().p));
+    }
+
+    // --- CD solve cold/warm, CV sweep ---
+    {
+        let p = 64;
+        let data = generate(&SynthSpec::sparse_linear(20_000, p, 0.2, 5));
+        let mut s = SuffStats::new(p);
+        for i in 0..data.n() {
+            s.push(data.row(i), data.y[i]);
+        }
+        let q = s.quad_form();
+        let lam = q.lambda_max(1.0) * 0.05;
+        op_results.push(bench("solve_cd cold p=64", cfg, || {
+            solve_cd(&q, Penalty::lasso(), lam, None, CdSettings::default()).sweeps
+        }));
+        let near = solve_cd(&q, Penalty::lasso(), lam * 1.2, None, CdSettings::default());
+        op_results.push(bench("solve_cd warm p=64", cfg, || {
+            solve_cd(&q, Penalty::lasso(), lam, Some(&near.beta), CdSettings::default()).sweeps
+        }));
+
+        // full CV phase (k=5, 30 lambdas) from fold statistics
+        let mut folds: Vec<SuffStats> = (0..5).map(|_| SuffStats::new(p)).collect();
+        for i in 0..data.n() {
+            folds[i % 5].push(data.row(i), data.y[i]);
+        }
+        let fs = FoldStats::new(folds).unwrap();
+        let grid = lambda_grid(fs.total().quad_form().lambda_max(1.0), 30, 1e-3);
+        op_results.push(bench("cv_phase k=5 x 30 lambdas p=64", cfg, || {
+            cross_validate(&fs, Penalty::lasso(), &grid, CdSettings::default())
+                .unwrap()
+                .lambda_opt
+        }));
+    }
+
+    // --- PJRT paths (when artifacts exist) ---
+    let dir = plrmr::runtime::default_artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        use plrmr::runtime::{Catalog, HloCdSolver, HloStatsMapper};
+        let catalog = Catalog::load(&dir).unwrap();
+        let p = 32;
+        let data = generate(&SynthSpec::sparse_linear(8192, p, 0.3, 7));
+        let mut mapper = HloStatsMapper::new(&catalog, p).unwrap();
+        let bn = mapper.block_n;
+        let stats = bench(&format!("hlo_chunk_stats p={p} block={bn}"), cfg, || {
+            let mut acc = SuffStats::new(p);
+            mapper
+                .fold_rows(&data.x[..bn * p], &data.y[..bn], &mut acc)
+                .unwrap();
+            acc.count()
+        });
+        rows_results.push((stats, bn as f64, "rows"));
+
+        let mut s = SuffStats::new(p);
+        for i in 0..data.n() {
+            s.push(data.row(i), data.y[i]);
+        }
+        let q = s.quad_form();
+        let mut cd = HloCdSolver::new(&catalog, p).unwrap();
+        op_results.push(bench("hlo_cd_solve p=32", cfg, || {
+            cd.solve(&q, 0.05, 1.0, 1e-6, 200).unwrap().len()
+        }));
+    } else {
+        eprintln!("(artifacts not built — skipping PJRT micro-benches)");
+    }
+
+    println!("## micro-benchmarks (hot paths)\n");
+    println!("{}\n", render_throughput(&rows_results));
+    println!("{}", render(&op_results));
+}

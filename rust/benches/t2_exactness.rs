@@ -1,0 +1,17 @@
+//! cargo-bench entry for experiment t2 — regenerates the corresponding
+//! EXPERIMENTS.md table/figure (T2: exactness vs serial oracle (paper claim C2)).
+//! Pass --quick (after --) to shrink the workload ~10x.
+
+use plrmr::experiments::{self, ExpOptions};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let opts = ExpOptions { quick, workers: 0 };
+    match experiments::run("t2", opts) {
+        Ok(report) => println!("{report}"),
+        Err(e) => {
+            eprintln!("t2_exactness failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,17 @@
+//! cargo-bench entry for experiment t3 — regenerates the corresponding
+//! EXPERIMENTS.md table/figure (T3: CV at no extra data passes (paper claim C3)).
+//! Pass --quick (after --) to shrink the workload ~10x.
+
+use plrmr::experiments::{self, ExpOptions};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let opts = ExpOptions { quick, workers: 0 };
+    match experiments::run("t3", opts) {
+        Ok(report) => println!("{report}"),
+        Err(e) => {
+            eprintln!("t3_cv_passes failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,17 @@
+//! cargo-bench entry for experiment t4 — regenerates the corresponding
+//! EXPERIMENTS.md table/figure (T4: numerical robustness (paper claim C4)).
+//! Pass --quick (after --) to shrink the workload ~10x.
+
+use plrmr::experiments::{self, ExpOptions};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let opts = ExpOptions { quick, workers: 0 };
+    match experiments::run("t4", opts) {
+        Ok(report) => println!("{report}"),
+        Err(e) => {
+            eprintln!("t4_robustness failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

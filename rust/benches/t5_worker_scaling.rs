@@ -1,0 +1,17 @@
+//! cargo-bench entry for experiment t5 — regenerates the corresponding
+//! EXPERIMENTS.md table/figure (T5: worker scaling (paper claim C1)).
+//! Pass --quick (after --) to shrink the workload ~10x.
+
+use plrmr::experiments::{self, ExpOptions};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let opts = ExpOptions { quick, workers: 0 };
+    match experiments::run("t5", opts) {
+        Ok(report) => println!("{report}"),
+        Err(e) => {
+            eprintln!("t5_worker_scaling failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

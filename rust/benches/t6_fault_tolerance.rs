@@ -1,0 +1,17 @@
+//! cargo-bench entry for experiment t6 — regenerates the corresponding
+//! EXPERIMENTS.md table (T6: fault tolerance of the one pass).
+//! Pass --quick (after --) to shrink the workload ~10x.
+
+use plrmr::experiments::{self, ExpOptions};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let opts = ExpOptions { quick, workers: 0 };
+    match experiments::run("t6", opts) {
+        Ok(report) => println!("{report}"),
+        Err(e) => {
+            eprintln!("t6_fault_tolerance failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

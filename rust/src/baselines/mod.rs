@@ -1,0 +1,27 @@
+//! The comparison systems the paper's claims are measured against.
+//!
+//! * [`serial`] — exact in-memory coordinate descent on the *raw data*
+//!   (glmnet's naive residual updates).  A completely independent code path
+//!   from the sufficient-statistics solver, used as the ground-truth oracle
+//!   for the exactness experiment (T2): one-pass must match it to solver
+//!   tolerance.
+//! * [`admm`] — distributed consensus lasso/elastic-net via ADMM (Boyd et
+//!   al. \[1\], §8) — the paper's "latest iterative distributed algorithms"
+//!   comparator.  Every iteration is one MapReduce job; T1 charges it the
+//!   modeled per-job scheduling cost.
+//! * [`psgd`] — parallelized SGD with parameter averaging (Zinkevich et
+//!   al. \[3\]) — the paper's "approximate algorithms" comparator for T2.
+//!
+//! All three standardize exactly like the one-pass path (center, unit
+//! population sd, penalty on standardized coefficients) so every system
+//! minimizes literally the same objective and solutions are comparable.
+
+pub mod admm;
+pub mod psgd;
+pub mod serial;
+pub mod standardize;
+
+pub use admm::{admm_lasso, AdmmSettings, Admmsolution};
+pub use psgd::{psgd_fit, PsgdSettings};
+pub use serial::serial_cd;
+pub use standardize::Standardized;

@@ -1,0 +1,154 @@
+//! Parallelized SGD with parameter averaging (Zinkevich et al. \[3\]) —
+//! the paper's "approximate algorithms" comparator.
+//!
+//! Each of W workers runs sequential subgradient SGD over its shard of the
+//! (standardized) data for one or more local passes, then the leader
+//! averages the W parameter vectors.  One MapReduce job, like the one-pass
+//! algorithm — but *approximate*: the averaged iterate does not satisfy the
+//! lasso KKT conditions, which is exactly the gap experiment T2 measures.
+
+use crate::data::dataset::Dataset;
+use crate::model::fitted::FittedModel;
+use crate::rng::Rng;
+use crate::solver::penalty::Penalty;
+
+use super::standardize::Standardized;
+
+/// residual clip bound for SGD stability (see step loop)
+const CLIP: f64 = 25.0;
+
+/// PSGD knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct PsgdSettings {
+    pub workers: usize,
+    /// local epochs over each shard
+    pub epochs: usize,
+    /// initial step size η₀ (decays as η₀/(1 + t/n_shard))
+    pub eta0: f64,
+    pub seed: u64,
+}
+
+impl Default for PsgdSettings {
+    fn default() -> Self {
+        PsgdSettings { workers: 8, epochs: 1, eta0: 0.02, seed: 0xFACE }
+    }
+}
+
+/// Fit by one round of parallel SGD + averaging.
+pub fn psgd_fit(
+    data: &Dataset,
+    penalty: Penalty,
+    lambda: f64,
+    settings: PsgdSettings,
+) -> FittedModel {
+    let std = Standardized::from_dataset(data);
+    let (n, p) = (std.n, std.p);
+    let w = settings.workers.max(1).min(n);
+    let la = lambda * penalty.alpha;
+    let lr = lambda * (1.0 - penalty.alpha);
+
+    // shard bounds
+    let base = n / w;
+    let extra = n % w;
+    let mut betas = vec![vec![0.0; p]; w];
+    let mut lo = 0usize;
+    for (widx, beta) in betas.iter_mut().enumerate() {
+        let len = base + usize::from(widx < extra);
+        let hi = lo + len;
+        let mut rng = Rng::seed_from(settings.seed ^ (widx as u64) << 32);
+        let mut order: Vec<usize> = (lo..hi).collect();
+        let mut t = 0usize;
+        for _ in 0..settings.epochs.max(1) {
+            rng.shuffle(&mut order);
+            for &i in &order {
+                let row = &std.xc[i * p..(i + 1) * p];
+                // subgradient of ½(xᵀβ − y)² + λ(a‖β‖₁ + (1−a)/2‖β‖₂²)
+                let mut pred = 0.0;
+                for j in 0..p {
+                    pred += row[j] * beta[j];
+                }
+                let err = pred - std.yc[i];
+                let eta = settings.eta0 / (1.0 + t as f64 / len.max(1) as f64);
+                // clip the residual so a bad early step cannot blow up the
+                // iterate at large p (standard SGD stabilization; keeps the
+                // method approximate, not divergent)
+                let err = err.clamp(-CLIP, CLIP);
+                for j in 0..p {
+                    let sub = la * beta[j].signum() + lr * beta[j];
+                    beta[j] -= eta * (err * row[j] + sub);
+                }
+                t += 1;
+            }
+        }
+        lo = hi;
+    }
+
+    // reduce: parameter averaging
+    let mut avg = vec![0.0; p];
+    for beta in &betas {
+        for j in 0..p {
+            avg[j] += beta[j];
+        }
+    }
+    for v in avg.iter_mut() {
+        *v /= w as f64;
+    }
+    let (alpha, beta) = std.to_original_scale(&avg);
+    FittedModel { alpha, beta, lambda, penalty, n_train: n as u64 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::serial::serial_cd;
+    use crate::data::synth::{generate, SynthSpec};
+    use crate::util::rel_l2_err;
+
+    #[test]
+    fn gets_close_but_not_exact() {
+        // C2 in miniature: PSGD lands in the neighbourhood; one-pass lands
+        // on the solution.
+        let d = generate(&SynthSpec::sparse_linear(20_000, 6, 0.5, 3));
+        let lambda = 0.05;
+        let (oracle, _) = serial_cd(&d, Penalty::lasso(), lambda, 1e-12, 20_000);
+        let sgd = psgd_fit(&d, Penalty::lasso(), lambda, PsgdSettings::default());
+        let err = rel_l2_err(&sgd.beta, &oracle.beta);
+        assert!(err < 0.3, "psgd should be in the neighbourhood, err={err}");
+        assert!(err > 1e-6, "psgd must NOT be exact (it is the approximate baseline)");
+    }
+
+    #[test]
+    fn no_exact_zeros_unlike_lasso() {
+        // averaging destroys sparsity — a known PSGD artifact
+        let d = generate(&SynthSpec::sparse_linear(10_000, 12, 0.25, 7));
+        let sgd = psgd_fit(&d, Penalty::lasso(), 0.2, PsgdSettings::default());
+        let exact_zeros = sgd.beta.iter().filter(|b| **b == 0.0).count();
+        assert!(exact_zeros < 12 / 2, "averaged SGD rarely produces exact zeros");
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let d = generate(&SynthSpec::sparse_linear(2000, 4, 0.5, 9));
+        let a = psgd_fit(&d, Penalty::lasso(), 0.1, PsgdSettings::default());
+        let b = psgd_fit(&d, Penalty::lasso(), 0.1, PsgdSettings::default());
+        assert_eq!(a.beta, b.beta);
+        let c = psgd_fit(
+            &d,
+            Penalty::lasso(),
+            0.1,
+            PsgdSettings { seed: 1, ..Default::default() },
+        );
+        assert_ne!(a.beta, c.beta);
+    }
+
+    #[test]
+    fn more_epochs_reduce_error() {
+        let d = generate(&SynthSpec::sparse_linear(5000, 5, 0.5, 11));
+        let (oracle, _) = serial_cd(&d, Penalty::lasso(), 0.05, 1e-12, 20_000);
+        let one = psgd_fit(&d, Penalty::lasso(), 0.05, PsgdSettings { epochs: 1, ..Default::default() });
+        let ten = psgd_fit(&d, Penalty::lasso(), 0.05, PsgdSettings { epochs: 10, ..Default::default() });
+        let e1 = rel_l2_err(&one.beta, &oracle.beta);
+        let e10 = rel_l2_err(&ten.beta, &oracle.beta);
+        assert!(e10 < e1, "more epochs should help: {e10} vs {e1}");
+    }
+}

@@ -1,0 +1,157 @@
+//! Two-pass standardization of materialized data — the baseline-side twin
+//! of the statistics-side standardization in [`crate::stats::suffstats`].
+//!
+//! Baselines are allowed to touch raw data (they do anyway — that is their
+//! handicap); using the identical convention (center, unit population sd)
+//! guarantees every system minimizes the same standardized objective.
+
+use crate::data::dataset::Dataset;
+
+/// Centered/scaled copies plus the transform metadata.
+#[derive(Debug, Clone)]
+pub struct Standardized {
+    pub p: usize,
+    pub n: usize,
+    /// row-major n×p, centered and unit-sd columns (degenerate cols zeroed)
+    pub xc: Vec<f64>,
+    /// centered response y − ȳ
+    pub yc: Vec<f64>,
+    pub x_mean: Vec<f64>,
+    /// population sd per column; 0 marks degenerate
+    pub scale: Vec<f64>,
+    pub y_mean: f64,
+}
+
+impl Standardized {
+    pub fn from_dataset(data: &Dataset) -> Self {
+        let (n, p) = (data.n(), data.p);
+        assert!(n >= 2, "need at least 2 rows");
+        let nf = n as f64;
+        let mut x_mean = vec![0.0; p];
+        for i in 0..n {
+            let row = data.row(i);
+            for j in 0..p {
+                x_mean[j] += row[j];
+            }
+        }
+        for m in &mut x_mean {
+            *m /= nf;
+        }
+        let y_mean = data.y.iter().sum::<f64>() / nf;
+        let mut var = vec![0.0; p];
+        for i in 0..n {
+            let row = data.row(i);
+            for j in 0..p {
+                let d = row[j] - x_mean[j];
+                var[j] += d * d;
+            }
+        }
+        let scale: Vec<f64> = var
+            .iter()
+            .map(|v| {
+                let s = (v / nf).sqrt();
+                if s > 0.0 {
+                    s
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        let mut xc = vec![0.0; n * p];
+        for i in 0..n {
+            let row = data.row(i);
+            for j in 0..p {
+                xc[i * p + j] = if scale[j] > 0.0 {
+                    (row[j] - x_mean[j]) / scale[j]
+                } else {
+                    0.0
+                };
+            }
+        }
+        let yc: Vec<f64> = data.y.iter().map(|y| y - y_mean).collect();
+        Standardized { p, n, xc, yc, x_mean, scale, y_mean }
+    }
+
+    /// Column j as a strided view helper.
+    #[inline]
+    pub fn col(&self, j: usize, i: usize) -> f64 {
+        self.xc[i * self.p + j]
+    }
+
+    /// Back-transform standardized coefficients to original scale (eq. 4).
+    pub fn to_original_scale(&self, beta_std: &[f64]) -> (f64, Vec<f64>) {
+        let beta: Vec<f64> = beta_std
+            .iter()
+            .zip(&self.scale)
+            .map(|(b, d)| if *d > 0.0 { b / d } else { 0.0 })
+            .collect();
+        let alpha = self.y_mean
+            - self
+                .x_mean
+                .iter()
+                .zip(&beta)
+                .map(|(m, b)| m * b)
+                .sum::<f64>();
+        (alpha, beta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthSpec};
+    use crate::stats::SuffStats;
+
+    #[test]
+    fn matches_suffstats_standardization() {
+        let d = generate(&SynthSpec::sparse_linear(500, 4, 0.5, 3));
+        let std = Standardized::from_dataset(&d);
+        let mut s = SuffStats::new(4);
+        for i in 0..d.n() {
+            s.push(d.row(i), d.y[i]);
+        }
+        let q = s.quad_form();
+        for j in 0..4 {
+            assert!((std.scale[j] - q.scale[j]).abs() < 1e-9);
+            assert!((std.x_mean[j] - q.x_mean[j]).abs() < 1e-9);
+        }
+        assert!((std.y_mean - q.y_mean).abs() < 1e-10);
+        // standardized gram agrees: (1/n) Σ xc_i xc_j == q.gram
+        let nf = std.n as f64;
+        for a in 0..4 {
+            for b in 0..4 {
+                let g: f64 = (0..std.n).map(|i| std.col(a, i) * std.col(b, i)).sum::<f64>() / nf;
+                assert!(
+                    (g - q.gram[a * 4 + b]).abs() < 1e-9,
+                    "gram[{a},{b}]: {g} vs {}",
+                    q.gram[a * 4 + b]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn columns_have_zero_mean_unit_var() {
+        let d = generate(&SynthSpec::ill_conditioned(400, 3, 1e6, 5));
+        let std = Standardized::from_dataset(&d);
+        let nf = std.n as f64;
+        for j in 0..3 {
+            let mean: f64 = (0..std.n).map(|i| std.col(j, i)).sum::<f64>() / nf;
+            let var: f64 = (0..std.n).map(|i| std.col(j, i).powi(2)).sum::<f64>() / nf;
+            assert!(mean.abs() < 1e-9, "col {j} mean {mean}");
+            assert!((var - 1.0).abs() < 1e-6, "col {j} var {var}");
+        }
+    }
+
+    #[test]
+    fn degenerate_column_zeroed() {
+        let d = Dataset::new(2, vec![1.0, 5.0, 2.0, 5.0, 3.0, 5.0], vec![1.0, 2.0, 3.0]);
+        let std = Standardized::from_dataset(&d);
+        assert_eq!(std.scale[1], 0.0);
+        for i in 0..3 {
+            assert_eq!(std.col(1, i), 0.0);
+        }
+        let (_, beta) = std.to_original_scale(&[1.0, 1.0]);
+        assert_eq!(beta[1], 0.0);
+    }
+}

@@ -1,0 +1,152 @@
+//! Micro-benchmark harness — std-only substitute for `criterion` (absent
+//! from the offline vendor set).
+//!
+//! Methodology: warmup runs, then timed samples until a wall-clock budget
+//! or a sample cap is reached; reports mean/sd/min/max and derived
+//! throughput.  The `rust/benches/*.rs` binaries (`cargo bench`) and the
+//! `plrmr experiments` CLI both print through this, so numbers in
+//! EXPERIMENTS.md are regenerable from either entry point.
+
+use std::time::Instant;
+
+use crate::util::table::{sig, Table};
+
+/// Statistics of one benchmarked operation.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub samples: usize,
+    pub mean_s: f64,
+    pub sd_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl BenchStats {
+    /// items/second at the mean time, given items-per-invocation.
+    pub fn throughput(&self, items: f64) -> f64 {
+        if self.mean_s > 0.0 {
+            items / self.mean_s
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchConfig {
+    pub warmup: usize,
+    pub max_samples: usize,
+    /// stop sampling after this much accumulated measured time
+    pub budget_s: f64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig { warmup: 2, max_samples: 30, budget_s: 2.0 }
+    }
+}
+
+impl BenchConfig {
+    /// Fast settings for CI-ish runs.
+    pub fn quick() -> Self {
+        BenchConfig { warmup: 1, max_samples: 8, budget_s: 0.5 }
+    }
+}
+
+/// Time `f` under `cfg`; the closure's return value is black-boxed.
+pub fn bench<T>(name: &str, cfg: BenchConfig, mut f: impl FnMut() -> T) -> BenchStats {
+    for _ in 0..cfg.warmup {
+        black_box(f());
+    }
+    let mut times = Vec::with_capacity(cfg.max_samples);
+    let mut spent = 0.0;
+    while times.len() < cfg.max_samples && (spent < cfg.budget_s || times.is_empty()) {
+        let t0 = Instant::now();
+        black_box(f());
+        let dt = t0.elapsed().as_secs_f64();
+        times.push(dt);
+        spent += dt;
+    }
+    let n = times.len();
+    let mean = times.iter().sum::<f64>() / n as f64;
+    let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / n as f64;
+    BenchStats {
+        name: name.to_string(),
+        samples: n,
+        mean_s: mean,
+        sd_s: var.sqrt(),
+        min_s: times.iter().cloned().fold(f64::INFINITY, f64::min),
+        max_s: times.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+    }
+}
+
+/// Prevent the optimizer from deleting a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Render a group of bench results as a table (mean ± sd, min, samples).
+pub fn render(results: &[BenchStats]) -> String {
+    let mut t = Table::new(vec!["benchmark", "mean", "sd", "min", "samples"]);
+    for r in results {
+        t.row(vec![
+            r.name.clone(),
+            crate::util::timer::fmt_secs(r.mean_s),
+            crate::util::timer::fmt_secs(r.sd_s),
+            crate::util::timer::fmt_secs(r.min_s),
+            format!("{}", r.samples),
+        ]);
+    }
+    t.render()
+}
+
+/// Render with a throughput column (items supplied per benchmark).
+pub fn render_throughput(results: &[(BenchStats, f64, &str)]) -> String {
+    let mut t = Table::new(vec!["benchmark", "mean", "throughput", "samples"]);
+    for (r, items, unit) in results {
+        t.row(vec![
+            r.name.clone(),
+            crate::util::timer::fmt_secs(r.mean_s),
+            format!("{} {unit}/s", sig(r.throughput(*items), 3)),
+            format!("{}", r.samples),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_reports() {
+        let cfg = BenchConfig { warmup: 1, max_samples: 5, budget_s: 0.05 };
+        let stats = bench("spin", cfg, || (0..1000).sum::<u64>());
+        assert!(stats.samples >= 1 && stats.samples <= 5);
+        assert!(stats.mean_s >= 0.0);
+        assert!(stats.min_s <= stats.mean_s && stats.mean_s <= stats.max_s + 1e-12);
+        assert!(stats.throughput(1000.0) > 0.0);
+    }
+
+    #[test]
+    fn budget_caps_samples() {
+        let cfg = BenchConfig { warmup: 0, max_samples: 1000, budget_s: 0.02 };
+        let stats = bench("sleepy", cfg, || {
+            std::thread::sleep(std::time::Duration::from_millis(5))
+        });
+        assert!(stats.samples < 1000, "budget must stop sampling, got {}", stats.samples);
+    }
+
+    #[test]
+    fn render_contains_rows() {
+        let cfg = BenchConfig::quick();
+        let a = bench("a", cfg, || 1 + 1);
+        let s = render(&[a.clone()]);
+        assert!(s.contains("| a"));
+        let tp = render_throughput(&[(a, 100.0, "rows")]);
+        assert!(tp.contains("rows/s"));
+    }
+}

@@ -1,0 +1,203 @@
+//! Typed configuration for the coordinator — the knobs a deployment would
+//! set in one place, validated before anything runs.
+//!
+//! (The offline vendor set has no serde/toml; the CLI maps flags onto this
+//! struct directly, and [`FitConfig::from_kv_pairs`] parses simple
+//! `key=value` config files so runs remain scriptable.)
+
+use anyhow::{bail, Context, Result};
+
+use crate::mapreduce::{EngineConfig, FaultPlan, JobCosts};
+use crate::solver::cd::CdSettings;
+use crate::solver::penalty::Penalty;
+
+/// Everything Algorithm 1 needs.
+#[derive(Debug, Clone, Copy)]
+pub struct FitConfig {
+    /// penalty family (elastic-net mixing α)
+    pub penalty: Penalty,
+    /// number of CV folds k (paper's rule of thumb: 5 or 10)
+    pub folds: usize,
+    /// λ grid size
+    pub n_lambdas: usize,
+    /// λ_min/λ_max ratio (0 ⇒ auto: 1e-3 if n > p else 1e-2)
+    pub lambda_ratio: f64,
+    /// coordinate-descent settings
+    pub cd: CdSettings,
+    /// mapper pool size
+    pub workers: usize,
+    /// rows per input split handed to one map task
+    pub split_rows: usize,
+    /// salt for the random fold assignment (Algorithm 1 line 4)
+    pub seed: u64,
+    /// modeled cluster scheduling costs
+    pub costs: JobCosts,
+    /// fault injection (tests/chaos runs)
+    pub fault: FaultPlan,
+}
+
+impl Default for FitConfig {
+    fn default() -> Self {
+        FitConfig {
+            penalty: Penalty::lasso(),
+            folds: 10,
+            n_lambdas: 50,
+            lambda_ratio: 0.0,
+            cd: CdSettings::default(),
+            workers: std::thread::available_parallelism()
+                .map(|v| v.get())
+                .unwrap_or(4),
+            split_rows: 65_536,
+            seed: 0x5EED,
+            costs: JobCosts::zero(),
+            fault: FaultPlan::none(),
+        }
+    }
+}
+
+impl FitConfig {
+    pub fn with_penalty(mut self, penalty: Penalty) -> Self {
+        self.penalty = penalty;
+        self
+    }
+
+    pub fn with_folds(mut self, k: usize) -> Self {
+        self.folds = k;
+        self
+    }
+
+    pub fn with_workers(mut self, w: usize) -> Self {
+        self.workers = w;
+        self
+    }
+
+    pub fn with_lambdas(mut self, n: usize) -> Self {
+        self.n_lambdas = n;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Validate invariants that would otherwise fail deep inside a job.
+    pub fn validate(&self) -> Result<()> {
+        if self.folds < 2 {
+            bail!("folds must be >= 2 (got {})", self.folds);
+        }
+        if self.folds > 1000 {
+            bail!("folds = {} is unreasonable (paper's rule of thumb: 5-10)", self.folds);
+        }
+        if self.n_lambdas == 0 {
+            bail!("need at least one lambda");
+        }
+        if !(self.lambda_ratio == 0.0 || (0.0..1.0).contains(&self.lambda_ratio)) {
+            bail!("lambda_ratio must be 0 (auto) or in (0,1)");
+        }
+        if self.workers == 0 {
+            bail!("workers must be >= 1");
+        }
+        if self.split_rows == 0 {
+            bail!("split_rows must be >= 1");
+        }
+        if self.cd.tol <= 0.0 || self.cd.max_sweeps == 0 {
+            bail!("cd settings degenerate");
+        }
+        Ok(())
+    }
+
+    /// Engine view of this config.
+    pub fn engine(&self) -> EngineConfig {
+        EngineConfig { workers: self.workers, costs: self.costs, fault: self.fault }
+    }
+
+    /// Parse `key=value` lines (# comments allowed) over the defaults —
+    /// the minimal config-file format the CLI accepts via `--config`.
+    pub fn from_kv_pairs(text: &str) -> Result<Self> {
+        let mut cfg = FitConfig::default();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key=value", lineno + 1))?;
+            let (key, val) = (key.trim(), val.trim());
+            match key {
+                "penalty" => {
+                    cfg.penalty = match val {
+                        "lasso" => Penalty::lasso(),
+                        "ridge" => Penalty::ridge(),
+                        other => {
+                            let a: f64 = other
+                                .strip_prefix("elastic_net:")
+                                .with_context(|| format!("unknown penalty {other:?}"))?
+                                .parse()?;
+                            Penalty::elastic_net(a)
+                        }
+                    }
+                }
+                "folds" => cfg.folds = val.parse()?,
+                "n_lambdas" => cfg.n_lambdas = val.parse()?,
+                "lambda_ratio" => cfg.lambda_ratio = val.parse()?,
+                "workers" => cfg.workers = val.parse()?,
+                "split_rows" => cfg.split_rows = val.parse()?,
+                "seed" => cfg.seed = val.parse()?,
+                "tol" => cfg.cd.tol = val.parse()?,
+                "max_sweeps" => cfg.cd.max_sweeps = val.parse()?,
+                other => bail!("unknown config key {other:?}"),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        FitConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn builders_chain() {
+        let c = FitConfig::default()
+            .with_penalty(Penalty::ridge())
+            .with_folds(5)
+            .with_workers(2)
+            .with_lambdas(10)
+            .with_seed(7);
+        assert!(c.penalty.is_ridge());
+        assert_eq!((c.folds, c.workers, c.n_lambdas, c.seed), (5, 2, 10, 7));
+    }
+
+    #[test]
+    fn validation_catches_bad_values() {
+        assert!(FitConfig { folds: 1, ..Default::default() }.validate().is_err());
+        assert!(FitConfig { n_lambdas: 0, ..Default::default() }.validate().is_err());
+        assert!(FitConfig { workers: 0, ..Default::default() }.validate().is_err());
+        assert!(FitConfig { lambda_ratio: 2.0, ..Default::default() }.validate().is_err());
+        assert!(FitConfig { split_rows: 0, ..Default::default() }.validate().is_err());
+    }
+
+    #[test]
+    fn kv_parsing() {
+        let cfg = FitConfig::from_kv_pairs(
+            "# a comment\npenalty = elastic_net:0.5\nfolds=5\nworkers = 3\nseed=42\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.penalty.alpha, 0.5);
+        assert_eq!(cfg.folds, 5);
+        assert_eq!(cfg.workers, 3);
+        assert_eq!(cfg.seed, 42);
+        assert!(FitConfig::from_kv_pairs("nonsense").is_err());
+        assert!(FitConfig::from_kv_pairs("folds=1").is_err());
+        assert!(FitConfig::from_kv_pairs("wat=1").is_err());
+        assert!(FitConfig::from_kv_pairs("penalty=banana").is_err());
+    }
+}

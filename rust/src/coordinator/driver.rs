@@ -1,0 +1,436 @@
+//! Algorithm 1: `PenalizedLR-MR(X, Y, k, λs)`.
+//!
+//! ```text
+//! map    : for each sample (x, y): key = fold(row); emit(key, stats(x,y))
+//! combine: in-mapper merge (Emitter)                       [eq. 11–12, 15]
+//! reduce : merge chunk statistics per fold                 [eq. 13–14]
+//! cv     : for λ in grid, fold i: fit on total − s_i, score on s_i
+//! final  : fit at λ_opt on all data, back-transform        [eq. 3–4]
+//! ```
+//!
+//! Exactly **one** pass over the data happens (the map job); the CV phase
+//! and final fit touch only k·(p+1)²/2 + (p+1) numbers per fold.
+
+use anyhow::Result;
+
+use crate::config::FitConfig;
+use crate::cv::{cross_validate, CvResult, FoldStats};
+use crate::data::dataset::Dataset;
+use crate::data::synth::{SynthSpec, SynthStream};
+use crate::mapreduce::{run_job, Emitter, FoldAssigner, JobMetrics, TaskCtx};
+use crate::model::fitted::FittedModel;
+use crate::solver::cd::solve_cd;
+use crate::solver::path::lambda_grid;
+use crate::stats::SuffStats;
+
+/// Everything a fit returns: the model, the CV curve, and job accounting.
+#[derive(Debug, Clone)]
+pub struct FitReport {
+    /// final model trained at λ_opt on all data, in original units
+    pub model: FittedModel,
+    /// the selected penalty parameter (= `model.lambda`)
+    pub lambda_opt: f64,
+    /// full CV curve (Algorithm 1's optional extra return value)
+    pub cv: CvResult,
+    /// λ grid used
+    pub lambdas: Vec<f64>,
+    /// metrics of the single map/reduce job (the one data pass)
+    pub map_metrics: JobMetrics,
+    /// rows per fold as realized by the random assignment
+    pub fold_sizes: Vec<u64>,
+    /// total data passes performed (always 1 — asserted in tests)
+    pub data_passes: usize,
+    /// in-sample goodness of fit, from statistics alone
+    pub diagnostics: crate::model::Diagnostics,
+}
+
+/// Rows buffered per fold before a blocked flush into the statistics
+/// (the §Perf mapper optimization: blocked centered-gram beats per-row
+/// rank-1 updates, so the mapper buckets rows by fold and flushes blocks).
+const FOLD_FLUSH_ROWS: usize = 1024;
+
+/// Per-task fold bucketing: rows land in per-fold buffers and flush into
+/// [`SuffStats::push_rows`] in blocks.
+struct FoldAccumulator<'a> {
+    assigner: &'a FoldAssigner,
+    bufx: Vec<Vec<f64>>,
+    bufy: Vec<Vec<f64>>,
+    stats: Vec<SuffStats>,
+}
+
+impl<'a> FoldAccumulator<'a> {
+    fn new(k: usize, p: usize, assigner: &'a FoldAssigner) -> Self {
+        FoldAccumulator {
+            assigner,
+            bufx: (0..k).map(|_| Vec::with_capacity(FOLD_FLUSH_ROWS * p)).collect(),
+            bufy: (0..k).map(|_| Vec::with_capacity(FOLD_FLUSH_ROWS)).collect(),
+            stats: (0..k).map(|_| SuffStats::new(p)).collect(),
+        }
+    }
+
+    #[inline]
+    fn add(&mut self, row_id: u64, x: &[f64], y: f64) {
+        let fold = self.assigner.fold_of(row_id);
+        self.bufx[fold].extend_from_slice(x);
+        self.bufy[fold].push(y);
+        if self.bufy[fold].len() >= FOLD_FLUSH_ROWS {
+            self.flush(fold);
+        }
+    }
+
+    fn flush(&mut self, fold: usize) {
+        if !self.bufy[fold].is_empty() {
+            self.stats[fold].push_rows(&self.bufx[fold], &self.bufy[fold]);
+            self.bufx[fold].clear();
+            self.bufy[fold].clear();
+        }
+    }
+
+    /// Flush everything and hand back the non-empty per-fold statistics.
+    fn finish(mut self) -> Vec<(usize, SuffStats)> {
+        for fold in 0..self.stats.len() {
+            self.flush(fold);
+        }
+        self.stats
+            .into_iter()
+            .enumerate()
+            .filter(|(_, s)| !s.is_empty())
+            .collect()
+    }
+}
+
+/// The Algorithm 1 leader.
+#[derive(Debug, Clone)]
+pub struct Driver {
+    cfg: FitConfig,
+}
+
+impl Driver {
+    /// Create a driver; panics on invalid config (use
+    /// [`FitConfig::validate`] for recoverable handling).
+    pub fn new(cfg: FitConfig) -> Self {
+        cfg.validate().expect("invalid FitConfig");
+        Driver { cfg }
+    }
+
+    pub fn config(&self) -> &FitConfig {
+        &self.cfg
+    }
+
+    /// Map+reduce phase over an in-memory dataset: one pass, k fold
+    /// statistics out.
+    pub fn compute_fold_stats(&self, data: &Dataset) -> Result<(FoldStats, JobMetrics)> {
+        let p = data.p;
+        let k = self.cfg.folds;
+        let assigner = FoldAssigner::new(k, self.cfg.seed);
+        let splits: Vec<crate::data::dataset::DataBlock<'_>> = data
+            .blocks(self.cfg.split_rows)
+            .collect();
+        let out = run_job(
+            &self.cfg.engine(),
+            &splits,
+            |_ctx: &TaskCtx, block, em: &mut Emitter<usize, SuffStats>| {
+                let mut acc = FoldAccumulator::new(k, p, &assigner);
+                for (i, (x, y)) in block.iter().enumerate() {
+                    acc.add((block.offset + i) as u64, x, y);
+                }
+                for (fold, stats) in acc.finish() {
+                    let rows = stats.count();
+                    em.emit_aggregated(fold, stats, rows);
+                }
+            },
+        )?;
+        Self::assemble(k, p, out)
+    }
+
+    /// Map+reduce phase over a *streaming* synthetic source: nothing is
+    /// materialized; each task generates its own split deterministically.
+    pub fn compute_fold_stats_stream(
+        &self,
+        spec: &SynthSpec,
+    ) -> Result<(FoldStats, JobMetrics)> {
+        let p = spec.p;
+        let k = self.cfg.folds;
+        let assigner = FoldAssigner::new(k, self.cfg.seed);
+        // split specs: same ground-truth β (spec.seed), independent noise
+        // streams (derived seeds), disjoint global row ranges.
+        let mut splits = Vec::new();
+        let mut offset = 0usize;
+        let mut idx = 0u64;
+        while offset < spec.n {
+            let rows = self.cfg.split_rows.min(spec.n - offset);
+            let mut sub = spec.clone();
+            sub.n = rows;
+            // IMPORTANT: the generator stream seed is derived from the split
+            // index so retried tasks regenerate identical rows.
+            sub.seed = spec.seed ^ (0x9E37_79B9 + idx).rotate_left(17);
+            splits.push((sub, offset));
+            offset += rows;
+            idx += 1;
+        }
+        let out = run_job(
+            &self.cfg.engine(),
+            &splits,
+            |_ctx: &TaskCtx, (sub, start), em: &mut Emitter<usize, SuffStats>| {
+                // regenerate the true β of the PARENT spec: SynthStream
+                // derives it from sub.seed, which we overrode — so build the
+                // stream manually with the parent β.
+                let mut stream = SynthStream::with_beta(sub, spec.true_beta());
+                let mut row_id = *start as u64;
+                let mut acc = FoldAccumulator::new(k, p, &assigner);
+                while let Some((xb, yb)) = stream.next_block(4096) {
+                    for (x, &y) in xb.chunks_exact(p).zip(yb) {
+                        acc.add(row_id, x, y);
+                        row_id += 1;
+                    }
+                }
+                for (fold, stats) in acc.finish() {
+                    let rows = stats.count();
+                    em.emit_aggregated(fold, stats, rows);
+                }
+            },
+        )?;
+        Self::assemble(k, p, out)
+    }
+
+    /// Map+reduce phase over CSV shard *files*: each task streams its own
+    /// shard in O(block) memory — the HDFS-mapper access pattern.  Row ids
+    /// for fold assignment are (shard index, local row), so the fold split
+    /// is deterministic per shard set regardless of worker scheduling.
+    pub fn compute_fold_stats_csv(
+        &self,
+        p: usize,
+        shards: &[std::path::PathBuf],
+    ) -> Result<(FoldStats, JobMetrics)> {
+        anyhow::ensure!(!shards.is_empty(), "no shard files given");
+        let k = self.cfg.folds;
+        let assigner = FoldAssigner::new(k, self.cfg.seed);
+        let splits: Vec<(usize, &std::path::PathBuf)> =
+            shards.iter().enumerate().collect();
+        let out = run_job(
+            &self.cfg.engine(),
+            &splits,
+            |_ctx: &TaskCtx, &(shard_idx, path), em: &mut Emitter<usize, SuffStats>| {
+                let mut acc = FoldAccumulator::new(k, p, &assigner);
+                let mut local = 0u64;
+                let (got_p, _rows) = crate::data::csv::stream_csv(path, 4096, |xb, yb| {
+                    for (x, &y) in xb.chunks_exact(p).zip(yb) {
+                        // global id = (shard, local row): stable under retries
+                        let row_id = ((shard_idx as u64) << 40) | local;
+                        acc.add(row_id, x, y);
+                        local += 1;
+                    }
+                })
+                .unwrap_or_else(|e| panic!("shard {path:?}: {e:#}"));
+                assert_eq!(got_p, p, "shard {path:?} width {got_p} != expected {p}");
+                for (fold, stats) in acc.finish() {
+                    let rows = stats.count();
+                    em.emit_aggregated(fold, stats, rows);
+                }
+            },
+        )?;
+        Self::assemble(k, p, out)
+    }
+
+    /// Algorithm 1, end to end, streaming CSV shards from disk.
+    pub fn fit_csv_shards(
+        &self,
+        p: usize,
+        shards: &[std::path::PathBuf],
+    ) -> Result<FitReport> {
+        let (folds, metrics) = self.compute_fold_stats_csv(p, shards)?;
+        self.select_and_fit(&folds, metrics)
+    }
+
+    fn assemble(
+        k: usize,
+        p: usize,
+        out: crate::mapreduce::JobOutput<usize, SuffStats>,
+    ) -> Result<(FoldStats, JobMetrics)> {
+        let mut folds: Vec<SuffStats> = (0..k).map(|_| SuffStats::new(p)).collect();
+        for (fold, stats) in out.output {
+            folds[fold] = stats;
+        }
+        Ok((FoldStats::new(folds)?, out.metrics))
+    }
+
+    /// CV phase + final fit from fold statistics (no data access).
+    pub fn select_and_fit(
+        &self,
+        folds: &FoldStats,
+        map_metrics: JobMetrics,
+    ) -> Result<FitReport> {
+        let q_total = folds.total().quad_form();
+        let ratio = if self.cfg.lambda_ratio > 0.0 {
+            self.cfg.lambda_ratio
+        } else if folds.n() as usize > folds.p() {
+            1e-3
+        } else {
+            1e-2
+        };
+        let lambdas = lambda_grid(
+            q_total.lambda_max(self.cfg.penalty.alpha),
+            self.cfg.n_lambdas,
+            ratio,
+        );
+        let cv = cross_validate(folds, self.cfg.penalty, &lambdas, self.cfg.cd)?;
+        // final fit at λ_opt on ALL data (see kfold.rs on the line-24 typo)
+        let sol = solve_cd(&q_total, self.cfg.penalty, cv.lambda_opt, None, self.cfg.cd);
+        let (alpha, beta) = q_total.to_original_scale(&sol.beta);
+        let model = FittedModel {
+            alpha,
+            beta,
+            lambda: cv.lambda_opt,
+            penalty: self.cfg.penalty,
+            n_train: folds.n(),
+        };
+        let fold_sizes = (0..folds.k()).map(|i| folds.fold(i).count()).collect();
+        let diagnostics = crate::model::diagnostics(folds.total(), &model);
+        Ok(FitReport {
+            lambda_opt: cv.lambda_opt,
+            model,
+            cv,
+            lambdas,
+            map_metrics,
+            fold_sizes,
+            data_passes: 1,
+            diagnostics,
+        })
+    }
+
+    /// Algorithm 1, end to end, over an in-memory dataset.
+    pub fn fit(&self, data: &Dataset) -> Result<FitReport> {
+        let (folds, metrics) = self.compute_fold_stats(data)?;
+        self.select_and_fit(&folds, metrics)
+    }
+
+    /// Algorithm 1, end to end, over a streaming synthetic source.
+    pub fn fit_stream(&self, spec: &SynthSpec) -> Result<FitReport> {
+        let (folds, metrics) = self.compute_fold_stats_stream(spec)?;
+        self.select_and_fit(&folds, metrics)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::serial::serial_cd;
+    use crate::data::synth::generate;
+    use crate::mapreduce::FaultPlan;
+    use crate::solver::penalty::Penalty;
+
+    fn small_cfg() -> FitConfig {
+        FitConfig {
+            folds: 5,
+            n_lambdas: 25,
+            workers: 4,
+            split_rows: 1000,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn end_to_end_recovers_sparse_truth() {
+        let spec = SynthSpec::sparse_linear(8000, 10, 0.3, 42);
+        let data = generate(&spec);
+        let report = Driver::new(small_cfg()).fit(&data).unwrap();
+        assert_eq!(report.data_passes, 1);
+        assert_eq!(report.map_metrics.records, 8000);
+        let truth = spec.true_beta();
+        for j in 0..10 {
+            if truth[j] != 0.0 {
+                assert!(
+                    (report.model.beta[j] - truth[j]).abs() < 0.25,
+                    "beta[{j}]={} truth={}",
+                    report.model.beta[j],
+                    truth[j]
+                );
+            } else {
+                assert!(report.model.beta[j].abs() < 0.15);
+            }
+        }
+        assert!((report.model.alpha - spec.intercept).abs() < 0.3);
+        // fold sizes roughly balanced
+        let min = report.fold_sizes.iter().min().unwrap();
+        let max = report.fold_sizes.iter().max().unwrap();
+        assert!(*max as f64 / *min as f64 > 0.0 && (*max - *min) < 8000 / 5);
+    }
+
+    #[test]
+    fn exact_vs_serial_oracle_at_same_lambda() {
+        // the one-pass fit at λ must equal raw-data CD at λ (C2)
+        let data = generate(&SynthSpec::sparse_linear(3000, 6, 0.4, 7));
+        let driver = Driver::new(small_cfg());
+        let (folds, m) = driver.compute_fold_stats(&data).unwrap();
+        let report = driver.select_and_fit(&folds, m).unwrap();
+        let (oracle, _) = serial_cd(&data, Penalty::lasso(), report.lambda_opt, 1e-12, 50_000);
+        for j in 0..6 {
+            assert!(
+                (report.model.beta[j] - oracle.beta[j]).abs() < 1e-6,
+                "j={j}: {} vs {}",
+                report.model.beta[j],
+                oracle.beta[j]
+            );
+        }
+    }
+
+    #[test]
+    fn worker_count_does_not_change_the_answer() {
+        let data = generate(&SynthSpec::sparse_linear(4000, 5, 0.4, 21));
+        let r1 = Driver::new(FitConfig { workers: 1, ..small_cfg() })
+            .fit(&data)
+            .unwrap();
+        let r8 = Driver::new(FitConfig { workers: 8, ..small_cfg() })
+            .fit(&data)
+            .unwrap();
+        assert_eq!(r1.lambda_opt, r8.lambda_opt);
+        for j in 0..5 {
+            assert!((r1.model.beta[j] - r8.model.beta[j]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn crash_retries_do_not_change_the_answer() {
+        let data = generate(&SynthSpec::sparse_linear(3000, 4, 0.5, 31));
+        let clean = Driver::new(small_cfg()).fit(&data).unwrap();
+        let chaotic = Driver::new(FitConfig {
+            fault: FaultPlan::chaotic(0.35, 5),
+            ..small_cfg()
+        })
+        .fit(&data)
+        .unwrap();
+        assert!(chaotic.map_metrics.retries > 0, "chaos must actually happen");
+        assert_eq!(clean.lambda_opt, chaotic.lambda_opt);
+        for j in 0..4 {
+            assert_eq!(clean.model.beta[j], chaotic.model.beta[j]);
+        }
+    }
+
+    #[test]
+    fn streaming_fit_works_without_materializing() {
+        let spec = SynthSpec::sparse_linear(50_000, 8, 0.25, 11);
+        let report = Driver::new(FitConfig { split_rows: 8192, ..small_cfg() })
+            .fit_stream(&spec)
+            .unwrap();
+        assert_eq!(report.map_metrics.records, 50_000);
+        let truth = spec.true_beta();
+        for j in 0..8 {
+            if truth[j] != 0.0 {
+                assert!(
+                    (report.model.beta[j] - truth[j]).abs() < 0.2,
+                    "beta[{j}]={} truth={}",
+                    report.model.beta[j],
+                    truth[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn cv_curve_has_interior_minimum_most_of_the_time() {
+        let data = generate(&SynthSpec::sparse_linear(6000, 12, 0.25, 99));
+        let report = Driver::new(small_cfg()).fit(&data).unwrap();
+        assert!(report.cv.opt_index > 0, "λ_max should not be optimal");
+        assert!(report.model.nnz() > 0);
+    }
+}

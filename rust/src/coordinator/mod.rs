@@ -1,0 +1,8 @@
+//! The leader that runs Algorithm 1 end-to-end (the paper's contribution,
+//! assembled): one MapReduce job computing per-fold statistics, the
+//! driver-side CV phase over the λ grid, the final full-data fit, and the
+//! back-transform to original units.
+
+pub mod driver;
+
+pub use driver::{Driver, FitReport};

@@ -1,0 +1,155 @@
+//! Fold statistics algebra.
+//!
+//! The reduce phase hands back k chunk statistics {s_0..s_{k−1}}.  All the
+//! CV phase ever needs is (a) the total Σs_j and (b) per-fold leave-out
+//! training statistics Σ_{j≠i} s_j = total − s_i — both O(p²) moment
+//! arithmetic, zero data passes (paper lines 14–18).
+
+use anyhow::{bail, Result};
+
+use crate::stats::SuffStats;
+
+/// The k chunk statistics plus their precomputed total.
+#[derive(Debug, Clone)]
+pub struct FoldStats {
+    folds: Vec<SuffStats>,
+    total: SuffStats,
+}
+
+impl FoldStats {
+    /// Build from the reduce output. Requires ≥2 folds, each non-trivial
+    /// (every fold needs ≥2 rows to standardize its complement and score).
+    pub fn new(folds: Vec<SuffStats>) -> Result<Self> {
+        if folds.len() < 2 {
+            bail!("cross validation needs k >= 2 folds, got {}", folds.len());
+        }
+        let p = folds[0].p();
+        let mut total = SuffStats::new(p);
+        for (i, f) in folds.iter().enumerate() {
+            if f.p() != p {
+                bail!("fold {i} has p={}, expected {p}", f.p());
+            }
+            if f.count() == 0 {
+                bail!("fold {i} is empty — k too large for the data?");
+            }
+            total.merge(f);
+        }
+        Ok(FoldStats { folds, total })
+    }
+
+    pub fn k(&self) -> usize {
+        self.folds.len()
+    }
+
+    pub fn p(&self) -> usize {
+        self.total.p()
+    }
+
+    pub fn n(&self) -> u64 {
+        self.total.count()
+    }
+
+    /// Statistics of all data (Algorithm 1 line 24 uses this for the final
+    /// fit; note the paper's line 24 sums k−1 chunks — a typo; summing all
+    /// k is the standard final refit and what we do).
+    pub fn total(&self) -> &SuffStats {
+        &self.total
+    }
+
+    /// The held-out fold i.
+    pub fn fold(&self, i: usize) -> &SuffStats {
+        &self.folds[i]
+    }
+
+    /// Training statistics for fold i: total − s_i.
+    pub fn train_for(&self, i: usize) -> SuffStats {
+        self.total.sub(&self.folds[i])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn folds_from_rows(k: usize, p: usize, rows: &[(Vec<f64>, f64)]) -> Vec<SuffStats> {
+        let mut folds: Vec<SuffStats> = (0..k).map(|_| SuffStats::new(p)).collect();
+        for (i, (x, y)) in rows.iter().enumerate() {
+            folds[i % k].push(x, *y);
+        }
+        folds
+    }
+
+    fn rows(rng: &mut Rng, n: usize, p: usize) -> Vec<(Vec<f64>, f64)> {
+        (0..n)
+            .map(|_| {
+                let x: Vec<f64> = (0..p).map(|_| rng.normal()).collect();
+                let y = x[0] + rng.normal();
+                (x, y)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn total_counts_and_train_complement() {
+        let mut rng = Rng::seed_from(1);
+        let data = rows(&mut rng, 103, 3);
+        let fs = FoldStats::new(folds_from_rows(5, 3, &data)).unwrap();
+        assert_eq!(fs.k(), 5);
+        assert_eq!(fs.n(), 103);
+        for i in 0..5 {
+            let train = fs.train_for(i);
+            assert_eq!(train.count() + fs.fold(i).count(), 103);
+            // train ∪ fold means reconstruct the total mean
+            let n_t = train.count() as f64;
+            let n_f = fs.fold(i).count() as f64;
+            let mean = (n_t * train.y_mean() + n_f * fs.fold(i).y_mean()) / 103.0;
+            assert!((mean - fs.total().y_mean()).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn train_for_matches_direct_aggregation() {
+        let mut rng = Rng::seed_from(2);
+        let data = rows(&mut rng, 200, 2);
+        let folds = folds_from_rows(4, 2, &data);
+        let fs = FoldStats::new(folds.clone()).unwrap();
+        for i in 0..4 {
+            let train = fs.train_for(i);
+            let mut direct = SuffStats::new(2);
+            for (j, f) in folds.iter().enumerate() {
+                if j != i {
+                    direct.merge(f);
+                }
+            }
+            assert_eq!(train.count(), direct.count());
+            for a in 0..2 {
+                assert!((train.sxy(a) - direct.sxy(a)).abs() < 1e-8);
+                for b in 0..2 {
+                    assert!((train.sxx(a, b) - direct.sxx(a, b)).abs() < 1e-7);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_too_few_or_empty_folds() {
+        let mut rng = Rng::seed_from(3);
+        let data = rows(&mut rng, 10, 2);
+        assert!(FoldStats::new(folds_from_rows(1, 2, &data)).is_err());
+        let mut folds = folds_from_rows(3, 2, &data);
+        folds.push(SuffStats::new(2)); // empty fold
+        assert!(FoldStats::new(folds).is_err());
+    }
+
+    #[test]
+    fn rejects_dimension_mismatch() {
+        let mut rng = Rng::seed_from(4);
+        let a = folds_from_rows(2, 2, &rows(&mut rng, 10, 2));
+        let mut mixed = a;
+        let mut bad = SuffStats::new(3);
+        bad.push(&[1.0, 2.0, 3.0], 1.0);
+        mixed.push(bad);
+        assert!(FoldStats::new(mixed).is_err());
+    }
+}

@@ -1,0 +1,19 @@
+//! The cross-validation phase of Algorithm 1 (lines 13–23) — the part the
+//! paper claims as its distinguishing feature: model selection happens
+//! *inside* the single pass, because fold statistics are additive.
+//!
+//! * [`kfold`] — fold statistics algebra: `train_i = total − s_i` in O(p²).
+//! * [`select`] — the λ grid sweep: per (fold, λ) fit on train statistics,
+//!   score on the held-out fold's statistics (exact MSE, no data access),
+//!   pick λ_opt (and the 1-SE alternative).
+
+//! * [`parallel`] — the paper's §4 extension: the CV phase itself as a
+//!   second MapReduce job (bit-identical to the serial phase).
+
+pub mod kfold;
+pub mod parallel;
+pub mod select;
+
+pub use kfold::FoldStats;
+pub use parallel::cross_validate_parallel;
+pub use select::{cross_validate, CvResult};

@@ -1,0 +1,174 @@
+//! The paper's §4 extension: "In order to fully exploit the parallelism,
+//! the cross validation phase can be implemented in another MapReduce job."
+//!
+//! Here it is: the (fold × λ-path) work units become map tasks on the same
+//! engine used for the statistics pass.  Each task fits the warm-started
+//! path for one fold (all λs) and emits the per-λ held-out errors; the
+//! reduce phase assembles the CV matrix.  Because fold statistics are tiny
+//! (O(p²)), the "shuffle" is negligible — the paper's reason for calling
+//! this optional — but for large p · many λs it buys near-linear speedup,
+//! and the result is IDENTICAL to the serial CV phase (asserted in tests).
+
+use anyhow::Result;
+
+use crate::mapreduce::{run_job, Emitter, EngineConfig, TaskCtx};
+use crate::solver::cd::{solve_cd, CdSettings};
+use crate::solver::penalty::Penalty;
+use crate::util::{mean, std_dev};
+
+use super::kfold::FoldStats;
+use super::select::CvResult;
+
+/// Per-fold result flowing through the engine.
+#[derive(Debug, Clone)]
+struct FoldErrors {
+    fold: usize,
+    /// held-out MSE per λ
+    err: Vec<f64>,
+    /// nnz per λ
+    nnz: Vec<usize>,
+}
+
+impl crate::mapreduce::Mergeable for FoldErrors {
+    fn merge_in(&mut self, _other: Self) {
+        unreachable!("one value per fold key — nothing ever merges");
+    }
+}
+
+/// Parallel CV: same contract (and same output) as
+/// [`super::select::cross_validate`], executed as a second MapReduce job.
+pub fn cross_validate_parallel(
+    folds: &FoldStats,
+    penalty: Penalty,
+    lambdas: &[f64],
+    settings: CdSettings,
+    engine: &EngineConfig,
+) -> Result<CvResult> {
+    assert!(!lambdas.is_empty());
+    let k = folds.k();
+    let fold_ids: Vec<usize> = (0..k).collect();
+    let out = run_job(
+        engine,
+        &fold_ids,
+        |_ctx: &TaskCtx, &fold, em: &mut Emitter<usize, FoldErrors>| {
+            let train = folds.train_for(fold);
+            let q = train.quad_form();
+            let held = folds.fold(fold);
+            let mut err = Vec::with_capacity(lambdas.len());
+            let mut nnz = Vec::with_capacity(lambdas.len());
+            let mut warm: Option<Vec<f64>> = None;
+            for &lam in lambdas {
+                let sol = solve_cd(&q, penalty, lam, warm.as_deref(), settings);
+                let (alpha, beta) = q.to_original_scale(&sol.beta);
+                err.push(held.mse(alpha, &beta));
+                nnz.push(sol.n_active);
+                warm = Some(sol.beta);
+            }
+            em.emit(fold, FoldErrors { fold, err, nnz });
+        },
+    )?;
+
+    let n_l = lambdas.len();
+    let mut fold_err = vec![vec![0.0; k]; n_l];
+    let mut nnz_m = vec![vec![0usize; k]; n_l];
+    for (_, fe) in out.output {
+        for li in 0..n_l {
+            fold_err[li][fe.fold] = fe.err[li];
+            nnz_m[li][fe.fold] = fe.nnz[li];
+        }
+    }
+    let mean_err: Vec<f64> = fold_err.iter().map(|r| mean(r)).collect();
+    let se_err: Vec<f64> = fold_err
+        .iter()
+        .map(|r| std_dev(r) / (k as f64).sqrt())
+        .collect();
+    let mean_nnz: Vec<f64> = nnz_m
+        .iter()
+        .map(|r| r.iter().sum::<usize>() as f64 / k as f64)
+        .collect();
+    let opt_index = mean_err
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap();
+    let threshold = mean_err[opt_index] + se_err[opt_index];
+    let lambda_1se = lambdas
+        .iter()
+        .zip(&mean_err)
+        .find(|(_, e)| **e <= threshold)
+        .map(|(l, _)| *l)
+        .unwrap_or(lambdas[opt_index]);
+    Ok(CvResult {
+        lambdas: lambdas.to_vec(),
+        lambda_opt: lambdas[opt_index],
+        lambda_1se,
+        opt_index,
+        mean_err,
+        se_err,
+        fold_err,
+        mean_nnz,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cv::select::cross_validate;
+    use crate::data::synth::{generate, SynthSpec};
+    use crate::mapreduce::FoldAssigner;
+    use crate::solver::path::lambda_grid;
+    use crate::stats::SuffStats;
+
+    fn folds(n: usize, p: usize, k: usize, seed: u64) -> FoldStats {
+        let d = generate(&SynthSpec::sparse_linear(n, p, 0.3, seed));
+        let assigner = FoldAssigner::new(k, 77);
+        let mut fs: Vec<SuffStats> = (0..k).map(|_| SuffStats::new(p)).collect();
+        for i in 0..d.n() {
+            fs[assigner.fold_of(i as u64)].push(d.row(i), d.y[i]);
+        }
+        FoldStats::new(fs).unwrap()
+    }
+
+    #[test]
+    fn parallel_cv_identical_to_serial() {
+        let fs = folds(5000, 10, 5, 3);
+        let grid = lambda_grid(fs.total().quad_form().lambda_max(1.0), 25, 1e-3);
+        let serial = cross_validate(&fs, Penalty::lasso(), &grid, CdSettings::default()).unwrap();
+        let par = cross_validate_parallel(
+            &fs,
+            Penalty::lasso(),
+            &grid,
+            CdSettings::default(),
+            &EngineConfig::with_workers(4),
+        )
+        .unwrap();
+        assert_eq!(serial.lambda_opt, par.lambda_opt);
+        assert_eq!(serial.opt_index, par.opt_index);
+        assert_eq!(serial.fold_err, par.fold_err, "bit-identical CV matrix");
+        assert_eq!(serial.mean_nnz, par.mean_nnz);
+    }
+
+    #[test]
+    fn parallel_cv_with_one_worker_also_matches() {
+        let fs = folds(2000, 6, 10, 5);
+        let grid = lambda_grid(fs.total().quad_form().lambda_max(1.0), 10, 1e-2);
+        let a = cross_validate_parallel(
+            &fs,
+            Penalty::elastic_net(0.5),
+            &grid,
+            CdSettings::default(),
+            &EngineConfig::with_workers(1),
+        )
+        .unwrap();
+        let b = cross_validate_parallel(
+            &fs,
+            Penalty::elastic_net(0.5),
+            &grid,
+            CdSettings::default(),
+            &EngineConfig::with_workers(8),
+        )
+        .unwrap();
+        assert_eq!(a.fold_err, b.fold_err);
+    }
+}

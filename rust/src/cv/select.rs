@@ -1,0 +1,193 @@
+//! The λ selection sweep (Algorithm 1 lines 15–23).
+//!
+//! For each fold i we build the standardized quadratic form of
+//! `train_i = total − s_i` once, then walk the λ grid from λ_max downward
+//! with warm starts; each (fold, λ) fit is scored on the held-out fold's
+//! statistics via the exact closed-form MSE ([`crate::stats::SuffStats::mse`]).
+//! Model selection therefore touches *no data* — only k·(p+1)² numbers.
+
+use anyhow::Result;
+
+use crate::solver::cd::{solve_cd, CdSettings};
+use crate::solver::penalty::Penalty;
+use crate::util::{mean, std_dev};
+
+use super::kfold::FoldStats;
+
+/// Cross-validation output: the CV curve and the selected λs.
+#[derive(Debug, Clone)]
+pub struct CvResult {
+    /// descending λ grid
+    pub lambdas: Vec<f64>,
+    /// mean held-out MSE per λ (the paper's `pre(λ)`)
+    pub mean_err: Vec<f64>,
+    /// standard error of the fold MSEs per λ
+    pub se_err: Vec<f64>,
+    /// full (λ × fold) MSE matrix, row-major \[λ\]\[fold\]
+    pub fold_err: Vec<Vec<f64>>,
+    /// per-λ mean number of nonzero coefficients across folds
+    pub mean_nnz: Vec<f64>,
+    /// argmin of `mean_err`
+    pub lambda_opt: f64,
+    /// largest λ within one SE of the minimum (the sparser 1-SE choice)
+    pub lambda_1se: f64,
+    /// index of λ_opt in `lambdas`
+    pub opt_index: usize,
+}
+
+/// Run k-fold CV over a descending λ grid.
+pub fn cross_validate(
+    folds: &FoldStats,
+    penalty: Penalty,
+    lambdas: &[f64],
+    settings: CdSettings,
+) -> Result<CvResult> {
+    assert!(!lambdas.is_empty(), "empty lambda grid");
+    debug_assert!(
+        lambdas.windows(2).all(|w| w[0] >= w[1]),
+        "lambda grid must be descending"
+    );
+    let k = folds.k();
+    let n_l = lambdas.len();
+    // fold-major sweep: one quad_form per fold, warm starts along λ
+    let mut fold_err = vec![vec![0.0; k]; n_l];
+    let mut nnz = vec![vec![0usize; k]; n_l];
+    for i in 0..k {
+        let train = folds.train_for(i);
+        let q = train.quad_form();
+        let held = folds.fold(i);
+        let mut warm: Option<Vec<f64>> = None;
+        for (li, &lam) in lambdas.iter().enumerate() {
+            let sol = solve_cd(&q, penalty, lam, warm.as_deref(), settings);
+            let (alpha, beta) = q.to_original_scale(&sol.beta);
+            fold_err[li][i] = held.mse(alpha, &beta);
+            nnz[li][i] = sol.n_active;
+            warm = Some(sol.beta);
+        }
+    }
+    let mean_err: Vec<f64> = fold_err.iter().map(|row| mean(row)).collect();
+    let se_err: Vec<f64> = fold_err
+        .iter()
+        .map(|row| std_dev(row) / (k as f64).sqrt())
+        .collect();
+    let mean_nnz: Vec<f64> = nnz
+        .iter()
+        .map(|row| row.iter().sum::<usize>() as f64 / k as f64)
+        .collect();
+
+    let opt_index = mean_err
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap();
+    let lambda_opt = lambdas[opt_index];
+    // 1-SE rule: largest λ with mean_err ≤ min + se(min).  Grid is
+    // descending, so scan from the front.
+    let threshold = mean_err[opt_index] + se_err[opt_index];
+    let lambda_1se = lambdas
+        .iter()
+        .zip(&mean_err)
+        .find(|(_, e)| **e <= threshold)
+        .map(|(l, _)| *l)
+        .unwrap_or(lambda_opt);
+
+    Ok(CvResult {
+        lambdas: lambdas.to_vec(),
+        mean_err,
+        se_err,
+        fold_err,
+        mean_nnz,
+        lambda_opt,
+        lambda_1se,
+        opt_index,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthSpec};
+    use crate::mapreduce::FoldAssigner;
+    use crate::solver::path::lambda_grid;
+    use crate::stats::SuffStats;
+
+    fn folds_from_spec(spec: &SynthSpec, k: usize) -> FoldStats {
+        let d = generate(spec);
+        let assigner = FoldAssigner::new(k, 11);
+        let mut folds: Vec<SuffStats> = (0..k).map(|_| SuffStats::new(spec.p)).collect();
+        for i in 0..d.n() {
+            folds[assigner.fold_of(i as u64)].push(d.row(i), d.y[i]);
+        }
+        FoldStats::new(folds).unwrap()
+    }
+
+    #[test]
+    fn curve_shape_and_selection() {
+        // sparse truth: CV error should be high at λ_max (null model),
+        // dip near the truth, and the optimum must beat the null model.
+        let spec = SynthSpec::sparse_linear(4000, 10, 0.3, 21);
+        let folds = folds_from_spec(&spec, 5);
+        let q = folds.total().quad_form();
+        let grid = lambda_grid(q.lambda_max(1.0), 30, 1e-3);
+        let cv = cross_validate(&folds, Penalty::lasso(), &grid, CdSettings::default()).unwrap();
+        assert_eq!(cv.mean_err.len(), 30);
+        // null model error ≈ Var(y); optimum ≈ noise² = 1
+        let null_err = cv.mean_err[0];
+        let best = cv.mean_err[cv.opt_index];
+        assert!(null_err > 2.0 * best, "null {null_err} vs best {best}");
+        assert!((best - 1.0).abs() < 0.2, "best ≈ noise variance, got {best}");
+        assert!(cv.lambda_opt < grid[0]);
+        assert!(cv.lambda_1se >= cv.lambda_opt);
+        // λ_max comes from the TOTAL statistics; a fold's train complement
+        // can have a slightly larger |c_j|, so a stray coefficient may enter
+        // — but the λ_max model must be (near-)null on average.
+        assert!(cv.mean_nnz[0] <= 1.0, "nnz at lambda_max: {}", cv.mean_nnz[0]);
+    }
+
+    #[test]
+    fn selected_model_recovers_support() {
+        let spec = SynthSpec::sparse_linear(6000, 12, 0.25, 31);
+        let beta_true = spec.true_beta();
+        let folds = folds_from_spec(&spec, 10);
+        let q = folds.total().quad_form();
+        let grid = lambda_grid(q.lambda_max(1.0), 40, 1e-3);
+        let cv = cross_validate(&folds, Penalty::lasso(), &grid, CdSettings::default()).unwrap();
+        // final fit at λ_opt on all data
+        let sol = solve_cd(&q, Penalty::lasso(), cv.lambda_opt, None, CdSettings::default());
+        let (_, beta) = q.to_original_scale(&sol.beta);
+        for j in 0..12 {
+            if beta_true[j] != 0.0 {
+                assert!(
+                    beta[j].abs() > 0.1,
+                    "true support {j} missing: beta={beta:?} truth={beta_true:?}"
+                );
+                assert!((beta[j] - beta_true[j]).abs() < 0.25);
+            }
+        }
+    }
+
+    #[test]
+    fn se_and_matrix_dimensions() {
+        let spec = SynthSpec::sparse_linear(800, 4, 0.5, 41);
+        let folds = folds_from_spec(&spec, 4);
+        let grid = lambda_grid(1.0, 7, 1e-2);
+        let cv = cross_validate(&folds, Penalty::elastic_net(0.5), &grid, CdSettings::default())
+            .unwrap();
+        assert_eq!(cv.fold_err.len(), 7);
+        assert!(cv.fold_err.iter().all(|r| r.len() == 4));
+        assert!(cv.se_err.iter().all(|s| *s >= 0.0));
+    }
+
+    #[test]
+    fn ridge_cv_runs_and_shrinks() {
+        let spec = SynthSpec::correlated(2000, 6, 0.9, 51);
+        let folds = folds_from_spec(&spec, 5);
+        let grid = lambda_grid(10.0, 20, 1e-4);
+        let cv =
+            cross_validate(&folds, Penalty::ridge(), &grid, CdSettings::default()).unwrap();
+        // ridge never zeros coefficients: nnz = p for λ < λmax on corr data
+        assert!(cv.mean_nnz.last().unwrap() - 6.0 == 0.0);
+        assert!(cv.lambda_opt <= 10.0);
+    }
+}

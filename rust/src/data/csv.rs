@@ -1,0 +1,306 @@
+//! CSV shard I/O — the on-disk interchange for the CLI (`plrmr fit --csv`).
+//!
+//! Format: optional header, then one row per line, comma-separated, the
+//! *last* column is the response y.  Writers shard a dataset into N files
+//! (what a distributed filesystem would hand each mapper).
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::dataset::Dataset;
+
+/// Write `data` as a single CSV file with an `x0..x{p-1},y` header.
+pub fn write_csv(data: &Dataset, path: &Path) -> Result<()> {
+    let f = File::create(path).with_context(|| format!("create {path:?}"))?;
+    let mut w = BufWriter::new(f);
+    let header: Vec<String> = (0..data.p)
+        .map(|j| format!("x{j}"))
+        .chain(std::iter::once("y".to_string()))
+        .collect();
+    writeln!(w, "{}", header.join(","))?;
+    for i in 0..data.n() {
+        let row = data.row(i);
+        for v in row {
+            write!(w, "{v},")?;
+        }
+        writeln!(w, "{}", data.y[i])?;
+    }
+    Ok(())
+}
+
+/// Shard `data` into `k` files `<stem>.shard-<i>.csv` under `dir`.
+pub fn write_shards(data: &Dataset, dir: &Path, stem: &str, k: usize) -> Result<Vec<PathBuf>> {
+    std::fs::create_dir_all(dir)?;
+    let mut paths = Vec::with_capacity(k);
+    for (i, shard) in data.shards(k).iter().enumerate() {
+        let path = dir.join(format!("{stem}.shard-{i}.csv"));
+        let sub = Dataset::new(shard.p, shard.x.to_vec(), shard.y.to_vec());
+        write_csv(&sub, &path)?;
+        paths.push(path);
+    }
+    Ok(paths)
+}
+
+/// Read a CSV produced by [`write_csv`] (header optional: a first line that
+/// fails to parse as numbers is treated as a header).
+pub fn read_csv(path: &Path) -> Result<Dataset> {
+    let f = File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut lines = BufReader::new(f).lines();
+    let mut x = Vec::new();
+    let mut y = Vec::new();
+    let mut p: Option<usize> = None;
+    let mut lineno = 0usize;
+    while let Some(line) = lines.next() {
+        let line = line?;
+        lineno += 1;
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let fields: Vec<&str> = trimmed.split(',').collect();
+        if fields.len() < 2 {
+            bail!("{path:?}:{lineno}: need at least one predictor and y");
+        }
+        let parsed: std::result::Result<Vec<f64>, _> =
+            fields.iter().map(|s| s.trim().parse::<f64>()).collect();
+        match parsed {
+            Err(_) if lineno == 1 => continue, // header
+            Err(e) => bail!("{path:?}:{lineno}: {e}"),
+            Ok(vals) => {
+                let row_p = vals.len() - 1;
+                match p {
+                    None => p = Some(row_p),
+                    Some(p0) if p0 != row_p => {
+                        bail!("{path:?}:{lineno}: width {row_p} != {p0}")
+                    }
+                    _ => {}
+                }
+                x.extend_from_slice(&vals[..row_p]);
+                y.push(vals[row_p]);
+            }
+        }
+    }
+    let p = p.context("empty csv")?;
+    Ok(Dataset::new(p, x, y))
+}
+
+/// Stream a CSV in row-blocks without materializing the file: `f(x, y)` is
+/// called with row-major blocks of ≤ `block_rows` rows.  Returns (p, rows).
+///
+/// This is the HDFS-mapper access pattern: each engine task streams its own
+/// shard in O(block) memory (see `Driver::fit_csv_shards`).
+pub fn stream_csv(
+    path: &Path,
+    block_rows: usize,
+    mut f: impl FnMut(&[f64], &[f64]),
+) -> Result<(usize, usize)> {
+    assert!(block_rows > 0);
+    let file = File::open(path).with_context(|| format!("open {path:?}"))?;
+    let reader = BufReader::new(file);
+    let mut p: Option<usize> = None;
+    let mut xbuf: Vec<f64> = Vec::new();
+    let mut ybuf: Vec<f64> = Vec::new();
+    let mut total = 0usize;
+    let mut lineno = 0usize;
+    for line in reader.lines() {
+        let line = line?;
+        lineno += 1;
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let fields: Vec<&str> = trimmed.split(',').collect();
+        if fields.len() < 2 {
+            bail!("{path:?}:{lineno}: need at least one predictor and y");
+        }
+        let parsed: std::result::Result<Vec<f64>, _> =
+            fields.iter().map(|s| s.trim().parse::<f64>()).collect();
+        match parsed {
+            Err(_) if lineno == 1 => continue, // header
+            Err(e) => bail!("{path:?}:{lineno}: {e}"),
+            Ok(vals) => {
+                let row_p = vals.len() - 1;
+                match p {
+                    None => p = Some(row_p),
+                    Some(p0) if p0 != row_p => {
+                        bail!("{path:?}:{lineno}: width {row_p} != {p0}")
+                    }
+                    _ => {}
+                }
+                xbuf.extend_from_slice(&vals[..row_p]);
+                ybuf.push(vals[row_p]);
+                total += 1;
+                if ybuf.len() == block_rows {
+                    f(&xbuf, &ybuf);
+                    xbuf.clear();
+                    ybuf.clear();
+                }
+            }
+        }
+    }
+    if !ybuf.is_empty() {
+        f(&xbuf, &ybuf);
+    }
+    let p = p.context("empty csv")?;
+    Ok((p, total))
+}
+
+/// Number of predictors in a CSV (first data row's width − 1), cheaply.
+pub fn peek_width(path: &Path) -> Result<usize> {
+    let file = File::open(path).with_context(|| format!("open {path:?}"))?;
+    let reader = BufReader::new(file);
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let fields: Vec<&str> = trimmed.split(',').collect();
+        let ok = fields.iter().all(|s| s.trim().parse::<f64>().is_ok());
+        if ok && fields.len() >= 2 {
+            return Ok(fields.len() - 1);
+        }
+        if lineno > 0 {
+            bail!("{path:?}: no parsable data row found near the top");
+        }
+    }
+    bail!("{path:?}: empty csv")
+}
+
+/// Read multiple shards and concatenate (row order = shard order).
+pub fn read_shards(paths: &[PathBuf]) -> Result<Dataset> {
+    let mut all: Option<Dataset> = None;
+    for path in paths {
+        let d = read_csv(path)?;
+        match &mut all {
+            None => all = Some(d),
+            Some(acc) => {
+                if acc.p != d.p {
+                    bail!("shard width mismatch: {} vs {}", acc.p, d.p);
+                }
+                acc.x.extend_from_slice(&d.x);
+                acc.y.extend_from_slice(&d.y);
+            }
+        }
+    }
+    all.context("no shards given")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthSpec};
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("plrmr-csv-test-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn round_trip_single_file() {
+        let d = generate(&SynthSpec::sparse_linear(100, 3, 0.5, 5));
+        let dir = tmpdir("single");
+        let path = dir.join("data.csv");
+        write_csv(&d, &path).unwrap();
+        let back = read_csv(&path).unwrap();
+        assert_eq!(back.p, 3);
+        assert_eq!(back.n(), 100);
+        for i in 0..d.x.len() {
+            assert!((back.x[i] - d.x[i]).abs() < 1e-12);
+        }
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn round_trip_shards() {
+        let d = generate(&SynthSpec::sparse_linear(101, 2, 0.5, 6));
+        let dir = tmpdir("shards");
+        let paths = write_shards(&d, &dir, "w", 4).unwrap();
+        assert_eq!(paths.len(), 4);
+        let back = read_shards(&paths).unwrap();
+        assert_eq!(back.n(), 101);
+        assert_eq!(back.y, d.y);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn headerless_csv_parses() {
+        let dir = tmpdir("nohdr");
+        let path = dir.join("x.csv");
+        std::fs::write(&path, "1.0,2.0,3.0\n4,5,6\n").unwrap();
+        let d = read_csv(&path).unwrap();
+        assert_eq!(d.p, 2);
+        assert_eq!(d.y, vec![3.0, 6.0]);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn rejects_ragged_rows() {
+        let dir = tmpdir("ragged");
+        let path = dir.join("x.csv");
+        std::fs::write(&path, "1,2,3\n4,5\n").unwrap();
+        assert!(read_csv(&path).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn rejects_non_numeric_body() {
+        let dir = tmpdir("alpha");
+        let path = dir.join("x.csv");
+        std::fs::write(&path, "a,b,c\n1,2,3\n4,oops,6\n").unwrap();
+        assert!(read_csv(&path).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn stream_matches_materialized_read() {
+        let d = generate(&SynthSpec::sparse_linear(1000, 4, 0.5, 8));
+        let dir = tmpdir("stream");
+        let path = dir.join("data.csv");
+        write_csv(&d, &path).unwrap();
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        let mut blocks = 0;
+        let (p, rows) = stream_csv(&path, 64, |xb, yb| {
+            x.extend_from_slice(xb);
+            y.extend_from_slice(yb);
+            blocks += 1;
+        })
+        .unwrap();
+        assert_eq!((p, rows), (4, 1000));
+        assert_eq!(blocks, 1000usize.div_ceil(64));
+        let back = read_csv(&path).unwrap();
+        assert_eq!(y, back.y);
+        for i in 0..x.len() {
+            assert!((x[i] - back.x[i]).abs() < 1e-12);
+        }
+        assert_eq!(peek_width(&path).unwrap(), 4);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn stream_rejects_ragged_and_empty() {
+        let dir = tmpdir("streambad");
+        let bad = dir.join("bad.csv");
+        std::fs::write(&bad, "1,2,3\n4,5\n").unwrap();
+        assert!(stream_csv(&bad, 8, |_, _| {}).is_err());
+        let empty = dir.join("empty.csv");
+        std::fs::write(&empty, "").unwrap();
+        assert!(stream_csv(&empty, 8, |_, _| {}).is_err());
+        assert!(peek_width(&empty).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn empty_file_errors() {
+        let dir = tmpdir("empty");
+        let path = dir.join("x.csv");
+        std::fs::write(&path, "").unwrap();
+        assert!(read_csv(&path).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -1,0 +1,199 @@
+//! Materialized datasets and row-block views.
+
+/// A dense row-major design matrix plus response, fully in memory.
+///
+/// Used for exactness checks and small/medium experiments; large-n runs use
+/// [`super::synth::SynthStream`] instead and never materialize.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Dataset {
+    /// number of predictors
+    pub p: usize,
+    /// row-major n×p
+    pub x: Vec<f64>,
+    /// length n
+    pub y: Vec<f64>,
+}
+
+/// A borrowed block of rows (the unit the engine maps over).
+#[derive(Debug, Clone, Copy)]
+pub struct DataBlock<'a> {
+    pub p: usize,
+    /// row-major rows×p
+    pub x: &'a [f64],
+    pub y: &'a [f64],
+    /// index of the first row within the parent dataset/stream
+    pub offset: usize,
+}
+
+impl Dataset {
+    pub fn new(p: usize, x: Vec<f64>, y: Vec<f64>) -> Self {
+        assert_eq!(x.len(), y.len() * p, "x must be n*p, y length n");
+        Dataset { p, x, y }
+    }
+
+    pub fn n(&self) -> usize {
+        self.y.len()
+    }
+
+    /// Row view.
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.x[i * self.p..(i + 1) * self.p]
+    }
+
+    /// Iterate fixed-size blocks (last one may be short).
+    pub fn blocks(&self, block_rows: usize) -> impl Iterator<Item = DataBlock<'_>> {
+        assert!(block_rows > 0);
+        let p = self.p;
+        let n = self.n();
+        (0..n.div_ceil(block_rows)).map(move |b| {
+            let lo = b * block_rows;
+            let hi = ((b + 1) * block_rows).min(n);
+            DataBlock {
+                p,
+                x: &self.x[lo * p..hi * p],
+                y: &self.y[lo..hi],
+                offset: lo,
+            }
+        })
+    }
+
+    /// Split into `k` contiguous shards of near-equal size (for the engine's
+    /// input splits; fold assignment is *random per record*, per Algorithm 1
+    /// line 4 — sharding is independent of folds).
+    pub fn shards(&self, k: usize) -> Vec<DataBlock<'_>> {
+        assert!(k > 0);
+        let n = self.n();
+        let base = n / k;
+        let extra = n % k;
+        let mut out = Vec::with_capacity(k);
+        let mut lo = 0;
+        for i in 0..k {
+            let len = base + usize::from(i < extra);
+            let hi = lo + len;
+            out.push(DataBlock {
+                p: self.p,
+                x: &self.x[lo * self.p..hi * self.p],
+                y: &self.y[lo..hi],
+                offset: lo,
+            });
+            lo = hi;
+        }
+        out
+    }
+
+    /// Predict with an original-scale model, appending into `out`.
+    pub fn predict_into(&self, alpha: f64, beta: &[f64], out: &mut Vec<f64>) {
+        assert_eq!(beta.len(), self.p);
+        out.clear();
+        out.reserve(self.n());
+        for i in 0..self.n() {
+            let row = self.row(i);
+            let mut acc = alpha;
+            for j in 0..self.p {
+                acc += row[j] * beta[j];
+            }
+            out.push(acc);
+        }
+    }
+
+    /// In-sample MSE of a model (direct two-pass computation — the oracle
+    /// the suffstats-based [`crate::stats::SuffStats::mse`] is tested against).
+    pub fn mse(&self, alpha: f64, beta: &[f64]) -> f64 {
+        let mut preds = Vec::new();
+        self.predict_into(alpha, beta, &mut preds);
+        let n = self.n() as f64;
+        preds
+            .iter()
+            .zip(&self.y)
+            .map(|(p, y)| (y - p) * (y - p))
+            .sum::<f64>()
+            / n
+    }
+}
+
+impl<'a> DataBlock<'a> {
+    pub fn rows(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.x[i * self.p..(i + 1) * self.p]
+    }
+
+    /// Iterate (row, y) pairs.
+    pub fn iter(&self) -> impl Iterator<Item = (&'a [f64], f64)> + '_ {
+        let p = self.p;
+        self.y
+            .iter()
+            .enumerate()
+            .map(move |(i, &y)| (&self.x[i * p..(i + 1) * p], y))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        Dataset::new(
+            2,
+            vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0],
+            vec![10.0, 20.0, 30.0, 40.0, 50.0],
+        )
+    }
+
+    #[test]
+    fn rows_and_blocks() {
+        let d = tiny();
+        assert_eq!(d.n(), 5);
+        assert_eq!(d.row(2), &[5.0, 6.0]);
+        let blocks: Vec<_> = d.blocks(2).collect();
+        assert_eq!(blocks.len(), 3);
+        assert_eq!(blocks[0].rows(), 2);
+        assert_eq!(blocks[2].rows(), 1); // short tail
+        assert_eq!(blocks[2].offset, 4);
+        assert_eq!(blocks[1].row(1), &[7.0, 8.0]);
+        let total: usize = blocks.iter().map(|b| b.rows()).sum();
+        assert_eq!(total, 5);
+    }
+
+    #[test]
+    fn shards_cover_everything() {
+        let d = tiny();
+        for k in 1..=5 {
+            let shards = d.shards(k);
+            assert_eq!(shards.len(), k);
+            let total: usize = shards.iter().map(|s| s.rows()).sum();
+            assert_eq!(total, 5, "k={k}");
+            // sizes differ by at most 1
+            let min = shards.iter().map(|s| s.rows()).min().unwrap();
+            let max = shards.iter().map(|s| s.rows()).max().unwrap();
+            assert!(max - min <= 1);
+        }
+    }
+
+    #[test]
+    fn block_iter_pairs() {
+        let d = tiny();
+        let b = d.blocks(5).next().unwrap();
+        let pairs: Vec<_> = b.iter().collect();
+        assert_eq!(pairs.len(), 5);
+        assert_eq!(pairs[3], (&[7.0, 8.0][..], 40.0));
+    }
+
+    #[test]
+    fn predict_and_mse() {
+        let d = tiny();
+        // y = 10 * x0 / 1 ... actually y = 10*((x0+1)/2) = 5*x0+5
+        let mse = d.mse(5.0, &[5.0, 0.0]);
+        assert!(mse < 1e-24, "mse={mse}");
+        let mse_bad = d.mse(0.0, &[0.0, 0.0]);
+        assert!(mse_bad > 100.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_lengths_panic() {
+        Dataset::new(2, vec![1.0, 2.0, 3.0], vec![1.0]);
+    }
+}

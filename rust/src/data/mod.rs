@@ -1,0 +1,16 @@
+//! Data substrate: in-memory datasets, streaming blocks, synthetic
+//! generators, and CSV shard I/O.
+//!
+//! The paper's data lives on HDFS at billions-of-rows scale; the one-pass
+//! property is about the *access pattern* (each row touched exactly once),
+//! not the storage medium.  [`dataset::Dataset`] holds materialized data
+//! for exactness checks; [`synth::SynthStream`] produces unbounded
+//! row-blocks without materializing anything, which is what the scaling
+//! experiments (F1) iterate over; [`csv`] round-trips shard files so the
+//! CLI can run against files on disk.
+
+pub mod csv;
+pub mod dataset;
+pub mod synth;
+
+pub use dataset::{DataBlock, Dataset};

@@ -1,0 +1,88 @@
+//! F1 — scaling in n (claims C1/C5): the one pass is linear in n with
+//! constant driver memory.
+//!
+//! Streaming workloads (never materialized), n doubling across a range:
+//! report wallclock, rows/s, and driver-side state (constant k·O(p²)).
+//! Expected shape: a flat throughput line — wallclock ∝ n.
+
+use anyhow::Result;
+
+use crate::config::FitConfig;
+use crate::coordinator::Driver;
+use crate::data::synth::SynthSpec;
+use crate::util::table::{sig, Table};
+use crate::util::timer::fmt_secs;
+
+use super::ExpOptions;
+
+pub fn run(opts: ExpOptions) -> Result<String> {
+    let p = 32;
+    let k = 5;
+    let workers = opts.workers_or_default();
+    let ns: Vec<usize> = if opts.quick {
+        vec![20_000, 40_000, 80_000]
+    } else {
+        vec![100_000, 200_000, 400_000, 800_000, 1_600_000, 3_200_000]
+    };
+
+    let d = p + 1;
+    let state_kib = k * (d + d * (d + 1) / 2) * 8 / 1024;
+    let mut t = Table::new(vec![
+        "n", "map wallclock", "rows/s", "driver state", "lambda_opt", "nnz",
+    ]);
+    let mut throughputs = Vec::new();
+    for &n in &ns {
+        let spec = SynthSpec::sparse_linear(n, p, 0.2, 606);
+        let cfg = FitConfig {
+            workers,
+            folds: k,
+            n_lambdas: 30,
+            split_rows: 65_536,
+            ..Default::default()
+        };
+        let report = Driver::new(cfg).fit_stream(&spec)?;
+        let tput = report.map_metrics.throughput_rows_per_s();
+        throughputs.push(tput);
+        t.row(vec![
+            format!("{n}"),
+            fmt_secs(report.map_metrics.real_s),
+            sig(tput, 3),
+            format!("{state_kib} KiB"),
+            sig(report.lambda_opt, 3),
+            format!("{}", report.model.nnz()),
+        ]);
+    }
+    let flatness = throughputs.iter().cloned().fold(f64::INFINITY, f64::min)
+        / throughputs.iter().cloned().fold(0.0, f64::max);
+
+    Ok(format!(
+        "## F1 — scaling in n (streaming, p={p}, k={k}, {workers} workers)\n\n{}\n\n\
+         throughput flatness (min/max): {} — linear-in-n as claimed; driver state\n\
+         is constant regardless of n (generation cost is included in the map time).\n",
+        t.render(),
+        sig(flatness, 3),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f1_throughput_roughly_flat() {
+        let out = run(ExpOptions { quick: true, workers: 4 }).unwrap();
+        let flat: f64 = out
+            .lines()
+            .find(|l| l.contains("throughput flatness"))
+            .unwrap()
+            .split("(min/max): ")
+            .nth(1)
+            .unwrap()
+            .split_whitespace()
+            .next()
+            .unwrap()
+            .parse()
+            .unwrap();
+        assert!(flat > 0.3, "throughput should be roughly flat, min/max={flat}");
+    }
+}

@@ -1,0 +1,106 @@
+//! The reproduction experiments (DESIGN.md §Experiments index).
+//!
+//! The paper carries no empirical tables/figures; these experiments
+//! operationalize its five claims (C1–C5) as the tables/figures such a
+//! paper would publish.  Every experiment is runnable both from the CLI
+//! (`plrmr experiments <id|all> [--quick]`) and from `cargo bench`
+//! (rust/benches/ wraps the same functions), and every one prints a
+//! markdown table recorded in EXPERIMENTS.md.
+//!
+//! | id | claim | what it shows |
+//! |----|-------|----------------|
+//! | t1 | C1 one-pass vs iterative | jobs/passes/modeled time: Alg.1 vs ADMM |
+//! | t2 | C2 exactness            | β error vs serial oracle: one-pass vs PSGD |
+//! | t3 | C3 CV for free          | data passes & time: built-in CV vs refit-per-fold |
+//! | t4 | C4 numerical robustness | naive vs robust statistics at huge offsets |
+//! | t5 | C1 worker scaling       | one-pass speedup with worker count |
+//! | t6 | platform                | fault tolerance: bit-exact under crash/retry |
+//! | f1 | C1/C5 scaling in n      | streaming throughput, wallclock linear in n |
+//! | f2 | C5 scaling in p         | map O(p²) / solve cost / driver memory |
+//! | f3 | C3 the CV curve         | pre(λ) with λ_opt and 1-SE marked |
+
+pub mod f1;
+pub mod f2;
+pub mod f3;
+pub mod t1;
+pub mod t2;
+pub mod t3;
+pub mod t4;
+pub mod t5;
+pub mod t6;
+
+use anyhow::{bail, Result};
+
+/// Global experiment options.
+#[derive(Debug, Clone, Copy)]
+pub struct ExpOptions {
+    /// shrink workloads ~10× for smoke runs
+    pub quick: bool,
+    /// worker override (0 = all cores)
+    pub workers: usize,
+}
+
+impl Default for ExpOptions {
+    fn default() -> Self {
+        ExpOptions { quick: false, workers: 0 }
+    }
+}
+
+impl ExpOptions {
+    pub fn workers_or_default(&self) -> usize {
+        if self.workers > 0 {
+            self.workers
+        } else {
+            std::thread::available_parallelism().map(|v| v.get()).unwrap_or(4)
+        }
+    }
+
+    /// Scale a workload size down when in quick mode.
+    pub fn scale(&self, n: usize) -> usize {
+        if self.quick {
+            (n / 10).max(1000)
+        } else {
+            n
+        }
+    }
+}
+
+/// All experiment ids in run order.
+pub fn all_ids() -> &'static [&'static str] {
+    &["t1", "t2", "t3", "t4", "t5", "t6", "f1", "f2", "f3"]
+}
+
+/// Run one experiment by id, returning the rendered report.
+pub fn run(id: &str, opts: ExpOptions) -> Result<String> {
+    match id {
+        "t1" => t1::run(opts),
+        "t2" => t2::run(opts),
+        "t3" => t3::run(opts),
+        "t4" => t4::run(opts),
+        "t5" => t5::run(opts),
+        "t6" => t6::run(opts),
+        "f1" => f1::run(opts),
+        "f2" => f2::run(opts),
+        "f3" => f3::run(opts),
+        other => bail!("unknown experiment {other:?}; known: {:?}", all_ids()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_id_errors() {
+        assert!(run("zzz", ExpOptions::default()).is_err());
+    }
+
+    #[test]
+    fn quick_scaling() {
+        let q = ExpOptions { quick: true, workers: 0 };
+        assert_eq!(q.scale(100_000), 10_000);
+        assert_eq!(q.scale(5), 1000);
+        let f = ExpOptions::default();
+        assert_eq!(f.scale(100_000), 100_000);
+    }
+}

@@ -1,0 +1,55 @@
+//! # onepass-plr — one-pass penalized linear regression with CV on MapReduce
+//!
+//! A production-shaped reproduction of Kun Yang, *"Simple one-pass algorithm
+//! for penalized linear regression with cross-validation on MapReduce"*
+//! (stat.ML 2013), as a three-layer rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the coordinator: a MapReduce-style engine
+//!   ([`mapreduce`]), the paper's robust distributable statistics
+//!   ([`stats`]), the glmnet-style covariance-update coordinate-descent
+//!   solver ([`solver`]), the built-in k-fold cross-validation phase
+//!   ([`cv`]), and the end-to-end Algorithm 1 driver ([`coordinator`]).
+//! * **Layer 2 (python/compile/model.py)** — the per-chunk statistics and
+//!   CD-sweep compute graphs in JAX, AOT-lowered once to HLO text.
+//! * **Layer 1 (python/compile/kernels/)** — the Pallas blocked-Gram kernel
+//!   backing the map-phase hot-spot.
+//!
+//! The [`runtime`] module loads the AOT artifacts through the PJRT C API
+//! (`xla` crate) so the accelerated map path never touches python.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use plrmr::config::FitConfig;
+//! use plrmr::coordinator::Driver;
+//! use plrmr::data::synth::{SynthSpec, generate};
+//! use plrmr::solver::penalty::Penalty;
+//!
+//! let data = generate(&SynthSpec::sparse_linear(10_000, 32, 0.1, 42));
+//! let cfg = FitConfig::default()
+//!     .with_penalty(Penalty::lasso())
+//!     .with_folds(10);
+//! let fit = Driver::new(cfg).fit(&data).unwrap();
+//! println!("lambda_opt = {}, beta = {:?}", fit.lambda_opt, fit.model.beta);
+//! ```
+//!
+//! See `DESIGN.md` for the full system inventory and the experiments index,
+//! and `EXPERIMENTS.md` for paper-claim-vs-measured results.
+
+pub mod baselines;
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod cv;
+pub mod data;
+pub mod experiments;
+pub mod mapreduce;
+pub mod model;
+pub mod rng;
+pub mod runtime;
+pub mod solver;
+pub mod stats;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

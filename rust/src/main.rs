@@ -1,0 +1,349 @@
+//! `plrmr` — the command-line front end of the one-pass penalized linear
+//! regression coordinator (Yang 2013; see README.md).
+//!
+//! Subcommands:
+//!   gen-data           synthesize a CSV workload (optionally sharded)
+//!   fit                Algorithm 1 end-to-end over CSV shards or synthetic data
+//!   predict            apply a saved model to a CSV
+//!   experiments        run the reproduction experiments (T1..T5, F1..F3)
+//!   inspect-artifacts  list the AOT HLO artifacts and their shapes
+//!   hlo-fit            fit via the PJRT-accelerated map path (L1/L2 kernels)
+//!
+//! Argument parsing is hand-rolled (the offline vendor set has no clap);
+//! every flag is `--name value`.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use plrmr::baselines::serial::serial_cd;
+use plrmr::config::FitConfig;
+use plrmr::coordinator::Driver;
+use plrmr::data::csv;
+use plrmr::data::synth::{generate, SynthSpec};
+use plrmr::experiments::{self, ExpOptions};
+use plrmr::model::fitted::FittedModel;
+use plrmr::model::report::cv_report;
+use plrmr::runtime::{default_artifacts_dir, Catalog, HloStatsMapper};
+use plrmr::solver::penalty::Penalty;
+use plrmr::stats::SuffStats;
+use plrmr::util::table::{sig, Table};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+const USAGE: &str = "\
+usage: plrmr <command> [--flag value ...]
+
+commands:
+  gen-data   --n N --p P [--density D] [--seed S] [--offset C] --out FILE [--shards K]
+  fit        (--csv FILE[,FILE...] | --synth N,P[,DENSITY[,SEED]])
+             [--penalty lasso|ridge|elastic_net:A] [--folds K] [--lambdas L]
+             [--workers W] [--seed S] [--config FILE] [--out MODEL] [--curve]
+  predict    --model MODEL --csv FILE [--out FILE]
+  experiments <t1|t2|t3|t4|t5|f1|f2|f3|all> [--quick] [--workers W]
+  inspect-artifacts [--dir DIR]
+  hlo-fit    --synth N,P[,DENSITY[,SEED]] [--lambda L] [--dir DIR]
+";
+
+/// Parse `--key value` pairs after the positional args.
+fn parse_flags(args: &[String]) -> Result<(Vec<String>, BTreeMap<String, String>)> {
+    let mut pos = Vec::new();
+    let mut flags = BTreeMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(name) = a.strip_prefix("--") {
+            // boolean flags
+            if matches!(name, "quick" | "curve") {
+                flags.insert(name.to_string(), "true".to_string());
+                i += 1;
+                continue;
+            }
+            let val = args
+                .get(i + 1)
+                .with_context(|| format!("flag --{name} needs a value"))?;
+            flags.insert(name.to_string(), val.clone());
+            i += 2;
+        } else {
+            pos.push(a.clone());
+            i += 1;
+        }
+    }
+    Ok((pos, flags))
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "gen-data" => cmd_gen_data(rest),
+        "fit" => cmd_fit(rest),
+        "predict" => cmd_predict(rest),
+        "experiments" => cmd_experiments(rest),
+        "inspect-artifacts" => cmd_inspect(rest),
+        "hlo-fit" => cmd_hlo_fit(rest),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}
+
+fn parse_synth(spec: &str) -> Result<SynthSpec> {
+    let parts: Vec<&str> = spec.split(',').collect();
+    if parts.len() < 2 {
+        bail!("--synth needs N,P[,DENSITY[,SEED]]");
+    }
+    let n: usize = parts[0].parse().context("synth N")?;
+    let p: usize = parts[1].parse().context("synth P")?;
+    let density: f64 = parts.get(2).map(|s| s.parse()).transpose()?.unwrap_or(0.2);
+    let seed: u64 = parts.get(3).map(|s| s.parse()).transpose()?.unwrap_or(42);
+    Ok(SynthSpec::sparse_linear(n, p, density, seed))
+}
+
+fn parse_penalty(s: &str) -> Result<Penalty> {
+    Ok(match s {
+        "lasso" => Penalty::lasso(),
+        "ridge" => Penalty::ridge(),
+        other => {
+            let a = other
+                .strip_prefix("elastic_net:")
+                .with_context(|| format!("unknown penalty {other:?}"))?
+                .parse::<f64>()?;
+            Penalty::elastic_net(a)
+        }
+    })
+}
+
+fn cmd_gen_data(args: &[String]) -> Result<()> {
+    let (_, f) = parse_flags(args)?;
+    let n: usize = f.get("n").context("--n required")?.parse()?;
+    let p: usize = f.get("p").context("--p required")?.parse()?;
+    let density: f64 = f.get("density").map(|s| s.parse()).transpose()?.unwrap_or(0.2);
+    let seed: u64 = f.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(42);
+    let offset: f64 = f.get("offset").map(|s| s.parse()).transpose()?.unwrap_or(0.0);
+    let out = PathBuf::from(f.get("out").context("--out required")?);
+    let spec = SynthSpec { x_offset: offset, ..SynthSpec::sparse_linear(n, p, density, seed) };
+    let data = generate(&spec);
+    if let Some(k) = f.get("shards") {
+        let k: usize = k.parse()?;
+        let dir = out.parent().unwrap_or(std::path::Path::new("."));
+        let stem = out.file_stem().and_then(|s| s.to_str()).unwrap_or("data");
+        let paths = csv::write_shards(&data, dir, stem, k)?;
+        println!("wrote {} shards under {dir:?}", paths.len());
+    } else {
+        csv::write_csv(&data, &out)?;
+        println!("wrote {out:?} ({n} rows, {p} predictors)");
+    }
+    println!("true beta (nonzeros):");
+    for (j, b) in spec.true_beta().iter().enumerate() {
+        if *b != 0.0 {
+            println!("  beta[{j}] = {}", sig(*b, 4));
+        }
+    }
+    Ok(())
+}
+
+fn build_config(f: &BTreeMap<String, String>) -> Result<FitConfig> {
+    let mut cfg = match f.get("config") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path).with_context(|| format!("read {path}"))?;
+            FitConfig::from_kv_pairs(&text)?
+        }
+        None => FitConfig::default(),
+    };
+    if let Some(p) = f.get("penalty") {
+        cfg.penalty = parse_penalty(p)?;
+    }
+    if let Some(k) = f.get("folds") {
+        cfg.folds = k.parse()?;
+    }
+    if let Some(l) = f.get("lambdas") {
+        cfg.n_lambdas = l.parse()?;
+    }
+    if let Some(w) = f.get("workers") {
+        cfg.workers = w.parse()?;
+    }
+    if let Some(s) = f.get("seed") {
+        cfg.seed = s.parse()?;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_fit(args: &[String]) -> Result<()> {
+    let (_, f) = parse_flags(args)?;
+    let cfg = build_config(&f)?;
+    let driver = Driver::new(cfg);
+    let report = match (f.get("csv"), f.get("synth")) {
+        (Some(paths), None) => {
+            // streaming shard ingestion: each map task reads its own file
+            // in O(block) memory — nothing is materialized.
+            let paths: Vec<PathBuf> = paths.split(',').map(PathBuf::from).collect();
+            let p = csv::peek_width(&paths[0])?;
+            println!("streaming {} shard file(s), p={p}", paths.len());
+            driver.fit_csv_shards(p, &paths)?
+        }
+        (None, Some(spec)) => driver.fit_stream(&parse_synth(spec)?)?,
+        _ => bail!("exactly one of --csv or --synth is required"),
+    };
+    println!(
+        "map phase: {} rows in {} ({} rows/s, {} tasks, {} retries)",
+        report.map_metrics.records,
+        plrmr::util::timer::fmt_secs(report.map_metrics.real_s),
+        sig(report.map_metrics.throughput_rows_per_s(), 3),
+        report.map_metrics.tasks_completed,
+        report.map_metrics.retries,
+    );
+    println!("fold sizes: {:?}", report.fold_sizes);
+    if f.contains_key("curve") {
+        println!("\n{}", cv_report(&report.cv));
+    }
+    println!("\n{}", report.model);
+    let d = &report.diagnostics;
+    println!(
+        "\nin-sample: mse={} rmse={} R²={} adjR²={} (df={})",
+        sig(d.mse, 4),
+        sig(d.rmse, 4),
+        sig(d.r2, 4),
+        sig(d.adj_r2, 4),
+        d.df
+    );
+    if let Some(out) = f.get("out") {
+        report.model.save(std::path::Path::new(out))?;
+        println!("\nsaved model to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_predict(args: &[String]) -> Result<()> {
+    let (_, f) = parse_flags(args)?;
+    let model = FittedModel::load(std::path::Path::new(
+        f.get("model").context("--model required")?,
+    ))?;
+    let data = csv::read_csv(std::path::Path::new(f.get("csv").context("--csv required")?))?;
+    if data.p != model.p() {
+        bail!("data has p={} but model expects {}", data.p, model.p());
+    }
+    let mut preds = Vec::new();
+    model.predict_batch(&data.x, &mut preds);
+    if let Some(out) = f.get("out") {
+        let text: String = preds.iter().map(|p| format!("{p}\n")).collect();
+        std::fs::write(out, text)?;
+        println!("wrote {} predictions to {out}", preds.len());
+    } else {
+        for p in preds.iter().take(10) {
+            println!("{p}");
+        }
+        if preds.len() > 10 {
+            println!("... ({} total)", preds.len());
+        }
+    }
+    println!("mse on this data: {}", sig(data.mse(model.alpha, &model.beta), 5));
+    Ok(())
+}
+
+fn cmd_experiments(args: &[String]) -> Result<()> {
+    let (pos, f) = parse_flags(args)?;
+    let opts = ExpOptions {
+        quick: f.contains_key("quick"),
+        workers: f.get("workers").map(|s| s.parse()).transpose()?.unwrap_or(0),
+    };
+    let ids: Vec<&str> = match pos.first().map(String::as_str) {
+        Some("all") | None => experiments::all_ids().to_vec(),
+        Some(id) => vec![id],
+    };
+    for id in ids {
+        let report = experiments::run(id, opts)?;
+        println!("{report}");
+    }
+    Ok(())
+}
+
+fn cmd_inspect(args: &[String]) -> Result<()> {
+    let (_, f) = parse_flags(args)?;
+    let dir = f
+        .get("dir")
+        .map(PathBuf::from)
+        .unwrap_or_else(default_artifacts_dir);
+    let catalog = Catalog::load(&dir)?;
+    let mut t = Table::new(vec!["name", "kind", "p", "block_n", "sweeps", "file"]);
+    for a in &catalog.artifacts {
+        t.row(vec![
+            a.name.clone(),
+            format!("{:?}", a.kind),
+            format!("{}", a.p),
+            a.block_n.map(|b| b.to_string()).unwrap_or_else(|| "-".into()),
+            a.n_sweeps.map(|s| s.to_string()).unwrap_or_else(|| "-".into()),
+            a.path.file_name().unwrap().to_string_lossy().into_owned(),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_hlo_fit(args: &[String]) -> Result<()> {
+    let (_, f) = parse_flags(args)?;
+    let spec = parse_synth(f.get("synth").context("--synth required")?)?;
+    let lambda: f64 = f.get("lambda").map(|s| s.parse()).transpose()?.unwrap_or(0.05);
+    let dir = f
+        .get("dir")
+        .map(PathBuf::from)
+        .unwrap_or_else(default_artifacts_dir);
+    let catalog = Catalog::load(&dir)?;
+    let data = generate(&spec);
+    let mut mapper = HloStatsMapper::new(&catalog, spec.p).with_context(|| {
+        format!(
+            "no artifact for p={}; available widths: {:?} (regenerate with aot.py)",
+            spec.p,
+            catalog.chunk_stats_widths()
+        )
+    })?;
+    let mut stats = SuffStats::new(spec.p);
+    let t0 = std::time::Instant::now();
+    mapper.fold_rows(&data.x, &data.y, &mut stats)?;
+    let hlo_s = t0.elapsed().as_secs_f64();
+    println!(
+        "HLO map path: {} blocks x {} rows on PJRT ({}), {} tail rows on CPU, {}",
+        mapper.hlo_blocks,
+        mapper.block_n,
+        "cpu plugin",
+        mapper.cpu_rows,
+        plrmr::util::timer::fmt_secs(hlo_s),
+    );
+    let q = stats.quad_form();
+    let sol = plrmr::solver::solve_cd(
+        &q,
+        Penalty::lasso(),
+        lambda,
+        None,
+        plrmr::solver::CdSettings::default(),
+    );
+    let (alpha, beta) = q.to_original_scale(&sol.beta);
+    let model = FittedModel {
+        alpha,
+        beta,
+        lambda,
+        penalty: Penalty::lasso(),
+        n_train: stats.count(),
+    };
+    println!("\n{model}");
+    // cross-check against the raw-data oracle
+    let (oracle, _) = serial_cd(&data, Penalty::lasso(), lambda, 1e-12, 50_000);
+    println!(
+        "\nrel L2 err vs serial oracle: {}",
+        sig(plrmr::util::rel_l2_err(&model.beta, &oracle.beta), 3)
+    );
+    Ok(())
+}

@@ -1,0 +1,433 @@
+//! The leader/worker execution core.
+//!
+//! `run_job` executes one MapReduce job in-process: a worker pool pulls
+//! input splits from a retry queue, runs the user's map function with
+//! in-mapper combining ([`Emitter`]), and the leader reduces task outputs
+//! by key.  Reduction happens in *task order* (not completion order), so a
+//! job's output is bit-for-bit deterministic regardless of scheduling,
+//! stragglers, crashes or retries — the invariant the paper's exactness
+//! claim rides on, and one the tests assert directly.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use super::fault::{Fault, FaultPlan};
+use super::job::{JobCosts, JobMetrics, Mergeable, WorkerMetrics};
+
+/// Engine configuration for one job.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineConfig {
+    /// worker pool size (mappers)
+    pub workers: usize,
+    /// modeled cluster scheduling costs (accounted, not slept)
+    pub costs: JobCosts,
+    /// fault/straggler injection plan
+    pub fault: FaultPlan,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            workers: std::thread::available_parallelism()
+                .map(|v| v.get())
+                .unwrap_or(4),
+            costs: JobCosts::zero(),
+            fault: FaultPlan::none(),
+        }
+    }
+}
+
+impl EngineConfig {
+    pub fn with_workers(workers: usize) -> Self {
+        EngineConfig { workers: workers.max(1), ..Default::default() }
+    }
+}
+
+/// Identity of a running task attempt, passed to the map function.
+///
+/// Map functions must derive any randomness from `task_id` (never from
+/// `attempt` or `worker_id`) so retries recompute identical output.
+#[derive(Debug, Clone, Copy)]
+pub struct TaskCtx {
+    pub task_id: usize,
+    pub attempt: usize,
+    pub worker_id: usize,
+}
+
+/// In-mapper combiner: `emit` merges values eagerly per key, so task output
+/// size is O(#keys · sizeof(V)) regardless of record count.
+pub struct Emitter<K: Ord, V: Mergeable> {
+    map: BTreeMap<K, V>,
+    records: u64,
+}
+
+impl<K: Ord, V: Mergeable> Emitter<K, V> {
+    fn new() -> Self {
+        Emitter { map: BTreeMap::new(), records: 0 }
+    }
+
+    /// Emit one (key, value); values merge associatively.
+    pub fn emit(&mut self, key: K, value: V) {
+        self.records += 1;
+        match self.map.get_mut(&key) {
+            Some(slot) => slot.merge_in(value),
+            None => {
+                self.map.insert(key, value);
+            }
+        }
+    }
+
+    /// Emit with a constructor + in-place fold — avoids building a V per
+    /// record when V is large (the SuffStats hot path uses this).
+    pub fn upsert_with(&mut self, key: K, init: impl FnOnce() -> V, fold: impl FnOnce(&mut V)) {
+        self.records += 1;
+        let slot = self.map.entry(key).or_insert_with(init);
+        fold(slot);
+    }
+
+    /// Emit one pre-aggregated value that represents `records` input
+    /// records (mappers that bucket rows locally and emit once per key use
+    /// this so record accounting stays per-row, not per-emit).
+    pub fn emit_aggregated(&mut self, key: K, value: V, records: u64) {
+        self.records += records.saturating_sub(1); // emit() adds the other 1
+        self.emit(key, value);
+    }
+}
+
+/// Result of a completed job.
+#[derive(Debug)]
+pub struct JobOutput<K, V> {
+    pub output: BTreeMap<K, V>,
+    pub metrics: JobMetrics,
+}
+
+enum TaskMsg<K, V> {
+    Done {
+        task_id: usize,
+        worker_id: usize,
+        map: BTreeMap<K, V>,
+        records: u64,
+        busy_s: f64,
+        stalled: bool,
+    },
+    Crashed {
+        task_id: usize,
+        attempt: usize,
+        worker_id: usize,
+    },
+}
+
+/// Run one MapReduce job over `inputs` (one task per input split).
+///
+/// `map_fn(ctx, split, emitter)` is called once per task attempt; it must be
+/// a pure function of `(ctx.task_id, split)`.
+pub fn run_job<I, K, V>(
+    cfg: &EngineConfig,
+    inputs: &[I],
+    map_fn: impl Fn(&TaskCtx, &I, &mut Emitter<K, V>) + Sync,
+) -> Result<JobOutput<K, V>>
+where
+    I: Sync,
+    K: Ord + Send,
+    V: Mergeable + Send,
+{
+    let started = Instant::now();
+    let n_tasks = inputs.len();
+    let workers = cfg.workers.max(1);
+    if n_tasks == 0 {
+        return Ok(JobOutput {
+            output: BTreeMap::new(),
+            metrics: JobMetrics {
+                modeled_overhead_s: cfg.costs.overhead_s(0, workers),
+                per_worker: vec![WorkerMetrics::default(); workers],
+                ..Default::default()
+            },
+        });
+    }
+
+    let queue: Mutex<VecDeque<(usize, usize)>> =
+        Mutex::new((0..n_tasks).map(|t| (t, 0)).collect());
+    let done = AtomicBool::new(false);
+    let (tx, rx) = mpsc::channel::<TaskMsg<K, V>>();
+
+    let mut task_outputs: Vec<Option<BTreeMap<K, V>>> = Vec::new();
+    task_outputs.resize_with(n_tasks, || None);
+    let mut metrics = JobMetrics {
+        per_worker: vec![WorkerMetrics::default(); workers],
+        ..Default::default()
+    };
+    let mut failure: Option<String> = None;
+
+    std::thread::scope(|scope| {
+        for worker_id in 0..workers {
+            let tx = tx.clone();
+            let queue = &queue;
+            let done = &done;
+            let map_fn = &map_fn;
+            let fault = cfg.fault;
+            scope.spawn(move || loop {
+                let next = queue.lock().unwrap().pop_front();
+                let (task_id, attempt) = match next {
+                    Some(t) => t,
+                    None => {
+                        if done.load(Ordering::Acquire) {
+                            return;
+                        }
+                        std::thread::sleep(Duration::from_micros(50));
+                        continue;
+                    }
+                };
+                let t0 = Instant::now();
+                let mut stalled = false;
+                match fault.roll(task_id, attempt) {
+                    Some(Fault::Crash) => {
+                        let _ = tx.send(TaskMsg::Crashed { task_id, attempt, worker_id });
+                        continue;
+                    }
+                    Some(Fault::Straggle(d)) => {
+                        std::thread::sleep(d);
+                        stalled = true;
+                    }
+                    None => {}
+                }
+                let ctx = TaskCtx { task_id, attempt, worker_id };
+                let mut emitter = Emitter::new();
+                map_fn(&ctx, &inputs[task_id], &mut emitter);
+                let _ = tx.send(TaskMsg::Done {
+                    task_id,
+                    worker_id,
+                    map: emitter.map,
+                    records: emitter.records,
+                    busy_s: t0.elapsed().as_secs_f64(),
+                    stalled,
+                });
+            });
+        }
+        drop(tx);
+
+        // Leader: collect completions, requeue crashes, stop at coverage.
+        let mut completed = 0usize;
+        while completed < n_tasks {
+            let msg = match rx.recv() {
+                Ok(m) => m,
+                Err(_) => {
+                    failure = Some("worker channel closed early".into());
+                    break;
+                }
+            };
+            metrics.attempts += 1;
+            match msg {
+                TaskMsg::Done { task_id, worker_id, map, records, busy_s, stalled } => {
+                    // retries can double-complete a task if a straggler
+                    // finishes after its clone; keep the first result (they
+                    // are identical by construction).
+                    if task_outputs[task_id].is_none() {
+                        task_outputs[task_id] = Some(map);
+                        completed += 1;
+                        metrics.records += records;
+                    }
+                    let w = &mut metrics.per_worker[worker_id];
+                    w.tasks += 1;
+                    w.records += records;
+                    w.busy_s += busy_s;
+                    if stalled {
+                        w.simulated_stalls += 1;
+                    }
+                }
+                TaskMsg::Crashed { task_id, attempt, worker_id } => {
+                    metrics.retries += 1;
+                    metrics.per_worker[worker_id].simulated_crashes += 1;
+                    if attempt + 1 >= cfg.fault.max_attempts {
+                        failure = Some(format!(
+                            "task {task_id} failed after {} attempts",
+                            attempt + 1
+                        ));
+                        break;
+                    }
+                    queue.lock().unwrap().push_back((task_id, attempt + 1));
+                }
+            }
+        }
+        done.store(true, Ordering::Release);
+    });
+
+    if let Some(msg) = failure {
+        bail!("mapreduce job failed: {msg}");
+    }
+
+    // Reduce in task order → deterministic output independent of scheduling.
+    let mut output: BTreeMap<K, V> = BTreeMap::new();
+    for task_map in task_outputs.into_iter().flatten() {
+        for (k, v) in task_map {
+            match output.get_mut(&k) {
+                Some(slot) => slot.merge_in(v),
+                None => {
+                    output.insert(k, v);
+                }
+            }
+        }
+    }
+
+    metrics.tasks_completed = n_tasks;
+    metrics.real_s = started.elapsed().as_secs_f64();
+    metrics.modeled_overhead_s = cfg.costs.overhead_s(n_tasks, workers);
+    Ok(JobOutput { output, metrics })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapreduce::partition::FoldAssigner;
+    use crate::stats::SuffStats;
+
+    /// word-count-shaped job: count records per key
+    fn counting_job(cfg: &EngineConfig, splits: &[Vec<u64>]) -> JobOutput<usize, u64> {
+        run_job(cfg, splits, |_ctx, split, em| {
+            for &v in split {
+                em.emit((v % 7) as usize, 1u64);
+            }
+        })
+        .unwrap()
+    }
+
+    fn splits(n_splits: usize, per: usize) -> Vec<Vec<u64>> {
+        (0..n_splits)
+            .map(|s| ((s * per) as u64..((s + 1) * per) as u64).collect())
+            .collect()
+    }
+
+    #[test]
+    fn counts_cover_all_records() {
+        let cfg = EngineConfig::with_workers(4);
+        let out = counting_job(&cfg, &splits(13, 100));
+        let total: u64 = out.output.values().sum();
+        assert_eq!(total, 1300);
+        assert_eq!(out.metrics.tasks_completed, 13);
+        assert_eq!(out.metrics.records, 1300);
+        assert_eq!(out.metrics.retries, 0);
+    }
+
+    #[test]
+    fn deterministic_across_worker_counts() {
+        let data = splits(9, 257);
+        let a = counting_job(&EngineConfig::with_workers(1), &data);
+        let b = counting_job(&EngineConfig::with_workers(8), &data);
+        assert_eq!(a.output, b.output);
+    }
+
+    #[test]
+    fn empty_job() {
+        let cfg = EngineConfig::with_workers(2);
+        let out = counting_job(&cfg, &[]);
+        assert!(out.output.is_empty());
+        assert_eq!(out.metrics.tasks_completed, 0);
+    }
+
+    #[test]
+    fn survives_crashes_with_identical_output() {
+        let data = splits(20, 50);
+        let clean = counting_job(&EngineConfig::with_workers(4), &data);
+        let mut cfg = EngineConfig::with_workers(4);
+        cfg.fault = FaultPlan::chaotic(0.3, 77);
+        let chaotic = counting_job(&cfg, &data);
+        assert_eq!(clean.output, chaotic.output, "retries must not change output");
+        assert!(chaotic.metrics.retries > 0, "chaos plan should actually crash");
+    }
+
+    #[test]
+    fn fails_after_max_attempts() {
+        let mut cfg = EngineConfig::with_workers(2);
+        cfg.fault = FaultPlan {
+            crash_prob: 1.0, // every attempt crashes
+            max_attempts: 3,
+            ..FaultPlan::chaotic(1.0, 5)
+        };
+        let data = splits(4, 10);
+        let res = run_job(&cfg, &data, |_c, split: &Vec<u64>, em: &mut Emitter<usize, u64>| {
+            for &v in split {
+                em.emit(v as usize % 2, 1);
+            }
+        });
+        assert!(res.is_err());
+        let msg = format!("{:#}", res.unwrap_err());
+        assert!(msg.contains("attempts"), "{msg}");
+    }
+
+    #[test]
+    fn suffstats_job_matches_serial_aggregation() {
+        // the real workload shape: per-fold SuffStats with in-mapper combine
+        let p = 3;
+        let k = 4;
+        let rows: Vec<(Vec<f64>, f64)> = (0..500)
+            .map(|i| {
+                let x: Vec<f64> = (0..p).map(|j| ((i * 31 + j * 7) % 11) as f64).collect();
+                let y = x.iter().sum::<f64>() + (i % 5) as f64;
+                (x, y)
+            })
+            .collect();
+        let splits: Vec<(usize, &[(Vec<f64>, f64)])> = rows
+            .chunks(97)
+            .scan(0usize, |off, c| {
+                let s = (*off, c);
+                *off += c.len();
+                Some(s)
+            })
+            .collect();
+        let assigner = FoldAssigner::new(k, 123);
+        let cfg = EngineConfig::with_workers(3);
+        let out = run_job(&cfg, &splits, |_ctx, &(offset, chunk), em| {
+            for (i, (x, y)) in chunk.iter().enumerate() {
+                let fold = assigner.fold_of((offset + i) as u64);
+                em.upsert_with(fold, || SuffStats::new(p), |s| s.push(x, *y));
+            }
+        })
+        .unwrap();
+        // serial reference
+        let mut reference: Vec<SuffStats> = (0..k).map(|_| SuffStats::new(p)).collect();
+        for (i, (x, y)) in rows.iter().enumerate() {
+            reference[assigner.fold_of(i as u64)].push(x, *y);
+        }
+        assert_eq!(out.output.len(), k);
+        for (fold, stats) in &out.output {
+            let r = &reference[*fold];
+            assert_eq!(stats.count(), r.count(), "fold {fold}");
+            for i in 0..p {
+                assert!((stats.sxy(i) - r.sxy(i)).abs() <= 1e-9 * r.sxy(i).abs().max(1.0));
+            }
+            assert!((stats.syy() - r.syy()).abs() <= 1e-9 * r.syy());
+        }
+    }
+
+    #[test]
+    fn stragglers_slow_but_do_not_corrupt() {
+        let data = splits(10, 40);
+        let mut cfg = EngineConfig::with_workers(4);
+        cfg.fault = FaultPlan {
+            crash_prob: 0.0,
+            straggler_prob: 0.5,
+            straggler_delay: Duration::from_millis(2),
+            max_attempts: 2,
+            seed: 3,
+        };
+        let out = counting_job(&cfg, &data);
+        let total: u64 = out.output.values().sum();
+        assert_eq!(total, 400);
+        let stalls: usize = out.metrics.per_worker.iter().map(|w| w.simulated_stalls).sum();
+        assert!(stalls > 0);
+    }
+
+    #[test]
+    fn modeled_overhead_accounted_not_slept() {
+        let mut cfg = EngineConfig::with_workers(2);
+        cfg.costs = JobCosts { job_schedule_s: 100.0, task_schedule_s: 1.0 };
+        let out = counting_job(&cfg, &splits(4, 10));
+        assert!(out.metrics.real_s < 5.0, "must not actually sleep 100s");
+        assert_eq!(out.metrics.modeled_overhead_s, 102.0); // 100 + 2 waves
+        assert!(out.metrics.modeled_total_s() > 100.0);
+    }
+}

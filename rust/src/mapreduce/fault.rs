@@ -1,0 +1,129 @@
+//! Deterministic fault & straggler injection.
+//!
+//! Real clusters lose tasks; the paper's algorithm tolerates that because
+//! map output is a pure function of the input split — a retried task
+//! recomputes the identical statistics.  The injection here is a pure
+//! function of (seed, task, attempt), so test runs are reproducible and the
+//! engine's exactness-under-retry invariant is assertable.
+
+use std::time::Duration;
+
+use crate::rng::splitmix64;
+
+/// What the injector decided for one task attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fault {
+    /// task dies before producing output; the leader must retry it
+    Crash,
+    /// task completes but only after an injected stall
+    Straggle(Duration),
+}
+
+/// Injection plan for a job.
+#[derive(Debug, Clone, Copy)]
+pub struct FaultPlan {
+    /// probability a given attempt crashes
+    pub crash_prob: f64,
+    /// probability a given attempt straggles
+    pub straggler_prob: f64,
+    /// injected stall length
+    pub straggler_delay: Duration,
+    /// attempts per task before the job is declared failed
+    pub max_attempts: usize,
+    pub seed: u64,
+}
+
+impl FaultPlan {
+    /// No injected faults (the default for real measurements).
+    pub fn none() -> Self {
+        FaultPlan {
+            crash_prob: 0.0,
+            straggler_prob: 0.0,
+            straggler_delay: Duration::from_millis(0),
+            max_attempts: 4,
+            seed: 0,
+        }
+    }
+
+    /// A chaos-y plan for fault-tolerance tests.
+    pub fn chaotic(crash_prob: f64, seed: u64) -> Self {
+        FaultPlan {
+            crash_prob,
+            straggler_prob: 0.1,
+            straggler_delay: Duration::from_millis(1),
+            max_attempts: 50,
+            seed,
+        }
+    }
+
+    /// Decide the fate of `(task, attempt)` — pure and deterministic.
+    pub fn roll(&self, task: usize, attempt: usize) -> Option<Fault> {
+        if self.crash_prob == 0.0 && self.straggler_prob == 0.0 {
+            return None;
+        }
+        let mut s = self
+            .seed
+            .wrapping_mul(0x9E37_79B9_97F4_A7C1)
+            .wrapping_add((task as u64) << 20)
+            .wrapping_add(attempt as u64);
+        let u = (splitmix64(&mut s) >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        if u < self.crash_prob {
+            Some(Fault::Crash)
+        } else if u < self.crash_prob + self.straggler_prob {
+            Some(Fault::Straggle(self.straggler_delay))
+        } else {
+            None
+        }
+    }
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan::none()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_never_faults() {
+        let plan = FaultPlan::none();
+        for t in 0..1000 {
+            assert_eq!(plan.roll(t, 0), None);
+        }
+    }
+
+    #[test]
+    fn deterministic_per_task_attempt() {
+        let plan = FaultPlan::chaotic(0.3, 42);
+        for t in 0..50 {
+            for a in 0..5 {
+                assert_eq!(plan.roll(t, a), plan.roll(t, a));
+            }
+        }
+    }
+
+    #[test]
+    fn crash_rate_is_approximately_requested() {
+        let plan = FaultPlan::chaotic(0.25, 7);
+        let n = 20_000;
+        let crashes = (0..n)
+            .filter(|&t| plan.roll(t, 0) == Some(Fault::Crash))
+            .count();
+        let rate = crashes as f64 / n as f64;
+        assert!((rate - 0.25).abs() < 0.02, "rate={rate}");
+    }
+
+    #[test]
+    fn attempts_get_fresh_rolls() {
+        // with crash_prob 0.5, some task must crash on attempt 0 and pass
+        // on attempt 1 — i.e. attempts are independent rolls.
+        let plan = FaultPlan { crash_prob: 0.5, ..FaultPlan::chaotic(0.5, 9) };
+        let recovered = (0..200).any(|t| {
+            plan.roll(t, 0) == Some(Fault::Crash) && plan.roll(t, 1).is_none()
+        });
+        assert!(recovered);
+    }
+}

@@ -1,0 +1,30 @@
+//! A MapReduce-style execution engine over OS threads — the substrate
+//! standing in for the paper's Hadoop cluster.
+//!
+//! What the algorithm requires of its platform is exactly: (map) stream
+//! every record once through a stateless-per-record function that emits
+//! `(key, value)`, (combine) merge values associatively inside each task,
+//! (reduce) merge across tasks by key.  This engine provides that contract
+//! with the operational realities that make the paper's "one job vs many
+//! jobs" argument meaningful:
+//!
+//! * a leader with a retry-on-failure task queue ([`engine`]),
+//! * deterministic fault & straggler injection ([`fault`]) — retries must
+//!   not change the answer, which our per-task (not per-attempt) seeding
+//!   guarantees and the tests assert,
+//! * in-mapper combining ([`engine::Emitter`]) — values merge eagerly so a
+//!   task's output is O(k·p²) regardless of how many records it scanned,
+//! * modeled per-job/per-task scheduling overhead ([`job::JobCosts`]) so
+//!   experiments can report *cluster-shaped* time for iterative baselines
+//!   (ADMM pays the job overhead once per iteration; Algorithm 1 pays it
+//!   once, full stop).
+
+pub mod engine;
+pub mod fault;
+pub mod job;
+pub mod partition;
+
+pub use engine::{run_job, Emitter, EngineConfig, JobOutput, TaskCtx};
+pub use fault::FaultPlan;
+pub use job::{JobCosts, JobMetrics, Mergeable};
+pub use partition::FoldAssigner;

@@ -1,0 +1,111 @@
+//! Record → fold assignment (Algorithm 1, line 4: `key = random{0..k-1}`).
+//!
+//! The assignment must be (a) uniform, (b) independent of how the input
+//! happens to be sharded, and (c) stable under task retries.  Hashing the
+//! *global row id* with a salted mix gives all three: a retried task sees
+//! the same rows and therefore the same keys.
+
+use crate::rng::splitmix64;
+
+/// Deterministic uniform fold assigner.
+#[derive(Debug, Clone, Copy)]
+pub struct FoldAssigner {
+    k: usize,
+    salt: u64,
+}
+
+impl FoldAssigner {
+    pub fn new(k: usize, salt: u64) -> Self {
+        assert!(k >= 2, "need at least 2 folds, got {k}");
+        FoldAssigner { k, salt }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Fold of the row with global index `row`.
+    #[inline]
+    pub fn fold_of(&self, row: u64) -> usize {
+        let mut s = self.salt ^ row.wrapping_mul(0xD6E8_FEB8_6659_FD93);
+        (splitmix64(&mut s) % self.k as u64) as usize
+    }
+}
+
+/// Hash partitioner for generic keys (reduce-side routing when the engine
+/// runs with multiple reducer shards).
+pub fn hash_partition(key_hash: u64, shards: usize) -> usize {
+    assert!(shards > 0);
+    (key_hash % shards as u64) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let f = FoldAssigner::new(5, 99);
+        for row in 0..100u64 {
+            assert_eq!(f.fold_of(row), f.fold_of(row));
+            assert!(f.fold_of(row) < 5);
+        }
+    }
+
+    #[test]
+    fn approximately_uniform() {
+        let f = FoldAssigner::new(10, 1234);
+        let n = 100_000u64;
+        let mut counts = [0usize; 10];
+        for row in 0..n {
+            counts[f.fold_of(row)] += 1;
+        }
+        for &c in &counts {
+            let expected = n as f64 / 10.0;
+            assert!(
+                (c as f64 - expected).abs() < expected * 0.05,
+                "counts={counts:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn different_salts_differ() {
+        let a = FoldAssigner::new(4, 1);
+        let b = FoldAssigner::new(4, 2);
+        let same = (0..1000u64).filter(|&r| a.fold_of(r) == b.fold_of(r)).count();
+        // ~25% collision by chance; must not be ~100%
+        assert!(same < 500, "same={same}");
+    }
+
+    #[test]
+    fn adjacent_rows_not_correlated() {
+        let f = FoldAssigner::new(2, 7);
+        // transition counts between consecutive rows ≈ independent
+        let mut trans = [[0usize; 2]; 2];
+        let mut prev = f.fold_of(0);
+        for row in 1..50_000u64 {
+            let cur = f.fold_of(row);
+            trans[prev][cur] += 1;
+            prev = cur;
+        }
+        for r in trans.iter() {
+            for &c in r {
+                assert!((c as f64 - 12_500.0).abs() < 700.0, "trans={trans:?}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn k_must_be_at_least_two() {
+        FoldAssigner::new(1, 0);
+    }
+
+    #[test]
+    fn hash_partition_bounds() {
+        for h in [0u64, 1, u64::MAX] {
+            assert!(hash_partition(h, 7) < 7);
+        }
+    }
+}

@@ -1,0 +1,133 @@
+//! Model diagnostics computed from sufficient statistics alone — no data
+//! pass: R², adjusted R², residual variance, and the per-coefficient
+//! summary a regression report needs.
+
+use crate::model::fitted::FittedModel;
+use crate::stats::SuffStats;
+use crate::util::table::{sig, Table};
+
+/// Goodness-of-fit summary for (model, statistics).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Diagnostics {
+    pub n: u64,
+    /// nonzero coefficients (model degrees of freedom, lasso convention)
+    pub df: usize,
+    pub mse: f64,
+    pub rmse: f64,
+    /// 1 − SSR/SST
+    pub r2: f64,
+    /// 1 − (1−R²)(n−1)/(n−df−1)
+    pub adj_r2: f64,
+    /// Var(y) — the null model's MSE
+    pub y_var: f64,
+}
+
+/// Compute diagnostics of `model` against the data behind `stats`.
+pub fn diagnostics(stats: &SuffStats, model: &FittedModel) -> Diagnostics {
+    assert_eq!(stats.p(), model.p(), "model/stats width mismatch");
+    let n = stats.count();
+    assert!(n >= 2, "need at least 2 observations");
+    let w = stats.moments().weight();
+    let mse = stats.mse(model.alpha, &model.beta);
+    let y_var = stats.syy() / w;
+    let r2 = if y_var > 0.0 { 1.0 - mse / y_var } else { 0.0 };
+    let df = model.nnz();
+    let nf = n as f64;
+    let adj_r2 = if nf - df as f64 - 1.0 > 0.0 {
+        1.0 - (1.0 - r2) * (nf - 1.0) / (nf - df as f64 - 1.0)
+    } else {
+        f64::NAN
+    };
+    Diagnostics { n, df, mse, rmse: mse.max(0.0).sqrt(), r2, adj_r2, y_var }
+}
+
+/// Render a regression report: fit summary + nonzero coefficient table
+/// with standardized effect sizes (βⱼ·sdⱼ, comparable across features).
+pub fn report(stats: &SuffStats, model: &FittedModel) -> String {
+    let d = diagnostics(stats, model);
+    let w = stats.moments().weight();
+    let mut t = Table::new(vec!["coef", "value", "std effect"]);
+    t.row(vec![
+        "(intercept)".to_string(),
+        sig(model.alpha, 5),
+        "-".to_string(),
+    ]);
+    for (j, b) in model.beta.iter().enumerate() {
+        if *b != 0.0 {
+            let sd = (stats.sxx(j, j) / w).sqrt();
+            t.row(vec![format!("x{j}"), sig(*b, 5), sig(b * sd, 4)]);
+        }
+    }
+    format!(
+        "n = {}  df = {}  mse = {}  rmse = {}\nR² = {}  adj R² = {}\n\n{}",
+        d.n,
+        d.df,
+        sig(d.mse, 5),
+        sig(d.rmse, 5),
+        sig(d.r2, 5),
+        sig(d.adj_r2, 5),
+        t.render()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthSpec};
+    use crate::solver::penalty::Penalty;
+
+    fn fitted_case() -> (SuffStats, FittedModel, crate::data::Dataset) {
+        let spec = SynthSpec::sparse_linear(5000, 6, 0.5, 9);
+        let d = generate(&spec);
+        let mut s = SuffStats::new(6);
+        for i in 0..d.n() {
+            s.push(d.row(i), d.y[i]);
+        }
+        let model = FittedModel {
+            alpha: spec.intercept,
+            beta: spec.true_beta(),
+            lambda: 0.0,
+            penalty: Penalty::lasso(),
+            n_train: 5000,
+        };
+        (s, model, d)
+    }
+
+    #[test]
+    fn r2_matches_direct_computation() {
+        let (s, model, d) = fitted_case();
+        let diag = diagnostics(&s, &model);
+        let mse_direct = d.mse(model.alpha, &model.beta);
+        assert!((diag.mse - mse_direct).abs() < 1e-9);
+        // noise 1.0 on strong signal: R² high but < 1
+        assert!(diag.r2 > 0.5 && diag.r2 < 1.0, "r2={}", diag.r2);
+        assert!(diag.adj_r2 <= diag.r2);
+        assert_eq!(diag.df, model.nnz());
+        assert!((diag.rmse * diag.rmse - diag.mse).abs() < 1e-12);
+    }
+
+    #[test]
+    fn null_model_has_zero_r2() {
+        let (s, _, _) = fitted_case();
+        let null = FittedModel {
+            alpha: s.y_mean(),
+            beta: vec![0.0; 6],
+            lambda: 1.0,
+            penalty: Penalty::lasso(),
+            n_train: s.count(),
+        };
+        let diag = diagnostics(&s, &null);
+        assert!(diag.r2.abs() < 1e-9, "r2={}", diag.r2);
+        assert_eq!(diag.df, 0);
+    }
+
+    #[test]
+    fn report_renders_nonzero_rows_only() {
+        let (s, model, _) = fitted_case();
+        let r = report(&s, &model);
+        assert!(r.contains("(intercept)"));
+        assert!(r.contains("R²"));
+        let rows = r.lines().filter(|l| l.starts_with("| x")).count();
+        assert_eq!(rows, model.nnz());
+    }
+}

@@ -1,0 +1,197 @@
+//! The original-scale fitted model (paper eq. 3–4) and its serialization.
+
+use std::fmt;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::solver::penalty::Penalty;
+
+/// A penalized linear model in original units: ŷ = α + xᵀβ.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FittedModel {
+    pub alpha: f64,
+    pub beta: Vec<f64>,
+    /// λ the model was trained at (the CV-selected one in Algorithm 1)
+    pub lambda: f64,
+    /// penalty family (elastic-net α)
+    pub penalty: Penalty,
+    /// rows behind the final fit
+    pub n_train: u64,
+}
+
+impl FittedModel {
+    pub fn p(&self) -> usize {
+        self.beta.len()
+    }
+
+    /// Number of nonzero coefficients.
+    pub fn nnz(&self) -> usize {
+        self.beta.iter().filter(|b| **b != 0.0).count()
+    }
+
+    /// Predict one row.
+    pub fn predict(&self, x: &[f64]) -> f64 {
+        assert_eq!(x.len(), self.beta.len(), "prediction width mismatch");
+        let mut acc = self.alpha;
+        for j in 0..x.len() {
+            acc += x[j] * self.beta[j];
+        }
+        acc
+    }
+
+    /// Predict a row-major batch into `out`.
+    pub fn predict_batch(&self, x: &[f64], out: &mut Vec<f64>) {
+        let p = self.beta.len();
+        assert_eq!(x.len() % p, 0, "batch width mismatch");
+        out.clear();
+        for row in x.chunks_exact(p) {
+            out.push(self.predict(row));
+        }
+    }
+
+    /// Plain-text serialization (versioned, line-oriented).
+    pub fn to_text(&self) -> String {
+        let mut s = String::new();
+        s.push_str("plrmr-model v1\n");
+        s.push_str(&format!("penalty_alpha {}\n", self.penalty.alpha));
+        s.push_str(&format!("lambda {}\n", self.lambda));
+        s.push_str(&format!("n_train {}\n", self.n_train));
+        s.push_str(&format!("alpha {}\n", self.alpha));
+        s.push_str(&format!("p {}\n", self.beta.len()));
+        for b in &self.beta {
+            s.push_str(&format!("beta {b}\n"));
+        }
+        s
+    }
+
+    pub fn from_text(text: &str) -> Result<Self> {
+        let mut lines = text.lines();
+        let header = lines.next().context("empty model file")?;
+        if header != "plrmr-model v1" {
+            bail!("unsupported model header: {header:?}");
+        }
+        let mut penalty_alpha = None;
+        let mut lambda = None;
+        let mut n_train = None;
+        let mut alpha = None;
+        let mut p = None;
+        let mut beta = Vec::new();
+        for line in lines {
+            let mut it = line.splitn(2, ' ');
+            let key = it.next().unwrap_or("");
+            let val = it.next().context("missing value")?;
+            match key {
+                "penalty_alpha" => penalty_alpha = Some(val.parse::<f64>()?),
+                "lambda" => lambda = Some(val.parse::<f64>()?),
+                "n_train" => n_train = Some(val.parse::<u64>()?),
+                "alpha" => alpha = Some(val.parse::<f64>()?),
+                "p" => p = Some(val.parse::<usize>()?),
+                "beta" => beta.push(val.parse::<f64>()?),
+                other => bail!("unknown model field {other:?}"),
+            }
+        }
+        let p = p.context("missing p")?;
+        if beta.len() != p {
+            bail!("expected {p} coefficients, found {}", beta.len());
+        }
+        Ok(FittedModel {
+            alpha: alpha.context("missing alpha")?,
+            beta,
+            lambda: lambda.context("missing lambda")?,
+            penalty: Penalty::elastic_net(penalty_alpha.context("missing penalty_alpha")?),
+            n_train: n_train.context("missing n_train")?,
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_text()).with_context(|| format!("write {path:?}"))
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("read {path:?}"))?;
+        Self::from_text(&text)
+    }
+}
+
+impl fmt::Display for FittedModel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        use crate::util::table::sig;
+        writeln!(
+            f,
+            "{} model (lambda={}, {} of {} coefficients nonzero, n={})",
+            self.penalty.family(),
+            sig(self.lambda, 6),
+            self.nnz(),
+            self.p(),
+            self.n_train
+        )?;
+        write!(f, "  alpha = {}", sig(self.alpha, 6))?;
+        for (j, b) in self.beta.iter().enumerate() {
+            if *b != 0.0 {
+                write!(f, "\n  beta[{j}] = {}", sig(*b, 6))?;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> FittedModel {
+        FittedModel {
+            alpha: 1.5,
+            beta: vec![2.0, 0.0, -0.5],
+            lambda: 0.1,
+            penalty: Penalty::elastic_net(0.5),
+            n_train: 1000,
+        }
+    }
+
+    #[test]
+    fn predict_single_and_batch() {
+        let m = model();
+        assert_eq!(m.predict(&[1.0, 9.0, 2.0]), 1.5 + 2.0 - 1.0);
+        let mut out = Vec::new();
+        m.predict_batch(&[1.0, 9.0, 2.0, 0.0, 0.0, 0.0], &mut out);
+        assert_eq!(out, vec![2.5, 1.5]);
+        assert_eq!(m.nnz(), 2);
+    }
+
+    #[test]
+    fn text_round_trip() {
+        let m = model();
+        let back = FittedModel::from_text(&m.to_text()).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let m = model();
+        let path = std::env::temp_dir().join(format!("plrmr-model-{}.txt", std::process::id()));
+        m.save(&path).unwrap();
+        let back = FittedModel::load(&path).unwrap();
+        assert_eq!(m, back);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(FittedModel::from_text("").is_err());
+        assert!(FittedModel::from_text("wrong header\n").is_err());
+        let truncated = "plrmr-model v1\npenalty_alpha 1\nlambda 0.1\nn_train 5\nalpha 0\np 2\nbeta 1\n";
+        assert!(FittedModel::from_text(truncated).is_err());
+        let unknown = "plrmr-model v1\nwat 3\n";
+        assert!(FittedModel::from_text(unknown).is_err());
+    }
+
+    #[test]
+    fn display_mentions_family_and_nnz() {
+        let s = format!("{}", model());
+        assert!(s.contains("elastic-net"));
+        assert!(s.contains("2 of 3"));
+        assert!(!s.contains("beta[1]"), "zero coefficients are hidden");
+    }
+}

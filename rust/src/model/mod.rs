@@ -1,0 +1,15 @@
+//! Fitted-model types and reporting.
+//!
+//! * [`fitted`] — the original-scale model (α, β) with prediction, metadata
+//!   and a plain-text serialization (no serde in the offline vendor set).
+//! * [`report`] — human-readable CV reports (the `pre(λ)` table / F3 curve).
+
+//! * [`mod@diagnostics`] — R²/adjusted-R²/effect sizes from statistics alone.
+
+pub mod diagnostics;
+pub mod fitted;
+pub mod report;
+
+pub use diagnostics::{diagnostics, Diagnostics};
+pub use fitted::FittedModel;
+pub use report::cv_report;

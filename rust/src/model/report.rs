@@ -1,0 +1,88 @@
+//! CV reporting: render the `pre(λ)` curve (Algorithm 1's optional return
+//! value and our experiment F3) as a table plus an ASCII sparkline.
+
+use crate::cv::CvResult;
+use crate::util::table::{sig, Table};
+
+/// Render the CV curve as a markdown table with the selected λs marked.
+pub fn cv_report(cv: &CvResult) -> String {
+    let mut t = Table::new(vec!["lambda", "cv mse", "se", "nnz", ""]);
+    for (i, &lam) in cv.lambdas.iter().enumerate() {
+        let mark = if i == cv.opt_index {
+            "<- lambda_opt"
+        } else if cv.lambdas[i] == cv.lambda_1se && cv.lambda_1se != cv.lambda_opt {
+            "<- 1-SE"
+        } else {
+            ""
+        };
+        t.row(vec![
+            sig(lam, 4),
+            sig(cv.mean_err[i], 5),
+            sig(cv.se_err[i], 3),
+            format!("{:.1}", cv.mean_nnz[i]),
+            mark.to_string(),
+        ]);
+    }
+    format!(
+        "{}\n\nlambda_opt = {}  (cv mse {})\nlambda_1se = {}\n{}",
+        t.render(),
+        sig(cv.lambda_opt, 6),
+        sig(cv.mean_err[cv.opt_index], 6),
+        sig(cv.lambda_1se, 6),
+        sparkline(&cv.mean_err)
+    )
+}
+
+/// A one-line ASCII sparkline of the CV curve (log-ish scaled).
+pub fn sparkline(values: &[f64]) -> String {
+    const LEVELS: &[char] = &['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    if values.is_empty() {
+        return String::new();
+    }
+    let lo = values.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = values.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let span = (hi - lo).max(1e-300);
+    let mut s = String::from("cv curve: ");
+    for &v in values {
+        let t = ((v - lo) / span * (LEVELS.len() - 1) as f64).round() as usize;
+        s.push(LEVELS[t.min(LEVELS.len() - 1)]);
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_cv() -> CvResult {
+        CvResult {
+            lambdas: vec![1.0, 0.5, 0.25, 0.125],
+            mean_err: vec![4.0, 2.0, 1.5, 1.8],
+            se_err: vec![0.4, 0.2, 0.15, 0.2],
+            fold_err: vec![vec![4.0; 3], vec![2.0; 3], vec![1.5; 3], vec![1.8; 3]],
+            mean_nnz: vec![0.0, 2.0, 3.0, 4.0],
+            lambda_opt: 0.25,
+            lambda_1se: 0.5,
+            opt_index: 2,
+        }
+    }
+
+    #[test]
+    fn report_marks_selection() {
+        let r = cv_report(&fake_cv());
+        assert!(r.contains("<- lambda_opt"));
+        assert!(r.contains("<- 1-SE"));
+        assert!(r.contains("lambda_opt = 0.25"));
+        assert!(r.contains("cv curve:"));
+    }
+
+    #[test]
+    fn sparkline_extremes() {
+        let s = sparkline(&[0.0, 1.0]);
+        assert!(s.ends_with("▁█"));
+        assert_eq!(sparkline(&[]), "");
+        // constant input must not panic (zero span)
+        let c = sparkline(&[3.0, 3.0, 3.0]);
+        assert_eq!(c.chars().filter(|c| *c == '▁').count(), 3);
+    }
+}

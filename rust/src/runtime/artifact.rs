@@ -1,0 +1,184 @@
+//! The artifact manifest: the single rust-side consumer of the schema
+//! emitted by `python/compile/aot.py`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Value;
+
+/// Which L2 computation an artifact implements.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// `chunk_stats(x[bn,p], y[bn]) -> (mean[p+1], m2[p+1,p+1])`
+    ChunkStats,
+    /// `cd_sweep(gram[p,p], xty[p], beta[p], lam, alpha) -> (beta[p], dmax)`
+    CdSweep,
+}
+
+/// One entry of `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    pub name: String,
+    pub kind: ArtifactKind,
+    /// rows per block (chunk_stats only)
+    pub block_n: Option<usize>,
+    pub p: usize,
+    /// sweeps fused per invocation (cd_sweep only)
+    pub n_sweeps: Option<usize>,
+    pub path: PathBuf,
+}
+
+/// The parsed catalog.
+#[derive(Debug, Clone)]
+pub struct Catalog {
+    pub dir: PathBuf,
+    pub artifacts: Vec<Artifact>,
+}
+
+impl Catalog {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("read {manifest_path:?} — run `make artifacts` first"))?;
+        Self::parse(dir, &text)
+    }
+
+    /// Parse manifest text (separated for tests).
+    pub fn parse(dir: &Path, text: &str) -> Result<Self> {
+        let root = Value::parse(text).context("manifest is not valid JSON")?;
+        let format = root
+            .get("format")
+            .and_then(Value::as_usize)
+            .context("manifest missing format")?;
+        if format != 1 {
+            bail!("unsupported manifest format {format}");
+        }
+        let entries = root
+            .get("artifacts")
+            .and_then(Value::as_arr)
+            .context("manifest missing artifacts[]")?;
+        let mut artifacts = Vec::with_capacity(entries.len());
+        for (i, e) in entries.iter().enumerate() {
+            let name = e
+                .get("name")
+                .and_then(Value::as_str)
+                .with_context(|| format!("artifact[{i}] missing name"))?
+                .to_string();
+            let kind = match e.get("kind").and_then(Value::as_str) {
+                Some("chunk_stats") => ArtifactKind::ChunkStats,
+                Some("cd_sweep") => ArtifactKind::CdSweep,
+                other => bail!("artifact[{i}] unknown kind {other:?}"),
+            };
+            let params = e.get("params").context("missing params")?;
+            let p = params
+                .get("p")
+                .and_then(Value::as_usize)
+                .with_context(|| format!("artifact[{i}] missing p"))?;
+            let file = e
+                .get("file")
+                .and_then(Value::as_str)
+                .with_context(|| format!("artifact[{i}] missing file"))?;
+            artifacts.push(Artifact {
+                name,
+                kind,
+                block_n: params.get("block_n").and_then(Value::as_usize),
+                p,
+                n_sweeps: params.get("n_sweeps").and_then(Value::as_usize),
+                path: dir.join(file),
+            });
+        }
+        Ok(Catalog { dir: dir.to_path_buf(), artifacts })
+    }
+
+    /// Find a chunk_stats artifact for width `p` (largest block_n wins).
+    pub fn chunk_stats_for(&self, p: usize) -> Option<&Artifact> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.kind == ArtifactKind::ChunkStats && a.p == p)
+            .max_by_key(|a| a.block_n.unwrap_or(0))
+    }
+
+    /// Find a cd_sweep artifact for width `p`.
+    pub fn cd_sweep_for(&self, p: usize) -> Option<&Artifact> {
+        self.artifacts
+            .iter()
+            .find(|a| a.kind == ArtifactKind::CdSweep && a.p == p)
+    }
+
+    /// All widths with a chunk_stats artifact (for CLI introspection).
+    pub fn chunk_stats_widths(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == ArtifactKind::ChunkStats)
+            .map(|a| a.p)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": 1,
+      "artifacts": [
+        {"name": "chunk_stats_n1024_p8", "kind": "chunk_stats",
+         "params": {"block_n": 1024, "p": 8}, "file": "chunk_stats_n1024_p8.hlo.txt",
+         "inputs": [], "outputs": []},
+        {"name": "chunk_stats_n4096_p8", "kind": "chunk_stats",
+         "params": {"block_n": 4096, "p": 8}, "file": "chunk_stats_n4096_p8.hlo.txt",
+         "inputs": [], "outputs": []},
+        {"name": "cd_sweep_p8", "kind": "cd_sweep",
+         "params": {"p": 8, "n_sweeps": 4}, "file": "cd_sweep_p8.hlo.txt",
+         "inputs": [], "outputs": []}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_and_indexes() {
+        let c = Catalog::parse(Path::new("/tmp/arts"), SAMPLE).unwrap();
+        assert_eq!(c.artifacts.len(), 3);
+        let cs = c.chunk_stats_for(8).unwrap();
+        assert_eq!(cs.block_n, Some(4096), "largest block preferred");
+        assert!(cs.path.starts_with("/tmp/arts"));
+        let cd = c.cd_sweep_for(8).unwrap();
+        assert_eq!(cd.n_sweeps, Some(4));
+        assert!(c.chunk_stats_for(99).is_none());
+        assert_eq!(c.chunk_stats_widths(), vec![8]);
+    }
+
+    #[test]
+    fn rejects_bad_manifests() {
+        let d = Path::new(".");
+        assert!(Catalog::parse(d, "not json").is_err());
+        assert!(Catalog::parse(d, r#"{"format": 2, "artifacts": []}"#).is_err());
+        assert!(Catalog::parse(d, r#"{"artifacts": []}"#).is_err());
+        assert!(Catalog::parse(
+            d,
+            r#"{"format":1,"artifacts":[{"name":"x","kind":"bogus","params":{"p":1},"file":"f"}]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_built() {
+        // integration: parse the actual artifacts/ dir when it exists
+        let dir = crate::runtime::default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let c = Catalog::load(&dir).unwrap();
+        assert!(c.chunk_stats_for(32).is_some());
+        assert!(c.cd_sweep_for(32).is_some());
+        for a in &c.artifacts {
+            assert!(a.path.exists(), "{:?} listed but missing", a.path);
+        }
+    }
+}

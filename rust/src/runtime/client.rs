@@ -1,0 +1,149 @@
+//! The PJRT CPU session: one client, compile-on-first-use executable cache.
+//!
+//! Pattern follows /opt/xla-example/load_hlo.rs:
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `client.compile` → `execute`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// A PJRT CPU session with an executable cache keyed by artifact path.
+pub struct Session {
+    client: xla::PjRtClient,
+    cache: HashMap<PathBuf, xla::PjRtLoadedExecutable>,
+}
+
+impl Session {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Session { client, cache: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact (cached).
+    pub fn load(&mut self, path: &Path) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(path) {
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .map_err(|e| anyhow::anyhow!("parse HLO text {path:?}: {e}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compile {path:?}: {e}"))?;
+            self.cache.insert(path.to_path_buf(), exe);
+        }
+        Ok(&self.cache[path])
+    }
+
+    /// Execute a loaded artifact on literals; returns the tuple elements
+    /// (aot.py lowers with return_tuple=True, so the root is always a tuple).
+    pub fn run(&mut self, path: &Path, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.load(path)?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow::anyhow!("execute {path:?}: {e}"))?;
+        let literal = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result of {path:?}: {e}"))?;
+        literal
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple result of {path:?}: {e}"))
+    }
+
+    pub fn cached_executables(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+/// Build an f32 literal of the given shape from f64 data.
+pub fn literal_f32(data: &[f64], dims: &[i64]) -> Result<xla::Literal> {
+    let f32s: Vec<f32> = data.iter().map(|&v| v as f32).collect();
+    let lit = xla::Literal::vec1(&f32s);
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "shape/product mismatch");
+    if dims.len() == 1 {
+        Ok(lit)
+    } else {
+        lit.reshape(dims)
+            .map_err(|e| anyhow::anyhow!("reshape to {dims:?}: {e}"))
+    }
+}
+
+/// Scalar f32 literal.
+pub fn scalar_f32(v: f64) -> xla::Literal {
+    xla::Literal::scalar(v as f32)
+}
+
+/// Read an f32 literal back into f64s.
+pub fn to_f64_vec(lit: &xla::Literal) -> Result<Vec<f64>> {
+    let v: Vec<f32> = lit
+        .to_vec()
+        .map_err(|e| anyhow::anyhow!("literal to_vec: {e}"))?;
+    Ok(v.into_iter().map(|x| x as f64).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{default_artifacts_dir, Catalog};
+
+    #[test]
+    fn session_loads_and_runs_real_artifact() {
+        let dir = default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let catalog = Catalog::load(&dir).unwrap();
+        let art = catalog.cd_sweep_for(8).expect("p=8 cd_sweep artifact");
+        let mut sess = Session::cpu().unwrap();
+        // identity gram, c = ones, beta0 = 0, lambda = 0 → beta = c after 1+ sweeps
+        let p = 8usize;
+        let mut gram = vec![0.0f64; p * p];
+        for i in 0..p {
+            gram[i * p + i] = 1.0;
+        }
+        let inputs = vec![
+            literal_f32(&gram, &[p as i64, p as i64]).unwrap(),
+            literal_f32(&vec![1.0; p], &[p as i64]).unwrap(),
+            literal_f32(&vec![0.0; p], &[p as i64]).unwrap(),
+            scalar_f32(0.0),
+            scalar_f32(1.0),
+        ];
+        let out = sess.run(&art.path, &inputs).unwrap();
+        assert_eq!(out.len(), 2);
+        let beta = to_f64_vec(&out[0]).unwrap();
+        for b in beta {
+            assert!((b - 1.0).abs() < 1e-6, "beta={b}");
+        }
+        // second run hits the cache
+        let _ = sess.run(&art.path, &{
+            let mut gram2 = vec![0.0f64; p * p];
+            for i in 0..p {
+                gram2[i * p + i] = 1.0;
+            }
+            vec![
+                literal_f32(&gram2, &[p as i64, p as i64]).unwrap(),
+                literal_f32(&vec![0.5; p], &[p as i64]).unwrap(),
+                literal_f32(&vec![0.0; p], &[p as i64]).unwrap(),
+                scalar_f32(0.0),
+                scalar_f32(1.0),
+            ]
+        });
+        assert_eq!(sess.cached_executables(), 1);
+    }
+
+    #[test]
+    fn literal_helpers_round_trip() {
+        let lit = literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        let back = to_f64_vec(&lit).unwrap();
+        assert_eq!(back, vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(literal_f32(&[1.0], &[2]).is_err());
+    }
+}

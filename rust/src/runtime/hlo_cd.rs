@@ -1,0 +1,142 @@
+//! The accelerated solve path: the `cd_sweep` artifact (N fused coordinate
+//! sweeps per invocation, lowered from the L2 fori_loop) driven to
+//! convergence from rust.
+//!
+//! The f32 kernel converges to f32 resolution; the rust caller checks the
+//! returned max-delta and stops, then (optionally) polishes with a few f64
+//! sweeps — tests verify agreement with the pure-rust solver to ~1e-4.
+
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use crate::stats::suffstats::QuadForm;
+
+use super::artifact::Catalog;
+use super::client::{literal_f32, scalar_f32, to_f64_vec, Session};
+
+/// A CD solver bound to one p-width cd_sweep artifact.
+pub struct HloCdSolver {
+    session: Session,
+    path: PathBuf,
+    pub p: usize,
+    pub sweeps_per_call: usize,
+    /// kernel invocations made so far
+    pub calls: usize,
+}
+
+impl HloCdSolver {
+    pub fn new(catalog: &Catalog, p: usize) -> Result<Self> {
+        let art = catalog
+            .cd_sweep_for(p)
+            .with_context(|| format!("no cd_sweep artifact for p={p}"))?;
+        Ok(HloCdSolver {
+            session: Session::cpu()?,
+            path: art.path.clone(),
+            p,
+            sweeps_per_call: art.n_sweeps.unwrap_or(1),
+            calls: 0,
+        })
+    }
+
+    /// Run the kernel until the in-kernel max coordinate delta of the last
+    /// fused sweep falls below `tol` (or `max_calls` is hit).  Returns the
+    /// standardized coefficients.
+    pub fn solve(
+        &mut self,
+        q: &QuadForm,
+        lambda: f64,
+        alpha_en: f64,
+        tol: f64,
+        max_calls: usize,
+    ) -> Result<Vec<f64>> {
+        anyhow::ensure!(q.p == self.p, "quad form width {} != artifact {}", q.p, self.p);
+        let pl = self.p as i64;
+        let gram = literal_f32(&q.gram, &[pl, pl])?;
+        let xty = literal_f32(&q.xty, &[pl])?;
+        let mut beta = vec![0.0f64; self.p];
+        for _ in 0..max_calls {
+            let inputs = vec![
+                gram.clone(),
+                xty.clone(),
+                literal_f32(&beta, &[pl])?,
+                scalar_f32(lambda),
+                scalar_f32(alpha_en),
+            ];
+            let out = self.session.run(&self.path, &inputs)?;
+            self.calls += 1;
+            beta = to_f64_vec(&out[0])?;
+            let dmax = to_f64_vec(&out[1])?[0];
+            if dmax < tol {
+                break;
+            }
+        }
+        Ok(beta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthSpec};
+    use crate::runtime::default_artifacts_dir;
+    use crate::solver::{solve_cd, CdSettings, Penalty};
+    use crate::stats::SuffStats;
+
+    fn catalog() -> Option<Catalog> {
+        let dir = default_artifacts_dir();
+        if dir.join("manifest.json").exists() {
+            Some(Catalog::load(&dir).unwrap())
+        } else {
+            eprintln!("skipping: artifacts not built");
+            None
+        }
+    }
+
+    fn qf(p: usize, seed: u64) -> QuadForm {
+        let data = generate(&SynthSpec::sparse_linear(3000, p, 0.3, seed));
+        let mut s = SuffStats::new(p);
+        for i in 0..data.n() {
+            s.push(data.row(i), data.y[i]);
+        }
+        s.quad_form()
+    }
+
+    #[test]
+    fn hlo_cd_matches_rust_cd() {
+        let Some(catalog) = catalog() else { return };
+        let q = qf(32, 5);
+        let mut hlo = HloCdSolver::new(&catalog, 32).unwrap();
+        for (lam, alpha) in [(0.1, 1.0), (0.3, 0.5), (0.05, 0.0)] {
+            let beta_hlo = hlo.solve(&q, lam, alpha, 1e-7, 500).unwrap();
+            let sol = solve_cd(&q, Penalty::elastic_net(alpha), lam, None, CdSettings::default());
+            for j in 0..32 {
+                assert!(
+                    (beta_hlo[j] - sol.beta[j]).abs() < 1e-4,
+                    "lam={lam} alpha={alpha} j={j}: {} vs {}",
+                    beta_hlo[j],
+                    sol.beta[j]
+                );
+            }
+        }
+        assert!(hlo.calls > 0);
+    }
+
+    #[test]
+    fn kernel_null_model_at_lambda_max() {
+        let Some(catalog) = catalog() else { return };
+        let q = qf(8, 7);
+        let mut hlo = HloCdSolver::new(&catalog, 8).unwrap();
+        let lmax = q.lambda_max(1.0);
+        let beta = hlo.solve(&q, lmax * 1.01, 1.0, 1e-7, 50).unwrap();
+        assert!(beta.iter().all(|b| *b == 0.0), "{beta:?}");
+    }
+
+    #[test]
+    fn width_mismatch_rejected() {
+        let Some(catalog) = catalog() else { return };
+        let q = qf(8, 9);
+        let mut hlo = HloCdSolver::new(&catalog, 32).unwrap();
+        assert!(hlo.solve(&q, 0.1, 1.0, 1e-6, 10).is_err());
+    }
+}

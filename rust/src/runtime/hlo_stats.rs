@@ -1,0 +1,169 @@
+//! The accelerated map path: Pallas-backed `chunk_stats` via PJRT.
+//!
+//! Full `block_n`-row blocks run through the AOT kernel; the trailing
+//! partial block runs on the CPU accumulator (zero-padding rows would bias
+//! the block mean, so rows are never padded — exactness over cleverness).
+//! Each HLO block result is folded into [`Moments`] with Chan's merge,
+//! i.e. the hybrid pipeline is *still* the robust §2.1 algorithm, with the
+//! blocks' inner loop on the accelerator.
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use crate::stats::{Moments, SuffStats};
+
+use super::artifact::Catalog;
+use super::client::{literal_f32, to_f64_vec, Session};
+
+/// A chunk-statistics mapper bound to one (block_n, p) artifact.
+pub struct HloStatsMapper {
+    session: Session,
+    path: PathBuf,
+    pub block_n: usize,
+    pub p: usize,
+    /// blocks executed on the accelerator
+    pub hlo_blocks: usize,
+    /// rows folded on the CPU tail path
+    pub cpu_rows: u64,
+}
+
+impl HloStatsMapper {
+    /// Bind to the catalog's chunk_stats artifact for width `p`.
+    pub fn new(catalog: &Catalog, p: usize) -> Result<Self> {
+        let art = catalog
+            .chunk_stats_for(p)
+            .with_context(|| format!("no chunk_stats artifact for p={p} (have {:?})", catalog.chunk_stats_widths()))?;
+        let block_n = art.block_n.context("chunk_stats artifact missing block_n")?;
+        Ok(HloStatsMapper {
+            session: Session::cpu()?,
+            path: art.path.clone(),
+            block_n,
+            p,
+            hlo_blocks: 0,
+            cpu_rows: 0,
+        })
+    }
+
+    /// Run one full block through the kernel → (n, mean, m2) moments.
+    fn run_block(&mut self, x: &[f64], y: &[f64]) -> Result<Moments> {
+        let bn = self.block_n;
+        if y.len() != bn || x.len() != bn * self.p {
+            bail!("run_block needs exactly block_n={bn} rows");
+        }
+        let inputs = vec![
+            literal_f32(x, &[bn as i64, self.p as i64])?,
+            literal_f32(y, &[bn as i64])?,
+        ];
+        let out = self.session.run(&self.path, &inputs)?;
+        if out.len() != 2 {
+            bail!("chunk_stats returned {} outputs, expected 2", out.len());
+        }
+        let mean = to_f64_vec(&out[0])?;
+        let m2 = to_f64_vec(&out[1])?;
+        let d = self.p + 1;
+        if mean.len() != d || m2.len() != d * d {
+            bail!("chunk_stats output shape mismatch");
+        }
+        self.hlo_blocks += 1;
+        Ok(Moments::from_block(bn as u64, mean, &m2))
+    }
+
+    /// Fold a row-major slab of rows into `acc`, using the kernel for every
+    /// full block and the CPU for the remainder.
+    pub fn fold_rows(&mut self, x: &[f64], y: &[f64], acc: &mut SuffStats) -> Result<()> {
+        assert_eq!(x.len(), y.len() * self.p, "slab shape mismatch");
+        assert_eq!(acc.p(), self.p);
+        let bn = self.block_n;
+        let full = y.len() / bn;
+        for b in 0..full {
+            let m = self.run_block(
+                &x[b * bn * self.p..(b + 1) * bn * self.p],
+                &y[b * bn..(b + 1) * bn],
+            )?;
+            let part = SuffStats::from_moments(self.p, m);
+            acc.merge(&part);
+        }
+        for i in full * bn..y.len() {
+            acc.push(&x[i * self.p..(i + 1) * self.p], y[i]);
+            self.cpu_rows += 1;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthSpec};
+    use crate::runtime::default_artifacts_dir;
+
+    fn catalog() -> Option<Catalog> {
+        let dir = default_artifacts_dir();
+        if dir.join("manifest.json").exists() {
+            Some(Catalog::load(&dir).unwrap())
+        } else {
+            eprintln!("skipping: artifacts not built");
+            None
+        }
+    }
+
+    #[test]
+    fn hlo_stats_match_cpu_stats() {
+        let Some(catalog) = catalog() else { return };
+        let p = 8;
+        let spec = SynthSpec::sparse_linear(2500, p, 0.4, 3); // 2 full 1024-blocks + tail
+        let data = generate(&spec);
+        let mut mapper = HloStatsMapper::new(&catalog, p).unwrap();
+        let mut hlo = SuffStats::new(p);
+        mapper.fold_rows(&data.x, &data.y, &mut hlo).unwrap();
+        assert!(mapper.hlo_blocks >= 2, "blocks={}", mapper.hlo_blocks);
+        assert!(mapper.cpu_rows > 0, "tail must take the CPU path");
+        let mut cpu = SuffStats::new(p);
+        for i in 0..data.n() {
+            cpu.push(data.row(i), data.y[i]);
+        }
+        assert_eq!(hlo.count(), cpu.count());
+        // f32 kernel ⇒ ~1e-5 relative agreement on well-scaled data
+        for a in 0..p {
+            let scale = cpu.sxx(a, a).abs().max(1.0);
+            assert!(
+                (hlo.sxx(a, a) - cpu.sxx(a, a)).abs() / scale < 1e-3,
+                "sxx[{a}]: {} vs {}",
+                hlo.sxx(a, a),
+                cpu.sxx(a, a)
+            );
+            assert!((hlo.sxy(a) - cpu.sxy(a)).abs() / cpu.sxy(a).abs().max(1.0) < 1e-3);
+        }
+        assert!((hlo.y_mean() - cpu.y_mean()).abs() < 1e-4);
+    }
+
+    #[test]
+    fn model_from_hlo_stats_matches_cpu_model() {
+        let Some(catalog) = catalog() else { return };
+        use crate::solver::{solve_cd, CdSettings, Penalty};
+        let p = 32;
+        let data = generate(&SynthSpec::sparse_linear(5000, p, 0.2, 9));
+        let mut mapper = HloStatsMapper::new(&catalog, p).unwrap();
+        let mut hlo = SuffStats::new(p);
+        mapper.fold_rows(&data.x, &data.y, &mut hlo).unwrap();
+        let mut cpu = SuffStats::new(p);
+        for i in 0..data.n() {
+            cpu.push(data.row(i), data.y[i]);
+        }
+        let (qa, qb) = (hlo.quad_form(), cpu.quad_form());
+        let sa = solve_cd(&qa, Penalty::lasso(), 0.05, None, CdSettings::default());
+        let sb = solve_cd(&qb, Penalty::lasso(), 0.05, None, CdSettings::default());
+        let (_, ba) = qa.to_original_scale(&sa.beta);
+        let (_, bb) = qb.to_original_scale(&sb.beta);
+        for j in 0..p {
+            assert!((ba[j] - bb[j]).abs() < 1e-3, "j={j}: {} vs {}", ba[j], bb[j]);
+        }
+    }
+
+    #[test]
+    fn rejects_wrong_width() {
+        let Some(catalog) = catalog() else { return };
+        assert!(HloStatsMapper::new(&catalog, 7777).is_err());
+    }
+}

@@ -1,0 +1,34 @@
+//! PJRT runtime — loads the AOT artifacts (`artifacts/*.hlo.txt`, built
+//! once by `make artifacts`) and executes them from the rust hot path.
+//! Python never runs at request time.
+//!
+//! Interchange is HLO *text*: the image's xla_extension 0.5.1 rejects
+//! jax ≥ 0.5 serialized protos (64-bit instruction ids); the text parser
+//! reassigns ids (see /opt/xla-example/README.md and aot.py).
+//!
+//! * [`artifact`] — parses `manifest.json` (via the in-crate JSON parser)
+//!   into a typed catalog keyed by (kind, shape).
+//! * [`client`] — the PJRT CPU session: compile-on-load with a cache.
+//! * [`hlo_stats`] — the accelerated map path: run the Pallas-backed
+//!   `chunk_stats` kernel on full row-blocks, fold the result into
+//!   [`crate::stats::Moments`] via `from_block` (partial blocks take the
+//!   CPU path — padding would bias the block mean, so we never pad rows).
+//! * [`hlo_cd`] — the accelerated CD path: fixed-sweep kernel invoked in a
+//!   convergence loop, cross-checked against the f64 solver in tests.
+
+pub mod artifact;
+pub mod client;
+pub mod hlo_cd;
+pub mod hlo_stats;
+
+pub use artifact::{Artifact, ArtifactKind, Catalog};
+pub use client::Session;
+pub use hlo_cd::HloCdSolver;
+pub use hlo_stats::HloStatsMapper;
+
+/// Default artifacts directory: `$PLRMR_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    std::env::var_os("PLRMR_ARTIFACTS")
+        .map(Into::into)
+        .unwrap_or_else(|| "artifacts".into())
+}

@@ -1,0 +1,371 @@
+//! Covariance-update cyclic coordinate descent — the paper's §2.2 solver
+//! (Friedman, Hastie & Tibshirani \[2\]), operating purely on the
+//! standardized quadratic form from sufficient statistics.
+//!
+//! Objective (G has unit diagonal, c = standardized Xᵀy/n):
+//!
+//!   f(β) = ½ βᵀGβ − cᵀβ + λ·(α‖β‖₁ + ½(1−α)‖β‖₂²)
+//!
+//! Exact coordinate update:
+//!
+//!   βⱼ ← S(cⱼ − Σ_{k≠j} Gⱼₖβₖ, λα) / (Gⱼⱼ + λ(1−α))
+//!
+//! The "covariance update" trick: we cache gb = G·β and maintain it
+//! incrementally (O(p) per changed coordinate, nothing for untouched
+//! zeros), and after the first full sweep we iterate only over the active
+//! set until it stabilizes — the glmnet strategy that makes path fits with
+//! warm starts (see [`super::path`]) fast.
+
+use crate::stats::suffstats::QuadForm;
+
+use super::penalty::{soft_threshold, Penalty};
+
+/// Solver knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct CdSettings {
+    /// convergence: max standardized coefficient change per sweep
+    pub tol: f64,
+    /// hard cap on full-equivalent sweeps
+    pub max_sweeps: usize,
+    /// use active-set iteration between full sweeps (glmnet strategy)
+    pub active_set: bool,
+}
+
+impl Default for CdSettings {
+    fn default() -> Self {
+        CdSettings { tol: 1e-9, max_sweeps: 10_000, active_set: true }
+    }
+}
+
+/// A converged (or capped) CD fit in standardized coordinates.
+#[derive(Debug, Clone)]
+pub struct CdSolution {
+    /// standardized coefficients β̂
+    pub beta: Vec<f64>,
+    /// total coordinate sweeps executed (full + active-set)
+    pub sweeps: usize,
+    /// true if the tolerance was met before `max_sweeps`
+    pub converged: bool,
+    /// number of nonzero coefficients
+    pub n_active: usize,
+    /// final objective value
+    pub objective: f64,
+}
+
+/// Objective value f(β) for the standardized problem.
+pub fn objective(q: &QuadForm, penalty: Penalty, lambda: f64, beta: &[f64]) -> f64 {
+    let p = q.p;
+    let mut quad = 0.0;
+    for i in 0..p {
+        let row = &q.gram[i * p..(i + 1) * p];
+        let mut acc = 0.0;
+        for j in 0..p {
+            acc += row[j] * beta[j];
+        }
+        quad += beta[i] * acc;
+    }
+    let lin: f64 = q.xty.iter().zip(beta).map(|(c, b)| c * b).sum();
+    0.5 * quad - lin + penalty.value(lambda, beta)
+}
+
+/// Max KKT violation of β for the standardized problem — 0 at the optimum.
+///
+/// For the elastic net with g = Gβ − c + λ(1−α)β:
+///   βⱼ ≠ 0 ⇒ |gⱼ + λα·sign(βⱼ)| should be 0
+///   βⱼ = 0 ⇒ |gⱼ| ≤ λα
+pub fn kkt_violation(q: &QuadForm, penalty: Penalty, lambda: f64, beta: &[f64]) -> f64 {
+    let p = q.p;
+    let la = lambda * penalty.alpha;
+    let lr = lambda * (1.0 - penalty.alpha);
+    let mut worst = 0.0_f64;
+    for j in 0..p {
+        let row = &q.gram[j * p..(j + 1) * p];
+        let mut g = -q.xty[j] + lr * beta[j];
+        for k in 0..p {
+            g += row[k] * beta[k];
+        }
+        let v = if beta[j] != 0.0 {
+            (g + la * beta[j].signum()).abs()
+        } else {
+            (g.abs() - la).max(0.0)
+        };
+        worst = worst.max(v);
+    }
+    worst
+}
+
+/// Solve by cyclic coordinate descent, warm-started from `beta0` if given.
+pub fn solve_cd(
+    q: &QuadForm,
+    penalty: Penalty,
+    lambda: f64,
+    beta0: Option<&[f64]>,
+    settings: CdSettings,
+) -> CdSolution {
+    assert!(lambda >= 0.0, "lambda must be nonnegative");
+    let p = q.p;
+    let la = lambda * penalty.alpha;
+    let lr = lambda * (1.0 - penalty.alpha);
+    let mut beta = match beta0 {
+        Some(b) => {
+            assert_eq!(b.len(), p, "warm start dimension mismatch");
+            b.to_vec()
+        }
+        None => vec![0.0; p],
+    };
+    // gb = G·β, maintained incrementally.
+    let mut gb = vec![0.0; p];
+    if beta.iter().any(|b| *b != 0.0) {
+        for k in 0..p {
+            if beta[k] != 0.0 {
+                let col = &q.gram[k * p..(k + 1) * p]; // symmetric: row == col
+                let bk = beta[k];
+                for j in 0..p {
+                    gb[j] += col[j] * bk;
+                }
+            }
+        }
+    }
+
+    let mut sweeps = 0;
+    let mut converged = false;
+    let mut active: Vec<usize> = Vec::with_capacity(p);
+
+    // One cycle over `idxs`; returns max |Δβ|.
+    let cycle = |idxs: &[usize], beta: &mut [f64], gb: &mut [f64]| -> f64 {
+        let mut dmax = 0.0_f64;
+        for &j in idxs {
+            let gjj = q.gram[j * p + j];
+            let r = q.xty[j] - (gb[j] - gjj * beta[j]);
+            let bj_new = {
+                let num = soft_threshold(r, la);
+                let den = gjj + lr;
+                if den > 0.0 {
+                    num / den
+                } else {
+                    0.0
+                }
+            };
+            let delta = bj_new - beta[j];
+            if delta != 0.0 {
+                beta[j] = bj_new;
+                let col = &q.gram[j * p..(j + 1) * p];
+                for i in 0..p {
+                    gb[i] += col[i] * delta;
+                }
+                dmax = dmax.max(delta.abs());
+            }
+        }
+        dmax
+    };
+
+    let all: Vec<usize> = (0..p).collect();
+    while sweeps < settings.max_sweeps {
+        // full sweep
+        let dmax = cycle(&all, &mut beta, &mut gb);
+        sweeps += 1;
+        if dmax < settings.tol {
+            converged = true;
+            break;
+        }
+        if settings.active_set {
+            // iterate on the active set until it stops moving
+            active.clear();
+            active.extend((0..p).filter(|&j| beta[j] != 0.0));
+            while sweeps < settings.max_sweeps {
+                let d = cycle(&active, &mut beta, &mut gb);
+                sweeps += 1;
+                if d < settings.tol {
+                    break;
+                }
+            }
+        }
+    }
+
+    let n_active = beta.iter().filter(|b| **b != 0.0).count();
+    let objective = objective(q, penalty, lambda, &beta);
+    CdSolution { beta, sweeps, converged, n_active, objective }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::stats::SuffStats;
+    use crate::util::prop;
+
+    /// Build a QuadForm from random synthetic data.
+    fn random_qf(rng: &mut Rng, n: usize, p: usize) -> QuadForm {
+        let mut s = SuffStats::new(p);
+        let beta_true: Vec<f64> = (0..p)
+            .map(|j| if j % 3 == 0 { 1.5 } else { 0.0 })
+            .collect();
+        for _ in 0..n {
+            let x: Vec<f64> = (0..p).map(|_| rng.normal()).collect();
+            let y: f64 = x
+                .iter()
+                .zip(&beta_true)
+                .map(|(a, b)| a * b)
+                .sum::<f64>()
+                + rng.normal() * 0.5;
+            s.push(&x, y);
+        }
+        s.quad_form()
+    }
+
+    #[test]
+    fn kkt_satisfied_at_convergence_property() {
+        prop::quick(|rng, _| {
+            let p = 2 + rng.below(10);
+            let n = 50 + rng.below(200);
+            let q = random_qf(rng, n, p);
+            let alpha = [1.0, 0.5, 0.0][rng.below(3)];
+            let lam = [0.01, 0.1, 0.5][rng.below(3)];
+            let pen = Penalty::elastic_net(alpha);
+            let sol = solve_cd(&q, pen, lam, None, CdSettings::default());
+            assert!(sol.converged, "did not converge");
+            let v = kkt_violation(&q, pen, lam, &sol.beta);
+            assert!(v < 1e-6, "KKT violation {v} (alpha={alpha}, lam={lam})");
+        });
+    }
+
+    #[test]
+    fn lambda_max_gives_null_model() {
+        let mut rng = Rng::seed_from(1);
+        let q = random_qf(&mut rng, 200, 6);
+        let lmax = q.lambda_max(1.0);
+        let sol = solve_cd(&q, Penalty::lasso(), lmax * 1.0001, None, CdSettings::default());
+        assert_eq!(sol.n_active, 0);
+        assert!(sol.beta.iter().all(|b| *b == 0.0));
+    }
+
+    #[test]
+    fn sparsity_increases_with_lambda() {
+        let mut rng = Rng::seed_from(2);
+        let q = random_qf(&mut rng, 300, 12);
+        let lmax = q.lambda_max(1.0);
+        let mut last_active = usize::MAX;
+        for factor in [1e-4, 1e-2, 0.1, 0.5, 1.0] {
+            let sol = solve_cd(
+                &q,
+                Penalty::lasso(),
+                lmax * factor,
+                None,
+                CdSettings::default(),
+            );
+            assert!(
+                sol.n_active <= last_active || sol.n_active <= 1,
+                "monotone-ish sparsity"
+            );
+            last_active = sol.n_active;
+        }
+    }
+
+    #[test]
+    fn ridge_matches_closed_form() {
+        let mut rng = Rng::seed_from(3);
+        let q = random_qf(&mut rng, 150, 5);
+        let lam = 0.3;
+        let sol = solve_cd(&q, Penalty::ridge(), lam, None, CdSettings::default());
+        // closed form: (G + λI) b = c
+        let p = q.p;
+        let mut a = q.gram.clone();
+        for i in 0..p {
+            a[i * p + i] += lam;
+        }
+        let want = super::super::linalg::spd_solve(&a, &q.xty).unwrap();
+        for j in 0..p {
+            assert!((sol.beta[j] - want[j]).abs() < 1e-7, "j={j}");
+        }
+    }
+
+    #[test]
+    fn lambda_zero_recovers_ols() {
+        let mut rng = Rng::seed_from(4);
+        let q = random_qf(&mut rng, 400, 4);
+        let sol = solve_cd(&q, Penalty::lasso(), 0.0, None, CdSettings::default());
+        let want = super::super::linalg::spd_solve(&q.gram, &q.xty).unwrap();
+        for j in 0..4 {
+            assert!((sol.beta[j] - want[j]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn warm_start_converges_faster() {
+        let mut rng = Rng::seed_from(5);
+        let q = random_qf(&mut rng, 300, 20);
+        let lmax = q.lambda_max(1.0);
+        let cold = solve_cd(&q, Penalty::lasso(), lmax * 0.1, None, CdSettings::default());
+        // warm start from a nearby λ
+        let near = solve_cd(&q, Penalty::lasso(), lmax * 0.12, None, CdSettings::default());
+        let warm = solve_cd(
+            &q,
+            Penalty::lasso(),
+            lmax * 0.1,
+            Some(&near.beta),
+            CdSettings::default(),
+        );
+        assert!(warm.sweeps <= cold.sweeps, "warm {} vs cold {}", warm.sweeps, cold.sweeps);
+        // and to the same solution
+        for j in 0..q.p {
+            assert!((warm.beta[j] - cold.beta[j]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn active_set_off_same_answer() {
+        let mut rng = Rng::seed_from(6);
+        let q = random_qf(&mut rng, 250, 8);
+        let lam = q.lambda_max(1.0) * 0.05;
+        let with = solve_cd(&q, Penalty::lasso(), lam, None, CdSettings::default());
+        let without = solve_cd(
+            &q,
+            Penalty::lasso(),
+            lam,
+            None,
+            CdSettings { active_set: false, ..CdSettings::default() },
+        );
+        for j in 0..q.p {
+            assert!((with.beta[j] - without.beta[j]).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn objective_decreases_along_iterations() {
+        let mut rng = Rng::seed_from(7);
+        let q = random_qf(&mut rng, 200, 6);
+        let pen = Penalty::elastic_net(0.7);
+        let lam = 0.2;
+        // run 1 sweep at a time, objective must be non-increasing
+        let mut beta = vec![0.0; q.p];
+        let mut last = objective(&q, pen, lam, &beta);
+        for _ in 0..10 {
+            let sol = solve_cd(
+                &q,
+                pen,
+                lam,
+                Some(&beta),
+                CdSettings { max_sweeps: 1, active_set: false, tol: 0.0 },
+            );
+            beta = sol.beta;
+            let now = objective(&q, pen, lam, &beta);
+            assert!(now <= last + 1e-12, "objective rose: {last} -> {now}");
+            last = now;
+        }
+    }
+
+    #[test]
+    fn degenerate_column_stays_zero() {
+        // constant column in the raw data → solver must leave it at 0
+        let mut rng = Rng::seed_from(8);
+        let mut s = SuffStats::new(3);
+        for _ in 0..100 {
+            let x = [rng.normal(), 4.2, rng.normal()];
+            let y = x[0] - x[2] + rng.normal() * 0.1;
+            s.push(&x, y);
+        }
+        let q = s.quad_form();
+        let sol = solve_cd(&q, Penalty::lasso(), 0.01, None, CdSettings::default());
+        assert_eq!(sol.beta[1], 0.0);
+    }
+}

@@ -1,0 +1,174 @@
+//! Small dense linear algebra — just what the driver-side solvers need.
+//!
+//! Matrices are row-major `Vec<f64>`; p is at most a few thousand here
+//! (the paper's scope: statistics fit in driver memory), so simple
+//! cache-aware loops beat pulling in a BLAS.
+
+/// y = A·x for row-major symmetric-or-not A (n×n).
+pub fn matvec(a: &[f64], x: &[f64], y: &mut [f64]) {
+    let n = x.len();
+    assert_eq!(a.len(), n * n);
+    assert_eq!(y.len(), n);
+    for i in 0..n {
+        let row = &a[i * n..(i + 1) * n];
+        let mut acc = 0.0;
+        for j in 0..n {
+            acc += row[j] * x[j];
+        }
+        y[i] = acc;
+    }
+}
+
+/// Dot product.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0;
+    for i in 0..a.len() {
+        acc += a[i] * b[i];
+    }
+    acc
+}
+
+/// In-place Cholesky factorization A = L·Lᵀ of a symmetric positive-definite
+/// row-major matrix; returns the lower factor L (row-major, upper zeroed).
+/// Errors if a pivot is ≤ `eps` (not PD).
+pub fn cholesky(a: &[f64], n: usize, eps: f64) -> Result<Vec<f64>, String> {
+    assert_eq!(a.len(), n * n);
+    let mut l = vec![0.0; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a[i * n + j];
+            for k in 0..j {
+                s -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if s <= eps {
+                    return Err(format!("cholesky: pivot {s:.3e} at {i} (not PD)"));
+                }
+                l[i * n + i] = s.sqrt();
+            } else {
+                l[i * n + j] = s / l[j * n + j];
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Solve L·Lᵀ·x = b given the lower Cholesky factor.
+pub fn chol_solve(l: &[f64], b: &[f64]) -> Vec<f64> {
+    let n = b.len();
+    assert_eq!(l.len(), n * n);
+    // forward: L·z = b
+    let mut z = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l[i * n + k] * z[k];
+        }
+        z[i] = s / l[i * n + i];
+    }
+    // backward: Lᵀ·x = z
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = z[i];
+        for k in (i + 1)..n {
+            s -= l[k * n + i] * x[k];
+        }
+        x[i] = s / l[i * n + i];
+    }
+    x
+}
+
+/// Solve the SPD system A·x = b by Cholesky.
+pub fn spd_solve(a: &[f64], b: &[f64]) -> Result<Vec<f64>, String> {
+    let n = b.len();
+    let l = cholesky(a, n, 0.0)?;
+    Ok(chol_solve(&l, b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::util::prop;
+
+    fn random_spd(rng: &mut Rng, n: usize) -> Vec<f64> {
+        // A = BᵀB + n·I is safely PD
+        let b: Vec<f64> = (0..n * n).map(|_| rng.normal()).collect();
+        let mut a = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += b[k * n + i] * b[k * n + j];
+                }
+                a[i * n + j] = s + if i == j { n as f64 } else { 0.0 };
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn matvec_identity() {
+        let n = 4;
+        let mut a = vec![0.0; n * n];
+        for i in 0..n {
+            a[i * n + i] = 1.0;
+        }
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let mut y = [0.0; 4];
+        matvec(&a, &x, &mut y);
+        assert_eq!(y, x);
+    }
+
+    #[test]
+    fn cholesky_solve_property() {
+        prop::quick(|rng, _| {
+            let n = 1 + rng.below(8);
+            let a = random_spd(rng, n);
+            let x_true: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let mut b = vec![0.0; n];
+            matvec(&a, &x_true, &mut b);
+            let x = spd_solve(&a, &b).expect("spd");
+            for i in 0..n {
+                assert!(
+                    (x[i] - x_true[i]).abs() < 1e-8,
+                    "x[{i}]={} vs {}",
+                    x[i],
+                    x_true[i]
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn cholesky_factor_reconstructs() {
+        let mut rng = Rng::seed_from(3);
+        let n = 5;
+        let a = random_spd(&mut rng, n);
+        let l = cholesky(&a, n, 0.0).unwrap();
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += l[i * n + k] * l[j * n + k];
+                }
+                assert!((s - a[i * n + j]).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        // [[1, 2],[2, 1]] has eigenvalues 3, −1
+        let a = [1.0, 2.0, 2.0, 1.0];
+        assert!(cholesky(&a, 2, 0.0).is_err());
+    }
+
+    #[test]
+    fn dot_basic() {
+        assert_eq!(dot(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+        assert_eq!(dot(&[], &[]), 0.0);
+    }
+}

@@ -1,0 +1,28 @@
+//! The optimization layer (paper §2.2): minimize the standardized quadratic
+//! form
+//!
+//!   f(β) = ½ βᵀGβ − cᵀβ + λ·(α‖β‖₁ + ½(1−α)‖β‖₂²)
+//!
+//! built from sufficient statistics alone ([`crate::stats::suffstats::QuadForm`]).
+//!
+//! * [`penalty`] — Lasso / Ridge / Elastic-net parameterization.
+//! * [`cd`] — covariance-update cyclic coordinate descent (Friedman,
+//!   Hastie & Tibshirani \[2\]) with active-set iteration and warm starts;
+//!   the paper's chosen solver and our reference implementation.
+//! * [`ridge`] — closed-form ridge via Cholesky (exactness cross-check and
+//!   the α=0 fast path).
+//! * [`path`] — λ_max and log-spaced λ grids, warm-started path fits.
+//! * [`linalg`] — the small dense kernel set (Cholesky, solves, symv).
+
+//! * [`screen`] — sure-independence screening from the same statistics
+//!   (the paper's §4 future work: p beyond the p²-in-memory envelope).
+
+pub mod cd;
+pub mod linalg;
+pub mod path;
+pub mod penalty;
+pub mod ridge;
+pub mod screen;
+
+pub use cd::{solve_cd, CdSettings, CdSolution};
+pub use penalty::Penalty;

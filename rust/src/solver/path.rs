@@ -1,0 +1,135 @@
+//! λ grids and warm-started path fits.
+//!
+//! Algorithm 1 takes "λs — the list of penalty parameters".  In practice
+//! (and in glmnet) the grid is derived from the data: λ_max is the smallest
+//! λ with an all-zero solution, and the grid descends log-uniformly to
+//! λ_max·ratio.  Fitting the grid from large λ to small with warm starts is
+//! what keeps the CV phase cheap.
+
+use crate::stats::suffstats::QuadForm;
+
+use super::cd::{solve_cd, CdSettings, CdSolution};
+use super::penalty::Penalty;
+
+/// Log-spaced descending grid from λ_max to λ_max·ratio (inclusive).
+pub fn lambda_grid(lambda_max: f64, n: usize, ratio: f64) -> Vec<f64> {
+    assert!(n >= 1, "need at least one lambda");
+    assert!(lambda_max > 0.0, "lambda_max must be positive");
+    assert!((0.0..1.0).contains(&ratio) && ratio > 0.0, "ratio in (0,1)");
+    if n == 1 {
+        return vec![lambda_max];
+    }
+    let log_max = lambda_max.ln();
+    let log_min = (lambda_max * ratio).ln();
+    (0..n)
+        .map(|i| {
+            let t = i as f64 / (n - 1) as f64;
+            (log_max + t * (log_min - log_max)).exp()
+        })
+        .collect()
+}
+
+/// Default grid for a dataset: λ_max from the quadratic form, glmnet-style
+/// ratio (1e-3 for n > p, 1e-2 otherwise).
+pub fn default_grid(q: &QuadForm, penalty: Penalty, n_lambdas: usize) -> Vec<f64> {
+    let ratio = if (q.n as usize) > q.p { 1e-3 } else { 1e-2 };
+    lambda_grid(q.lambda_max(penalty.alpha), n_lambdas, ratio)
+}
+
+/// Fit the whole descending path with warm starts; `lambdas` must be
+/// descending for the warm starts to help (asserted in debug builds).
+pub fn fit_path(
+    q: &QuadForm,
+    penalty: Penalty,
+    lambdas: &[f64],
+    settings: CdSettings,
+) -> Vec<CdSolution> {
+    debug_assert!(
+        lambdas.windows(2).all(|w| w[0] >= w[1]),
+        "lambda grid must be descending"
+    );
+    let mut out = Vec::with_capacity(lambdas.len());
+    let mut warm: Option<Vec<f64>> = None;
+    for &lam in lambdas {
+        let sol = solve_cd(q, penalty, lam, warm.as_deref(), settings);
+        warm = Some(sol.beta.clone());
+        out.push(sol);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::solver::cd::kkt_violation;
+    use crate::stats::SuffStats;
+
+    fn qf(rng: &mut Rng, n: usize, p: usize) -> QuadForm {
+        let mut s = SuffStats::new(p);
+        for _ in 0..n {
+            let x: Vec<f64> = (0..p).map(|_| rng.normal()).collect();
+            let y = 2.0 * x[0] + rng.normal();
+            s.push(&x, y);
+        }
+        s.quad_form()
+    }
+
+    #[test]
+    fn grid_shape() {
+        let g = lambda_grid(10.0, 5, 1e-2);
+        assert_eq!(g.len(), 5);
+        assert!((g[0] - 10.0).abs() < 1e-12);
+        assert!((g[4] - 0.1).abs() < 1e-12);
+        assert!(g.windows(2).all(|w| w[0] > w[1]));
+        // log-uniform: constant ratio
+        let r01 = g[1] / g[0];
+        let r23 = g[3] / g[2];
+        assert!((r01 - r23).abs() < 1e-12);
+        assert_eq!(lambda_grid(1.0, 1, 0.5), vec![1.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn grid_rejects_bad_ratio() {
+        lambda_grid(1.0, 3, 1.5);
+    }
+
+    #[test]
+    fn path_every_point_is_kkt_optimal() {
+        let mut rng = Rng::seed_from(1);
+        let q = qf(&mut rng, 250, 8);
+        let grid = default_grid(&q, Penalty::lasso(), 20);
+        let path = fit_path(&q, Penalty::lasso(), &grid, CdSettings::default());
+        assert_eq!(path.len(), 20);
+        for (sol, &lam) in path.iter().zip(&grid) {
+            let v = kkt_violation(&q, Penalty::lasso(), lam, &sol.beta);
+            assert!(v < 1e-6, "lam={lam}: kkt {v}");
+        }
+        // first grid point (λ_max) must be the null model
+        assert_eq!(path[0].n_active, 0);
+        // last grid point should be dense-ish (small λ)
+        assert!(path.last().unwrap().n_active >= 1);
+    }
+
+    #[test]
+    fn warm_path_cheaper_than_cold_fits() {
+        let mut rng = Rng::seed_from(2);
+        let q = qf(&mut rng, 400, 24);
+        let grid = default_grid(&q, Penalty::lasso(), 30);
+        let warm_total: usize = fit_path(&q, Penalty::lasso(), &grid, CdSettings::default())
+            .iter()
+            .map(|s| s.sweeps)
+            .sum();
+        let cold_total: usize = grid
+            .iter()
+            .map(|&l| {
+                solve_cd(&q, Penalty::lasso(), l, None, CdSettings::default()).sweeps
+            })
+            .sum();
+        assert!(
+            warm_total <= cold_total,
+            "warm {warm_total} should not exceed cold {cold_total}"
+        );
+    }
+}

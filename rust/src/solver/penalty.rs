@@ -1,0 +1,114 @@
+//! Penalty parameterization: p_λ(β) = λ·(α‖β‖₁ + ½(1−α)‖β‖₂²).
+//!
+//! α = 1 is the Lasso, α = 0 Ridge, 0 < α < 1 Elastic-net — the three
+//! families the paper's abstract names.  λ itself is selected by CV
+//! ([`crate::cv`]); the [`Penalty`] here fixes the *family* (α).
+
+/// Elastic-net mixing parameter wrapper with the named special cases.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Penalty {
+    /// mixing α ∈ [0, 1]: 1 = lasso, 0 = ridge
+    pub alpha: f64,
+}
+
+impl Penalty {
+    pub fn lasso() -> Self {
+        Penalty { alpha: 1.0 }
+    }
+
+    pub fn ridge() -> Self {
+        Penalty { alpha: 0.0 }
+    }
+
+    pub fn elastic_net(alpha: f64) -> Self {
+        assert!(
+            (0.0..=1.0).contains(&alpha),
+            "elastic-net alpha must be in [0,1], got {alpha}"
+        );
+        Penalty { alpha }
+    }
+
+    pub fn is_lasso(&self) -> bool {
+        self.alpha == 1.0
+    }
+
+    pub fn is_ridge(&self) -> bool {
+        self.alpha == 0.0
+    }
+
+    /// Penalty value λ·(α‖β‖₁ + ½(1−α)‖β‖₂²).
+    pub fn value(&self, lambda: f64, beta: &[f64]) -> f64 {
+        let l1: f64 = beta.iter().map(|b| b.abs()).sum();
+        let l2sq: f64 = beta.iter().map(|b| b * b).sum();
+        lambda * (self.alpha * l1 + 0.5 * (1.0 - self.alpha) * l2sq)
+    }
+
+    /// Human-readable family name.
+    pub fn family(&self) -> &'static str {
+        if self.is_lasso() {
+            "lasso"
+        } else if self.is_ridge() {
+            "ridge"
+        } else {
+            "elastic-net"
+        }
+    }
+}
+
+impl Default for Penalty {
+    fn default() -> Self {
+        Penalty::lasso()
+    }
+}
+
+/// Soft-thresholding operator S(z, γ) = sign(z)·max(|z|−γ, 0) — the scalar
+/// core of every coordinate update.
+#[inline]
+pub fn soft_threshold(z: f64, gamma: f64) -> f64 {
+    if z > gamma {
+        z - gamma
+    } else if z < -gamma {
+        z + gamma
+    } else {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn families() {
+        assert!(Penalty::lasso().is_lasso());
+        assert!(Penalty::ridge().is_ridge());
+        assert_eq!(Penalty::elastic_net(0.5).family(), "elastic-net");
+        assert_eq!(Penalty::lasso().family(), "lasso");
+        assert_eq!(Penalty::ridge().family(), "ridge");
+    }
+
+    #[test]
+    #[should_panic]
+    fn alpha_out_of_range_panics() {
+        Penalty::elastic_net(1.5);
+    }
+
+    #[test]
+    fn penalty_values() {
+        let b = [1.0, -2.0];
+        assert_eq!(Penalty::lasso().value(2.0, &b), 6.0); // 2·(1+2)
+        assert_eq!(Penalty::ridge().value(2.0, &b), 5.0); // 2·0.5·5
+        let en = Penalty::elastic_net(0.5).value(2.0, &b);
+        assert!((en - (2.0 * (0.5 * 3.0 + 0.25 * 5.0))).abs() < 1e-12);
+    }
+
+    #[test]
+    fn soft_threshold_cases() {
+        assert_eq!(soft_threshold(3.0, 1.0), 2.0);
+        assert_eq!(soft_threshold(-3.0, 1.0), -2.0);
+        assert_eq!(soft_threshold(0.5, 1.0), 0.0);
+        assert_eq!(soft_threshold(-0.5, 1.0), 0.0);
+        assert_eq!(soft_threshold(1.0, 1.0), 0.0);
+        assert_eq!(soft_threshold(2.0, 0.0), 2.0);
+    }
+}

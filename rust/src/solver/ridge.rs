@@ -1,0 +1,108 @@
+//! Closed-form ridge regression — the α = 0 fast path and an exactness
+//! cross-check for the iterative solver.
+//!
+//! In standardized coordinates the ridge solution is (G + λI)⁻¹ c, solved
+//! by Cholesky in O(p³) once per λ (no iteration, no data pass).
+
+use crate::stats::suffstats::QuadForm;
+
+use super::linalg::{chol_solve, cholesky};
+
+/// Solve ridge for one λ. Errors if G + λI is not PD (can only happen at
+/// λ = 0 with exactly collinear columns).
+pub fn solve_ridge(q: &QuadForm, lambda: f64) -> Result<Vec<f64>, String> {
+    assert!(lambda >= 0.0);
+    let p = q.p;
+    let mut a = q.gram.clone();
+    for i in 0..p {
+        a[i * p + i] += lambda;
+    }
+    let l = cholesky(&a, p, 0.0)?;
+    Ok(chol_solve(&l, &q.xty))
+}
+
+/// Solve ridge for a whole λ grid, reusing nothing but the factor structure
+/// (each λ shifts the diagonal, so each needs its own factorization; the
+/// point of this helper is the shared allocation and the error context).
+pub fn solve_ridge_path(q: &QuadForm, lambdas: &[f64]) -> Result<Vec<Vec<f64>>, String> {
+    lambdas
+        .iter()
+        .map(|&l| solve_ridge(q, l).map_err(|e| format!("lambda={l}: {e}")))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::solver::{solve_cd, CdSettings, Penalty};
+    use crate::stats::SuffStats;
+
+    fn qf(rng: &mut Rng, n: usize, p: usize) -> QuadForm {
+        let mut s = SuffStats::new(p);
+        for _ in 0..n {
+            let x: Vec<f64> = (0..p).map(|_| rng.normal()).collect();
+            let y = x[0] * 2.0 - x[p - 1] + rng.normal();
+            s.push(&x, y);
+        }
+        s.quad_form()
+    }
+
+    #[test]
+    fn matches_cd_ridge() {
+        let mut rng = Rng::seed_from(1);
+        let q = qf(&mut rng, 300, 6);
+        for lam in [0.01, 0.1, 1.0, 10.0] {
+            let closed = solve_ridge(&q, lam).unwrap();
+            let iter = solve_cd(&q, Penalty::ridge(), lam, None, CdSettings::default());
+            for j in 0..6 {
+                assert!(
+                    (closed[j] - iter.beta[j]).abs() < 1e-7,
+                    "lam={lam} j={j}: {} vs {}",
+                    closed[j],
+                    iter.beta[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn shrinks_toward_zero_as_lambda_grows() {
+        let mut rng = Rng::seed_from(2);
+        let q = qf(&mut rng, 200, 4);
+        let mut last_norm = f64::INFINITY;
+        for lam in [0.01, 0.1, 1.0, 10.0, 100.0] {
+            let b = solve_ridge(&q, lam).unwrap();
+            let norm: f64 = b.iter().map(|x| x * x).sum::<f64>().sqrt();
+            assert!(norm < last_norm, "ridge norm must shrink");
+            last_norm = norm;
+        }
+        assert!(last_norm < 0.1);
+    }
+
+    #[test]
+    fn path_helper_matches_single_solves() {
+        let mut rng = Rng::seed_from(3);
+        let q = qf(&mut rng, 150, 3);
+        let lambdas = [0.5, 0.05];
+        let path = solve_ridge_path(&q, &lambdas).unwrap();
+        for (i, &lam) in lambdas.iter().enumerate() {
+            let single = solve_ridge(&q, lam).unwrap();
+            assert_eq!(path[i], single);
+        }
+    }
+
+    #[test]
+    fn collinear_columns_fail_only_at_lambda_zero() {
+        // x1 == x0 exactly → G is singular; λ>0 regularizes it.
+        let mut rng = Rng::seed_from(4);
+        let mut s = SuffStats::new(2);
+        for _ in 0..50 {
+            let a = rng.normal();
+            s.push(&[a, a], a + rng.normal() * 0.01);
+        }
+        let q = s.quad_form();
+        assert!(solve_ridge(&q, 0.0).is_err());
+        assert!(solve_ridge(&q, 0.1).is_ok());
+    }
+}

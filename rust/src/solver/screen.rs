@@ -1,0 +1,186 @@
+//! Sure-independence screening (Fan & Lv 2008) from one-pass statistics —
+//! the paper's §4 future work ("how to deal with more features").
+//!
+//! The marginal correlation of every predictor with y is already inside
+//! statistic (10): corr_j = Sxy_j / √(Sxx_jj · Syy).  So screening costs
+//! O(p) driver work on the SAME single pass: rank |corr_j|, keep the top
+//! m (rule of thumb m = n/log n, capped), fit the penalized model on the
+//! m×m sub-Gram, and embed β̂ back into R^p.  This lifts the practical
+//! envelope from "p² doubles fit in driver memory" to "m² fit in memory,
+//! p bounded only by the O(p) mapper row cost".
+
+use anyhow::Result;
+
+use crate::model::fitted::FittedModel;
+use crate::stats::SuffStats;
+
+use super::cd::{solve_cd, CdSettings};
+use super::penalty::Penalty;
+
+/// Screening outcome: which predictors survived and why.
+#[derive(Debug, Clone)]
+pub struct ScreenReport {
+    /// selected predictor indices, ascending
+    pub selected: Vec<usize>,
+    /// |marginal correlation| per original predictor
+    pub abs_corr: Vec<f64>,
+    /// the cutoff that applied
+    pub threshold: f64,
+}
+
+/// |marginal correlation with y| for every predictor, from statistics only.
+pub fn marginal_abs_correlations(stats: &SuffStats) -> Vec<f64> {
+    let p = stats.p();
+    let syy = stats.syy();
+    (0..p)
+        .map(|j| {
+            let sxx = stats.sxx(j, j);
+            if sxx > 0.0 && syy > 0.0 {
+                (stats.sxy(j) / (sxx * syy).sqrt()).abs()
+            } else {
+                0.0
+            }
+        })
+        .collect()
+}
+
+/// The SIS default working-model size: n/log(n), clamped to [1, p].
+pub fn default_keep(n: u64, p: usize) -> usize {
+    let n = n.max(2) as f64;
+    ((n / n.ln()).floor() as usize).clamp(1, p)
+}
+
+/// Keep the `m` predictors with the largest |marginal correlation|.
+pub fn screen_top_m(stats: &SuffStats, m: usize) -> ScreenReport {
+    let abs_corr = marginal_abs_correlations(stats);
+    let p = stats.p();
+    let m = m.clamp(1, p);
+    let mut order: Vec<usize> = (0..p).collect();
+    order.sort_by(|&a, &b| abs_corr[b].partial_cmp(&abs_corr[a]).unwrap());
+    let mut selected: Vec<usize> = order[..m].to_vec();
+    selected.sort_unstable();
+    let threshold = abs_corr[*order.get(m - 1).unwrap()];
+    ScreenReport { selected, abs_corr, threshold }
+}
+
+/// Screen to `m` predictors (None ⇒ SIS default n/log n), fit the
+/// penalized model on the sub-Gram, and embed into a full-length model.
+pub fn fit_screened(
+    stats: &SuffStats,
+    penalty: Penalty,
+    lambda: f64,
+    m: Option<usize>,
+    settings: CdSettings,
+) -> Result<(FittedModel, ScreenReport)> {
+    let m = m.unwrap_or_else(|| default_keep(stats.count(), stats.p()));
+    let report = screen_top_m(stats, m);
+    let q = stats.quad_form_subset(&report.selected);
+    let sol = solve_cd(&q, penalty, lambda, None, settings);
+    let (alpha, beta_sub) = q.to_original_scale(&sol.beta);
+    let mut beta = vec![0.0; stats.p()];
+    for (a, &j) in report.selected.iter().enumerate() {
+        beta[j] = beta_sub[a];
+    }
+    Ok((
+        FittedModel { alpha, beta, lambda, penalty, n_train: stats.count() },
+        report,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthSpec};
+
+    fn stats_for(spec: &SynthSpec) -> (SuffStats, crate::data::Dataset) {
+        let d = generate(spec);
+        let mut s = SuffStats::new(spec.p);
+        for i in 0..d.n() {
+            s.push(d.row(i), d.y[i]);
+        }
+        (s, d)
+    }
+
+    #[test]
+    fn screening_keeps_the_true_support() {
+        // independent design: SIS provably keeps the signal features
+        let spec = SynthSpec::sparse_linear(4000, 60, 0.1, 3);
+        let (s, _) = stats_for(&spec);
+        let truth = spec.true_beta();
+        let report = screen_top_m(&s, 12);
+        for j in 0..60 {
+            if truth[j] != 0.0 {
+                assert!(
+                    report.selected.contains(&j),
+                    "signal feature {j} screened out: {:?}",
+                    report.selected
+                );
+            }
+        }
+        assert_eq!(report.selected.len(), 12);
+        assert!(report.selected.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn screened_fit_matches_full_fit_when_screen_is_loose() {
+        // keeping all p features must reproduce the unscreened model
+        use crate::solver::{solve_cd, CdSettings};
+        let spec = SynthSpec::sparse_linear(2000, 10, 0.3, 7);
+        let (s, _) = stats_for(&spec);
+        let (screened, report) =
+            fit_screened(&s, Penalty::lasso(), 0.05, Some(10), CdSettings::default()).unwrap();
+        assert_eq!(report.selected, (0..10).collect::<Vec<_>>());
+        let q = s.quad_form();
+        let sol = solve_cd(&q, Penalty::lasso(), 0.05, None, CdSettings::default());
+        let (alpha, beta) = q.to_original_scale(&sol.beta);
+        assert!((screened.alpha - alpha).abs() < 1e-10);
+        for j in 0..10 {
+            assert!((screened.beta[j] - beta[j]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn works_when_p_exceeds_n() {
+        // p > n: the full Gram is singular, but screen + lasso still fits
+        let spec = SynthSpec::sparse_linear(150, 300, 0.02, 11);
+        let (s, d) = stats_for(&spec);
+        let m = default_keep(s.count(), s.p());
+        assert!(m < 300, "default keep must shrink the problem, m={m}");
+        let (model, _) =
+            fit_screened(&s, Penalty::lasso(), 0.1, None, CdSettings::default()).unwrap();
+        assert_eq!(model.p(), 300);
+        assert!(model.nnz() <= m);
+        // in-sample mse should beat the null model comfortably
+        let null_mse = s.syy() / s.count() as f64;
+        assert!(d.mse(model.alpha, &model.beta) < null_mse * 0.8);
+    }
+
+    #[test]
+    fn default_keep_rule() {
+        assert_eq!(default_keep(2718, 10_000), (2718.0_f64 / 2718.0_f64.ln()) as usize);
+        assert_eq!(default_keep(1000, 5), 5); // capped at p
+        assert!(default_keep(2, 100) >= 1);
+    }
+
+    #[test]
+    fn correlations_match_direct_computation() {
+        let spec = SynthSpec::sparse_linear(1000, 4, 0.5, 13);
+        let (s, d) = stats_for(&spec);
+        let got = marginal_abs_correlations(&s);
+        let n = d.n() as f64;
+        let ybar = d.y.iter().sum::<f64>() / n;
+        for j in 0..4 {
+            let xbar = (0..d.n()).map(|i| d.row(i)[j]).sum::<f64>() / n;
+            let (mut sxy, mut sxx, mut syy) = (0.0, 0.0, 0.0);
+            for i in 0..d.n() {
+                let dx = d.row(i)[j] - xbar;
+                let dy = d.y[i] - ybar;
+                sxy += dx * dy;
+                sxx += dx * dx;
+                syy += dy * dy;
+            }
+            let want = (sxy / (sxx * syy).sqrt()).abs();
+            assert!((got[j] - want).abs() < 1e-9, "j={j}: {} vs {want}", got[j]);
+        }
+    }
+}

@@ -1,0 +1,103 @@
+//! Neumaier-compensated summation — a correctly-rounded-ish scalar
+//! accumulator used where long reductions feed the statistics.
+
+/// Kahan–Neumaier compensated accumulator.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Kahan {
+    sum: f64,
+    comp: f64,
+}
+
+impl Kahan {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn add(&mut self, x: f64) {
+        let t = self.sum + x;
+        if self.sum.abs() >= x.abs() {
+            self.comp += (self.sum - t) + x;
+        } else {
+            self.comp += (x - t) + self.sum;
+        }
+        self.sum = t;
+    }
+
+    #[inline]
+    pub fn value(&self) -> f64 {
+        self.sum + self.comp
+    }
+
+    /// Merge another compensated accumulator into this one.
+    pub fn merge(&mut self, other: &Kahan) {
+        self.add(other.sum);
+        self.add(other.comp);
+    }
+}
+
+/// Compensated sum of a slice.
+pub fn ksum(xs: &[f64]) -> f64 {
+    let mut k = Kahan::new();
+    for &x in xs {
+        k.add(x);
+    }
+    k.value()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn recovers_cancellation_naive_loses() {
+        // 1 + 1e100 - 1e100 + ... pattern where naive summation returns 0.
+        let xs = [1.0, 1e100, 1.0, -1e100];
+        let naive: f64 = xs.iter().sum();
+        assert_eq!(naive, 0.0);
+        assert_eq!(ksum(&xs), 2.0);
+    }
+
+    #[test]
+    fn matches_exact_on_ill_conditioned_stream() {
+        // alternating large/small values; compare against i128 exact sum of
+        // scaled integers.
+        let mut rng = Rng::seed_from(17);
+        let xs: Vec<f64> = (0..10_000)
+            .map(|i| {
+                let base = if i % 2 == 0 { 1e12 } else { -1e12 };
+                base + (rng.below(1000) as f64)
+            })
+            .collect();
+        let exact: f64 = {
+            // exact via integer arithmetic (all values are integers here)
+            let s: i128 = xs.iter().map(|&x| x as i128).sum();
+            s as f64
+        };
+        assert_eq!(ksum(&xs), exact);
+    }
+
+    #[test]
+    fn merge_equals_concatenated() {
+        let mut rng = Rng::seed_from(5);
+        let xs: Vec<f64> = (0..1000).map(|_| rng.normal() * 1e8).collect();
+        let (a, b) = xs.split_at(400);
+        let mut ka = Kahan::new();
+        for &x in a {
+            ka.add(x);
+        }
+        let mut kb = Kahan::new();
+        for &x in b {
+            kb.add(x);
+        }
+        ka.merge(&kb);
+        assert!((ka.value() - ksum(&xs)).abs() <= 1e-6 * ksum(&xs).abs().max(1.0));
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        assert_eq!(Kahan::new().value(), 0.0);
+        assert_eq!(ksum(&[]), 0.0);
+    }
+}

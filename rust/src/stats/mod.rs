@@ -1,0 +1,32 @@
+//! The paper's §2.1 substrate: robust, additive, distributable statistics.
+//!
+//! The whole one-pass claim rests on statistic (10) being *additive*:
+//!
+//! ```text
+//! n, YᵀY, XᵀY, Ȳ, {X̄ᵢ}, XᵀX
+//! ```
+//!
+//! Naive Σx / Σx² aggregation overflows and cancels catastrophically at
+//! scale (the paper's explicit warning), so the shippable representation is
+//! the *centered* one: per-chunk `(n, mean, M2)` where `M2` is the centered
+//! scatter matrix, merged pairwise with Chan's update (paper eq. 14).
+//!
+//! Module map:
+//! * [`kahan`] — compensated scalar summation (building block + comparator).
+//! * [`welford`] — univariate streaming mean/M2 (paper eq. 11–13 in 1-D).
+//! * [`moments`] — the p-dimensional generalization: push rows, merge
+//!   chunks, *subtract* chunks (what makes leave-one-fold-out free).
+//! * [`suffstats`] — [`moments::Moments`] specialized to z = [x | y] with the
+//!   regression views: centered XᵀX, Xᵀy, Σ(y−ȳ)², standardization (D),
+//!   and the standardized quadratic form the solver consumes.
+//! * [`naive`] — the textbook raw-sum accumulator, kept as the numerically
+//!   fragile comparator for experiment T4.
+
+pub mod kahan;
+pub mod moments;
+pub mod naive;
+pub mod suffstats;
+pub mod welford;
+
+pub use moments::Moments;
+pub use suffstats::SuffStats;

@@ -1,0 +1,740 @@
+//! p-dimensional streaming moments — the paper's §2.1 in full generality.
+//!
+//! State per chunk: `(n, mean ∈ R^d, M2 ∈ R^{d×d})` where `M2` is the
+//! *centered* scatter matrix Σ(zᵢ−z̄)(zᵢ−z̄)ᵀ, stored packed
+//! upper-triangular (symmetry ⇒ half the memory, and the d(d+1)/2 layout is
+//! what the mapper hot loop streams through linearly).
+//!
+//! * [`Moments::push`] — mapper-side single-row update (paper eq. 12/15).
+//! * [`Moments::merge`] — combiner/reducer pairwise merge (paper eq. 13/14).
+//! * [`Moments::sub`] — the *inverse* of merge: given the total and one
+//!   chunk, recover the complement.  This is what makes k-fold CV free:
+//!   `train_i = total − s_i` costs O(d²), not another data pass.
+//! * [`Moments::from_block`] — ingest a centered block produced by the AOT
+//!   chunk_stats artifact (L2/L1 path).
+
+/// Blocks below this many rows use the scalar rank-1 update path.
+pub const BLOCK_MIN_ROWS: usize = 16;
+/// Transpose-buffer budget for the blocked path (f64 elements ≈ 2 MiB).
+const BLOCK_BUF_ELEMS: usize = 256 * 1024;
+
+/// Packed-upper-triangular index for (i, j) with i ≤ j in dimension d.
+#[inline]
+pub fn tri_idx(d: usize, i: usize, j: usize) -> usize {
+    debug_assert!(i <= j && j < d);
+    // row-i offset = Σ_{k<i} (d−k) = i(2d−i+1)/2  (underflow-safe form)
+    i * (2 * d - i + 1) / 2 + (j - i)
+}
+
+/// Length of the packed upper triangle for dimension d.
+#[inline]
+pub fn tri_len(d: usize) -> usize {
+    d * (d + 1) / 2
+}
+
+/// Streaming (n, mean, M2) accumulator over R^d.
+///
+/// Also supports *weighted* observations ([`Moments::push_weighted`]): the
+/// weighted forms of eq. (12)–(15) replace the count n by the total weight
+/// W = Σwᵢ; a weight-w row is exactly equivalent to w repeated unit-weight
+/// rows (property-tested).  `count()` still reports raw rows; `weight()`
+/// reports W (== n when nothing was weighted).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Moments {
+    d: usize,
+    n: u64,
+    /// total observation weight W (== n unless weighted pushes were used)
+    w: f64,
+    mean: Vec<f64>,
+    /// packed upper-triangular centered scatter Σwᵢ(z−z̄)(z−z̄)ᵀ
+    m2: Vec<f64>,
+    /// scratch for push (not part of the value)
+    scratch: Vec<f64>,
+}
+
+impl Moments {
+    pub fn new(d: usize) -> Self {
+        Moments {
+            d,
+            n: 0,
+            w: 0.0,
+            mean: vec![0.0; d],
+            m2: vec![0.0; tri_len(d)],
+            scratch: vec![0.0; d],
+        }
+    }
+
+    /// Reconstruct from chunk output (e.g. the AOT chunk_stats artifact):
+    /// `m2_full` is the dense d×d centered scatter, row-major.
+    pub fn from_block(n: u64, mean: Vec<f64>, m2_full: &[f64]) -> Self {
+        let d = mean.len();
+        assert_eq!(m2_full.len(), d * d, "m2 must be d*d row-major");
+        let mut m2 = vec![0.0; tri_len(d)];
+        for i in 0..d {
+            for j in i..d {
+                // average the two symmetric entries — the artifact computes
+                // them identically up to f32 rounding.
+                m2[tri_idx(d, i, j)] = 0.5 * (m2_full[i * d + j] + m2_full[j * d + i]);
+            }
+        }
+        Moments { d, n, w: n as f64, mean, m2, scratch: vec![0.0; d] }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// Total observation weight W = Σwᵢ (== count() when unweighted).
+    pub fn weight(&self) -> f64 {
+        self.w
+    }
+
+    pub fn mean(&self) -> &[f64] {
+        &self.mean
+    }
+
+    /// Centered scatter entry M2\[i,j\] (either triangle).
+    #[inline]
+    pub fn m2_at(&self, i: usize, j: usize) -> f64 {
+        let (i, j) = if i <= j { (i, j) } else { (j, i) };
+        self.m2[tri_idx(self.d, i, j)]
+    }
+
+    /// Population covariance entry (paper's 1/n convention; weighted: 1/W).
+    pub fn cov_pop(&self, i: usize, j: usize) -> f64 {
+        if self.w == 0.0 {
+            0.0
+        } else {
+            self.m2_at(i, j) / self.w
+        }
+    }
+
+    /// §2.1 final remark: recover the *raw* cross moment Σ wzᵢzⱼ from the
+    /// centered representation: Σ wzᵢzⱼ = M2\[i,j\] + W·z̄ᵢ·z̄ⱼ.
+    pub fn raw_cross(&self, i: usize, j: usize) -> f64 {
+        self.m2_at(i, j) + self.w * self.mean[i] * self.mean[j]
+    }
+
+    /// Dense row-major copy of the centered scatter.
+    pub fn m2_full(&self) -> Vec<f64> {
+        let d = self.d;
+        let mut out = vec![0.0; d * d];
+        for i in 0..d {
+            for j in i..d {
+                let v = self.m2[tri_idx(d, i, j)];
+                out[i * d + j] = v;
+                out[j * d + i] = v;
+            }
+        }
+        out
+    }
+
+    /// Mapper-side update (paper eq. 12 for the mean, eq. 15 for M2).
+    pub fn push(&mut self, row: &[f64]) {
+        self.push_weighted(row, 1.0);
+    }
+
+    /// Weighted single-observation update: exactly equivalent to pushing
+    /// the row `weight` times (for integer weights; property-tested).
+    /// Replaces the count n by the running total weight W in eq. 12/15.
+    pub fn push_weighted(&mut self, row: &[f64], weight: f64) {
+        assert_eq!(row.len(), self.d, "row dimension mismatch");
+        assert!(weight > 0.0 && weight.is_finite(), "weight must be positive");
+        self.n += 1;
+        self.w += weight;
+        let frac = weight / self.w;
+        // scratch = delta = x − mean_old; mean += delta·w/W
+        for i in 0..self.d {
+            let delta = row[i] - self.mean[i];
+            self.scratch[i] = delta;
+            self.mean[i] += delta * frac;
+        }
+        // M2 += w · delta ⊗ (x − mean_new) = w(1 − w/W) · delta ⊗ delta
+        let scale = weight * (1.0 - frac);
+        let d = self.d;
+        let mut k = 0;
+        for i in 0..d {
+            let di = self.scratch[i] * scale;
+            // row i of the packed triangle is contiguous: j = i..d
+            let m2row = &mut self.m2[k..k + (d - i)];
+            let deltas = &self.scratch[i..d];
+            for (m, &dj) in m2row.iter_mut().zip(deltas) {
+                *m += di * dj;
+            }
+            k += d - i;
+        }
+    }
+
+    /// Push a dense row-major block of rows (the CPU mapper fast path).
+    ///
+    /// Blocks of ≥ [`BLOCK_MIN_ROWS`] rows take the cache-blocked path:
+    /// compute the block's own (mean, centered scatter) with contiguous
+    /// column dot products (transpose once, then each scatter entry is a
+    /// unit-stride dot — SIMD-friendly, arithmetic intensity ∝ block rows),
+    /// then fold it in with Chan's merge (eq. 14).  This is the same
+    /// two-level scheme the L1 Pallas kernel implements on the TPU side,
+    /// and it is numerically *stronger* than row-wise streaming (block
+    /// means are exact to one reduction).  Small tails fall back to the
+    /// scalar rank-1 path.
+    pub fn push_block(&mut self, rows: &[f64]) {
+        assert_eq!(rows.len() % self.d, 0, "block not a multiple of d");
+        let d = self.d;
+        let n = rows.len() / d;
+        if n < BLOCK_MIN_ROWS {
+            for row in rows.chunks_exact(d) {
+                self.push(row);
+            }
+            return;
+        }
+        // process in bounded sub-blocks so the transposed block (d×b
+        // doubles) stays cache-resident across its d²/2 column-pair reads
+        let max_rows = (BLOCK_BUF_ELEMS / d).clamp(BLOCK_MIN_ROWS, 256);
+        for chunk in rows.chunks(max_rows * d) {
+            let b = chunk.len() / d;
+            if b < BLOCK_MIN_ROWS {
+                for row in chunk.chunks_exact(d) {
+                    self.push(row);
+                }
+                continue;
+            }
+            let block = Self::block_moments(d, b, chunk);
+            self.merge(&block);
+        }
+    }
+
+    /// (n, mean, M2) of one dense block.
+    ///
+    /// Exact block mean first, then the centered scatter as 4-row-blocked
+    /// outer-product updates: each packed-m2 element is touched once per
+    /// FOUR rows (4× the arithmetic intensity of the streaming rank-1
+    /// path), with all five streams (m2 row + 4 centered rows) contiguous.
+    fn block_moments(d: usize, b: usize, chunk: &[f64]) -> Moments {
+        let bf = b as f64;
+        let mut mean = vec![0.0; d];
+        for row in chunk.chunks_exact(d) {
+            for i in 0..d {
+                mean[i] += row[i];
+            }
+        }
+        for m in &mut mean {
+            *m /= bf;
+        }
+        let mut m2 = vec![0.0; tri_len(d)];
+        let mut cbuf = vec![0.0; 4 * d];
+        let mut quads = chunk.chunks_exact(4 * d);
+        for quad in quads.by_ref() {
+            for r in 0..4 {
+                for i in 0..d {
+                    cbuf[r * d + i] = quad[r * d + i] - mean[i];
+                }
+            }
+            let (c0, rest) = cbuf.split_at(d);
+            let (c1, rest) = rest.split_at(d);
+            let (c2, c3) = rest.split_at(d);
+            let mut k = 0;
+            for i in 0..d {
+                let (a0, a1, a2, a3) = (c0[i], c1[i], c2[i], c3[i]);
+                let m2row = &mut m2[k..k + (d - i)];
+                let (r0, r1, r2, r3) = (&c0[i..], &c1[i..], &c2[i..], &c3[i..]);
+                for (t, m) in m2row.iter_mut().enumerate() {
+                    *m += a0 * r0[t] + a1 * r1[t] + a2 * r2[t] + a3 * r3[t];
+                }
+                k += d - i;
+            }
+        }
+        // tail rows (< 4): centered rank-1 updates
+        for row in quads.remainder().chunks_exact(d) {
+            for i in 0..d {
+                cbuf[i] = row[i] - mean[i];
+            }
+            let mut k = 0;
+            for i in 0..d {
+                let ai = cbuf[i];
+                let m2row = &mut m2[k..k + (d - i)];
+                let ci = &cbuf[i..d];
+                for (m, &cj) in m2row.iter_mut().zip(ci) {
+                    *m += ai * cj;
+                }
+                k += d - i;
+            }
+        }
+        Moments { d, n: b as u64, w: bf, mean, m2, scratch: vec![0.0; d] }
+    }
+
+    /// Combiner/reducer pairwise merge (paper eq. 13 + 14).
+    pub fn merge(&mut self, other: &Moments) {
+        assert_eq!(self.d, other.d, "dimension mismatch in merge");
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            self.n = other.n;
+            self.w = other.w;
+            self.mean.copy_from_slice(&other.mean);
+            self.m2.copy_from_slice(&other.m2);
+            return;
+        }
+        // weighted Chan merge: counts generalize to total weights
+        let (m, n) = (self.w, other.w);
+        let total = m + n;
+        let w_other = n / total;
+        let coef = m * n / total;
+        // scratch = δ = mean_other − mean_self
+        for i in 0..self.d {
+            self.scratch[i] = other.mean[i] - self.mean[i];
+        }
+        let d = self.d;
+        let mut k = 0;
+        for i in 0..d {
+            let ci = coef * self.scratch[i];
+            let m2row = &mut self.m2[k..k + (d - i)];
+            let orow = &other.m2[k..k + (d - i)];
+            let deltas = &self.scratch[i..d];
+            for ((s, &o), &dj) in m2row.iter_mut().zip(orow).zip(deltas) {
+                *s += o + ci * dj;
+            }
+            k += d - i;
+        }
+        for i in 0..d {
+            self.mean[i] += self.scratch[i] * w_other;
+        }
+        self.n += other.n;
+        self.w += other.w;
+    }
+
+    /// The inverse of [`Moments::merge`]: given `self` = total and `part` ⊂ total,
+    /// return `total − part` (the statistics of the complement chunk).
+    ///
+    /// This is the CV phase's `train_i = Σ_{j≠i} s_j` computed as
+    /// `total − s_i` in O(d²) — no data pass, no re-aggregation.
+    pub fn sub(&self, part: &Moments) -> Moments {
+        assert_eq!(self.d, part.d, "dimension mismatch in sub");
+        assert!(part.n <= self.n, "part larger than total");
+        let rest_n = self.n - part.n;
+        if rest_n == 0 {
+            return Moments::new(self.d);
+        }
+        if part.n == 0 {
+            return self.clone();
+        }
+        // weighted complement: counts generalize to total weights
+        let (nt, np) = (self.w, part.w);
+        let nr = nt - np;
+        assert!(nr > 0.0, "part weight exceeds total weight");
+        let d = self.d;
+        let mut mean = vec![0.0; d];
+        for i in 0..d {
+            mean[i] = (nt * self.mean[i] - np * part.mean[i]) / nr;
+        }
+        // δ = mean_part − mean_rest; M2_rest = M2_tot − M2_part − (np·nr/nt)·δδᵀ
+        let mut delta = vec![0.0; d];
+        for i in 0..d {
+            delta[i] = part.mean[i] - mean[i];
+        }
+        let coef = np * nr / nt;
+        let mut m2 = vec![0.0; tri_len(d)];
+        let mut k = 0;
+        for i in 0..d {
+            let ci = coef * delta[i];
+            for j in i..d {
+                m2[k] = self.m2[k] - part.m2[k] - ci * delta[j];
+                k += 1;
+            }
+        }
+        Moments { d, n: rest_n, w: nr, mean, m2, scratch: vec![0.0; d] }
+    }
+
+    /// True if no rows have been folded in.
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::util::prop;
+
+    fn random_rows(rng: &mut Rng, n: usize, d: usize, mean: f64, sd: f64) -> Vec<Vec<f64>> {
+        (0..n)
+            .map(|_| (0..d).map(|_| rng.normal_ms(mean, sd)).collect())
+            .collect()
+    }
+
+    fn two_pass(rows: &[Vec<f64>]) -> (Vec<f64>, Vec<f64>) {
+        let n = rows.len() as f64;
+        let d = rows[0].len();
+        let mut mean = vec![0.0; d];
+        for r in rows {
+            for i in 0..d {
+                mean[i] += r[i];
+            }
+        }
+        for m in &mut mean {
+            *m /= n;
+        }
+        let mut m2 = vec![0.0; d * d];
+        for r in rows {
+            for i in 0..d {
+                for j in 0..d {
+                    m2[i * d + j] += (r[i] - mean[i]) * (r[j] - mean[j]);
+                }
+            }
+        }
+        (mean, m2)
+    }
+
+    #[test]
+    fn tri_indexing_bijective() {
+        let d = 7;
+        let mut seen = vec![false; tri_len(d)];
+        for i in 0..d {
+            for j in i..d {
+                let k = tri_idx(d, i, j);
+                assert!(!seen[k], "collision at ({i},{j})");
+                seen[k] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn push_matches_two_pass() {
+        let mut rng = Rng::seed_from(1);
+        let rows = random_rows(&mut rng, 500, 6, 3.0, 2.0);
+        let mut m = Moments::new(6);
+        for r in &rows {
+            m.push(r);
+        }
+        let (mean, m2) = two_pass(&rows);
+        for i in 0..6 {
+            assert!((m.mean()[i] - mean[i]).abs() < 1e-9);
+            for j in 0..6 {
+                assert!(
+                    (m.m2_at(i, j) - m2[i * 6 + j]).abs() < 1e-7,
+                    "m2[{i},{j}]"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn merge_equals_whole_property() {
+        prop::quick(|rng, _| {
+            let d = 1 + rng.below(6);
+            let n = 4 + rng.below(120);
+            let rows = random_rows(rng, n, d, 100.0, 5.0);
+            let cut = 1 + rng.below(n - 2);
+            let mut a = Moments::new(d);
+            for r in &rows[..cut] {
+                a.push(r);
+            }
+            let mut b = Moments::new(d);
+            for r in &rows[cut..] {
+                b.push(r);
+            }
+            a.merge(&b);
+            let mut whole = Moments::new(d);
+            for r in &rows {
+                whole.push(r);
+            }
+            assert_eq!(a.count(), whole.count());
+            for i in 0..d {
+                assert!((a.mean()[i] - whole.mean()[i]).abs() < 1e-8);
+                for j in i..d {
+                    let w = whole.m2_at(i, j);
+                    assert!(
+                        (a.m2_at(i, j) - w).abs() <= 1e-8 * w.abs().max(1.0),
+                        "({i},{j}): {} vs {w}",
+                        a.m2_at(i, j)
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn merge_associative_many_chunks() {
+        prop::quick(|rng, _| {
+            let d = 2 + rng.below(4);
+            let k = 2 + rng.below(6);
+            let mut whole = Moments::new(d);
+            let mut left_fold = Moments::new(d);
+            let mut chunks = Vec::new();
+            for _ in 0..k {
+                let nrows = 5 + rng.below(40);
+                let rows = random_rows(rng, nrows, d, -7.0, 3.0);
+                let mut c = Moments::new(d);
+                for r in &rows {
+                    c.push(r);
+                    whole.push(r);
+                }
+                chunks.push(c);
+            }
+            // left fold
+            for c in &chunks {
+                left_fold.merge(c);
+            }
+            // balanced tree fold
+            let mut level = chunks;
+            while level.len() > 1 {
+                let mut next = Vec::new();
+                for pair in level.chunks(2) {
+                    let mut acc = pair[0].clone();
+                    if pair.len() == 2 {
+                        acc.merge(&pair[1]);
+                    }
+                    next.push(acc);
+                }
+                level = next;
+            }
+            let tree = &level[0];
+            for i in 0..d {
+                for j in i..d {
+                    let w = whole.m2_at(i, j);
+                    assert!((left_fold.m2_at(i, j) - w).abs() <= 1e-7 * w.abs().max(1.0));
+                    assert!((tree.m2_at(i, j) - w).abs() <= 1e-7 * w.abs().max(1.0));
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn sub_inverts_merge_property() {
+        prop::quick(|rng, _| {
+            let d = 1 + rng.below(5);
+            let (na, nb) = (3 + rng.below(50), 3 + rng.below(50));
+            let rows_a = random_rows(rng, na, d, 10.0, 4.0);
+            let rows_b = random_rows(rng, nb, d, -2.0, 1.0);
+            let mut a = Moments::new(d);
+            for r in &rows_a {
+                a.push(r);
+            }
+            let mut b = Moments::new(d);
+            for r in &rows_b {
+                b.push(r);
+            }
+            let mut total = a.clone();
+            total.merge(&b);
+            let rest = total.sub(&a); // should equal b
+            assert_eq!(rest.count(), b.count());
+            for i in 0..d {
+                assert!((rest.mean()[i] - b.mean()[i]).abs() < 1e-7);
+                for j in i..d {
+                    assert!(
+                        (rest.m2_at(i, j) - b.m2_at(i, j)).abs()
+                            <= 1e-7 * b.m2_at(i, j).abs().max(1.0)
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn sub_edge_cases() {
+        let mut rng = Rng::seed_from(4);
+        let rows = random_rows(&mut rng, 30, 3, 0.0, 1.0);
+        let mut total = Moments::new(3);
+        for r in &rows {
+            total.push(r);
+        }
+        // subtracting everything → empty
+        let nothing = total.sub(&total.clone());
+        assert!(nothing.is_empty());
+        // subtracting empty → identity
+        let same = total.sub(&Moments::new(3));
+        assert_eq!(same.count(), total.count());
+        assert_eq!(same.mean(), total.mean());
+    }
+
+    #[test]
+    #[should_panic]
+    fn sub_part_larger_than_total_panics() {
+        let mut small = Moments::new(2);
+        small.push(&[1.0, 2.0]);
+        let mut big = Moments::new(2);
+        for _ in 0..3 {
+            big.push(&[0.0, 0.0]);
+        }
+        let _ = small.sub(&big);
+    }
+
+    #[test]
+    fn from_block_round_trip() {
+        let mut rng = Rng::seed_from(6);
+        let rows = random_rows(&mut rng, 64, 4, 2.0, 1.5);
+        let mut m = Moments::new(4);
+        for r in &rows {
+            m.push(r);
+        }
+        let rebuilt = Moments::from_block(m.count(), m.mean().to_vec(), &m.m2_full());
+        assert_eq!(rebuilt.count(), m.count());
+        for i in 0..4 {
+            for j in i..4 {
+                assert!((rebuilt.m2_at(i, j) - m.m2_at(i, j)).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn raw_cross_recovery() {
+        // §2.1: Σ zᵢzⱼ recoverable from centered form.
+        let mut rng = Rng::seed_from(9);
+        let rows = random_rows(&mut rng, 200, 3, 5.0, 2.0);
+        let mut m = Moments::new(3);
+        for r in &rows {
+            m.push(r);
+        }
+        for i in 0..3 {
+            for j in 0..3 {
+                let raw: f64 = rows.iter().map(|r| r[i] * r[j]).sum();
+                let got = m.raw_cross(i, j);
+                assert!(
+                    (got - raw).abs() <= 1e-9 * raw.abs().max(1.0),
+                    "({i},{j}): {got} vs {raw}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn robust_under_huge_offset() {
+        // The paper's C4 claim at chunk level: variance of unit noise
+        // survives a 1e9 common offset.
+        let mut rng = Rng::seed_from(10);
+        let rows = random_rows(&mut rng, 5000, 2, 1e9, 1.0);
+        let mut chunks: Vec<Moments> = Vec::new();
+        for block in rows.chunks(500) {
+            let mut c = Moments::new(2);
+            for r in block {
+                c.push(r);
+            }
+            chunks.push(c);
+        }
+        let mut total = Moments::new(2);
+        for c in &chunks {
+            total.merge(c);
+        }
+        let var = total.cov_pop(0, 0);
+        assert!((var - 1.0).abs() < 0.1, "var={var}");
+    }
+
+    #[test]
+    fn push_block_equals_pushes() {
+        let mut rng = Rng::seed_from(12);
+        let rows = random_rows(&mut rng, 40, 3, 0.0, 1.0);
+        let flat: Vec<f64> = rows.iter().flatten().copied().collect();
+        let mut a = Moments::new(3);
+        a.push_block(&flat);
+        let mut b = Moments::new(3);
+        for r in &rows {
+            b.push(r);
+        }
+        assert_eq!(a.count(), b.count());
+        assert!((a.m2_at(2, 2) - b.m2_at(2, 2)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn blocked_path_matches_scalar_property() {
+        // the §Perf fast path must agree with the rank-1 path for any
+        // block size, including tails below BLOCK_MIN_ROWS and sizes that
+        // straddle the internal sub-block boundary.
+        prop::quick(|rng, _| {
+            let d = 1 + rng.below(7);
+            let n = 1 + rng.below(400);
+            let rows = random_rows(rng, n, d, 50.0, 3.0);
+            let flat: Vec<f64> = rows.iter().flatten().copied().collect();
+            let mut blocked = Moments::new(d);
+            blocked.push_block(&flat);
+            let mut scalar = Moments::new(d);
+            for r in &rows {
+                scalar.push(r);
+            }
+            assert_eq!(blocked.count(), scalar.count());
+            for i in 0..d {
+                assert!((blocked.mean()[i] - scalar.mean()[i]).abs() < 1e-9);
+                for j in i..d {
+                    let s = scalar.m2_at(i, j);
+                    assert!(
+                        (blocked.m2_at(i, j) - s).abs() <= 1e-8 * s.abs().max(1.0),
+                        "({i},{j}): {} vs {s}",
+                        blocked.m2_at(i, j)
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn weighted_push_equals_repeated_rows_property() {
+        // w-weighted row ≡ w unit-weight copies, for the whole state
+        prop::quick(|rng, _| {
+            let d = 1 + rng.below(4);
+            let n = 2 + rng.below(30);
+            let rows = random_rows(rng, n, d, 3.0, 2.0);
+            let weights: Vec<usize> = (0..n).map(|_| 1 + rng.below(5)).collect();
+            let mut weighted = Moments::new(d);
+            let mut repeated = Moments::new(d);
+            for (r, &w) in rows.iter().zip(&weights) {
+                weighted.push_weighted(r, w as f64);
+                for _ in 0..w {
+                    repeated.push(r);
+                }
+            }
+            assert!((weighted.weight() - repeated.weight()).abs() < 1e-9);
+            for i in 0..d {
+                assert!((weighted.mean()[i] - repeated.mean()[i]).abs() < 1e-8);
+                for j in i..d {
+                    let want = repeated.m2_at(i, j);
+                    assert!(
+                        (weighted.m2_at(i, j) - want).abs() <= 1e-7 * want.abs().max(1.0),
+                        "({i},{j})"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn weighted_merge_and_sub_round_trip() {
+        let mut rng = Rng::seed_from(31);
+        let mut a = Moments::new(2);
+        let mut b = Moments::new(2);
+        for _ in 0..50 {
+            a.push_weighted(&[rng.normal(), rng.normal()], 0.5 + rng.uniform());
+            b.push_weighted(&[rng.normal() + 3.0, rng.normal()], 0.5 + rng.uniform());
+        }
+        let mut total = a.clone();
+        total.merge(&b);
+        assert!((total.weight() - (a.weight() + b.weight())).abs() < 1e-10);
+        let rest = total.sub(&a);
+        assert!((rest.weight() - b.weight()).abs() < 1e-9);
+        for i in 0..2 {
+            assert!((rest.mean()[i] - b.mean()[i]).abs() < 1e-8);
+            assert!((rest.m2_at(i, i) - b.m2_at(i, i)).abs() <= 1e-8 * b.m2_at(i, i).max(1.0));
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn nonpositive_weight_panics() {
+        Moments::new(1).push_weighted(&[1.0], 0.0);
+    }
+
+    #[test]
+    fn blocked_path_robust_at_offset() {
+        // the blocked path must keep the §2.1 robustness guarantee
+        let mut rng = Rng::seed_from(21);
+        let rows = random_rows(&mut rng, 4096, 2, 1e9, 1.0);
+        let flat: Vec<f64> = rows.iter().flatten().copied().collect();
+        let mut m = Moments::new(2);
+        m.push_block(&flat);
+        let var = m.cov_pop(0, 0);
+        assert!((var - 1.0).abs() < 0.1, "var={var}");
+    }
+}

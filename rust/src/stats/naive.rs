@@ -1,0 +1,190 @@
+//! Naive raw-moment aggregation — the numerically fragile comparator.
+//!
+//! This is the textbook implementation the paper's §2.1 warns against:
+//! accumulate Σx, Σy, Σxxᵀ, Σxy, Σy² directly and recover the centered
+//! statistics by subtraction (Σxxᵀ − n·x̄x̄ᵀ).  At large common offsets the
+//! subtraction cancels catastrophically; experiment T4 quantifies the digits
+//! lost relative to [`super::moments::Moments`].
+
+use super::suffstats::SuffStats;
+
+/// Raw-sum accumulator over z = [x | y] (deliberately not compensated).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NaiveStats {
+    p: usize,
+    n: u64,
+    sum_z: Vec<f64>,
+    /// raw Σ zzᵀ, dense row-major (p+1)×(p+1)
+    sum_zz: Vec<f64>,
+}
+
+impl NaiveStats {
+    pub fn new(p: usize) -> Self {
+        let d = p + 1;
+        NaiveStats { p, n: 0, sum_z: vec![0.0; d], sum_zz: vec![0.0; d * d] }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn push(&mut self, x: &[f64], y: f64) {
+        assert_eq!(x.len(), self.p);
+        let d = self.p + 1;
+        self.n += 1;
+        for i in 0..self.p {
+            self.sum_z[i] += x[i];
+        }
+        self.sum_z[self.p] += y;
+        for i in 0..d {
+            let zi = if i < self.p { x[i] } else { y };
+            for j in i..d {
+                let zj = if j < self.p { x[j] } else { y };
+                self.sum_zz[i * d + j] += zi * zj;
+            }
+        }
+    }
+
+    /// Additive merge (trivially correct in exact arithmetic — the paper's
+    /// point is that it is *inexact* in floating point at scale).
+    pub fn merge(&mut self, other: &NaiveStats) {
+        assert_eq!(self.p, other.p);
+        self.n += other.n;
+        for (a, b) in self.sum_z.iter_mut().zip(&other.sum_z) {
+            *a += b;
+        }
+        for (a, b) in self.sum_zz.iter_mut().zip(&other.sum_zz) {
+            *a += b;
+        }
+    }
+
+    /// Centered scatter by subtraction: M2\[i,j\] = Σzᵢzⱼ − n·z̄ᵢ·z̄ⱼ.
+    pub fn centered_m2(&self, i: usize, j: usize) -> f64 {
+        let d = self.p + 1;
+        let (a, b) = if i <= j { (i, j) } else { (j, i) };
+        let nf = self.n as f64;
+        self.sum_zz[a * d + b] - nf * (self.sum_z[a] / nf) * (self.sum_z[b] / nf)
+    }
+
+    pub fn mean(&self, i: usize) -> f64 {
+        self.sum_z[i] / self.n as f64
+    }
+
+    /// Convert to the robust representation (used to fit a model from the
+    /// naive pipeline so T4 can compare end-to-end coefficients).
+    pub fn to_suffstats(&self) -> SuffStats {
+        use super::moments::Moments;
+        let d = self.p + 1;
+        let mut mean = vec![0.0; d];
+        for i in 0..d {
+            mean[i] = self.mean(i);
+        }
+        let mut m2 = vec![0.0; d * d];
+        for i in 0..d {
+            for j in 0..d {
+                m2[i * d + j] = self.centered_m2(i, j);
+            }
+        }
+        SuffStats::from_moments(self.p, Moments::from_block(self.n, mean, &m2))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::stats::suffstats::SuffStats;
+
+    #[test]
+    fn agrees_with_robust_at_small_scale() {
+        // With well-conditioned data the two pipelines coincide closely.
+        let mut rng = Rng::seed_from(1);
+        let mut naive = NaiveStats::new(3);
+        let mut robust = SuffStats::new(3);
+        for _ in 0..1000 {
+            let x = [rng.normal(), rng.normal(), rng.normal()];
+            let y = rng.normal();
+            naive.push(&x, y);
+            robust.push(&x, y);
+        }
+        for i in 0..3 {
+            for j in 0..3 {
+                let a = naive.centered_m2(i, j);
+                let b = robust.sxx(i, j);
+                assert!((a - b).abs() <= 1e-8 * b.abs().max(1.0));
+            }
+        }
+    }
+
+    #[test]
+    fn loses_precision_at_large_offset_where_robust_holds() {
+        // THE §2.1 motivation: mean 1e8, sd 1 ⇒ raw moments ~1e16·n while
+        // the true centered scatter is ~n.  f64 keeps ~16 digits ⇒ the naive
+        // subtraction loses essentially everything; Welford/Chan holds.
+        let mut rng = Rng::seed_from(2);
+        let mut naive = NaiveStats::new(1);
+        let mut robust = SuffStats::new(1);
+        let n = 50_000;
+        let mut exact_rows = Vec::with_capacity(n);
+        for _ in 0..n {
+            let x = [rng.normal_ms(1e8, 1.0)];
+            let y = rng.normal_ms(1e8, 1.0);
+            naive.push(&x, y);
+            robust.push(&x, y);
+            exact_rows.push(x[0]);
+        }
+        // two-pass f64 reference (gold standard)
+        let mean = exact_rows.iter().sum::<f64>() / n as f64;
+        let gold: f64 = exact_rows.iter().map(|x| (x - mean) * (x - mean)).sum();
+        let naive_err = (naive.centered_m2(0, 0) - gold).abs() / gold;
+        let robust_err = (robust.sxx(0, 0) - gold).abs() / gold;
+        assert!(robust_err < 1e-6, "robust rel err {robust_err}");
+        assert!(
+            naive_err > 1e-3,
+            "naive should have lost precision, rel err {naive_err}"
+        );
+        assert!(naive_err > robust_err * 1e3);
+    }
+
+    #[test]
+    fn merge_is_plain_addition() {
+        let mut rng = Rng::seed_from(3);
+        let mut a = NaiveStats::new(2);
+        let mut b = NaiveStats::new(2);
+        let mut whole = NaiveStats::new(2);
+        for i in 0..200 {
+            let x = [rng.normal(), rng.normal()];
+            let y = rng.normal();
+            if i % 2 == 0 {
+                a.push(&x, y)
+            } else {
+                b.push(&x, y)
+            }
+            whole.push(&x, y);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        for i in 0..2 {
+            assert!((a.centered_m2(i, i) - whole.centered_m2(i, i)).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn to_suffstats_round_trip() {
+        let mut rng = Rng::seed_from(4);
+        let mut naive = NaiveStats::new(2);
+        let mut robust = SuffStats::new(2);
+        for _ in 0..500 {
+            let x = [rng.normal_ms(1.0, 2.0), rng.normal()];
+            let y = x[0] * 0.5 + rng.normal();
+            naive.push(&x, y);
+            robust.push(&x, y);
+        }
+        let conv = naive.to_suffstats();
+        assert_eq!(conv.count(), robust.count());
+        for i in 0..2 {
+            assert!((conv.sxy(i) - robust.sxy(i)).abs() < 1e-6);
+        }
+        assert!((conv.syy() - robust.syy()).abs() <= 1e-8 * robust.syy());
+    }
+}

@@ -1,0 +1,518 @@
+//! Regression sufficient statistics — [`Moments`] over z = [x | y] with the
+//! views Algorithm 1 needs: centered XᵀX, Xᵀy, Σ(y−ȳ)², standardization,
+//! the standardized quadratic form for the solver (paper eq. 17), and exact
+//! held-out MSE evaluation (CV phase, line 19).
+//!
+//! Standardization convention (glmnet's, matching the paper's reference
+//! \[2\]): columns are centered and scaled to unit *variance* (dⱼ = population
+//! sd), and the loss is (1/2n)‖y − α1 − Xβ‖² + λ(α_en‖β‖₁ + ½(1−α_en)‖β‖₂²).
+//! The back-transform to the original scale is the paper's eq. (4).
+
+use super::moments::Moments;
+
+/// Additive sufficient statistics for penalized linear regression.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SuffStats {
+    inner: Moments,
+    p: usize,
+    /// scratch z-row buffer for push
+    zbuf: Vec<f64>,
+}
+
+/// The standardized quadratic form the CD solver minimizes (paper eq. 17):
+///
+///   f(β̂) = ½ β̂ᵀ G β̂ − cᵀ β̂ + penalty,  with G = XcᵀXc/n (unit diagonal),
+///   c = Xcᵀ(y − ȳ)/n, on variance-standardized columns.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuadForm {
+    /// number of predictors
+    pub p: usize,
+    /// rows behind this form
+    pub n: u64,
+    /// G, row-major p×p; G\[j,j\] == 1 for non-degenerate columns
+    pub gram: Vec<f64>,
+    /// c, length p
+    pub xty: Vec<f64>,
+    /// Var(y) = Σ(y−ȳ)²/n — the λ_max scale and the null-model MSE
+    pub y_var: f64,
+    /// per-column scale dⱼ (population sd); 0 marks a degenerate column
+    pub scale: Vec<f64>,
+    /// column means of X (for the intercept back-transform)
+    pub x_mean: Vec<f64>,
+    /// mean of y
+    pub y_mean: f64,
+}
+
+impl SuffStats {
+    pub fn new(p: usize) -> Self {
+        SuffStats { inner: Moments::new(p + 1), p, zbuf: vec![0.0; p + 1] }
+    }
+
+    /// Wrap an existing z-moments accumulator (dim must be p+1).
+    pub fn from_moments(p: usize, inner: Moments) -> Self {
+        assert_eq!(inner.dim(), p + 1, "moments dim must be p+1");
+        SuffStats { inner, p, zbuf: vec![0.0; p + 1] }
+    }
+
+    /// Access the underlying z-moments (e.g. for engine-level merging).
+    pub fn moments(&self) -> &Moments {
+        &self.inner
+    }
+
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    pub fn count(&self) -> u64 {
+        self.inner.count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inner.is_empty()
+    }
+
+    /// Mapper-side update: fold one observation (x, y) in (Algorithm 1 l.5).
+    pub fn push(&mut self, x: &[f64], y: f64) {
+        assert_eq!(x.len(), self.p, "x dimension mismatch");
+        self.zbuf[..self.p].copy_from_slice(x);
+        self.zbuf[self.p] = y;
+        // Moments::push reads zbuf before mutating its own state; the borrow
+        // split is safe because zbuf is a separate field.
+        let z = std::mem::take(&mut self.zbuf);
+        self.inner.push(&z);
+        self.zbuf = z;
+    }
+
+    /// Fold a whole row-major block of observations in at once — the
+    /// mapper fast path.  Interleaves (x, y) into z rows and dispatches to
+    /// [`Moments::push_block`], whose cache-blocked centered-gram path is
+    /// several times faster than per-row rank-1 updates (see §Perf in
+    /// EXPERIMENTS.md) while remaining a robust Chan-merge pipeline.
+    pub fn push_rows(&mut self, x: &[f64], y: &[f64]) {
+        let n = y.len();
+        assert_eq!(x.len(), n * self.p, "x must be n*p row-major");
+        let d = self.p + 1;
+        let mut z = vec![0.0; n * d];
+        for r in 0..n {
+            z[r * d..r * d + self.p].copy_from_slice(&x[r * self.p..(r + 1) * self.p]);
+            z[r * d + self.p] = y[r];
+        }
+        self.inner.push_block(&z);
+    }
+
+    /// Weighted observation: equivalent to pushing (x, y) `w` times (for
+    /// integer w).  Enables importance/frequency-weighted regression with
+    /// the same one-pass statistics.
+    pub fn push_weighted(&mut self, x: &[f64], y: f64, w: f64) {
+        assert_eq!(x.len(), self.p, "x dimension mismatch");
+        self.zbuf[..self.p].copy_from_slice(x);
+        self.zbuf[self.p] = y;
+        let z = std::mem::take(&mut self.zbuf);
+        self.inner.push_weighted(&z, w);
+        self.zbuf = z;
+    }
+
+    /// Combiner/reducer merge (paper eq. 14).
+    pub fn merge(&mut self, other: &SuffStats) {
+        assert_eq!(self.p, other.p);
+        self.inner.merge(&other.inner);
+    }
+
+    /// total − part (leave-one-fold-out training statistics).
+    pub fn sub(&self, part: &SuffStats) -> SuffStats {
+        assert_eq!(self.p, part.p);
+        SuffStats::from_moments(self.p, self.inner.sub(&part.inner))
+    }
+
+    pub fn x_mean(&self) -> &[f64] {
+        &self.inner.mean()[..self.p]
+    }
+
+    pub fn y_mean(&self) -> f64 {
+        self.inner.mean()[self.p]
+    }
+
+    /// Centered Σ(xᵢ−x̄ᵢ)(xⱼ−x̄ⱼ).
+    pub fn sxx(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.p && j < self.p);
+        self.inner.m2_at(i, j)
+    }
+
+    /// Centered Σ(xᵢ−x̄ᵢ)(y−ȳ).
+    pub fn sxy(&self, i: usize) -> f64 {
+        debug_assert!(i < self.p);
+        self.inner.m2_at(i, self.p)
+    }
+
+    /// Centered Σ(y−ȳ)².
+    pub fn syy(&self) -> f64 {
+        self.inner.m2_at(self.p, self.p)
+    }
+
+    /// Build the standardized quadratic form for the solver (paper eq. 17).
+    ///
+    /// Degenerate (zero-variance) columns get scale 0, a zeroed gram
+    /// row/column with unit diagonal and zero c — coordinate descent then
+    /// provably leaves their coefficient at exactly 0.
+    pub fn quad_form(&self) -> QuadForm {
+        let p = self.p;
+        let n = self.count();
+        assert!(n >= 2, "need at least 2 observations to standardize");
+        let nf = self.inner.weight(); // == n unless weighted pushes were used
+        let mut scale = vec![0.0; p];
+        for j in 0..p {
+            let v = self.sxx(j, j) / nf;
+            scale[j] = if v > 0.0 { v.sqrt() } else { 0.0 };
+        }
+        let mut gram = vec![0.0; p * p];
+        for i in 0..p {
+            for j in i..p {
+                let denom = scale[i] * scale[j];
+                let g = if denom > 0.0 {
+                    self.sxx(i, j) / (nf * denom)
+                } else if i == j {
+                    1.0 // degenerate column: unit diagonal, zero couplings
+                } else {
+                    0.0
+                };
+                gram[i * p + j] = g;
+                gram[j * p + i] = g;
+            }
+        }
+        let mut xty = vec![0.0; p];
+        for j in 0..p {
+            xty[j] = if scale[j] > 0.0 {
+                self.sxy(j) / (nf * scale[j])
+            } else {
+                0.0
+            };
+        }
+        QuadForm {
+            p,
+            n,
+            gram,
+            xty,
+            y_var: self.syy() / nf,
+            scale,
+            x_mean: self.x_mean().to_vec(),
+            y_mean: self.y_mean(),
+        }
+    }
+
+    /// Standardized quadratic form restricted to a subset of predictors —
+    /// the screening path (paper §4 future work, `solver::screen`): the
+    /// same one-pass statistics serve any sub-model, since a sub-model's
+    /// Gram is just a submatrix.  `idx` must be strictly increasing.
+    pub fn quad_form_subset(&self, idx: &[usize]) -> QuadForm {
+        assert!(!idx.is_empty(), "empty subset");
+        assert!(
+            idx.windows(2).all(|w| w[0] < w[1]) && *idx.last().unwrap() < self.p,
+            "subset indices must be strictly increasing and < p"
+        );
+        let m = idx.len();
+        let n = self.count();
+        assert!(n >= 2, "need at least 2 observations to standardize");
+        let nf = self.inner.weight();
+        let mut scale = vec![0.0; m];
+        for (a, &j) in idx.iter().enumerate() {
+            let v = self.sxx(j, j) / nf;
+            scale[a] = if v > 0.0 { v.sqrt() } else { 0.0 };
+        }
+        let mut gram = vec![0.0; m * m];
+        for a in 0..m {
+            for b in a..m {
+                let denom = scale[a] * scale[b];
+                let g = if denom > 0.0 {
+                    self.sxx(idx[a], idx[b]) / (nf * denom)
+                } else if a == b {
+                    1.0
+                } else {
+                    0.0
+                };
+                gram[a * m + b] = g;
+                gram[b * m + a] = g;
+            }
+        }
+        let mut xty = vec![0.0; m];
+        for (a, &j) in idx.iter().enumerate() {
+            xty[a] = if scale[a] > 0.0 {
+                self.sxy(j) / (nf * scale[a])
+            } else {
+                0.0
+            };
+        }
+        QuadForm {
+            p: m,
+            n,
+            gram,
+            xty,
+            y_var: self.syy() / nf,
+            scale,
+            x_mean: idx.iter().map(|&j| self.x_mean()[j]).collect(),
+            y_mean: self.y_mean(),
+        }
+    }
+
+    /// Exact mean squared error of the *original-scale* model (α, β) on the
+    /// data behind these statistics — no data pass needed:
+    ///
+    ///   Σ(y − α − xᵀβ)² = Syy − 2βᵀSxy + βᵀSxxβ + n(ȳ − α − x̄ᵀβ)²
+    pub fn mse(&self, alpha: f64, beta: &[f64]) -> f64 {
+        assert_eq!(beta.len(), self.p);
+        assert!(self.count() > 0, "mse on empty statistics");
+        let nf = self.inner.weight(); // weighted MSE when weights were used
+        let mut quad = 0.0;
+        let mut cross = 0.0;
+        for i in 0..self.p {
+            cross += beta[i] * self.sxy(i);
+            for j in 0..self.p {
+                quad += beta[i] * self.sxx(i, j) * beta[j];
+            }
+        }
+        let xbar_beta: f64 = self
+            .x_mean()
+            .iter()
+            .zip(beta)
+            .map(|(m, b)| m * b)
+            .sum();
+        let e = self.y_mean() - alpha - xbar_beta;
+        (self.syy() - 2.0 * cross + quad + nf * e * e) / nf
+    }
+}
+
+impl QuadForm {
+    /// Back-transform a standardized coefficient vector β̂ to the original
+    /// scale (paper eq. 4): βⱼ = β̂ⱼ/dⱼ, α = ȳ − x̄ᵀβ.
+    pub fn to_original_scale(&self, beta_std: &[f64]) -> (f64, Vec<f64>) {
+        assert_eq!(beta_std.len(), self.p);
+        let beta: Vec<f64> = beta_std
+            .iter()
+            .zip(&self.scale)
+            .map(|(b, d)| if *d > 0.0 { b / d } else { 0.0 })
+            .collect();
+        let alpha = self.y_mean
+            - self
+                .x_mean
+                .iter()
+                .zip(&beta)
+                .map(|(m, b)| m * b)
+                .sum::<f64>();
+        (alpha, beta)
+    }
+
+    /// λ_max: the smallest λ at which the lasso/elastic-net solution is all
+    /// zero — max |cⱼ| / max(α_en, ε) in the standardized problem.
+    pub fn lambda_max(&self, alpha_en: f64) -> f64 {
+        let cmax = self.xty.iter().fold(0.0_f64, |a, c| a.max(c.abs()));
+        cmax / alpha_en.max(1e-3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::util::prop;
+
+    fn gen_xy(rng: &mut Rng, n: usize, p: usize) -> (Vec<Vec<f64>>, Vec<f64>) {
+        let xs: Vec<Vec<f64>> = (0..n)
+            .map(|_| (0..p).map(|_| rng.normal_ms(2.0, 3.0)).collect())
+            .collect();
+        let ys: Vec<f64> = xs
+            .iter()
+            .map(|x| x.iter().sum::<f64>() * 0.5 + rng.normal())
+            .collect();
+        (xs, ys)
+    }
+
+    fn fill(p: usize, xs: &[Vec<f64>], ys: &[f64]) -> SuffStats {
+        let mut s = SuffStats::new(p);
+        for (x, &y) in xs.iter().zip(ys) {
+            s.push(x, y);
+        }
+        s
+    }
+
+    #[test]
+    fn views_match_direct_computation() {
+        let mut rng = Rng::seed_from(2);
+        let (xs, ys) = gen_xy(&mut rng, 300, 4);
+        let s = fill(4, &xs, &ys);
+        let n = 300.0;
+        let ybar: f64 = ys.iter().sum::<f64>() / n;
+        assert!((s.y_mean() - ybar).abs() < 1e-9);
+        let syy: f64 = ys.iter().map(|y| (y - ybar) * (y - ybar)).sum();
+        assert!((s.syy() - syy).abs() / syy < 1e-9);
+        for i in 0..4 {
+            let xbar: f64 = xs.iter().map(|x| x[i]).sum::<f64>() / n;
+            let sxy: f64 = xs
+                .iter()
+                .zip(&ys)
+                .map(|(x, y)| (x[i] - xbar) * (y - ybar))
+                .sum();
+            assert!((s.sxy(i) - sxy).abs() <= 1e-8 * sxy.abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn quad_form_unit_diagonal_and_symmetry() {
+        let mut rng = Rng::seed_from(3);
+        let (xs, ys) = gen_xy(&mut rng, 200, 5);
+        let q = fill(5, &xs, &ys).quad_form();
+        for i in 0..5 {
+            assert!((q.gram[i * 5 + i] - 1.0).abs() < 1e-9, "diag {i}");
+            for j in 0..5 {
+                assert_eq!(q.gram[i * 5 + j], q.gram[j * 5 + i]);
+                assert!(q.gram[i * 5 + j].abs() <= 1.0 + 1e-9, "correlation bound");
+            }
+        }
+        assert!(q.y_var > 0.0);
+    }
+
+    #[test]
+    fn degenerate_column_is_neutralized() {
+        // constant column → scale 0, zero couplings, unit diagonal, zero c
+        let mut rng = Rng::seed_from(4);
+        let n = 100;
+        let xs: Vec<Vec<f64>> = (0..n)
+            .map(|_| vec![rng.normal(), 7.7, rng.normal()])
+            .collect();
+        let ys: Vec<f64> = xs.iter().map(|x| x[0] + rng.normal()).collect();
+        let q = fill(3, &xs, &ys).quad_form();
+        assert_eq!(q.scale[1], 0.0);
+        assert_eq!(q.xty[1], 0.0);
+        assert_eq!(q.gram[1 * 3 + 1], 1.0);
+        assert_eq!(q.gram[1 * 3 + 0], 0.0);
+        assert_eq!(q.gram[0 * 3 + 1], 0.0);
+        // back-transform keeps the degenerate coefficient at exactly 0
+        let (_, beta) = q.to_original_scale(&[0.5, 0.3, -0.2]);
+        assert_eq!(beta[1], 0.0);
+    }
+
+    #[test]
+    fn mse_matches_direct_property() {
+        prop::quick(|rng, _| {
+            let p = 1 + rng.below(4);
+            let n = 10 + rng.below(100);
+            let (xs, ys) = gen_xy(rng, n, p);
+            let s = fill(p, &xs, &ys);
+            let alpha = rng.normal();
+            let beta: Vec<f64> = (0..p).map(|_| rng.normal()).collect();
+            let direct: f64 = xs
+                .iter()
+                .zip(&ys)
+                .map(|(x, y)| {
+                    let pred =
+                        alpha + x.iter().zip(&beta).map(|(a, b)| a * b).sum::<f64>();
+                    (y - pred) * (y - pred)
+                })
+                .sum::<f64>()
+                / n as f64;
+            let got = s.mse(alpha, &beta);
+            assert!(
+                (got - direct).abs() <= 1e-7 * direct.max(1.0),
+                "mse {got} vs {direct}"
+            );
+        });
+    }
+
+    #[test]
+    fn merge_then_quadform_equals_whole() {
+        let mut rng = Rng::seed_from(6);
+        let (xs, ys) = gen_xy(&mut rng, 400, 3);
+        let whole = fill(3, &xs, &ys);
+        let mut a = fill(3, &xs[..150], &ys[..150]);
+        let b = fill(3, &xs[150..], &ys[150..]);
+        a.merge(&b);
+        let (qa, qw) = (a.quad_form(), whole.quad_form());
+        for i in 0..9 {
+            assert!((qa.gram[i] - qw.gram[i]).abs() < 1e-9);
+        }
+        for i in 0..3 {
+            assert!((qa.xty[i] - qw.xty[i]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn sub_gives_leave_fold_out() {
+        let mut rng = Rng::seed_from(7);
+        let (xs, ys) = gen_xy(&mut rng, 250, 3);
+        let whole = fill(3, &xs, &ys);
+        let fold = fill(3, &xs[..50], &ys[..50]);
+        let train = whole.sub(&fold);
+        let direct = fill(3, &xs[50..], &ys[50..]);
+        assert_eq!(train.count(), direct.count());
+        for i in 0..3 {
+            assert!((train.sxy(i) - direct.sxy(i)).abs() < 1e-7);
+        }
+        assert!((train.syy() - direct.syy()).abs() <= 1e-8 * direct.syy());
+    }
+
+    #[test]
+    fn lambda_max_kills_all_coefficients() {
+        let mut rng = Rng::seed_from(8);
+        let (xs, ys) = gen_xy(&mut rng, 150, 4);
+        let q = fill(4, &xs, &ys).quad_form();
+        let lmax = q.lambda_max(1.0);
+        // at λ = λ_max every |c_j| <= λ, so soft-threshold of the null
+        // residual is 0 for all j.
+        for j in 0..4 {
+            assert!(q.xty[j].abs() <= lmax + 1e-12);
+        }
+    }
+
+    #[test]
+    fn weighted_fit_equals_duplicated_rows() {
+        // frequency-weighted regression: weight w ≡ w duplicate rows, all
+        // the way through quad_form and the fitted model
+        use crate::solver::{solve_cd, CdSettings, Penalty};
+        let mut rng = Rng::seed_from(14);
+        let (xs, ys) = gen_xy(&mut rng, 120, 3);
+        let weights: Vec<usize> = (0..120).map(|i| 1 + (i % 4)).collect();
+        let mut weighted = SuffStats::new(3);
+        let mut duplicated = SuffStats::new(3);
+        for ((x, &y), &w) in xs.iter().zip(&ys).zip(&weights) {
+            weighted.push_weighted(x, y, w as f64);
+            for _ in 0..w {
+                duplicated.push(x, y);
+            }
+        }
+        let (qa, qb) = (weighted.quad_form(), duplicated.quad_form());
+        for i in 0..9 {
+            assert!((qa.gram[i] - qb.gram[i]).abs() < 1e-8);
+        }
+        let sa = solve_cd(&qa, Penalty::lasso(), 0.05, None, CdSettings::default());
+        let sb = solve_cd(&qb, Penalty::lasso(), 0.05, None, CdSettings::default());
+        let (aa, ba) = qa.to_original_scale(&sa.beta);
+        let (ab, bb) = qb.to_original_scale(&sb.beta);
+        assert!((aa - ab).abs() < 1e-8);
+        for j in 0..3 {
+            assert!((ba[j] - bb[j]).abs() < 1e-8);
+        }
+        // weighted MSE matches the duplicated-data MSE
+        assert!((weighted.mse(aa, &ba) - duplicated.mse(aa, &ba)).abs() < 1e-8);
+    }
+
+    #[test]
+    fn back_transform_recovers_ols_on_exact_data() {
+        // y = 3 + 2·x0 − x1 exactly → MSE(α̂, β̂)=0 after back-transform of
+        // the (unpenalized) normal-equation solution in standardized space.
+        let mut rng = Rng::seed_from(9);
+        let xs: Vec<Vec<f64>> = (0..60)
+            .map(|_| vec![rng.normal_ms(5.0, 2.0), rng.normal_ms(-1.0, 0.5)])
+            .collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 + 2.0 * x[0] - x[1]).collect();
+        let s = fill(2, &xs, &ys);
+        let q = s.quad_form();
+        // solve 2×2 system G b = c
+        let (g, c) = (&q.gram, &q.xty);
+        let det = g[0] * g[3] - g[1] * g[2];
+        let b0 = (c[0] * g[3] - c[1] * g[1]) / det;
+        let b1 = (g[0] * c[1] - g[2] * c[0]) / det;
+        let (alpha, beta) = q.to_original_scale(&[b0, b1]);
+        assert!((alpha - 3.0).abs() < 1e-6, "alpha={alpha}");
+        assert!((beta[0] - 2.0).abs() < 1e-6);
+        assert!((beta[1] + 1.0).abs() < 1e-6);
+        assert!(s.mse(alpha, &beta) < 1e-10);
+    }
+}

@@ -1,0 +1,176 @@
+//! Univariate streaming mean/variance — the paper's eq. (11)–(13) in 1-D.
+//!
+//! This is the scalar core the p-dimensional [`super::moments`] accumulator
+//! generalizes; kept separate because the engine uses it for per-worker
+//! latency/throughput metrics too.
+
+/// Streaming mean and centered second moment (Welford).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Paper eq. (12): mapper-side single-observation update.
+    #[inline]
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+    }
+
+    /// Paper eq. (13)/(14): combiner/reducer-side pairwise merge.
+    pub fn merge(&mut self, other: &Welford) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = *other;
+            return;
+        }
+        let (m, n) = (self.n as f64, other.n as f64);
+        let delta = other.mean - self.mean;
+        let total = m + n;
+        self.mean += delta * (n / total);
+        self.m2 += other.m2 + delta * delta * (m * n / total);
+        self.n += other.n;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Population variance (paper's 1/n convention, §2.1).
+    pub fn var_pop(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    /// Sample variance (1/(n-1)).
+    pub fn var_sample(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    /// Centered sum of squares Σ(x-x̄)².
+    pub fn m2(&self) -> f64 {
+        self.m2
+    }
+}
+
+impl FromIterator<f64> for Welford {
+    fn from_iter<T: IntoIterator<Item = f64>>(iter: T) -> Self {
+        let mut w = Welford::new();
+        for x in iter {
+            w.push(x);
+        }
+        w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::util::prop;
+
+    fn reference(xs: &[f64]) -> (f64, f64) {
+        let n = xs.len() as f64;
+        let mean = xs.iter().sum::<f64>() / n;
+        let m2 = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>();
+        (mean, m2)
+    }
+
+    #[test]
+    fn matches_two_pass_reference() {
+        let mut rng = Rng::seed_from(3);
+        let xs: Vec<f64> = (0..5000).map(|_| rng.normal_ms(5.0, 3.0)).collect();
+        let w: Welford = xs.iter().copied().collect();
+        let (mean, m2) = reference(&xs);
+        assert!((w.mean() - mean).abs() < 1e-10);
+        assert!((w.m2() - m2).abs() / m2 < 1e-10);
+        assert_eq!(w.count(), 5000);
+    }
+
+    #[test]
+    fn merge_equals_whole_property() {
+        // paper eq. (14) invariant: merge(chunks) == whole, any split, any order
+        prop::quick(|rng, _| {
+            let n = 2 + rng.below(300);
+            let xs: Vec<f64> = (0..n).map(|_| rng.normal_ms(1e6, 2.0)).collect();
+            let cut = 1 + rng.below(n - 1);
+            let mut a: Welford = xs[..cut].iter().copied().collect();
+            let b: Welford = xs[cut..].iter().copied().collect();
+            a.merge(&b);
+            let whole: Welford = xs.iter().copied().collect();
+            assert!((a.mean() - whole.mean()).abs() < 1e-6);
+            assert!((a.m2() - whole.m2()).abs() <= 1e-6 * whole.m2().max(1.0));
+            assert_eq!(a.count(), whole.count());
+        });
+    }
+
+    #[test]
+    fn merge_commutes() {
+        prop::quick(|rng, _| {
+            let xs: Vec<f64> = (0..50).map(|_| rng.normal()).collect();
+            let ys: Vec<f64> = (0..30).map(|_| rng.normal()).collect();
+            let (wa, wb): (Welford, Welford) =
+                (xs.iter().copied().collect(), ys.iter().copied().collect());
+            let mut ab = wa;
+            ab.merge(&wb);
+            let mut ba = wb;
+            ba.merge(&wa);
+            assert!((ab.mean() - ba.mean()).abs() < 1e-12);
+            assert!((ab.m2() - ba.m2()).abs() < 1e-9);
+        });
+    }
+
+    #[test]
+    fn empty_and_identity_merges() {
+        let mut w = Welford::new();
+        w.merge(&Welford::new());
+        assert_eq!(w.count(), 0);
+        assert_eq!(w.var_pop(), 0.0);
+        let mut a: Welford = [1.0, 2.0, 3.0].into_iter().collect();
+        let before = a;
+        a.merge(&Welford::new());
+        assert_eq!(a, before);
+        let mut e = Welford::new();
+        e.merge(&before);
+        assert_eq!(e, before);
+    }
+
+    #[test]
+    fn robust_at_huge_offset() {
+        // mean 1e12, sd 1 — Welford keeps ~9 digits of the variance where
+        // naive sum-of-squares in f64 loses everything (see naive.rs test).
+        let mut rng = Rng::seed_from(8);
+        let xs: Vec<f64> = (0..20_000).map(|_| rng.normal_ms(1e12, 1.0)).collect();
+        let w: Welford = xs.iter().copied().collect();
+        assert!((w.var_pop() - 1.0).abs() < 0.05, "var={}", w.var_pop());
+    }
+
+    #[test]
+    fn sample_vs_population_variance() {
+        let w: Welford = [1.0, 2.0, 3.0, 4.0].into_iter().collect();
+        assert!((w.var_pop() - 1.25).abs() < 1e-12);
+        assert!((w.var_sample() - 5.0 / 3.0).abs() < 1e-12);
+    }
+}

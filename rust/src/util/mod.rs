@@ -1,0 +1,82 @@
+//! Small std-only utilities shared across the crate.
+//!
+//! The image builds offline against a vendored crate set that carries only
+//! `xla` + `anyhow`, so the usual ecosystem helpers are implemented here:
+//! a minimal JSON parser ([`json`]) for the artifact manifest, a wall-clock
+//! timer ([`timer`]), a fixed-width table printer ([`table`]) used by the
+//! experiments harness, and a tiny seeded property-testing loop ([`prop`])
+//! standing in for `proptest`.
+
+pub mod json;
+pub mod prop;
+pub mod table;
+pub mod timer;
+
+/// Mean of a slice (0.0 for empty — callers guard length).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation of a slice.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Max absolute difference between two equal-length slices.
+pub fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len(), "max_abs_diff: length mismatch");
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f64::max)
+}
+
+/// L2 norm of a slice.
+pub fn l2_norm(xs: &[f64]) -> f64 {
+    xs.iter().map(|x| x * x).sum::<f64>().sqrt()
+}
+
+/// Relative L2 error ‖a−b‖ / max(‖b‖, eps).
+pub fn rel_l2_err(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let num: f64 = a
+        .iter()
+        .zip(b)
+        .map(|(x, y)| (x - y) * (x - y))
+        .sum::<f64>()
+        .sqrt();
+    num / l2_norm(b).max(1e-300)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_std() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert_eq!(mean(&[]), 0.0);
+        assert!((std_dev(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn diffs_and_norms() {
+        assert_eq!(max_abs_diff(&[1.0, 5.0], &[1.5, 4.0]), 1.0);
+        assert!((l2_norm(&[3.0, 4.0]) - 5.0).abs() < 1e-15);
+        assert!(rel_l2_err(&[1.0, 0.0], &[1.0, 0.0]) == 0.0);
+        assert!((rel_l2_err(&[2.0, 0.0], &[1.0, 0.0]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn max_abs_diff_length_mismatch_panics() {
+        max_abs_diff(&[1.0], &[1.0, 2.0]);
+    }
+}

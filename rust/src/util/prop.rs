@@ -1,0 +1,96 @@
+//! Tiny seeded property-testing loop — offline substitute for `proptest`.
+//!
+//! A property runs `cases` times against inputs drawn from a seeded [`Rng`]
+//! (deterministic across runs).  On failure the failing case index and seed
+//! are reported so the case replays exactly.  No shrinking — cases are kept
+//! small by construction instead.
+
+use crate::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone, Copy)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 128, seed: 0xC0FFEE }
+    }
+}
+
+/// Run `prop(case_rng, case_index)`; panics with replay info on failure.
+pub fn for_all(cfg: PropConfig, mut prop: impl FnMut(&mut Rng, usize)) {
+    let mut master = Rng::seed_from(cfg.seed);
+    for case in 0..cfg.cases {
+        let case_seed = master.next_u64();
+        let mut rng = Rng::seed_from(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng, case)
+        }));
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property failed at case {case}/{} (case_seed={case_seed:#x}, master_seed={:#x}): {msg}",
+                cfg.cases, cfg.seed
+            );
+        }
+    }
+}
+
+/// Shorthand with the default config.
+pub fn quick(prop: impl FnMut(&mut Rng, usize)) {
+    for_all(PropConfig::default(), prop);
+}
+
+/// Draw a random vector of length n with entries ~ N(0, scale).
+pub fn normal_vec(rng: &mut Rng, n: usize, scale: f64) -> Vec<f64> {
+    (0..n).map(|_| rng.normal() * scale).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        quick(|rng, _| {
+            let x = rng.uniform();
+            assert!((0.0..1.0).contains(&x));
+        });
+    }
+
+    #[test]
+    fn reports_failing_case() {
+        let res = std::panic::catch_unwind(|| {
+            for_all(PropConfig { cases: 10, seed: 1 }, |rng, _| {
+                assert!(rng.uniform() < 2.0); // passes
+                assert!(false, "forced failure");
+            })
+        });
+        let err = res.unwrap_err();
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| "<not a String panic>".into());
+        assert!(msg.contains("property failed at case 0"), "{msg}");
+    }
+
+    #[test]
+    fn deterministic_inputs() {
+        let mut seen = Vec::new();
+        for_all(PropConfig { cases: 5, seed: 42 }, |rng, _| {
+            seen.push(rng.next_u64());
+        });
+        let mut again = Vec::new();
+        for_all(PropConfig { cases: 5, seed: 42 }, |rng, _| {
+            again.push(rng.next_u64());
+        });
+        assert_eq!(seen, again);
+    }
+}

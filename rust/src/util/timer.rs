@@ -1,0 +1,91 @@
+//! Wall-clock timing helpers used by the engine metrics and bench harness.
+
+use std::time::{Duration, Instant};
+
+/// A simple start/lap timer.
+#[derive(Debug, Clone)]
+pub struct Timer {
+    start: Instant,
+    last: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        let now = Instant::now();
+        Timer { start: now, last: now }
+    }
+
+    /// Seconds since construction.
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Seconds since the previous `lap` (or construction), and reset the lap.
+    pub fn lap_s(&mut self) -> f64 {
+        let now = Instant::now();
+        let d = now.duration_since(self.last).as_secs_f64();
+        self.last = now;
+        d
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Instant::now();
+    let out = f();
+    (out, t.elapsed().as_secs_f64())
+}
+
+/// Human-friendly duration formatting for logs/tables.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else if s < 120.0 {
+        format!("{s:.2}s")
+    } else {
+        format!("{:.1}m", s / 60.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotone() {
+        let mut t = Timer::start();
+        let a = t.lap_s();
+        let b = t.elapsed_s();
+        assert!(a >= 0.0 && b >= a);
+    }
+
+    #[test]
+    fn time_it_returns_value() {
+        let (v, s) = time_it(|| 40 + 2);
+        assert_eq!(v, 42);
+        assert!(s >= 0.0);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_secs(5e-10).ends_with("ns"));
+        assert!(fmt_secs(5e-5).ends_with("µs"));
+        assert!(fmt_secs(5e-2).ends_with("ms"));
+        assert!(fmt_secs(5.0).ends_with('s'));
+        assert!(fmt_secs(600.0).ends_with('m'));
+    }
+}

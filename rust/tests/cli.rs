@@ -1,0 +1,122 @@
+//! CLI surface tests: drive the `plrmr` binary like a user would.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn plrmr(args: &[&str]) -> (bool, String, String) {
+    let out = Command::new(env!("CARGO_BIN_EXE_plrmr"))
+        .args(args)
+        .output()
+        .expect("spawn plrmr");
+    (
+        out.status.success(),
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+    )
+}
+
+fn tmp(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("plrmr-cli-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn no_args_prints_usage() {
+    let (ok, stdout, _) = plrmr(&[]);
+    assert!(ok);
+    assert!(stdout.contains("usage: plrmr"));
+}
+
+#[test]
+fn unknown_command_fails_with_usage() {
+    let (ok, _, stderr) = plrmr(&["frobnicate"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown command"));
+}
+
+#[test]
+fn gen_fit_predict_round_trip() {
+    let dir = tmp("roundtrip");
+    let csv = dir.join("data.csv");
+    let model = dir.join("model.txt");
+
+    let (ok, stdout, stderr) = plrmr(&[
+        "gen-data", "--n", "3000", "--p", "5", "--seed", "3",
+        "--out", csv.to_str().unwrap(),
+    ]);
+    assert!(ok, "{stderr}");
+    assert!(stdout.contains("true beta"));
+
+    let (ok, stdout, stderr) = plrmr(&[
+        "fit", "--csv", csv.to_str().unwrap(),
+        "--penalty", "lasso", "--folds", "5", "--lambdas", "20",
+        "--out", model.to_str().unwrap(), "--curve",
+    ]);
+    assert!(ok, "{stderr}");
+    assert!(stdout.contains("lambda_opt"), "{stdout}");
+    assert!(stdout.contains("saved model"));
+
+    let (ok, stdout, stderr) = plrmr(&[
+        "predict", "--model", model.to_str().unwrap(), "--csv", csv.to_str().unwrap(),
+    ]);
+    assert!(ok, "{stderr}");
+    assert!(stdout.contains("mse on this data"));
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn fit_synth_with_elastic_net() {
+    let (ok, stdout, stderr) = plrmr(&[
+        "fit", "--synth", "5000,8,0.4,9", "--penalty", "elastic_net:0.5",
+        "--folds", "5", "--lambdas", "15",
+    ]);
+    assert!(ok, "{stderr}");
+    assert!(stdout.contains("elastic-net model"), "{stdout}");
+}
+
+#[test]
+fn fit_requires_exactly_one_source() {
+    let (ok, _, stderr) = plrmr(&["fit"]);
+    assert!(!ok);
+    assert!(stderr.contains("--csv or --synth"));
+    let (ok, _, _) = plrmr(&["fit", "--csv", "a.csv", "--synth", "10,2"]);
+    assert!(!ok);
+}
+
+#[test]
+fn inspect_artifacts_when_built() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let (ok, stdout, stderr) = plrmr(&["inspect-artifacts"]);
+    assert!(ok, "{stderr}");
+    assert!(stdout.contains("ChunkStats"), "{stdout}");
+    assert!(stdout.contains("CdSweep"));
+}
+
+#[test]
+fn hlo_fit_when_built() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let (ok, stdout, stderr) = plrmr(&["hlo-fit", "--synth", "4000,8,0.4,5", "--lambda", "0.1"]);
+    assert!(ok, "{stderr}");
+    assert!(stdout.contains("HLO map path"), "{stdout}");
+    assert!(stdout.contains("rel L2 err vs serial oracle"));
+}
+
+#[test]
+fn config_file_is_honored() {
+    let dir = tmp("config");
+    let cfg = dir.join("run.conf");
+    std::fs::write(&cfg, "folds = 5\nn_lambdas = 10\npenalty = ridge\n").unwrap();
+    let (ok, stdout, stderr) = plrmr(&[
+        "fit", "--synth", "3000,4,0.5,2", "--config", cfg.to_str().unwrap(),
+    ]);
+    assert!(ok, "{stderr}");
+    assert!(stdout.contains("ridge model"), "{stdout}");
+    std::fs::remove_dir_all(dir).ok();
+}

@@ -1,0 +1,178 @@
+//! Cross-module integration tests over the public API: the full
+//! Algorithm-1 pipeline against raw-data oracles, CSV round trips into the
+//! driver, fault tolerance at the system level, and the PJRT runtime
+//! (when artifacts are present).
+
+use plrmr::baselines::serial::serial_cd;
+use plrmr::config::FitConfig;
+use plrmr::coordinator::Driver;
+use plrmr::data::csv;
+use plrmr::data::synth::{generate, SynthSpec};
+use plrmr::mapreduce::{FaultPlan, JobCosts};
+use plrmr::solver::penalty::Penalty;
+use plrmr::util::rel_l2_err;
+
+fn tmp(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("plrmr-it-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn csv_shards_to_model_end_to_end() {
+    // gen-data → shards on disk → read back → fit → predict → save/load
+    let dir = tmp("e2e");
+    let spec = SynthSpec::sparse_linear(5000, 6, 0.5, 11);
+    let data = generate(&spec);
+    let shards = csv::write_shards(&data, &dir, "train", 4).unwrap();
+    let loaded = csv::read_shards(&shards).unwrap();
+    assert_eq!(loaded.n(), 5000);
+
+    let cfg = FitConfig::default().with_folds(5).with_lambdas(30);
+    let report = Driver::new(cfg).fit(&loaded).unwrap();
+    assert_eq!(report.data_passes, 1);
+
+    // model file round trip
+    let mpath = dir.join("model.txt");
+    report.model.save(&mpath).unwrap();
+    let model = plrmr::model::fitted::FittedModel::load(&mpath).unwrap();
+    assert_eq!(model.beta, report.model.beta);
+
+    // prediction error ≈ noise on held-out data from the same process
+    // (same ground-truth β — only the noise stream differs)
+    let mut stream = plrmr::data::synth::SynthStream::with_beta(
+        &SynthSpec { seed: 999, ..spec.clone() },
+        spec.true_beta(),
+    );
+    let (xb, yb) = stream.next_block(5000).map(|(x, y)| (x.to_vec(), y.to_vec())).unwrap();
+    let test = plrmr::data::Dataset::new(spec.p, xb, yb);
+    let mse = test.mse(model.alpha, &model.beta);
+    assert!((mse - 1.0).abs() < 0.2, "held-out mse {mse}");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn csv_shard_streaming_fit_recovers_truth() {
+    // file-parallel streaming ingestion: 6 shard files, each mapped by its
+    // own task in O(block) memory
+    let dir = tmp("csvstream");
+    let spec = SynthSpec::sparse_linear(12_000, 6, 0.4, 51);
+    let data = generate(&spec);
+    let shards = csv::write_shards(&data, &dir, "s", 6).unwrap();
+    let cfg = FitConfig::default().with_folds(5).with_lambdas(25).with_workers(4);
+    let report = Driver::new(cfg).fit_csv_shards(6, &shards).unwrap();
+    assert_eq!(report.map_metrics.records, 12_000);
+    assert_eq!(report.map_metrics.tasks_completed, 6);
+    let truth = spec.true_beta();
+    for j in 0..6 {
+        if truth[j] != 0.0 {
+            assert!(
+                (report.model.beta[j] - truth[j]).abs() < 0.2,
+                "beta[{j}]={} truth={}",
+                report.model.beta[j],
+                truth[j]
+            );
+        }
+    }
+    // deterministic across worker counts
+    let again = Driver::new(FitConfig { workers: 1, ..cfg })
+        .fit_csv_shards(6, &shards)
+        .unwrap();
+    assert_eq!(report.model.beta, again.model.beta);
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn one_pass_equals_oracle_through_entire_stack() {
+    // the paper's central claim, via the full MapReduce + CV pipeline
+    let data = generate(&SynthSpec::correlated(8000, 10, 0.6, 17));
+    let report = Driver::new(FitConfig::default().with_folds(5))
+        .fit(&data)
+        .unwrap();
+    let (oracle, _) = serial_cd(&data, Penalty::lasso(), report.lambda_opt, 1e-13, 100_000);
+    assert!(
+        rel_l2_err(&report.model.beta, &oracle.beta) < 1e-6,
+        "one-pass through engine+cv must equal raw-data CD"
+    );
+}
+
+#[test]
+fn chaos_does_not_change_models_at_system_level() {
+    let spec = SynthSpec::sparse_linear(60_000, 8, 0.25, 23);
+    let base = FitConfig {
+        folds: 5,
+        split_rows: 4096,
+        workers: 4,
+        ..Default::default()
+    };
+    let clean = Driver::new(base).fit_stream(&spec).unwrap();
+    let chaotic = Driver::new(FitConfig {
+        fault: FaultPlan::chaotic(0.25, 7),
+        ..base
+    })
+    .fit_stream(&spec)
+    .unwrap();
+    assert!(chaotic.map_metrics.retries > 0);
+    assert_eq!(clean.model.beta, chaotic.model.beta);
+}
+
+#[test]
+fn modeled_costs_flow_to_metrics() {
+    let data = generate(&SynthSpec::sparse_linear(2000, 3, 0.5, 5));
+    let cfg = FitConfig {
+        costs: JobCosts::hadoop_like(),
+        workers: 2,
+        split_rows: 500,
+        ..Default::default()
+    };
+    let report = Driver::new(cfg).fit(&data).unwrap();
+    assert!(report.map_metrics.modeled_overhead_s >= 15.0);
+    assert!(report.map_metrics.real_s < 5.0);
+}
+
+#[test]
+fn ridge_and_elastic_net_through_driver() {
+    let data = generate(&SynthSpec::correlated(6000, 8, 0.8, 29));
+    for pen in [Penalty::ridge(), Penalty::elastic_net(0.3)] {
+        let report = Driver::new(FitConfig::default().with_penalty(pen).with_folds(5))
+            .fit(&data)
+            .unwrap();
+        let (oracle, _) = serial_cd(&data, pen, report.lambda_opt, 1e-13, 100_000);
+        assert!(
+            rel_l2_err(&report.model.beta, &oracle.beta) < 1e-5,
+            "{} mismatch",
+            pen.family()
+        );
+    }
+}
+
+#[test]
+fn hlo_runtime_agrees_with_cpu_when_built() {
+    let dir = plrmr::runtime::default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    use plrmr::runtime::{Catalog, HloStatsMapper};
+    use plrmr::stats::SuffStats;
+    let catalog = Catalog::load(&dir).unwrap();
+    let p = 8;
+    let data = generate(&SynthSpec::sparse_linear(3000, p, 0.5, 31));
+    let mut mapper = HloStatsMapper::new(&catalog, p).unwrap();
+    let mut hlo = SuffStats::new(p);
+    mapper.fold_rows(&data.x, &data.y, &mut hlo).unwrap();
+    // fit from HLO statistics, compare against the full driver fit at the
+    // same λ
+    let q = hlo.quad_form();
+    let lambda = 0.08;
+    let sol = plrmr::solver::solve_cd(
+        &q,
+        Penalty::lasso(),
+        lambda,
+        None,
+        plrmr::solver::CdSettings::default(),
+    );
+    let (_, beta_hlo) = q.to_original_scale(&sol.beta);
+    let (oracle, _) = serial_cd(&data, Penalty::lasso(), lambda, 1e-12, 50_000);
+    assert!(rel_l2_err(&beta_hlo, &oracle.beta) < 1e-3);
+}
