@@ -64,6 +64,43 @@ fn main() {
         op_results.push(bench("quad_form p=64", cfg, || total.quad_form().p));
     }
 
+    // --- engine shuffle/reduce: the fixed merge tree over task outputs ---
+    {
+        use plrmr::mapreduce::{run_job, Emitter, EngineConfig, TaskCtx};
+        let p = 64;
+        let k = 10;
+        let n_tasks = 64usize;
+        let inputs: Vec<usize> = (0..n_tasks).collect();
+        let run = |combine: bool| {
+            let mut ecfg = EngineConfig::with_workers(8);
+            ecfg.combine = combine;
+            let map = |ctx: &TaskCtx, _t: &usize, em: &mut Emitter<usize, SuffStats>| {
+                // tiny per-task stats so tree-merge cost dominates the job
+                let mut rng = Rng::seed_from(ctx.task_id as u64 + 1);
+                for fold in 0..k {
+                    let mut s = SuffStats::new(p);
+                    for _ in 0..2 {
+                        let x: Vec<f64> = (0..p).map(|_| rng.normal()).collect();
+                        let y = rng.normal();
+                        s.push(&x, y);
+                    }
+                    em.emit(fold, s);
+                }
+            };
+            run_job(&ecfg, &inputs, map).unwrap()
+        };
+        op_results.push(bench(
+            &format!("engine tree-reduce w=8 ({n_tasks} tasks, k={k}, p={p})"),
+            cfg,
+            || run(false).metrics.reduce_s,
+        ));
+        op_results.push(bench(
+            &format!("engine tree-reduce + worker combine w=8 ({n_tasks} tasks)"),
+            cfg,
+            || run(true).metrics.reduce_s,
+        ));
+    }
+
     // --- CD solve cold/warm, CV sweep ---
     {
         let p = 64;
@@ -96,9 +133,10 @@ fn main() {
         }));
     }
 
-    // --- PJRT paths (when artifacts exist) ---
+    // --- PJRT paths (when artifacts exist AND the pjrt feature is on;
+    //     without the feature the runtime types are inert stubs) ---
     let dir = plrmr::runtime::default_artifacts_dir();
-    if dir.join("manifest.json").exists() {
+    if cfg!(feature = "pjrt") && dir.join("manifest.json").exists() {
         use plrmr::runtime::{Catalog, HloCdSolver, HloStatsMapper};
         let catalog = Catalog::load(&dir).unwrap();
         let p = 32;
@@ -124,7 +162,7 @@ fn main() {
             cd.solve(&q, 0.05, 1.0, 1e-6, 200).unwrap().len()
         }));
     } else {
-        eprintln!("(artifacts not built — skipping PJRT micro-benches)");
+        eprintln!("(artifacts not built or pjrt feature off — skipping PJRT micro-benches)");
     }
 
     println!("## micro-benchmarks (hot paths)\n");

@@ -9,7 +9,9 @@
 
 use std::time::Instant;
 
+use crate::mapreduce::JobMetrics;
 use crate::util::table::{sig, Table};
+use crate::util::timer::fmt_secs;
 
 /// Statistics of one benchmarked operation.
 #[derive(Debug, Clone)]
@@ -103,6 +105,30 @@ pub fn render(results: &[BenchStats]) -> String {
     t.render()
 }
 
+/// Render engine phase timings (map/shuffle/reduce split of
+/// [`JobMetrics`]) for a set of runs — the reporting surface of the
+/// parallel tree-reduce redesign (§Perf of EXPERIMENTS.md).
+pub fn render_job_phases(results: &[(String, JobMetrics)]) -> String {
+    let mut t = Table::new(vec![
+        "run", "map", "shuffle", "reduce", "total", "merge frac",
+        "payloads", "pre-combined", "leader merges",
+    ]);
+    for (name, m) in results {
+        t.row(vec![
+            name.clone(),
+            fmt_secs(m.map_s),
+            fmt_secs(m.shuffle_s),
+            fmt_secs(m.reduce_s),
+            fmt_secs(m.real_s),
+            sig(m.merge_fraction(), 3),
+            format!("{}", m.shuffle_payloads),
+            format!("{}", m.combined_nodes),
+            format!("{}", m.reduce_merges),
+        ]);
+    }
+    t.render()
+}
+
 /// Render with a throughput column (items supplied per benchmark).
 pub fn render_throughput(results: &[(BenchStats, f64, &str)]) -> String {
     let mut t = Table::new(vec!["benchmark", "mean", "throughput", "samples"]);
@@ -138,6 +164,24 @@ mod tests {
             std::thread::sleep(std::time::Duration::from_millis(5))
         });
         assert!(stats.samples < 1000, "budget must stop sampling, got {}", stats.samples);
+    }
+
+    #[test]
+    fn job_phase_render_contains_split() {
+        let m = JobMetrics {
+            real_s: 1.0,
+            map_s: 0.6,
+            shuffle_s: 0.1,
+            reduce_s: 0.3,
+            shuffle_payloads: 4,
+            combined_nodes: 2,
+            reduce_merges: 3,
+            ..Default::default()
+        };
+        let s = render_job_phases(&[("w=4".to_string(), m)]);
+        assert!(s.contains("| w=4"));
+        assert!(s.contains("merge frac"));
+        assert!(s.contains("0.400"));
     }
 
     #[test]

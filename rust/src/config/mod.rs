@@ -109,7 +109,12 @@ impl FitConfig {
 
     /// Engine view of this config.
     pub fn engine(&self) -> EngineConfig {
-        EngineConfig { workers: self.workers, costs: self.costs, fault: self.fault }
+        EngineConfig {
+            workers: self.workers,
+            costs: self.costs,
+            fault: self.fault,
+            ..Default::default()
+        }
     }
 
     /// Parse `key=value` lines (# comments allowed) over the defaults —

@@ -34,7 +34,8 @@ pub struct FitReport {
     pub cv: CvResult,
     /// λ grid used
     pub lambdas: Vec<f64>,
-    /// metrics of the single map/reduce job (the one data pass)
+    /// metrics of the single map/reduce job (the one data pass), including
+    /// the map/shuffle/reduce phase split of the parallel tree-reduce
     pub map_metrics: JobMetrics,
     /// rows per fold as realized by the random assignment
     pub fold_sizes: Vec<u64>,
@@ -424,6 +425,27 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn phase_metrics_flow_through_the_report() {
+        let data = generate(&SynthSpec::sparse_linear(4000, 5, 0.4, 3));
+        let report = Driver::new(small_cfg()).fit(&data).unwrap();
+        let m = &report.map_metrics;
+        assert!(m.map_s > 0.0, "map timing must be recorded");
+        assert!(
+            m.map_s + m.shuffle_s + m.reduce_s <= m.real_s + 1e-9,
+            "phases must partition the wallclock: {} + {} + {} vs {}",
+            m.map_s,
+            m.shuffle_s,
+            m.reduce_s,
+            m.real_s
+        );
+        assert!(m.shuffle_payloads > 0, "workers must hand payloads to the leader");
+        // with worker-side combining on, the leader sees far fewer
+        // payloads than tasks would imply only when tasks > workers; at
+        // minimum the accounting must be self-consistent
+        assert!(m.shuffle_payloads <= m.tasks_completed + m.combined_nodes);
     }
 
     #[test]

@@ -14,7 +14,6 @@ use anyhow::Result;
 use crate::mapreduce::{run_job, Emitter, EngineConfig, TaskCtx};
 use crate::solver::cd::{solve_cd, CdSettings};
 use crate::solver::penalty::Penalty;
-use crate::util::{mean, std_dev};
 
 use super::kfold::FoldStats;
 use super::select::CvResult;
@@ -77,38 +76,8 @@ pub fn cross_validate_parallel(
             nnz_m[li][fe.fold] = fe.nnz[li];
         }
     }
-    let mean_err: Vec<f64> = fold_err.iter().map(|r| mean(r)).collect();
-    let se_err: Vec<f64> = fold_err
-        .iter()
-        .map(|r| std_dev(r) / (k as f64).sqrt())
-        .collect();
-    let mean_nnz: Vec<f64> = nnz_m
-        .iter()
-        .map(|r| r.iter().sum::<usize>() as f64 / k as f64)
-        .collect();
-    let opt_index = mean_err
-        .iter()
-        .enumerate()
-        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-        .map(|(i, _)| i)
-        .unwrap();
-    let threshold = mean_err[opt_index] + se_err[opt_index];
-    let lambda_1se = lambdas
-        .iter()
-        .zip(&mean_err)
-        .find(|(_, e)| **e <= threshold)
-        .map(|(l, _)| *l)
-        .unwrap_or(lambdas[opt_index]);
-    Ok(CvResult {
-        lambdas: lambdas.to_vec(),
-        lambda_opt: lambdas[opt_index],
-        lambda_1se,
-        opt_index,
-        mean_err,
-        se_err,
-        fold_err,
-        mean_nnz,
-    })
+    // curve + opt/1-SE selection through the one shared rule in select.rs
+    Ok(super::select::summarize(lambdas, fold_err, nnz_m))
 }
 
 #[cfg(test)]

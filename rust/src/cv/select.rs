@@ -35,6 +35,59 @@ pub struct CvResult {
     pub opt_index: usize,
 }
 
+/// Assemble a [`CvResult`] from the raw (λ × fold) error and nnz matrices.
+///
+/// The single home of the mean/SE curve and the opt & 1-SE λ rule
+/// (Algorithm 1 lines 21–23): both the serial sweep below and the
+/// MapReduce CV job ([`crate::cv::parallel`]) summarize through here, so
+/// the two selection paths cannot drift.
+pub(crate) fn summarize(
+    lambdas: &[f64],
+    fold_err: Vec<Vec<f64>>,
+    nnz: Vec<Vec<usize>>,
+) -> CvResult {
+    debug_assert_eq!(lambdas.len(), fold_err.len());
+    debug_assert_eq!(lambdas.len(), nnz.len());
+    let k = fold_err.first().map(|row| row.len()).unwrap_or(0).max(1);
+    let mean_err: Vec<f64> = fold_err.iter().map(|row| mean(row)).collect();
+    let se_err: Vec<f64> = fold_err
+        .iter()
+        .map(|row| std_dev(row) / (k as f64).sqrt())
+        .collect();
+    let mean_nnz: Vec<f64> = nnz
+        .iter()
+        .map(|row| row.iter().sum::<usize>() as f64 / k as f64)
+        .collect();
+
+    let opt_index = mean_err
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap();
+    let lambda_opt = lambdas[opt_index];
+    // 1-SE rule: largest λ with mean_err ≤ min + se(min).  Grid is
+    // descending, so scan from the front.
+    let threshold = mean_err[opt_index] + se_err[opt_index];
+    let lambda_1se = lambdas
+        .iter()
+        .zip(&mean_err)
+        .find(|(_, e)| **e <= threshold)
+        .map(|(l, _)| *l)
+        .unwrap_or(lambda_opt);
+
+    CvResult {
+        lambdas: lambdas.to_vec(),
+        mean_err,
+        se_err,
+        fold_err,
+        mean_nnz,
+        lambda_opt,
+        lambda_1se,
+        opt_index,
+    }
+}
+
 /// Run k-fold CV over a descending λ grid.
 pub fn cross_validate(
     folds: &FoldStats,
@@ -65,43 +118,7 @@ pub fn cross_validate(
             warm = Some(sol.beta);
         }
     }
-    let mean_err: Vec<f64> = fold_err.iter().map(|row| mean(row)).collect();
-    let se_err: Vec<f64> = fold_err
-        .iter()
-        .map(|row| std_dev(row) / (k as f64).sqrt())
-        .collect();
-    let mean_nnz: Vec<f64> = nnz
-        .iter()
-        .map(|row| row.iter().sum::<usize>() as f64 / k as f64)
-        .collect();
-
-    let opt_index = mean_err
-        .iter()
-        .enumerate()
-        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-        .map(|(i, _)| i)
-        .unwrap();
-    let lambda_opt = lambdas[opt_index];
-    // 1-SE rule: largest λ with mean_err ≤ min + se(min).  Grid is
-    // descending, so scan from the front.
-    let threshold = mean_err[opt_index] + se_err[opt_index];
-    let lambda_1se = lambdas
-        .iter()
-        .zip(&mean_err)
-        .find(|(_, e)| **e <= threshold)
-        .map(|(l, _)| *l)
-        .unwrap_or(lambda_opt);
-
-    Ok(CvResult {
-        lambdas: lambdas.to_vec(),
-        mean_err,
-        se_err,
-        fold_err,
-        mean_nnz,
-        lambda_opt,
-        lambda_1se,
-        opt_index,
-    })
+    Ok(summarize(lambdas, fold_err, nnz))
 }
 
 #[cfg(test)]
@@ -120,6 +137,25 @@ mod tests {
             folds[assigner.fold_of(i as u64)].push(d.row(i), d.y[i]);
         }
         FoldStats::new(folds).unwrap()
+    }
+
+    #[test]
+    fn summarize_applies_opt_and_1se_rule() {
+        let lambdas = [1.0, 0.5, 0.25, 0.125];
+        let fold_err = vec![
+            vec![4.0, 4.0],
+            vec![2.0, 2.0],
+            vec![1.0, 1.0],
+            vec![1.5, 1.5],
+        ];
+        let nnz = vec![vec![0, 0], vec![1, 1], vec![2, 2], vec![3, 3]];
+        let cv = summarize(&lambdas, fold_err, nnz);
+        assert_eq!(cv.opt_index, 2);
+        assert_eq!(cv.lambda_opt, 0.25);
+        // zero fold spread → SE 0 → the 1-SE choice IS the optimum
+        assert_eq!(cv.lambda_1se, 0.25);
+        assert_eq!(cv.mean_nnz, vec![0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(cv.mean_err, vec![4.0, 2.0, 1.0, 1.5]);
     }
 
     #[test]

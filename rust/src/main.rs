@@ -206,6 +206,20 @@ fn cmd_fit(args: &[String]) -> Result<()> {
         report.map_metrics.tasks_completed,
         report.map_metrics.retries,
     );
+    {
+        use plrmr::util::timer::fmt_secs;
+        let m = &report.map_metrics;
+        println!(
+            "phase split: map {} | shuffle {} | reduce {} \
+             ({} payloads, {} combined nodes, {} leader merges)",
+            fmt_secs(m.map_s),
+            fmt_secs(m.shuffle_s),
+            fmt_secs(m.reduce_s),
+            m.shuffle_payloads,
+            m.combined_nodes,
+            m.reduce_merges,
+        );
+    }
     println!("fold sizes: {:?}", report.fold_sizes);
     if f.contains_key("curve") {
         println!("\n{}", cv_report(&report.cv));

@@ -1,33 +1,51 @@
 //! The leader/worker execution core.
 //!
-//! `run_job` executes one MapReduce job in-process: a worker pool pulls
-//! input splits from a retry queue, runs the user's map function with
-//! in-mapper combining ([`Emitter`]), and the leader reduces task outputs
-//! by key.  Reduction happens in *task order* (not completion order), so a
-//! job's output is bit-for-bit deterministic regardless of scheduling,
-//! stragglers, crashes or retries — the invariant the paper's exactness
-//! claim rides on, and one the tests assert directly.
+//! `run_job` executes one MapReduce job in-process in three phases:
+//!
+//! * **map** — a worker pool pulls input splits from a Condvar-backed retry
+//!   queue (idle workers block on the queue instead of sleep-polling) and
+//!   runs the user's map function with in-mapper combining ([`Emitter`]).
+//! * **shuffle** — workers *combine while they map*: outputs of
+//!   tree-adjacent task runs a worker happened to execute are pre-merged
+//!   locally along [`MergeTree`] node boundaries, so the leader receives
+//!   O(runs) payloads instead of O(tasks).
+//! * **reduce** — the remaining merges execute as a **fixed binary merge
+//!   tree over task ids**, level-parallel on the same worker pool.
+//!
+//! The tree shape depends only on `n_tasks` — never on scheduling — so a
+//! job's output is bit-for-bit deterministic regardless of worker count,
+//! stragglers, crashes or retries: the invariant the paper's exactness
+//! claim rides on, and one the tests assert directly.  (Floating-point
+//! Chan merges are not associative, so a completion-order reduce would
+//! break determinism; a fixed-shape tree cannot.)  Worker-side combining
+//! only ever collapses *complete* tree nodes, so it changes where a merge
+//! runs, never which merges run.
 
 use std::collections::{BTreeMap, VecDeque};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::Mutex;
-use std::time::{Duration, Instant};
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
 
 use anyhow::{bail, Result};
 
 use super::fault::{Fault, FaultPlan};
 use super::job::{JobCosts, JobMetrics, Mergeable, WorkerMetrics};
+use super::partition::MergeTree;
 
 /// Engine configuration for one job.
 #[derive(Debug, Clone, Copy)]
 pub struct EngineConfig {
-    /// worker pool size (mappers)
+    /// worker pool size (mappers + reduce-tree executors)
     pub workers: usize,
     /// modeled cluster scheduling costs (accounted, not slept)
     pub costs: JobCosts,
     /// fault/straggler injection plan
     pub fault: FaultPlan,
+    /// worker-side combining of tree-adjacent task outputs (on by default;
+    /// turn off to measure the pure reduce-tree path, e.g. the
+    /// `reduce_scaling` bench)
+    pub combine: bool,
 }
 
 impl Default for EngineConfig {
@@ -38,6 +56,7 @@ impl Default for EngineConfig {
                 .unwrap_or(4),
             costs: JobCosts::zero(),
             fault: FaultPlan::none(),
+            combine: true,
         }
     }
 }
@@ -106,11 +125,12 @@ pub struct JobOutput<K, V> {
     pub metrics: JobMetrics,
 }
 
-enum TaskMsg<K, V> {
+/// Control-plane message worker → leader.  Map *payloads* never travel
+/// through the channel: they flow through the shared merge-tree slots.
+enum TaskMsg {
     Done {
         task_id: usize,
         worker_id: usize,
-        map: BTreeMap<K, V>,
         records: u64,
         busy_s: f64,
         stalled: bool,
@@ -120,6 +140,114 @@ enum TaskMsg<K, V> {
         attempt: usize,
         worker_id: usize,
     },
+}
+
+/// Condvar-backed work queue: `pop` blocks until an item arrives or the
+/// queue is closed (no sleep-polling; idle workers wake immediately).
+struct NotifyQueue<T> {
+    state: Mutex<QueueState<T>>,
+    cv: Condvar,
+}
+
+struct QueueState<T> {
+    q: VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> NotifyQueue<T> {
+    fn new() -> Self {
+        NotifyQueue {
+            state: Mutex::new(QueueState { q: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn push(&self, item: T) {
+        let mut s = self.state.lock().unwrap();
+        s.q.push_back(item);
+        drop(s);
+        self.cv.notify_one();
+    }
+
+    fn push_all(&self, items: impl IntoIterator<Item = T>) {
+        let mut s = self.state.lock().unwrap();
+        s.q.extend(items);
+        drop(s);
+        self.cv.notify_all();
+    }
+
+    fn pop(&self) -> Option<T> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = s.q.pop_front() {
+                return Some(item);
+            }
+            if s.closed {
+                return None;
+            }
+            s = self.cv.wait(s).unwrap();
+        }
+    }
+
+    /// Close the queue and drop anything not yet started; blocked `pop`s
+    /// return `None`.
+    fn close(&self) {
+        let mut s = self.state.lock().unwrap();
+        s.q.clear();
+        s.closed = true;
+        drop(s);
+        self.cv.notify_all();
+    }
+}
+
+/// Countdown gate: `wait_zero` blocks until `done_one` has been called for
+/// every unit added.
+struct Gate {
+    n: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl Gate {
+    fn new(n: usize) -> Self {
+        Gate { n: Mutex::new(n), cv: Condvar::new() }
+    }
+
+    fn add(&self, k: usize) {
+        *self.n.lock().unwrap() += k;
+    }
+
+    fn done_one(&self) {
+        let mut n = self.n.lock().unwrap();
+        *n -= 1;
+        if *n == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    fn wait_zero(&self) {
+        let mut n = self.n.lock().unwrap();
+        while *n > 0 {
+            n = self.cv.wait(n).unwrap();
+        }
+    }
+}
+
+/// Merge two per-key maps, left-then-right.  This is the ONE merge function
+/// — worker combiners and the reduce tree both call it, so a given tree
+/// node's value is independent of *where* it was computed.
+fn merge_maps<K: Ord, V: Mergeable>(
+    mut left: BTreeMap<K, V>,
+    right: BTreeMap<K, V>,
+) -> BTreeMap<K, V> {
+    for (k, v) in right {
+        match left.get_mut(&k) {
+            Some(slot) => slot.merge_in(v),
+            None => {
+                left.insert(k, v);
+            }
+        }
+    }
+    left
 }
 
 /// Run one MapReduce job over `inputs` (one task per input split).
@@ -150,13 +278,23 @@ where
         });
     }
 
-    let queue: Mutex<VecDeque<(usize, usize)>> =
-        Mutex::new((0..n_tasks).map(|t| (t, 0)).collect());
-    let done = AtomicBool::new(false);
-    let (tx, rx) = mpsc::channel::<TaskMsg<K, V>>();
+    let tree = MergeTree::new(n_tasks);
+    // map tasks: (task_id, attempt)
+    let map_queue: NotifyQueue<(usize, usize)> = NotifyQueue::new();
+    map_queue.push_all((0..n_tasks).map(|t| (t, 0)));
+    // reduce-tree nodes, pushed level by level after the map phase
+    let reduce_queue: NotifyQueue<usize> = NotifyQueue::new();
+    // merge-tree value slots, heap-indexed (slot 0 unused)
+    let slots: Vec<Mutex<Option<BTreeMap<K, V>>>> =
+        (0..tree.node_count()).map(|_| Mutex::new(None)).collect();
+    // workers still flushing their combiner output
+    let flushed = Gate::new(workers);
+    // outstanding merges in the reduce level being executed
+    let level_pending = Gate::new(0);
+    let payload_count = AtomicUsize::new(0);
+    let combined_count = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<TaskMsg>();
 
-    let mut task_outputs: Vec<Option<BTreeMap<K, V>>> = Vec::new();
-    task_outputs.resize_with(n_tasks, || None);
     let mut metrics = JobMetrics {
         per_worker: vec![WorkerMetrics::default(); workers],
         ..Default::default()
@@ -166,52 +304,123 @@ where
     std::thread::scope(|scope| {
         for worker_id in 0..workers {
             let tx = tx.clone();
-            let queue = &queue;
-            let done = &done;
+            let map_queue = &map_queue;
+            let reduce_queue = &reduce_queue;
+            let slots = &slots;
+            let flushed = &flushed;
+            let level_pending = &level_pending;
+            let payload_count = &payload_count;
+            let combined_count = &combined_count;
             let map_fn = &map_fn;
             let fault = cfg.fault;
-            scope.spawn(move || loop {
-                let next = queue.lock().unwrap().pop_front();
-                let (task_id, attempt) = match next {
-                    Some(t) => t,
-                    None => {
-                        if done.load(Ordering::Acquire) {
-                            return;
+            let combine = cfg.combine;
+            scope.spawn(move || {
+                // tree-node → pre-merged value, disjoint spans by
+                // construction (collapsing consumes both children)
+                let mut combiner: BTreeMap<usize, BTreeMap<K, V>> = BTreeMap::new();
+                while let Some((task_id, attempt)) = map_queue.pop() {
+                    let t0 = Instant::now();
+                    let mut stalled = false;
+                    match fault.roll(task_id, attempt) {
+                        Some(Fault::Crash) => {
+                            let _ = tx.send(TaskMsg::Crashed { task_id, attempt, worker_id });
+                            continue;
                         }
-                        std::thread::sleep(Duration::from_micros(50));
-                        continue;
+                        Some(Fault::Straggle(d)) => {
+                            std::thread::sleep(d);
+                            stalled = true;
+                        }
+                        None => {}
                     }
-                };
-                let t0 = Instant::now();
-                let mut stalled = false;
-                match fault.roll(task_id, attempt) {
-                    Some(Fault::Crash) => {
-                        let _ = tx.send(TaskMsg::Crashed { task_id, attempt, worker_id });
-                        continue;
+                    let ctx = TaskCtx { task_id, attempt, worker_id };
+                    let mut emitter = Emitter::new();
+                    map_fn(&ctx, &inputs[task_id], &mut emitter);
+                    // worker-side combine: climb the merge tree while we
+                    // hold the sibling (or the sibling is pure padding).
+                    // Only *complete* nodes are ever formed, so the value
+                    // at each node is the value the reduce tree would have
+                    // computed anyway.
+                    let mut node = tree.leaf(task_id);
+                    let mut value = emitter.map;
+                    if combine {
+                        while node > 1 {
+                            let sib = tree.sibling(node);
+                            if node & 1 == 0 {
+                                // left child: an all-padding right sibling
+                                // merges as a no-op
+                                if tree.is_empty(sib) {
+                                    node = tree.parent(node);
+                                    continue;
+                                }
+                                match combiner.remove(&sib) {
+                                    Some(right) => {
+                                        value = merge_maps(value, right);
+                                        node = tree.parent(node);
+                                    }
+                                    None => break,
+                                }
+                            } else {
+                                // right child: the left sibling is never
+                                // padding (spans are left-aligned)
+                                match combiner.remove(&sib) {
+                                    Some(left) => {
+                                        value = merge_maps(left, value);
+                                        node = tree.parent(node);
+                                    }
+                                    None => break,
+                                }
+                            }
+                        }
                     }
-                    Some(Fault::Straggle(d)) => {
-                        std::thread::sleep(d);
-                        stalled = true;
-                    }
-                    None => {}
+                    combiner.insert(node, value);
+                    let _ = tx.send(TaskMsg::Done {
+                        task_id,
+                        worker_id,
+                        records: emitter.records,
+                        busy_s: t0.elapsed().as_secs_f64(),
+                        stalled,
+                    });
                 }
-                let ctx = TaskCtx { task_id, attempt, worker_id };
-                let mut emitter = Emitter::new();
-                map_fn(&ctx, &inputs[task_id], &mut emitter);
-                let _ = tx.send(TaskMsg::Done {
-                    task_id,
-                    worker_id,
-                    map: emitter.map,
-                    records: emitter.records,
-                    busy_s: t0.elapsed().as_secs_f64(),
-                    stalled,
-                });
+                // map queue closed — flush combiner output into the shared
+                // tree slots.  First writer wins; duplicate completions are
+                // bit-identical by the map-purity contract, so ties are
+                // value-neutral.
+                let mut payloads = 0usize;
+                let mut pre_combined = 0usize;
+                for (node, value) in combiner {
+                    let mut slot = slots[node].lock().unwrap();
+                    if slot.is_none() {
+                        *slot = Some(value);
+                        payloads += 1;
+                        if node < tree.first_leaf() {
+                            pre_combined += 1;
+                        }
+                    }
+                }
+                payload_count.fetch_add(payloads, Ordering::Relaxed);
+                combined_count.fetch_add(pre_combined, Ordering::Relaxed);
+                flushed.done_one();
+                // reduce phase: execute tree merges as the leader schedules
+                // them.  Jobs within a level touch disjoint slots.
+                while let Some(node) = reduce_queue.pop() {
+                    let left = slots[2 * node].lock().unwrap().take();
+                    let right = slots[2 * node + 1].lock().unwrap().take();
+                    let merged = match (left, right) {
+                        (Some(l), Some(r)) => Some(merge_maps(l, r)),
+                        (Some(l), None) => Some(l),
+                        (None, r) => r,
+                    };
+                    *slots[node].lock().unwrap() = merged;
+                    level_pending.done_one();
+                }
             });
         }
         drop(tx);
 
-        // Leader: collect completions, requeue crashes, stop at coverage.
+        // Leader, map phase: collect completions, requeue crashes, stop at
+        // coverage.
         let mut completed = 0usize;
+        let mut completed_set = vec![false; n_tasks];
         while completed < n_tasks {
             let msg = match rx.recv() {
                 Ok(m) => m,
@@ -222,12 +431,12 @@ where
             };
             metrics.attempts += 1;
             match msg {
-                TaskMsg::Done { task_id, worker_id, map, records, busy_s, stalled } => {
+                TaskMsg::Done { task_id, worker_id, records, busy_s, stalled } => {
                     // retries can double-complete a task if a straggler
                     // finishes after its clone; keep the first result (they
                     // are identical by construction).
-                    if task_outputs[task_id].is_none() {
-                        task_outputs[task_id] = Some(map);
+                    if !completed_set[task_id] {
+                        completed_set[task_id] = true;
                         completed += 1;
                         metrics.records += records;
                     }
@@ -249,30 +458,74 @@ where
                         ));
                         break;
                     }
-                    queue.lock().unwrap().push_back((task_id, attempt + 1));
+                    map_queue.push((task_id, attempt + 1));
                 }
             }
         }
-        done.store(true, Ordering::Release);
+        metrics.map_s = started.elapsed().as_secs_f64();
+        map_queue.close();
+
+        if failure.is_none() {
+            // Shuffle: wait until every worker has flushed its combiner.
+            flushed.wait_zero();
+            metrics.shuffle_s = started.elapsed().as_secs_f64() - metrics.map_s;
+            // Account attempts that finished after coverage (straggling
+            // duplicates); their sends happened-before the flush gate.
+            while let Ok(msg) = rx.try_recv() {
+                metrics.attempts += 1;
+                match msg {
+                    TaskMsg::Done { worker_id, records, busy_s, stalled, .. } => {
+                        let w = &mut metrics.per_worker[worker_id];
+                        w.tasks += 1;
+                        w.records += records;
+                        w.busy_s += busy_s;
+                        if stalled {
+                            w.simulated_stalls += 1;
+                        }
+                    }
+                    TaskMsg::Crashed { worker_id, .. } => {
+                        metrics.retries += 1;
+                        metrics.per_worker[worker_id].simulated_crashes += 1;
+                    }
+                }
+            }
+            // Reduce: execute the merge tree bottom-up, one level at a
+            // time; every node in a level merges in parallel on the pool.
+            // A node is already *covered* when it — or any ancestor — was
+            // pre-combined on a worker; covered subtrees need no merges
+            // (duplicate task copies leaked below a covered node are
+            // simply never consumed).
+            let t_reduce = Instant::now();
+            let mut covered = vec![false; tree.node_count()];
+            for node in 1..tree.node_count() {
+                covered[node] = (node > 1 && covered[node >> 1])
+                    || slots[node].lock().unwrap().is_some();
+            }
+            for lvl in (0..tree.depth()).rev() {
+                let jobs: Vec<usize> = tree
+                    .level(lvl)
+                    .filter(|&nd| !tree.is_empty(nd) && !covered[nd])
+                    .collect();
+                if jobs.is_empty() {
+                    continue;
+                }
+                metrics.reduce_merges += jobs.len();
+                level_pending.add(jobs.len());
+                reduce_queue.push_all(jobs);
+                level_pending.wait_zero();
+            }
+            metrics.reduce_s = t_reduce.elapsed().as_secs_f64();
+        }
+        reduce_queue.close();
     });
 
     if let Some(msg) = failure {
         bail!("mapreduce job failed: {msg}");
     }
 
-    // Reduce in task order → deterministic output independent of scheduling.
-    let mut output: BTreeMap<K, V> = BTreeMap::new();
-    for task_map in task_outputs.into_iter().flatten() {
-        for (k, v) in task_map {
-            match output.get_mut(&k) {
-                Some(slot) => slot.merge_in(v),
-                None => {
-                    output.insert(k, v);
-                }
-            }
-        }
-    }
-
+    let output = slots[1].lock().unwrap().take().unwrap_or_default();
+    metrics.shuffle_payloads = payload_count.load(Ordering::Relaxed);
+    metrics.combined_nodes = combined_count.load(Ordering::Relaxed);
     metrics.tasks_completed = n_tasks;
     metrics.real_s = started.elapsed().as_secs_f64();
     metrics.modeled_overhead_s = cfg.costs.overhead_s(n_tasks, workers);
@@ -284,6 +537,8 @@ mod tests {
     use super::*;
     use crate::mapreduce::partition::FoldAssigner;
     use crate::stats::SuffStats;
+    use crate::util::prop;
+    use std::time::Duration;
 
     /// word-count-shaped job: count records per key
     fn counting_job(cfg: &EngineConfig, splits: &[Vec<u64>]) -> JobOutput<usize, u64> {
@@ -301,6 +556,28 @@ mod tests {
             .collect()
     }
 
+    /// The old leader-side reduce: fold task outputs linearly in task
+    /// order.  For associative-exact values (integer counts) the fixed
+    /// merge tree must reproduce this bit-for-bit.
+    fn linear_reference(splits: &[Vec<u64>]) -> BTreeMap<usize, u64> {
+        let mut out: BTreeMap<usize, u64> = BTreeMap::new();
+        for split in splits {
+            let mut task: BTreeMap<usize, u64> = BTreeMap::new();
+            for &v in split {
+                *task.entry((v % 7) as usize).or_insert(0) += 1;
+            }
+            for (k, v) in task {
+                match out.get_mut(&k) {
+                    Some(slot) => *slot += v,
+                    None => {
+                        out.insert(k, v);
+                    }
+                }
+            }
+        }
+        out
+    }
+
     #[test]
     fn counts_cover_all_records() {
         let cfg = EngineConfig::with_workers(4);
@@ -316,8 +593,10 @@ mod tests {
     fn deterministic_across_worker_counts() {
         let data = splits(9, 257);
         let a = counting_job(&EngineConfig::with_workers(1), &data);
-        let b = counting_job(&EngineConfig::with_workers(8), &data);
-        assert_eq!(a.output, b.output);
+        for w in [2, 4, 8] {
+            let b = counting_job(&EngineConfig::with_workers(w), &data);
+            assert_eq!(a.output, b.output, "workers={w}");
+        }
     }
 
     #[test]
@@ -332,11 +611,13 @@ mod tests {
     fn survives_crashes_with_identical_output() {
         let data = splits(20, 50);
         let clean = counting_job(&EngineConfig::with_workers(4), &data);
-        let mut cfg = EngineConfig::with_workers(4);
-        cfg.fault = FaultPlan::chaotic(0.3, 77);
-        let chaotic = counting_job(&cfg, &data);
-        assert_eq!(clean.output, chaotic.output, "retries must not change output");
-        assert!(chaotic.metrics.retries > 0, "chaos plan should actually crash");
+        for w in [1, 4, 8] {
+            let mut cfg = EngineConfig::with_workers(w);
+            cfg.fault = FaultPlan::chaotic(0.3, 77);
+            let chaotic = counting_job(&cfg, &data);
+            assert_eq!(clean.output, chaotic.output, "retries must not change output (w={w})");
+            assert!(chaotic.metrics.retries > 0, "chaos plan should actually crash");
+        }
     }
 
     #[test]
@@ -356,6 +637,107 @@ mod tests {
         assert!(res.is_err());
         let msg = format!("{:#}", res.unwrap_err());
         assert!(msg.contains("attempts"), "{msg}");
+    }
+
+    #[test]
+    fn tree_reduce_matches_linear_reference_property() {
+        // Satellite invariant: for associative-exact merges the parallel
+        // tree reduce is bit-identical to the old task-order linear
+        // reduce, at every worker count, with and without worker-side
+        // combining, and under chaotic fault injection.
+        prop::for_all(prop::PropConfig { cases: 16, seed: 0xBEEF }, |rng, case| {
+            let n_tasks = 1 + rng.below(33);
+            let per = 1 + rng.below(64);
+            let data: Vec<Vec<u64>> = (0..n_tasks)
+                .map(|_| (0..per).map(|_| rng.next_u64() % 1000).collect())
+                .collect();
+            let reference = linear_reference(&data);
+            for workers in [1usize, 4, 8] {
+                for chaos in [false, true] {
+                    for combine in [false, true] {
+                        let mut cfg = EngineConfig::with_workers(workers);
+                        cfg.combine = combine;
+                        if chaos {
+                            cfg.fault = FaultPlan::chaotic(0.25, case as u64 + 1);
+                        }
+                        let out = counting_job(&cfg, &data);
+                        assert_eq!(
+                            out.output, reference,
+                            "w={workers} chaos={chaos} combine={combine}"
+                        );
+                    }
+                }
+            }
+        });
+    }
+
+    /// Bit-level fingerprint of a fold → SuffStats job output.
+    fn stats_bits(out: &BTreeMap<usize, SuffStats>) -> Vec<(usize, u64, Vec<u64>)> {
+        out.iter()
+            .map(|(fold, s)| {
+                let p = s.p();
+                let mut bits = Vec::new();
+                bits.push(s.syy().to_bits());
+                for i in 0..p {
+                    bits.push(s.sxy(i).to_bits());
+                    for j in i..p {
+                        bits.push(s.sxx(i, j).to_bits());
+                    }
+                }
+                (*fold, s.count(), bits)
+            })
+            .collect()
+    }
+
+    fn suffstats_job(cfg: &EngineConfig) -> JobOutput<usize, SuffStats> {
+        let p = 3;
+        let k = 4;
+        let rows: Vec<(Vec<f64>, f64)> = (0..700)
+            .map(|i| {
+                let x: Vec<f64> = (0..p).map(|j| ((i * 31 + j * 7) % 11) as f64 / 3.0).collect();
+                let y = x.iter().sum::<f64>() + (i % 5) as f64 / 7.0;
+                (x, y)
+            })
+            .collect();
+        let splits: Vec<(usize, Vec<(Vec<f64>, f64)>)> = rows
+            .chunks(37)
+            .scan(0usize, |off, c| {
+                let s = (*off, c.to_vec());
+                *off += c.len();
+                Some(s)
+            })
+            .collect();
+        let assigner = FoldAssigner::new(k, 123);
+        run_job(cfg, &splits, move |_ctx, (offset, chunk), em| {
+            for (i, (x, y)) in chunk.iter().enumerate() {
+                let fold = assigner.fold_of((offset + i) as u64);
+                em.upsert_with(fold, || SuffStats::new(p), |s| s.push(x, *y));
+            }
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn float_stats_bit_identical_across_workers_and_faults() {
+        // Chan merges do NOT associate, so this only holds because the
+        // merge tree's shape is fixed by n_tasks — the tentpole invariant.
+        let baseline = stats_bits(&suffstats_job(&EngineConfig::with_workers(1)).output);
+        for workers in [1usize, 4, 8] {
+            for combine in [false, true] {
+                for chaos in [false, true] {
+                    let mut cfg = EngineConfig::with_workers(workers);
+                    cfg.combine = combine;
+                    if chaos {
+                        cfg.fault = FaultPlan::chaotic(0.3, 99);
+                    }
+                    let got = stats_bits(&suffstats_job(&cfg).output);
+                    assert_eq!(
+                        got, baseline,
+                        "bit drift at w={workers} combine={combine} chaos={chaos}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]
@@ -429,5 +811,40 @@ mod tests {
         assert!(out.metrics.real_s < 5.0, "must not actually sleep 100s");
         assert_eq!(out.metrics.modeled_overhead_s, 102.0); // 100 + 2 waves
         assert!(out.metrics.modeled_total_s() > 100.0);
+    }
+
+    #[test]
+    fn phase_metrics_and_combiner_accounting() {
+        let data = splits(16, 64);
+        // single worker + combining: the whole tree collapses on the
+        // worker, so the leader schedules no reduce merges at all
+        let solo = counting_job(&EngineConfig::with_workers(1), &data);
+        assert_eq!(solo.metrics.shuffle_payloads, 1);
+        assert_eq!(solo.metrics.reduce_merges, 0);
+        assert!(solo.metrics.combined_nodes >= 1);
+        // combining off: every task reaches the leader as its own payload
+        // and the full tree (n_tasks - 1 internal merges) runs in reduce
+        let mut cfg = EngineConfig::with_workers(4);
+        cfg.combine = false;
+        let split_run = counting_job(&cfg, &data);
+        assert_eq!(split_run.metrics.shuffle_payloads, 16);
+        assert_eq!(split_run.metrics.reduce_merges, 15);
+        assert_eq!(split_run.metrics.combined_nodes, 0);
+        assert_eq!(solo.output, split_run.output);
+        // phase timings partition the wallclock
+        let m = &split_run.metrics;
+        assert!(m.map_s > 0.0);
+        assert!(m.map_s + m.shuffle_s + m.reduce_s <= m.real_s + 1e-9);
+    }
+
+    #[test]
+    fn single_task_job() {
+        let cfg = EngineConfig::with_workers(4);
+        let out = counting_job(&cfg, &splits(1, 30));
+        let total: u64 = out.output.values().sum();
+        assert_eq!(total, 30);
+        assert_eq!(out.metrics.tasks_completed, 1);
+        assert_eq!(out.metrics.shuffle_payloads, 1);
+        assert_eq!(out.metrics.reduce_merges, 0);
     }
 }

@@ -93,11 +93,22 @@ pub struct WorkerMetrics {
     pub simulated_stalls: usize,
 }
 
-/// Whole-job accounting.
+/// Whole-job accounting, split by engine phase.
+///
+/// `real_s` is the end-to-end wallclock; `map_s`/`shuffle_s`/`reduce_s`
+/// break it down: map = job start → every task covered, shuffle = workers
+/// flushing their combiner output to the leader's merge-tree slots,
+/// reduce = the level-parallel execution of the remaining tree merges.
 #[derive(Debug, Clone, Default)]
 pub struct JobMetrics {
     /// real wallclock of the in-process run
     pub real_s: f64,
+    /// map phase: start → full task coverage
+    pub map_s: f64,
+    /// shuffle phase: coverage → all worker combiners flushed
+    pub shuffle_s: f64,
+    /// reduce phase: parallel merge-tree execution
+    pub reduce_s: f64,
     /// modeled cluster scheduling overhead (see [`JobCosts`])
     pub modeled_overhead_s: f64,
     pub tasks_completed: usize,
@@ -105,6 +116,13 @@ pub struct JobMetrics {
     pub attempts: usize,
     pub retries: usize,
     pub records: u64,
+    /// payloads handed to the leader (tree nodes flushed by workers);
+    /// without worker-side combining this is ≥ n_tasks, with it O(workers)
+    pub shuffle_payloads: usize,
+    /// internal tree nodes pre-merged on workers (combiner effectiveness)
+    pub combined_nodes: usize,
+    /// merge-tree nodes the reduce phase still had to compute
+    pub reduce_merges: usize,
     pub per_worker: Vec<WorkerMetrics>,
 }
 
@@ -117,6 +135,16 @@ impl JobMetrics {
     pub fn throughput_rows_per_s(&self) -> f64 {
         if self.real_s > 0.0 {
             self.records as f64 / self.real_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Fraction of the job spent merging (shuffle + reduce) rather than
+    /// mapping — the quantity the tree-reduce redesign drives down.
+    pub fn merge_fraction(&self) -> f64 {
+        if self.real_s > 0.0 {
+            (self.shuffle_s + self.reduce_s) / self.real_s
         } else {
             0.0
         }
@@ -170,5 +198,18 @@ mod tests {
         let m = JobMetrics { real_s: 2.0, records: 100, ..Default::default() };
         assert_eq!(m.throughput_rows_per_s(), 50.0);
         assert_eq!(m.modeled_total_s(), 2.0);
+    }
+
+    #[test]
+    fn merge_fraction_from_phase_split() {
+        let m = JobMetrics {
+            real_s: 4.0,
+            map_s: 3.0,
+            shuffle_s: 0.5,
+            reduce_s: 0.5,
+            ..Default::default()
+        };
+        assert_eq!(m.merge_fraction(), 0.25);
+        assert_eq!(JobMetrics::default().merge_fraction(), 0.0);
     }
 }

@@ -8,12 +8,18 @@
 //! with the operational realities that make the paper's "one job vs many
 //! jobs" argument meaningful:
 //!
-//! * a leader with a retry-on-failure task queue ([`engine`]),
+//! * a leader with a retry-on-failure, Condvar-woken task queue
+//!   ([`engine`]) — no sleep-polling anywhere on the hot path,
 //! * deterministic fault & straggler injection ([`fault`]) — retries must
 //!   not change the answer, which our per-task (not per-attempt) seeding
 //!   guarantees and the tests assert,
 //! * in-mapper combining ([`engine::Emitter`]) — values merge eagerly so a
 //!   task's output is O(k·p²) regardless of how many records it scanned,
+//! * a **parallel deterministic reduce**: task outputs merge along a fixed
+//!   binary tree over task ids ([`partition::MergeTree`]), executed
+//!   level-parallel by the worker pool, with workers pre-combining
+//!   tree-adjacent runs during the map phase — so the O(n_tasks · k · p²)
+//!   merge work no longer serializes on the leader,
 //! * modeled per-job/per-task scheduling overhead ([`job::JobCosts`]) so
 //!   experiments can report *cluster-shaped* time for iterative baselines
 //!   (ADMM pays the job overhead once per iteration; Algorithm 1 pays it
@@ -27,4 +33,4 @@ pub mod partition;
 pub use engine::{run_job, Emitter, EngineConfig, JobOutput, TaskCtx};
 pub use fault::FaultPlan;
 pub use job::{JobCosts, JobMetrics, Mergeable};
-pub use partition::FoldAssigner;
+pub use partition::{FoldAssigner, MergeTree};

@@ -39,6 +39,82 @@ pub fn hash_partition(key_hash: u64, shards: usize) -> usize {
     (key_hash % shards as u64) as usize
 }
 
+/// The engine's fixed-shape binary reduce tree over task ids.
+///
+/// Nodes are heap-indexed: the root is node 1, node `i` has children `2i`
+/// and `2i+1`, and task `t`'s leaf is node `first_leaf() + t`.  Leaves are
+/// padded to the next power of two; nodes covering only padding are
+/// "empty" and merge as no-ops.  The shape is a pure function of `n_tasks`
+/// — never of worker count or scheduling — which is what keeps the
+/// parallel reduce bit-for-bit deterministic even though floating-point
+/// Chan merges do not associate.
+#[derive(Debug, Clone, Copy)]
+pub struct MergeTree {
+    n_tasks: usize,
+    /// padded leaf count (power of two)
+    m: usize,
+}
+
+impl MergeTree {
+    pub fn new(n_tasks: usize) -> Self {
+        assert!(n_tasks > 0, "merge tree needs at least one task");
+        MergeTree { n_tasks, m: n_tasks.next_power_of_two() }
+    }
+
+    pub fn n_tasks(&self) -> usize {
+        self.n_tasks
+    }
+
+    /// Heap index of the first leaf (== padded leaf count).
+    pub fn first_leaf(&self) -> usize {
+        self.m
+    }
+
+    /// Heap slots to allocate (index 0 is unused).
+    pub fn node_count(&self) -> usize {
+        2 * self.m
+    }
+
+    /// Number of internal levels (0 for a single-task tree).
+    pub fn depth(&self) -> usize {
+        self.m.ilog2() as usize
+    }
+
+    /// Leaf node of task `task`.
+    pub fn leaf(&self, task: usize) -> usize {
+        debug_assert!(task < self.n_tasks);
+        self.m + task
+    }
+
+    pub fn parent(&self, node: usize) -> usize {
+        node >> 1
+    }
+
+    pub fn sibling(&self, node: usize) -> usize {
+        node ^ 1
+    }
+
+    /// Half-open range of task ids covered by `node`.
+    pub fn span(&self, node: usize) -> (usize, usize) {
+        debug_assert!(node >= 1 && node < 2 * self.m);
+        let level = node.ilog2() as usize;
+        let width = self.m >> level;
+        let start = (node - (1usize << level)) * width;
+        (start, start + width)
+    }
+
+    /// True if `node` covers only padding (no real tasks).
+    pub fn is_empty(&self, node: usize) -> bool {
+        self.span(node).0 >= self.n_tasks
+    }
+
+    /// Heap indices of internal level `lvl` (root is level 0).
+    pub fn level(&self, lvl: usize) -> std::ops::Range<usize> {
+        debug_assert!(lvl < self.depth().max(1));
+        (1usize << lvl)..(1usize << (lvl + 1))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -107,5 +183,64 @@ mod tests {
         for h in [0u64, 1, u64::MAX] {
             assert!(hash_partition(h, 7) < 7);
         }
+    }
+
+    #[test]
+    fn merge_tree_spans_partition_the_tasks() {
+        for n_tasks in [1usize, 2, 3, 5, 8, 13, 64, 100] {
+            let t = MergeTree::new(n_tasks);
+            // leaves cover exactly 0..n_tasks
+            for task in 0..n_tasks {
+                let leaf = t.leaf(task);
+                assert_eq!(t.span(leaf), (task, task + 1));
+                assert!(!t.is_empty(leaf));
+            }
+            // every internal node's span is the union of its children's
+            for node in 1..t.first_leaf() {
+                let (s, e) = t.span(node);
+                let (ls, le) = t.span(2 * node);
+                let (rs, re) = t.span(2 * node + 1);
+                assert_eq!((s, e), (ls, re));
+                assert_eq!(le, rs);
+            }
+            // each internal level exactly tiles [0, padded) in order
+            for lvl in 0..t.depth() {
+                let mut expect = 0;
+                for node in t.level(lvl) {
+                    let (s, e) = t.span(node);
+                    assert_eq!(s, expect);
+                    expect = e;
+                }
+                assert_eq!(expect, t.first_leaf());
+            }
+        }
+    }
+
+    #[test]
+    fn merge_tree_empty_padding_nodes() {
+        let t = MergeTree::new(5); // padded to 8
+        assert_eq!(t.first_leaf(), 8);
+        assert_eq!(t.depth(), 3);
+        // leaves 5..8 are padding
+        for pad in 5..8 {
+            assert!(t.is_empty(8 + pad));
+        }
+        // node covering tasks 4..8 is NOT empty (task 4 is real)
+        let node_4_8 = 3; // root=1 covers 0..8; children 2 (0..4), 3 (4..8)
+        assert_eq!(t.span(node_4_8), (4, 8));
+        assert!(!t.is_empty(node_4_8));
+        // node covering 6..8 is empty
+        let node_6_8 = 7;
+        assert_eq!(t.span(node_6_8), (6, 8));
+        assert!(t.is_empty(node_6_8));
+    }
+
+    #[test]
+    fn merge_tree_single_task_is_just_the_root_leaf() {
+        let t = MergeTree::new(1);
+        assert_eq!(t.first_leaf(), 1);
+        assert_eq!(t.depth(), 0);
+        assert_eq!(t.leaf(0), 1);
+        assert_eq!(t.span(1), (0, 1));
     }
 }

@@ -17,14 +17,28 @@
 //!   convergence loop, cross-checked against the f64 solver in tests.
 
 pub mod artifact;
+#[cfg(feature = "pjrt")]
 pub mod client;
+#[cfg(feature = "pjrt")]
 pub mod hlo_cd;
+#[cfg(feature = "pjrt")]
 pub mod hlo_stats;
+/// Without the `pjrt` feature (and its `xla` dependency) the runtime types
+/// compile as inert stubs: same API, constructors fail with a pointer at
+/// the feature flag, so the CLI/benches/examples build and degrade to the
+/// pure-CPU path.
+#[cfg(not(feature = "pjrt"))]
+pub mod stub;
 
 pub use artifact::{Artifact, ArtifactKind, Catalog};
+#[cfg(feature = "pjrt")]
 pub use client::Session;
+#[cfg(feature = "pjrt")]
 pub use hlo_cd::HloCdSolver;
+#[cfg(feature = "pjrt")]
 pub use hlo_stats::HloStatsMapper;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{HloCdSolver, HloStatsMapper, Session};
 
 /// Default artifacts directory: `$PLRMR_ARTIFACTS` or `./artifacts`.
 pub fn default_artifacts_dir() -> std::path::PathBuf {

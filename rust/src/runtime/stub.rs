@@ -1,0 +1,101 @@
+//! Inert stand-ins for the PJRT runtime, compiled when the `pjrt` feature
+//! is off (the `xla` crate is not part of the offline vendor set).  They
+//! keep the public API surface — CLI subcommands, benches, examples —
+//! compiling; every constructor fails with a clear pointer at the feature
+//! flag, so callers degrade to the pure-CPU path at runtime instead of
+//! failing at link time.
+
+use anyhow::{bail, Result};
+
+use crate::stats::suffstats::QuadForm;
+use crate::stats::SuffStats;
+
+use super::artifact::Catalog;
+
+const NO_PJRT: &str = "plrmr was built without the `pjrt` feature; \
+rebuild with `--features pjrt` (requires the vendored `xla` crate) to \
+execute AOT HLO artifacts";
+
+/// Stand-in for the PJRT CPU session.
+#[derive(Debug)]
+pub struct Session {
+    _private: (),
+}
+
+impl Session {
+    pub fn cpu() -> Result<Self> {
+        bail!(NO_PJRT)
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable (pjrt feature off)".into()
+    }
+
+    pub fn cached_executables(&self) -> usize {
+        0
+    }
+}
+
+/// Stand-in for the Pallas-backed chunk-statistics mapper.
+#[derive(Debug)]
+pub struct HloStatsMapper {
+    pub block_n: usize,
+    pub p: usize,
+    pub hlo_blocks: usize,
+    pub cpu_rows: u64,
+}
+
+impl HloStatsMapper {
+    pub fn new(_catalog: &Catalog, _p: usize) -> Result<Self> {
+        bail!(NO_PJRT)
+    }
+
+    pub fn fold_rows(&mut self, _x: &[f64], _y: &[f64], _acc: &mut SuffStats) -> Result<()> {
+        bail!(NO_PJRT)
+    }
+}
+
+/// Stand-in for the fused coordinate-descent sweep kernel driver.
+#[derive(Debug)]
+pub struct HloCdSolver {
+    pub p: usize,
+    pub sweeps_per_call: usize,
+    pub calls: usize,
+}
+
+impl HloCdSolver {
+    pub fn new(_catalog: &Catalog, _p: usize) -> Result<Self> {
+        bail!(NO_PJRT)
+    }
+
+    pub fn solve(
+        &mut self,
+        _q: &QuadForm,
+        _lambda: f64,
+        _alpha_en: f64,
+        _tol: f64,
+        _max_calls: usize,
+    ) -> Result<Vec<f64>> {
+        bail!(NO_PJRT)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_point_at_the_feature_flag() {
+        let catalog = Catalog::parse(
+            std::path::Path::new("."),
+            r#"{"format": 1, "artifacts": []}"#,
+        )
+        .unwrap();
+        let err = format!("{:#}", HloStatsMapper::new(&catalog, 8).unwrap_err());
+        assert!(err.contains("pjrt"), "{err}");
+        let err = format!("{:#}", HloCdSolver::new(&catalog, 8).unwrap_err());
+        assert!(err.contains("pjrt"), "{err}");
+        let err = format!("{:#}", Session::cpu().unwrap_err());
+        assert!(err.contains("pjrt"), "{err}");
+    }
+}

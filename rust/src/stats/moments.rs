@@ -18,6 +18,14 @@ pub const BLOCK_MIN_ROWS: usize = 16;
 /// Transpose-buffer budget for the blocked path (f64 elements ≈ 2 MiB).
 const BLOCK_BUF_ELEMS: usize = 256 * 1024;
 
+/// Rows per cache-resident sub-block for dimension `d`.  Shared by
+/// [`Moments::push_block`] and `SuffStats::push_rows` so both chunk input
+/// identically — which keeps their merge associations (and therefore their
+/// float results) bit-identical.
+pub(crate) fn block_rows(d: usize) -> usize {
+    (BLOCK_BUF_ELEMS / d.max(1)).clamp(BLOCK_MIN_ROWS, 256)
+}
+
 /// Packed-upper-triangular index for (i, j) with i ≤ j in dimension d.
 #[inline]
 pub fn tri_idx(d: usize, i: usize, j: usize) -> usize {
@@ -192,7 +200,7 @@ impl Moments {
         }
         // process in bounded sub-blocks so the transposed block (d×b
         // doubles) stays cache-resident across its d²/2 column-pair reads
-        let max_rows = (BLOCK_BUF_ELEMS / d).clamp(BLOCK_MIN_ROWS, 256);
+        let max_rows = block_rows(d);
         for chunk in rows.chunks(max_rows * d) {
             let b = chunk.len() / d;
             if b < BLOCK_MIN_ROWS {

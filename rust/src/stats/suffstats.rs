@@ -11,12 +11,22 @@
 use super::moments::Moments;
 
 /// Additive sufficient statistics for penalized linear regression.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone)]
 pub struct SuffStats {
     inner: Moments,
     p: usize,
     /// scratch z-row buffer for push
     zbuf: Vec<f64>,
+    /// reusable interleave buffer for push_rows (one sub-block, not the
+    /// whole input — see `push_rows`)
+    zblock: Vec<f64>,
+}
+
+impl PartialEq for SuffStats {
+    /// Value equality: scratch buffers are not part of the statistic.
+    fn eq(&self, other: &Self) -> bool {
+        self.p == other.p && self.inner == other.inner
+    }
 }
 
 /// The standardized quadratic form the CD solver minimizes (paper eq. 17):
@@ -45,13 +55,13 @@ pub struct QuadForm {
 
 impl SuffStats {
     pub fn new(p: usize) -> Self {
-        SuffStats { inner: Moments::new(p + 1), p, zbuf: vec![0.0; p + 1] }
+        SuffStats { inner: Moments::new(p + 1), p, zbuf: vec![0.0; p + 1], zblock: Vec::new() }
     }
 
     /// Wrap an existing z-moments accumulator (dim must be p+1).
     pub fn from_moments(p: usize, inner: Moments) -> Self {
         assert_eq!(inner.dim(), p + 1, "moments dim must be p+1");
-        SuffStats { inner, p, zbuf: vec![0.0; p + 1] }
+        SuffStats { inner, p, zbuf: vec![0.0; p + 1], zblock: Vec::new() }
     }
 
     /// Access the underlying z-moments (e.g. for engine-level merging).
@@ -84,20 +94,34 @@ impl SuffStats {
     }
 
     /// Fold a whole row-major block of observations in at once — the
-    /// mapper fast path.  Interleaves (x, y) into z rows and dispatches to
+    /// mapper fast path.  Interleaves (x, y) into z rows one cache-sized
+    /// sub-block at a time (a reused O(block) scratch, NOT an O(n·d)
+    /// allocation per call) and dispatches each to
     /// [`Moments::push_block`], whose cache-blocked centered-gram path is
     /// several times faster than per-row rank-1 updates (see §Perf in
     /// EXPERIMENTS.md) while remaining a robust Chan-merge pipeline.
+    ///
+    /// The sub-block size matches `push_block`'s internal chunking, so the
+    /// result is bit-identical to interleaving the whole block first.
     pub fn push_rows(&mut self, x: &[f64], y: &[f64]) {
         let n = y.len();
         assert_eq!(x.len(), n * self.p, "x must be n*p row-major");
         let d = self.p + 1;
-        let mut z = vec![0.0; n * d];
-        for r in 0..n {
-            z[r * d..r * d + self.p].copy_from_slice(&x[r * self.p..(r + 1) * self.p]);
-            z[r * d + self.p] = y[r];
+        let chunk_rows = super::moments::block_rows(d);
+        // take the scratch out so `self.inner` stays mutably borrowable
+        let mut z = std::mem::take(&mut self.zblock);
+        let mut r0 = 0;
+        while r0 < n {
+            let r1 = (r0 + chunk_rows).min(n);
+            z.clear();
+            for r in r0..r1 {
+                z.extend_from_slice(&x[r * self.p..(r + 1) * self.p]);
+                z.push(y[r]);
+            }
+            self.inner.push_block(&z);
+            r0 = r1;
         }
-        self.inner.push_block(&z);
+        self.zblock = z;
     }
 
     /// Weighted observation: equivalent to pushing (x, y) `w` times (for
@@ -491,6 +515,39 @@ mod tests {
         }
         // weighted MSE matches the duplicated-data MSE
         assert!((weighted.mse(aa, &ba) - duplicated.mse(aa, &ba)).abs() < 1e-8);
+    }
+
+    #[test]
+    fn push_rows_bitwise_equals_whole_block_interleave() {
+        // the chunked reusable-scratch path must be bit-identical to
+        // materializing the whole z-block and pushing it at once (the two
+        // chunk the input identically via moments::block_rows)
+        use crate::stats::Moments;
+        let mut rng = Rng::seed_from(77);
+        let p = 3;
+        let d = p + 1;
+        for n in [1usize, 15, 16, 255, 256, 257, 600] {
+            let x: Vec<f64> = (0..n * p).map(|_| rng.normal_ms(1.0, 2.0)).collect();
+            let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let mut s = SuffStats::new(p);
+            s.push_rows(&x, &y);
+            let mut z = vec![0.0; n * d];
+            for r in 0..n {
+                z[r * d..r * d + p].copy_from_slice(&x[r * p..(r + 1) * p]);
+                z[r * d + p] = y[r];
+            }
+            let mut m = Moments::new(d);
+            m.push_block(&z);
+            let whole = SuffStats::from_moments(p, m);
+            assert_eq!(s.count(), whole.count(), "n={n}");
+            assert_eq!(s.syy().to_bits(), whole.syy().to_bits(), "n={n}");
+            for i in 0..p {
+                assert_eq!(s.sxy(i).to_bits(), whole.sxy(i).to_bits(), "n={n} i={i}");
+                for j in i..p {
+                    assert_eq!(s.sxx(i, j).to_bits(), whole.sxx(i, j).to_bits(), "n={n}");
+                }
+            }
+        }
     }
 
     #[test]
