@@ -1,0 +1,209 @@
+//! Packed-symmetric vs dense-square statistics (§Perf of EXPERIMENTS.md).
+//!
+//! The one-pass sufficient statistic is symmetric, so since the SymMat
+//! refactor every O(p²) object on the fit path (M2, the standardized Gram,
+//! fold complements) stores p(p+1)/2 doubles instead of p².  This bench
+//! quantifies the three places that matters:
+//!
+//! * **merge** — the packed Chan merge vs an in-bench dense-square
+//!   reference (the pre-refactor representation): half the doubles
+//!   touched per combiner/reduce merge.
+//! * **train complement** — `FoldStats::train_for` (alloc per call) vs
+//!   `train_into` (one reused scratch): the CV phase's k-per-sweep path.
+//! * **full CV sweep** — end-to-end λ-grid cross-validation wall-clock.
+//!
+//! It also prints the resident-memory arithmetic for the (k+1) fold
+//! statistics and the engine's measured `JobMetrics::shuffle_bytes` for a
+//! SuffStats job.
+//!
+//! Run: `cargo bench --bench gram_packed [-- --quick]`
+
+use plrmr::bench::{bench, fmt_bytes, render, BenchConfig};
+use plrmr::cv::{cross_validate, FoldStats};
+use plrmr::mapreduce::{run_job, Emitter, EngineConfig, FoldAssigner, TaskCtx};
+use plrmr::rng::Rng;
+use plrmr::solver::path::lambda_grid;
+use plrmr::solver::{CdSettings, Penalty};
+use plrmr::stats::symm::tri_len;
+use plrmr::stats::SuffStats;
+use plrmr::util::table::{sig, Table};
+
+/// The pre-refactor representation: a dense-square (d×d) centered scatter
+/// with the same weighted Chan merge — the baseline the packed kernels are
+/// timed against.  Values are arbitrary; merge cost is data-independent.
+struct DenseStats {
+    d: usize,
+    w: f64,
+    mean: Vec<f64>,
+    m2: Vec<f64>,
+}
+
+impl DenseStats {
+    fn random(d: usize, w: f64, rng: &mut Rng) -> Self {
+        DenseStats {
+            d,
+            w,
+            mean: (0..d).map(|_| rng.normal()).collect(),
+            m2: (0..d * d).map(|_| rng.normal().abs()).collect(),
+        }
+    }
+
+    fn merge(&mut self, other: &DenseStats) {
+        let d = self.d;
+        let (m, n) = (self.w, other.w);
+        let total = m + n;
+        let w_other = n / total;
+        let coef = m * n / total;
+        let delta: Vec<f64> = (0..d).map(|i| other.mean[i] - self.mean[i]).collect();
+        for i in 0..d {
+            let ci = coef * delta[i];
+            let row = &mut self.m2[i * d..(i + 1) * d];
+            let orow = &other.m2[i * d..(i + 1) * d];
+            for ((s, &o), &dj) in row.iter_mut().zip(orow).zip(&delta) {
+                *s += o + ci * dj;
+            }
+        }
+        for i in 0..d {
+            self.mean[i] += delta[i] * w_other;
+        }
+        self.w = total;
+    }
+}
+
+/// SuffStats chunk filled from a deterministic stream.
+fn chunk(p: usize, rows: usize, seed: u64) -> SuffStats {
+    let mut rng = Rng::seed_from(seed);
+    let x: Vec<f64> = (0..rows * p).map(|_| rng.normal_ms(1.0, 2.0)).collect();
+    let y: Vec<f64> = (0..rows).map(|_| rng.normal()).collect();
+    let mut s = SuffStats::new(p);
+    s.push_rows(&x, &y);
+    s
+}
+
+fn fold_stats(p: usize, k: usize, rows_per_fold: usize, seed: u64) -> FoldStats {
+    let folds: Vec<SuffStats> = (0..k)
+        .map(|i| chunk(p, rows_per_fold, seed + i as u64))
+        .collect();
+    FoldStats::new(folds).expect("valid folds")
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let cfg = if quick { BenchConfig::quick() } else { BenchConfig::default() };
+    let ps: &[usize] = if quick { &[16, 64] } else { &[64, 256, 1024] };
+    let k = 10;
+
+    println!("## gram_packed — packed-symmetric vs dense-square statistics\n");
+
+    // --- resident-memory arithmetic ------------------------------------
+    let mut mem = Table::new(vec![
+        "p", "packed/stat", "dense/stat", "ratio", "(k+1) stats packed", "dense",
+    ]);
+    for &p in ps {
+        let d = p + 1;
+        let packed = 8 * (2 + d + tri_len(d));
+        let dense = 8 * (2 + d + d * d);
+        mem.row(vec![
+            format!("{p}"),
+            fmt_bytes(packed),
+            fmt_bytes(dense),
+            sig(dense as f64 / packed as f64, 3),
+            fmt_bytes((k + 1) * packed),
+            fmt_bytes((k + 1) * dense),
+        ]);
+    }
+    println!("{}\n", mem.render());
+
+    // --- merge / complement / CV timings -------------------------------
+    let mut results = Vec::new();
+    for &p in ps {
+        let d = p + 1;
+        let rows = 256.min(64 * 1024 / p.max(1)).max(32);
+
+        // packed Chan merge (the shipping representation)
+        let a = chunk(p, rows, 11);
+        let b = chunk(p, rows, 13);
+        results.push(bench(&format!("merge packed p={p}"), cfg, || {
+            let mut acc = a.clone();
+            acc.merge(&b);
+            acc.count()
+        }));
+
+        // dense-square Chan merge (the pre-refactor representation)
+        let mut rng = Rng::seed_from(17);
+        let da = DenseStats::random(d, rows as f64, &mut rng);
+        let db = DenseStats::random(d, rows as f64, &mut rng);
+        results.push(bench(&format!("merge dense  p={p}"), cfg, || {
+            let mut acc = DenseStats {
+                d: da.d,
+                w: da.w,
+                mean: da.mean.clone(),
+                m2: da.m2.clone(),
+            };
+            acc.merge(&db);
+            acc.w
+        }));
+
+        // fold complement: fresh allocation vs reused scratch
+        let folds = fold_stats(p, k, rows, 23);
+        results.push(bench(&format!("train_for (alloc) p={p}"), cfg, || {
+            let mut n = 0;
+            for i in 0..k {
+                n += folds.train_for(i).count();
+            }
+            n
+        }));
+        let mut scratch = SuffStats::new(p);
+        results.push(bench(&format!("train_into (scratch) p={p}"), cfg, || {
+            let mut n = 0;
+            for i in 0..k {
+                folds.train_into(i, &mut scratch);
+                n += scratch.count();
+            }
+            n
+        }));
+
+        // full CV sweep on the packed path
+        let cv_folds = fold_stats(p, 5, rows, 31);
+        let grid = lambda_grid(cv_folds.total().quad_form().lambda_max(1.0), 6, 1e-2);
+        results.push(bench(&format!("cv sweep (5 folds, 6 λ) p={p}"), cfg, || {
+            cross_validate(&cv_folds, Penalty::lasso(), &grid, CdSettings::default())
+                .unwrap()
+                .opt_index
+        }));
+    }
+    println!("{}\n", render(&results));
+
+    // --- measured shuffle bytes of a SuffStats job ---------------------
+    let p = if quick { 32 } else { 128 };
+    let d = p + 1;
+    let n_tasks = 8;
+    let assigner = FoldAssigner::new(4, 7);
+    let inputs: Vec<usize> = (0..n_tasks).collect();
+    let out = run_job(
+        &EngineConfig::with_workers(4),
+        &inputs,
+        |ctx: &TaskCtx, _t: &usize, em: &mut Emitter<usize, SuffStats>| {
+            let mut rng = Rng::seed_from(0xFEED + ctx.task_id as u64);
+            for r in 0..64usize {
+                let x: Vec<f64> = (0..p).map(|_| rng.normal()).collect();
+                let fold = assigner.fold_of((ctx.task_id * 64 + r) as u64);
+                em.upsert_with(fold, || SuffStats::new(p), |s| s.push(&x, 1.0));
+            }
+        },
+    )
+    .expect("stats job");
+    let dense_equiv = out.metrics.shuffle_payloads * 4 * 8 * (2 + d + d * d);
+    println!(
+        "suffstats job p={p}: shuffle {} across {} payloads (dense-square equivalent ≈ {}, {}x)",
+        fmt_bytes(out.metrics.shuffle_bytes),
+        out.metrics.shuffle_payloads,
+        fmt_bytes(dense_equiv),
+        sig(dense_equiv as f64 / out.metrics.shuffle_bytes.max(1) as f64, 3),
+    );
+    println!(
+        "\nNOTE: merge/complement rows compare equal-arithmetic kernels; the packed\n\
+         rows touch p(p+1)/2 doubles where dense touches p² — the ~2× shows up\n\
+         directly in resident fold statistics and engine shuffle volume."
+    );
+}

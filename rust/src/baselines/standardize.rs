@@ -122,9 +122,9 @@ mod tests {
             for b in 0..4 {
                 let g: f64 = (0..std.n).map(|i| std.col(a, i) * std.col(b, i)).sum::<f64>() / nf;
                 assert!(
-                    (g - q.gram[a * 4 + b]).abs() < 1e-9,
+                    (g - q.gram.get(a, b)).abs() < 1e-9,
                     "gram[{a},{b}]: {g} vs {}",
-                    q.gram[a * 4 + b]
+                    q.gram.get(a, b)
                 );
             }
         }

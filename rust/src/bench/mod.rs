@@ -105,13 +105,28 @@ pub fn render(results: &[BenchStats]) -> String {
     t.render()
 }
 
+/// Human-readable byte count for shuffle-volume columns.
+pub fn fmt_bytes(b: usize) -> String {
+    const KIB: f64 = 1024.0;
+    let bf = b as f64;
+    if bf >= KIB * KIB * KIB {
+        format!("{} GiB", sig(bf / (KIB * KIB * KIB), 3))
+    } else if bf >= KIB * KIB {
+        format!("{} MiB", sig(bf / (KIB * KIB), 3))
+    } else if bf >= KIB {
+        format!("{} KiB", sig(bf / KIB, 3))
+    } else {
+        format!("{b} B")
+    }
+}
+
 /// Render engine phase timings (map/shuffle/reduce split of
 /// [`JobMetrics`]) for a set of runs — the reporting surface of the
 /// parallel tree-reduce redesign (§Perf of EXPERIMENTS.md).
 pub fn render_job_phases(results: &[(String, JobMetrics)]) -> String {
     let mut t = Table::new(vec![
         "run", "map", "shuffle", "reduce", "total", "merge frac",
-        "payloads", "pre-combined", "leader merges",
+        "payloads", "bytes", "pre-combined", "leader merges",
     ]);
     for (name, m) in results {
         t.row(vec![
@@ -122,6 +137,7 @@ pub fn render_job_phases(results: &[(String, JobMetrics)]) -> String {
             fmt_secs(m.real_s),
             sig(m.merge_fraction(), 3),
             format!("{}", m.shuffle_payloads),
+            fmt_bytes(m.shuffle_bytes),
             format!("{}", m.combined_nodes),
             format!("{}", m.reduce_merges),
         ]);

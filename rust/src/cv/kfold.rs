@@ -62,8 +62,19 @@ impl FoldStats {
     }
 
     /// Training statistics for fold i: total − s_i.
+    ///
+    /// Allocates a fresh statistic; the CV sweep should prefer
+    /// [`FoldStats::train_into`] with one reused scratch.
     pub fn train_for(&self, i: usize) -> SuffStats {
         self.total.sub(&self.folds[i])
+    }
+
+    /// Training statistics for fold i written into a caller-provided
+    /// scratch (`SuffStats::new(p())` once, reused across all k folds and
+    /// every sweep) — the allocation-free complement path.  Bit-identical
+    /// to [`FoldStats::train_for`].
+    pub fn train_into(&self, i: usize, scratch: &mut SuffStats) {
+        self.total.sub_into(&self.folds[i], scratch);
     }
 }
 
@@ -105,6 +116,27 @@ mod tests {
             let n_f = fs.fold(i).count() as f64;
             let mean = (n_t * train.y_mean() + n_f * fs.fold(i).y_mean()) / 103.0;
             assert!((mean - fs.total().y_mean()).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn train_into_reuses_scratch_bit_identically() {
+        let mut rng = Rng::seed_from(7);
+        let data = rows(&mut rng, 150, 3);
+        let fs = FoldStats::new(folds_from_rows(5, 3, &data)).unwrap();
+        let mut scratch = SuffStats::new(3);
+        for i in 0..5 {
+            // scratch deliberately carries fold i−1's value into iteration i
+            fs.train_into(i, &mut scratch);
+            let alloc = fs.train_for(i);
+            assert_eq!(scratch.count(), alloc.count(), "fold {i}");
+            assert_eq!(scratch.syy().to_bits(), alloc.syy().to_bits(), "fold {i}");
+            for a in 0..3 {
+                assert_eq!(scratch.sxy(a).to_bits(), alloc.sxy(a).to_bits());
+                for b in a..3 {
+                    assert_eq!(scratch.sxx(a, b).to_bits(), alloc.sxx(a, b).to_bits());
+                }
+            }
         }
     }
 

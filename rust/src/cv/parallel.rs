@@ -11,7 +11,7 @@
 
 use anyhow::Result;
 
-use crate::mapreduce::{run_job, Emitter, EngineConfig, TaskCtx};
+use crate::mapreduce::{run_job, Emitter, EngineConfig, MergeError, TaskCtx};
 use crate::solver::cd::{solve_cd, CdSettings};
 use crate::solver::penalty::Penalty;
 
@@ -29,8 +29,26 @@ struct FoldErrors {
 }
 
 impl crate::mapreduce::Mergeable for FoldErrors {
-    fn merge_in(&mut self, _other: Self) {
-        unreachable!("one value per fold key — nothing ever merges");
+    /// Contract: exactly one value per fold key, so nothing ever merges.
+    /// A mis-keyed job trips the debug assert in development builds and
+    /// otherwise surfaces as a graceful `run_job` error — a message, not a
+    /// panic unwinding across the worker pool.
+    fn merge_in(&mut self, _other: Self) -> Result<(), MergeError> {
+        debug_assert!(
+            false,
+            "FoldErrors is single-value-per-key: fold {} emitted twice",
+            self.fold
+        );
+        Err(MergeError::new(format!(
+            "cross-validation fold {} produced more than one result — \
+             mis-keyed CV job (one FoldErrors per fold expected)",
+            self.fold
+        )))
+    }
+
+    fn payload_bytes(&self) -> usize {
+        std::mem::size_of::<usize>() * (1 + self.nnz.len())
+            + std::mem::size_of::<f64>() * self.err.len()
     }
 }
 
@@ -50,6 +68,9 @@ pub fn cross_validate_parallel(
         engine,
         &fold_ids,
         |_ctx: &TaskCtx, &fold, em: &mut Emitter<usize, FoldErrors>| {
+            // one fold per task ⇒ nothing to reuse across calls here; the
+            // serial sweep (cv::select) is the path that shares one
+            // train_into scratch across all k folds
             let train = folds.train_for(fold);
             let q = train.quad_form();
             let held = folds.fold(fold);

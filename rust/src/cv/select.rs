@@ -102,11 +102,14 @@ pub fn cross_validate(
     );
     let k = folds.k();
     let n_l = lambdas.len();
-    // fold-major sweep: one quad_form per fold, warm starts along λ
+    // fold-major sweep: one quad_form per fold, warm starts along λ; the
+    // O(p²) fold complement lands in ONE scratch statistic reused across
+    // all k folds (no per-fold allocation)
     let mut fold_err = vec![vec![0.0; k]; n_l];
     let mut nnz = vec![vec![0usize; k]; n_l];
+    let mut train = crate::stats::SuffStats::new(folds.p());
     for i in 0..k {
-        let train = folds.train_for(i);
+        folds.train_into(i, &mut train);
         let q = train.quad_form();
         let held = folds.fold(i);
         let mut warm: Option<Vec<f64>> = None;

@@ -230,8 +230,8 @@ mod tests {
         }
         let q = s.quad_form();
         // adjacent correlation ≈ 0.8, two-step ≈ 0.64
-        assert!((q.gram[0 * 3 + 1] - 0.8).abs() < 0.02, "r01={}", q.gram[1]);
-        assert!((q.gram[0 * 3 + 2] - 0.64).abs() < 0.03, "r02={}", q.gram[2]);
+        assert!((q.gram.get(0, 1) - 0.8).abs() < 0.02, "r01={}", q.gram.get(0, 1));
+        assert!((q.gram.get(0, 2) - 0.64).abs() < 0.03, "r02={}", q.gram.get(0, 2));
     }
 
     #[test]

@@ -211,11 +211,12 @@ fn cmd_fit(args: &[String]) -> Result<()> {
         let m = &report.map_metrics;
         println!(
             "phase split: map {} | shuffle {} | reduce {} \
-             ({} payloads, {} combined nodes, {} leader merges)",
+             ({} payloads, {}, {} combined nodes, {} leader merges)",
             fmt_secs(m.map_s),
             fmt_secs(m.shuffle_s),
             fmt_secs(m.reduce_s),
             m.shuffle_payloads,
+            plrmr::bench::fmt_bytes(m.shuffle_bytes),
             m.combined_nodes,
             m.reduce_merges,
         );

@@ -30,7 +30,7 @@ use std::time::Instant;
 use anyhow::{bail, Result};
 
 use super::fault::{Fault, FaultPlan};
-use super::job::{JobCosts, JobMetrics, Mergeable, WorkerMetrics};
+use super::job::{JobCosts, JobMetrics, MergeError, Mergeable, WorkerMetrics};
 use super::partition::MergeTree;
 
 /// Engine configuration for one job.
@@ -83,18 +83,28 @@ pub struct TaskCtx {
 pub struct Emitter<K: Ord, V: Mergeable> {
     map: BTreeMap<K, V>,
     records: u64,
+    /// first in-mapper merge failure, surfaced as a job error after the task
+    merge_err: Option<MergeError>,
 }
 
 impl<K: Ord, V: Mergeable> Emitter<K, V> {
     fn new() -> Self {
-        Emitter { map: BTreeMap::new(), records: 0 }
+        Emitter { map: BTreeMap::new(), records: 0, merge_err: None }
     }
 
-    /// Emit one (key, value); values merge associatively.
+    /// Emit one (key, value); values merge associatively.  A failed merge
+    /// (broken keying/associativity contract) is recorded and fails the
+    /// job with a message once the task returns — no panic in the pool.
     pub fn emit(&mut self, key: K, value: V) {
         self.records += 1;
         match self.map.get_mut(&key) {
-            Some(slot) => slot.merge_in(value),
+            Some(slot) => {
+                if let Err(e) = slot.merge_in(value) {
+                    if self.merge_err.is_none() {
+                        self.merge_err = Some(e);
+                    }
+                }
+            }
             None => {
                 self.map.insert(key, value);
             }
@@ -234,20 +244,40 @@ impl Gate {
 
 /// Merge two per-key maps, left-then-right.  This is the ONE merge function
 /// — worker combiners and the reduce tree both call it, so a given tree
-/// node's value is independent of *where* it was computed.
+/// node's value is independent of *where* it was computed.  A value-level
+/// merge failure aborts the map merge and fails the job gracefully.
 fn merge_maps<K: Ord, V: Mergeable>(
     mut left: BTreeMap<K, V>,
     right: BTreeMap<K, V>,
-) -> BTreeMap<K, V> {
+) -> Result<BTreeMap<K, V>, MergeError> {
     for (k, v) in right {
         match left.get_mut(&k) {
-            Some(slot) => slot.merge_in(v),
+            Some(slot) => slot.merge_in(v)?,
             None => {
                 left.insert(k, v);
             }
         }
     }
-    left
+    Ok(left)
+}
+
+/// Record the first merge failure (later ones are echoes of the same bug).
+fn record_merge_failure(store: &Mutex<Option<String>>, context: &str, e: MergeError) {
+    let mut slot = store.lock().unwrap();
+    if slot.is_none() {
+        *slot = Some(format!("{context}: {e}"));
+    }
+}
+
+/// Best-effort human message from a caught panic payload.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
 }
 
 /// Run one MapReduce job over `inputs` (one task per input split).
@@ -292,7 +322,12 @@ where
     // outstanding merges in the reduce level being executed
     let level_pending = Gate::new(0);
     let payload_count = AtomicUsize::new(0);
+    let payload_bytes = AtomicUsize::new(0);
     let combined_count = AtomicUsize::new(0);
+    // first value-merge failure anywhere in the job (combine or reduce);
+    // checked after the pool drains so a broken Mergeable contract fails
+    // the job with a message instead of panicking across the workers
+    let merge_failure: Mutex<Option<String>> = Mutex::new(None);
     let (tx, rx) = mpsc::channel::<TaskMsg>();
 
     let mut metrics = JobMetrics {
@@ -310,7 +345,9 @@ where
             let flushed = &flushed;
             let level_pending = &level_pending;
             let payload_count = &payload_count;
+            let payload_bytes = &payload_bytes;
             let combined_count = &combined_count;
+            let merge_failure = &merge_failure;
             let map_fn = &map_fn;
             let fault = cfg.fault;
             let combine = cfg.combine;
@@ -333,46 +370,98 @@ where
                         None => {}
                     }
                     let ctx = TaskCtx { task_id, attempt, worker_id };
-                    let mut emitter = Emitter::new();
-                    map_fn(&ctx, &inputs[task_id], &mut emitter);
+                    // A panicking map function must not kill the worker:
+                    // the flush/reduce gates below count on every worker
+                    // reaching them, so an unwinding thread would deadlock
+                    // the leader.  Catch it and fail the job with a
+                    // message instead (a retry would panic again — map
+                    // functions are pure functions of (task_id, split)).
+                    let mapped = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        let mut emitter = Emitter::new();
+                        map_fn(&ctx, &inputs[task_id], &mut emitter);
+                        emitter
+                    }));
+                    let mut emitter = match mapped {
+                        Ok(em) => em,
+                        Err(payload) => {
+                            record_merge_failure(
+                                merge_failure,
+                                &format!("task {task_id} map function panicked"),
+                                MergeError::new(panic_message(payload.as_ref())),
+                            );
+                            let _ = tx.send(TaskMsg::Done {
+                                task_id,
+                                worker_id,
+                                records: 0,
+                                busy_s: t0.elapsed().as_secs_f64(),
+                                stalled,
+                            });
+                            continue;
+                        }
+                    };
+                    if let Some(e) = emitter.merge_err.take() {
+                        record_merge_failure(
+                            merge_failure,
+                            &format!("task {task_id} in-mapper combine"),
+                            e,
+                        );
+                    }
                     // worker-side combine: climb the merge tree while we
                     // hold the sibling (or the sibling is pure padding).
                     // Only *complete* nodes are ever formed, so the value
                     // at each node is the value the reduce tree would have
-                    // computed anyway.
-                    let mut node = tree.leaf(task_id);
-                    let mut value = emitter.map;
-                    if combine {
-                        while node > 1 {
-                            let sib = tree.sibling(node);
-                            if node & 1 == 0 {
-                                // left child: an all-padding right sibling
-                                // merges as a no-op
-                                if tree.is_empty(sib) {
-                                    node = tree.parent(node);
-                                    continue;
-                                }
-                                match combiner.remove(&sib) {
-                                    Some(right) => {
-                                        value = merge_maps(value, right);
+                    // computed anyway.  (unwind-guarded like map_fn: a
+                    // panicking merge_in must fail the job, not a gate)
+                    let climbed: Result<_, MergeError> = std::panic::catch_unwind(
+                        std::panic::AssertUnwindSafe(|| {
+                        let mut node = tree.leaf(task_id);
+                        let mut value = emitter.map;
+                        if combine {
+                            while node > 1 {
+                                let sib = tree.sibling(node);
+                                if node & 1 == 0 {
+                                    // left child: an all-padding right sibling
+                                    // merges as a no-op
+                                    if tree.is_empty(sib) {
                                         node = tree.parent(node);
+                                        continue;
                                     }
-                                    None => break,
-                                }
-                            } else {
-                                // right child: the left sibling is never
-                                // padding (spans are left-aligned)
-                                match combiner.remove(&sib) {
-                                    Some(left) => {
-                                        value = merge_maps(left, value);
-                                        node = tree.parent(node);
+                                    match combiner.remove(&sib) {
+                                        Some(right) => {
+                                            value = merge_maps(value, right)?;
+                                            node = tree.parent(node);
+                                        }
+                                        None => break,
                                     }
-                                    None => break,
+                                } else {
+                                    // right child: the left sibling is never
+                                    // padding (spans are left-aligned)
+                                    match combiner.remove(&sib) {
+                                        Some(left) => {
+                                            value = merge_maps(left, value)?;
+                                            node = tree.parent(node);
+                                        }
+                                        None => break,
+                                    }
                                 }
                             }
                         }
+                            Ok((node, value))
+                        }),
+                    )
+                    .unwrap_or_else(|payload| {
+                        Err(MergeError::new(panic_message(payload.as_ref())))
+                    });
+                    match climbed {
+                        Ok((node, value)) => {
+                            combiner.insert(node, value);
+                        }
+                        Err(e) => record_merge_failure(
+                            merge_failure,
+                            &format!("task {task_id} worker combine"),
+                            e,
+                        ),
                     }
-                    combiner.insert(node, value);
                     let _ = tx.send(TaskMsg::Done {
                         task_id,
                         worker_id,
@@ -386,10 +475,15 @@ where
                 // bit-identical by the map-purity contract, so ties are
                 // value-neutral.
                 let mut payloads = 0usize;
+                let mut bytes = 0usize;
                 let mut pre_combined = 0usize;
                 for (node, value) in combiner {
                     let mut slot = slots[node].lock().unwrap();
                     if slot.is_none() {
+                        bytes += value
+                            .values()
+                            .map(|v| std::mem::size_of::<K>() + v.payload_bytes())
+                            .sum::<usize>();
                         *slot = Some(value);
                         payloads += 1;
                         if node < tree.first_leaf() {
@@ -398,6 +492,7 @@ where
                     }
                 }
                 payload_count.fetch_add(payloads, Ordering::Relaxed);
+                payload_bytes.fetch_add(bytes, Ordering::Relaxed);
                 combined_count.fetch_add(pre_combined, Ordering::Relaxed);
                 flushed.done_one();
                 // reduce phase: execute tree merges as the leader schedules
@@ -406,7 +501,27 @@ where
                     let left = slots[2 * node].lock().unwrap().take();
                     let right = slots[2 * node + 1].lock().unwrap().take();
                     let merged = match (left, right) {
-                        (Some(l), Some(r)) => Some(merge_maps(l, r)),
+                        (Some(l), Some(r)) => {
+                            // unwind-guarded: level_pending.done_one() below
+                            // must run even if a merge_in panics
+                            let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                                || merge_maps(l, r),
+                            ))
+                            .unwrap_or_else(|payload| {
+                                Err(MergeError::new(panic_message(payload.as_ref())))
+                            });
+                            match res {
+                                Ok(m) => Some(m),
+                                Err(e) => {
+                                    record_merge_failure(
+                                        merge_failure,
+                                        &format!("reduce-tree node {node}"),
+                                        e,
+                                    );
+                                    None
+                                }
+                            }
+                        }
                         (Some(l), None) => Some(l),
                         (None, r) => r,
                     };
@@ -519,12 +634,16 @@ where
         reduce_queue.close();
     });
 
+    if failure.is_none() {
+        failure = merge_failure.lock().unwrap().take();
+    }
     if let Some(msg) = failure {
         bail!("mapreduce job failed: {msg}");
     }
 
     let output = slots[1].lock().unwrap().take().unwrap_or_default();
     metrics.shuffle_payloads = payload_count.load(Ordering::Relaxed);
+    metrics.shuffle_bytes = payload_bytes.load(Ordering::Relaxed);
     metrics.combined_nodes = combined_count.load(Ordering::Relaxed);
     metrics.tasks_completed = n_tasks;
     metrics.real_s = started.elapsed().as_secs_f64();
@@ -846,5 +965,103 @@ mod tests {
         assert_eq!(out.metrics.tasks_completed, 1);
         assert_eq!(out.metrics.shuffle_payloads, 1);
         assert_eq!(out.metrics.reduce_merges, 0);
+    }
+
+    /// A single-value-per-key payload (the FoldErrors contract): any merge
+    /// is a keying bug and must fail the job, not panic the pool.
+    #[derive(Debug, Clone)]
+    struct Unique(u64);
+
+    impl Mergeable for Unique {
+        fn merge_in(&mut self, other: Self) -> Result<(), MergeError> {
+            Err(MergeError::new(format!(
+                "duplicate value for single-value key ({} vs {})",
+                self.0, other.0
+            )))
+        }
+    }
+
+    #[test]
+    fn mis_keyed_job_fails_gracefully_not_panics() {
+        // cross-task collision: every task emits the same key, so the
+        // combiner/reduce tree must merge — which Unique forbids
+        let inputs: Vec<u64> = (0..6).collect();
+        for workers in [1usize, 4] {
+            let res = run_job(
+                &EngineConfig::with_workers(workers),
+                &inputs,
+                |_c: &TaskCtx, &v, em: &mut Emitter<usize, Unique>| {
+                    em.emit(0usize, Unique(v));
+                },
+            );
+            let err = format!("{:#}", res.expect_err("must fail"));
+            assert!(err.contains("duplicate value"), "w={workers}: {err}");
+            assert!(err.contains("mapreduce job failed"), "w={workers}: {err}");
+        }
+        // in-mapper collision: one task emits the same key twice
+        let res = run_job(
+            &EngineConfig::with_workers(2),
+            &[1u64],
+            |_c: &TaskCtx, &v, em: &mut Emitter<usize, Unique>| {
+                em.emit(7usize, Unique(v));
+                em.emit(7usize, Unique(v + 1));
+            },
+        );
+        let err = format!("{:#}", res.expect_err("must fail"));
+        assert!(err.contains("in-mapper combine"), "{err}");
+    }
+
+    #[test]
+    fn panicking_map_fn_fails_job_without_deadlock() {
+        // a worker that unwinds must not strand the flush/reduce gates:
+        // the job returns an error carrying the panic message
+        let inputs: Vec<u64> = (0..8).collect();
+        for workers in [1usize, 4] {
+            let res = run_job(
+                &EngineConfig::with_workers(workers),
+                &inputs,
+                |_c: &TaskCtx, &v, em: &mut Emitter<usize, u64>| {
+                    if v == 5 {
+                        panic!("boom on split {v}");
+                    }
+                    em.emit(0usize, v);
+                },
+            );
+            let err = format!("{:#}", res.expect_err("must fail"));
+            assert!(err.contains("map function panicked"), "w={workers}: {err}");
+            assert!(err.contains("boom on split 5"), "w={workers}: {err}");
+        }
+    }
+
+    #[test]
+    fn suffstats_shuffle_bytes_are_packed_size() {
+        // the acceptance-criterion accounting: a SuffStats payload ships
+        // the packed triangle — ~(p+1)²/2 doubles, ~2× below dense
+        let p = 64;
+        let d = p + 1;
+        let out = run_job(
+            &EngineConfig::with_workers(1),
+            &[0usize],
+            |_c: &TaskCtx, _t, em: &mut Emitter<usize, SuffStats>| {
+                let mut s = SuffStats::new(p);
+                for i in 0..8 {
+                    let x: Vec<f64> = (0..p).map(|j| ((i * 7 + j) % 5) as f64).collect();
+                    s.push(&x, i as f64);
+                }
+                em.emit(0usize, s);
+            },
+        )
+        .unwrap();
+        let m = &out.metrics;
+        assert_eq!(m.shuffle_payloads, 1);
+        let packed_value = 8 * (2 + d + d * (d + 1) / 2);
+        assert_eq!(m.shuffle_bytes, std::mem::size_of::<usize>() + packed_value);
+        let dense_value = 8 * (2 + d + d * d);
+        assert!(
+            (m.shuffle_bytes as f64) < 0.55 * dense_value as f64,
+            "packed shuffle bytes {} must be ~half of dense {}",
+            m.shuffle_bytes,
+            dense_value
+        );
     }
 }

@@ -1,44 +1,117 @@
 //! Job-level types: mergeable values, modeled cluster costs, metrics.
 
+use crate::stats::symm::tri_len;
 use crate::stats::{Moments, SuffStats};
 
+/// A failed value merge — a broken associativity/keying contract inside a
+/// job.  The engine converts it into a graceful `run_job` error (with the
+/// offending task in the message) instead of panicking across the worker
+/// pool.
+#[derive(Debug, Clone)]
+pub struct MergeError(String);
+
+impl MergeError {
+    pub fn new(msg: impl Into<String>) -> Self {
+        MergeError(msg.into())
+    }
+}
+
+impl std::fmt::Display for MergeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "merge failed: {}", self.0)
+    }
+}
+
+impl std::error::Error for MergeError {}
+
 /// Values flowing through the engine must merge associatively — the paper's
-/// additivity requirement on statistic (10).
-pub trait Mergeable: Send {
-    fn merge_in(&mut self, other: Self);
+/// additivity requirement on statistic (10).  A merge that cannot uphold
+/// its contract (mis-keyed job, shape mismatch) returns a [`MergeError`]
+/// rather than panicking; the engine fails the whole job with the message.
+pub trait Mergeable: Send + Sized {
+    fn merge_in(&mut self, other: Self) -> Result<(), MergeError>;
+
+    /// Approximate wire size of this value in bytes — what a real cluster
+    /// would serialize into the shuffle.  Powers the
+    /// [`JobMetrics::shuffle_bytes`] accounting; the default covers plain
+    /// scalar payloads.
+    fn payload_bytes(&self) -> usize {
+        std::mem::size_of::<Self>()
+    }
 }
 
 impl Mergeable for SuffStats {
-    fn merge_in(&mut self, other: Self) {
+    fn merge_in(&mut self, other: Self) -> Result<(), MergeError> {
+        if self.p() != other.p() {
+            return Err(MergeError::new(format!(
+                "SuffStats dimension mismatch: p={} vs p={}",
+                self.p(),
+                other.p()
+            )));
+        }
         self.merge(&other);
+        Ok(())
+    }
+
+    /// count + weight + mean + *packed* scatter — ~(p+1)²/2 doubles, half
+    /// of what shipping a dense square would cost.
+    fn payload_bytes(&self) -> usize {
+        self.moments().payload_bytes()
     }
 }
 
 impl Mergeable for Moments {
-    fn merge_in(&mut self, other: Self) {
+    fn merge_in(&mut self, other: Self) -> Result<(), MergeError> {
+        if self.dim() != other.dim() {
+            return Err(MergeError::new(format!(
+                "Moments dimension mismatch: d={} vs d={}",
+                self.dim(),
+                other.dim()
+            )));
+        }
         self.merge(&other);
+        Ok(())
+    }
+
+    fn payload_bytes(&self) -> usize {
+        let d = self.dim();
+        // n + w + mean(d) + packed upper-triangular M2 (d(d+1)/2)
+        std::mem::size_of::<f64>() * (2 + d + tri_len(d))
     }
 }
 
 impl Mergeable for u64 {
-    fn merge_in(&mut self, other: Self) {
+    fn merge_in(&mut self, other: Self) -> Result<(), MergeError> {
         *self += other;
+        Ok(())
     }
 }
 
 impl Mergeable for f64 {
-    fn merge_in(&mut self, other: Self) {
+    fn merge_in(&mut self, other: Self) -> Result<(), MergeError> {
         *self += other;
+        Ok(())
     }
 }
 
 impl<T: Mergeable> Mergeable for Vec<T> {
     /// element-wise merge of equal-length vectors
-    fn merge_in(&mut self, other: Self) {
-        assert_eq!(self.len(), other.len(), "mergeable Vec length mismatch");
-        for (a, b) in self.iter_mut().zip(other) {
-            a.merge_in(b);
+    fn merge_in(&mut self, other: Self) -> Result<(), MergeError> {
+        if self.len() != other.len() {
+            return Err(MergeError::new(format!(
+                "mergeable Vec length mismatch: {} vs {}",
+                self.len(),
+                other.len()
+            )));
         }
+        for (a, b) in self.iter_mut().zip(other) {
+            a.merge_in(b)?;
+        }
+        Ok(())
+    }
+
+    fn payload_bytes(&self) -> usize {
+        self.iter().map(Mergeable::payload_bytes).sum()
     }
 }
 
@@ -119,6 +192,11 @@ pub struct JobMetrics {
     /// payloads handed to the leader (tree nodes flushed by workers);
     /// without worker-side combining this is ≥ n_tasks, with it O(workers)
     pub shuffle_payloads: usize,
+    /// total bytes of those payloads ([`Mergeable::payload_bytes`] + key
+    /// size per entry) — the modeled shuffle volume.  Packed-symmetric
+    /// statistics make this ~(p+1)²/2 doubles per fold entry instead of
+    /// the (p+1)² a dense-square Gram would ship.
+    pub shuffle_bytes: usize,
     /// internal tree nodes pre-merged on workers (combiner effectiveness)
     pub combined_nodes: usize,
     /// merge-tree nodes the reduce phase still had to compute
@@ -168,18 +246,18 @@ mod tests {
     #[test]
     fn scalar_and_vec_merge() {
         let mut a = 3u64;
-        a.merge_in(4);
+        a.merge_in(4).unwrap();
         assert_eq!(a, 7);
         let mut v = vec![1.0, 2.0];
-        v.merge_in(vec![0.5, 0.5]);
+        v.merge_in(vec![0.5, 0.5]).unwrap();
         assert_eq!(v, vec![1.5, 2.5]);
     }
 
     #[test]
-    #[should_panic]
-    fn vec_merge_length_mismatch_panics() {
+    fn vec_merge_length_mismatch_errors_gracefully() {
         let mut v = vec![1u64];
-        v.merge_in(vec![1, 2]);
+        let err = v.merge_in(vec![1, 2]).unwrap_err();
+        assert!(err.to_string().contains("length mismatch"), "{err}");
     }
 
     #[test]
@@ -189,8 +267,31 @@ mod tests {
         a.push(&[1.0, 2.0], 3.0);
         let mut b = SuffStats::new(2);
         b.push(&[4.0, 5.0], 6.0);
-        Mergeable::merge_in(&mut a, b);
+        Mergeable::merge_in(&mut a, b).unwrap();
         assert_eq!(a.count(), 2);
+        // dimension mismatch is an error, not a panic
+        let bad = SuffStats::new(3);
+        assert!(Mergeable::merge_in(&mut a, bad).is_err());
+    }
+
+    #[test]
+    fn payload_bytes_count_packed_triangles() {
+        use crate::stats::SuffStats;
+        let p = 64;
+        let d = p + 1;
+        let mut s = SuffStats::new(p);
+        s.push(&vec![1.0; p], 2.0);
+        let packed = s.payload_bytes();
+        assert_eq!(packed, 8 * (2 + d + tri_len(d)));
+        // ~2× below what a dense-square scatter would serialize
+        let dense = 8 * (2 + d + d * d);
+        assert!(
+            (packed as f64) < 0.55 * dense as f64,
+            "packed {packed} vs dense {dense}"
+        );
+        // scalars fall back to their size; vectors sum elements
+        assert_eq!(3u64.payload_bytes(), 8);
+        assert_eq!(vec![1.0f64, 2.0].payload_bytes(), 16);
     }
 
     #[test]

@@ -32,5 +32,5 @@ pub mod partition;
 
 pub use engine::{run_job, Emitter, EngineConfig, JobOutput, TaskCtx};
 pub use fault::FaultPlan;
-pub use job::{JobCosts, JobMetrics, Mergeable};
+pub use job::{JobCosts, JobMetrics, MergeError, Mergeable};
 pub use partition::{FoldAssigner, MergeTree};

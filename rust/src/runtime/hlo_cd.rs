@@ -52,7 +52,8 @@ impl HloCdSolver {
     ) -> Result<Vec<f64>> {
         anyhow::ensure!(q.p == self.p, "quad form width {} != artifact {}", q.p, self.p);
         let pl = self.p as i64;
-        let gram = literal_f32(&q.gram, &[pl, pl])?;
+        // the f32 kernel wants a dense square; expand the packed Gram once
+        let gram = literal_f32(&q.gram.to_dense(), &[pl, pl])?;
         let xty = literal_f32(&q.xty, &[pl])?;
         let mut beta = vec![0.0f64; self.p];
         for _ in 0..max_calls {

@@ -52,17 +52,13 @@ pub struct CdSolution {
     pub objective: f64,
 }
 
-/// Objective value f(β) for the standardized problem.
+/// Objective value f(β) for the standardized problem.  The Gram is packed
+/// symmetric; `row_dot` walks each symmetric row without materializing it.
 pub fn objective(q: &QuadForm, penalty: Penalty, lambda: f64, beta: &[f64]) -> f64 {
     let p = q.p;
     let mut quad = 0.0;
     for i in 0..p {
-        let row = &q.gram[i * p..(i + 1) * p];
-        let mut acc = 0.0;
-        for j in 0..p {
-            acc += row[j] * beta[j];
-        }
-        quad += beta[i] * acc;
+        quad += beta[i] * q.gram.row_dot(i, beta);
     }
     let lin: f64 = q.xty.iter().zip(beta).map(|(c, b)| c * b).sum();
     0.5 * quad - lin + penalty.value(lambda, beta)
@@ -79,11 +75,7 @@ pub fn kkt_violation(q: &QuadForm, penalty: Penalty, lambda: f64, beta: &[f64]) 
     let lr = lambda * (1.0 - penalty.alpha);
     let mut worst = 0.0_f64;
     for j in 0..p {
-        let row = &q.gram[j * p..(j + 1) * p];
-        let mut g = -q.xty[j] + lr * beta[j];
-        for k in 0..p {
-            g += row[k] * beta[k];
-        }
+        let g = -q.xty[j] + lr * beta[j] + q.gram.row_dot(j, beta);
         let v = if beta[j] != 0.0 {
             (g + la * beta[j].signum()).abs()
         } else {
@@ -113,16 +105,13 @@ pub fn solve_cd(
         }
         None => vec![0.0; p],
     };
-    // gb = G·β, maintained incrementally.
+    // gb = G·β, maintained incrementally (symmetric: column k == row k,
+    // gathered straight off the packed triangle).
     let mut gb = vec![0.0; p];
     if beta.iter().any(|b| *b != 0.0) {
         for k in 0..p {
             if beta[k] != 0.0 {
-                let col = &q.gram[k * p..(k + 1) * p]; // symmetric: row == col
-                let bk = beta[k];
-                for j in 0..p {
-                    gb[j] += col[j] * bk;
-                }
+                q.gram.axpy_row_into(k, beta[k], &mut gb);
             }
         }
     }
@@ -135,7 +124,7 @@ pub fn solve_cd(
     let cycle = |idxs: &[usize], beta: &mut [f64], gb: &mut [f64]| -> f64 {
         let mut dmax = 0.0_f64;
         for &j in idxs {
-            let gjj = q.gram[j * p + j];
+            let gjj = q.gram.get(j, j);
             let r = q.xty[j] - (gb[j] - gjj * beta[j]);
             let bj_new = {
                 let num = soft_threshold(r, la);
@@ -149,10 +138,7 @@ pub fn solve_cd(
             let delta = bj_new - beta[j];
             if delta != 0.0 {
                 beta[j] = bj_new;
-                let col = &q.gram[j * p..(j + 1) * p];
-                for i in 0..p {
-                    gb[i] += col[i] * delta;
-                }
+                q.gram.axpy_row_into(j, delta, gb);
                 dmax = dmax.max(delta.abs());
             }
         }
@@ -267,14 +253,11 @@ mod tests {
         let q = random_qf(&mut rng, 150, 5);
         let lam = 0.3;
         let sol = solve_cd(&q, Penalty::ridge(), lam, None, CdSettings::default());
-        // closed form: (G + λI) b = c
-        let p = q.p;
+        // closed form: (G + λI) b = c, on packed storage
         let mut a = q.gram.clone();
-        for i in 0..p {
-            a[i * p + i] += lam;
-        }
-        let want = super::super::linalg::spd_solve(&a, &q.xty).unwrap();
-        for j in 0..p {
+        a.add_diag(lam);
+        let want = super::super::linalg::spd_solve_packed(&a, &q.xty).unwrap();
+        for j in 0..q.p {
             assert!((sol.beta[j] - want[j]).abs() < 1e-7, "j={j}");
         }
     }
@@ -284,7 +267,7 @@ mod tests {
         let mut rng = Rng::seed_from(4);
         let q = random_qf(&mut rng, 400, 4);
         let sol = solve_cd(&q, Penalty::lasso(), 0.0, None, CdSettings::default());
-        let want = super::super::linalg::spd_solve(&q.gram, &q.xty).unwrap();
+        let want = super::super::linalg::spd_solve_packed(&q.gram, &q.xty).unwrap();
         for j in 0..4 {
             assert!((sol.beta[j] - want[j]).abs() < 1e-6);
         }

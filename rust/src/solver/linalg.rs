@@ -1,8 +1,15 @@
-//! Small dense linear algebra — just what the driver-side solvers need.
+//! Small dense + packed linear algebra — just what the driver-side solvers
+//! need.
 //!
-//! Matrices are row-major `Vec<f64>`; p is at most a few thousand here
-//! (the paper's scope: statistics fit in driver memory), so simple
-//! cache-aware loops beat pulling in a BLAS.
+//! Two storage conventions live here: dense row-major `Vec<f64>` (the
+//! baselines' working matrices) and the fit path's packed-symmetric
+//! [`SymMat`], factorized by [`cholesky_packed`] into a packed *lower*
+//! triangle (row-major, row i at offset i(i+1)/2 — rows contiguous, which
+//! is exactly the order the factorization and the solves stream).  p is at
+//! most a few thousand here (the paper's scope: statistics fit in driver
+//! memory), so simple cache-aware loops beat pulling in a BLAS.
+
+use crate::stats::symm::SymMat;
 
 /// y = A·x for row-major symmetric-or-not A (n×n).
 pub fn matvec(a: &[f64], x: &[f64], y: &mut [f64]) {
@@ -85,6 +92,73 @@ pub fn spd_solve(a: &[f64], b: &[f64]) -> Result<Vec<f64>, String> {
     let n = b.len();
     let l = cholesky(a, n, 0.0)?;
     Ok(chol_solve(&l, b))
+}
+
+/// Packed-lower row offset: row i starts at i(i+1)/2 (entries (i, 0..=i)).
+#[inline]
+fn lo_row(i: usize) -> usize {
+    i * (i + 1) / 2
+}
+
+/// Cholesky factorization A = L·Lᵀ of a packed-symmetric matrix; returns
+/// the packed *lower* factor (n(n+1)/2 doubles — no dense square is ever
+/// allocated on the fit path).  Errors if a pivot is ≤ `eps` (not PD).
+pub fn cholesky_packed(a: &SymMat, eps: f64) -> Result<Vec<f64>, String> {
+    let n = a.n();
+    let mut l = vec![0.0; n * (n + 1) / 2];
+    for i in 0..n {
+        let ri = lo_row(i);
+        for j in 0..=i {
+            let rj = lo_row(j);
+            let mut s = a.get(j, i);
+            // rows i and j of the packed lower factor are contiguous
+            for k in 0..j {
+                s -= l[ri + k] * l[rj + k];
+            }
+            if i == j {
+                if s <= eps {
+                    return Err(format!("cholesky: pivot {s:.3e} at {i} (not PD)"));
+                }
+                l[ri + i] = s.sqrt();
+            } else {
+                l[ri + j] = s / l[rj + j];
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Solve L·Lᵀ·x = b given the packed lower factor from [`cholesky_packed`].
+pub fn chol_solve_packed(l: &[f64], b: &[f64]) -> Vec<f64> {
+    let n = b.len();
+    assert_eq!(l.len(), n * (n + 1) / 2, "packed factor length mismatch");
+    // forward: L·z = b (row-contiguous)
+    let mut z = vec![0.0; n];
+    for i in 0..n {
+        let ri = lo_row(i);
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l[ri + k] * z[k];
+        }
+        z[i] = s / l[ri + i];
+    }
+    // backward: Lᵀ·x = z (column walk = strided over rows below i)
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = z[i];
+        for k in (i + 1)..n {
+            s -= l[lo_row(k) + i] * x[k];
+        }
+        x[i] = s / l[lo_row(i) + i];
+    }
+    x
+}
+
+/// Solve the SPD system A·x = b for packed-symmetric A.
+pub fn spd_solve_packed(a: &SymMat, b: &[f64]) -> Result<Vec<f64>, String> {
+    assert_eq!(a.n(), b.len(), "system shape mismatch");
+    let l = cholesky_packed(a, 0.0)?;
+    Ok(chol_solve_packed(&l, b))
 }
 
 #[cfg(test)]
@@ -170,5 +244,54 @@ mod tests {
     fn dot_basic() {
         assert_eq!(dot(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
         assert_eq!(dot(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn packed_cholesky_bitwise_matches_dense() {
+        // same recurrence, same order, half the storage: the packed factor
+        // must reproduce the dense factor bit for bit
+        prop::quick(|rng, _| {
+            let n = 1 + rng.below(10);
+            let a = random_spd(rng, n);
+            let sym = SymMat::from_dense(n, &a);
+            let dense_l = cholesky(&a, n, 0.0).expect("spd");
+            let packed_l = cholesky_packed(&sym, 0.0).expect("spd");
+            for i in 0..n {
+                for j in 0..=i {
+                    assert_eq!(
+                        packed_l[lo_row(i) + j].to_bits(),
+                        dense_l[i * n + j].to_bits(),
+                        "L[{i},{j}]"
+                    );
+                }
+            }
+            let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let xd = chol_solve(&dense_l, &b);
+            let xp = chol_solve_packed(&packed_l, &b);
+            for i in 0..n {
+                assert_eq!(xp[i].to_bits(), xd[i].to_bits(), "x[{i}]");
+            }
+        });
+    }
+
+    #[test]
+    fn packed_solve_round_trips() {
+        let mut rng = Rng::seed_from(9);
+        let n = 6;
+        let a = random_spd(&mut rng, n);
+        let sym = SymMat::from_dense(n, &a);
+        let x_true: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mut b = vec![0.0; n];
+        matvec(&a, &x_true, &mut b);
+        let x = spd_solve_packed(&sym, &b).expect("spd");
+        for i in 0..n {
+            assert!((x[i] - x_true[i]).abs() < 1e-8, "x[{i}]");
+        }
+    }
+
+    #[test]
+    fn packed_cholesky_rejects_indefinite() {
+        let sym = SymMat::from_dense(2, &[1.0, 2.0, 2.0, 1.0]);
+        assert!(cholesky_packed(&sym, 0.0).is_err());
     }
 }

@@ -2,23 +2,22 @@
 //! cross-check for the iterative solver.
 //!
 //! In standardized coordinates the ridge solution is (G + λI)⁻¹ c, solved
-//! by Cholesky in O(p³) once per λ (no iteration, no data pass).
+//! by Cholesky in O(p³) once per λ (no iteration, no data pass).  Both the
+//! shifted Gram and its factor stay packed-triangular — the closed-form
+//! path never allocates a dense p×p square.
 
 use crate::stats::suffstats::QuadForm;
 
-use super::linalg::{chol_solve, cholesky};
+use super::linalg::{chol_solve_packed, cholesky_packed};
 
 /// Solve ridge for one λ. Errors if G + λI is not PD (can only happen at
 /// λ = 0 with exactly collinear columns).
 pub fn solve_ridge(q: &QuadForm, lambda: f64) -> Result<Vec<f64>, String> {
     assert!(lambda >= 0.0);
-    let p = q.p;
     let mut a = q.gram.clone();
-    for i in 0..p {
-        a[i * p + i] += lambda;
-    }
-    let l = cholesky(&a, p, 0.0)?;
-    Ok(chol_solve(&l, &q.xty))
+    a.add_diag(lambda);
+    let l = cholesky_packed(&a, 0.0)?;
+    Ok(chol_solve_packed(&l, &q.xty))
 }
 
 /// Solve ridge for a whole λ grid, reusing nothing but the factor structure

@@ -19,6 +19,11 @@
 //! * [`suffstats`] — [`moments::Moments`] specialized to z = [x | y] with the
 //!   regression views: centered XᵀX, Xᵀy, Σ(y−ȳ)², standardization (D),
 //!   and the standardized quadratic form the solver consumes.
+//! * [`symm`] — packed-symmetric matrix storage ([`symm::SymMat`]): the
+//!   one home of the upper-triangular layout and its streaming kernels;
+//!   everything O(p²) on the fit path (M2, the standardized Gram, fold
+//!   complements) is stored packed — half the resident memory and half the
+//!   shuffle bytes of a dense square.
 //! * [`naive`] — the textbook raw-sum accumulator, kept as the numerically
 //!   fragile comparator for experiment T4.
 
@@ -26,7 +31,9 @@ pub mod kahan;
 pub mod moments;
 pub mod naive;
 pub mod suffstats;
+pub mod symm;
 pub mod welford;
 
 pub use moments::Moments;
 pub use suffstats::SuffStats;
+pub use symm::SymMat;

@@ -13,6 +13,12 @@
 //! * [`Moments::from_block`] — ingest a centered block produced by the AOT
 //!   chunk_stats artifact (L2/L1 path).
 
+use super::symm::SymMat;
+
+/// Packed-triangle indexing, re-exported from [`super::symm`] (the packed
+/// layout's single home since the SymMat refactor).
+pub use super::symm::{tri_idx, tri_len};
+
 /// Blocks below this many rows use the scalar rank-1 update path.
 pub const BLOCK_MIN_ROWS: usize = 16;
 /// Transpose-buffer budget for the blocked path (f64 elements ≈ 2 MiB).
@@ -26,20 +32,6 @@ pub(crate) fn block_rows(d: usize) -> usize {
     (BLOCK_BUF_ELEMS / d.max(1)).clamp(BLOCK_MIN_ROWS, 256)
 }
 
-/// Packed-upper-triangular index for (i, j) with i ≤ j in dimension d.
-#[inline]
-pub fn tri_idx(d: usize, i: usize, j: usize) -> usize {
-    debug_assert!(i <= j && j < d);
-    // row-i offset = Σ_{k<i} (d−k) = i(2d−i+1)/2  (underflow-safe form)
-    i * (2 * d - i + 1) / 2 + (j - i)
-}
-
-/// Length of the packed upper triangle for dimension d.
-#[inline]
-pub fn tri_len(d: usize) -> usize {
-    d * (d + 1) / 2
-}
-
 /// Streaming (n, mean, M2) accumulator over R^d.
 ///
 /// Also supports *weighted* observations ([`Moments::push_weighted`]): the
@@ -47,17 +39,28 @@ pub fn tri_len(d: usize) -> usize {
 /// W = Σwᵢ; a weight-w row is exactly equivalent to w repeated unit-weight
 /// rows (property-tested).  `count()` still reports raw rows; `weight()`
 /// reports W (== n when nothing was weighted).
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone)]
 pub struct Moments {
     d: usize,
     n: u64,
     /// total observation weight W (== n unless weighted pushes were used)
     w: f64,
     mean: Vec<f64>,
-    /// packed upper-triangular centered scatter Σwᵢ(z−z̄)(z−z̄)ᵀ
-    m2: Vec<f64>,
+    /// packed-symmetric centered scatter Σwᵢ(z−z̄)(z−z̄)ᵀ
+    m2: SymMat,
     /// scratch for push (not part of the value)
     scratch: Vec<f64>,
+}
+
+impl PartialEq for Moments {
+    /// Value equality: the push/sub scratch buffer is not part of the value.
+    fn eq(&self, other: &Self) -> bool {
+        self.d == other.d
+            && self.n == other.n
+            && self.w == other.w
+            && self.mean == other.mean
+            && self.m2 == other.m2
+    }
 }
 
 impl Moments {
@@ -67,7 +70,7 @@ impl Moments {
             n: 0,
             w: 0.0,
             mean: vec![0.0; d],
-            m2: vec![0.0; tri_len(d)],
+            m2: SymMat::zeros(d),
             scratch: vec![0.0; d],
         }
     }
@@ -77,12 +80,12 @@ impl Moments {
     pub fn from_block(n: u64, mean: Vec<f64>, m2_full: &[f64]) -> Self {
         let d = mean.len();
         assert_eq!(m2_full.len(), d * d, "m2 must be d*d row-major");
-        let mut m2 = vec![0.0; tri_len(d)];
+        let mut m2 = SymMat::zeros(d);
         for i in 0..d {
             for j in i..d {
                 // average the two symmetric entries — the artifact computes
                 // them identically up to f32 rounding.
-                m2[tri_idx(d, i, j)] = 0.5 * (m2_full[i * d + j] + m2_full[j * d + i]);
+                m2.set(i, j, 0.5 * (m2_full[i * d + j] + m2_full[j * d + i]));
             }
         }
         Moments { d, n, w: n as f64, mean, m2, scratch: vec![0.0; d] }
@@ -108,8 +111,12 @@ impl Moments {
     /// Centered scatter entry M2\[i,j\] (either triangle).
     #[inline]
     pub fn m2_at(&self, i: usize, j: usize) -> f64 {
-        let (i, j) = if i <= j { (i, j) } else { (j, i) };
-        self.m2[tri_idx(self.d, i, j)]
+        self.m2.get(i, j)
+    }
+
+    /// The packed-symmetric centered scatter itself.
+    pub fn m2_packed(&self) -> &SymMat {
+        &self.m2
     }
 
     /// Population covariance entry (paper's 1/n convention; weighted: 1/W).
@@ -129,16 +136,7 @@ impl Moments {
 
     /// Dense row-major copy of the centered scatter.
     pub fn m2_full(&self) -> Vec<f64> {
-        let d = self.d;
-        let mut out = vec![0.0; d * d];
-        for i in 0..d {
-            for j in i..d {
-                let v = self.m2[tri_idx(d, i, j)];
-                out[i * d + j] = v;
-                out[j * d + i] = v;
-            }
-        }
-        out
+        self.m2.to_dense()
     }
 
     /// Mapper-side update (paper eq. 12 for the mean, eq. 15 for M2).
@@ -163,18 +161,7 @@ impl Moments {
         }
         // M2 += w · delta ⊗ (x − mean_new) = w(1 − w/W) · delta ⊗ delta
         let scale = weight * (1.0 - frac);
-        let d = self.d;
-        let mut k = 0;
-        for i in 0..d {
-            let di = self.scratch[i] * scale;
-            // row i of the packed triangle is contiguous: j = i..d
-            let m2row = &mut self.m2[k..k + (d - i)];
-            let deltas = &self.scratch[i..d];
-            for (m, &dj) in m2row.iter_mut().zip(deltas) {
-                *m += di * dj;
-            }
-            k += d - i;
-        }
+        self.m2.rank1(&self.scratch, scale);
     }
 
     /// Push a dense row-major block of rows (the CPU mapper fast path).
@@ -231,7 +218,7 @@ impl Moments {
         for m in &mut mean {
             *m /= bf;
         }
-        let mut m2 = vec![0.0; tri_len(d)];
+        let mut m2 = SymMat::zeros(d);
         let mut cbuf = vec![0.0; 4 * d];
         let mut quads = chunk.chunks_exact(4 * d);
         for quad in quads.by_ref() {
@@ -243,32 +230,14 @@ impl Moments {
             let (c0, rest) = cbuf.split_at(d);
             let (c1, rest) = rest.split_at(d);
             let (c2, c3) = rest.split_at(d);
-            let mut k = 0;
-            for i in 0..d {
-                let (a0, a1, a2, a3) = (c0[i], c1[i], c2[i], c3[i]);
-                let m2row = &mut m2[k..k + (d - i)];
-                let (r0, r1, r2, r3) = (&c0[i..], &c1[i..], &c2[i..], &c3[i..]);
-                for (t, m) in m2row.iter_mut().enumerate() {
-                    *m += a0 * r0[t] + a1 * r1[t] + a2 * r2[t] + a3 * r3[t];
-                }
-                k += d - i;
-            }
+            m2.rank4(c0, c1, c2, c3);
         }
         // tail rows (< 4): centered rank-1 updates
         for row in quads.remainder().chunks_exact(d) {
             for i in 0..d {
                 cbuf[i] = row[i] - mean[i];
             }
-            let mut k = 0;
-            for i in 0..d {
-                let ai = cbuf[i];
-                let m2row = &mut m2[k..k + (d - i)];
-                let ci = &cbuf[i..d];
-                for (m, &cj) in m2row.iter_mut().zip(ci) {
-                    *m += ai * cj;
-                }
-                k += d - i;
-            }
+            m2.rank1(&cbuf[..d], 1.0);
         }
         Moments { d, n: b as u64, w: bf, mean, m2, scratch: vec![0.0; d] }
     }
@@ -283,7 +252,7 @@ impl Moments {
             self.n = other.n;
             self.w = other.w;
             self.mean.copy_from_slice(&other.mean);
-            self.m2.copy_from_slice(&other.m2);
+            self.m2.as_mut_slice().copy_from_slice(other.m2.as_slice());
             return;
         }
         // weighted Chan merge: counts generalize to total weights
@@ -295,19 +264,8 @@ impl Moments {
         for i in 0..self.d {
             self.scratch[i] = other.mean[i] - self.mean[i];
         }
-        let d = self.d;
-        let mut k = 0;
-        for i in 0..d {
-            let ci = coef * self.scratch[i];
-            let m2row = &mut self.m2[k..k + (d - i)];
-            let orow = &other.m2[k..k + (d - i)];
-            let deltas = &self.scratch[i..d];
-            for ((s, &o), &dj) in m2row.iter_mut().zip(orow).zip(deltas) {
-                *s += o + ci * dj;
-            }
-            k += d - i;
-        }
-        for i in 0..d {
+        self.m2.merge_scaled_outer(&other.m2, &self.scratch, coef);
+        for i in 0..self.d {
             self.mean[i] += self.scratch[i] * w_other;
         }
         self.n += other.n;
@@ -320,40 +278,53 @@ impl Moments {
     /// This is the CV phase's `train_i = Σ_{j≠i} s_j` computed as
     /// `total − s_i` in O(d²) — no data pass, no re-aggregation.
     pub fn sub(&self, part: &Moments) -> Moments {
+        let mut out = Moments::new(self.d);
+        self.sub_into(part, &mut out);
+        out
+    }
+
+    /// [`Moments::sub`] into a caller-provided accumulator: the CV phase
+    /// computes k fold complements per sweep, and reusing one scratch
+    /// `Moments` keeps that O(d²) arithmetic allocation-free.  Bit-identical
+    /// to `sub` (same kernel, same order); `out`'s previous value is
+    /// overwritten entirely.
+    pub fn sub_into(&self, part: &Moments, out: &mut Moments) {
         assert_eq!(self.d, part.d, "dimension mismatch in sub");
+        assert_eq!(self.d, out.d, "scratch dimension mismatch in sub");
         assert!(part.n <= self.n, "part larger than total");
         let rest_n = self.n - part.n;
         if rest_n == 0 {
-            return Moments::new(self.d);
+            out.n = 0;
+            out.w = 0.0;
+            out.mean.fill(0.0);
+            out.m2.as_mut_slice().fill(0.0);
+            return;
         }
         if part.n == 0 {
-            return self.clone();
+            out.n = self.n;
+            out.w = self.w;
+            out.mean.copy_from_slice(&self.mean);
+            out.m2.as_mut_slice().copy_from_slice(self.m2.as_slice());
+            return;
         }
         // weighted complement: counts generalize to total weights
         let (nt, np) = (self.w, part.w);
         let nr = nt - np;
         assert!(nr > 0.0, "part weight exceeds total weight");
         let d = self.d;
-        let mut mean = vec![0.0; d];
         for i in 0..d {
-            mean[i] = (nt * self.mean[i] - np * part.mean[i]) / nr;
+            out.mean[i] = (nt * self.mean[i] - np * part.mean[i]) / nr;
         }
         // δ = mean_part − mean_rest; M2_rest = M2_tot − M2_part − (np·nr/nt)·δδᵀ
-        let mut delta = vec![0.0; d];
+        // (δ lands in out's scratch — not part of the value)
         for i in 0..d {
-            delta[i] = part.mean[i] - mean[i];
+            out.scratch[i] = part.mean[i] - out.mean[i];
         }
         let coef = np * nr / nt;
-        let mut m2 = vec![0.0; tri_len(d)];
-        let mut k = 0;
-        for i in 0..d {
-            let ci = coef * delta[i];
-            for j in i..d {
-                m2[k] = self.m2[k] - part.m2[k] - ci * delta[j];
-                k += 1;
-            }
-        }
-        Moments { d, n: rest_n, w: nr, mean, m2, scratch: vec![0.0; d] }
+        let Moments { m2, scratch, .. } = out;
+        self.m2.sub_scaled_outer_into(&part.m2, scratch, coef, m2);
+        out.n = rest_n;
+        out.w = nr;
     }
 
     /// True if no rows have been folded in.

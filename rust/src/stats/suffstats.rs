@@ -9,6 +9,7 @@
 //! The back-transform to the original scale is the paper's eq. (4).
 
 use super::moments::Moments;
+use super::symm::SymMat;
 
 /// Additive sufficient statistics for penalized linear regression.
 #[derive(Debug, Clone)]
@@ -39,8 +40,9 @@ pub struct QuadForm {
     pub p: usize,
     /// rows behind this form
     pub n: u64,
-    /// G, row-major p×p; G\[j,j\] == 1 for non-degenerate columns
-    pub gram: Vec<f64>,
+    /// G, packed symmetric p×p (p(p+1)/2 doubles — half the dense
+    /// footprint); G\[j,j\] == 1 for non-degenerate columns
+    pub gram: SymMat,
     /// c, length p
     pub xty: Vec<f64>,
     /// Var(y) = Σ(y−ȳ)²/n — the λ_max scale and the null-model MSE
@@ -148,6 +150,16 @@ impl SuffStats {
         SuffStats::from_moments(self.p, self.inner.sub(&part.inner))
     }
 
+    /// [`SuffStats::sub`] into a caller-provided scratch statistic — the
+    /// allocation-free fold-complement path the CV sweep reuses k times
+    /// per pass.  Bit-identical to `sub`; `scratch`'s previous value is
+    /// overwritten entirely.
+    pub fn sub_into(&self, part: &SuffStats, scratch: &mut SuffStats) {
+        assert_eq!(self.p, part.p);
+        assert_eq!(self.p, scratch.p, "scratch dimension mismatch");
+        self.inner.sub_into(&part.inner, &mut scratch.inner);
+    }
+
     pub fn x_mean(&self) -> &[f64] {
         &self.inner.mean()[..self.p]
     }
@@ -188,19 +200,24 @@ impl SuffStats {
             let v = self.sxx(j, j) / nf;
             scale[j] = if v > 0.0 { v.sqrt() } else { 0.0 };
         }
-        let mut gram = vec![0.0; p * p];
-        for i in 0..p {
-            for j in i..p {
-                let denom = scale[i] * scale[j];
-                let g = if denom > 0.0 {
-                    self.sxx(i, j) / (nf * denom)
-                } else if i == j {
-                    1.0 // degenerate column: unit diagonal, zero couplings
-                } else {
-                    0.0
-                };
-                gram[i * p + j] = g;
-                gram[j * p + i] = g;
+        // standardized Gram, written straight into packed-triangle order
+        // (i ascending, j = i..p is exactly the packed layout)
+        let mut gram = SymMat::zeros(p);
+        {
+            let packed = gram.as_mut_slice();
+            let mut k = 0;
+            for i in 0..p {
+                for j in i..p {
+                    let denom = scale[i] * scale[j];
+                    packed[k] = if denom > 0.0 {
+                        self.sxx(i, j) / (nf * denom)
+                    } else if i == j {
+                        1.0 // degenerate column: unit diagonal, zero couplings
+                    } else {
+                        0.0
+                    };
+                    k += 1;
+                }
             }
         }
         let mut xty = vec![0.0; p];
@@ -242,19 +259,22 @@ impl SuffStats {
             let v = self.sxx(j, j) / nf;
             scale[a] = if v > 0.0 { v.sqrt() } else { 0.0 };
         }
-        let mut gram = vec![0.0; m * m];
-        for a in 0..m {
-            for b in a..m {
-                let denom = scale[a] * scale[b];
-                let g = if denom > 0.0 {
-                    self.sxx(idx[a], idx[b]) / (nf * denom)
-                } else if a == b {
-                    1.0
-                } else {
-                    0.0
-                };
-                gram[a * m + b] = g;
-                gram[b * m + a] = g;
+        let mut gram = SymMat::zeros(m);
+        {
+            let packed = gram.as_mut_slice();
+            let mut k = 0;
+            for a in 0..m {
+                for b in a..m {
+                    let denom = scale[a] * scale[b];
+                    packed[k] = if denom > 0.0 {
+                        self.sxx(idx[a], idx[b]) / (nf * denom)
+                    } else if a == b {
+                        1.0
+                    } else {
+                        0.0
+                    };
+                    k += 1;
+                }
             }
         }
         let mut xty = vec![0.0; m];
@@ -281,6 +301,10 @@ impl SuffStats {
     /// data behind these statistics — no data pass needed:
     ///
     ///   Σ(y − α − xᵀβ)² = Syy − 2βᵀSxy + βᵀSxxβ + n(ȳ − α − x̄ᵀβ)²
+    ///
+    /// βᵀSxxβ accumulates over the packed upper triangle once
+    /// (off-diagonal terms ×2) — O(p²/2) reads instead of the two-sided
+    /// O(p²) double loop, matching how Sxx is actually stored.
     pub fn mse(&self, alpha: f64, beta: &[f64]) -> f64 {
         assert_eq!(beta.len(), self.p);
         assert!(self.count() > 0, "mse on empty statistics");
@@ -289,9 +313,11 @@ impl SuffStats {
         let mut cross = 0.0;
         for i in 0..self.p {
             cross += beta[i] * self.sxy(i);
-            for j in 0..self.p {
-                quad += beta[i] * self.sxx(i, j) * beta[j];
+            let mut off = 0.0;
+            for j in (i + 1)..self.p {
+                off += self.sxx(i, j) * beta[j];
             }
+            quad += beta[i] * (self.sxx(i, i) * beta[i] + 2.0 * off);
         }
         let xbar_beta: f64 = self
             .x_mean()
@@ -384,13 +410,54 @@ mod tests {
         let (xs, ys) = gen_xy(&mut rng, 200, 5);
         let q = fill(5, &xs, &ys).quad_form();
         for i in 0..5 {
-            assert!((q.gram[i * 5 + i] - 1.0).abs() < 1e-9, "diag {i}");
+            assert!((q.gram.get(i, i) - 1.0).abs() < 1e-9, "diag {i}");
             for j in 0..5 {
-                assert_eq!(q.gram[i * 5 + j], q.gram[j * 5 + i]);
-                assert!(q.gram[i * 5 + j].abs() <= 1.0 + 1e-9, "correlation bound");
+                assert_eq!(q.gram.get(i, j), q.gram.get(j, i));
+                assert!(q.gram.get(i, j).abs() <= 1.0 + 1e-9, "correlation bound");
             }
         }
         assert!(q.y_var > 0.0);
+    }
+
+    #[test]
+    fn packed_gram_bitwise_equals_dense_reference() {
+        // the packed quad_form must reproduce the pre-refactor dense-square
+        // construction bit for bit (same entries, same arithmetic)
+        let mut rng = Rng::seed_from(23);
+        let (xs, ys) = gen_xy(&mut rng, 180, 6);
+        let s = fill(6, &xs, &ys);
+        let q = s.quad_form();
+        let p = 6;
+        let nf = s.count() as f64;
+        let mut scale = vec![0.0; p];
+        for j in 0..p {
+            let v = s.sxx(j, j) / nf;
+            scale[j] = if v > 0.0 { v.sqrt() } else { 0.0 };
+        }
+        let mut dense: Vec<f64> = std::iter::repeat(0.0).take(p * p).collect();
+        for i in 0..p {
+            for j in i..p {
+                let denom = scale[i] * scale[j];
+                let g = if denom > 0.0 {
+                    s.sxx(i, j) / (nf * denom)
+                } else if i == j {
+                    1.0
+                } else {
+                    0.0
+                };
+                dense[i * p + j] = g;
+                dense[j * p + i] = g;
+            }
+        }
+        for i in 0..p {
+            for j in 0..p {
+                assert_eq!(
+                    q.gram.get(i, j).to_bits(),
+                    dense[i * p + j].to_bits(),
+                    "({i},{j})"
+                );
+            }
+        }
     }
 
     #[test]
@@ -405,9 +472,9 @@ mod tests {
         let q = fill(3, &xs, &ys).quad_form();
         assert_eq!(q.scale[1], 0.0);
         assert_eq!(q.xty[1], 0.0);
-        assert_eq!(q.gram[1 * 3 + 1], 1.0);
-        assert_eq!(q.gram[1 * 3 + 0], 0.0);
-        assert_eq!(q.gram[0 * 3 + 1], 0.0);
+        assert_eq!(q.gram.get(1, 1), 1.0);
+        assert_eq!(q.gram.get(1, 0), 0.0);
+        assert_eq!(q.gram.get(0, 1), 0.0);
         // back-transform keeps the degenerate coefficient at exactly 0
         let (_, beta) = q.to_original_scale(&[0.5, 0.3, -0.2]);
         assert_eq!(beta[1], 0.0);
@@ -449,8 +516,8 @@ mod tests {
         let b = fill(3, &xs[150..], &ys[150..]);
         a.merge(&b);
         let (qa, qw) = (a.quad_form(), whole.quad_form());
-        for i in 0..9 {
-            assert!((qa.gram[i] - qw.gram[i]).abs() < 1e-9);
+        for (ga, gw) in qa.gram.as_slice().iter().zip(qw.gram.as_slice()) {
+            assert!((ga - gw).abs() < 1e-9);
         }
         for i in 0..3 {
             assert!((qa.xty[i] - qw.xty[i]).abs() < 1e-9);
@@ -502,8 +569,8 @@ mod tests {
             }
         }
         let (qa, qb) = (weighted.quad_form(), duplicated.quad_form());
-        for i in 0..9 {
-            assert!((qa.gram[i] - qb.gram[i]).abs() < 1e-8);
+        for (ga, gb) in qa.gram.as_slice().iter().zip(qb.gram.as_slice()) {
+            assert!((ga - gb).abs() < 1e-8);
         }
         let sa = solve_cd(&qa, Penalty::lasso(), 0.05, None, CdSettings::default());
         let sb = solve_cd(&qb, Penalty::lasso(), 0.05, None, CdSettings::default());
@@ -562,14 +629,137 @@ mod tests {
         let s = fill(2, &xs, &ys);
         let q = s.quad_form();
         // solve 2×2 system G b = c
-        let (g, c) = (&q.gram, &q.xty);
-        let det = g[0] * g[3] - g[1] * g[2];
-        let b0 = (c[0] * g[3] - c[1] * g[1]) / det;
-        let b1 = (g[0] * c[1] - g[2] * c[0]) / det;
+        let (g00, g01, g11) = (q.gram.get(0, 0), q.gram.get(0, 1), q.gram.get(1, 1));
+        let c = &q.xty;
+        let det = g00 * g11 - g01 * g01;
+        let b0 = (c[0] * g11 - c[1] * g01) / det;
+        let b1 = (g00 * c[1] - g01 * c[0]) / det;
         let (alpha, beta) = q.to_original_scale(&[b0, b1]);
         assert!((alpha - 3.0).abs() < 1e-6, "alpha={alpha}");
         assert!((beta[0] - 2.0).abs() < 1e-6);
         assert!((beta[1] + 1.0).abs() < 1e-6);
         assert!(s.mse(alpha, &beta) < 1e-10);
+    }
+
+    /// The pre-refactor two-sided βᵀSxxβ double loop, kept as the mse
+    /// reference the triangle accumulation is pinned against.
+    fn mse_two_sided_reference(s: &SuffStats, alpha: f64, beta: &[f64]) -> f64 {
+        let p = s.p();
+        let nf = s.inner.weight();
+        let mut quad = 0.0;
+        let mut cross = 0.0;
+        for i in 0..p {
+            cross += beta[i] * s.sxy(i);
+            for j in 0..p {
+                quad += beta[i] * s.sxx(i, j) * beta[j];
+            }
+        }
+        let xbar_beta: f64 = s.x_mean().iter().zip(beta).map(|(m, b)| m * b).sum();
+        let e = s.y_mean() - alpha - xbar_beta;
+        (s.syy() - 2.0 * cross + quad + nf * e * e) / nf
+    }
+
+    #[test]
+    fn mse_triangle_bit_compatible_on_exact_symmetric_case() {
+        // Integer Sxx/Sxy/means and integer β: every product and partial
+        // sum is exact in f64, so the one-sided triangle accumulation
+        // (off-diagonal ×2) must equal the two-sided double loop bit for
+        // bit.  Moments::from_block lets us pin the statistic exactly.
+        let p = 4;
+        let d = p + 1;
+        let mean = vec![2.0, -1.0, 3.0, 0.0, 5.0];
+        // symmetric positive-ish integer scatter over z = [x | y]
+        let mut m2 = vec![0.0; d * d];
+        let vals = [
+            [40.0, 6.0, -2.0, 3.0, 8.0],
+            [6.0, 52.0, 4.0, -5.0, 1.0],
+            [-2.0, 4.0, 36.0, 7.0, -3.0],
+            [3.0, -5.0, 7.0, 44.0, 2.0],
+            [8.0, 1.0, -3.0, 2.0, 60.0],
+        ];
+        for i in 0..d {
+            for j in 0..d {
+                m2[i * d + j] = vals[i][j];
+            }
+        }
+        let s = SuffStats::from_moments(p, Moments::from_block(16, mean, &m2));
+        let beta = [3.0, -2.0, 1.0, 4.0];
+        let alpha = 7.0;
+        let got = s.mse(alpha, &beta);
+        let want = mse_two_sided_reference(&s, alpha, &beta);
+        assert_eq!(got.to_bits(), want.to_bits(), "{got} vs {want}");
+    }
+
+    #[test]
+    fn mse_triangle_within_ulps_of_two_sided_property() {
+        // on general float data the two accumulation orders may round
+        // differently — but only by a few ulps of the result
+        prop::quick(|rng, _| {
+            let p = 1 + rng.below(6);
+            let n = 10 + rng.below(120);
+            let (xs, ys) = gen_xy(rng, n, p);
+            let s = fill(p, &xs, &ys);
+            let alpha = rng.normal();
+            let beta: Vec<f64> = (0..p).map(|_| rng.normal()).collect();
+            let got = s.mse(alpha, &beta);
+            let want = mse_two_sided_reference(&s, alpha, &beta);
+            let ulps = (got.to_bits() as i64 - want.to_bits() as i64).unsigned_abs();
+            assert!(
+                ulps <= 4,
+                "mse drifted {ulps} ulps: {got} vs {want} (p={p}, n={n})"
+            );
+        });
+    }
+
+    #[test]
+    fn quad_form_subset_neutralizes_degenerate_member() {
+        // a zero-variance predictor INSIDE the screened subset must get
+        // unit diagonal, zero off-diagonals, zero xty — and CD on that
+        // sub-model must leave its coefficient at exactly 0.0
+        use crate::solver::{solve_cd, CdSettings, Penalty};
+        let mut rng = Rng::seed_from(19);
+        let xs: Vec<Vec<f64>> = (0..200)
+            .map(|_| vec![rng.normal(), -3.25, rng.normal(), rng.normal()])
+            .collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 2.0 * x[0] - x[3] + rng.normal() * 0.1).collect();
+        let s = fill(4, &xs, &ys);
+        // subset keeps the constant column 1 alongside signal columns 0, 3
+        let q = s.quad_form_subset(&[0, 1, 3]);
+        assert_eq!(q.p, 3);
+        assert_eq!(q.scale[1], 0.0);
+        assert_eq!(q.xty[1], 0.0);
+        assert_eq!(q.gram.get(1, 1), 1.0);
+        for other in [0usize, 2] {
+            assert_eq!(q.gram.get(1, other), 0.0, "coupling to {other}");
+            assert_eq!(q.gram.get(other, 1), 0.0);
+        }
+        let sol = solve_cd(&q, Penalty::lasso(), 0.01, None, CdSettings::default());
+        assert_eq!(sol.beta[1], 0.0, "degenerate subset coefficient must stay 0");
+        let (_, beta) = q.to_original_scale(&sol.beta);
+        assert_eq!(beta[1], 0.0);
+        // the signal members still fit
+        assert!(beta[0].abs() > 0.5 && beta[2].abs() > 0.1);
+    }
+
+    #[test]
+    fn sub_into_bit_identical_to_sub() {
+        let mut rng = Rng::seed_from(29);
+        let (xs, ys) = gen_xy(&mut rng, 300, 4);
+        let whole = fill(4, &xs, &ys);
+        let part = fill(4, &xs[..80], &ys[..80]);
+        let alloc = whole.sub(&part);
+        let mut scratch = SuffStats::new(4);
+        // fill scratch with junk first: sub_into must fully overwrite
+        scratch.push(&[9.0, 9.0, 9.0, 9.0], 9.0);
+        whole.sub_into(&part, &mut scratch);
+        assert_eq!(alloc.count(), scratch.count());
+        assert_eq!(alloc, scratch, "value equality (scratch excluded)");
+        assert_eq!(alloc.syy().to_bits(), scratch.syy().to_bits());
+        for i in 0..4 {
+            assert_eq!(alloc.sxy(i).to_bits(), scratch.sxy(i).to_bits());
+            for j in i..4 {
+                assert_eq!(alloc.sxx(i, j).to_bits(), scratch.sxx(i, j).to_bits());
+            }
+        }
     }
 }

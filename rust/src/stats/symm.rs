@@ -1,0 +1,448 @@
+//! Packed-symmetric matrix storage — the O(p²) sufficient statistic (10)
+//! stored once, not twice.
+//!
+//! Every symmetric p×p object on the fit path (the centered scatter M2,
+//! the standardized Gram, fold-complement statistics) lives in a
+//! [`SymMat`]: the upper triangle packed row-major into p(p+1)/2 doubles.
+//! Row `i`'s tail `(i, i..p)` is contiguous, which is exactly the access
+//! pattern of the mapper rank-1/rank-4 updates, Chan merges and fold
+//! subtraction — so the kernels here stream linearly through half the
+//! memory the dense layout touched, and an engine shuffle payload carries
+//! half the bytes.
+//!
+//! Determinism contract: every kernel iterates the packed triangle in the
+//! same `(i, j≥i)` row-major order the previous dense code wrote upper
+//! entries in, and the symmetric gathers ([`SymMat::row_dot`],
+//! [`SymMat::axpy_row_into`]) visit indices strictly ascending — the same
+//! f64 values combined in the same order as a dense row walk.  The engine's
+//! bit-for-bit reproducibility across worker counts and fault injection
+//! rides on this (property-tested in `mapreduce::engine` and `cv`).
+
+/// Packed-upper-triangular index for (i, j) with i ≤ j in dimension n.
+#[inline]
+pub fn tri_idx(n: usize, i: usize, j: usize) -> usize {
+    debug_assert!(i <= j && j < n);
+    // row-i offset = Σ_{k<i} (n−k) = i(2n−i+1)/2  (underflow-safe form)
+    i * (2 * n - i + 1) / 2 + (j - i)
+}
+
+/// Length of the packed upper triangle for dimension n.
+#[inline]
+pub fn tri_len(n: usize) -> usize {
+    n * (n + 1) / 2
+}
+
+/// A symmetric n×n matrix stored as its packed upper triangle.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SymMat {
+    n: usize,
+    /// packed upper triangle, row-major: (0,0..n), (1,1..n), …
+    data: Vec<f64>,
+}
+
+impl SymMat {
+    /// The n×n zero matrix.
+    pub fn zeros(n: usize) -> Self {
+        SymMat { n, data: vec![0.0; tri_len(n)] }
+    }
+
+    /// Wrap an existing packed upper triangle (length must be n(n+1)/2).
+    pub fn from_packed(n: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), tri_len(n), "packed length mismatch");
+        SymMat { n, data }
+    }
+
+    /// Take the upper triangle of a dense row-major n×n matrix.
+    pub fn from_dense(n: usize, dense: &[f64]) -> Self {
+        assert_eq!(dense.len(), n * n, "dense length mismatch");
+        let mut data = Vec::with_capacity(tri_len(n));
+        for i in 0..n {
+            data.extend_from_slice(&dense[i * n + i..(i + 1) * n]);
+        }
+        SymMat { n, data }
+    }
+
+    /// Matrix dimension n.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Packed element count, n(n+1)/2.
+    pub fn packed_len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// The packed upper triangle, row-major.
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Mutable packed upper triangle (for kernels that stream it linearly).
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Entry (i, j), either triangle.
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        let (i, j) = if i <= j { (i, j) } else { (j, i) };
+        self.data[tri_idx(self.n, i, j)]
+    }
+
+    /// Set entry (i, j) (and by symmetry (j, i)).
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        let (i, j) = if i <= j { (i, j) } else { (j, i) };
+        self.data[tri_idx(self.n, i, j)] = v;
+    }
+
+    /// Contiguous tail of row i: entries (i, i..n).
+    #[inline]
+    pub fn row_tail(&self, i: usize) -> &[f64] {
+        let k = tri_idx(self.n, i, i);
+        &self.data[k..k + (self.n - i)]
+    }
+
+    /// Gather the full symmetric row j into `out` (length n): the
+    /// covariance-update solver's "row == column" access, without ever
+    /// materializing the mirrored triangle.
+    pub fn row_into(&self, j: usize, out: &mut [f64]) {
+        let n = self.n;
+        assert!(j < n && out.len() == n, "row gather shape mismatch");
+        // column part (i < j): strided walk down column j
+        let mut k = j; // tri_idx(n, 0, j)
+        for (i, o) in out.iter_mut().enumerate().take(j) {
+            *o = self.data[k];
+            k += n - i - 1;
+        }
+        // row part (i ≥ j): contiguous
+        out[j..].copy_from_slice(&self.data[k..k + (n - j)]);
+    }
+
+    /// Σᵢ A\[j,i\]·x\[i\] with i strictly ascending — bit-identical to a
+    /// dense row-times-vector walk.
+    pub fn row_dot(&self, j: usize, x: &[f64]) -> f64 {
+        let n = self.n;
+        debug_assert!(j < n && x.len() == n);
+        let mut acc = 0.0;
+        let mut k = j;
+        for i in 0..j {
+            acc += self.data[k] * x[i];
+            k += n - i - 1;
+        }
+        let row = &self.data[k..k + (n - j)];
+        for (a, xi) in row.iter().zip(&x[j..]) {
+            acc += a * xi;
+        }
+        acc
+    }
+
+    /// out\[i\] += coef · A\[j,i\] for all i (ascending) — the incremental
+    /// G·β maintenance of the covariance-update CD, on packed storage.
+    pub fn axpy_row_into(&self, j: usize, coef: f64, out: &mut [f64]) {
+        let n = self.n;
+        debug_assert!(j < n && out.len() == n);
+        let mut k = j;
+        for (i, o) in out.iter_mut().enumerate().take(j) {
+            *o += coef * self.data[k];
+            k += n - i - 1;
+        }
+        let row = &self.data[k..k + (n - j)];
+        for (o, &a) in out[j..].iter_mut().zip(row) {
+            *o += coef * a;
+        }
+    }
+
+    /// Quadratic form xᵀAx, evaluated over the triangle once
+    /// (off-diagonal terms ×2).
+    pub fn quad(&self, x: &[f64]) -> f64 {
+        let n = self.n;
+        assert_eq!(x.len(), n, "quad form shape mismatch");
+        let mut acc = 0.0;
+        let mut k = 0;
+        for i in 0..n {
+            let xi = x[i];
+            let row = &self.data[k..k + (n - i)];
+            let mut off = 0.0;
+            for (a, xj) in row[1..].iter().zip(&x[i + 1..]) {
+                off += a * xj;
+            }
+            acc += xi * (row[0] * xi + 2.0 * off);
+            k += n - i;
+        }
+        acc
+    }
+
+    /// A += v·I (the ridge shift).
+    pub fn add_diag(&mut self, v: f64) {
+        let n = self.n;
+        let mut k = 0;
+        for i in 0..n {
+            self.data[k] += v;
+            k += n - i;
+        }
+    }
+
+    /// Expand to a dense row-major n×n matrix (interop with dense-only
+    /// consumers, e.g. the f32 HLO kernels).
+    pub fn to_dense(&self) -> Vec<f64> {
+        let n = self.n;
+        let mut out = vec![0.0; n * n];
+        let mut k = 0;
+        for i in 0..n {
+            for j in i..n {
+                let v = self.data[k];
+                out[i * n + j] = v;
+                out[j * n + i] = v;
+                k += 1;
+            }
+        }
+        out
+    }
+
+    /// Extract the packed principal submatrix over `idx` (strictly
+    /// increasing) — a sub-model's Gram is just a sub-triangle.
+    pub fn submatrix(&self, idx: &[usize]) -> SymMat {
+        assert!(
+            idx.windows(2).all(|w| w[0] < w[1]) && idx.iter().all(|&j| j < self.n),
+            "submatrix indices must be strictly increasing and < n"
+        );
+        let m = idx.len();
+        let mut data = Vec::with_capacity(tri_len(m));
+        for (a, &i) in idx.iter().enumerate() {
+            for &j in &idx[a..] {
+                data.push(self.data[tri_idx(self.n, i, j)]);
+            }
+        }
+        SymMat { n: m, data }
+    }
+
+    // ---- streaming kernels (the moments hot loops) -----------------------
+    //
+    // Each iterates rows of the packed triangle contiguously — one linear
+    // pass over p(p+1)/2 doubles, the cache-blocked layout the mapper and
+    // merge paths stream.  Loop bodies and iteration order are the exact
+    // ones the dense-era `stats::moments` used, so results are bit-for-bit
+    // unchanged.
+
+    /// A += scale·(δ ⊗ δ) on the upper triangle — the streaming rank-1
+    /// scatter update (paper eq. 15).
+    pub fn rank1(&mut self, delta: &[f64], scale: f64) {
+        let n = self.n;
+        debug_assert_eq!(delta.len(), n);
+        let mut k = 0;
+        for i in 0..n {
+            let di = delta[i] * scale;
+            let row = &mut self.data[k..k + (n - i)];
+            for (m, &dj) in row.iter_mut().zip(&delta[i..]) {
+                *m += di * dj;
+            }
+            k += n - i;
+        }
+    }
+
+    /// A += Σᵣ cᵣ ⊗ cᵣ over four centered rows at once — 4× the arithmetic
+    /// intensity of [`SymMat::rank1`], all five streams contiguous.
+    pub fn rank4(&mut self, c0: &[f64], c1: &[f64], c2: &[f64], c3: &[f64]) {
+        let n = self.n;
+        debug_assert!(c0.len() == n && c1.len() == n && c2.len() == n && c3.len() == n);
+        let mut k = 0;
+        for i in 0..n {
+            let (a0, a1, a2, a3) = (c0[i], c1[i], c2[i], c3[i]);
+            let row = &mut self.data[k..k + (n - i)];
+            let (r0, r1, r2, r3) = (&c0[i..], &c1[i..], &c2[i..], &c3[i..]);
+            for (t, m) in row.iter_mut().enumerate() {
+                *m += a0 * r0[t] + a1 * r1[t] + a2 * r2[t] + a3 * r3[t];
+            }
+            k += n - i;
+        }
+    }
+
+    /// Chan's pairwise merge of scatter matrices (paper eq. 14):
+    /// A += B + coef·(δ ⊗ δ), one linear pass over both triangles.
+    pub fn merge_scaled_outer(&mut self, other: &SymMat, delta: &[f64], coef: f64) {
+        let n = self.n;
+        assert_eq!(other.n, n, "dimension mismatch in merge");
+        debug_assert_eq!(delta.len(), n);
+        let mut k = 0;
+        for i in 0..n {
+            let ci = coef * delta[i];
+            let row = &mut self.data[k..k + (n - i)];
+            let orow = &other.data[k..k + (n - i)];
+            for ((s, &o), &dj) in row.iter_mut().zip(orow).zip(&delta[i..]) {
+                *s += o + ci * dj;
+            }
+            k += n - i;
+        }
+    }
+
+    /// The inverse of [`SymMat::merge_scaled_outer`]: out = A − B − coef·(δ ⊗ δ)
+    /// (the leave-one-fold-out complement), written into a caller-provided
+    /// matrix — no allocation per fold.
+    pub fn sub_scaled_outer_into(
+        &self,
+        part: &SymMat,
+        delta: &[f64],
+        coef: f64,
+        out: &mut SymMat,
+    ) {
+        let n = self.n;
+        assert!(part.n == n && out.n == n, "dimension mismatch in sub");
+        debug_assert_eq!(delta.len(), n);
+        let mut k = 0;
+        for i in 0..n {
+            let ci = coef * delta[i];
+            for j in i..n {
+                out.data[k] = self.data[k] - part.data[k] - ci * delta[j];
+                k += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn random_sym(rng: &mut Rng, n: usize) -> (SymMat, Vec<f64>) {
+        let mut dense = vec![0.0; n * n];
+        for i in 0..n {
+            for j in i..n {
+                let v = rng.normal();
+                dense[i * n + j] = v;
+                dense[j * n + i] = v;
+            }
+        }
+        (SymMat::from_dense(n, &dense), dense)
+    }
+
+    #[test]
+    fn indexing_round_trips_dense() {
+        let mut rng = Rng::seed_from(1);
+        let (s, dense) = random_sym(&mut rng, 7);
+        assert_eq!(s.packed_len(), tri_len(7));
+        for i in 0..7 {
+            for j in 0..7 {
+                assert_eq!(s.get(i, j), dense[i * 7 + j], "({i},{j})");
+            }
+        }
+        assert_eq!(s.to_dense(), dense);
+    }
+
+    #[test]
+    fn set_writes_both_triangles() {
+        let mut s = SymMat::zeros(3);
+        s.set(2, 0, 5.0);
+        assert_eq!(s.get(0, 2), 5.0);
+        assert_eq!(s.get(2, 0), 5.0);
+        s.add_diag(1.5);
+        assert_eq!(s.get(1, 1), 1.5);
+    }
+
+    #[test]
+    fn row_gathers_match_dense_row() {
+        let mut rng = Rng::seed_from(2);
+        for n in [1usize, 2, 5, 9] {
+            let (s, dense) = random_sym(&mut rng, n);
+            let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let mut row = vec![0.0; n];
+            for j in 0..n {
+                s.row_into(j, &mut row);
+                assert_eq!(&row, &dense[j * n..(j + 1) * n], "row {j} n={n}");
+                // row_dot bit-equals the dense ascending walk
+                let mut want = 0.0;
+                for i in 0..n {
+                    want += dense[j * n + i] * x[i];
+                }
+                assert_eq!(s.row_dot(j, &x).to_bits(), want.to_bits(), "dot {j}");
+                // axpy bit-equals the dense column update
+                let mut got = x.clone();
+                s.axpy_row_into(j, 0.75, &mut got);
+                let mut ref_out = x.clone();
+                for i in 0..n {
+                    ref_out[i] += 0.75 * dense[j * n + i];
+                }
+                for i in 0..n {
+                    assert_eq!(got[i].to_bits(), ref_out[i].to_bits(), "axpy {j},{i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quad_matches_dense_quadratic_form() {
+        let mut rng = Rng::seed_from(3);
+        let (s, dense) = random_sym(&mut rng, 6);
+        let x: Vec<f64> = (0..6).map(|_| rng.normal()).collect();
+        let mut want = 0.0;
+        for i in 0..6 {
+            for j in 0..6 {
+                want += x[i] * dense[i * 6 + j] * x[j];
+            }
+        }
+        let got = s.quad(&x);
+        assert!((got - want).abs() <= 1e-12 * want.abs().max(1.0), "{got} vs {want}");
+    }
+
+    #[test]
+    fn submatrix_extracts_principal_block() {
+        let mut rng = Rng::seed_from(4);
+        let (s, dense) = random_sym(&mut rng, 6);
+        let idx = [0usize, 2, 5];
+        let sub = s.submatrix(&idx);
+        assert_eq!(sub.n(), 3);
+        for (a, &i) in idx.iter().enumerate() {
+            for (b, &j) in idx.iter().enumerate() {
+                assert_eq!(sub.get(a, b), dense[i * 6 + j]);
+            }
+        }
+    }
+
+    #[test]
+    fn kernels_match_naive_updates() {
+        let mut rng = Rng::seed_from(5);
+        let n = 5;
+        let delta: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mut s = SymMat::zeros(n);
+        s.rank1(&delta, 2.0);
+        for i in 0..n {
+            for j in 0..n {
+                let want = (delta[i] * 2.0) * delta[j];
+                let got = s.get(i, j);
+                assert!((got - want).abs() < 1e-12, "rank1 ({i},{j})");
+            }
+        }
+        // merge then subtract round-trips
+        let (other, _) = random_sym(&mut rng, n);
+        let before = s.clone();
+        s.merge_scaled_outer(&other, &delta, 0.5);
+        let mut back = SymMat::zeros(n);
+        s.sub_scaled_outer_into(&other, &delta, 0.5, &mut back);
+        for i in 0..n {
+            for j in i..n {
+                assert!((back.get(i, j) - before.get(i, j)).abs() < 1e-12, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn rank4_equals_four_rank1s() {
+        let mut rng = Rng::seed_from(6);
+        let n = 4;
+        let rows: Vec<Vec<f64>> = (0..4)
+            .map(|_| (0..n).map(|_| rng.normal()).collect())
+            .collect();
+        let mut a = SymMat::zeros(n);
+        a.rank4(&rows[0], &rows[1], &rows[2], &rows[3]);
+        let mut b = SymMat::zeros(n);
+        for r in &rows {
+            b.rank1(r, 1.0);
+        }
+        for i in 0..n {
+            for j in i..n {
+                assert!((a.get(i, j) - b.get(i, j)).abs() < 1e-12);
+            }
+        }
+    }
+}

@@ -147,6 +147,77 @@ fn ridge_and_elastic_net_through_driver() {
 }
 
 #[test]
+fn packed_cv_path_bit_stable_and_matches_naive_aggregation() {
+    // The packed-symmetric acceptance invariant, end to end: fold
+    // statistics aggregated through the engine, the packed Grams they
+    // standardize into, and the whole CV error matrix must be bit-for-bit
+    // identical across worker counts {1, 4, 8} and chaotic fault
+    // injection; and on well-conditioned data the same CV matrix must
+    // agree numerically with one aggregated by the independent
+    // `stats::naive` raw-moment implementation.
+    use plrmr::cv::{cross_validate, FoldStats};
+    use plrmr::mapreduce::FoldAssigner;
+    use plrmr::solver::path::lambda_grid;
+    use plrmr::solver::CdSettings;
+    use plrmr::stats::naive::NaiveStats;
+    use plrmr::stats::SuffStats;
+
+    let spec = SynthSpec::sparse_linear(4000, 8, 0.3, 77);
+    let data = generate(&spec);
+    let k = 5;
+
+    let cv_of = |workers: usize, fault: FaultPlan| {
+        let cfg = FitConfig {
+            workers,
+            folds: k,
+            split_rows: 500,
+            fault,
+            ..FitConfig::default()
+        };
+        let driver = Driver::new(cfg);
+        let (folds, _) = driver.compute_fold_stats(&data).unwrap();
+        let grid = lambda_grid(folds.total().quad_form().lambda_max(1.0), 12, 1e-2);
+        let gram_bits: Vec<u64> = (0..k)
+            .map(|i| folds.train_for(i).quad_form())
+            .flat_map(|q| q.gram.as_slice().iter().map(|g| g.to_bits()).collect::<Vec<_>>())
+            .collect();
+        let cv = cross_validate(&folds, Penalty::lasso(), &grid, CdSettings::default()).unwrap();
+        (gram_bits, cv.fold_err, cv.lambda_opt, grid)
+    };
+
+    let (base_grams, base_err, base_opt, grid) = cv_of(1, FaultPlan::none());
+    for workers in [1usize, 4, 8] {
+        for chaos in [false, true] {
+            let fault = if chaos { FaultPlan::chaotic(0.3, 9) } else { FaultPlan::none() };
+            let (grams, err, opt, _) = cv_of(workers, fault);
+            assert_eq!(grams, base_grams, "gram bits drifted (w={workers} chaos={chaos})");
+            assert_eq!(err, base_err, "CV matrix drifted (w={workers} chaos={chaos})");
+            assert_eq!(opt, base_opt, "λ_opt drifted (w={workers} chaos={chaos})");
+        }
+    }
+
+    // independent comparator: aggregate the same fold split with the naive
+    // raw-moment pipeline, convert, and CV — must agree to ~1e-6 here
+    // (well-conditioned data; naive is inexact by design at scale)
+    let assigner = FoldAssigner::new(k, FitConfig::default().seed);
+    let mut naive: Vec<NaiveStats> = (0..k).map(|_| NaiveStats::new(spec.p)).collect();
+    for i in 0..data.n() {
+        naive[assigner.fold_of(i as u64)].push(data.row(i), data.y[i]);
+    }
+    let naive_folds: Vec<SuffStats> = naive.iter().map(NaiveStats::to_suffstats).collect();
+    let naive_fs = FoldStats::new(naive_folds).unwrap();
+    let naive_cv = cross_validate(&naive_fs, Penalty::lasso(), &grid, CdSettings::default()).unwrap();
+    for (li, (row_packed, row_naive)) in base_err.iter().zip(&naive_cv.fold_err).enumerate() {
+        for (a, b) in row_packed.iter().zip(row_naive) {
+            assert!(
+                (a - b).abs() <= 1e-6 * b.abs().max(1.0),
+                "λ index {li}: packed {a} vs naive {b}"
+            );
+        }
+    }
+}
+
+#[test]
 fn hlo_runtime_agrees_with_cpu_when_built() {
     let dir = plrmr::runtime::default_artifacts_dir();
     if !cfg!(feature = "pjrt") || !dir.join("manifest.json").exists() {
