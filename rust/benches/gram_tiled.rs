@@ -1,0 +1,147 @@
+//! Tiled vs packed fold statistics (§Perf of EXPERIMENTS.md).
+//!
+//! PR 2's packed triangle halved the O(p²) statistic; this bench
+//! quantifies what tiling it into `(fold, panel)` reduce keys
+//! (`stats::tiles`) does to the three quantities that bind at large p:
+//!
+//! * **peak per-key payload** — the largest value the shuffle/merge tree
+//!   ever holds: the whole packed triangle (~d²/2 doubles) untiled vs one
+//!   row-block panel (≤ d·b doubles) tiled — arithmetic table at
+//!   p ∈ {1024, 4096}, plus the engine-measured
+//!   `JobMetrics::max_payload_bytes` for both paths.
+//! * **total shuffle bytes** — tiling re-ships one O(d) header per panel;
+//!   the table shows that overhead staying in the noise.
+//! * **CV wall-clock** — the CV phase runs on the reassembled statistics,
+//!   so tiling must cost ~nothing there; the `shard+assemble` row prices
+//!   the reassembly itself against a full CV sweep.
+//!
+//! Exactness is asserted inline (tiled fold statistics == untiled, bit
+//! for bit) — it is the contract, not a benchmark outcome.
+//!
+//! Run: `cargo bench --bench gram_tiled [-- --quick]`
+
+use plrmr::bench::{bench, fmt_bytes, render, BenchConfig};
+use plrmr::config::FitConfig;
+use plrmr::coordinator::Driver;
+use plrmr::cv::{cross_validate, FoldStats};
+use plrmr::data::synth::{generate, SynthSpec};
+use plrmr::rng::Rng;
+use plrmr::solver::path::lambda_grid;
+use plrmr::solver::{CdSettings, Penalty};
+use plrmr::stats::symm::tri_len;
+use plrmr::stats::tiles::{assemble_stats, shard_stats, TileLayout};
+use plrmr::stats::SuffStats;
+use plrmr::util::table::{sig, Table};
+
+/// SuffStats chunk filled from a deterministic stream.
+fn chunk(p: usize, rows: usize, seed: u64) -> SuffStats {
+    let mut rng = Rng::seed_from(seed);
+    let x: Vec<f64> = (0..rows * p).map(|_| rng.normal_ms(1.0, 2.0)).collect();
+    let y: Vec<f64> = (0..rows).map(|_| rng.normal()).collect();
+    let mut s = SuffStats::new(p);
+    s.push_rows(&x, &y);
+    s
+}
+
+fn fold_stats(p: usize, k: usize, rows_per_fold: usize, seed: u64) -> FoldStats {
+    let folds: Vec<SuffStats> = (0..k)
+        .map(|i| chunk(p, rows_per_fold, seed + i as u64))
+        .collect();
+    FoldStats::new(folds).expect("valid folds")
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let key = std::mem::size_of::<(usize, usize)>();
+
+    println!("## gram_tiled — (fold, panel)-keyed statistics vs one triangle per fold\n");
+
+    // --- peak per-key payload arithmetic (exact, deterministic) ---------
+    let ps: &[usize] = if quick { &[64, 128] } else { &[1024, 4096] };
+    let mut t = Table::new(vec![
+        "p", "block", "panels", "packed/key", "tiled max/key", "ratio", "header overhead",
+    ]);
+    for &p in ps {
+        let d = p + 1;
+        let packed_key = 8 + 8 * (2 + d + tri_len(d));
+        for block in [64usize, 256] {
+            let layout = TileLayout::new(d, block);
+            let tiled_key = key + 8 * (2 + d + layout.max_panel_len());
+            // tiling re-ships one (n, w, mean) header per extra panel
+            let overhead = (layout.n_panels() - 1) * (key + 8 * (2 + d));
+            t.row(vec![
+                format!("{p}"),
+                format!("{block}"),
+                format!("{}", layout.n_panels()),
+                fmt_bytes(packed_key),
+                fmt_bytes(tiled_key),
+                sig(packed_key as f64 / tiled_key as f64, 3),
+                fmt_bytes(overhead),
+            ]);
+        }
+    }
+    println!("{}\n", t.render());
+
+    // --- engine-measured payloads, untiled vs tiled ---------------------
+    let p = if quick { 32 } else { 256 };
+    let block = if quick { 8 } else { 64 };
+    let data = generate(&SynthSpec::sparse_linear(4000, p, 0.2, 7));
+    let base = FitConfig {
+        folds: 5,
+        n_lambdas: 8,
+        workers: 4,
+        split_rows: 500,
+        ..Default::default()
+    };
+    let (f0, m0) = Driver::new(base).compute_fold_stats(&data).unwrap();
+    let (f1, m1) = Driver::new(FitConfig { gram_block: block, ..base })
+        .compute_fold_stats(&data)
+        .unwrap();
+    // exactness contract, not a benchmark artifact
+    for i in 0..5 {
+        assert_eq!(f0.fold(i), f1.fold(i), "tiled fold {i} drifted");
+    }
+    let mut m = Table::new(vec!["job", "shuffle bytes", "max key payload", "payloads"]);
+    let tiled_name = format!("tiled b={block}");
+    for (name, jm) in [("untiled", &m0), (tiled_name.as_str(), &m1)] {
+        m.row(vec![
+            name.to_string(),
+            fmt_bytes(jm.shuffle_bytes),
+            fmt_bytes(jm.max_payload_bytes),
+            format!("{}", jm.shuffle_payloads),
+        ]);
+    }
+    println!("measured stats job at p={p} (5 folds, 4 workers):\n{}\n", m.render());
+
+    // --- CV wall-clock + the cost of shard/assemble ---------------------
+    let ps_cv: &[usize] = if quick { &[64, 128] } else { &[1024, 4096] };
+    let cfg = if quick {
+        BenchConfig::quick()
+    } else {
+        BenchConfig { warmup: 1, max_samples: 3, budget_s: 2.0 }
+    };
+    let cd = CdSettings { tol: 1e-6, max_sweeps: 500, active_set: true };
+    let mut results = Vec::new();
+    for &p in ps_cv {
+        let k = if p >= 4096 { 3 } else { 5 };
+        let fs = fold_stats(p, k, 48, 31);
+        let grid = lambda_grid(fs.total().quad_form().lambda_max(1.0), 4, 1e-2);
+        results.push(bench(&format!("cv sweep ({k} folds, 4 λ) p={p}"), cfg, || {
+            cross_validate(&fs, Penalty::lasso(), &grid, cd).unwrap().opt_index
+        }));
+        let layout = TileLayout::new(p + 1, 64);
+        let total = fs.total().clone();
+        results.push(bench(&format!("shard+assemble (b=64) p={p}"), cfg, || {
+            let panels = shard_stats(&total, layout);
+            assemble_stats(p, layout, &panels).unwrap().count()
+        }));
+    }
+    println!("{}\n", render(&results));
+
+    println!(
+        "NOTE: the tiled and untiled paths produce bit-identical statistics and\n\
+         CV matrices (asserted above and in tests/integration.rs); tiling buys\n\
+         the per-key payload bound in the first table for the price of one\n\
+         replicated O(d) header per extra panel."
+    );
+}

@@ -126,7 +126,7 @@ pub fn fmt_bytes(b: usize) -> String {
 pub fn render_job_phases(results: &[(String, JobMetrics)]) -> String {
     let mut t = Table::new(vec![
         "run", "map", "shuffle", "reduce", "total", "merge frac",
-        "payloads", "bytes", "pre-combined", "leader merges",
+        "payloads", "bytes", "max key", "pre-combined", "leader merges",
     ]);
     for (name, m) in results {
         t.row(vec![
@@ -138,6 +138,7 @@ pub fn render_job_phases(results: &[(String, JobMetrics)]) -> String {
             sig(m.merge_fraction(), 3),
             format!("{}", m.shuffle_payloads),
             fmt_bytes(m.shuffle_bytes),
+            fmt_bytes(m.max_payload_bytes),
             format!("{}", m.combined_nodes),
             format!("{}", m.reduce_merges),
         ]);

@@ -28,6 +28,12 @@ pub struct FitConfig {
     pub workers: usize,
     /// rows per input split handed to one map task
     pub split_rows: usize,
+    /// row-block size b for the *tiled* statistics job (rows of the packed
+    /// z-triangle, d = p+1): 0 ⇒ untiled (one O(d²) triangle per fold
+    /// reduce key); b > 0 ⇒ the reduce is keyed by `(fold, panel)` and no
+    /// shuffle payload or merge slot exceeds O(d·b) — bit-identical output
+    /// at every block size (oversized b degenerates to one panel)
+    pub gram_block: usize,
     /// salt for the random fold assignment (Algorithm 1 line 4)
     pub seed: u64,
     /// modeled cluster scheduling costs
@@ -48,6 +54,7 @@ impl Default for FitConfig {
                 .map(|v| v.get())
                 .unwrap_or(4),
             split_rows: 65_536,
+            gram_block: 0,
             seed: 0x5EED,
             costs: JobCosts::zero(),
             fault: FaultPlan::none(),
@@ -78,6 +85,12 @@ impl FitConfig {
 
     pub fn with_seed(mut self, seed: u64) -> Self {
         self.seed = seed;
+        self
+    }
+
+    /// Row-block size for the tiled statistics job (0 ⇒ untiled).
+    pub fn with_gram_block(mut self, b: usize) -> Self {
+        self.gram_block = b;
         self
     }
 
@@ -149,6 +162,7 @@ impl FitConfig {
                 "lambda_ratio" => cfg.lambda_ratio = val.parse()?,
                 "workers" => cfg.workers = val.parse()?,
                 "split_rows" => cfg.split_rows = val.parse()?,
+                "gram_block" => cfg.gram_block = val.parse()?,
                 "seed" => cfg.seed = val.parse()?,
                 "tol" => cfg.cd.tol = val.parse()?,
                 "max_sweeps" => cfg.cd.max_sweeps = val.parse()?,
@@ -193,13 +207,15 @@ mod tests {
     #[test]
     fn kv_parsing() {
         let cfg = FitConfig::from_kv_pairs(
-            "# a comment\npenalty = elastic_net:0.5\nfolds=5\nworkers = 3\nseed=42\n",
+            "# a comment\npenalty = elastic_net:0.5\nfolds=5\nworkers = 3\nseed=42\ngram_block=16\n",
         )
         .unwrap();
         assert_eq!(cfg.penalty.alpha, 0.5);
         assert_eq!(cfg.folds, 5);
         assert_eq!(cfg.workers, 3);
         assert_eq!(cfg.seed, 42);
+        assert_eq!(cfg.gram_block, 16);
+        assert_eq!(FitConfig::default().gram_block, 0, "tiling is opt-in");
         assert!(FitConfig::from_kv_pairs("nonsense").is_err());
         assert!(FitConfig::from_kv_pairs("folds=1").is_err());
         assert!(FitConfig::from_kv_pairs("wat=1").is_err());

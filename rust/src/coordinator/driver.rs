@@ -21,6 +21,7 @@ use crate::mapreduce::{run_job, Emitter, FoldAssigner, JobMetrics, TaskCtx};
 use crate::model::fitted::FittedModel;
 use crate::solver::cd::solve_cd;
 use crate::solver::path::lambda_grid;
+use crate::stats::tiles::{assemble_stats, shard_stats, StatPanel, TileLayout};
 use crate::stats::SuffStats;
 
 /// Everything a fit returns: the model, the CV curve, and job accounting.
@@ -118,30 +119,76 @@ impl Driver {
         &self.cfg
     }
 
+    /// One statistics MapReduce job over any split source: `feed` streams
+    /// a split's rows into the per-task [`FoldAccumulator`]; the job then
+    /// ships the per-fold statistics either whole (one `fold` key each,
+    /// the classic path) or — when `FitConfig::gram_block` > 0 — sharded
+    /// into row-block panels under `(fold, panel)` keys, so no shuffle
+    /// payload or merge-tree slot ever exceeds O(d·b) bytes.  The two
+    /// paths are bit-for-bit identical: panel kernels are exact row
+    /// restrictions of the untiled merge, and the fixed merge tree runs
+    /// the same merges per key either way (asserted in
+    /// `tests/integration.rs`).
+    fn run_stats_job<I: Sync>(
+        &self,
+        p: usize,
+        splits: &[I],
+        feed: impl Fn(&TaskCtx, &I, &mut FoldAccumulator) + Sync,
+    ) -> Result<(FoldStats, JobMetrics)> {
+        let k = self.cfg.folds;
+        let assigner = FoldAssigner::new(k, self.cfg.seed);
+        if self.cfg.gram_block == 0 {
+            let out = run_job(
+                &self.cfg.engine(),
+                splits,
+                |ctx: &TaskCtx, split, em: &mut Emitter<usize, SuffStats>| {
+                    let mut acc = FoldAccumulator::new(k, p, &assigner);
+                    feed(ctx, split, &mut acc);
+                    for (fold, stats) in acc.finish() {
+                        let rows = stats.count();
+                        em.emit_aggregated(fold, stats, rows);
+                    }
+                },
+            )?;
+            Self::assemble(k, p, out)
+        } else {
+            let layout = TileLayout::new(p + 1, self.cfg.gram_block);
+            let out = run_job(
+                &self.cfg.engine(),
+                splits,
+                |ctx: &TaskCtx, split, em: &mut Emitter<(usize, usize), StatPanel>| {
+                    let mut acc = FoldAccumulator::new(k, p, &assigner);
+                    feed(ctx, split, &mut acc);
+                    for (fold, stats) in acc.finish() {
+                        let rows = stats.count();
+                        let mut panels = shard_stats(&stats, layout).into_iter();
+                        // the head panel carries the fold's record
+                        // accounting; the rest ship unaccounted (same rows,
+                        // more keys)
+                        if let Some(head) = panels.next() {
+                            em.emit_aggregated((fold, head.panel), head, rows);
+                        }
+                        for panel in panels {
+                            em.emit_unaccounted((fold, panel.panel), panel);
+                        }
+                    }
+                },
+            )?;
+            Self::assemble_tiled(k, p, layout, out)
+        }
+    }
+
     /// Map+reduce phase over an in-memory dataset: one pass, k fold
     /// statistics out.
     pub fn compute_fold_stats(&self, data: &Dataset) -> Result<(FoldStats, JobMetrics)> {
-        let p = data.p;
-        let k = self.cfg.folds;
-        let assigner = FoldAssigner::new(k, self.cfg.seed);
         let splits: Vec<crate::data::dataset::DataBlock<'_>> = data
             .blocks(self.cfg.split_rows)
             .collect();
-        let out = run_job(
-            &self.cfg.engine(),
-            &splits,
-            |_ctx: &TaskCtx, block, em: &mut Emitter<usize, SuffStats>| {
-                let mut acc = FoldAccumulator::new(k, p, &assigner);
-                for (i, (x, y)) in block.iter().enumerate() {
-                    acc.add((block.offset + i) as u64, x, y);
-                }
-                for (fold, stats) in acc.finish() {
-                    let rows = stats.count();
-                    em.emit_aggregated(fold, stats, rows);
-                }
-            },
-        )?;
-        Self::assemble(k, p, out)
+        self.run_stats_job(data.p, &splits, |_ctx, block, acc| {
+            for (i, (x, y)) in block.iter().enumerate() {
+                acc.add((block.offset + i) as u64, x, y);
+            }
+        })
     }
 
     /// Map+reduce phase over a *streaming* synthetic source: nothing is
@@ -151,8 +198,6 @@ impl Driver {
         spec: &SynthSpec,
     ) -> Result<(FoldStats, JobMetrics)> {
         let p = spec.p;
-        let k = self.cfg.folds;
-        let assigner = FoldAssigner::new(k, self.cfg.seed);
         // split specs: same ground-truth β (spec.seed), independent noise
         // streams (derived seeds), disjoint global row ranges.
         let mut splits = Vec::new();
@@ -169,29 +214,19 @@ impl Driver {
             offset += rows;
             idx += 1;
         }
-        let out = run_job(
-            &self.cfg.engine(),
-            &splits,
-            |_ctx: &TaskCtx, (sub, start), em: &mut Emitter<usize, SuffStats>| {
-                // regenerate the true β of the PARENT spec: SynthStream
-                // derives it from sub.seed, which we overrode — so build the
-                // stream manually with the parent β.
-                let mut stream = SynthStream::with_beta(sub, spec.true_beta());
-                let mut row_id = *start as u64;
-                let mut acc = FoldAccumulator::new(k, p, &assigner);
-                while let Some((xb, yb)) = stream.next_block(4096) {
-                    for (x, &y) in xb.chunks_exact(p).zip(yb) {
-                        acc.add(row_id, x, y);
-                        row_id += 1;
-                    }
+        self.run_stats_job(p, &splits, |_ctx, (sub, start), acc| {
+            // regenerate the true β of the PARENT spec: SynthStream
+            // derives it from sub.seed, which we overrode — so build the
+            // stream manually with the parent β.
+            let mut stream = SynthStream::with_beta(sub, spec.true_beta());
+            let mut row_id = *start as u64;
+            while let Some((xb, yb)) = stream.next_block(4096) {
+                for (x, &y) in xb.chunks_exact(p).zip(yb) {
+                    acc.add(row_id, x, y);
+                    row_id += 1;
                 }
-                for (fold, stats) in acc.finish() {
-                    let rows = stats.count();
-                    em.emit_aggregated(fold, stats, rows);
-                }
-            },
-        )?;
-        Self::assemble(k, p, out)
+            }
+        })
     }
 
     /// Map+reduce phase over CSV shard *files*: each task streams its own
@@ -204,33 +239,21 @@ impl Driver {
         shards: &[std::path::PathBuf],
     ) -> Result<(FoldStats, JobMetrics)> {
         anyhow::ensure!(!shards.is_empty(), "no shard files given");
-        let k = self.cfg.folds;
-        let assigner = FoldAssigner::new(k, self.cfg.seed);
         let splits: Vec<(usize, &std::path::PathBuf)> =
             shards.iter().enumerate().collect();
-        let out = run_job(
-            &self.cfg.engine(),
-            &splits,
-            |_ctx: &TaskCtx, &(shard_idx, path), em: &mut Emitter<usize, SuffStats>| {
-                let mut acc = FoldAccumulator::new(k, p, &assigner);
-                let mut local = 0u64;
-                let (got_p, _rows) = crate::data::csv::stream_csv(path, 4096, |xb, yb| {
-                    for (x, &y) in xb.chunks_exact(p).zip(yb) {
-                        // global id = (shard, local row): stable under retries
-                        let row_id = ((shard_idx as u64) << 40) | local;
-                        acc.add(row_id, x, y);
-                        local += 1;
-                    }
-                })
-                .unwrap_or_else(|e| panic!("shard {path:?}: {e:#}"));
-                assert_eq!(got_p, p, "shard {path:?} width {got_p} != expected {p}");
-                for (fold, stats) in acc.finish() {
-                    let rows = stats.count();
-                    em.emit_aggregated(fold, stats, rows);
+        self.run_stats_job(p, &splits, |_ctx, &(shard_idx, path), acc| {
+            let mut local = 0u64;
+            let (got_p, _rows) = crate::data::csv::stream_csv(path, 4096, |xb, yb| {
+                for (x, &y) in xb.chunks_exact(p).zip(yb) {
+                    // global id = (shard, local row): stable under retries
+                    let row_id = ((shard_idx as u64) << 40) | local;
+                    acc.add(row_id, x, y);
+                    local += 1;
                 }
-            },
-        )?;
-        Self::assemble(k, p, out)
+            })
+            .unwrap_or_else(|e| panic!("shard {path:?}: {e:#}"));
+            assert_eq!(got_p, p, "shard {path:?} width {got_p} != expected {p}");
+        })
     }
 
     /// Algorithm 1, end to end, streaming CSV shards from disk.
@@ -251,6 +274,44 @@ impl Driver {
         let mut folds: Vec<SuffStats> = (0..k).map(|_| SuffStats::new(p)).collect();
         for (fold, stats) in out.output {
             folds[fold] = stats;
+        }
+        Ok((FoldStats::new(folds)?, out.metrics))
+    }
+
+    /// Reassemble fold statistics from `(fold, panel)` reduce output.
+    /// Incomplete or header-drifted panel sets are named errors (the fold
+    /// and panel counts in the message), never silently-wrong statistics;
+    /// a fold with no panels at all fails through [`FoldStats::new`]'s
+    /// empty-fold check exactly like the untiled path.
+    fn assemble_tiled(
+        k: usize,
+        p: usize,
+        layout: TileLayout,
+        out: crate::mapreduce::JobOutput<(usize, usize), StatPanel>,
+    ) -> Result<(FoldStats, JobMetrics)> {
+        let mut per_fold: Vec<Vec<StatPanel>> = (0..k).map(|_| Vec::new()).collect();
+        for ((fold, panel), value) in out.output {
+            anyhow::ensure!(
+                fold < k,
+                "tiled statistics job returned fold {fold}, but k = {k}"
+            );
+            anyhow::ensure!(
+                value.panel == panel,
+                "reduce key names panel {panel} but the payload carries panel {}",
+                value.panel
+            );
+            per_fold[fold].push(value);
+        }
+        let mut folds = Vec::with_capacity(k);
+        for (fold, panels) in per_fold.into_iter().enumerate() {
+            if panels.is_empty() {
+                folds.push(SuffStats::new(p));
+                continue;
+            }
+            folds.push(
+                assemble_stats(p, layout, &panels)
+                    .map_err(|e| anyhow::anyhow!("fold {fold}: {e}"))?,
+            );
         }
         Ok((FoldStats::new(folds)?, out.metrics))
     }
@@ -446,6 +507,79 @@ mod tests {
         // payloads than tasks would imply only when tasks > workers; at
         // minimum the accounting must be self-consistent
         assert!(m.shuffle_payloads <= m.tasks_completed + m.combined_nodes);
+    }
+
+    #[test]
+    fn tiled_stats_job_bit_identical_to_untiled_across_blocks() {
+        // the tentpole invariant at driver level: for every block size the
+        // tiled (fold, panel)-keyed job reassembles to the exact untiled
+        // fold statistics, and the whole fit is unchanged bit for bit —
+        // while no per-key payload exceeds the O(d·b) bound.
+        let data = generate(&SynthSpec::sparse_linear(4000, 6, 0.4, 13));
+        let d = 6 + 1;
+        let base = small_cfg();
+        let untiled = Driver::new(base).fit(&data).unwrap();
+        for block in [1usize, 3, d, 100] {
+            let cfg = FitConfig { gram_block: block, ..base };
+            let report = Driver::new(cfg).fit(&data).unwrap();
+            assert_eq!(report.lambda_opt, untiled.lambda_opt, "b={block}");
+            assert_eq!(report.model.beta, untiled.model.beta, "b={block}");
+            assert_eq!(report.cv.fold_err, untiled.cv.fold_err, "b={block}");
+            assert_eq!(report.map_metrics.records, 4000, "head-panel accounting");
+            let layout = crate::stats::tiles::TileLayout::new(d, block);
+            let bound = std::mem::size_of::<(usize, usize)>()
+                + 8 * (2 + d + layout.max_panel_len());
+            assert!(
+                report.map_metrics.max_payload_bytes <= bound,
+                "b={block}: payload {} over bound {bound}",
+                report.map_metrics.max_payload_bytes
+            );
+        }
+    }
+
+    #[test]
+    fn tiled_streaming_path_matches_untiled() {
+        // the tiled job is threaded through every ingestion path (they all
+        // share run_stats_job), not just the in-memory one
+        let spec = SynthSpec::sparse_linear(20_000, 5, 0.4, 19);
+        let base = FitConfig { split_rows: 2048, ..small_cfg() };
+        let a = Driver::new(base).fit_stream(&spec).unwrap();
+        let b = Driver::new(FitConfig { gram_block: 2, ..base })
+            .fit_stream(&spec)
+            .unwrap();
+        assert_eq!(a.lambda_opt, b.lambda_opt);
+        assert_eq!(a.model.beta, b.model.beta);
+    }
+
+    #[test]
+    fn screen_then_tiled_fit_keeps_the_signal() {
+        // the envelope story: tiled statistics bound the reduce payloads,
+        // then SIS screening fits the penalized model on the survivors'
+        // sub-Gram — the same one-pass statistics serve both.
+        use crate::solver::screen::fit_screened;
+        let spec = SynthSpec::sparse_linear(4000, 40, 0.1, 23);
+        let data = generate(&spec);
+        let cfg = FitConfig { gram_block: 8, ..small_cfg() };
+        let (folds, _) = Driver::new(cfg).compute_fold_stats(&data).unwrap();
+        let (model, report) = fit_screened(
+            folds.total(),
+            Penalty::lasso(),
+            0.05,
+            Some(12),
+            Default::default(),
+        )
+        .unwrap();
+        let truth = spec.true_beta();
+        for j in 0..40 {
+            if truth[j] != 0.0 {
+                assert!(
+                    report.selected.contains(&j),
+                    "signal {j} screened out: {:?}",
+                    report.selected
+                );
+                assert!((model.beta[j] - truth[j]).abs() < 0.3, "beta[{j}]");
+            }
+        }
     }
 
     #[test]

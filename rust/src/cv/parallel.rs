@@ -9,7 +9,7 @@
 //! this optional — but for large p · many λs it buys near-linear speedup,
 //! and the result is IDENTICAL to the serial CV phase (asserted in tests).
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 use crate::mapreduce::{run_job, Emitter, EngineConfig, MergeError, TaskCtx};
 use crate::solver::cd::{solve_cd, CdSettings};
@@ -88,17 +88,56 @@ pub fn cross_validate_parallel(
         },
     )?;
 
+    assemble_cv(lambdas, k, out.output.into_values().collect())
+}
+
+/// Assemble the CV matrix from the per-fold job output — refusing to
+/// select λ unless **exactly one** `FoldErrors` arrived per fold, each
+/// scoring the full grid.  A dropped fold used to leave its
+/// zero-initialized MSE column in place, silently dragging the argmin
+/// toward whichever λ the phantom zeros favored; now it is an error that
+/// names the missing folds.
+fn assemble_cv(lambdas: &[f64], k: usize, results: Vec<FoldErrors>) -> Result<CvResult> {
     let n_l = lambdas.len();
     let mut fold_err = vec![vec![0.0; k]; n_l];
     let mut nnz_m = vec![vec![0usize; k]; n_l];
-    for (_, fe) in out.output {
+    let mut seen = vec![false; k];
+    for fe in results {
+        ensure!(
+            fe.fold < k,
+            "cross-validation job returned fold {} but k = {k}",
+            fe.fold
+        );
+        ensure!(
+            !seen[fe.fold],
+            "cross-validation job returned fold {} twice",
+            fe.fold
+        );
+        ensure!(
+            fe.err.len() == n_l && fe.nnz.len() == n_l,
+            "fold {} scored {} of {n_l} lambdas",
+            fe.fold,
+            fe.err.len()
+        );
+        seen[fe.fold] = true;
         for li in 0..n_l {
             fold_err[li][fe.fold] = fe.err[li];
             nnz_m[li][fe.fold] = fe.nnz[li];
         }
     }
+    let missing: Vec<usize> = seen
+        .iter()
+        .enumerate()
+        .filter(|&(_, &s)| !s)
+        .map(|(f, _)| f)
+        .collect();
+    ensure!(
+        missing.is_empty(),
+        "cross-validation job dropped fold(s) {missing:?}: refusing to select λ \
+         from a CV matrix with zero-filled columns"
+    );
     // curve + opt/1-SE selection through the one shared rule in select.rs
-    Ok(super::select::summarize(lambdas, fold_err, nnz_m))
+    super::select::summarize(lambdas, fold_err, nnz_m)
 }
 
 #[cfg(test)]
@@ -137,6 +176,42 @@ mod tests {
         assert_eq!(serial.opt_index, par.opt_index);
         assert_eq!(serial.fold_err, par.fold_err, "bit-identical CV matrix");
         assert_eq!(serial.mean_nnz, par.mean_nnz);
+    }
+
+    #[test]
+    fn assembly_rejects_dropped_fold_by_name() {
+        // a missing fold must be a named error, never a zero-filled CV
+        // column that silently biases λ selection
+        let lambdas = [1.0, 0.5];
+        let results = vec![
+            FoldErrors { fold: 0, err: vec![1.0, 2.0], nnz: vec![1, 1] },
+            FoldErrors { fold: 2, err: vec![1.0, 2.0], nnz: vec![1, 1] },
+        ];
+        let err = format!("{:#}", assemble_cv(&lambdas, 3, results).unwrap_err());
+        assert!(err.contains("dropped fold"), "{err}");
+        assert!(err.contains("[1]"), "must name the missing fold: {err}");
+        // out-of-range and short-grid results are also named errors
+        let bad_fold = vec![FoldErrors { fold: 9, err: vec![1.0, 2.0], nnz: vec![1, 1] }];
+        let err = format!("{:#}", assemble_cv(&lambdas, 2, bad_fold).unwrap_err());
+        assert!(err.contains("fold 9"), "{err}");
+        let short = vec![
+            FoldErrors { fold: 0, err: vec![1.0], nnz: vec![1] },
+            FoldErrors { fold: 1, err: vec![1.0, 2.0], nnz: vec![1, 1] },
+        ];
+        let err = format!("{:#}", assemble_cv(&lambdas, 2, short).unwrap_err());
+        assert!(err.contains("scored 1 of 2"), "{err}");
+    }
+
+    #[test]
+    fn assembly_accepts_exactly_k_folds() {
+        let lambdas = [1.0, 0.5];
+        let results = vec![
+            FoldErrors { fold: 1, err: vec![3.0, 1.0], nnz: vec![0, 2] },
+            FoldErrors { fold: 0, err: vec![3.0, 2.0], nnz: vec![0, 2] },
+        ];
+        let cv = assemble_cv(&lambdas, 2, results).unwrap();
+        assert_eq!(cv.fold_err, vec![vec![3.0, 3.0], vec![2.0, 1.0]]);
+        assert_eq!(cv.lambda_opt, 0.5);
     }
 
     #[test]

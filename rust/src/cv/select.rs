@@ -6,13 +6,26 @@
 //! statistics via the exact closed-form MSE ([`crate::stats::SuffStats::mse`]).
 //! Model selection therefore touches *no data* — only k·(p+1)² numbers.
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 use crate::solver::cd::{solve_cd, CdSettings};
 use crate::solver::penalty::Penalty;
-use crate::util::{mean, std_dev};
+use crate::util::{mean, sample_std_dev};
 
 use super::kfold::FoldStats;
+
+/// CV score with degenerate entries neutralized: any non-finite mean MSE
+/// (NaN from a degenerate complement or diverged CD, ±∞ from overflowed
+/// statistics) scores as +∞, so it can neither panic the argmin nor win
+/// it — in particular a −∞ entry must not beat every finite λ.
+#[inline]
+fn cv_score(e: f64) -> f64 {
+    if e.is_finite() {
+        e
+    } else {
+        f64::INFINITY
+    }
+}
 
 /// Cross-validation output: the CV curve and the selected λs.
 #[derive(Debug, Clone)]
@@ -45,38 +58,52 @@ pub(crate) fn summarize(
     lambdas: &[f64],
     fold_err: Vec<Vec<f64>>,
     nnz: Vec<Vec<usize>>,
-) -> CvResult {
+) -> Result<CvResult> {
     debug_assert_eq!(lambdas.len(), fold_err.len());
     debug_assert_eq!(lambdas.len(), nnz.len());
     let k = fold_err.first().map(|row| row.len()).unwrap_or(0).max(1);
     let mean_err: Vec<f64> = fold_err.iter().map(|row| mean(row)).collect();
+    // glmnet's CV standard error: SAMPLE standard deviation (÷(k−1)) of
+    // the fold MSEs over √k — the population SD (÷k) biases se_err low
+    // and makes the 1-SE rule under-sparsify.
     let se_err: Vec<f64> = fold_err
         .iter()
-        .map(|row| std_dev(row) / (k as f64).sqrt())
+        .map(|row| sample_std_dev(row) / (k as f64).sqrt())
         .collect();
     let mean_nnz: Vec<f64> = nnz
         .iter()
         .map(|row| row.iter().sum::<usize>() as f64 / k as f64)
         .collect();
 
+    // total_cmp on the NaN-as-+∞ score: a degenerate fold must not panic
+    // the sweep (partial_cmp().unwrap() did) and must never be selected.
     let opt_index = mean_err
         .iter()
         .enumerate()
-        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .min_by(|a, b| cv_score(*a.1).total_cmp(&cv_score(*b.1)))
         .map(|(i, _)| i)
         .unwrap();
+    // a *single* degenerate fold scoring +∞ must not win — but if every λ
+    // is non-finite the whole curve is meaningless, and silently returning
+    // λ_max (the null model) would hide corrupt input; fail loudly instead.
+    ensure!(
+        mean_err[opt_index].is_finite(),
+        "every λ's CV error is non-finite — degenerate statistics \
+         (NaN/inf in the input data?)"
+    );
     let lambda_opt = lambdas[opt_index];
     // 1-SE rule: largest λ with mean_err ≤ min + se(min).  Grid is
-    // descending, so scan from the front.
+    // descending, so scan from the front — through the same degenerate-
+    // entry score, so a −∞ row cannot win this rule either.
     let threshold = mean_err[opt_index] + se_err[opt_index];
     let lambda_1se = lambdas
         .iter()
         .zip(&mean_err)
-        .find(|(_, e)| **e <= threshold)
+        .find(|(_, e)| cv_score(**e) <= threshold)
         .map(|(l, _)| *l)
         .unwrap_or(lambda_opt);
 
-    CvResult {
+    Ok(CvResult {
         lambdas: lambdas.to_vec(),
         mean_err,
         se_err,
@@ -85,7 +112,7 @@ pub(crate) fn summarize(
         lambda_opt,
         lambda_1se,
         opt_index,
-    }
+    })
 }
 
 /// Run k-fold CV over a descending λ grid.
@@ -121,7 +148,7 @@ pub fn cross_validate(
             warm = Some(sol.beta);
         }
     }
-    Ok(summarize(lambdas, fold_err, nnz))
+    summarize(lambdas, fold_err, nnz)
 }
 
 #[cfg(test)]
@@ -145,20 +172,81 @@ mod tests {
     #[test]
     fn summarize_applies_opt_and_1se_rule() {
         let lambdas = [1.0, 0.5, 0.25, 0.125];
-        let fold_err = vec![
+        // zero fold spread → SE 0 → the 1-SE choice IS the optimum
+        let flat = vec![
             vec![4.0, 4.0],
             vec![2.0, 2.0],
             vec![1.0, 1.0],
             vec![1.5, 1.5],
         ];
         let nnz = vec![vec![0, 0], vec![1, 1], vec![2, 2], vec![3, 3]];
-        let cv = summarize(&lambdas, fold_err, nnz);
+        let cv = summarize(&lambdas, flat, nnz.clone()).unwrap();
         assert_eq!(cv.opt_index, 2);
         assert_eq!(cv.lambda_opt, 0.25);
-        // zero fold spread → SE 0 → the 1-SE choice IS the optimum
         assert_eq!(cv.lambda_1se, 0.25);
+        assert_eq!(cv.se_err, vec![0.0; 4]);
         assert_eq!(cv.mean_nnz, vec![0.0, 1.0, 2.0, 3.0]);
         assert_eq!(cv.mean_err, vec![4.0, 2.0, 1.0, 1.5]);
+
+        // k = 2 folds with ±1 spread: sample SD (÷(k−1)) is √2, so the CV
+        // standard error is √2/√k = √2/√2 = 1.0 exactly.  The old
+        // population-SD code gave 1/√2 ≈ 0.707 — biased low — which put
+        // the 1-SE threshold at 2.707 and under-sparsified λ_1se back to
+        // λ_opt; the corrected threshold 2 + 1 = 3 admits λ = 0.5.
+        let spread = vec![
+            vec![4.0, 6.0],
+            vec![2.0, 4.0],
+            vec![1.0, 3.0],
+            vec![1.5, 3.5],
+        ];
+        let cv = summarize(&lambdas, spread, nnz).unwrap();
+        assert_eq!(cv.opt_index, 2);
+        assert_eq!(cv.lambda_opt, 0.25);
+        assert_eq!(cv.mean_err, vec![5.0, 3.0, 2.0, 2.5]);
+        assert_eq!(cv.se_err, vec![1.0, 1.0, 1.0, 1.0], "pinned k−1 SE");
+        assert_eq!(cv.lambda_1se, 0.5);
+    }
+
+    #[test]
+    fn nan_fold_scores_as_infinity_and_cannot_win_or_panic() {
+        // a degenerate fold (diverged CD, degenerate complement) used to
+        // panic `min_by(partial_cmp().unwrap())` — or, worse, could win
+        // the argmin; now its λ scores +∞ and selection walks past it.
+        let lambdas = [1.0, 0.5, 0.25];
+        let fold_err = vec![
+            vec![4.0, 4.0],
+            vec![f64::NAN, 0.0],
+            vec![2.0, 2.0],
+        ];
+        let nnz = vec![vec![0, 0], vec![1, 1], vec![2, 2]];
+        let cv = summarize(&lambdas, fold_err, nnz).unwrap();
+        assert_eq!(cv.opt_index, 2);
+        assert_eq!(cv.lambda_opt, 0.25);
+        assert!(cv.mean_err[1].is_nan(), "the curve still reports the NaN honestly");
+        // the 1-SE scan also skips the NaN row (NaN ≤ threshold is false)
+        assert_eq!(cv.lambda_1se, 0.25);
+
+        // −∞ (overflowed statistics) must not beat the finite entries either
+        let fold_err = vec![
+            vec![4.0, 4.0],
+            vec![f64::NEG_INFINITY, 0.0],
+            vec![2.0, 2.0],
+        ];
+        let nnz = vec![vec![0, 0], vec![1, 1], vec![2, 2]];
+        let cv = summarize(&lambdas, fold_err, nnz).unwrap();
+        assert_eq!(cv.opt_index, 2, "-inf row is scored +inf, not selected");
+        assert_eq!(cv.lambda_1se, 0.25, "-inf row must not win the 1-SE rule");
+    }
+
+    #[test]
+    fn entirely_degenerate_curve_is_an_error_not_the_null_model() {
+        // when EVERY λ is non-finite there is nothing to select: silently
+        // returning λ_max (the all-zero model) would hide corrupt input
+        let lambdas = [1.0, 0.5];
+        let fold_err = vec![vec![f64::NAN, f64::NAN], vec![f64::NAN, f64::INFINITY]];
+        let nnz = vec![vec![0, 0], vec![1, 1]];
+        let err = format!("{:#}", summarize(&lambdas, fold_err, nnz).unwrap_err());
+        assert!(err.contains("non-finite"), "{err}");
     }
 
     #[test]

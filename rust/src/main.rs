@@ -45,7 +45,8 @@ commands:
   gen-data   --n N --p P [--density D] [--seed S] [--offset C] --out FILE [--shards K]
   fit        (--csv FILE[,FILE...] | --synth N,P[,DENSITY[,SEED]])
              [--penalty lasso|ridge|elastic_net:A] [--folds K] [--lambdas L]
-             [--workers W] [--seed S] [--config FILE] [--out MODEL] [--curve]
+             [--workers W] [--seed S] [--gram-block B] [--config FILE]
+             [--out MODEL] [--curve]
   predict    --model MODEL --csv FILE [--out FILE]
   experiments <t1|t2|t3|t4|t5|f1|f2|f3|all> [--quick] [--workers W]
   inspect-artifacts [--dir DIR]
@@ -178,6 +179,10 @@ fn build_config(f: &BTreeMap<String, String>) -> Result<FitConfig> {
     if let Some(s) = f.get("seed") {
         cfg.seed = s.parse()?;
     }
+    if let Some(b) = f.get("gram-block") {
+        // tiled statistics: (fold, panel) reduce keys, O(d·b) payloads
+        cfg.gram_block = b.parse()?;
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -211,12 +216,13 @@ fn cmd_fit(args: &[String]) -> Result<()> {
         let m = &report.map_metrics;
         println!(
             "phase split: map {} | shuffle {} | reduce {} \
-             ({} payloads, {}, {} combined nodes, {} leader merges)",
+             ({} payloads, {}, max key {}, {} combined nodes, {} leader merges)",
             fmt_secs(m.map_s),
             fmt_secs(m.shuffle_s),
             fmt_secs(m.reduce_s),
             m.shuffle_payloads,
             plrmr::bench::fmt_bytes(m.shuffle_bytes),
+            plrmr::bench::fmt_bytes(m.max_payload_bytes),
             m.combined_nodes,
             m.reduce_merges,
         );

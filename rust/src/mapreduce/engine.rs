@@ -97,6 +97,19 @@ impl<K: Ord, V: Mergeable> Emitter<K, V> {
     /// job with a message once the task returns — no panic in the pool.
     pub fn emit(&mut self, key: K, value: V) {
         self.records += 1;
+        self.merge_value(key, value);
+    }
+
+    /// Emit one shard of an aggregate whose input records are already
+    /// accounted — e.g. the non-head panels of a tiled fold statistic,
+    /// whose rows were counted by the head panel's
+    /// [`Emitter::emit_aggregated`].  Merges like [`Emitter::emit`] but
+    /// contributes nothing to the record count.
+    pub fn emit_unaccounted(&mut self, key: K, value: V) {
+        self.merge_value(key, value);
+    }
+
+    fn merge_value(&mut self, key: K, value: V) {
         match self.map.get_mut(&key) {
             Some(slot) => {
                 if let Err(e) = slot.merge_in(value) {
@@ -323,6 +336,7 @@ where
     let level_pending = Gate::new(0);
     let payload_count = AtomicUsize::new(0);
     let payload_bytes = AtomicUsize::new(0);
+    let payload_max = AtomicUsize::new(0);
     let combined_count = AtomicUsize::new(0);
     // first value-merge failure anywhere in the job (combine or reduce);
     // checked after the pool drains so a broken Mergeable contract fails
@@ -346,6 +360,7 @@ where
             let level_pending = &level_pending;
             let payload_count = &payload_count;
             let payload_bytes = &payload_bytes;
+            let payload_max = &payload_max;
             let combined_count = &combined_count;
             let merge_failure = &merge_failure;
             let map_fn = &map_fn;
@@ -476,14 +491,16 @@ where
                 // value-neutral.
                 let mut payloads = 0usize;
                 let mut bytes = 0usize;
+                let mut max_entry = 0usize;
                 let mut pre_combined = 0usize;
                 for (node, value) in combiner {
                     let mut slot = slots[node].lock().unwrap();
                     if slot.is_none() {
-                        bytes += value
-                            .values()
-                            .map(|v| std::mem::size_of::<K>() + v.payload_bytes())
-                            .sum::<usize>();
+                        for v in value.values() {
+                            let b = std::mem::size_of::<K>() + v.payload_bytes();
+                            bytes += b;
+                            max_entry = max_entry.max(b);
+                        }
                         *slot = Some(value);
                         payloads += 1;
                         if node < tree.first_leaf() {
@@ -493,6 +510,7 @@ where
                 }
                 payload_count.fetch_add(payloads, Ordering::Relaxed);
                 payload_bytes.fetch_add(bytes, Ordering::Relaxed);
+                payload_max.fetch_max(max_entry, Ordering::Relaxed);
                 combined_count.fetch_add(pre_combined, Ordering::Relaxed);
                 flushed.done_one();
                 // reduce phase: execute tree merges as the leader schedules
@@ -644,6 +662,7 @@ where
     let output = slots[1].lock().unwrap().take().unwrap_or_default();
     metrics.shuffle_payloads = payload_count.load(Ordering::Relaxed);
     metrics.shuffle_bytes = payload_bytes.load(Ordering::Relaxed);
+    metrics.max_payload_bytes = payload_max.load(Ordering::Relaxed);
     metrics.combined_nodes = combined_count.load(Ordering::Relaxed);
     metrics.tasks_completed = n_tasks;
     metrics.real_s = started.elapsed().as_secs_f64();
@@ -1063,5 +1082,73 @@ mod tests {
             m.shuffle_bytes,
             dense_value
         );
+    }
+
+    #[test]
+    fn tiled_stats_job_bounds_every_per_key_payload_at_p_times_b() {
+        // the tiled-statistics acceptance bound: keyed by (fold, panel),
+        // no single payload the leader ever receives may exceed
+        // O(d·b) bytes — while the untiled job necessarily ships the whole
+        // O(d²) triangle under one key.
+        use crate::stats::tiles::{shard_stats, StatPanel, TileLayout};
+        let p = 24;
+        let d = p + 1;
+        let block = 4;
+        let layout = TileLayout::new(d, block);
+        let make_stats = |seed: usize| {
+            let mut s = SuffStats::new(p);
+            for r in 0..6usize {
+                let x: Vec<f64> = (0..p).map(|j| ((seed * 13 + r * 7 + j) % 9) as f64).collect();
+                s.push(&x, (seed + r) as f64);
+            }
+            s
+        };
+        let tasks: Vec<usize> = (0..3).collect();
+        let untiled = run_job(
+            &EngineConfig::with_workers(2),
+            &tasks,
+            |_c: &TaskCtx, &t, em: &mut Emitter<usize, SuffStats>| {
+                let s = make_stats(t);
+                let rows = s.count();
+                em.emit_aggregated(0usize, s, rows);
+            },
+        )
+        .unwrap();
+        assert!(
+            untiled.metrics.max_payload_bytes >= 8 * (d * (d + 1) / 2),
+            "untiled per-key payload must carry the whole triangle"
+        );
+        let tiled = run_job(
+            &EngineConfig::with_workers(2),
+            &tasks,
+            |_c: &TaskCtx, &t, em: &mut Emitter<(usize, usize), StatPanel>| {
+                let s = make_stats(t);
+                let rows = s.count();
+                let mut panels = shard_stats(&s, layout).into_iter();
+                let head = panels.next().unwrap();
+                em.emit_aggregated((0usize, head.panel), head, rows);
+                for panel in panels {
+                    em.emit_unaccounted((0usize, panel.panel), panel);
+                }
+            },
+        )
+        .unwrap();
+        let bound =
+            std::mem::size_of::<(usize, usize)>() + 8 * (2 + d + layout.max_panel_len());
+        assert!(
+            tiled.metrics.max_payload_bytes <= bound,
+            "tiled per-key payload {} exceeds the O(d·b) bound {bound}",
+            tiled.metrics.max_payload_bytes
+        );
+        assert!(tiled.metrics.max_payload_bytes < untiled.metrics.max_payload_bytes);
+        // emit_unaccounted adds no records: both jobs saw the same rows
+        assert_eq!(tiled.metrics.records, untiled.metrics.records);
+        // and the assembled statistic is the untiled one, bit for bit
+        let mut panels: Vec<StatPanel> = tiled.output.into_values().collect();
+        panels.sort_by_key(|pl| pl.panel);
+        let assembled = crate::stats::tiles::assemble_stats(p, layout, &panels).unwrap();
+        let whole = untiled.output.into_values().next().unwrap();
+        assert_eq!(assembled, whole);
+        assert_eq!(assembled.syy().to_bits(), whole.syy().to_bits());
     }
 }

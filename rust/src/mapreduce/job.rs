@@ -1,6 +1,7 @@
 //! Job-level types: mergeable values, modeled cluster costs, metrics.
 
 use crate::stats::symm::tri_len;
+use crate::stats::tiles::StatPanel;
 use crate::stats::{Moments, SuffStats};
 
 /// A failed value merge — a broken associativity/keying contract inside a
@@ -77,6 +78,21 @@ impl Mergeable for Moments {
         let d = self.dim();
         // n + w + mean(d) + packed upper-triangular M2 (d(d+1)/2)
         std::mem::size_of::<f64>() * (2 + d + tri_len(d))
+    }
+}
+
+impl Mergeable for StatPanel {
+    /// Chan merge restricted to the panel's rows; a shape/keying mismatch
+    /// (different d, block or panel index under one key) is a graceful
+    /// job error, not a panic.
+    fn merge_in(&mut self, other: Self) -> Result<(), MergeError> {
+        self.merge(&other).map_err(MergeError::new)
+    }
+
+    /// count + weight + full mean header + the panel's packed rows —
+    /// O(d·b) by construction, the tiled job's per-key shuffle bound.
+    fn payload_bytes(&self) -> usize {
+        std::mem::size_of::<f64>() * self.payload_doubles()
     }
 }
 
@@ -197,6 +213,11 @@ pub struct JobMetrics {
     /// statistics make this ~(p+1)²/2 doubles per fold entry instead of
     /// the (p+1)² a dense-square Gram would ship.
     pub shuffle_bytes: usize,
+    /// largest single per-key payload flushed to the leader
+    /// ([`Mergeable::payload_bytes`] + key size) — the tiled-statistics
+    /// acceptance bound: with `(fold, panel)` keys no entry may be O(p²),
+    /// only O(p·b)
+    pub max_payload_bytes: usize,
     /// internal tree nodes pre-merged on workers (combiner effectiveness)
     pub combined_nodes: usize,
     /// merge-tree nodes the reduce phase still had to compute
@@ -292,6 +313,27 @@ mod tests {
         // scalars fall back to their size; vectors sum elements
         assert_eq!(3u64.payload_bytes(), 8);
         assert_eq!(vec![1.0f64, 2.0].payload_bytes(), 16);
+    }
+
+    #[test]
+    fn stat_panel_payloads_are_o_of_db() {
+        use crate::stats::tiles::TileLayout;
+        use crate::stats::SuffStats;
+        let p = 32;
+        let d = p + 1;
+        let mut s = SuffStats::new(p);
+        for i in 0..4 {
+            s.push(&vec![i as f64; p], i as f64);
+        }
+        let layout = TileLayout::new(d, 4);
+        let panels = s.shard(layout);
+        let max = panels.iter().map(Mergeable::payload_bytes).max().unwrap();
+        assert_eq!(max, 8 * (2 + d + layout.panel_len(0)));
+        // strictly below the untiled whole-triangle payload
+        assert!(max < s.payload_bytes(), "{max} vs {}", s.payload_bytes());
+        // panels carry the whole triangle once plus one O(d) header each
+        let total: usize = panels.iter().map(Mergeable::payload_bytes).sum();
+        assert_eq!(total, 8 * (panels.len() * (2 + d) + tri_len(d)));
     }
 
     #[test]

@@ -10,6 +10,7 @@
 //! memory), so simple cache-aware loops beat pulling in a BLAS.
 
 use crate::stats::symm::SymMat;
+use crate::stats::tiles::TiledSymMat;
 
 /// y = A·x for row-major symmetric-or-not A (n×n).
 pub fn matvec(a: &[f64], x: &[f64], y: &mut [f64]) {
@@ -103,29 +104,73 @@ fn lo_row(i: usize) -> usize {
 /// Cholesky factorization A = L·Lᵀ of a packed-symmetric matrix; returns
 /// the packed *lower* factor (n(n+1)/2 doubles — no dense square is ever
 /// allocated on the fit path).  Errors if a pivot is ≤ `eps` (not PD).
+///
+/// Routes through [`cholesky_packed_blocked`] with a single full-height
+/// panel — the blocked organization with block = n is the classic loop.
 pub fn cholesky_packed(a: &SymMat, eps: f64) -> Result<Vec<f64>, String> {
-    let n = a.n();
+    cholesky_packed_blocked(a, a.n().max(1), eps)
+}
+
+/// The ONE packed-lower Cholesky recurrence, generic over how A's upper
+/// triangle is read (`get(j, i)` with j ≤ i): the blocked-packed and
+/// tiled entry points both monomorphize this, so the bit-determinism-
+/// critical loop body cannot drift between storage backends.  Panels of
+/// `block` rows factor strictly after all earlier rows (the panel-by-panel
+/// trailing update); the iteration order is identical for every block
+/// size, so the factor is bit-for-bit independent of `block`.
+fn cholesky_rows(
+    n: usize,
+    get: impl Fn(usize, usize) -> f64,
+    block: usize,
+    eps: f64,
+) -> Result<Vec<f64>, String> {
+    let block = block.clamp(1, n.max(1));
     let mut l = vec![0.0; n * (n + 1) / 2];
-    for i in 0..n {
-        let ri = lo_row(i);
-        for j in 0..=i {
-            let rj = lo_row(j);
-            let mut s = a.get(j, i);
-            // rows i and j of the packed lower factor are contiguous
-            for k in 0..j {
-                s -= l[ri + k] * l[rj + k];
-            }
-            if i == j {
-                if s <= eps {
-                    return Err(format!("cholesky: pivot {s:.3e} at {i} (not PD)"));
+    let mut r0 = 0;
+    while r0 < n {
+        let r1 = (r0 + block).min(n);
+        // factor panel rows r0..r1 against all finished rows (0..i)
+        for i in r0..r1 {
+            let ri = lo_row(i);
+            for j in 0..=i {
+                let rj = lo_row(j);
+                let mut s = get(j, i);
+                // rows i and j of the packed lower factor are contiguous
+                for k in 0..j {
+                    s -= l[ri + k] * l[rj + k];
                 }
-                l[ri + i] = s.sqrt();
-            } else {
-                l[ri + j] = s / l[rj + j];
+                if i == j {
+                    if s <= eps {
+                        return Err(format!("cholesky: pivot {s:.3e} at {i} (not PD)"));
+                    }
+                    l[ri + i] = s.sqrt();
+                } else {
+                    l[ri + j] = s / l[rj + j];
+                }
             }
         }
+        r0 = r1;
     }
     Ok(l)
+}
+
+/// Blocked packed Cholesky: the identical recurrence and scalar order as
+/// the classic factorization, *organized* as row-block panels of `block`
+/// rows.  This entry point still reads the assembled triangle — the panel
+/// loop is an iteration-order pin (it proves, by property test, that the
+/// panel-at-a-time schedule a tiled deployment would run cannot change a
+/// bit), not a streaming implementation; [`cholesky_tiled`] is the
+/// variant that actually reads A through panel storage.
+pub fn cholesky_packed_blocked(a: &SymMat, block: usize, eps: f64) -> Result<Vec<f64>, String> {
+    cholesky_rows(a.n(), |j, i| a.get(j, i), block, eps)
+}
+
+/// Packed Cholesky straight off tiled storage: the same recurrence reading
+/// A through [`TiledSymMat::get`] across panel seams — no assembled
+/// triangle needed on the input side.  Bit-identical to
+/// [`cholesky_packed`] of the concatenated panels.
+pub fn cholesky_tiled(a: &TiledSymMat, eps: f64) -> Result<Vec<f64>, String> {
+    cholesky_rows(a.n(), |j, i| a.get(j, i), a.n().max(1), eps)
 }
 
 /// Solve L·Lᵀ·x = b given the packed lower factor from [`cholesky_packed`].
@@ -272,6 +317,37 @@ mod tests {
                 assert_eq!(xp[i].to_bits(), xd[i].to_bits(), "x[{i}]");
             }
         });
+    }
+
+    #[test]
+    fn blocked_and_tiled_cholesky_bitwise_match_unblocked() {
+        // panel-by-panel organization must not change a single bit of the
+        // factor, for any block size — including blocks that do not divide
+        // n and an oversized block (⇒ one panel)
+        prop::quick(|rng, _| {
+            let n = 1 + rng.below(12);
+            let a = random_spd(rng, n);
+            let sym = SymMat::from_dense(n, &a);
+            let reference = cholesky_packed(&sym, 0.0).expect("spd");
+            for block in [1usize, 2, 3, 5, n, n + 7] {
+                let blocked = cholesky_packed_blocked(&sym, block, 0.0).expect("spd");
+                for (k, (b, r)) in blocked.iter().zip(&reference).enumerate() {
+                    assert_eq!(b.to_bits(), r.to_bits(), "blocked b={block} k={k}");
+                }
+                let tiled = TiledSymMat::from_packed(&sym, block);
+                let tl = cholesky_tiled(&tiled, 0.0).expect("spd");
+                for (k, (b, r)) in tl.iter().zip(&reference).enumerate() {
+                    assert_eq!(b.to_bits(), r.to_bits(), "tiled b={block} k={k}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn tiled_cholesky_rejects_indefinite() {
+        let sym = SymMat::from_dense(2, &[1.0, 2.0, 2.0, 1.0]);
+        assert!(cholesky_tiled(&TiledSymMat::from_packed(&sym, 1), 0.0).is_err());
+        assert!(cholesky_packed_blocked(&sym, 1, 0.0).is_err());
     }
 
     #[test]

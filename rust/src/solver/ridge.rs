@@ -8,15 +8,24 @@
 
 use crate::stats::suffstats::QuadForm;
 
-use super::linalg::{chol_solve_packed, cholesky_packed};
+use super::linalg::{chol_solve_packed, cholesky_packed_blocked};
 
 /// Solve ridge for one λ. Errors if G + λI is not PD (can only happen at
 /// λ = 0 with exactly collinear columns).
 pub fn solve_ridge(q: &QuadForm, lambda: f64) -> Result<Vec<f64>, String> {
+    solve_ridge_blocked(q, lambda, q.p.max(1))
+}
+
+/// Ridge through the *blocked* packed Cholesky
+/// ([`cholesky_packed_blocked`]): the factorization proceeds one row-block
+/// panel at a time — the shape a tiled-statistics deployment streams —
+/// and is bit-identical to [`solve_ridge`] at every block size
+/// (property-tested below).
+pub fn solve_ridge_blocked(q: &QuadForm, lambda: f64, block: usize) -> Result<Vec<f64>, String> {
     assert!(lambda >= 0.0);
     let mut a = q.gram.clone();
     a.add_diag(lambda);
-    let l = cholesky_packed(&a, 0.0)?;
+    let l = cholesky_packed_blocked(&a, block, 0.0)?;
     Ok(chol_solve_packed(&l, &q.xty))
 }
 
@@ -77,6 +86,25 @@ mod tests {
             last_norm = norm;
         }
         assert!(last_norm < 0.1);
+    }
+
+    #[test]
+    fn blocked_ridge_bitwise_matches_for_every_block() {
+        let mut rng = Rng::seed_from(7);
+        let q = qf(&mut rng, 250, 7);
+        for lam in [0.01, 0.5, 5.0] {
+            let reference = solve_ridge(&q, lam).unwrap();
+            for block in [1usize, 2, 3, 7, 50] {
+                let blocked = solve_ridge_blocked(&q, lam, block).unwrap();
+                for j in 0..7 {
+                    assert_eq!(
+                        blocked[j].to_bits(),
+                        reference[j].to_bits(),
+                        "lam={lam} block={block} j={j}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -51,16 +51,28 @@ pub fn default_keep(n: u64, p: usize) -> usize {
 }
 
 /// Keep the `m` predictors with the largest |marginal correlation|.
-pub fn screen_top_m(stats: &SuffStats, m: usize) -> ScreenReport {
+///
+/// A NaN |correlation| (degenerate statistics — e.g. an inf·0 upstream)
+/// is excluded from the ranking entirely: it can neither panic the sort
+/// (the old `partial_cmp().unwrap()` did) nor sneak into the keep set
+/// when `m` exceeds the number of healthy predictors — `selected` may
+/// therefore be shorter than `m`.  Errors (a named one, no panic) only if
+/// *every* correlation is NaN: there is no sane sub-model to screen to.
+pub fn screen_top_m(stats: &SuffStats, m: usize) -> Result<ScreenReport> {
     let abs_corr = marginal_abs_correlations(stats);
     let p = stats.p();
-    let m = m.clamp(1, p);
-    let mut order: Vec<usize> = (0..p).collect();
-    order.sort_by(|&a, &b| abs_corr[b].partial_cmp(&abs_corr[a]).unwrap());
+    let mut order: Vec<usize> = (0..p).filter(|&j| !abs_corr[j].is_nan()).collect();
+    anyhow::ensure!(
+        !order.is_empty(),
+        "screening: every |marginal correlation| is NaN — degenerate statistics \
+         (NaN/inf in the input data?)"
+    );
+    order.sort_by(|&a, &b| abs_corr[b].total_cmp(&abs_corr[a]));
+    let m = m.clamp(1, order.len());
     let mut selected: Vec<usize> = order[..m].to_vec();
     selected.sort_unstable();
-    let threshold = abs_corr[*order.get(m - 1).unwrap()];
-    ScreenReport { selected, abs_corr, threshold }
+    let threshold = abs_corr[order[m - 1]];
+    Ok(ScreenReport { selected, abs_corr, threshold })
 }
 
 /// Screen to `m` predictors (None ⇒ SIS default n/log n), fit the
@@ -73,7 +85,7 @@ pub fn fit_screened(
     settings: CdSettings,
 ) -> Result<(FittedModel, ScreenReport)> {
     let m = m.unwrap_or_else(|| default_keep(stats.count(), stats.p()));
-    let report = screen_top_m(stats, m);
+    let report = screen_top_m(stats, m)?;
     let q = stats.quad_form_subset(&report.selected);
     let sol = solve_cd(&q, penalty, lambda, None, settings);
     let (alpha, beta_sub) = q.to_original_scale(&sol.beta);
@@ -107,7 +119,7 @@ mod tests {
         let spec = SynthSpec::sparse_linear(4000, 60, 0.1, 3);
         let (s, _) = stats_for(&spec);
         let truth = spec.true_beta();
-        let report = screen_top_m(&s, 12);
+        let report = screen_top_m(&s, 12).unwrap();
         for j in 0..60 {
             if truth[j] != 0.0 {
                 assert!(
@@ -160,6 +172,45 @@ mod tests {
         assert_eq!(default_keep(2718, 10_000), (2718.0_f64 / 2718.0_f64.ln()) as usize);
         assert_eq!(default_keep(1000, 5), 5); // capped at p
         assert!(default_keep(2, 100) >= 1);
+    }
+
+    #[test]
+    fn nan_correlation_sorts_last_without_panic() {
+        // hand-built statistics with a NaN Sxy for feature 0 but healthy
+        // variances: |corr_0| is NaN, which used to panic the ranking sort
+        use crate::stats::{Moments, SuffStats};
+        let p = 3;
+        let d = p + 1;
+        let mut m2 = vec![0.0; d * d];
+        for i in 0..d {
+            m2[i * d + i] = 64.0; // positive variances for every column
+        }
+        m2[3] = f64::NAN; // Sxy of feature 0 (z index 3 = y)
+        m2[3 * d] = f64::NAN;
+        m2[d + 3] = 40.0; // feature 1: |corr| = 40/64
+        m2[3 * d + 1] = 40.0;
+        m2[2 * d + 3] = 20.0; // feature 2: |corr| = 20/64
+        m2[3 * d + 2] = 20.0;
+        let s = SuffStats::from_moments(p, Moments::from_block(16, vec![0.0; d], &m2));
+        let corr = marginal_abs_correlations(&s);
+        assert!(corr[0].is_nan(), "setup must actually produce a NaN");
+        let report = screen_top_m(&s, 2).unwrap();
+        assert_eq!(report.selected, vec![1, 2], "degenerate feature screened out");
+        // even when m exceeds the healthy-feature count, the NaN feature
+        // must NOT back-fill the keep set (and threshold must stay finite)
+        let report = screen_top_m(&s, 3).unwrap();
+        assert_eq!(report.selected, vec![1, 2]);
+        assert!(report.threshold.is_finite());
+        // all-NaN statistics: a named error, not a panic
+        let mut all_nan = vec![f64::NAN; d * d];
+        for (i, v) in all_nan.iter_mut().enumerate() {
+            if i % (d + 1) == 0 {
+                *v = 64.0; // keep variances sane so only Sxy is corrupt
+            }
+        }
+        let s = SuffStats::from_moments(p, Moments::from_block(16, vec![0.0; d], &all_nan));
+        let err = format!("{:#}", screen_top_m(&s, 2).unwrap_err());
+        assert!(err.contains("degenerate statistics"), "{err}");
     }
 
     #[test]

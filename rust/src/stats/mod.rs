@@ -24,6 +24,11 @@
 //!   everything O(p²) on the fit path (M2, the standardized Gram, fold
 //!   complements) is stored packed — half the resident memory and half the
 //!   shuffle bytes of a dense square.
+//! * [`tiles`] — row-block tiling of the packed triangle
+//!   ([`tiles::TiledSymMat`], [`tiles::StatPanel`]): each `(fold, panel)`
+//!   pair becomes its own reduce key, so no shuffle payload or merge-tree
+//!   slot ever holds more than O(d·b) doubles — bit-identical to the
+//!   untiled packed path at every block size.
 //! * [`naive`] — the textbook raw-sum accumulator, kept as the numerically
 //!   fragile comparator for experiment T4.
 
@@ -32,8 +37,10 @@ pub mod moments;
 pub mod naive;
 pub mod suffstats;
 pub mod symm;
+pub mod tiles;
 pub mod welford;
 
 pub use moments::Moments;
 pub use suffstats::SuffStats;
 pub use symm::SymMat;
+pub use tiles::{StatPanel, TileLayout, TiledSymMat};

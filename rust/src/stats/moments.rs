@@ -139,6 +139,18 @@ impl Moments {
         self.m2.to_dense()
     }
 
+    /// Rebuild a value from its shipped parts (count, total weight, mean,
+    /// packed centered scatter) — how the tiled statistics path
+    /// ([`super::tiles`]) reassembles a fold statistic from per-panel
+    /// payloads.  The parts are adopted verbatim (no rounding), so this is
+    /// bit-exact by construction.
+    pub fn from_packed_parts(n: u64, w: f64, mean: Vec<f64>, m2: SymMat) -> Self {
+        let d = mean.len();
+        assert_eq!(m2.n(), d, "packed scatter dimension mismatch");
+        let scratch = vec![0.0; d];
+        Moments { d, n, w, mean, m2, scratch }
+    }
+
     /// Mapper-side update (paper eq. 12 for the mean, eq. 15 for M2).
     pub fn push(&mut self, row: &[f64]) {
         self.push_weighted(row, 1.0);
@@ -541,6 +553,28 @@ mod tests {
             big.push(&[0.0, 0.0]);
         }
         let _ = small.sub(&big);
+    }
+
+    #[test]
+    fn from_packed_parts_is_bit_exact() {
+        let mut rng = Rng::seed_from(40);
+        let rows = random_rows(&mut rng, 80, 5, -2.0, 3.0);
+        let mut m = Moments::new(5);
+        for r in &rows {
+            m.push(r);
+        }
+        let rebuilt = Moments::from_packed_parts(
+            m.count(),
+            m.weight(),
+            m.mean().to_vec(),
+            m.m2_packed().clone(),
+        );
+        assert_eq!(rebuilt, m, "value equality (scratch excluded)");
+        for i in 0..5 {
+            for j in i..5 {
+                assert_eq!(rebuilt.m2_at(i, j).to_bits(), m.m2_at(i, j).to_bits());
+            }
+        }
     }
 
     #[test]

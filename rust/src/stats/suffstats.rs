@@ -160,6 +160,14 @@ impl SuffStats {
         self.inner.sub_into(&part.inner, &mut scratch.inner);
     }
 
+    /// Shard this statistic into per-panel payloads for the tiled
+    /// statistics job (one `(fold, panel)` reduce key each, every payload
+    /// O(d·b)); reassemble with [`crate::stats::tiles::assemble_stats`].
+    /// The panels concatenate to this statistic's packed scatter verbatim.
+    pub fn shard(&self, layout: super::tiles::TileLayout) -> Vec<super::tiles::StatPanel> {
+        super::tiles::shard_stats(self, layout)
+    }
+
     pub fn x_mean(&self) -> &[f64] {
         &self.inner.mean()[..self.p]
     }

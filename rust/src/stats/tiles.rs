@@ -1,0 +1,757 @@
+//! Row-block tiling of the packed triangle — O(p·b) reduce keys instead of
+//! one O(p²) statistic.
+//!
+//! PR 2's [`SymMat`] halved the O(p²) statistic (10); this module shards
+//! what is left.  The packed upper triangle stores row `i`'s tail
+//! `(i, i..n)` contiguously, so a *row-block panel* (rows `t·b .. t·b+b`)
+//! is a contiguous slice of the packed array.  [`TileLayout`] names the
+//! panels, [`TiledSymMat`] stores a triangle as one `Vec` per panel, and
+//! [`StatPanel`] is the engine-facing payload: one panel of one fold's
+//! centered moments, carrying the full `(n, w, mean)` header so Chan's
+//! merge (paper eq. 13–14) can run on any panel independently.  With the
+//! reduce keyed by `(fold, panel)`, no shuffle payload or merge-tree slot
+//! ever holds more than O(d·b) doubles — the envelope the ROADMAP's
+//! "scaling beyond packed-p" item asked for.
+//!
+//! Determinism contract (non-negotiable, property-tested here and in
+//! `tests/integration.rs`): every panel kernel is the *row restriction* of
+//! the corresponding [`SymMat`]/[`Moments`] kernel — same loop bodies,
+//! same `(i, j≥i)` order within and across panels — and the scalar merge
+//! header (total weight, mean update) replays [`Moments::merge`] exactly.
+//! Concatenating a fold's merged panels is therefore bit-for-bit the
+//! untiled merged statistic, for every block size, worker count and fault
+//! plan.
+
+use super::moments::Moments;
+use super::suffstats::SuffStats;
+use super::symm::{tri_idx, tri_len, SymMat};
+
+/// Row-block partition of the packed upper triangle of an n×n symmetric
+/// matrix: panel `t` owns rows `t·block .. min((t+1)·block, n)`, i.e. the
+/// contiguous packed slice between those rows' diagonal offsets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TileLayout {
+    n: usize,
+    block: usize,
+}
+
+impl TileLayout {
+    /// Layout for dimension `n` with `block` rows per panel (clamped to
+    /// `[1, n]`, so an oversized block degenerates to a single panel —
+    /// the untiled layout).
+    pub fn new(n: usize, block: usize) -> Self {
+        assert!(n >= 1, "tile layout needs dimension >= 1");
+        TileLayout { n, block: block.clamp(1, n) }
+    }
+
+    /// Matrix dimension n.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Rows per panel (the configured b).
+    pub fn block(&self) -> usize {
+        self.block
+    }
+
+    /// Number of panels, ⌈n/b⌉.
+    pub fn n_panels(&self) -> usize {
+        self.n.div_ceil(self.block)
+    }
+
+    /// Row range of panel `t`.
+    pub fn rows(&self, t: usize) -> std::ops::Range<usize> {
+        let r0 = t * self.block;
+        debug_assert!(r0 < self.n, "panel {t} out of range");
+        r0..(r0 + self.block).min(self.n)
+    }
+
+    /// Offset of panel `t`'s first entry in the full packed triangle.
+    pub fn offset(&self, t: usize) -> usize {
+        tri_idx(self.n, self.rows(t).start, self.rows(t).start)
+    }
+
+    /// Packed entries owned by panel `t`: Σ_{i ∈ rows(t)} (n − i).
+    pub fn panel_len(&self, t: usize) -> usize {
+        let r = self.rows(t);
+        let end = if r.end == self.n {
+            tri_len(self.n)
+        } else {
+            tri_idx(self.n, r.end, r.end)
+        };
+        end - self.offset(t)
+    }
+
+    /// The largest panel (panel 0 — earlier rows have longer tails): the
+    /// O(n·b) per-key payload bound.
+    pub fn max_panel_len(&self) -> usize {
+        self.panel_len(0)
+    }
+}
+
+/// A symmetric n×n matrix stored as row-block panels of its packed upper
+/// triangle — the same doubles as [`SymMat`], no single allocation larger
+/// than O(n·b).  Kernels visit the exact [`SymMat`] index order, so
+/// results are bit-for-bit identical to the untiled packed path.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TiledSymMat {
+    layout: TileLayout,
+    panels: Vec<Vec<f64>>,
+}
+
+impl TiledSymMat {
+    /// The zero matrix under `layout`.
+    pub fn zeros(layout: TileLayout) -> Self {
+        let panels = (0..layout.n_panels())
+            .map(|t| vec![0.0; layout.panel_len(t)])
+            .collect();
+        TiledSymMat { layout, panels }
+    }
+
+    /// Split an untiled packed triangle into `block`-row panels (a pure
+    /// re-slicing — the doubles are copied verbatim).
+    pub fn from_packed(m: &SymMat, block: usize) -> Self {
+        let layout = TileLayout::new(m.n(), block);
+        let packed = m.as_slice();
+        let panels = (0..layout.n_panels())
+            .map(|t| packed[layout.offset(t)..layout.offset(t) + layout.panel_len(t)].to_vec())
+            .collect();
+        TiledSymMat { layout, panels }
+    }
+
+    /// Concatenate the panels back into the untiled packed triangle.
+    pub fn to_packed(&self) -> SymMat {
+        let mut data = Vec::with_capacity(tri_len(self.layout.n));
+        for panel in &self.panels {
+            data.extend_from_slice(panel);
+        }
+        SymMat::from_packed(self.layout.n, data)
+    }
+
+    pub fn layout(&self) -> TileLayout {
+        self.layout
+    }
+
+    pub fn n(&self) -> usize {
+        self.layout.n
+    }
+
+    /// Panel `t`'s packed rows.
+    pub fn panel(&self, t: usize) -> &[f64] {
+        &self.panels[t]
+    }
+
+    /// Largest panel length in doubles (the per-panel allocation bound).
+    pub fn max_panel_len(&self) -> usize {
+        self.layout.max_panel_len()
+    }
+
+    /// Entry (i, j), either triangle.
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        let (i, j) = if i <= j { (i, j) } else { (j, i) };
+        let t = i / self.layout.block;
+        self.panels[t][tri_idx(self.layout.n, i, j) - self.layout.offset(t)]
+    }
+
+    /// A += scale·(δ ⊗ δ) on the upper triangle — [`SymMat::rank1`]
+    /// restricted panel by panel (row-independent body ⇒ bit-identical).
+    pub fn rank1(&mut self, delta: &[f64], scale: f64) {
+        let n = self.layout.n;
+        debug_assert_eq!(delta.len(), n);
+        for t in 0..self.layout.n_panels() {
+            let rows = self.layout.rows(t);
+            let panel = &mut self.panels[t];
+            let mut k = 0;
+            for i in rows {
+                let di = delta[i] * scale;
+                let row = &mut panel[k..k + (n - i)];
+                for (m, &dj) in row.iter_mut().zip(&delta[i..]) {
+                    *m += di * dj;
+                }
+                k += n - i;
+            }
+        }
+    }
+
+    /// Four rank-1 updates at once — [`SymMat::rank4`] per panel.
+    pub fn rank4(&mut self, c0: &[f64], c1: &[f64], c2: &[f64], c3: &[f64]) {
+        let n = self.layout.n;
+        debug_assert!(c0.len() == n && c1.len() == n && c2.len() == n && c3.len() == n);
+        for t in 0..self.layout.n_panels() {
+            let rows = self.layout.rows(t);
+            let panel = &mut self.panels[t];
+            let mut k = 0;
+            for i in rows {
+                let (a0, a1, a2, a3) = (c0[i], c1[i], c2[i], c3[i]);
+                let row = &mut panel[k..k + (n - i)];
+                let (r0, r1, r2, r3) = (&c0[i..], &c1[i..], &c2[i..], &c3[i..]);
+                for (s, m) in row.iter_mut().enumerate() {
+                    *m += a0 * r0[s] + a1 * r1[s] + a2 * r2[s] + a3 * r3[s];
+                }
+                k += n - i;
+            }
+        }
+    }
+
+    /// Chan's pairwise merge — [`SymMat::merge_scaled_outer`] per panel.
+    pub fn merge_scaled_outer(&mut self, other: &TiledSymMat, delta: &[f64], coef: f64) {
+        let n = self.layout.n;
+        assert_eq!(other.layout, self.layout, "layout mismatch in merge");
+        debug_assert_eq!(delta.len(), n);
+        for t in 0..self.layout.n_panels() {
+            let rows = self.layout.rows(t);
+            let panel = &mut self.panels[t];
+            let opanel = &other.panels[t];
+            let mut k = 0;
+            for i in rows {
+                let ci = coef * delta[i];
+                let row = &mut panel[k..k + (n - i)];
+                let orow = &opanel[k..k + (n - i)];
+                for ((s, &o), &dj) in row.iter_mut().zip(orow).zip(&delta[i..]) {
+                    *s += o + ci * dj;
+                }
+                k += n - i;
+            }
+        }
+    }
+
+    /// out = A − B − coef·(δ ⊗ δ) — [`SymMat::sub_scaled_outer_into`] per
+    /// panel (the leave-one-fold-out complement on tiled storage).
+    pub fn sub_scaled_outer_into(
+        &self,
+        part: &TiledSymMat,
+        delta: &[f64],
+        coef: f64,
+        out: &mut TiledSymMat,
+    ) {
+        let n = self.layout.n;
+        assert!(
+            part.layout == self.layout && out.layout == self.layout,
+            "layout mismatch in sub"
+        );
+        debug_assert_eq!(delta.len(), n);
+        for t in 0..self.layout.n_panels() {
+            let rows = self.layout.rows(t);
+            let opanel = &mut out.panels[t];
+            let mut k = 0;
+            for i in rows {
+                let ci = coef * delta[i];
+                for j in i..n {
+                    opanel[k] = self.panels[t][k] - part.panels[t][k] - ci * delta[j];
+                    k += 1;
+                }
+            }
+        }
+    }
+
+    /// Σᵢ A\[j,i\]·x\[i\] with i strictly ascending across panel seams —
+    /// bit-identical to [`SymMat::row_dot`] (the covariance-update CD's
+    /// symmetric row gather).
+    pub fn row_dot(&self, j: usize, x: &[f64]) -> f64 {
+        let n = self.layout.n;
+        debug_assert!(j < n && x.len() == n);
+        let mut acc = 0.0;
+        // column part (i < j): entry (i, j) lives in row i's panel
+        for (i, xi) in x.iter().enumerate().take(j) {
+            acc += self.get(i, j) * xi;
+        }
+        // row part (i ≥ j): the tail (j, j..n) is contiguous in row j's panel
+        let t = j / self.layout.block;
+        let k = tri_idx(n, j, j) - self.layout.offset(t);
+        let row = &self.panels[t][k..k + (n - j)];
+        for (a, xi) in row.iter().zip(&x[j..]) {
+            acc += a * xi;
+        }
+        acc
+    }
+
+    /// out\[i\] += coef · A\[j,i\] for all i, ascending across panel seams
+    /// — bit-identical to [`SymMat::axpy_row_into`].
+    pub fn axpy_row_into(&self, j: usize, coef: f64, out: &mut [f64]) {
+        let n = self.layout.n;
+        debug_assert!(j < n && out.len() == n);
+        for (i, o) in out.iter_mut().enumerate().take(j) {
+            *o += coef * self.get(i, j);
+        }
+        let t = j / self.layout.block;
+        let k = tri_idx(n, j, j) - self.layout.offset(t);
+        let row = &self.panels[t][k..k + (n - j)];
+        for (o, &a) in out[j..].iter_mut().zip(row) {
+            *o += coef * a;
+        }
+    }
+
+    /// A += v·I (the ridge shift), panel by panel.
+    pub fn add_diag(&mut self, v: f64) {
+        let n = self.layout.n;
+        for t in 0..self.layout.n_panels() {
+            let rows = self.layout.rows(t);
+            let panel = &mut self.panels[t];
+            let mut k = 0;
+            for i in rows {
+                panel[k] += v;
+                k += n - i;
+            }
+        }
+    }
+}
+
+/// One row-block panel of one fold's centered z-moments — the value behind
+/// a `(fold, panel)` reduce key.  Every panel replicates the O(d) header
+/// `(n, w, mean)` so Chan's merge runs on any panel in isolation; after
+/// the fixed merge tree, every panel of a fold carries a bit-identical
+/// header (the same merges ran in the same order), which
+/// [`assemble_stats`] verifies.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StatPanel {
+    /// z-dimension d = p+1 of the full statistic
+    pub d: usize,
+    /// row-block size the layout was built with
+    pub block: usize,
+    /// panel index within [`TileLayout::new`]`(d, block)`
+    pub panel: usize,
+    /// raw rows behind the statistic (replicated across a fold's panels)
+    pub n: u64,
+    /// total observation weight W
+    pub w: f64,
+    /// full d-length mean (Chan's merge of any panel needs all of it)
+    pub mean: Vec<f64>,
+    /// packed rows `rows(panel)` of the centered scatter M2
+    pub m2: Vec<f64>,
+}
+
+impl StatPanel {
+    /// The layout this panel belongs to.
+    pub fn layout(&self) -> TileLayout {
+        TileLayout::new(self.d, self.block)
+    }
+
+    /// Row range of this panel.
+    pub fn rows(&self) -> std::ops::Range<usize> {
+        self.layout().rows(self.panel)
+    }
+
+    /// Wire size: count + weight + mean + panel rows, in f64s.
+    pub fn payload_doubles(&self) -> usize {
+        2 + self.mean.len() + self.m2.len()
+    }
+
+    fn check_shape(&self, other: &StatPanel) -> Result<(), String> {
+        if self.d != other.d || self.block != other.block || self.panel != other.panel {
+            return Err(format!(
+                "StatPanel shape mismatch: (d={}, b={}, panel={}) vs (d={}, b={}, panel={})",
+                self.d, self.block, self.panel, other.d, other.block, other.panel
+            ));
+        }
+        if self.m2.len() != other.m2.len() || self.mean.len() != other.mean.len() {
+            return Err(format!(
+                "StatPanel length mismatch at panel {}: {}+{} vs {}+{} entries",
+                self.panel,
+                self.mean.len(),
+                self.m2.len(),
+                other.mean.len(),
+                other.m2.len()
+            ));
+        }
+        Ok(())
+    }
+
+    /// Chan merge (paper eq. 13–14) restricted to this panel's rows — the
+    /// exact scalar sequence of [`Moments::merge`] followed by the row
+    /// restriction of [`SymMat::merge_scaled_outer`], so a merged panel is
+    /// bit-identical to the same rows of the untiled merged statistic.
+    pub fn merge(&mut self, other: &StatPanel) -> Result<(), String> {
+        self.check_shape(other)?;
+        if other.n == 0 {
+            return Ok(());
+        }
+        if self.n == 0 {
+            self.n = other.n;
+            self.w = other.w;
+            self.mean.copy_from_slice(&other.mean);
+            self.m2.copy_from_slice(&other.m2);
+            return Ok(());
+        }
+        let d = self.d;
+        let (m, n) = (self.w, other.w);
+        let total = m + n;
+        let w_other = n / total;
+        let coef = m * n / total;
+        let delta: Vec<f64> = (0..d).map(|i| other.mean[i] - self.mean[i]).collect();
+        let mut k = 0;
+        for i in self.rows() {
+            let ci = coef * delta[i];
+            let row = &mut self.m2[k..k + (d - i)];
+            let orow = &other.m2[k..k + (d - i)];
+            for ((s, &o), &dj) in row.iter_mut().zip(orow).zip(&delta[i..]) {
+                *s += o + ci * dj;
+            }
+            k += d - i;
+        }
+        for (mu, dl) in self.mean.iter_mut().zip(&delta) {
+            *mu += dl * w_other;
+        }
+        self.n += other.n;
+        self.w += other.w;
+        Ok(())
+    }
+}
+
+/// `total − part` per panel — the exact row restriction of
+/// [`Moments::sub_into`]: the CV phase's leave-one-fold-out complement on
+/// tiled storage, written into a reusable per-panel scratch.
+pub fn sub_panel_into(
+    total: &StatPanel,
+    part: &StatPanel,
+    out: &mut StatPanel,
+) -> Result<(), String> {
+    total.check_shape(part)?;
+    total.check_shape(out)?;
+    if part.n > total.n {
+        return Err(format!(
+            "panel {}: part has {} rows but total only {}",
+            total.panel, part.n, total.n
+        ));
+    }
+    let rest_n = total.n - part.n;
+    if rest_n == 0 {
+        out.n = 0;
+        out.w = 0.0;
+        out.mean.fill(0.0);
+        out.m2.fill(0.0);
+        return Ok(());
+    }
+    if part.n == 0 {
+        out.n = total.n;
+        out.w = total.w;
+        out.mean.copy_from_slice(&total.mean);
+        out.m2.copy_from_slice(&total.m2);
+        return Ok(());
+    }
+    let d = total.d;
+    let (nt, np) = (total.w, part.w);
+    let nr = nt - np;
+    if nr <= 0.0 {
+        return Err(format!(
+            "panel {}: part weight {np} exceeds total weight {nt}",
+            total.panel
+        ));
+    }
+    for i in 0..d {
+        out.mean[i] = (nt * total.mean[i] - np * part.mean[i]) / nr;
+    }
+    let delta: Vec<f64> = (0..d).map(|i| part.mean[i] - out.mean[i]).collect();
+    let coef = np * nr / nt;
+    let mut k = 0;
+    for i in total.rows() {
+        let ci = coef * delta[i];
+        for j in i..d {
+            out.m2[k] = total.m2[k] - part.m2[k] - ci * delta[j];
+            k += 1;
+        }
+    }
+    out.n = rest_n;
+    out.w = nr;
+    Ok(())
+}
+
+/// Shard a fold statistic into its per-panel payloads: the tiled
+/// statistics job's emit path.  Concatenating the panels in order
+/// reproduces `stats`' packed M2 verbatim (the packed layout stores row
+/// blocks contiguously), and every panel carries the full header.
+pub fn shard_stats(stats: &SuffStats, layout: TileLayout) -> Vec<StatPanel> {
+    let m = stats.moments();
+    assert_eq!(layout.n(), m.dim(), "layout dimension must be p+1");
+    let packed = m.m2_packed().as_slice();
+    (0..layout.n_panels())
+        .map(|t| StatPanel {
+            d: m.dim(),
+            block: layout.block(),
+            panel: t,
+            n: m.count(),
+            w: m.weight(),
+            mean: m.mean().to_vec(),
+            m2: packed[layout.offset(t)..layout.offset(t) + layout.panel_len(t)].to_vec(),
+        })
+        .collect()
+}
+
+/// Reassemble a fold statistic from its merged panels (driver side).
+/// Verifies full coverage and that every panel agrees *bit-for-bit* on
+/// `(n, w, mean)` — the fixed-merge-tree invariant; a mismatch means the
+/// panels did not see the same merge sequence and the statistic would be
+/// silently wrong.
+pub fn assemble_stats(
+    p: usize,
+    layout: TileLayout,
+    panels: &[StatPanel],
+) -> Result<SuffStats, String> {
+    let d = p + 1;
+    if layout.n() != d {
+        return Err(format!("layout dimension {} but p+1 = {d}", layout.n()));
+    }
+    if panels.len() != layout.n_panels() {
+        let have: Vec<usize> = panels.iter().map(|pl| pl.panel).collect();
+        return Err(format!(
+            "fold statistics incomplete: {} of {} panels arrived (have {have:?})",
+            panels.len(),
+            layout.n_panels()
+        ));
+    }
+    let head = &panels[0];
+    let mut data = Vec::with_capacity(tri_len(d));
+    for (t, panel) in panels.iter().enumerate() {
+        if panel.panel != t || panel.d != d || panel.block != layout.block() {
+            return Err(format!(
+                "panel {t}: got (d={}, b={}, panel={})",
+                panel.d, panel.block, panel.panel
+            ));
+        }
+        if panel.mean.len() != d {
+            return Err(format!(
+                "panel {t}: mean header has {} entries, expected {d}",
+                panel.mean.len()
+            ));
+        }
+        if panel.m2.len() != layout.panel_len(t) {
+            return Err(format!(
+                "panel {t}: {} entries, layout says {}",
+                panel.m2.len(),
+                layout.panel_len(t)
+            ));
+        }
+        let header_ok = panel.n == head.n
+            && panel.w.to_bits() == head.w.to_bits()
+            && panel
+                .mean
+                .iter()
+                .zip(&head.mean)
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+        if !header_ok {
+            return Err(format!(
+                "panel {t} header drifted from panel 0 — panels of one fold \
+                 must replay identical merges (n {} vs {})",
+                panel.n, head.n
+            ));
+        }
+        data.extend_from_slice(&panel.m2);
+    }
+    let m2 = SymMat::from_packed(d, data);
+    let inner = Moments::from_packed_parts(head.n, head.w, head.mean.clone(), m2);
+    Ok(SuffStats::from_moments(p, inner))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::util::prop;
+
+    fn random_sym(rng: &mut Rng, n: usize) -> SymMat {
+        let mut m = SymMat::zeros(n);
+        for i in 0..n {
+            for j in i..n {
+                m.set(i, j, rng.normal());
+            }
+        }
+        m
+    }
+
+    fn random_stats(rng: &mut Rng, p: usize, n: usize) -> SuffStats {
+        let mut s = SuffStats::new(p);
+        for _ in 0..n {
+            let x: Vec<f64> = (0..p).map(|_| rng.normal_ms(3.0, 2.0)).collect();
+            let y = x.iter().sum::<f64>() + rng.normal();
+            s.push(&x, y);
+        }
+        s
+    }
+
+    #[test]
+    fn layout_panels_tile_the_triangle_exactly() {
+        for n in [1usize, 2, 5, 9, 16, 33] {
+            for block in [1usize, 2, 3, 7, n, n + 5] {
+                let l = TileLayout::new(n, block);
+                assert!(l.block() >= 1 && l.block() <= n);
+                let mut covered = 0usize;
+                let mut len_sum = 0usize;
+                for t in 0..l.n_panels() {
+                    assert_eq!(l.offset(t), len_sum, "n={n} b={block} t={t}");
+                    assert_eq!(l.rows(t).start, covered);
+                    covered = l.rows(t).end;
+                    len_sum += l.panel_len(t);
+                }
+                assert_eq!(covered, n);
+                assert_eq!(len_sum, tri_len(n));
+                assert_eq!(l.max_panel_len(), l.panel_len(0));
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_kernels_bitwise_match_symmat() {
+        prop::quick(|rng, _| {
+            let n = 1 + rng.below(12);
+            let block = 1 + rng.below(n + 2);
+            let mut dense = random_sym(rng, n);
+            let mut tiled = TiledSymMat::from_packed(&dense, block);
+            // round trip
+            assert_eq!(tiled.to_packed(), dense);
+            let delta: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            // rank1
+            dense.rank1(&delta, 1.75);
+            tiled.rank1(&delta, 1.75);
+            assert_eq!(tiled.to_packed(), dense, "rank1 drift (n={n} b={block})");
+            // rank4
+            let rows: Vec<Vec<f64>> = (0..4).map(|_| prop::normal_vec(rng, n, 1.0)).collect();
+            dense.rank4(&rows[0], &rows[1], &rows[2], &rows[3]);
+            tiled.rank4(&rows[0], &rows[1], &rows[2], &rows[3]);
+            assert_eq!(tiled.to_packed(), dense, "rank4 drift");
+            // merge
+            let other_dense = random_sym(rng, n);
+            let other_tiled = TiledSymMat::from_packed(&other_dense, block);
+            dense.merge_scaled_outer(&other_dense, &delta, 0.5);
+            tiled.merge_scaled_outer(&other_tiled, &delta, 0.5);
+            assert_eq!(tiled.to_packed(), dense, "merge drift");
+            // sub
+            let mut out_dense = SymMat::zeros(n);
+            let mut out_tiled = TiledSymMat::zeros(TileLayout::new(n, block));
+            dense.sub_scaled_outer_into(&other_dense, &delta, 0.5, &mut out_dense);
+            tiled.sub_scaled_outer_into(&other_tiled, &delta, 0.5, &mut out_tiled);
+            assert_eq!(out_tiled.to_packed(), out_dense, "sub drift");
+            // diag shift, gathers over panel seams
+            dense.add_diag(0.25);
+            tiled.add_diag(0.25);
+            assert_eq!(tiled.to_packed(), dense, "add_diag drift");
+            for j in 0..n {
+                assert_eq!(
+                    tiled.row_dot(j, &x).to_bits(),
+                    dense.row_dot(j, &x).to_bits(),
+                    "row_dot j={j}"
+                );
+                let mut a = x.clone();
+                let mut b = x.clone();
+                dense.axpy_row_into(j, -0.3, &mut a);
+                tiled.axpy_row_into(j, -0.3, &mut b);
+                for i in 0..n {
+                    assert_eq!(b[i].to_bits(), a[i].to_bits(), "axpy j={j} i={i}");
+                }
+                for i in 0..n {
+                    assert_eq!(tiled.get(i, j).to_bits(), dense.get(i, j).to_bits());
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn shard_assemble_round_trips_bitwise() {
+        let mut rng = Rng::seed_from(3);
+        for p in [1usize, 3, 6] {
+            let s = random_stats(&mut rng, p, 60);
+            for block in [1usize, 2, p + 1, 50] {
+                let layout = TileLayout::new(p + 1, block);
+                let panels = shard_stats(&s, layout);
+                assert_eq!(panels.len(), layout.n_panels());
+                let max_len = panels.iter().map(|pl| pl.m2.len()).max().unwrap();
+                assert_eq!(max_len, layout.max_panel_len());
+                let back = assemble_stats(p, layout, &panels).unwrap();
+                assert_eq!(back, s, "p={p} b={block}");
+                assert_eq!(back.syy().to_bits(), s.syy().to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn panel_merge_bitwise_matches_full_merge() {
+        // merging panel-wise then assembling == merging the full statistics
+        prop::quick(|rng, _| {
+            let p = 1 + rng.below(6);
+            let block = 1 + rng.below(p + 3);
+            let layout = TileLayout::new(p + 1, block);
+            let a = random_stats(rng, p, 5 + rng.below(60));
+            let b = random_stats(rng, p, 5 + rng.below(60));
+            let mut whole = a.clone();
+            whole.merge(&b);
+            let mut pa = shard_stats(&a, layout);
+            let pb = shard_stats(&b, layout);
+            for (x, y) in pa.iter_mut().zip(&pb) {
+                x.merge(y).unwrap();
+            }
+            let assembled = assemble_stats(p, layout, &pa).unwrap();
+            assert_eq!(assembled, whole, "p={p} b={block}");
+            // headers stayed replicated bit-for-bit
+            for panel in &pa {
+                assert_eq!(panel.n, pa[0].n);
+                assert_eq!(panel.w.to_bits(), pa[0].w.to_bits());
+            }
+        });
+    }
+
+    #[test]
+    fn panel_merge_handles_empty_sides() {
+        let mut rng = Rng::seed_from(9);
+        let layout = TileLayout::new(3, 2);
+        let s = random_stats(&mut rng, 2, 20);
+        let full = shard_stats(&s, layout);
+        let empty = shard_stats(&SuffStats::new(2), layout);
+        // empty ← full copies; full ← empty is a no-op
+        let mut acc = empty.clone();
+        for (x, y) in acc.iter_mut().zip(&full) {
+            x.merge(y).unwrap();
+        }
+        assert_eq!(acc, full);
+        let mut acc2 = full.clone();
+        for (x, y) in acc2.iter_mut().zip(&empty) {
+            x.merge(y).unwrap();
+        }
+        assert_eq!(acc2, full);
+    }
+
+    #[test]
+    fn sub_panel_bitwise_matches_moments_sub() {
+        prop::quick(|rng, _| {
+            let p = 1 + rng.below(5);
+            let block = 1 + rng.below(p + 3);
+            let layout = TileLayout::new(p + 1, block);
+            let a = random_stats(rng, p, 5 + rng.below(50));
+            let b = random_stats(rng, p, 5 + rng.below(50));
+            let mut total = a.clone();
+            total.merge(&b);
+            let rest = total.sub(&a);
+            let pt = shard_stats(&total, layout);
+            let pa = shard_stats(&a, layout);
+            // scratch panels reused across calls (junk carried in on purpose)
+            let mut out = shard_stats(&b, layout);
+            for ((t, x), o) in pt.iter().zip(&pa).zip(out.iter_mut()) {
+                sub_panel_into(t, x, o).unwrap();
+            }
+            let assembled = assemble_stats(p, layout, &out).unwrap();
+            assert_eq!(assembled, rest, "p={p} b={block}");
+        });
+    }
+
+    #[test]
+    fn assemble_rejects_missing_and_drifted_panels() {
+        let mut rng = Rng::seed_from(5);
+        let p = 4;
+        let layout = TileLayout::new(p + 1, 2);
+        let s = random_stats(&mut rng, p, 30);
+        let panels = shard_stats(&s, layout);
+        assert!(panels.len() >= 3);
+        // dropped panel → named error
+        let short: Vec<StatPanel> = panels[..panels.len() - 1].to_vec();
+        let err = assemble_stats(p, layout, &short).unwrap_err();
+        assert!(err.contains("incomplete"), "{err}");
+        // header drift → named error
+        let mut drifted = panels.clone();
+        drifted[1].n += 1;
+        let err = assemble_stats(p, layout, &drifted).unwrap_err();
+        assert!(err.contains("drifted"), "{err}");
+        // shape mismatch on merge → error, not silent corruption
+        let mut a = panels[0].clone();
+        let b = panels[1].clone();
+        assert!(a.merge(&b).is_err());
+    }
+}

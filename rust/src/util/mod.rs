@@ -20,13 +20,25 @@ pub fn mean(xs: &[f64]) -> f64 {
     xs.iter().sum::<f64>() / xs.len() as f64
 }
 
-/// Population standard deviation of a slice.
+/// Population standard deviation of a slice (÷n).
 pub fn std_dev(xs: &[f64]) -> f64 {
     if xs.len() < 2 {
         return 0.0;
     }
     let m = mean(xs);
     (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Sample standard deviation of a slice (÷(n−1), Bessel-corrected) — the
+/// convention behind glmnet's cross-validation standard error: the k fold
+/// MSEs are a *sample* of the fold distribution, so their SD must divide
+/// by k−1, not k, or the 1-SE rule's threshold is biased low.
+pub fn sample_std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
 }
 
 /// Max absolute difference between two equal-length slices.
@@ -64,6 +76,20 @@ mod tests {
         assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
         assert_eq!(mean(&[]), 0.0);
         assert!((std_dev(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sample_std_dev_divides_by_n_minus_one() {
+        // same data as above: Σ(x−x̄)² = 32 over n = 8 → sample SD √(32/7)
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let want = (32.0_f64 / 7.0).sqrt();
+        assert!((sample_std_dev(&xs) - want).abs() < 1e-12);
+        // Bessel relation: sample = population · √(n/(n−1))
+        let rel = std_dev(&xs) * (8.0_f64 / 7.0).sqrt();
+        assert!((sample_std_dev(&xs) - rel).abs() < 1e-12);
+        // degenerate lengths stay 0 (never NaN)
+        assert_eq!(sample_std_dev(&[5.0]), 0.0);
+        assert_eq!(sample_std_dev(&[]), 0.0);
     }
 
     #[test]

@@ -76,6 +76,17 @@ fn fit_synth_with_elastic_net() {
 }
 
 #[test]
+fn fit_with_tiled_statistics_block() {
+    let (ok, stdout, stderr) = plrmr(&[
+        "fit", "--synth", "3000,6,0.4,4", "--folds", "5", "--lambdas", "10",
+        "--gram-block", "2",
+    ]);
+    assert!(ok, "{stderr}");
+    assert!(stdout.contains("lasso model"), "{stdout}");
+    assert!(stdout.contains("max key"), "{stdout}");
+}
+
+#[test]
 fn fit_requires_exactly_one_source() {
     let (ok, _, stderr) = plrmr(&["fit"]);
     assert!(!ok);

@@ -218,6 +218,90 @@ fn packed_cv_path_bit_stable_and_matches_naive_aggregation() {
 }
 
 #[test]
+fn tiled_statistics_cv_bit_identical_and_payload_bounded() {
+    // The tiled-statistics acceptance invariant, end to end: with the
+    // reduce keyed by (fold, panel), the reassembled fold statistics, the
+    // packed Grams they standardize into, and the whole CV error matrix
+    // must be bit-for-bit identical to the untiled packed path — across
+    // block sizes {1, 7, p, d, oversized}, worker counts {1, 4, 8}, and
+    // chaotic fault injection — while no single per-key payload exceeds
+    // the O(d·b) bound.
+    use plrmr::cv::cross_validate;
+    use plrmr::solver::path::lambda_grid;
+    use plrmr::solver::CdSettings;
+    use plrmr::stats::tiles::TileLayout;
+
+    let spec = SynthSpec::sparse_linear(4000, 8, 0.3, 77);
+    let data = generate(&spec);
+    let k = 5;
+    let d = 8 + 1;
+
+    let run = |gram_block: usize, workers: usize, fault: FaultPlan| {
+        let cfg = FitConfig {
+            workers,
+            folds: k,
+            split_rows: 500,
+            fault,
+            gram_block,
+            ..FitConfig::default()
+        };
+        let driver = Driver::new(cfg);
+        let (folds, metrics) = driver.compute_fold_stats(&data).unwrap();
+        let grid = lambda_grid(folds.total().quad_form().lambda_max(1.0), 12, 1e-2);
+        let gram_bits: Vec<u64> = (0..k)
+            .map(|i| folds.train_for(i).quad_form())
+            .flat_map(|q| q.gram.as_slice().iter().map(|g| g.to_bits()).collect::<Vec<_>>())
+            .collect();
+        let cv = cross_validate(&folds, Penalty::lasso(), &grid, CdSettings::default()).unwrap();
+        (gram_bits, cv.fold_err, cv.lambda_opt, metrics)
+    };
+
+    let (base_grams, base_err, base_opt, base_metrics) = run(0, 1, FaultPlan::none());
+    assert_eq!(base_metrics.records, 4000);
+    for block in [1usize, 7, 8, d, 64] {
+        for workers in [1usize, 4, 8] {
+            for chaos in [false, true] {
+                let fault = if chaos { FaultPlan::chaotic(0.3, 9) } else { FaultPlan::none() };
+                let (grams, err, opt, metrics) = run(block, workers, fault);
+                assert_eq!(
+                    grams, base_grams,
+                    "gram bits drifted (b={block} w={workers} chaos={chaos})"
+                );
+                assert_eq!(
+                    err, base_err,
+                    "CV matrix drifted (b={block} w={workers} chaos={chaos})"
+                );
+                assert_eq!(opt, base_opt, "λ_opt drifted (b={block})");
+                assert_eq!(metrics.records, 4000, "head-panel record accounting");
+                let layout = TileLayout::new(d, block);
+                let bound = std::mem::size_of::<(usize, usize)>()
+                    + 8 * (2 + d + layout.max_panel_len());
+                assert!(
+                    metrics.max_payload_bytes <= bound,
+                    "b={block} w={workers}: per-key payload {} over the O(d·b) bound {bound}",
+                    metrics.max_payload_bytes
+                );
+            }
+        }
+    }
+    // small blocks shrink the biggest thing the shuffle ever carries
+    let (_, _, _, tiled1) = run(1, 4, FaultPlan::none());
+    assert!(
+        tiled1.max_payload_bytes < base_metrics.max_payload_bytes,
+        "{} vs untiled {}",
+        tiled1.max_payload_bytes,
+        base_metrics.max_payload_bytes
+    );
+
+    // and λ selection plus the final refit are unchanged through fit()
+    let fit_cfg = FitConfig { folds: k, split_rows: 500, workers: 4, ..FitConfig::default() };
+    let untiled_fit = Driver::new(fit_cfg).fit(&data).unwrap();
+    let tiled_fit = Driver::new(FitConfig { gram_block: 3, ..fit_cfg }).fit(&data).unwrap();
+    assert_eq!(untiled_fit.lambda_opt, tiled_fit.lambda_opt);
+    assert_eq!(untiled_fit.model.beta, tiled_fit.model.beta);
+}
+
+#[test]
 fn hlo_runtime_agrees_with_cpu_when_built() {
     let dir = plrmr::runtime::default_artifacts_dir();
     if !cfg!(feature = "pjrt") || !dir.join("manifest.json").exists() {
