@@ -30,10 +30,18 @@ pub struct FitConfig {
     pub split_rows: usize,
     /// row-block size b for the *tiled* statistics job (rows of the packed
     /// z-triangle, d = p+1): 0 ⇒ untiled (one O(d²) triangle per fold
-    /// reduce key); b > 0 ⇒ the reduce is keyed by `(fold, panel)` and no
-    /// shuffle payload or merge slot exceeds O(d·b) — bit-identical output
-    /// at every block size (oversized b degenerates to one panel)
+    /// reduce key); b > 0 ⇒ the reduce is keyed by `(fold, panel)`, no
+    /// shuffle payload or merge slot exceeds O(d·b), and the driver keeps
+    /// the panels resident end-to-end (fold complements, Grams and CD/ridge
+    /// solves all panel-backed) — bit-identical output at every block size
+    /// (oversized b degenerates to one panel)
     pub gram_block: usize,
+    /// screen-then-fit threshold: when p exceeds this, the driver defaults
+    /// to SIS screening (`solver::screen`, m = min(n/log n, threshold)) and
+    /// fits the penalized model + CV on the m×m sub-Gram gathered straight
+    /// from the statistics — the paper's §4 envelope for p beyond the
+    /// Gram-in-memory ceiling.  0 ⇒ never screen automatically.
+    pub screen_auto: usize,
     /// salt for the random fold assignment (Algorithm 1 line 4)
     pub seed: u64,
     /// modeled cluster scheduling costs
@@ -55,6 +63,7 @@ impl Default for FitConfig {
                 .unwrap_or(4),
             split_rows: 65_536,
             gram_block: 0,
+            screen_auto: 4096,
             seed: 0x5EED,
             costs: JobCosts::zero(),
             fault: FaultPlan::none(),
@@ -91,6 +100,12 @@ impl FitConfig {
     /// Row-block size for the tiled statistics job (0 ⇒ untiled).
     pub fn with_gram_block(mut self, b: usize) -> Self {
         self.gram_block = b;
+        self
+    }
+
+    /// Screen-then-fit threshold on p (0 ⇒ never screen automatically).
+    pub fn with_screen_auto(mut self, threshold: usize) -> Self {
+        self.screen_auto = threshold;
         self
     }
 
@@ -163,6 +178,7 @@ impl FitConfig {
                 "workers" => cfg.workers = val.parse()?,
                 "split_rows" => cfg.split_rows = val.parse()?,
                 "gram_block" => cfg.gram_block = val.parse()?,
+                "screen_auto" => cfg.screen_auto = val.parse()?,
                 "seed" => cfg.seed = val.parse()?,
                 "tol" => cfg.cd.tol = val.parse()?,
                 "max_sweeps" => cfg.cd.max_sweeps = val.parse()?,
@@ -207,7 +223,7 @@ mod tests {
     #[test]
     fn kv_parsing() {
         let cfg = FitConfig::from_kv_pairs(
-            "# a comment\npenalty = elastic_net:0.5\nfolds=5\nworkers = 3\nseed=42\ngram_block=16\n",
+            "# a comment\npenalty = elastic_net:0.5\nfolds=5\nworkers = 3\nseed=42\ngram_block=16\nscreen_auto=0\n",
         )
         .unwrap();
         assert_eq!(cfg.penalty.alpha, 0.5);
@@ -215,7 +231,9 @@ mod tests {
         assert_eq!(cfg.workers, 3);
         assert_eq!(cfg.seed, 42);
         assert_eq!(cfg.gram_block, 16);
+        assert_eq!(cfg.screen_auto, 0, "screen-auto can be disabled");
         assert_eq!(FitConfig::default().gram_block, 0, "tiling is opt-in");
+        assert!(FitConfig::default().screen_auto > 0, "screening is the default at large p");
         assert!(FitConfig::from_kv_pairs("nonsense").is_err());
         assert!(FitConfig::from_kv_pairs("folds=1").is_err());
         assert!(FitConfig::from_kv_pairs("wat=1").is_err());

@@ -20,9 +20,10 @@ use crate::data::synth::{SynthSpec, SynthStream};
 use crate::mapreduce::{run_job, Emitter, FoldAssigner, JobMetrics, TaskCtx};
 use crate::model::fitted::FittedModel;
 use crate::solver::cd::solve_cd;
-use crate::solver::path::lambda_grid;
-use crate::stats::tiles::{assemble_stats, shard_stats, StatPanel, TileLayout};
-use crate::stats::SuffStats;
+use crate::solver::path::{default_grid, lambda_grid};
+use crate::solver::screen::{default_keep, embed_beta, screen_top_m, ScreenReport};
+use crate::stats::tiles::{assemble_stats_tiled, StatPanel, TileLayout};
+use crate::stats::{Scatter, SuffStats, TiledSymMat};
 
 /// Everything a fit returns: the model, the CV curve, and job accounting.
 #[derive(Debug, Clone)]
@@ -44,6 +45,13 @@ pub struct FitReport {
     pub data_passes: usize,
     /// in-sample goodness of fit, from statistics alone
     pub diagnostics: crate::model::Diagnostics,
+    /// largest single resident statistic allocation on the driver-side
+    /// CV/solve path, in bytes: 8·tri_len(p+1) on the packed path, bounded
+    /// by 8·(p+1)·b with `gram_block = b` (asserted in integration tests)
+    pub stat_peak_alloc_bytes: usize,
+    /// SIS screening outcome when the `screen_auto` path engaged (p over
+    /// the threshold); `None` for the exact full-p fit
+    pub screened: Option<ScreenReport>,
 }
 
 /// Rows buffered per fold before a blocked flush into the statistics
@@ -52,26 +60,32 @@ pub struct FitReport {
 const FOLD_FLUSH_ROWS: usize = 1024;
 
 /// Per-task fold bucketing: rows land in per-fold buffers and flush into
-/// [`SuffStats::push_rows`] in blocks.
-struct FoldAccumulator<'a> {
+/// [`SuffStats::push_rows`] in blocks.  Generic over the statistic
+/// backing: with `gram_block > 0` the per-fold statistics are panel-tiled
+/// ([`TiledSymMat`]) — the rank-1/rank-4 scatter writes straight into
+/// per-panel scratch, so a mapper never holds a single O(d²) allocation
+/// and emit moves the panels out without a triangle copy.
+struct FoldAccumulator<'a, S: Scatter> {
     assigner: &'a FoldAssigner,
     bufx: Vec<Vec<f64>>,
     bufy: Vec<Vec<f64>>,
-    stats: Vec<SuffStats>,
+    stats: Vec<SuffStats<S>>,
 }
 
-impl<'a> FoldAccumulator<'a> {
-    fn new(k: usize, p: usize, assigner: &'a FoldAssigner) -> Self {
+impl<'a, S: Scatter> FoldAccumulator<'a, S> {
+    /// `proto` fixes the statistic shape (p and, when tiled, the panel
+    /// layout) every fold accumulator is cloned empty from.
+    fn new(k: usize, p: usize, assigner: &'a FoldAssigner, proto: &SuffStats<S>) -> Self {
         FoldAccumulator {
             assigner,
             bufx: (0..k).map(|_| Vec::with_capacity(FOLD_FLUSH_ROWS * p)).collect(),
             bufy: (0..k).map(|_| Vec::with_capacity(FOLD_FLUSH_ROWS)).collect(),
-            stats: (0..k).map(|_| SuffStats::new(p)).collect(),
+            stats: (0..k).map(|_| proto.like_empty()).collect(),
         }
     }
 
     #[inline]
-    fn add(&mut self, row_id: u64, x: &[f64], y: f64) {
+    fn push_row(&mut self, row_id: u64, x: &[f64], y: f64) {
         let fold = self.assigner.fold_of(row_id);
         self.bufx[fold].extend_from_slice(x);
         self.bufy[fold].push(y);
@@ -89,7 +103,7 @@ impl<'a> FoldAccumulator<'a> {
     }
 
     /// Flush everything and hand back the non-empty per-fold statistics.
-    fn finish(mut self) -> Vec<(usize, SuffStats)> {
+    fn finish(mut self) -> Vec<(usize, SuffStats<S>)> {
         for fold in 0..self.stats.len() {
             self.flush(fold);
         }
@@ -98,6 +112,37 @@ impl<'a> FoldAccumulator<'a> {
             .enumerate()
             .filter(|(_, s)| !s.is_empty())
             .collect()
+    }
+}
+
+/// Row-feeding facade over [`FoldAccumulator`]: one ingestion closure (in-
+/// memory blocks, synthetic streams, CSV shards) drives either statistic
+/// backing through this object-safe surface.
+trait RowSink {
+    fn add(&mut self, row_id: u64, x: &[f64], y: f64);
+}
+
+impl<S: Scatter> RowSink for FoldAccumulator<'_, S> {
+    #[inline]
+    fn add(&mut self, row_id: u64, x: &[f64], y: f64) {
+        self.push_row(row_id, x, y);
+    }
+}
+
+/// The statistics job's output in whichever backing the config selected.
+/// The fit path consumes this directly (panels stay resident end-to-end);
+/// the `compute_fold_stats*` inspection APIs concatenate to packed.
+enum StatsJob {
+    Packed(FoldStats),
+    Tiled(FoldStats<TiledSymMat>),
+}
+
+impl StatsJob {
+    fn into_packed(self) -> Result<FoldStats> {
+        match self {
+            StatsJob::Packed(folds) => Ok(folds),
+            StatsJob::Tiled(folds) => folds.to_packed(),
+        }
     }
 }
 
@@ -122,27 +167,31 @@ impl Driver {
     /// One statistics MapReduce job over any split source: `feed` streams
     /// a split's rows into the per-task [`FoldAccumulator`]; the job then
     /// ships the per-fold statistics either whole (one `fold` key each,
-    /// the classic path) or — when `FitConfig::gram_block` > 0 — sharded
-    /// into row-block panels under `(fold, panel)` keys, so no shuffle
-    /// payload or merge-tree slot ever exceeds O(d·b) bytes.  The two
-    /// paths are bit-for-bit identical: panel kernels are exact row
-    /// restrictions of the untiled merge, and the fixed merge tree runs
-    /// the same merges per key either way (asserted in
-    /// `tests/integration.rs`).
+    /// the classic path) or — when `FitConfig::gram_block` > 0 — as
+    /// row-block panels under `(fold, panel)` keys.  On the tiled path the
+    /// mapper *accumulates* panel-native (no O(d²) allocation, rank-1
+    /// scatter straight into per-panel scratch), emit *moves* each panel
+    /// (no shard-time triangle copy), no shuffle payload or merge-tree
+    /// slot ever exceeds O(d·b) bytes, and the driver adopts the merged
+    /// panels without concatenating them.  The two paths are bit-for-bit
+    /// identical: panel kernels are exact row restrictions of the untiled
+    /// merge, and the fixed merge tree runs the same merges per key either
+    /// way (asserted in `tests/integration.rs`).
     fn run_stats_job<I: Sync>(
         &self,
         p: usize,
         splits: &[I],
-        feed: impl Fn(&TaskCtx, &I, &mut FoldAccumulator) + Sync,
-    ) -> Result<(FoldStats, JobMetrics)> {
+        feed: impl Fn(&TaskCtx, &I, &mut dyn RowSink) + Sync,
+    ) -> Result<(StatsJob, JobMetrics)> {
         let k = self.cfg.folds;
         let assigner = FoldAssigner::new(k, self.cfg.seed);
         if self.cfg.gram_block == 0 {
+            let proto = SuffStats::new(p);
             let out = run_job(
                 &self.cfg.engine(),
                 splits,
                 |ctx: &TaskCtx, split, em: &mut Emitter<usize, SuffStats>| {
-                    let mut acc = FoldAccumulator::new(k, p, &assigner);
+                    let mut acc = FoldAccumulator::new(k, p, &assigner, &proto);
                     feed(ctx, split, &mut acc);
                     for (fold, stats) in acc.finish() {
                         let rows = stats.count();
@@ -150,18 +199,20 @@ impl Driver {
                     }
                 },
             )?;
-            Self::assemble(k, p, out)
+            let (folds, metrics) = Self::assemble(k, p, out)?;
+            Ok((StatsJob::Packed(folds), metrics))
         } else {
             let layout = TileLayout::new(p + 1, self.cfg.gram_block);
+            let proto = SuffStats::new_tiled(p, self.cfg.gram_block);
             let out = run_job(
                 &self.cfg.engine(),
                 splits,
                 |ctx: &TaskCtx, split, em: &mut Emitter<(usize, usize), StatPanel>| {
-                    let mut acc = FoldAccumulator::new(k, p, &assigner);
+                    let mut acc = FoldAccumulator::new(k, p, &assigner, &proto);
                     feed(ctx, split, &mut acc);
                     for (fold, stats) in acc.finish() {
                         let rows = stats.count();
-                        let mut panels = shard_stats(&stats, layout).into_iter();
+                        let mut panels = stats.into_panels().into_iter();
                         // the head panel carries the fold's record
                         // accounting; the rest ship unaccounted (same rows,
                         // more keys)
@@ -174,13 +225,14 @@ impl Driver {
                     }
                 },
             )?;
-            Self::assemble_tiled(k, p, layout, out)
+            let (folds, metrics) = Self::assemble_tiled(k, p, layout, out)?;
+            Ok((StatsJob::Tiled(folds), metrics))
         }
     }
 
-    /// Map+reduce phase over an in-memory dataset: one pass, k fold
-    /// statistics out.
-    pub fn compute_fold_stats(&self, data: &Dataset) -> Result<(FoldStats, JobMetrics)> {
+    /// The statistics job over an in-memory dataset, in whichever backing
+    /// the config selects (the fit path consumes this directly).
+    fn stats_job(&self, data: &Dataset) -> Result<(StatsJob, JobMetrics)> {
         let splits: Vec<crate::data::dataset::DataBlock<'_>> = data
             .blocks(self.cfg.split_rows)
             .collect();
@@ -191,12 +243,17 @@ impl Driver {
         })
     }
 
-    /// Map+reduce phase over a *streaming* synthetic source: nothing is
-    /// materialized; each task generates its own split deterministically.
-    pub fn compute_fold_stats_stream(
-        &self,
-        spec: &SynthSpec,
-    ) -> Result<(FoldStats, JobMetrics)> {
+    /// Map+reduce phase over an in-memory dataset: one pass, k fold
+    /// statistics out — concatenated to the packed representation (the
+    /// inspection/interop API; `fit` keeps panels resident instead).
+    pub fn compute_fold_stats(&self, data: &Dataset) -> Result<(FoldStats, JobMetrics)> {
+        let (job, metrics) = self.stats_job(data)?;
+        Ok((job.into_packed()?, metrics))
+    }
+
+    /// The statistics job over a streaming synthetic source (backing per
+    /// config; nothing materialized).
+    fn stats_job_stream(&self, spec: &SynthSpec) -> Result<(StatsJob, JobMetrics)> {
         let p = spec.p;
         // split specs: same ground-truth β (spec.seed), independent noise
         // streams (derived seeds), disjoint global row ranges.
@@ -229,15 +286,23 @@ impl Driver {
         })
     }
 
-    /// Map+reduce phase over CSV shard *files*: each task streams its own
-    /// shard in O(block) memory — the HDFS-mapper access pattern.  Row ids
-    /// for fold assignment are (shard index, local row), so the fold split
-    /// is deterministic per shard set regardless of worker scheduling.
-    pub fn compute_fold_stats_csv(
+    /// Map+reduce phase over a *streaming* synthetic source: nothing is
+    /// materialized; each task generates its own split deterministically.
+    /// (Packed inspection API — `fit_stream` keeps panels resident.)
+    pub fn compute_fold_stats_stream(
+        &self,
+        spec: &SynthSpec,
+    ) -> Result<(FoldStats, JobMetrics)> {
+        let (job, metrics) = self.stats_job_stream(spec)?;
+        Ok((job.into_packed()?, metrics))
+    }
+
+    /// The statistics job over CSV shard files (backing per config).
+    fn stats_job_csv(
         &self,
         p: usize,
         shards: &[std::path::PathBuf],
-    ) -> Result<(FoldStats, JobMetrics)> {
+    ) -> Result<(StatsJob, JobMetrics)> {
         anyhow::ensure!(!shards.is_empty(), "no shard files given");
         let splits: Vec<(usize, &std::path::PathBuf)> =
             shards.iter().enumerate().collect();
@@ -256,14 +321,28 @@ impl Driver {
         })
     }
 
+    /// Map+reduce phase over CSV shard *files*: each task streams its own
+    /// shard in O(block) memory — the HDFS-mapper access pattern.  Row ids
+    /// for fold assignment are (shard index, local row), so the fold split
+    /// is deterministic per shard set regardless of worker scheduling.
+    /// (Packed inspection API — `fit_csv_shards` keeps panels resident.)
+    pub fn compute_fold_stats_csv(
+        &self,
+        p: usize,
+        shards: &[std::path::PathBuf],
+    ) -> Result<(FoldStats, JobMetrics)> {
+        let (job, metrics) = self.stats_job_csv(p, shards)?;
+        Ok((job.into_packed()?, metrics))
+    }
+
     /// Algorithm 1, end to end, streaming CSV shards from disk.
     pub fn fit_csv_shards(
         &self,
         p: usize,
         shards: &[std::path::PathBuf],
     ) -> Result<FitReport> {
-        let (folds, metrics) = self.compute_fold_stats_csv(p, shards)?;
-        self.select_and_fit(&folds, metrics)
+        let (job, metrics) = self.stats_job_csv(p, shards)?;
+        self.fit_job(job, metrics)
     }
 
     fn assemble(
@@ -278,17 +357,19 @@ impl Driver {
         Ok((FoldStats::new(folds)?, out.metrics))
     }
 
-    /// Reassemble fold statistics from `(fold, panel)` reduce output.
-    /// Incomplete or header-drifted panel sets are named errors (the fold
-    /// and panel counts in the message), never silently-wrong statistics;
-    /// a fold with no panels at all fails through [`FoldStats::new`]'s
-    /// empty-fold check exactly like the untiled path.
+    /// Adopt fold statistics from `(fold, panel)` reduce output — panels
+    /// stay resident (moved into [`TiledSymMat`] backings, never
+    /// concatenated).  Incomplete or header-drifted panel sets are named
+    /// errors (the fold and panel counts in the message), never
+    /// silently-wrong statistics; a fold with no panels at all fails
+    /// through [`FoldStats::new`]'s empty-fold check exactly like the
+    /// untiled path.
     fn assemble_tiled(
         k: usize,
         p: usize,
         layout: TileLayout,
         out: crate::mapreduce::JobOutput<(usize, usize), StatPanel>,
-    ) -> Result<(FoldStats, JobMetrics)> {
+    ) -> Result<(FoldStats<TiledSymMat>, JobMetrics)> {
         let mut per_fold: Vec<Vec<StatPanel>> = (0..k).map(|_| Vec::new()).collect();
         for ((fold, panel), value) in out.output {
             anyhow::ensure!(
@@ -305,36 +386,87 @@ impl Driver {
         let mut folds = Vec::with_capacity(k);
         for (fold, panels) in per_fold.into_iter().enumerate() {
             if panels.is_empty() {
-                folds.push(SuffStats::new(p));
+                folds.push(SuffStats::new_tiled(p, layout.block()));
                 continue;
             }
             folds.push(
-                assemble_stats(p, layout, &panels)
+                assemble_stats_tiled(p, layout, panels)
                     .map_err(|e| anyhow::anyhow!("fold {fold}: {e}"))?,
             );
         }
         Ok((FoldStats::new(folds)?, out.metrics))
     }
 
-    /// CV phase + final fit from fold statistics (no data access).
-    pub fn select_and_fit(
+    /// CV + final fit on whichever backing the statistics job produced —
+    /// tiled fold statistics go through the generic path untouched, so the
+    /// panels stay resident from map task to solved model.
+    fn fit_job(&self, job: StatsJob, metrics: JobMetrics) -> Result<FitReport> {
+        match job {
+            StatsJob::Packed(folds) => self.select_and_fit(&folds, metrics),
+            StatsJob::Tiled(folds) => self.select_and_fit(&folds, metrics),
+        }
+    }
+
+    /// Descending λ grid per config: an explicit `lambda_ratio` wins;
+    /// otherwise delegate to [`default_grid`]'s glmnet-style auto rule on
+    /// the (sub-)model's own dimensions — shared by the exact and
+    /// screened paths, with the heuristic itself living in `solver::path`.
+    fn lambda_grid_for<S: Scatter>(&self, q: &crate::stats::suffstats::QuadForm<S>) -> Vec<f64> {
+        if self.cfg.lambda_ratio > 0.0 {
+            lambda_grid(
+                q.lambda_max(self.cfg.penalty.alpha),
+                self.cfg.n_lambdas,
+                self.cfg.lambda_ratio,
+            )
+        } else {
+            default_grid(q, self.cfg.penalty, self.cfg.n_lambdas)
+        }
+    }
+
+    /// Assemble the [`FitReport`] pieces every select path shares
+    /// (fold sizes, diagnostics against the full statistics, the one-pass
+    /// invariant).
+    fn finish_report<S: Scatter>(
+        folds: &FoldStats<S>,
+        cv: CvResult,
+        lambdas: Vec<f64>,
+        map_metrics: JobMetrics,
+        model: FittedModel,
+        stat_peak_alloc_bytes: usize,
+        screened: Option<ScreenReport>,
+    ) -> FitReport {
+        let fold_sizes = (0..folds.k()).map(|i| folds.fold(i).count()).collect();
+        let diagnostics = crate::model::diagnostics(folds.total(), &model);
+        FitReport {
+            lambda_opt: model.lambda,
+            model,
+            cv,
+            lambdas,
+            map_metrics,
+            fold_sizes,
+            data_passes: 1,
+            diagnostics,
+            stat_peak_alloc_bytes,
+            screened,
+        }
+    }
+
+    /// CV phase + final fit from fold statistics (no data access), generic
+    /// over the statistic backing: complements, standardized Grams and the
+    /// CD solves run panel-native when the statistics are tiled.  When
+    /// `FitConfig::screen_auto` > 0 and p exceeds it, the driver screens
+    /// first (SIS) and fits on the m×m sub-Gram gathered straight from the
+    /// statistics instead.
+    pub fn select_and_fit<S: Scatter>(
         &self,
-        folds: &FoldStats,
+        folds: &FoldStats<S>,
         map_metrics: JobMetrics,
     ) -> Result<FitReport> {
+        if self.cfg.screen_auto > 0 && folds.p() > self.cfg.screen_auto {
+            return self.select_and_fit_screened(folds, map_metrics);
+        }
         let q_total = folds.total().quad_form();
-        let ratio = if self.cfg.lambda_ratio > 0.0 {
-            self.cfg.lambda_ratio
-        } else if folds.n() as usize > folds.p() {
-            1e-3
-        } else {
-            1e-2
-        };
-        let lambdas = lambda_grid(
-            q_total.lambda_max(self.cfg.penalty.alpha),
-            self.cfg.n_lambdas,
-            ratio,
-        );
+        let lambdas = self.lambda_grid_for(&q_total);
         let cv = cross_validate(folds, self.cfg.penalty, &lambdas, self.cfg.cd)?;
         // final fit at λ_opt on ALL data (see kfold.rs on the line-24 typo)
         let sol = solve_cd(&q_total, self.cfg.penalty, cv.lambda_opt, None, self.cfg.cd);
@@ -346,30 +478,102 @@ impl Driver {
             penalty: self.cfg.penalty,
             n_train: folds.n(),
         };
-        let fold_sizes = (0..folds.k()).map(|i| folds.fold(i).count()).collect();
-        let diagnostics = crate::model::diagnostics(folds.total(), &model);
-        Ok(FitReport {
-            lambda_opt: cv.lambda_opt,
-            model,
+        let stat_peak_alloc_bytes = 8 * folds
+            .max_alloc_doubles()
+            .max(q_total.gram.max_alloc_doubles());
+        Ok(Self::finish_report(
+            folds,
             cv,
             lambdas,
             map_metrics,
-            fold_sizes,
-            data_passes: 1,
-            diagnostics,
-        })
+            model,
+            stat_peak_alloc_bytes,
+            None,
+        ))
+    }
+
+    /// The screen-then-fit path (paper §4): SIS with the screening run
+    /// *inside* the cross-validation, so selection never sees held-out
+    /// data.  For each fold i the predictors are ranked by |marginal
+    /// correlation| on the TRAINING complement `total − s_i` alone
+    /// (m = min(n/log n, `screen_auto`)), the (m+1)-dim sub-statistics of
+    /// train and held-out fold are gathered entry-by-entry straight off
+    /// the stored scatter (panel seams included — the full triangle is
+    /// never assembled), and the warm-started λ path is scored on the
+    /// held-out sub-statistics — exact, because screened-out coefficients
+    /// are identically 0.  The final model screens once on the total
+    /// statistics at λ_opt and embeds back into R^p.
+    fn select_and_fit_screened<S: Scatter>(
+        &self,
+        folds: &FoldStats<S>,
+        map_metrics: JobMetrics,
+    ) -> Result<FitReport> {
+        let p = folds.p();
+        let k = folds.k();
+        let m = default_keep(folds.n(), p).min(self.cfg.screen_auto);
+        // λ grid from the total's screened sub-model (the final-fit scale)
+        let total_report = screen_top_m(folds.total(), m)?;
+        let q_total = folds.total().subset(&total_report.selected).quad_form();
+        let lambdas = self.lambda_grid_for(&q_total);
+        // per-fold screening + sweep: support chosen from the training
+        // complement only (no selection leakage into the CV curve)
+        let n_l = lambdas.len();
+        let mut fold_err = vec![vec![0.0; k]; n_l];
+        let mut nnz = vec![vec![0usize; k]; n_l];
+        let mut train = folds.total().like_empty();
+        let mut sub_peak = q_total.gram.max_alloc_doubles();
+        for i in 0..k {
+            folds.train_into(i, &mut train);
+            let fold_report = screen_top_m(&train, m)?;
+            let sub_train = train.subset(&fold_report.selected);
+            let held = folds.fold(i).subset(&fold_report.selected);
+            let q = sub_train.quad_form();
+            sub_peak = sub_peak
+                .max(sub_train.max_alloc_doubles())
+                .max(held.max_alloc_doubles());
+            let mut warm: Option<Vec<f64>> = None;
+            for (li, &lam) in lambdas.iter().enumerate() {
+                let sol = solve_cd(&q, self.cfg.penalty, lam, warm.as_deref(), self.cfg.cd);
+                let (alpha, beta_sub) = q.to_original_scale(&sol.beta);
+                fold_err[li][i] = held.mse(alpha, &beta_sub);
+                nnz[li][i] = sol.n_active;
+                warm = Some(sol.beta);
+            }
+        }
+        let cv = crate::cv::select::summarize(&lambdas, fold_err, nnz)?;
+        // final fit: screen on ALL data, solve at λ_opt, embed into R^p
+        let sol = solve_cd(&q_total, self.cfg.penalty, cv.lambda_opt, None, self.cfg.cd);
+        let (alpha, beta_sub) = q_total.to_original_scale(&sol.beta);
+        let beta = embed_beta(p, &total_report.selected, &beta_sub);
+        let model = FittedModel {
+            alpha,
+            beta,
+            lambda: cv.lambda_opt,
+            penalty: self.cfg.penalty,
+            n_train: folds.n(),
+        };
+        let stat_peak_alloc_bytes = 8 * folds.max_alloc_doubles().max(sub_peak);
+        Ok(Self::finish_report(
+            folds,
+            cv,
+            lambdas,
+            map_metrics,
+            model,
+            stat_peak_alloc_bytes,
+            Some(total_report),
+        ))
     }
 
     /// Algorithm 1, end to end, over an in-memory dataset.
     pub fn fit(&self, data: &Dataset) -> Result<FitReport> {
-        let (folds, metrics) = self.compute_fold_stats(data)?;
-        self.select_and_fit(&folds, metrics)
+        let (job, metrics) = self.stats_job(data)?;
+        self.fit_job(job, metrics)
     }
 
     /// Algorithm 1, end to end, over a streaming synthetic source.
     pub fn fit_stream(&self, spec: &SynthSpec) -> Result<FitReport> {
-        let (folds, metrics) = self.compute_fold_stats_stream(spec)?;
-        self.select_and_fit(&folds, metrics)
+        let (job, metrics) = self.stats_job_stream(spec)?;
+        self.fit_job(job, metrics)
     }
 }
 
@@ -519,6 +723,11 @@ mod tests {
         let d = 6 + 1;
         let base = small_cfg();
         let untiled = Driver::new(base).fit(&data).unwrap();
+        assert_eq!(
+            untiled.stat_peak_alloc_bytes,
+            8 * (d * (d + 1) / 2),
+            "packed path peak = one packed triangle"
+        );
         for block in [1usize, 3, d, 100] {
             let cfg = FitConfig { gram_block: block, ..base };
             let report = Driver::new(cfg).fit(&data).unwrap();
@@ -534,7 +743,44 @@ mod tests {
                 "b={block}: payload {} over bound {bound}",
                 report.map_metrics.max_payload_bytes
             );
+            // panels stayed resident end-to-end: the driver-side peak is
+            // one panel (or the O(d) header), never the full triangle
+            assert!(
+                report.stat_peak_alloc_bytes <= 8 * layout.max_panel_len().max(d),
+                "b={block}: driver peak {} over the panel bound",
+                report.stat_peak_alloc_bytes
+            );
         }
+    }
+
+    #[test]
+    fn screen_auto_engages_above_threshold_and_embeds_back() {
+        let spec = SynthSpec::sparse_linear(3000, 30, 0.1, 77);
+        let data = generate(&spec);
+        let cfg = FitConfig { screen_auto: 16, ..small_cfg() };
+        let report = Driver::new(cfg).fit(&data).unwrap();
+        let s = report.screened.as_ref().expect("p=30 > 16 must screen");
+        assert!(s.selected.len() <= 16);
+        let truth = spec.true_beta();
+        for j in 0..30 {
+            if truth[j] != 0.0 {
+                assert!(s.selected.contains(&j), "signal {j} screened out");
+                assert!((report.model.beta[j] - truth[j]).abs() < 0.3, "beta[{j}]");
+            }
+            if !s.selected.contains(&j) {
+                assert_eq!(report.model.beta[j], 0.0, "screened-out beta must be 0");
+            }
+        }
+        // the screened fit is backing-independent: tiled statistics gather
+        // the same sub-Gram through panel seams
+        let tiled = Driver::new(FitConfig { gram_block: 4, ..cfg }).fit(&data).unwrap();
+        assert_eq!(report.model.beta, tiled.model.beta);
+        assert_eq!(report.lambda_opt, tiled.lambda_opt);
+        // under the threshold the exact full-p path runs
+        let exact = Driver::new(FitConfig { screen_auto: 64, ..small_cfg() })
+            .fit(&data)
+            .unwrap();
+        assert!(exact.screened.is_none());
     }
 
     #[test]

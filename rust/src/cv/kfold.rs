@@ -7,24 +7,29 @@
 
 use anyhow::{bail, Result};
 
-use crate::stats::SuffStats;
+use crate::stats::{Scatter, SuffStats, SymMat, TiledSymMat};
 
-/// The k chunk statistics plus their precomputed total.
+/// The k chunk statistics plus their precomputed total, generic over the
+/// scatter backing: packed triangles by default, or row-block panels
+/// ([`TiledSymMat`]) so the whole CV phase — complements, Grams, solves —
+/// runs without any single O(p²) allocation.  Both backings produce
+/// bit-identical fold algebra (the kernels are row restrictions of each
+/// other).
 #[derive(Debug, Clone)]
-pub struct FoldStats {
-    folds: Vec<SuffStats>,
-    total: SuffStats,
+pub struct FoldStats<S: Scatter = SymMat> {
+    folds: Vec<SuffStats<S>>,
+    total: SuffStats<S>,
 }
 
-impl FoldStats {
+impl<S: Scatter> FoldStats<S> {
     /// Build from the reduce output. Requires ≥2 folds, each non-trivial
     /// (every fold needs ≥2 rows to standardize its complement and score).
-    pub fn new(folds: Vec<SuffStats>) -> Result<Self> {
+    pub fn new(folds: Vec<SuffStats<S>>) -> Result<Self> {
         if folds.len() < 2 {
             bail!("cross validation needs k >= 2 folds, got {}", folds.len());
         }
         let p = folds[0].p();
-        let mut total = SuffStats::new(p);
+        let mut total = folds[0].like_empty();
         for (i, f) in folds.iter().enumerate() {
             if f.p() != p {
                 bail!("fold {i} has p={}, expected {p}", f.p());
@@ -52,12 +57,12 @@ impl FoldStats {
     /// Statistics of all data (Algorithm 1 line 24 uses this for the final
     /// fit; note the paper's line 24 sums k−1 chunks — a typo; summing all
     /// k is the standard final refit and what we do).
-    pub fn total(&self) -> &SuffStats {
+    pub fn total(&self) -> &SuffStats<S> {
         &self.total
     }
 
     /// The held-out fold i.
-    pub fn fold(&self, i: usize) -> &SuffStats {
+    pub fn fold(&self, i: usize) -> &SuffStats<S> {
         &self.folds[i]
     }
 
@@ -65,16 +70,37 @@ impl FoldStats {
     ///
     /// Allocates a fresh statistic; the CV sweep should prefer
     /// [`FoldStats::train_into`] with one reused scratch.
-    pub fn train_for(&self, i: usize) -> SuffStats {
+    pub fn train_for(&self, i: usize) -> SuffStats<S> {
         self.total.sub(&self.folds[i])
     }
 
     /// Training statistics for fold i written into a caller-provided
-    /// scratch (`SuffStats::new(p())` once, reused across all k folds and
-    /// every sweep) — the allocation-free complement path.  Bit-identical
-    /// to [`FoldStats::train_for`].
-    pub fn train_into(&self, i: usize, scratch: &mut SuffStats) {
+    /// scratch ([`SuffStats::like_empty`] of the total, reused across all
+    /// k folds and every sweep) — the allocation-free complement path.
+    /// Bit-identical to [`FoldStats::train_for`].
+    pub fn train_into(&self, i: usize, scratch: &mut SuffStats<S>) {
         self.total.sub_into(&self.folds[i], scratch);
+    }
+
+    /// Largest single contiguous statistic allocation held across the
+    /// folds and the total, in f64s — the CV-phase resident-bytes bound
+    /// (tri_len(p+1) packed; ≤ (p+1)·b tiled).
+    pub fn max_alloc_doubles(&self) -> usize {
+        self.folds
+            .iter()
+            .map(|f| f.max_alloc_doubles())
+            .chain(std::iter::once(self.total.max_alloc_doubles()))
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+impl FoldStats<TiledSymMat> {
+    /// Concatenate every fold's panels into packed statistics (the
+    /// inspection/interop path — bit-exact re-slicing; the fit path never
+    /// calls this).
+    pub fn to_packed(&self) -> Result<FoldStats<SymMat>> {
+        FoldStats::new(self.folds.iter().map(|f| f.to_packed()).collect())
     }
 }
 

@@ -2,7 +2,9 @@
 //! paper claims as its distinguishing feature: model selection happens
 //! *inside* the single pass, because fold statistics are additive.
 //!
-//! * [`kfold`] — fold statistics algebra: `train_i = total − s_i` in O(p²).
+//! * [`kfold`] — fold statistics algebra: `train_i = total − s_i` in O(p²)
+//!   arithmetic (panel-backed — largest allocation O(p·b) — when the
+//!   statistics are tiled; both paths bit-identical).
 //! * [`select`] — the λ grid sweep: per (fold, λ) fit on train statistics,
 //!   score on the held-out fold's statistics (exact MSE, no data access),
 //!   pick λ_opt (and the 1-SE alternative).

@@ -54,8 +54,9 @@ impl crate::mapreduce::Mergeable for FoldErrors {
 
 /// Parallel CV: same contract (and same output) as
 /// [`super::select::cross_validate`], executed as a second MapReduce job.
-pub fn cross_validate_parallel(
-    folds: &FoldStats,
+/// Generic over the statistic backing like the serial sweep.
+pub fn cross_validate_parallel<S: crate::stats::Scatter>(
+    folds: &FoldStats<S>,
     penalty: Penalty,
     lambdas: &[f64],
     settings: CdSettings,

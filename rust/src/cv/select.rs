@@ -115,9 +115,12 @@ pub(crate) fn summarize(
     })
 }
 
-/// Run k-fold CV over a descending λ grid.
-pub fn cross_validate(
-    folds: &FoldStats,
+/// Run k-fold CV over a descending λ grid.  Generic over the statistic
+/// backing: on panel-tiled fold statistics the complements, standardized
+/// Grams and CD solves all stay panel-backed (largest allocation O(d·b)),
+/// and the CV matrix is bit-for-bit the packed one.
+pub fn cross_validate<S: crate::stats::Scatter>(
+    folds: &FoldStats<S>,
     penalty: Penalty,
     lambdas: &[f64],
     settings: CdSettings,
@@ -130,11 +133,11 @@ pub fn cross_validate(
     let k = folds.k();
     let n_l = lambdas.len();
     // fold-major sweep: one quad_form per fold, warm starts along λ; the
-    // O(p²) fold complement lands in ONE scratch statistic reused across
-    // all k folds (no per-fold allocation)
+    // fold complement lands in ONE scratch statistic reused across all k
+    // folds (no per-fold allocation, and panel-backed when tiled)
     let mut fold_err = vec![vec![0.0; k]; n_l];
     let mut nnz = vec![vec![0usize; k]; n_l];
-    let mut train = crate::stats::SuffStats::new(folds.p());
+    let mut train = folds.total().like_empty();
     for i in 0..k {
         folds.train_into(i, &mut train);
         let q = train.quad_form();

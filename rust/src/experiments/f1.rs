@@ -70,19 +70,10 @@ mod tests {
 
     #[test]
     fn f1_throughput_roughly_flat() {
+        use crate::experiments::{find_row, parse_after};
         let out = run(ExpOptions { quick: true, workers: 4 }).unwrap();
-        let flat: f64 = out
-            .lines()
-            .find(|l| l.contains("throughput flatness"))
-            .unwrap()
-            .split("(min/max): ")
-            .nth(1)
-            .unwrap()
-            .split_whitespace()
-            .next()
-            .unwrap()
-            .parse()
-            .unwrap();
+        let line = find_row(&out, "throughput flatness").unwrap();
+        let flat: f64 = parse_after(line, "(min/max): ").unwrap();
         assert!(flat > 0.3, "throughput should be roughly flat, min/max={flat}");
     }
 }

@@ -77,9 +77,19 @@ mod tests {
 
     #[test]
     fn f2_runs_and_map_grows_with_p() {
+        use crate::experiments::{find_row_prefix, parse_cell};
         let out = run(ExpOptions { quick: true, workers: 4 }).unwrap();
         assert!(out.contains("## F2"));
         // at least 4 data rows
         assert!(out.lines().filter(|l| l.starts_with("| ")).count() >= 5);
+        // every p doubling row parses (named errors on format drift): the
+        // p column is an integer and the last row's doubling ratio a float
+        for p in [8usize, 16, 32, 64] {
+            let row = find_row_prefix(&out, &format!("| {p} ")).unwrap();
+            assert_eq!(parse_cell::<usize>(row, 1).unwrap(), p);
+        }
+        let last = find_row_prefix(&out, "| 64 ").unwrap();
+        let ratio: f64 = parse_cell(last, 3).unwrap();
+        assert!(ratio > 0.5, "map time should grow with p, ratio={ratio}");
     }
 }

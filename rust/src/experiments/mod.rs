@@ -29,7 +29,61 @@ pub mod t4;
 pub mod t5;
 pub mod t6;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
+
+/// Find the first line of a rendered report containing `needle`.  A named
+/// error carrying the needle and the report — so a drifted table format
+/// fails with what was being looked for, not a bare `unwrap` panic.
+pub fn find_row<'a>(out: &'a str, needle: &str) -> Result<&'a str> {
+    out.lines()
+        .find(|l| l.contains(needle))
+        .with_context(|| format!("no line containing {needle:?} in report:\n{out}"))
+}
+
+/// Like [`find_row`] but anchored at the start of the line — for table
+/// rows whose first cell is the discriminator (e.g. `| 4 |`), where a
+/// substring match could hit another column.
+pub fn find_row_prefix<'a>(out: &'a str, prefix: &str) -> Result<&'a str> {
+    out.lines()
+        .find(|l| l.starts_with(prefix))
+        .with_context(|| format!("no line starting with {prefix:?} in report:\n{out}"))
+}
+
+/// Parse cell `col` (0-based across `'|'` separators) of a markdown table
+/// row.  Errors name the column, the cell text, and the offending line —
+/// a format drift fails with the line, not a panic deep in `unwrap`s.
+pub fn parse_cell<T>(line: &str, col: usize) -> Result<T>
+where
+    T: std::str::FromStr,
+    T::Err: std::error::Error + Send + Sync + 'static,
+{
+    let cell = line
+        .split('|')
+        .nth(col)
+        .with_context(|| format!("row has no column {col}: {line:?}"))?
+        .trim();
+    cell.parse::<T>()
+        .with_context(|| format!("column {col} ({cell:?}) of row {line:?} did not parse"))
+}
+
+/// Parse the first whitespace-delimited token after `marker` in `line`
+/// (for non-table summary lines like `flatness (min/max): 0.93`).
+pub fn parse_after<T>(line: &str, marker: &str) -> Result<T>
+where
+    T: std::str::FromStr,
+    T::Err: std::error::Error + Send + Sync + 'static,
+{
+    let rest = line
+        .split(marker)
+        .nth(1)
+        .with_context(|| format!("no {marker:?} in {line:?}"))?;
+    let tok = rest
+        .split_whitespace()
+        .next()
+        .with_context(|| format!("nothing after {marker:?} in {line:?}"))?;
+    tok.parse::<T>()
+        .with_context(|| format!("token {tok:?} after {marker:?} in {line:?} did not parse"))
+}
 
 /// Global experiment options.
 #[derive(Debug, Clone, Copy)]
@@ -102,5 +156,27 @@ mod tests {
         assert_eq!(q.scale(5), 1000);
         let f = ExpOptions::default();
         assert_eq!(f.scale(100_000), 100_000);
+    }
+
+    #[test]
+    fn table_parsers_name_the_offending_line() {
+        let table = "| sys | jobs |\n|---|---|\n| ADMM (3 iters) | 42 |\n| 4 | 1.5 |\n";
+        let row = find_row(table, "ADMM").unwrap();
+        assert_eq!(parse_cell::<usize>(row, 2).unwrap(), 42);
+        let row4 = find_row_prefix(table, "| 4 ").unwrap();
+        assert_eq!(parse_cell::<f64>(row4, 2).unwrap(), 1.5);
+        // drifted format → error carries the line, the column, the cell
+        let err = format!("{:#}", parse_cell::<usize>(row, 1).unwrap_err());
+        assert!(err.contains("ADMM") && err.contains("column 1"), "{err}");
+        let err = format!("{:#}", parse_cell::<usize>(row, 9).unwrap_err());
+        assert!(err.contains("no column 9"), "{err}");
+        let err = format!("{:#}", find_row(table, "PSGD").unwrap_err());
+        assert!(err.contains("PSGD"), "{err}");
+        // summary-line token parsing
+        let line = "throughput flatness (min/max): 0.93 — linear";
+        let v: f64 = parse_after(line, "(min/max): ").unwrap();
+        assert_eq!(v, 0.93);
+        let err = format!("{:#}", parse_after::<f64>(line, "missing: ").unwrap_err());
+        assert!(err.contains("missing"), "{err}");
     }
 }

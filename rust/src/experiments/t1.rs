@@ -123,18 +123,13 @@ mod tests {
 
     #[test]
     fn t1_runs_quick_and_shows_job_gap() {
+        use crate::experiments::{find_row, parse_cell};
         let out = run(ExpOptions { quick: true, workers: 4 }).unwrap();
         assert!(out.contains("one-pass"));
-        assert!(out.contains("ADMM"));
-        // the headline: ADMM needs >> 1 job
-        let admm_line = out.lines().find(|l| l.contains("ADMM")).unwrap();
-        let jobs: usize = admm_line
-            .split('|')
-            .nth(2)
-            .unwrap()
-            .trim()
-            .parse()
-            .unwrap();
+        // the headline: ADMM needs >> 1 job (a drifted table fails with
+        // the offending line in the message, not an anonymous unwrap)
+        let admm_line = find_row(&out, "ADMM").unwrap();
+        let jobs: usize = parse_cell(admm_line, 2).unwrap();
         assert!(jobs > 5, "ADMM jobs = {jobs}");
     }
 }

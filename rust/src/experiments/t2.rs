@@ -94,7 +94,7 @@ mod tests {
         let line = out
             .lines()
             .find(|l| l.contains(system) && l.contains(pen))
-            .unwrap();
-        line.split('|').nth(4).unwrap().trim().parse().unwrap()
+            .unwrap_or_else(|| panic!("no row for {system}/{pen} in:\n{out}"));
+        crate::experiments::parse_cell(line, 4).unwrap()
     }
 }

@@ -85,9 +85,10 @@ mod tests {
 
     #[test]
     fn t5_runs_and_reports_sane_speedups() {
+        use crate::experiments::{find_row_prefix, parse_cell};
         let out = run(ExpOptions { quick: true, workers: 4 }).unwrap();
-        let four = out.lines().find(|l| l.starts_with("| 4 ")).unwrap();
-        let speedup: f64 = four.split('|').nth(3).unwrap().trim().parse().unwrap();
+        let four = find_row_prefix(&out, "| 4 ").unwrap();
+        let speedup: f64 = parse_cell(four, 3).unwrap();
         // on a single-core container the best possible is ~1.0; on multicore
         // it should exceed 1.  either way it must not collapse.
         let cores = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);

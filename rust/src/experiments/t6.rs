@@ -80,11 +80,12 @@ mod tests {
 
     #[test]
     fn t6_survives_heavy_chaos_bit_exact() {
+        use crate::experiments::{find_row_prefix, parse_cell};
         let out = run(ExpOptions { quick: true, workers: 4 }).unwrap();
         assert!(out.contains("bit-exact"));
         // the 0.5 crash row must show real retries
-        let heavy = out.lines().find(|l| l.starts_with("| 0.5")).unwrap();
-        let retries: usize = heavy.split('|').nth(3).unwrap().trim().parse().unwrap();
+        let heavy = find_row_prefix(&out, "| 0.5").unwrap();
+        let retries: usize = parse_cell(heavy, 3).unwrap();
         assert!(retries > 0, "0.5 crash rate must cause retries: {heavy}");
     }
 }

@@ -19,17 +19,25 @@
 //!
 //! ## Quickstart
 //!
-//! ```no_run
+//! This example runs under `cargo test` (it is a doctest, not prose), so
+//! the public entry point below is guarded by CI:
+//!
+//! ```
 //! use plrmr::config::FitConfig;
 //! use plrmr::coordinator::Driver;
 //! use plrmr::data::synth::{SynthSpec, generate};
 //! use plrmr::solver::penalty::Penalty;
 //!
-//! let data = generate(&SynthSpec::sparse_linear(10_000, 32, 0.1, 42));
+//! let data = generate(&SynthSpec::sparse_linear(2_000, 8, 0.25, 42));
 //! let cfg = FitConfig::default()
 //!     .with_penalty(Penalty::lasso())
-//!     .with_folds(10);
+//!     .with_folds(5)
+//!     .with_lambdas(20)
+//!     .with_workers(2);
 //! let fit = Driver::new(cfg).fit(&data).unwrap();
+//! assert_eq!(fit.data_passes, 1);          // the paper's one-pass claim
+//! assert_eq!(fit.model.beta.len(), 8);
+//! assert!(fit.lambda_opt > 0.0);
 //! println!("lambda_opt = {}, beta = {:?}", fit.lambda_opt, fit.model.beta);
 //! ```
 //!

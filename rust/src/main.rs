@@ -45,8 +45,8 @@ commands:
   gen-data   --n N --p P [--density D] [--seed S] [--offset C] --out FILE [--shards K]
   fit        (--csv FILE[,FILE...] | --synth N,P[,DENSITY[,SEED]])
              [--penalty lasso|ridge|elastic_net:A] [--folds K] [--lambdas L]
-             [--workers W] [--seed S] [--gram-block B] [--config FILE]
-             [--out MODEL] [--curve]
+             [--workers W] [--seed S] [--gram-block B] [--screen-auto P]
+             [--config FILE] [--out MODEL] [--curve]
   predict    --model MODEL --csv FILE [--out FILE]
   experiments <t1|t2|t3|t4|t5|f1|f2|f3|all> [--quick] [--workers W]
   inspect-artifacts [--dir DIR]
@@ -180,8 +180,13 @@ fn build_config(f: &BTreeMap<String, String>) -> Result<FitConfig> {
         cfg.seed = s.parse()?;
     }
     if let Some(b) = f.get("gram-block") {
-        // tiled statistics: (fold, panel) reduce keys, O(d·b) payloads
+        // tiled statistics: (fold, panel) reduce keys, O(d·b) payloads,
+        // panel-native CV/solve — no O(p²) allocation on the fit path
         cfg.gram_block = b.parse()?;
+    }
+    if let Some(t) = f.get("screen-auto") {
+        // screen-then-fit threshold on p (0 disables auto-screening)
+        cfg.screen_auto = t.parse()?;
     }
     cfg.validate()?;
     Ok(cfg)
@@ -228,6 +233,18 @@ fn cmd_fit(args: &[String]) -> Result<()> {
         );
     }
     println!("fold sizes: {:?}", report.fold_sizes);
+    println!(
+        "peak resident statistic allocation: {}",
+        plrmr::bench::fmt_bytes(report.stat_peak_alloc_bytes)
+    );
+    if let Some(s) = &report.screened {
+        println!(
+            "screen-auto engaged: kept {} of {} predictors (cutoff |corr| = {})",
+            s.selected.len(),
+            report.model.beta.len(),
+            sig(s.threshold, 3),
+        );
+    }
     if f.contains_key("curve") {
         println!("\n{}", cv_report(&report.cv));
     }

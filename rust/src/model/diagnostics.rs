@@ -3,7 +3,7 @@
 //! summary a regression report needs.
 
 use crate::model::fitted::FittedModel;
-use crate::stats::SuffStats;
+use crate::stats::{Scatter, SuffStats};
 use crate::util::table::{sig, Table};
 
 /// Goodness-of-fit summary for (model, statistics).
@@ -22,8 +22,9 @@ pub struct Diagnostics {
     pub y_var: f64,
 }
 
-/// Compute diagnostics of `model` against the data behind `stats`.
-pub fn diagnostics(stats: &SuffStats, model: &FittedModel) -> Diagnostics {
+/// Compute diagnostics of `model` against the data behind `stats` (either
+/// statistic backing — reads only).
+pub fn diagnostics<S: Scatter>(stats: &SuffStats<S>, model: &FittedModel) -> Diagnostics {
     assert_eq!(stats.p(), model.p(), "model/stats width mismatch");
     let n = stats.count();
     assert!(n >= 2, "need at least 2 observations");
@@ -43,7 +44,7 @@ pub fn diagnostics(stats: &SuffStats, model: &FittedModel) -> Diagnostics {
 
 /// Render a regression report: fit summary + nonzero coefficient table
 /// with standardized effect sizes (βⱼ·sdⱼ, comparable across features).
-pub fn report(stats: &SuffStats, model: &FittedModel) -> String {
+pub fn report<S: Scatter>(stats: &SuffStats<S>, model: &FittedModel) -> String {
     let d = diagnostics(stats, model);
     let w = stats.moments().weight();
     let mut t = Table::new(vec!["coef", "value", "std effect"]);

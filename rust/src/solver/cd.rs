@@ -17,6 +17,7 @@
 //! warm starts (see [`super::path`]) fast.
 
 use crate::stats::suffstats::QuadForm;
+use crate::stats::Scatter;
 
 use super::penalty::{soft_threshold, Penalty};
 
@@ -52,9 +53,10 @@ pub struct CdSolution {
     pub objective: f64,
 }
 
-/// Objective value f(β) for the standardized problem.  The Gram is packed
-/// symmetric; `row_dot` walks each symmetric row without materializing it.
-pub fn objective(q: &QuadForm, penalty: Penalty, lambda: f64, beta: &[f64]) -> f64 {
+/// Objective value f(β) for the standardized problem.  The Gram is
+/// symmetric in either backing; `row_dot` walks each symmetric row
+/// (across panel seams when tiled) without materializing it.
+pub fn objective<S: Scatter>(q: &QuadForm<S>, penalty: Penalty, lambda: f64, beta: &[f64]) -> f64 {
     let p = q.p;
     let mut quad = 0.0;
     for i in 0..p {
@@ -69,7 +71,12 @@ pub fn objective(q: &QuadForm, penalty: Penalty, lambda: f64, beta: &[f64]) -> f
 /// For the elastic net with g = Gβ − c + λ(1−α)β:
 ///   βⱼ ≠ 0 ⇒ |gⱼ + λα·sign(βⱼ)| should be 0
 ///   βⱼ = 0 ⇒ |gⱼ| ≤ λα
-pub fn kkt_violation(q: &QuadForm, penalty: Penalty, lambda: f64, beta: &[f64]) -> f64 {
+pub fn kkt_violation<S: Scatter>(
+    q: &QuadForm<S>,
+    penalty: Penalty,
+    lambda: f64,
+    beta: &[f64],
+) -> f64 {
     let p = q.p;
     let la = lambda * penalty.alpha;
     let lr = lambda * (1.0 - penalty.alpha);
@@ -87,8 +94,11 @@ pub fn kkt_violation(q: &QuadForm, penalty: Penalty, lambda: f64, beta: &[f64]) 
 }
 
 /// Solve by cyclic coordinate descent, warm-started from `beta0` if given.
-pub fn solve_cd(
-    q: &QuadForm,
+/// Generic over the Gram backing: on a tiled Gram every gather/axpy runs
+/// across panel seams with the identical index order, so the solution is
+/// bit-for-bit the packed one (property-tested in `tests/integration.rs`).
+pub fn solve_cd<S: Scatter>(
+    q: &QuadForm<S>,
     penalty: Penalty,
     lambda: f64,
     beta0: Option<&[f64]>,

@@ -168,9 +168,143 @@ pub fn cholesky_packed_blocked(a: &SymMat, block: usize, eps: f64) -> Result<Vec
 /// Packed Cholesky straight off tiled storage: the same recurrence reading
 /// A through [`TiledSymMat::get`] across panel seams — no assembled
 /// triangle needed on the input side.  Bit-identical to
-/// [`cholesky_packed`] of the concatenated panels.
+/// [`cholesky_packed`] of the concatenated panels.  (The *output* is the
+/// flat packed factor; [`cholesky_tiled_factor`] is the variant whose
+/// output stays panel-tiled too.)
 pub fn cholesky_tiled(a: &TiledSymMat, eps: f64) -> Result<Vec<f64>, String> {
     cholesky_rows(a.n(), |j, i| a.get(j, i), a.n().max(1), eps)
+}
+
+/// A lower-triangular factor stored as row-block panels of the packed
+/// *lower* layout (row i at offset i(i+1)/2, rows contiguous): the same
+/// doubles as the flat factor from [`cholesky_packed`], but no single
+/// allocation larger than the last panel's O(n·b) — the ridge solve's
+/// side of the "no O(p²) allocation on the fit path" contract.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TiledLowerTri {
+    n: usize,
+    block: usize,
+    panels: Vec<Vec<f64>>,
+}
+
+impl TiledLowerTri {
+    /// Matrix dimension n.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Rows per panel.
+    pub fn block(&self) -> usize {
+        self.block
+    }
+
+    /// Entry (i, j) of the lower factor, j ≤ i.
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(j <= i && i < self.n);
+        let t = i / self.block;
+        self.panels[t][lo_row(i) - lo_row(t * self.block) + j]
+    }
+
+    /// Contiguous row i: entries (i, 0..=i).
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        let t = i / self.block;
+        let o = lo_row(i) - lo_row(t * self.block);
+        &self.panels[t][o..o + i + 1]
+    }
+
+    /// Concatenate the panels into the flat packed-lower factor (interop /
+    /// test pinning).
+    pub fn to_flat(&self) -> Vec<f64> {
+        let mut out = Vec::with_capacity(lo_row(self.n));
+        for panel in &self.panels {
+            out.extend_from_slice(panel);
+        }
+        out
+    }
+
+    /// Largest panel, in doubles (for the last row-block this is ≤ n·b).
+    pub fn max_alloc_doubles(&self) -> usize {
+        self.panels.iter().map(Vec::len).max().unwrap_or(0)
+    }
+}
+
+/// Cholesky off tiled storage into a *tiled* lower factor: identical
+/// recurrence and scalar order as [`cholesky_packed`]'s shared
+/// `cholesky_rows` loop (k ascending within each row pair), so the factor
+/// is bit-for-bit the flat one — but neither the input nor the output
+/// ever exists as a single O(n²) allocation.
+pub fn cholesky_tiled_factor(a: &TiledSymMat, eps: f64) -> Result<TiledLowerTri, String> {
+    let n = a.n();
+    let block = a.layout().block().clamp(1, n.max(1));
+    let n_panels = n.div_ceil(block);
+    let panel_len = |t: usize| {
+        let r0 = t * block;
+        let r1 = ((t + 1) * block).min(n);
+        lo_row(r1) - lo_row(r0)
+    };
+    let mut panels: Vec<Vec<f64>> = (0..n_panels).map(|t| vec![0.0; panel_len(t)]).collect();
+    for i in 0..n {
+        let ti = i / block;
+        let oi = lo_row(i) - lo_row(ti * block);
+        for j in 0..=i {
+            let tj = j / block;
+            let oj = lo_row(j) - lo_row(tj * block);
+            let mut s = a.get(j, i);
+            // rows i and j are contiguous within their panels; the k-loop
+            // order is exactly cholesky_rows' (bit-determinism pin)
+            if ti == tj {
+                let pan = &panels[ti];
+                for k in 0..j {
+                    s -= pan[oi + k] * pan[oj + k];
+                }
+            } else {
+                let (ri, rj) = (&panels[ti], &panels[tj]);
+                for k in 0..j {
+                    s -= ri[oi + k] * rj[oj + k];
+                }
+            }
+            if i == j {
+                if s <= eps {
+                    return Err(format!("cholesky: pivot {s:.3e} at {i} (not PD)"));
+                }
+                panels[ti][oi + i] = s.sqrt();
+            } else {
+                let piv = panels[tj][oj + j];
+                panels[ti][oi + j] = s / piv;
+            }
+        }
+    }
+    Ok(TiledLowerTri { n, block, panels })
+}
+
+/// Solve L·Lᵀ·x = b for a tiled lower factor — the exact loop order of
+/// [`chol_solve_packed`] (forward over contiguous rows, backward down
+/// columns across panel seams), so the solution is bit-identical.
+pub fn chol_solve_tiled(l: &TiledLowerTri, b: &[f64]) -> Vec<f64> {
+    let n = b.len();
+    assert_eq!(l.n(), n, "tiled factor dimension mismatch");
+    // forward: L·z = b
+    let mut z = vec![0.0; n];
+    for i in 0..n {
+        let row = l.row(i);
+        let mut s = b[i];
+        for k in 0..i {
+            s -= row[k] * z[k];
+        }
+        z[i] = s / row[i];
+    }
+    // backward: Lᵀ·x = z
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = z[i];
+        for k in (i + 1)..n {
+            s -= l.at(k, i) * x[k];
+        }
+        x[i] = s / l.at(i, i);
+    }
+    x
 }
 
 /// Solve L·Lᵀ·x = b given the packed lower factor from [`cholesky_packed`].
@@ -348,6 +482,71 @@ mod tests {
         let sym = SymMat::from_dense(2, &[1.0, 2.0, 2.0, 1.0]);
         assert!(cholesky_tiled(&TiledSymMat::from_packed(&sym, 1), 0.0).is_err());
         assert!(cholesky_packed_blocked(&sym, 1, 0.0).is_err());
+        assert!(cholesky_tiled_factor(&TiledSymMat::from_packed(&sym, 1), 0.0).is_err());
+    }
+
+    #[test]
+    fn panel_seam_kernels_bit_pinned_at_adversarial_shapes() {
+        // the solver kernels the tiled fit path leans on — symmetric row
+        // gather (row_dot), incremental axpy, and the fully-tiled Cholesky
+        // factor + solves — pinned bit-for-bit against the packed unblocked
+        // kernels at the shapes that stress panel seams: b=1 (every row its
+        // own panel), b=p−1 (one seam, asymmetric), b=p and b≫p (single
+        // panel / degenerate tiling), and p=1 (trivial matrix).
+        let mut rng = Rng::seed_from(23);
+        for p in [1usize, 2, 5, 8, 13] {
+            let a = random_spd(&mut rng, p);
+            let sym = SymMat::from_dense(p, &a);
+            let x: Vec<f64> = (0..p).map(|_| rng.normal()).collect();
+            let b: Vec<f64> = (0..p).map(|_| rng.normal()).collect();
+            let flat_l = cholesky_packed(&sym, 0.0).expect("spd");
+            let flat_x = chol_solve_packed(&flat_l, &b);
+            let mut blocks = vec![1usize, p, p + 17];
+            if p > 1 {
+                blocks.push(p - 1);
+            }
+            for block in blocks {
+                let tiled = TiledSymMat::from_packed(&sym, block);
+                if block >= p {
+                    let layout = tiled.layout();
+                    assert_eq!(layout.n_panels(), 1, "b≥p must degenerate to one panel");
+                }
+                // row gather / axpy across every seam
+                for j in 0..p {
+                    assert_eq!(
+                        tiled.row_dot(j, &x).to_bits(),
+                        sym.row_dot(j, &x).to_bits(),
+                        "row_dot p={p} b={block} j={j}"
+                    );
+                    let mut got = x.clone();
+                    let mut want = x.clone();
+                    tiled.axpy_row_into(j, -1.25, &mut got);
+                    sym.axpy_row_into(j, -1.25, &mut want);
+                    for i in 0..p {
+                        assert_eq!(got[i].to_bits(), want[i].to_bits(), "axpy p={p} b={block}");
+                    }
+                }
+                // fully tiled factor: same bits as the flat packed factor,
+                // and its largest panel respects the O(p·b) bound
+                let lt = cholesky_tiled_factor(&tiled, 0.0).expect("spd");
+                let flat = lt.to_flat();
+                assert_eq!(flat.len(), flat_l.len());
+                for (k, (t, r)) in flat.iter().zip(&flat_l).enumerate() {
+                    assert_eq!(t.to_bits(), r.to_bits(), "factor p={p} b={block} k={k}");
+                }
+                assert!(
+                    lt.max_alloc_doubles() <= block.min(p) * p,
+                    "factor panel {} over {}·{} bound (p={p})",
+                    lt.max_alloc_doubles(),
+                    block.min(p),
+                    p
+                );
+                let xt = chol_solve_tiled(&lt, &b);
+                for i in 0..p {
+                    assert_eq!(xt[i].to_bits(), flat_x[i].to_bits(), "solve p={p} b={block}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -10,9 +10,11 @@
 //!   Hastie & Tibshirani \[2\]) with active-set iteration and warm starts;
 //!   the paper's chosen solver and our reference implementation.
 //! * [`ridge`] — closed-form ridge via Cholesky (exactness cross-check and
-//!   the α=0 fast path).
+//!   the α=0 fast path); `solve_ridge_tiled` keeps Gram, factor and solves
+//!   panel-backed end to end.
 //! * [`path`] — λ_max and log-spaced λ grids, warm-started path fits.
-//! * [`linalg`] — the small dense kernel set (Cholesky, solves, symv).
+//! * [`linalg`] — the small dense/packed kernel set (Cholesky, solves,
+//!   symv) plus the panel-tiled lower factor ([`linalg::TiledLowerTri`]).
 
 //! * [`screen`] — sure-independence screening from the same statistics
 //!   (the paper's §4 future work: p beyond the p²-in-memory envelope).

@@ -7,6 +7,7 @@
 //! what keeps the CV phase cheap.
 
 use crate::stats::suffstats::QuadForm;
+use crate::stats::Scatter;
 
 use super::cd::{solve_cd, CdSettings, CdSolution};
 use super::penalty::Penalty;
@@ -31,15 +32,15 @@ pub fn lambda_grid(lambda_max: f64, n: usize, ratio: f64) -> Vec<f64> {
 
 /// Default grid for a dataset: λ_max from the quadratic form, glmnet-style
 /// ratio (1e-3 for n > p, 1e-2 otherwise).
-pub fn default_grid(q: &QuadForm, penalty: Penalty, n_lambdas: usize) -> Vec<f64> {
+pub fn default_grid<S: Scatter>(q: &QuadForm<S>, penalty: Penalty, n_lambdas: usize) -> Vec<f64> {
     let ratio = if (q.n as usize) > q.p { 1e-3 } else { 1e-2 };
     lambda_grid(q.lambda_max(penalty.alpha), n_lambdas, ratio)
 }
 
 /// Fit the whole descending path with warm starts; `lambdas` must be
 /// descending for the warm starts to help (asserted in debug builds).
-pub fn fit_path(
-    q: &QuadForm,
+pub fn fit_path<S: Scatter>(
+    q: &QuadForm<S>,
     penalty: Penalty,
     lambdas: &[f64],
     settings: CdSettings,

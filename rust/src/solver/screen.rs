@@ -12,7 +12,7 @@
 use anyhow::Result;
 
 use crate::model::fitted::FittedModel;
-use crate::stats::SuffStats;
+use crate::stats::{Scatter, SuffStats};
 
 use super::cd::{solve_cd, CdSettings};
 use super::penalty::Penalty;
@@ -28,8 +28,9 @@ pub struct ScreenReport {
     pub threshold: f64,
 }
 
-/// |marginal correlation with y| for every predictor, from statistics only.
-pub fn marginal_abs_correlations(stats: &SuffStats) -> Vec<f64> {
+/// |marginal correlation with y| for every predictor, from statistics only
+/// (O(p) reads off either backing — panel seams included).
+pub fn marginal_abs_correlations<S: Scatter>(stats: &SuffStats<S>) -> Vec<f64> {
     let p = stats.p();
     let syy = stats.syy();
     (0..p)
@@ -58,7 +59,7 @@ pub fn default_keep(n: u64, p: usize) -> usize {
 /// when `m` exceeds the number of healthy predictors — `selected` may
 /// therefore be shorter than `m`.  Errors (a named one, no panic) only if
 /// *every* correlation is NaN: there is no sane sub-model to screen to.
-pub fn screen_top_m(stats: &SuffStats, m: usize) -> Result<ScreenReport> {
+pub fn screen_top_m<S: Scatter>(stats: &SuffStats<S>, m: usize) -> Result<ScreenReport> {
     let abs_corr = marginal_abs_correlations(stats);
     let p = stats.p();
     let mut order: Vec<usize> = (0..p).filter(|&j| !abs_corr[j].is_nan()).collect();
@@ -75,10 +76,24 @@ pub fn screen_top_m(stats: &SuffStats, m: usize) -> Result<ScreenReport> {
     Ok(ScreenReport { selected, abs_corr, threshold })
 }
 
+/// Embed a sub-model's coefficient vector back into R^p: `beta_sub[a]`
+/// lands at `selected[a]`, every screened-out slot is exactly 0.0.  The
+/// ONE home of the embed-back convention (used here and by the driver's
+/// screen-auto CV path).
+pub fn embed_beta(p: usize, selected: &[usize], beta_sub: &[f64]) -> Vec<f64> {
+    assert_eq!(selected.len(), beta_sub.len(), "sub-model width mismatch");
+    let mut beta = vec![0.0; p];
+    for (a, &j) in selected.iter().enumerate() {
+        beta[j] = beta_sub[a];
+    }
+    beta
+}
+
 /// Screen to `m` predictors (None ⇒ SIS default n/log n), fit the
-/// penalized model on the sub-Gram, and embed into a full-length model.
-pub fn fit_screened(
-    stats: &SuffStats,
+/// penalized model on the sub-Gram (gathered straight off the panels when
+/// the statistics are tiled), and embed into a full-length model.
+pub fn fit_screened<S: Scatter>(
+    stats: &SuffStats<S>,
     penalty: Penalty,
     lambda: f64,
     m: Option<usize>,
@@ -89,10 +104,7 @@ pub fn fit_screened(
     let q = stats.quad_form_subset(&report.selected);
     let sol = solve_cd(&q, penalty, lambda, None, settings);
     let (alpha, beta_sub) = q.to_original_scale(&sol.beta);
-    let mut beta = vec![0.0; stats.p()];
-    for (a, &j) in report.selected.iter().enumerate() {
-        beta[j] = beta_sub[a];
-    }
+    let beta = embed_beta(stats.p(), &report.selected, &beta_sub);
     Ok((
         FittedModel { alpha, beta, lambda, penalty, n_train: stats.count() },
         report,

@@ -44,3 +44,61 @@ pub use moments::Moments;
 pub use suffstats::SuffStats;
 pub use symm::SymMat;
 pub use tiles::{StatPanel, TileLayout, TiledSymMat};
+
+/// The symmetric-scatter storage backing a statistic: one trait, two
+/// implementations — the assembled packed triangle ([`SymMat`]) and the
+/// row-block panel set ([`TiledSymMat`]).  [`Moments`], [`SuffStats`], the
+/// standardized [`suffstats::QuadForm`] and the whole CV/CD path are
+/// generic over it, so with `FitConfig::gram_block = b > 0` the statistic
+/// lives in O(n·b) panels from the mapper's rank-1 scatter all the way to
+/// the solved model — the full O(n²) triangle never has to exist in one
+/// allocation.
+///
+/// Determinism contract: every method of the tiled implementation is the
+/// exact row restriction of the packed one (same loop bodies, same
+/// `(i, j≥i)` order within and across panel seams — property-tested in
+/// [`tiles`]), so generic code produces bit-for-bit identical floats under
+/// either backing.
+pub trait Scatter: Clone + PartialEq + std::fmt::Debug + Send + Sync + 'static {
+    /// Matrix dimension n.
+    fn n(&self) -> usize;
+    /// A zero scatter of the same shape (dimension *and* tiling layout).
+    fn like_zeros(&self) -> Self;
+    /// A zero scatter of dimension `n` in the same storage family (same
+    /// block size for the tiled backing) — how a (p+1)-dim z-scatter
+    /// spawns its p-dim standardized Gram.
+    fn like_zeros_dim(&self, n: usize) -> Self;
+    /// Zero every entry in place.
+    fn fill_zero(&mut self);
+    /// Copy every entry from `other` (same shape required).
+    fn copy_from(&mut self, other: &Self);
+    /// Entry (i, j), either triangle.
+    fn get(&self, i: usize, j: usize) -> f64;
+    /// Set entry (i, j) (and by symmetry (j, i)).
+    fn set(&mut self, i: usize, j: usize, v: f64);
+    /// Row i's packed tail, entries (i, i..n) — contiguous in both
+    /// backings (within one panel when tiled), so linear scans need no
+    /// per-entry index arithmetic.
+    fn row_tail(&self, i: usize) -> &[f64];
+    /// Overwrite row i's packed tail contiguously (the standardization
+    /// writer: one linear copy per row).
+    fn set_row_tail(&mut self, i: usize, tail: &[f64]);
+    /// A += scale·(δ ⊗ δ) on the upper triangle (paper eq. 15).
+    fn rank1(&mut self, delta: &[f64], scale: f64);
+    /// Four rank-1 updates at once (the blocked-ingest hot loop).
+    fn rank4(&mut self, c0: &[f64], c1: &[f64], c2: &[f64], c3: &[f64]);
+    /// Chan's pairwise merge: A += B + coef·(δ ⊗ δ) (paper eq. 14).
+    fn merge_scaled_outer(&mut self, other: &Self, delta: &[f64], coef: f64);
+    /// out = A − B − coef·(δ ⊗ δ) — the leave-one-fold-out complement.
+    fn sub_scaled_outer_into(&self, part: &Self, delta: &[f64], coef: f64, out: &mut Self);
+    /// Σᵢ A\[j,i\]·x\[i\], i strictly ascending (the CD row gather).
+    fn row_dot(&self, j: usize, x: &[f64]) -> f64;
+    /// out\[i\] += coef·A\[j,i\] for all i, ascending (incremental G·β).
+    fn axpy_row_into(&self, j: usize, coef: f64, out: &mut [f64]);
+    /// A += v·I (the ridge shift).
+    fn add_diag(&mut self, v: f64);
+    /// Largest single contiguous allocation this scatter holds, in f64s —
+    /// the resident-bytes accounting the tiled fit path is bounded by:
+    /// n(n+1)/2 packed, ≤ n·b per panel tiled.
+    fn max_alloc_doubles(&self) -> usize;
+}

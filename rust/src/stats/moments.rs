@@ -14,6 +14,7 @@
 //!   chunk_stats artifact (L2/L1 path).
 
 use super::symm::SymMat;
+use super::Scatter;
 
 /// Packed-triangle indexing, re-exported from [`super::symm`] (the packed
 /// layout's single home since the SymMat refactor).
@@ -32,7 +33,12 @@ pub(crate) fn block_rows(d: usize) -> usize {
     (BLOCK_BUF_ELEMS / d.max(1)).clamp(BLOCK_MIN_ROWS, 256)
 }
 
-/// Streaming (n, mean, M2) accumulator over R^d.
+/// Streaming (n, mean, M2) accumulator over R^d, generic over the scatter
+/// backing `S` ([`Scatter`]): [`SymMat`] (the default — one packed
+/// triangle) or [`super::TiledSymMat`] (row-block panels, no single O(d²)
+/// allocation).  The kernels of the two backings are bit-identical row
+/// restrictions of each other, so everything below produces the same
+/// floats under either.
 ///
 /// Also supports *weighted* observations ([`Moments::push_weighted`]): the
 /// weighted forms of eq. (12)–(15) replace the count n by the total weight
@@ -40,19 +46,19 @@ pub(crate) fn block_rows(d: usize) -> usize {
 /// rows (property-tested).  `count()` still reports raw rows; `weight()`
 /// reports W (== n when nothing was weighted).
 #[derive(Debug, Clone)]
-pub struct Moments {
+pub struct Moments<S: Scatter = SymMat> {
     d: usize,
     n: u64,
     /// total observation weight W (== n unless weighted pushes were used)
     w: f64,
     mean: Vec<f64>,
     /// packed-symmetric centered scatter Σwᵢ(z−z̄)(z−z̄)ᵀ
-    m2: SymMat,
+    m2: S,
     /// scratch for push (not part of the value)
     scratch: Vec<f64>,
 }
 
-impl PartialEq for Moments {
+impl<S: Scatter> PartialEq for Moments<S> {
     /// Value equality: the push/sub scratch buffer is not part of the value.
     fn eq(&self, other: &Self) -> bool {
         self.d == other.d
@@ -91,6 +97,18 @@ impl Moments {
         Moments { d, n, w: n as f64, mean, m2, scratch: vec![0.0; d] }
     }
 
+    /// The packed-symmetric centered scatter itself.
+    pub fn m2_packed(&self) -> &SymMat {
+        &self.m2
+    }
+
+    /// Dense row-major copy of the centered scatter.
+    pub fn m2_full(&self) -> Vec<f64> {
+        self.m2.to_dense()
+    }
+}
+
+impl<S: Scatter> Moments<S> {
     pub fn dim(&self) -> usize {
         self.d
     }
@@ -114,8 +132,8 @@ impl Moments {
         self.m2.get(i, j)
     }
 
-    /// The packed-symmetric centered scatter itself.
-    pub fn m2_packed(&self) -> &SymMat {
+    /// The backing scatter, whatever its storage family.
+    pub fn scatter(&self) -> &S {
         &self.m2
     }
 
@@ -134,21 +152,41 @@ impl Moments {
         self.m2_at(i, j) + self.w * self.mean[i] * self.mean[j]
     }
 
-    /// Dense row-major copy of the centered scatter.
-    pub fn m2_full(&self) -> Vec<f64> {
-        self.m2.to_dense()
-    }
-
     /// Rebuild a value from its shipped parts (count, total weight, mean,
-    /// packed centered scatter) — how the tiled statistics path
+    /// centered scatter in either backing) — how the tiled statistics path
     /// ([`super::tiles`]) reassembles a fold statistic from per-panel
     /// payloads.  The parts are adopted verbatim (no rounding), so this is
     /// bit-exact by construction.
-    pub fn from_packed_parts(n: u64, w: f64, mean: Vec<f64>, m2: SymMat) -> Self {
+    pub fn from_packed_parts(n: u64, w: f64, mean: Vec<f64>, m2: S) -> Self {
         let d = mean.len();
-        assert_eq!(m2.n(), d, "packed scatter dimension mismatch");
+        assert_eq!(m2.n(), d, "scatter dimension mismatch");
         let scratch = vec![0.0; d];
         Moments { d, n, w, mean, m2, scratch }
+    }
+
+    /// Tear the value into its parts (count, weight, mean, scatter) —
+    /// the tiled emit path moves the panel buffers out through here.
+    pub fn into_parts(self) -> (u64, f64, Vec<f64>, S) {
+        (self.n, self.w, self.mean, self.m2)
+    }
+
+    /// An empty accumulator with this one's shape (dimension and, for the
+    /// tiled backing, panel layout).
+    pub fn like_empty(&self) -> Self {
+        Moments {
+            d: self.d,
+            n: 0,
+            w: 0.0,
+            mean: vec![0.0; self.d],
+            m2: self.m2.like_zeros(),
+            scratch: vec![0.0; self.d],
+        }
+    }
+
+    /// Largest single contiguous allocation this value holds, in f64s —
+    /// the scatter's bound (or the O(d) mean for tiny blocks).
+    pub fn max_alloc_doubles(&self) -> usize {
+        self.m2.max_alloc_doubles().max(self.d)
     }
 
     /// Mapper-side update (paper eq. 12 for the mean, eq. 15 for M2).
@@ -208,18 +246,19 @@ impl Moments {
                 }
                 continue;
             }
-            let block = Self::block_moments(d, b, chunk);
+            let block = self.block_moments(b, chunk);
             self.merge(&block);
         }
     }
 
-    /// (n, mean, M2) of one dense block.
+    /// (n, mean, M2) of one dense block, in this accumulator's backing.
     ///
     /// Exact block mean first, then the centered scatter as 4-row-blocked
     /// outer-product updates: each packed-m2 element is touched once per
     /// FOUR rows (4× the arithmetic intensity of the streaming rank-1
     /// path), with all five streams (m2 row + 4 centered rows) contiguous.
-    fn block_moments(d: usize, b: usize, chunk: &[f64]) -> Moments {
+    fn block_moments(&self, b: usize, chunk: &[f64]) -> Moments<S> {
+        let d = self.d;
         let bf = b as f64;
         let mut mean = vec![0.0; d];
         for row in chunk.chunks_exact(d) {
@@ -230,7 +269,7 @@ impl Moments {
         for m in &mut mean {
             *m /= bf;
         }
-        let mut m2 = SymMat::zeros(d);
+        let mut m2 = self.m2.like_zeros();
         let mut cbuf = vec![0.0; 4 * d];
         let mut quads = chunk.chunks_exact(4 * d);
         for quad in quads.by_ref() {
@@ -255,7 +294,7 @@ impl Moments {
     }
 
     /// Combiner/reducer pairwise merge (paper eq. 13 + 14).
-    pub fn merge(&mut self, other: &Moments) {
+    pub fn merge(&mut self, other: &Moments<S>) {
         assert_eq!(self.d, other.d, "dimension mismatch in merge");
         if other.n == 0 {
             return;
@@ -264,7 +303,7 @@ impl Moments {
             self.n = other.n;
             self.w = other.w;
             self.mean.copy_from_slice(&other.mean);
-            self.m2.as_mut_slice().copy_from_slice(other.m2.as_slice());
+            self.m2.copy_from(&other.m2);
             return;
         }
         // weighted Chan merge: counts generalize to total weights
@@ -289,8 +328,8 @@ impl Moments {
     ///
     /// This is the CV phase's `train_i = Σ_{j≠i} s_j` computed as
     /// `total − s_i` in O(d²) — no data pass, no re-aggregation.
-    pub fn sub(&self, part: &Moments) -> Moments {
-        let mut out = Moments::new(self.d);
+    pub fn sub(&self, part: &Moments<S>) -> Moments<S> {
+        let mut out = self.like_empty();
         self.sub_into(part, &mut out);
         out
     }
@@ -300,7 +339,7 @@ impl Moments {
     /// `Moments` keeps that O(d²) arithmetic allocation-free.  Bit-identical
     /// to `sub` (same kernel, same order); `out`'s previous value is
     /// overwritten entirely.
-    pub fn sub_into(&self, part: &Moments, out: &mut Moments) {
+    pub fn sub_into(&self, part: &Moments<S>, out: &mut Moments<S>) {
         assert_eq!(self.d, part.d, "dimension mismatch in sub");
         assert_eq!(self.d, out.d, "scratch dimension mismatch in sub");
         assert!(part.n <= self.n, "part larger than total");
@@ -309,14 +348,14 @@ impl Moments {
             out.n = 0;
             out.w = 0.0;
             out.mean.fill(0.0);
-            out.m2.as_mut_slice().fill(0.0);
+            out.m2.fill_zero();
             return;
         }
         if part.n == 0 {
             out.n = self.n;
             out.w = self.w;
             out.mean.copy_from_slice(&self.mean);
-            out.m2.as_mut_slice().copy_from_slice(self.m2.as_slice());
+            out.m2.copy_from(&self.m2);
             return;
         }
         // weighted complement: counts generalize to total weights

@@ -10,11 +10,17 @@
 
 use super::moments::Moments;
 use super::symm::SymMat;
+use super::Scatter;
 
-/// Additive sufficient statistics for penalized linear regression.
+/// Additive sufficient statistics for penalized linear regression,
+/// generic over the scatter backing `S` ([`Scatter`]): the packed
+/// triangle by default, or row-block panels
+/// ([`crate::stats::TiledSymMat`]) so no single allocation on the fit
+/// path exceeds O(d·b).  Both backings run the identical kernels, so
+/// every view and derived quantity below is bit-for-bit the same.
 #[derive(Debug, Clone)]
-pub struct SuffStats {
-    inner: Moments,
+pub struct SuffStats<S: Scatter = SymMat> {
+    inner: Moments<S>,
     p: usize,
     /// scratch z-row buffer for push
     zbuf: Vec<f64>,
@@ -23,7 +29,7 @@ pub struct SuffStats {
     zblock: Vec<f64>,
 }
 
-impl PartialEq for SuffStats {
+impl<S: Scatter> PartialEq for SuffStats<S> {
     /// Value equality: scratch buffers are not part of the statistic.
     fn eq(&self, other: &Self) -> bool {
         self.p == other.p && self.inner == other.inner
@@ -34,15 +40,19 @@ impl PartialEq for SuffStats {
 ///
 ///   f(β̂) = ½ β̂ᵀ G β̂ − cᵀ β̂ + penalty,  with G = XcᵀXc/n (unit diagonal),
 ///   c = Xcᵀ(y − ȳ)/n, on variance-standardized columns.
+///
+/// Generic over the Gram backing: packed symmetric by default, or
+/// panel-tiled ([`crate::stats::TiledSymMat`]) — the CD/ridge solvers
+/// gather rows across panel seams and never assemble the triangle.
 #[derive(Debug, Clone, PartialEq)]
-pub struct QuadForm {
+pub struct QuadForm<S: Scatter = SymMat> {
     /// number of predictors
     pub p: usize,
     /// rows behind this form
     pub n: u64,
-    /// G, packed symmetric p×p (p(p+1)/2 doubles — half the dense
-    /// footprint); G\[j,j\] == 1 for non-degenerate columns
-    pub gram: SymMat,
+    /// G, symmetric p×p in `S`'s storage (p(p+1)/2 doubles total — half
+    /// the dense footprint); G\[j,j\] == 1 for non-degenerate columns
+    pub gram: S,
     /// c, length p
     pub xty: Vec<f64>,
     /// Var(y) = Σ(y−ȳ)²/n — the λ_max scale and the null-model MSE
@@ -60,15 +70,46 @@ impl SuffStats {
         SuffStats { inner: Moments::new(p + 1), p, zbuf: vec![0.0; p + 1], zblock: Vec::new() }
     }
 
+    /// Shard this statistic into per-panel payloads for the tiled
+    /// statistics job (one `(fold, panel)` reduce key each, every payload
+    /// O(d·b)); reassemble with [`crate::stats::tiles::assemble_stats`].
+    /// The panels concatenate to this statistic's packed scatter verbatim.
+    pub fn shard(&self, layout: super::tiles::TileLayout) -> Vec<super::tiles::StatPanel> {
+        super::tiles::shard_stats(self, layout)
+    }
+}
+
+impl<S: Scatter> SuffStats<S> {
     /// Wrap an existing z-moments accumulator (dim must be p+1).
-    pub fn from_moments(p: usize, inner: Moments) -> Self {
+    pub fn from_moments(p: usize, inner: Moments<S>) -> Self {
         assert_eq!(inner.dim(), p + 1, "moments dim must be p+1");
         SuffStats { inner, p, zbuf: vec![0.0; p + 1], zblock: Vec::new() }
     }
 
     /// Access the underlying z-moments (e.g. for engine-level merging).
-    pub fn moments(&self) -> &Moments {
+    pub fn moments(&self) -> &Moments<S> {
         &self.inner
+    }
+
+    /// Tear out the underlying z-moments (the tiled emit path).
+    pub fn into_moments(self) -> Moments<S> {
+        self.inner
+    }
+
+    /// An empty statistic with this one's shape (p and, for the tiled
+    /// backing, panel layout) — the CV sweep's reusable complement scratch.
+    pub fn like_empty(&self) -> Self {
+        SuffStats {
+            inner: self.inner.like_empty(),
+            p: self.p,
+            zbuf: vec![0.0; self.p + 1],
+            zblock: Vec::new(),
+        }
+    }
+
+    /// Largest single contiguous allocation this statistic holds, in f64s.
+    pub fn max_alloc_doubles(&self) -> usize {
+        self.inner.max_alloc_doubles()
     }
 
     pub fn p(&self) -> usize {
@@ -139,13 +180,13 @@ impl SuffStats {
     }
 
     /// Combiner/reducer merge (paper eq. 14).
-    pub fn merge(&mut self, other: &SuffStats) {
+    pub fn merge(&mut self, other: &SuffStats<S>) {
         assert_eq!(self.p, other.p);
         self.inner.merge(&other.inner);
     }
 
     /// total − part (leave-one-fold-out training statistics).
-    pub fn sub(&self, part: &SuffStats) -> SuffStats {
+    pub fn sub(&self, part: &SuffStats<S>) -> SuffStats<S> {
         assert_eq!(self.p, part.p);
         SuffStats::from_moments(self.p, self.inner.sub(&part.inner))
     }
@@ -154,18 +195,10 @@ impl SuffStats {
     /// allocation-free fold-complement path the CV sweep reuses k times
     /// per pass.  Bit-identical to `sub`; `scratch`'s previous value is
     /// overwritten entirely.
-    pub fn sub_into(&self, part: &SuffStats, scratch: &mut SuffStats) {
+    pub fn sub_into(&self, part: &SuffStats<S>, scratch: &mut SuffStats<S>) {
         assert_eq!(self.p, part.p);
         assert_eq!(self.p, scratch.p, "scratch dimension mismatch");
         self.inner.sub_into(&part.inner, &mut scratch.inner);
-    }
-
-    /// Shard this statistic into per-panel payloads for the tiled
-    /// statistics job (one `(fold, panel)` reduce key each, every payload
-    /// O(d·b)); reassemble with [`crate::stats::tiles::assemble_stats`].
-    /// The panels concatenate to this statistic's packed scatter verbatim.
-    pub fn shard(&self, layout: super::tiles::TileLayout) -> Vec<super::tiles::StatPanel> {
-        super::tiles::shard_stats(self, layout)
     }
 
     pub fn x_mean(&self) -> &[f64] {
@@ -193,12 +226,17 @@ impl SuffStats {
         self.inner.m2_at(self.p, self.p)
     }
 
-    /// Build the standardized quadratic form for the solver (paper eq. 17).
+    /// Build the standardized quadratic form for the solver (paper eq. 17),
+    /// in the statistic's own backing: packed stays packed, a panel-tiled
+    /// statistic standardizes panel by panel into a panel-tiled Gram (same
+    /// block size, dimension p instead of d) — the full triangle is never
+    /// assembled.  Each entry is an independent function of (Sxx\[i,j\],
+    /// dᵢ, dⱼ), so the two backings produce bit-identical Grams.
     ///
     /// Degenerate (zero-variance) columns get scale 0, a zeroed gram
     /// row/column with unit diagonal and zero c — coordinate descent then
     /// provably leaves their coefficient at exactly 0.
-    pub fn quad_form(&self) -> QuadForm {
+    pub fn quad_form(&self) -> QuadForm<S> {
         let p = self.p;
         let n = self.count();
         assert!(n >= 2, "need at least 2 observations to standardize");
@@ -208,25 +246,27 @@ impl SuffStats {
             let v = self.sxx(j, j) / nf;
             scale[j] = if v > 0.0 { v.sqrt() } else { 0.0 };
         }
-        // standardized Gram, written straight into packed-triangle order
-        // (i ascending, j = i..p is exactly the packed layout)
-        let mut gram = SymMat::zeros(p);
-        {
-            let packed = gram.as_mut_slice();
-            let mut k = 0;
-            for i in 0..p {
-                for j in i..p {
-                    let denom = scale[i] * scale[j];
-                    packed[k] = if denom > 0.0 {
-                        self.sxx(i, j) / (nf * denom)
-                    } else if i == j {
-                        1.0 // degenerate column: unit diagonal, zero couplings
-                    } else {
-                        0.0
-                    };
-                    k += 1;
-                }
+        // standardized Gram, written in packed-triangle order (i ascending,
+        // j = i..p): each row's tail streams linearly through both the
+        // z-scatter source (Sxx row tail) and the Gram destination — no
+        // per-entry index arithmetic on either backing
+        let mut gram = self.inner.scatter().like_zeros_dim(p);
+        let mut row = vec![0.0; p];
+        for i in 0..p {
+            // row i of the z-scatter covers (i, i..p+1); the Sxx part is
+            // its first p−i entries
+            let sxx_tail = self.inner.scatter().row_tail(i);
+            for (t, j) in (i..p).enumerate() {
+                let denom = scale[i] * scale[j];
+                row[t] = if denom > 0.0 {
+                    sxx_tail[t] / (nf * denom)
+                } else if i == j {
+                    1.0 // degenerate column: unit diagonal, zero couplings
+                } else {
+                    0.0
+                };
             }
+            gram.set_row_tail(i, &row[..p - i]);
         }
         let mut xty = vec![0.0; p];
         for j in 0..p {
@@ -248,61 +288,50 @@ impl SuffStats {
         }
     }
 
-    /// Standardized quadratic form restricted to a subset of predictors —
-    /// the screening path (paper §4 future work, `solver::screen`): the
-    /// same one-pass statistics serve any sub-model, since a sub-model's
-    /// Gram is just a submatrix.  `idx` must be strictly increasing.
-    pub fn quad_form_subset(&self, idx: &[usize]) -> QuadForm {
+    /// Restrict these statistics to the predictors `idx` (strictly
+    /// increasing): gathers the (m+1)-dim z-moments entry by entry straight
+    /// off the stored scatter — O(m²) reads through panel seams, never
+    /// assembling the full triangle.  The gathered values are copied
+    /// verbatim, so the result is identical whichever backing `self` uses;
+    /// this is the screen-then-fit path's sub-statistic.
+    pub fn subset(&self, idx: &[usize]) -> SuffStats<SymMat> {
         assert!(!idx.is_empty(), "empty subset");
         assert!(
             idx.windows(2).all(|w| w[0] < w[1]) && *idx.last().unwrap() < self.p,
             "subset indices must be strictly increasing and < p"
         );
         let m = idx.len();
-        let n = self.count();
-        assert!(n >= 2, "need at least 2 observations to standardize");
-        let nf = self.inner.weight();
-        let mut scale = vec![0.0; m];
-        for (a, &j) in idx.iter().enumerate() {
-            let v = self.sxx(j, j) / nf;
-            scale[a] = if v > 0.0 { v.sqrt() } else { 0.0 };
+        let d_sub = m + 1;
+        // z-index map: a < m ⇒ idx[a]; a == m ⇒ the y slot (self.p)
+        let zidx = |a: usize| if a < m { idx[a] } else { self.p };
+        let mut mean = Vec::with_capacity(d_sub);
+        for a in 0..d_sub {
+            mean.push(self.inner.mean()[zidx(a)]);
         }
-        let mut gram = SymMat::zeros(m);
-        {
-            let packed = gram.as_mut_slice();
-            let mut k = 0;
-            for a in 0..m {
-                for b in a..m {
-                    let denom = scale[a] * scale[b];
-                    packed[k] = if denom > 0.0 {
-                        self.sxx(idx[a], idx[b]) / (nf * denom)
-                    } else if a == b {
-                        1.0
-                    } else {
-                        0.0
-                    };
-                    k += 1;
-                }
+        let mut m2 = SymMat::zeros(d_sub);
+        for a in 0..d_sub {
+            for b in a..d_sub {
+                m2.set(a, b, self.inner.m2_at(zidx(a), zidx(b)));
             }
         }
-        let mut xty = vec![0.0; m];
-        for (a, &j) in idx.iter().enumerate() {
-            xty[a] = if scale[a] > 0.0 {
-                self.sxy(j) / (nf * scale[a])
-            } else {
-                0.0
-            };
-        }
-        QuadForm {
-            p: m,
-            n,
-            gram,
-            xty,
-            y_var: self.syy() / nf,
-            scale,
-            x_mean: idx.iter().map(|&j| self.x_mean()[j]).collect(),
-            y_mean: self.y_mean(),
-        }
+        SuffStats::from_moments(
+            m,
+            Moments::from_packed_parts(self.count(), self.inner.weight(), mean, m2),
+        )
+    }
+
+    /// Standardized quadratic form restricted to a subset of predictors —
+    /// the screening path (paper §4 future work, `solver::screen`): the
+    /// same one-pass statistics serve any sub-model, since a sub-model's
+    /// Gram is just a submatrix.  `idx` must be strictly increasing.
+    ///
+    /// One kernel, not two: this is exactly [`SuffStats::subset`] followed
+    /// by [`SuffStats::quad_form`] — the gathered sub-statistics carry the
+    /// identical Sxx/Sxy/Syy doubles, so the standardization (including
+    /// the degenerate-column convention) cannot drift from the full-model
+    /// path.
+    pub fn quad_form_subset(&self, idx: &[usize]) -> QuadForm {
+        self.subset(idx).quad_form()
     }
 
     /// Exact mean squared error of the *original-scale* model (α, β) on the
@@ -338,7 +367,7 @@ impl SuffStats {
     }
 }
 
-impl QuadForm {
+impl<S: Scatter> QuadForm<S> {
     /// Back-transform a standardized coefficient vector β̂ to the original
     /// scale (paper eq. 4): βⱼ = β̂ⱼ/dⱼ, α = ȳ − x̄ᵀβ.
     pub fn to_original_scale(&self, beta_std: &[f64]) -> (f64, Vec<f64>) {

@@ -300,6 +300,84 @@ impl SymMat {
     }
 }
 
+/// The packed triangle as a statistic backing: one contiguous
+/// n(n+1)/2-double allocation, every kernel delegating to the inherent
+/// methods above (the trait adds no indirection the concrete path didn't
+/// already have).
+impl super::Scatter for SymMat {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn like_zeros(&self) -> Self {
+        SymMat::zeros(self.n)
+    }
+
+    fn like_zeros_dim(&self, n: usize) -> Self {
+        SymMat::zeros(n)
+    }
+
+    fn fill_zero(&mut self) {
+        self.data.fill(0.0);
+    }
+
+    fn copy_from(&mut self, other: &Self) {
+        assert_eq!(self.n, other.n, "copy_from dimension mismatch");
+        self.data.copy_from_slice(&other.data);
+    }
+
+    fn get(&self, i: usize, j: usize) -> f64 {
+        SymMat::get(self, i, j)
+    }
+
+    fn set(&mut self, i: usize, j: usize, v: f64) {
+        SymMat::set(self, i, j, v);
+    }
+
+    fn row_tail(&self, i: usize) -> &[f64] {
+        SymMat::row_tail(self, i)
+    }
+
+    fn set_row_tail(&mut self, i: usize, tail: &[f64]) {
+        let n = self.n;
+        assert_eq!(tail.len(), n - i, "row tail length mismatch");
+        let k = tri_idx(n, i, i);
+        self.data[k..k + tail.len()].copy_from_slice(tail);
+    }
+
+    fn rank1(&mut self, delta: &[f64], scale: f64) {
+        SymMat::rank1(self, delta, scale);
+    }
+
+    fn rank4(&mut self, c0: &[f64], c1: &[f64], c2: &[f64], c3: &[f64]) {
+        SymMat::rank4(self, c0, c1, c2, c3);
+    }
+
+    fn merge_scaled_outer(&mut self, other: &Self, delta: &[f64], coef: f64) {
+        SymMat::merge_scaled_outer(self, other, delta, coef);
+    }
+
+    fn sub_scaled_outer_into(&self, part: &Self, delta: &[f64], coef: f64, out: &mut Self) {
+        SymMat::sub_scaled_outer_into(self, part, delta, coef, out);
+    }
+
+    fn row_dot(&self, j: usize, x: &[f64]) -> f64 {
+        SymMat::row_dot(self, j, x)
+    }
+
+    fn axpy_row_into(&self, j: usize, coef: f64, out: &mut [f64]) {
+        SymMat::axpy_row_into(self, j, coef, out);
+    }
+
+    fn add_diag(&mut self, v: f64) {
+        SymMat::add_diag(self, v);
+    }
+
+    fn max_alloc_doubles(&self) -> usize {
+        self.data.len()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -119,6 +119,36 @@ impl TiledSymMat {
         TiledSymMat { layout, panels }
     }
 
+    /// Adopt already-sharded panel buffers verbatim (the driver-side
+    /// assembly path: merged `StatPanel` payloads are *moved* in — no
+    /// concatenation into a packed triangle ever happens).  Errors if the
+    /// panel count or any panel length disagrees with the layout.
+    pub fn from_panels(layout: TileLayout, panels: Vec<Vec<f64>>) -> Result<Self, String> {
+        if panels.len() != layout.n_panels() {
+            return Err(format!(
+                "expected {} panels for the layout, got {}",
+                layout.n_panels(),
+                panels.len()
+            ));
+        }
+        for (t, panel) in panels.iter().enumerate() {
+            if panel.len() != layout.panel_len(t) {
+                return Err(format!(
+                    "panel {t}: {} entries, layout says {}",
+                    panel.len(),
+                    layout.panel_len(t)
+                ));
+            }
+        }
+        Ok(TiledSymMat { layout, panels })
+    }
+
+    /// Move the panel buffers out (the mapper's emit path: each buffer
+    /// becomes one [`StatPanel`] payload without a triangle copy).
+    pub fn into_panels(self) -> Vec<Vec<f64>> {
+        self.panels
+    }
+
     /// Concatenate the panels back into the untiled packed triangle.
     pub fn to_packed(&self) -> SymMat {
         let mut data = Vec::with_capacity(tri_len(self.layout.n));
@@ -152,6 +182,14 @@ impl TiledSymMat {
         let (i, j) = if i <= j { (i, j) } else { (j, i) };
         let t = i / self.layout.block;
         self.panels[t][tri_idx(self.layout.n, i, j) - self.layout.offset(t)]
+    }
+
+    /// Set entry (i, j) (and by symmetry (j, i)).
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        let (i, j) = if i <= j { (i, j) } else { (j, i) };
+        let t = i / self.layout.block;
+        self.panels[t][tri_idx(self.layout.n, i, j) - self.layout.offset(t)] = v;
     }
 
     /// A += scale·(δ ⊗ δ) on the upper triangle — [`SymMat::rank1`]
@@ -293,6 +331,197 @@ impl TiledSymMat {
                 panel[k] += v;
                 k += n - i;
             }
+        }
+    }
+}
+
+/// The panel set as a statistic backing ([`crate::stats::Scatter`]): every
+/// kernel is the inherent panel-restricted one, so generic `Moments`/
+/// `SuffStats`/CD code running on this backing is bit-for-bit the packed
+/// path — with no single allocation larger than one panel.
+impl super::Scatter for TiledSymMat {
+    fn n(&self) -> usize {
+        self.layout.n
+    }
+
+    fn like_zeros(&self) -> Self {
+        TiledSymMat::zeros(self.layout)
+    }
+
+    fn like_zeros_dim(&self, n: usize) -> Self {
+        TiledSymMat::zeros(TileLayout::new(n, self.layout.block))
+    }
+
+    fn fill_zero(&mut self) {
+        for panel in &mut self.panels {
+            panel.fill(0.0);
+        }
+    }
+
+    fn copy_from(&mut self, other: &Self) {
+        assert_eq!(self.layout, other.layout, "copy_from layout mismatch");
+        for (a, b) in self.panels.iter_mut().zip(&other.panels) {
+            a.copy_from_slice(b);
+        }
+    }
+
+    fn get(&self, i: usize, j: usize) -> f64 {
+        TiledSymMat::get(self, i, j)
+    }
+
+    fn set(&mut self, i: usize, j: usize, v: f64) {
+        TiledSymMat::set(self, i, j, v);
+    }
+
+    fn row_tail(&self, i: usize) -> &[f64] {
+        let n = self.layout.n;
+        let t = i / self.layout.block;
+        let k = tri_idx(n, i, i) - self.layout.offset(t);
+        &self.panels[t][k..k + (n - i)]
+    }
+
+    fn set_row_tail(&mut self, i: usize, tail: &[f64]) {
+        let n = self.layout.n;
+        assert_eq!(tail.len(), n - i, "row tail length mismatch");
+        let t = i / self.layout.block;
+        let k = tri_idx(n, i, i) - self.layout.offset(t);
+        self.panels[t][k..k + tail.len()].copy_from_slice(tail);
+    }
+
+    fn rank1(&mut self, delta: &[f64], scale: f64) {
+        TiledSymMat::rank1(self, delta, scale);
+    }
+
+    fn rank4(&mut self, c0: &[f64], c1: &[f64], c2: &[f64], c3: &[f64]) {
+        TiledSymMat::rank4(self, c0, c1, c2, c3);
+    }
+
+    fn merge_scaled_outer(&mut self, other: &Self, delta: &[f64], coef: f64) {
+        TiledSymMat::merge_scaled_outer(self, other, delta, coef);
+    }
+
+    fn sub_scaled_outer_into(&self, part: &Self, delta: &[f64], coef: f64, out: &mut Self) {
+        TiledSymMat::sub_scaled_outer_into(self, part, delta, coef, out);
+    }
+
+    fn row_dot(&self, j: usize, x: &[f64]) -> f64 {
+        TiledSymMat::row_dot(self, j, x)
+    }
+
+    fn axpy_row_into(&self, j: usize, coef: f64, out: &mut [f64]) {
+        TiledSymMat::axpy_row_into(self, j, coef, out);
+    }
+
+    fn add_diag(&mut self, v: f64) {
+        TiledSymMat::add_diag(self, v);
+    }
+
+    fn max_alloc_doubles(&self) -> usize {
+        self.layout.max_panel_len()
+    }
+}
+
+impl Moments<TiledSymMat> {
+    /// A zero z-moments accumulator over R^d backed by `block`-row panels —
+    /// the mapper-side statistic when `FitConfig::gram_block` > 0: rank-1 /
+    /// rank-4 scatter and Chan merges write directly into per-panel
+    /// storage, so the mapper never holds an O(d²) allocation.
+    pub fn new_tiled(d: usize, block: usize) -> Self {
+        Moments::from_packed_parts(
+            0,
+            0.0,
+            vec![0.0; d],
+            TiledSymMat::zeros(TileLayout::new(d, block)),
+        )
+    }
+}
+
+impl SuffStats<TiledSymMat> {
+    /// Panel-backed regression statistics for p predictors (z-dimension
+    /// p+1) with `block`-row panels.
+    pub fn new_tiled(p: usize, block: usize) -> Self {
+        SuffStats::from_moments(p, Moments::new_tiled(p + 1, block))
+    }
+
+    /// The panel layout of the backing scatter.
+    pub fn layout(&self) -> TileLayout {
+        self.moments().scatter().layout()
+    }
+
+    /// Tear this statistic into its per-panel wire payloads, *moving* each
+    /// panel buffer into its [`StatPanel`] — the tiled mapper's emit path.
+    /// Unlike [`shard_stats`] there is no triangle copy: the accumulator's
+    /// own panels become the payloads (only the O(d) header is replicated).
+    /// Concatenating the panels in order reproduces the packed scatter
+    /// verbatim.
+    pub fn into_panels(self) -> Vec<StatPanel> {
+        let p = self.p();
+        let (n, w, mean, m2) = self.into_moments().into_parts();
+        let layout = m2.layout();
+        debug_assert_eq!(layout.n(), p + 1);
+        m2.into_panels()
+            .into_iter()
+            .enumerate()
+            .map(|(t, m2v)| StatPanel {
+                d: p + 1,
+                block: layout.block(),
+                panel: t,
+                n,
+                w,
+                mean: mean.clone(),
+                m2: m2v,
+            })
+            .collect()
+    }
+
+    /// Concatenate the panels into a packed-triangle statistic (the
+    /// inspection/interop path — bit-exact: a pure re-slicing).
+    pub fn to_packed(&self) -> SuffStats<SymMat> {
+        let m = self.moments();
+        SuffStats::from_moments(
+            self.p(),
+            Moments::from_packed_parts(
+                m.count(),
+                m.weight(),
+                m.mean().to_vec(),
+                m.scatter().to_packed(),
+            ),
+        )
+    }
+}
+
+impl SuffStats<SymMat> {
+    /// Re-slice a packed statistic into `block`-row panels (bit-exact; the
+    /// benches use this to pit the two backings against each other on
+    /// identical values).
+    pub fn to_tiled(&self, block: usize) -> SuffStats<TiledSymMat> {
+        let m = self.moments();
+        SuffStats::from_moments(
+            self.p(),
+            Moments::from_packed_parts(
+                m.count(),
+                m.weight(),
+                m.mean().to_vec(),
+                TiledSymMat::from_packed(m.m2_packed(), block),
+            ),
+        )
+    }
+}
+
+impl super::suffstats::QuadForm<SymMat> {
+    /// Re-slice a packed quadratic form into `block`-row Gram panels
+    /// (bit-exact re-slicing; benches and bit-pin tests use this to run
+    /// the solvers on identical values under both backings).
+    pub fn to_tiled(&self, block: usize) -> super::suffstats::QuadForm<TiledSymMat> {
+        super::suffstats::QuadForm {
+            p: self.p,
+            n: self.n,
+            gram: TiledSymMat::from_packed(&self.gram, block),
+            xty: self.xty.clone(),
+            y_var: self.y_var,
+            scale: self.scale.clone(),
+            x_mean: self.x_mean.clone(),
+            y_mean: self.y_mean,
         }
     }
 }
@@ -477,16 +706,12 @@ pub fn shard_stats(stats: &SuffStats, layout: TileLayout) -> Vec<StatPanel> {
         .collect()
 }
 
-/// Reassemble a fold statistic from its merged panels (driver side).
-/// Verifies full coverage and that every panel agrees *bit-for-bit* on
-/// `(n, w, mean)` — the fixed-merge-tree invariant; a mismatch means the
-/// panels did not see the same merge sequence and the statistic would be
-/// silently wrong.
-pub fn assemble_stats(
-    p: usize,
-    layout: TileLayout,
-    panels: &[StatPanel],
-) -> Result<SuffStats, String> {
+/// The ONE coverage/shape/header verification for a fold's merged panels:
+/// full panel coverage, per-panel shapes against the layout, and every
+/// panel agreeing *bit-for-bit* on `(n, w, mean)` — the fixed-merge-tree
+/// invariant; a mismatch means the panels did not see the same merge
+/// sequence and the statistic would be silently wrong.
+fn check_panels(p: usize, layout: TileLayout, panels: &[StatPanel]) -> Result<(), String> {
     let d = p + 1;
     if layout.n() != d {
         return Err(format!("layout dimension {} but p+1 = {d}", layout.n()));
@@ -500,7 +725,6 @@ pub fn assemble_stats(
         ));
     }
     let head = &panels[0];
-    let mut data = Vec::with_capacity(tri_len(d));
     for (t, panel) in panels.iter().enumerate() {
         if panel.panel != t || panel.d != d || panel.block != layout.block() {
             return Err(format!(
@@ -535,10 +759,47 @@ pub fn assemble_stats(
                 panel.n, head.n
             ));
         }
+    }
+    Ok(())
+}
+
+/// Reassemble a fold statistic from its merged panels (driver side) into
+/// the *packed* representation — the inspection/interop path; the fit
+/// path uses [`assemble_stats_tiled`] and keeps the panels resident.
+/// One concatenation copy, after `check_panels`' verification.
+pub fn assemble_stats(
+    p: usize,
+    layout: TileLayout,
+    panels: &[StatPanel],
+) -> Result<SuffStats, String> {
+    check_panels(p, layout, panels)?;
+    let d = p + 1;
+    let mut data = Vec::with_capacity(tri_len(d));
+    for panel in panels {
         data.extend_from_slice(&panel.m2);
     }
     let m2 = SymMat::from_packed(d, data);
+    let head = &panels[0];
     let inner = Moments::from_packed_parts(head.n, head.w, head.mean.clone(), m2);
+    Ok(SuffStats::from_moments(p, inner))
+}
+
+/// Adopt a fold's merged panels as a panel-backed statistic — the same
+/// verification (`check_panels`), but the panel buffers are **moved**
+/// in: no O(d²) concatenation, no copy.  The largest allocation the
+/// result holds is one panel, O(d·b).
+pub fn assemble_stats_tiled(
+    p: usize,
+    layout: TileLayout,
+    panels: Vec<StatPanel>,
+) -> Result<SuffStats<TiledSymMat>, String> {
+    check_panels(p, layout, &panels)?;
+    let head_n = panels[0].n;
+    let head_w = panels[0].w;
+    let head_mean = panels[0].mean.clone();
+    let bufs: Vec<Vec<f64>> = panels.into_iter().map(|pl| pl.m2).collect();
+    let m2 = TiledSymMat::from_panels(layout, bufs)?;
+    let inner = Moments::from_packed_parts(head_n, head_w, head_mean, m2);
     Ok(SuffStats::from_moments(p, inner))
 }
 
@@ -730,6 +991,103 @@ mod tests {
             let assembled = assemble_stats(p, layout, &out).unwrap();
             assert_eq!(assembled, rest, "p={p} b={block}");
         });
+    }
+
+    #[test]
+    fn tiled_suffstats_accumulation_bitwise_matches_packed() {
+        // the mapper-side tentpole invariant: accumulating rows directly
+        // into panel-backed statistics (rank-1/rank-4 scatter + Chan
+        // merges into per-panel storage) is bit-for-bit the packed
+        // accumulation, and the emitted panels equal shard_stats of the
+        // packed statistic — with no shard-time triangle copy.
+        prop::quick(|rng, _| {
+            let p = 1 + rng.below(6);
+            let block = 1 + rng.below(p + 3);
+            let n = 1 + rng.below(300);
+            let x: Vec<f64> = (0..n * p).map(|_| rng.normal_ms(1.0, 2.0)).collect();
+            let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let mut packed = SuffStats::new(p);
+            packed.push_rows(&x, &y);
+            let mut tiled = SuffStats::new_tiled(p, block);
+            tiled.push_rows(&x, &y);
+            assert_eq!(tiled.to_packed(), packed, "p={p} b={block} n={n}");
+            // largest allocation the tiled accumulator ever held: one panel
+            let layout = TileLayout::new(p + 1, block);
+            assert_eq!(tiled.max_alloc_doubles(), layout.max_panel_len().max(p + 1));
+            // emit path: moved panels == sharded packed triangle
+            let via_shard = shard_stats(&packed, layout);
+            let moved = tiled.into_panels();
+            assert_eq!(moved, via_shard);
+        });
+    }
+
+    #[test]
+    fn tiled_quad_form_and_complement_bitwise_match_packed() {
+        // standardization panel-by-panel and the tiled fold complement
+        // must equal the packed path bit for bit
+        prop::quick(|rng, _| {
+            let p = 1 + rng.below(6);
+            let block = 1 + rng.below(p + 3);
+            let a = random_stats(rng, p, 10 + rng.below(60));
+            let b = random_stats(rng, p, 10 + rng.below(60));
+            let mut total_p = a.clone();
+            total_p.merge(&b);
+            let (ta, tb) = (a.to_tiled(block), b.to_tiled(block));
+            let mut total_t = ta.clone();
+            total_t.merge(&tb);
+            assert_eq!(total_t.to_packed(), total_p, "merge drift p={p} b={block}");
+            // quad_form: every entry bit-identical
+            let (qp, qt) = (total_p.quad_form(), total_t.quad_form());
+            assert_eq!(qp.n, qt.n);
+            for j in 0..p {
+                assert_eq!(qp.xty[j].to_bits(), qt.xty[j].to_bits());
+                assert_eq!(qp.scale[j].to_bits(), qt.scale[j].to_bits());
+                for i in 0..p {
+                    assert_eq!(
+                        qp.gram.get(i, j).to_bits(),
+                        qt.gram.get(i, j).to_bits(),
+                        "gram ({i},{j}) p={p} b={block}"
+                    );
+                }
+            }
+            // complement via reused tiled scratch == packed complement
+            let mut scratch_t = total_t.like_empty();
+            total_t.sub_into(&ta, &mut scratch_t);
+            let rest_p = total_p.sub(&a);
+            assert_eq!(scratch_t.to_packed(), rest_p, "sub drift p={p} b={block}");
+            // held-out scoring reads identically through panel seams
+            let beta: Vec<f64> = (0..p).map(|_| rng.normal()).collect();
+            let alpha = rng.normal();
+            assert_eq!(
+                scratch_t.mse(alpha, &beta).to_bits(),
+                rest_p.mse(alpha, &beta).to_bits()
+            );
+            // subset gather is backing-independent
+            if p >= 2 {
+                let idx: Vec<usize> = (0..p).step_by(2).collect();
+                assert_eq!(total_t.subset(&idx), total_p.subset(&idx));
+            }
+        });
+    }
+
+    #[test]
+    fn assemble_tiled_adopts_panels_without_copy_and_validates() {
+        let mut rng = Rng::seed_from(17);
+        let p = 5;
+        let layout = TileLayout::new(p + 1, 2);
+        let s = random_stats(&mut rng, p, 40);
+        let panels = shard_stats(&s, layout);
+        let tiled = assemble_stats_tiled(p, layout, panels.clone()).unwrap();
+        assert_eq!(tiled.to_packed(), s);
+        assert_eq!(tiled.layout(), layout);
+        // the tiled assembly enforces the same coverage/header contract
+        let short = panels[..panels.len() - 1].to_vec();
+        assert!(assemble_stats_tiled(p, layout, short).unwrap_err().contains("incomplete"));
+        let mut drifted = panels;
+        drifted[1].w += 1.0;
+        assert!(assemble_stats_tiled(p, layout, drifted)
+            .unwrap_err()
+            .contains("drifted"));
     }
 
     #[test]

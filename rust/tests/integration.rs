@@ -302,6 +302,151 @@ fn tiled_statistics_cv_bit_identical_and_payload_bounded() {
 }
 
 #[test]
+fn tiled_fit_is_panel_native_bit_identical_and_alloc_bounded() {
+    // The end-to-end tentpole invariant: with gram_block = b > 0 the whole
+    // fit path — mapper scatter, fold complements, standardized QuadForm,
+    // CD solves — is panel-backed (largest driver-side statistic
+    // allocation ≤ one panel), and the fit output (CV matrix, λ path,
+    // final model) is bit-for-bit the untiled packed fit, across block
+    // sizes {1, 7, d, oversized}, workers {1, 4, 8} and chaotic faults.
+    use plrmr::stats::symm::tri_len;
+    use plrmr::stats::tiles::TileLayout;
+
+    let data = generate(&SynthSpec::sparse_linear(3000, 6, 0.4, 13));
+    let d = 6 + 1;
+    let base = FitConfig {
+        folds: 5,
+        n_lambdas: 20,
+        split_rows: 500,
+        workers: 4,
+        ..FitConfig::default()
+    };
+    let untiled = Driver::new(base).fit(&data).unwrap();
+    assert_eq!(
+        untiled.stat_peak_alloc_bytes,
+        8 * tri_len(d),
+        "packed fit resides in one packed triangle"
+    );
+    for block in [1usize, 7, d, 64] {
+        for workers in [1usize, 4, 8] {
+            for chaos in [false, true] {
+                let fault = if chaos {
+                    FaultPlan::chaotic(0.3, 9)
+                } else {
+                    FaultPlan::none()
+                };
+                let cfg = FitConfig { gram_block: block, workers, fault, ..base };
+                let report = Driver::new(cfg).fit(&data).unwrap();
+                let tag = format!("b={block} w={workers} chaos={chaos}");
+                assert_eq!(report.lambda_opt, untiled.lambda_opt, "{tag}");
+                assert_eq!(report.model.beta, untiled.model.beta, "{tag}");
+                assert_eq!(report.model.alpha, untiled.model.alpha, "{tag}");
+                assert_eq!(report.cv.fold_err, untiled.cv.fold_err, "{tag}");
+                assert_eq!(report.lambdas, untiled.lambdas, "{tag}");
+                assert_eq!(report.map_metrics.records, 3000, "{tag}");
+                let layout = TileLayout::new(d, block);
+                assert!(
+                    report.stat_peak_alloc_bytes <= 8 * layout.max_panel_len().max(d),
+                    "{tag}: driver peak {} over the O(d·b) panel bound {}",
+                    report.stat_peak_alloc_bytes,
+                    8 * layout.max_panel_len().max(d)
+                );
+                assert!(
+                    report.stat_peak_alloc_bytes < untiled.stat_peak_alloc_bytes
+                        || layout.max_panel_len() == tri_len(d),
+                    "{tag}: tiling must shrink the peak unless b covers d"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn resident_allocation_accounting_on_the_tiled_path() {
+    // The acceptance-criterion accounting, object by object: with
+    // gram_block = b > 0 every statistic the fit path holds — mapper-side
+    // accumulator, fold complements in a reused scratch, standardized
+    // QuadForm, CD gradient state and the tiled ridge factor — has no
+    // allocation larger than O(d·b) doubles, while producing bit-identical
+    // numbers to the packed objects.
+    use plrmr::solver::cd::{kkt_violation, objective, solve_cd};
+    use plrmr::solver::ridge::{solve_ridge, solve_ridge_tiled};
+    use plrmr::solver::CdSettings;
+    use plrmr::stats::tiles::TileLayout;
+    use plrmr::stats::{Scatter, SuffStats};
+
+    let p = 40;
+    let b = 8;
+    let d = p + 1;
+    let layout = TileLayout::new(d, b);
+    let data = generate(&SynthSpec::sparse_linear(1200, p, 0.15, 5));
+
+    // mapper-side: panel-backed accumulation, no O(d²) allocation
+    let mut tiled = SuffStats::new_tiled(p, b);
+    let mut packed = SuffStats::new(p);
+    for i in 0..data.n() {
+        tiled.push(data.row(i), data.y[i]);
+        packed.push(data.row(i), data.y[i]);
+    }
+    assert_eq!(tiled.max_alloc_doubles(), layout.max_panel_len().max(d));
+    assert!(layout.max_panel_len() <= d * b, "panel bound is O(d·b)");
+    assert_eq!(tiled.to_packed(), packed, "accumulation bit-identical");
+
+    // fold complement into a reused panel-backed scratch
+    let mut half = SuffStats::new_tiled(p, b);
+    for i in 0..data.n() / 2 {
+        half.push(data.row(i), data.y[i]);
+    }
+    let mut scratch = tiled.like_empty();
+    assert_eq!(scratch.max_alloc_doubles(), layout.max_panel_len().max(d));
+    tiled.sub_into(&half, &mut scratch);
+
+    // standardized QuadForm: Gram panels bounded by the p-dim layout
+    let qt = tiled.quad_form();
+    let qp = packed.quad_form();
+    let glayout = TileLayout::new(p, b);
+    assert_eq!(qt.gram.max_alloc_doubles(), glayout.max_panel_len());
+    assert!(qt.gram.max_alloc_doubles() <= p * b);
+
+    // CD on the tiled QuadForm: bit-identical solution, objective and KKT
+    let cd = CdSettings::default();
+    for lam in [0.2, 0.05, 0.01] {
+        let st = solve_cd(&qt, Penalty::lasso(), lam, None, cd);
+        let sp = solve_cd(&qp, Penalty::lasso(), lam, None, cd);
+        assert_eq!(st.beta, sp.beta, "CD beta drifted at lam={lam}");
+        assert_eq!(st.sweeps, sp.sweeps);
+        assert_eq!(
+            objective(&qt, Penalty::lasso(), lam, &st.beta).to_bits(),
+            objective(&qp, Penalty::lasso(), lam, &sp.beta).to_bits()
+        );
+        assert_eq!(
+            kkt_violation(&qt, Penalty::lasso(), lam, &st.beta).to_bits(),
+            kkt_violation(&qp, Penalty::lasso(), lam, &sp.beta).to_bits()
+        );
+    }
+
+    // ridge: tiled Gram → tiled Cholesky factor → tiled solves, largest
+    // factor panel O(p·b), bit-identical to the packed closed form
+    let rt = solve_ridge_tiled(&qt, 0.3).unwrap();
+    let rp = solve_ridge(&qp, 0.3).unwrap();
+    for j in 0..p {
+        assert_eq!(rt[j].to_bits(), rp[j].to_bits(), "ridge j={j}");
+    }
+
+    // the whole driver-side CV path stays panel-bounded (fit-level view)
+    let cfg = FitConfig {
+        folds: 4,
+        n_lambdas: 10,
+        split_rows: 300,
+        workers: 2,
+        gram_block: b,
+        ..FitConfig::default()
+    };
+    let report = Driver::new(cfg).fit(&data).unwrap();
+    assert!(report.stat_peak_alloc_bytes <= 8 * layout.max_panel_len().max(d));
+}
+
+#[test]
 fn hlo_runtime_agrees_with_cpu_when_built() {
     let dir = plrmr::runtime::default_artifacts_dir();
     if !cfg!(feature = "pjrt") || !dir.join("manifest.json").exists() {
