@@ -36,6 +36,15 @@ pub struct FitConfig {
     /// solves all panel-backed) — bit-identical output at every block size
     /// (oversized b degenerates to one panel)
     pub gram_block: usize,
+    /// resident budget in bytes for the driver's panel store (tiled path
+    /// only, i.e. requires `gram_block > 0`): 0 ⇒ unbounded in-memory
+    /// residency ([`crate::store::MemStore`]); > 0 ⇒ merged `(fold, panel)`
+    /// statistics retire into a spill-to-disk store
+    /// ([`crate::store::SpillStore`]) whose resident panels never exceed
+    /// max(budget, one panel) — leader memory is O(d·b · panels-in-flight)
+    /// instead of O(k·d²), and the fit output is bit-identical at every
+    /// budget (asserted in `tests/integration.rs`)
+    pub store_budget_bytes: usize,
     /// screen-then-fit threshold: when p exceeds this, the driver defaults
     /// to SIS screening (`solver::screen`, m = min(n/log n, threshold)) and
     /// fits the penalized model + CV on the m×m sub-Gram gathered straight
@@ -63,6 +72,7 @@ impl Default for FitConfig {
                 .unwrap_or(4),
             split_rows: 65_536,
             gram_block: 0,
+            store_budget_bytes: 0,
             screen_auto: 4096,
             seed: 0x5EED,
             costs: JobCosts::zero(),
@@ -103,6 +113,13 @@ impl FitConfig {
         self
     }
 
+    /// Panel-store resident budget in bytes (0 ⇒ unbounded in-memory;
+    /// requires `gram_block > 0` when nonzero).
+    pub fn with_store_budget(mut self, bytes: usize) -> Self {
+        self.store_budget_bytes = bytes;
+        self
+    }
+
     /// Screen-then-fit threshold on p (0 ⇒ never screen automatically).
     pub fn with_screen_auto(mut self, threshold: usize) -> Self {
         self.screen_auto = threshold;
@@ -131,6 +148,12 @@ impl FitConfig {
         }
         if self.cd.tol <= 0.0 || self.cd.max_sweeps == 0 {
             bail!("cd settings degenerate");
+        }
+        if self.store_budget_bytes > 0 && self.gram_block == 0 {
+            bail!(
+                "store_budget_bytes requires the tiled statistics path \
+                 (set gram_block > 0)"
+            );
         }
         Ok(())
     }
@@ -178,6 +201,7 @@ impl FitConfig {
                 "workers" => cfg.workers = val.parse()?,
                 "split_rows" => cfg.split_rows = val.parse()?,
                 "gram_block" => cfg.gram_block = val.parse()?,
+                "store_budget_bytes" => cfg.store_budget_bytes = val.parse()?,
                 "screen_auto" => cfg.screen_auto = val.parse()?,
                 "seed" => cfg.seed = val.parse()?,
                 "tol" => cfg.cd.tol = val.parse()?,
@@ -223,7 +247,7 @@ mod tests {
     #[test]
     fn kv_parsing() {
         let cfg = FitConfig::from_kv_pairs(
-            "# a comment\npenalty = elastic_net:0.5\nfolds=5\nworkers = 3\nseed=42\ngram_block=16\nscreen_auto=0\n",
+            "# a comment\npenalty = elastic_net:0.5\nfolds=5\nworkers = 3\nseed=42\ngram_block=16\nstore_budget_bytes=4096\nscreen_auto=0\n",
         )
         .unwrap();
         assert_eq!(cfg.penalty.alpha, 0.5);
@@ -231,12 +255,29 @@ mod tests {
         assert_eq!(cfg.workers, 3);
         assert_eq!(cfg.seed, 42);
         assert_eq!(cfg.gram_block, 16);
+        assert_eq!(cfg.store_budget_bytes, 4096);
         assert_eq!(cfg.screen_auto, 0, "screen-auto can be disabled");
         assert_eq!(FitConfig::default().gram_block, 0, "tiling is opt-in");
+        assert_eq!(FitConfig::default().store_budget_bytes, 0, "spilling is opt-in");
         assert!(FitConfig::default().screen_auto > 0, "screening is the default at large p");
         assert!(FitConfig::from_kv_pairs("nonsense").is_err());
         assert!(FitConfig::from_kv_pairs("folds=1").is_err());
         assert!(FitConfig::from_kv_pairs("wat=1").is_err());
         assert!(FitConfig::from_kv_pairs("penalty=banana").is_err());
+    }
+
+    #[test]
+    fn store_budget_requires_the_tiled_path() {
+        // a budget without panels to spill is a config error, by name
+        let err = FitConfig { store_budget_bytes: 1024, ..Default::default() }
+            .validate()
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("gram_block"), "{err:#}");
+        assert!(FitConfig::from_kv_pairs("store_budget_bytes=1024").is_err());
+        FitConfig { store_budget_bytes: 1024, gram_block: 8, ..Default::default() }
+            .validate()
+            .unwrap();
+        let c = FitConfig::default().with_gram_block(4).with_store_budget(2048);
+        assert_eq!((c.gram_block, c.store_budget_bytes), (4, 2048));
     }
 }

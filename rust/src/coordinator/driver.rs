@@ -10,20 +10,34 @@
 //!
 //! Exactly **one** pass over the data happens (the map job); the CV phase
 //! and final fit touch only k·(p+1)²/2 + (p+1) numbers per fold.
+//!
+//! With `FitConfig::gram_block` > 0 the reduce is keyed by `(fold, panel)`
+//! and runs in **retire mode**: each key's merged panel leaves the engine
+//! straight into a [`crate::store::PanelStore`]
+//! ([`crate::mapreduce::run_job_retire`]) — unbounded in-memory by
+//! default, or spill-to-disk under `FitConfig::store_budget_bytes` — and
+//! the whole CV/solve phase streams panel-by-panel through the store
+//! ([`FoldStore`]), with the (fold × λ) sweep running as a second
+//! MapReduce job on the worker pool ([`crate::cv::cross_validate_store`]).
+//! Leader-resident statistics are then O(d·b · panels-in-flight), not
+//! O(k·d²) — and the fit output is bit-for-bit identical to the resident
+//! packed and tiled paths at every budget.
 
 use anyhow::Result;
 
 use crate::config::FitConfig;
-use crate::cv::{cross_validate, CvResult, FoldStats};
+use crate::cv::{cross_validate, cross_validate_store, CvResult, FoldStats};
 use crate::data::dataset::Dataset;
 use crate::data::synth::{SynthSpec, SynthStream};
-use crate::mapreduce::{run_job, Emitter, FoldAssigner, JobMetrics, TaskCtx};
+use crate::mapreduce::{run_job, run_job_retire, Emitter, FoldAssigner, JobMetrics, TaskCtx};
 use crate::model::fitted::FittedModel;
 use crate::solver::cd::solve_cd;
 use crate::solver::path::{default_grid, lambda_grid};
-use crate::solver::screen::{default_keep, embed_beta, screen_top_m, ScreenReport};
-use crate::stats::tiles::{assemble_stats_tiled, StatPanel, TileLayout};
-use crate::stats::{Scatter, SuffStats, TiledSymMat};
+use crate::solver::screen::{default_keep, embed_beta, rank_top_m, screen_top_m, ScreenReport};
+use crate::stats::symm::tri_len;
+use crate::stats::tiles::{StatPanel, TileLayout};
+use crate::stats::{Scatter, SuffStats};
+use crate::store::{FoldStore, MemStore, PanelStore, SpillStore};
 
 /// Everything a fit returns: the model, the CV curve, and job accounting.
 #[derive(Debug, Clone)]
@@ -45,10 +59,29 @@ pub struct FitReport {
     pub data_passes: usize,
     /// in-sample goodness of fit, from statistics alone
     pub diagnostics: crate::model::Diagnostics,
-    /// largest single resident statistic allocation on the driver-side
-    /// CV/solve path, in bytes: 8·tri_len(p+1) on the packed path, bounded
-    /// by 8·(p+1)·b with `gram_block = b` (asserted in integration tests)
+    /// conservative peak of **co-resident** statistic bytes across the
+    /// leader and the reducers — NOT the largest single allocation: all
+    /// fold statistics held at once (the store's resident peak on the
+    /// store path; (k+1) whole statistics on the resident paths), plus the
+    /// per-key reducers' in-flight merge state, plus the solver working
+    /// set (Gram(s), complement scratch / screened sub-statistics).
+    /// Before this accounting the field reported only the largest single
+    /// allocation, under-reporting exactly the O(k·d²) co-residency this
+    /// PR removes.
     pub stat_peak_alloc_bytes: usize,
+    /// peak bytes of merged fold statistics resident on the leader: the
+    /// panel store's high-water mark on the tiled path (≤ max(budget, one
+    /// panel) when `store_budget_bytes` > 0 — asserted in tests), or the
+    /// (k+1) resident whole statistics on the packed path
+    pub resident_stat_bytes_peak: usize,
+    /// cumulative bytes the panel store spilled to disk (0 unbudgeted).
+    /// These fit-wide spill counters are ≥ their `map_metrics` twins,
+    /// which snapshot the same store at statistics-job end (pre-CV).
+    pub spill_bytes: usize,
+    /// panel loads from spill files across the whole fit
+    pub spill_reads: usize,
+    /// panel writes to spill files across the whole fit
+    pub spill_writes: usize,
     /// SIS screening outcome when the `screen_auto` path engaged (p over
     /// the threshold); `None` for the exact full-p fit
     pub screened: Option<ScreenReport>,
@@ -59,12 +92,70 @@ pub struct FitReport {
 /// rank-1 updates, so the mapper buckets rows by fold and flushes blocks).
 const FOLD_FLUSH_ROWS: usize = 1024;
 
+/// Resident bytes of one whole fold statistic in payload terms:
+/// count + weight + d-length mean + packed d-triangle, 8 bytes each.
+fn stat_bytes(d: usize) -> usize {
+    8 * (2 + d + tri_len(d))
+}
+
+/// Resident bytes of a standardized quadratic form of dimension p: the
+/// Gram triangle (same total in packed or tiled storage) plus the
+/// xty/scale/x_mean vectors and the (n, y_var, y_mean) scalars.
+fn quad_bytes(p: usize) -> usize {
+    8 * (tri_len(p) + 3 * p + 2)
+}
+
+/// The resource-accounting slice of a [`FitReport`].
+struct Footprint {
+    stat_peak_alloc_bytes: usize,
+    resident_stat_bytes_peak: usize,
+    spill_bytes: usize,
+    spill_reads: usize,
+    spill_writes: usize,
+}
+
+impl Footprint {
+    /// Accounting for the resident paths (packed, or tiled statistics held
+    /// whole in a [`FoldStats`]): all k folds + the total stay co-resident
+    /// through the CV phase, alongside `work_bytes` of solver working set.
+    fn resident(k: usize, p: usize, work_bytes: usize) -> Footprint {
+        let resident = (k + 1) * stat_bytes(p + 1);
+        Footprint {
+            stat_peak_alloc_bytes: resident + work_bytes,
+            resident_stat_bytes_peak: resident,
+            spill_bytes: 0,
+            spill_reads: 0,
+            spill_writes: 0,
+        }
+    }
+
+    /// Accounting for the store path: the store's own resident peak (the
+    /// leader), the per-key reducers' in-flight peak, the O(d·b) streaming
+    /// transients (total/part/scratch panel clones), and `work_bytes` of
+    /// solver working set.
+    fn store(store: &FoldStore, map_metrics: &JobMetrics, work_bytes: usize) -> Footprint {
+        let sm = store.metrics();
+        let d = store.p() + 1;
+        let transient = 3 * 8 * (2 + d + store.layout().max_panel_len());
+        Footprint {
+            stat_peak_alloc_bytes: sm.resident_bytes_peak
+                + map_metrics.reduce_resident_bytes_peak
+                + transient
+                + work_bytes,
+            resident_stat_bytes_peak: sm.resident_bytes_peak,
+            spill_bytes: sm.spill_bytes,
+            spill_reads: sm.spill_reads,
+            spill_writes: sm.spill_writes,
+        }
+    }
+}
+
 /// Per-task fold bucketing: rows land in per-fold buffers and flush into
 /// [`SuffStats::push_rows`] in blocks.  Generic over the statistic
 /// backing: with `gram_block > 0` the per-fold statistics are panel-tiled
-/// ([`TiledSymMat`]) — the rank-1/rank-4 scatter writes straight into
-/// per-panel scratch, so a mapper never holds a single O(d²) allocation
-/// and emit moves the panels out without a triangle copy.
+/// ([`crate::stats::TiledSymMat`]) — the rank-1/rank-4 scatter writes
+/// straight into per-panel scratch, so a mapper never holds a single
+/// O(d²) allocation and emit moves the panels out without a triangle copy.
 struct FoldAccumulator<'a, S: Scatter> {
     assigner: &'a FoldAssigner,
     bufx: Vec<Vec<f64>>,
@@ -129,19 +220,22 @@ impl<S: Scatter> RowSink for FoldAccumulator<'_, S> {
     }
 }
 
-/// The statistics job's output in whichever backing the config selected.
-/// The fit path consumes this directly (panels stay resident end-to-end);
-/// the `compute_fold_stats*` inspection APIs concatenate to packed.
+/// The statistics job's output in whichever form the config selected.
+/// The fit path consumes this directly; the `compute_fold_stats*`
+/// inspection APIs materialize/concatenate to packed.
 enum StatsJob {
+    /// untiled: whole fold statistics, resident
     Packed(FoldStats),
-    Tiled(FoldStats<TiledSymMat>),
+    /// tiled: merged panels retired into a panel store (in-memory or
+    /// spill-to-disk per `FitConfig::store_budget_bytes`)
+    Stored(FoldStore),
 }
 
 impl StatsJob {
     fn into_packed(self) -> Result<FoldStats> {
         match self {
             StatsJob::Packed(folds) => Ok(folds),
-            StatsJob::Tiled(folds) => folds.to_packed(),
+            StatsJob::Stored(store) => store.to_fold_stats()?.to_packed(),
         }
     }
 }
@@ -172,11 +266,15 @@ impl Driver {
     /// mapper *accumulates* panel-native (no O(d²) allocation, rank-1
     /// scatter straight into per-panel scratch), emit *moves* each panel
     /// (no shard-time triangle copy), no shuffle payload or merge-tree
-    /// slot ever exceeds O(d·b) bytes, and the driver adopts the merged
-    /// panels without concatenating them.  The two paths are bit-for-bit
-    /// identical: panel kernels are exact row restrictions of the untiled
-    /// merge, and the fixed merge tree runs the same merges per key either
-    /// way (asserted in `tests/integration.rs`).
+    /// slot ever exceeds O(d·b) bytes, and the reduce runs in **retire
+    /// mode**: each `(fold, panel)` key is merged by an owning worker and
+    /// retired straight into the panel store — the leader never
+    /// accumulates the merged output map, and with a spill budget its
+    /// resident statistics never exceed max(budget, one panel).  The
+    /// paths are bit-for-bit identical: panel kernels are exact row
+    /// restrictions of the untiled merge, and the per-key replay runs the
+    /// same merges per key as the fixed tree (asserted in
+    /// `tests/integration.rs`).
     fn run_stats_job<I: Sync>(
         &self,
         p: usize,
@@ -204,7 +302,13 @@ impl Driver {
         } else {
             let layout = TileLayout::new(p + 1, self.cfg.gram_block);
             let proto = SuffStats::new_tiled(p, self.cfg.gram_block);
-            let out = run_job(
+            let backing: Box<dyn PanelStore> = if self.cfg.store_budget_bytes > 0 {
+                Box::new(SpillStore::new(self.cfg.store_budget_bytes).map_err(anyhow::Error::new)?)
+            } else {
+                Box::new(MemStore::new())
+            };
+            let mut fold_store = FoldStore::new(backing, k, p, layout);
+            let mut metrics = run_job_retire(
                 &self.cfg.engine(),
                 splits,
                 |ctx: &TaskCtx, split, em: &mut Emitter<(usize, usize), StatPanel>| {
@@ -224,9 +328,19 @@ impl Driver {
                         }
                     }
                 },
+                |(fold, panel): (usize, usize), value: StatPanel| {
+                    fold_store.retire(fold, panel, value)
+                },
             )?;
-            let (folds, metrics) = Self::assemble_tiled(k, p, layout, out)?;
-            Ok((StatsJob::Tiled(folds), metrics))
+            // coverage/header validation + the per-panel total merge —
+            // named errors, never silently-wrong statistics
+            fold_store.seal()?;
+            let sm = fold_store.metrics();
+            metrics.resident_stat_bytes_peak = sm.resident_bytes_peak;
+            metrics.spill_bytes = sm.spill_bytes;
+            metrics.spill_reads = sm.spill_reads;
+            metrics.spill_writes = sm.spill_writes;
+            Ok((StatsJob::Stored(fold_store), metrics))
         }
     }
 
@@ -245,7 +359,7 @@ impl Driver {
 
     /// Map+reduce phase over an in-memory dataset: one pass, k fold
     /// statistics out — concatenated to the packed representation (the
-    /// inspection/interop API; `fit` keeps panels resident instead).
+    /// inspection/interop API; `fit` streams through the store instead).
     pub fn compute_fold_stats(&self, data: &Dataset) -> Result<(FoldStats, JobMetrics)> {
         let (job, metrics) = self.stats_job(data)?;
         Ok((job.into_packed()?, metrics))
@@ -288,7 +402,7 @@ impl Driver {
 
     /// Map+reduce phase over a *streaming* synthetic source: nothing is
     /// materialized; each task generates its own split deterministically.
-    /// (Packed inspection API — `fit_stream` keeps panels resident.)
+    /// (Packed inspection API — `fit_stream` streams through the store.)
     pub fn compute_fold_stats_stream(
         &self,
         spec: &SynthSpec,
@@ -325,7 +439,7 @@ impl Driver {
     /// shard in O(block) memory — the HDFS-mapper access pattern.  Row ids
     /// for fold assignment are (shard index, local row), so the fold split
     /// is deterministic per shard set regardless of worker scheduling.
-    /// (Packed inspection API — `fit_csv_shards` keeps panels resident.)
+    /// (Packed inspection API — `fit_csv_shards` streams through the store.)
     pub fn compute_fold_stats_csv(
         &self,
         p: usize,
@@ -357,53 +471,13 @@ impl Driver {
         Ok((FoldStats::new(folds)?, out.metrics))
     }
 
-    /// Adopt fold statistics from `(fold, panel)` reduce output — panels
-    /// stay resident (moved into [`TiledSymMat`] backings, never
-    /// concatenated).  Incomplete or header-drifted panel sets are named
-    /// errors (the fold and panel counts in the message), never
-    /// silently-wrong statistics; a fold with no panels at all fails
-    /// through [`FoldStats::new`]'s empty-fold check exactly like the
-    /// untiled path.
-    fn assemble_tiled(
-        k: usize,
-        p: usize,
-        layout: TileLayout,
-        out: crate::mapreduce::JobOutput<(usize, usize), StatPanel>,
-    ) -> Result<(FoldStats<TiledSymMat>, JobMetrics)> {
-        let mut per_fold: Vec<Vec<StatPanel>> = (0..k).map(|_| Vec::new()).collect();
-        for ((fold, panel), value) in out.output {
-            anyhow::ensure!(
-                fold < k,
-                "tiled statistics job returned fold {fold}, but k = {k}"
-            );
-            anyhow::ensure!(
-                value.panel == panel,
-                "reduce key names panel {panel} but the payload carries panel {}",
-                value.panel
-            );
-            per_fold[fold].push(value);
-        }
-        let mut folds = Vec::with_capacity(k);
-        for (fold, panels) in per_fold.into_iter().enumerate() {
-            if panels.is_empty() {
-                folds.push(SuffStats::new_tiled(p, layout.block()));
-                continue;
-            }
-            folds.push(
-                assemble_stats_tiled(p, layout, panels)
-                    .map_err(|e| anyhow::anyhow!("fold {fold}: {e}"))?,
-            );
-        }
-        Ok((FoldStats::new(folds)?, out.metrics))
-    }
-
-    /// CV + final fit on whichever backing the statistics job produced —
-    /// tiled fold statistics go through the generic path untouched, so the
-    /// panels stay resident from map task to solved model.
+    /// CV + final fit on whichever form the statistics job produced —
+    /// stored panels stream through the budgeted working set; resident
+    /// packed statistics go through the generic path.
     fn fit_job(&self, job: StatsJob, metrics: JobMetrics) -> Result<FitReport> {
         match job {
             StatsJob::Packed(folds) => self.select_and_fit(&folds, metrics),
-            StatsJob::Tiled(folds) => self.select_and_fit(&folds, metrics),
+            StatsJob::Stored(store) => self.select_and_fit_store(&store, metrics),
         }
     }
 
@@ -425,14 +499,14 @@ impl Driver {
 
     /// Assemble the [`FitReport`] pieces every select path shares
     /// (fold sizes, diagnostics against the full statistics, the one-pass
-    /// invariant).
+    /// invariant, the co-resident footprint).
     fn finish_report<S: Scatter>(
         folds: &FoldStats<S>,
         cv: CvResult,
         lambdas: Vec<f64>,
         map_metrics: JobMetrics,
         model: FittedModel,
-        stat_peak_alloc_bytes: usize,
+        footprint: Footprint,
         screened: Option<ScreenReport>,
     ) -> FitReport {
         let fold_sizes = (0..folds.k()).map(|i| folds.fold(i).count()).collect();
@@ -446,14 +520,17 @@ impl Driver {
             fold_sizes,
             data_passes: 1,
             diagnostics,
-            stat_peak_alloc_bytes,
+            stat_peak_alloc_bytes: footprint.stat_peak_alloc_bytes,
+            resident_stat_bytes_peak: footprint.resident_stat_bytes_peak,
+            spill_bytes: footprint.spill_bytes,
+            spill_reads: footprint.spill_reads,
+            spill_writes: footprint.spill_writes,
             screened,
         }
     }
 
-    /// CV phase + final fit from fold statistics (no data access), generic
-    /// over the statistic backing: complements, standardized Grams and the
-    /// CD solves run panel-native when the statistics are tiled.  When
+    /// CV phase + final fit from *resident* fold statistics (no data
+    /// access), generic over the statistic backing.  When
     /// `FitConfig::screen_auto` > 0 and p exceeds it, the driver screens
     /// first (SIS) and fits on the m×m sub-Gram gathered straight from the
     /// statistics instead.
@@ -465,6 +542,7 @@ impl Driver {
         if self.cfg.screen_auto > 0 && folds.p() > self.cfg.screen_auto {
             return self.select_and_fit_screened(folds, map_metrics);
         }
+        let p = folds.p();
         let q_total = folds.total().quad_form();
         let lambdas = self.lambda_grid_for(&q_total);
         let cv = cross_validate(folds, self.cfg.penalty, &lambdas, self.cfg.cd)?;
@@ -478,16 +556,17 @@ impl Driver {
             penalty: self.cfg.penalty,
             n_train: folds.n(),
         };
-        let stat_peak_alloc_bytes = 8 * folds
-            .max_alloc_doubles()
-            .max(q_total.gram.max_alloc_doubles());
+        // working set: one complement scratch + q_total + the in-flight
+        // per-fold Gram
+        let footprint =
+            Footprint::resident(folds.k(), p, stat_bytes(p + 1) + 2 * quad_bytes(p));
         Ok(Self::finish_report(
             folds,
             cv,
             lambdas,
             map_metrics,
             model,
-            stat_peak_alloc_bytes,
+            footprint,
             None,
         ))
     }
@@ -521,16 +600,12 @@ impl Driver {
         let mut fold_err = vec![vec![0.0; k]; n_l];
         let mut nnz = vec![vec![0usize; k]; n_l];
         let mut train = folds.total().like_empty();
-        let mut sub_peak = q_total.gram.max_alloc_doubles();
         for i in 0..k {
             folds.train_into(i, &mut train);
             let fold_report = screen_top_m(&train, m)?;
             let sub_train = train.subset(&fold_report.selected);
             let held = folds.fold(i).subset(&fold_report.selected);
             let q = sub_train.quad_form();
-            sub_peak = sub_peak
-                .max(sub_train.max_alloc_doubles())
-                .max(held.max_alloc_doubles());
             let mut warm: Option<Vec<f64>> = None;
             for (li, &lam) in lambdas.iter().enumerate() {
                 let sol = solve_cd(&q, self.cfg.penalty, lam, warm.as_deref(), self.cfg.cd);
@@ -552,16 +627,153 @@ impl Driver {
             penalty: self.cfg.penalty,
             n_train: folds.n(),
         };
-        let stat_peak_alloc_bytes = 8 * folds.max_alloc_doubles().max(sub_peak);
+        // working set: complement scratch + the (m+1)-dim train/held
+        // sub-statistics + q_total and the per-fold sub-Gram
+        let work = stat_bytes(p + 1) + 2 * stat_bytes(m + 1) + 2 * quad_bytes(m);
+        let footprint = Footprint::resident(k, p, work);
         Ok(Self::finish_report(
             folds,
             cv,
             lambdas,
             map_metrics,
             model,
-            stat_peak_alloc_bytes,
+            footprint,
             Some(total_report),
         ))
+    }
+
+    /// CV + final fit over a **panel-store** handle: fold complements,
+    /// standardization, held-out scoring, screening subsets and the ridge
+    /// Gram all stream panel-by-panel through the store's budgeted working
+    /// set, and the (fold × λ) sweep runs as a MapReduce job on the worker
+    /// pool ([`cross_validate_store`]).  Bit-for-bit identical to
+    /// [`Driver::select_and_fit`] on the resident statistics (asserted in
+    /// tests and `tests/integration.rs`).
+    fn select_and_fit_store(
+        &self,
+        store: &FoldStore,
+        map_metrics: JobMetrics,
+    ) -> Result<FitReport> {
+        if self.cfg.screen_auto > 0 && store.p() > self.cfg.screen_auto {
+            return self.select_and_fit_screened_store(store, map_metrics);
+        }
+        let p = store.p();
+        let q_total = store.quad_form_train(None)?;
+        let lambdas = self.lambda_grid_for(&q_total);
+        let cv = cross_validate_store(
+            store,
+            self.cfg.penalty,
+            &lambdas,
+            self.cfg.cd,
+            &self.cfg.engine(),
+        )?;
+        let sol = solve_cd(&q_total, self.cfg.penalty, cv.lambda_opt, None, self.cfg.cd);
+        let (alpha, beta) = q_total.to_original_scale(&sol.beta);
+        let model = FittedModel {
+            alpha,
+            beta,
+            lambda: cv.lambda_opt,
+            penalty: self.cfg.penalty,
+            n_train: store.n(),
+        };
+        // working set: q_total on the driver, plus up to min(workers, k)
+        // per-fold Grams co-resident across the parallel CV tasks
+        let concurrent = self.cfg.workers.max(1).min(store.k());
+        let work = (1 + concurrent) * quad_bytes(p);
+        self.finish_report_store(store, cv, lambdas, map_metrics, model, work, None)
+    }
+
+    /// The screen-then-fit path over a panel store: identical structure to
+    /// [`Driver::select_and_fit_screened`], with the correlations and the
+    /// (m+1)-dim sub-statistics gathered streaming off the panels
+    /// ([`FoldStore::marginal_abs_corr`], [`FoldStore::subset_train`]) —
+    /// the ranking and sweep arithmetic is shared
+    /// ([`rank_top_m`], `cv::select::summarize`), so the two paths are
+    /// bit-identical.
+    fn select_and_fit_screened_store(
+        &self,
+        store: &FoldStore,
+        map_metrics: JobMetrics,
+    ) -> Result<FitReport> {
+        let p = store.p();
+        let k = store.k();
+        let m = default_keep(store.n(), p).min(self.cfg.screen_auto);
+        let total_report = rank_top_m(store.marginal_abs_corr(None)?, m)?;
+        let q_total = store.subset_train(None, &total_report.selected)?.quad_form();
+        let lambdas = self.lambda_grid_for(&q_total);
+        let n_l = lambdas.len();
+        let mut fold_err = vec![vec![0.0; k]; n_l];
+        let mut nnz = vec![vec![0usize; k]; n_l];
+        for i in 0..k {
+            let fold_report = rank_top_m(store.marginal_abs_corr(Some(i))?, m)?;
+            let sub_train = store.subset_train(Some(i), &fold_report.selected)?;
+            let held = store.subset_fold(i, &fold_report.selected)?;
+            let q = sub_train.quad_form();
+            let mut warm: Option<Vec<f64>> = None;
+            for (li, &lam) in lambdas.iter().enumerate() {
+                let sol = solve_cd(&q, self.cfg.penalty, lam, warm.as_deref(), self.cfg.cd);
+                let (alpha, beta_sub) = q.to_original_scale(&sol.beta);
+                fold_err[li][i] = held.mse(alpha, &beta_sub);
+                nnz[li][i] = sol.n_active;
+                warm = Some(sol.beta);
+            }
+        }
+        let cv = crate::cv::select::summarize(&lambdas, fold_err, nnz)?;
+        let sol = solve_cd(&q_total, self.cfg.penalty, cv.lambda_opt, None, self.cfg.cd);
+        let (alpha, beta_sub) = q_total.to_original_scale(&sol.beta);
+        let beta = embed_beta(p, &total_report.selected, &beta_sub);
+        let model = FittedModel {
+            alpha,
+            beta,
+            lambda: cv.lambda_opt,
+            penalty: self.cfg.penalty,
+            n_train: store.n(),
+        };
+        let work = 2 * stat_bytes(m + 1) + 2 * quad_bytes(m);
+        self.finish_report_store(
+            store,
+            cv,
+            lambdas,
+            map_metrics,
+            model,
+            work,
+            Some(total_report),
+        )
+    }
+
+    /// [`Driver::finish_report`]'s streaming twin: fold sizes from the
+    /// store's O(d) headers, diagnostics streamed off the total's panels,
+    /// and the footprint taken from the store's (post-CV) accounting.
+    #[allow(clippy::too_many_arguments)]
+    fn finish_report_store(
+        &self,
+        store: &FoldStore,
+        cv: CvResult,
+        lambdas: Vec<f64>,
+        map_metrics: JobMetrics,
+        model: FittedModel,
+        work_bytes: usize,
+        screened: Option<ScreenReport>,
+    ) -> Result<FitReport> {
+        let fold_sizes = (0..store.k()).map(|i| store.fold_count(i)).collect();
+        let diagnostics = store.diagnostics(&model)?;
+        let footprint = Footprint::store(store, &map_metrics, work_bytes);
+        Ok(FitReport {
+            lambda_opt: model.lambda,
+            model,
+            cv,
+            lambdas,
+            map_metrics,
+            fold_sizes,
+            data_passes: 1,
+            diagnostics,
+            stat_peak_alloc_bytes: footprint.stat_peak_alloc_bytes,
+            resident_stat_bytes_peak: footprint.resident_stat_bytes_peak,
+            spill_bytes: footprint.spill_bytes,
+            spill_reads: footprint.spill_reads,
+            spill_writes: footprint.spill_writes,
+            screened,
+        })
     }
 
     /// Algorithm 1, end to end, over an in-memory dataset.
@@ -716,18 +928,28 @@ mod tests {
     #[test]
     fn tiled_stats_job_bit_identical_to_untiled_across_blocks() {
         // the tentpole invariant at driver level: for every block size the
-        // tiled (fold, panel)-keyed job reassembles to the exact untiled
-        // fold statistics, and the whole fit is unchanged bit for bit —
-        // while no per-key payload exceeds the O(d·b) bound.
+        // tiled (fold, panel)-keyed job — now retiring into the panel
+        // store — reassembles to the exact untiled fold statistics, and
+        // the whole fit is unchanged bit for bit, while no per-key payload
+        // exceeds the O(d·b) bound and the leader's co-resident accounting
+        // reflects the store.
         let data = generate(&SynthSpec::sparse_linear(4000, 6, 0.4, 13));
         let d = 6 + 1;
+        let k = 5;
         let base = small_cfg();
         let untiled = Driver::new(base).fit(&data).unwrap();
+        // the co-resident accounting fix: the packed path holds all k
+        // folds + the total resident (NOT just one triangle)
+        assert_eq!(
+            untiled.resident_stat_bytes_peak,
+            (k + 1) * super::stat_bytes(d),
+            "packed path co-residency = k folds + total"
+        );
         assert_eq!(
             untiled.stat_peak_alloc_bytes,
-            8 * (d * (d + 1) / 2),
-            "packed path peak = one packed triangle"
+            (k + 1) * super::stat_bytes(d) + super::stat_bytes(d) + 2 * super::quad_bytes(6),
         );
+        assert_eq!(untiled.spill_writes, 0);
         for block in [1usize, 3, d, 100] {
             let cfg = FitConfig { gram_block: block, ..base };
             let report = Driver::new(cfg).fit(&data).unwrap();
@@ -743,12 +965,56 @@ mod tests {
                 "b={block}: payload {} over bound {bound}",
                 report.map_metrics.max_payload_bytes
             );
-            // panels stayed resident end-to-end: the driver-side peak is
-            // one panel (or the O(d) header), never the full triangle
+            // unbudgeted MemStore: every panel of every fold + the total
+            // stays resident — the exact co-resident bytes, not a guess
+            let per_fold = 8 * (layout.n_panels() * (2 + d) + crate::stats::symm::tri_len(d));
+            assert_eq!(
+                report.resident_stat_bytes_peak,
+                (k + 1) * per_fold,
+                "b={block}: MemStore resident accounting"
+            );
+            assert_eq!(report.spill_writes, 0, "unbudgeted path must not spill");
+        }
+    }
+
+    #[test]
+    fn store_budget_bounds_residency_without_changing_bits() {
+        // one-panel budget: the fit output is bit-identical to the
+        // unbudgeted tiled fit and the packed fit, while the leader's
+        // resident statistics never exceed the budget and the spill path
+        // actually exercises
+        let data = generate(&SynthSpec::sparse_linear(4000, 6, 0.4, 13));
+        let d = 6 + 1;
+        let block = 3;
+        let base = small_cfg();
+        let packed = Driver::new(base).fit(&data).unwrap();
+        let layout = crate::stats::tiles::TileLayout::new(d, block);
+        let one_panel = 8 * (2 + d + layout.max_panel_len());
+        for budget in [one_panel, 4 * one_panel] {
+            let cfg = FitConfig {
+                gram_block: block,
+                store_budget_bytes: budget,
+                ..base
+            };
+            let report = Driver::new(cfg).fit(&data).unwrap();
+            assert_eq!(report.model.beta, packed.model.beta, "budget={budget}");
+            assert_eq!(report.lambda_opt, packed.lambda_opt);
+            assert_eq!(report.cv.fold_err, packed.cv.fold_err);
             assert!(
-                report.stat_peak_alloc_bytes <= 8 * layout.max_panel_len().max(d),
-                "b={block}: driver peak {} over the panel bound",
-                report.stat_peak_alloc_bytes
+                report.resident_stat_bytes_peak <= budget,
+                "budget={budget}: resident peak {} over budget",
+                report.resident_stat_bytes_peak
+            );
+            assert!(report.spill_writes > 0, "budget={budget}: must spill");
+            assert!(report.spill_reads > 0, "budget={budget}: CV must reload panels");
+            assert!(report.spill_bytes > 0);
+            // the budgeted co-resident peak sits far below the packed
+            // path's (k+1) whole statistics
+            assert!(
+                report.resident_stat_bytes_peak < packed.resident_stat_bytes_peak,
+                "{} !< {}",
+                report.resident_stat_bytes_peak,
+                packed.resident_stat_bytes_peak
             );
         }
     }
@@ -771,11 +1037,23 @@ mod tests {
                 assert_eq!(report.model.beta[j], 0.0, "screened-out beta must be 0");
             }
         }
-        // the screened fit is backing-independent: tiled statistics gather
+        // the screened fit is backing-independent: the store path gathers
         // the same sub-Gram through panel seams
         let tiled = Driver::new(FitConfig { gram_block: 4, ..cfg }).fit(&data).unwrap();
         assert_eq!(report.model.beta, tiled.model.beta);
         assert_eq!(report.lambda_opt, tiled.lambda_opt);
+        // and under a one-panel budget, still bit-identical
+        let layout = crate::stats::tiles::TileLayout::new(31, 4);
+        let budgeted = Driver::new(FitConfig {
+            gram_block: 4,
+            store_budget_bytes: 8 * (2 + 31 + layout.max_panel_len()),
+            ..cfg
+        })
+        .fit(&data)
+        .unwrap();
+        assert_eq!(report.model.beta, budgeted.model.beta);
+        assert_eq!(report.lambda_opt, budgeted.lambda_opt);
+        assert!(budgeted.spill_writes > 0);
         // under the threshold the exact full-p path runs
         let exact = Driver::new(FitConfig { screen_auto: 64, ..small_cfg() })
             .fit(&data)

@@ -17,5 +17,5 @@ pub mod parallel;
 pub mod select;
 
 pub use kfold::FoldStats;
-pub use parallel::cross_validate_parallel;
+pub use parallel::{cross_validate_parallel, cross_validate_store};
 pub use select::{cross_validate, CvResult};

@@ -141,6 +141,60 @@ fn assemble_cv(lambdas: &[f64], k: usize, results: Vec<FoldErrors>) -> Result<Cv
     super::select::summarize(lambdas, fold_err, nnz_m)
 }
 
+/// The (fold × λ) CV sweep over a **panel-store** handle, as a MapReduce
+/// job on the worker pool (ROADMAP item (b): the tiled path's CV no longer
+/// runs serially on the driver).  Each fold task builds its training
+/// quadratic form panel-by-panel through the store's budgeted working set
+/// ([`crate::store::FoldStore::quad_form_train`] — bit-pinned against the
+/// resident `train_for(i).quad_form()`), sweeps the warm-started λ path,
+/// and scores held-out MSE streaming off the fold's own panels — so the
+/// per-fold FoldErrors, and therefore the assembled CV matrix and λ
+/// selection, are bit-for-bit the serial resident sweep's (asserted in
+/// tests here and in `tests/integration.rs`).
+///
+/// Store failures inside a task (corrupt spill file, vanished panel)
+/// surface as a graceful job error carrying the store's named message —
+/// the engine's unwind guard converts the task panic, never a pool panic.
+pub fn cross_validate_store(
+    folds: &crate::store::FoldStore,
+    penalty: Penalty,
+    lambdas: &[f64],
+    settings: CdSettings,
+    engine: &EngineConfig,
+) -> Result<CvResult> {
+    assert!(!lambdas.is_empty());
+    let k = folds.k();
+    let fold_ids: Vec<usize> = (0..k).collect();
+    let out = run_job(
+        engine,
+        &fold_ids,
+        |_ctx: &TaskCtx, &fold, em: &mut Emitter<usize, FoldErrors>| {
+            let q = folds
+                .quad_form_train(Some(fold))
+                .unwrap_or_else(|e| panic!("CV fold {fold}: train statistics: {e:#}"));
+            // sweep the whole warm-started path first, then score every λ
+            // in ONE panel pass over the held-out fold (bit-identical to
+            // per-λ scoring; under a spill budget this reads each panel
+            // once per fold instead of once per λ)
+            let mut nnz = Vec::with_capacity(lambdas.len());
+            let mut models = Vec::with_capacity(lambdas.len());
+            let mut warm: Option<Vec<f64>> = None;
+            for &lam in lambdas {
+                let sol = solve_cd(&q, penalty, lam, warm.as_deref(), settings);
+                models.push(q.to_original_scale(&sol.beta));
+                nnz.push(sol.n_active);
+                warm = Some(sol.beta);
+            }
+            let err = folds
+                .mse_many(fold, &models)
+                .unwrap_or_else(|e| panic!("CV fold {fold}: held-out score: {e:#}"));
+            em.emit(fold, FoldErrors { fold, err, nnz });
+        },
+    )?;
+
+    assemble_cv(lambdas, k, out.output.into_values().collect())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -213,6 +267,64 @@ mod tests {
         let cv = assemble_cv(&lambdas, 2, results).unwrap();
         assert_eq!(cv.fold_err, vec![vec![3.0, 3.0], vec![2.0, 1.0]]);
         assert_eq!(cv.lambda_opt, 0.5);
+    }
+
+    #[test]
+    fn store_cv_job_bit_identical_to_serial_sweep_at_any_budget() {
+        // ROADMAP item (b): the tiled CV sweep on the worker pool, fed from
+        // the panel store, must reproduce the serial resident sweep bit for
+        // bit — unbounded and under a one-panel spill budget alike.
+        use crate::stats::tiles::{shard_stats, TileLayout};
+        use crate::store::{FoldStore, MemStore, PanelStore, SpillStore};
+
+        let p = 8;
+        let k = 5;
+        let block = 3;
+        let layout = TileLayout::new(p + 1, block);
+        let d = generate(&SynthSpec::sparse_linear(4000, p, 0.3, 3));
+        let assigner = FoldAssigner::new(k, 77);
+        let mut fs: Vec<SuffStats> = (0..k).map(|_| SuffStats::new(p)).collect();
+        for i in 0..d.n() {
+            fs[assigner.fold_of(i as u64)].push(d.row(i), d.y[i]);
+        }
+        let tiled = FoldStats::new(fs.iter().map(|s| s.to_tiled(block)).collect()).unwrap();
+        let grid = lambda_grid(tiled.total().quad_form().lambda_max(1.0), 20, 1e-3);
+        let serial = cross_validate(&tiled, Penalty::lasso(), &grid, CdSettings::default()).unwrap();
+
+        let one_panel = 8 * (2 + p + 1 + layout.max_panel_len());
+        let backings: Vec<Box<dyn PanelStore>> = vec![
+            Box::new(MemStore::new()),
+            Box::new(SpillStore::new(one_panel).unwrap()),
+        ];
+        for backing in backings {
+            let budget = backing.budget_bytes();
+            let mut store = FoldStore::new(backing, k, p, layout);
+            for (fold, s) in fs.iter().enumerate() {
+                for pl in shard_stats(s, layout) {
+                    store.retire(fold, pl.panel, pl).unwrap();
+                }
+            }
+            store.seal().unwrap();
+            for workers in [1usize, 4] {
+                let par = cross_validate_store(
+                    &store,
+                    Penalty::lasso(),
+                    &grid,
+                    CdSettings::default(),
+                    &EngineConfig::with_workers(workers),
+                )
+                .unwrap();
+                assert_eq!(serial.fold_err, par.fold_err, "budget={budget:?} w={workers}");
+                assert_eq!(serial.lambda_opt, par.lambda_opt);
+                assert_eq!(serial.lambda_1se, par.lambda_1se);
+                assert_eq!(serial.mean_nnz, par.mean_nnz);
+            }
+            if let Some(budget) = budget {
+                let m = store.metrics();
+                assert!(m.resident_bytes_peak <= budget, "{} > {budget}", m.resident_bytes_peak);
+                assert!(m.spill_reads > 0, "one-panel budget must exercise the spill path");
+            }
+        }
     }
 
     #[test]

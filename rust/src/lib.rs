@@ -8,7 +8,9 @@
 //!   ([`mapreduce`]), the paper's robust distributable statistics
 //!   ([`stats`]), the glmnet-style covariance-update coordinate-descent
 //!   solver ([`solver`]), the built-in k-fold cross-validation phase
-//!   ([`cv`]), and the end-to-end Algorithm 1 driver ([`coordinator`]).
+//!   ([`cv`]), the spillable panel store bounding leader-resident
+//!   statistics ([`store`]), and the end-to-end Algorithm 1 driver
+//!   ([`coordinator`]).
 //! * **Layer 2 (python/compile/model.py)** — the per-chunk statistics and
 //!   CD-sweep compute graphs in JAX, AOT-lowered once to HLO text.
 //! * **Layer 1 (python/compile/kernels/)** — the Pallas blocked-Gram kernel
@@ -57,6 +59,7 @@ pub mod rng;
 pub mod runtime;
 pub mod solver;
 pub mod stats;
+pub mod store;
 pub mod util;
 
 /// Crate-wide result alias.

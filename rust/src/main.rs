@@ -45,8 +45,8 @@ commands:
   gen-data   --n N --p P [--density D] [--seed S] [--offset C] --out FILE [--shards K]
   fit        (--csv FILE[,FILE...] | --synth N,P[,DENSITY[,SEED]])
              [--penalty lasso|ridge|elastic_net:A] [--folds K] [--lambdas L]
-             [--workers W] [--seed S] [--gram-block B] [--screen-auto P]
-             [--config FILE] [--out MODEL] [--curve]
+             [--workers W] [--seed S] [--gram-block B] [--store-budget BYTES]
+             [--screen-auto P] [--config FILE] [--out MODEL] [--curve]
   predict    --model MODEL --csv FILE [--out FILE]
   experiments <t1|t2|t3|t4|t5|f1|f2|f3|all> [--quick] [--workers W]
   inspect-artifacts [--dir DIR]
@@ -184,6 +184,12 @@ fn build_config(f: &BTreeMap<String, String>) -> Result<FitConfig> {
         // panel-native CV/solve — no O(p²) allocation on the fit path
         cfg.gram_block = b.parse()?;
     }
+    if let Some(b) = f.get("store-budget") {
+        // spillable panel store: merged panels retire into a bounded
+        // resident set (LRU spill-to-disk beyond it), so leader memory is
+        // O(d·b · panels-in-flight) instead of O(k·d²)
+        cfg.store_budget_bytes = b.parse()?;
+    }
     if let Some(t) = f.get("screen-auto") {
         // screen-then-fit threshold on p (0 disables auto-screening)
         cfg.screen_auto = t.parse()?;
@@ -234,9 +240,18 @@ fn cmd_fit(args: &[String]) -> Result<()> {
     }
     println!("fold sizes: {:?}", report.fold_sizes);
     println!(
-        "peak resident statistic allocation: {}",
-        plrmr::bench::fmt_bytes(report.stat_peak_alloc_bytes)
+        "co-resident statistic peak: {} (leader-resident fold statistics: {})",
+        plrmr::bench::fmt_bytes(report.stat_peak_alloc_bytes),
+        plrmr::bench::fmt_bytes(report.resident_stat_bytes_peak),
     );
+    if report.spill_writes > 0 {
+        println!(
+            "panel store spilled {} ({} writes, {} reads back)",
+            plrmr::bench::fmt_bytes(report.spill_bytes),
+            report.spill_writes,
+            report.spill_reads,
+        );
+    }
     if let Some(s) = &report.screened {
         println!(
             "screen-auto engaged: kept {} of {} predictors (cutoff |corr| = {})",

@@ -21,7 +21,7 @@
 //! only ever collapses *complete* tree nodes, so it changes where a merge
 //! runs, never which merges run.
 
-use std::collections::{BTreeMap, VecDeque};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Condvar, Mutex};
@@ -293,6 +293,91 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
     }
 }
 
+/// Concurrent high-water gauge for bytes co-resident across the per-key
+/// reducers (retire mode): `add` on taking a value out of a flushed slot,
+/// `sub` when a merge consumes it or the merged value retires.
+struct ResidentGauge {
+    cur: AtomicUsize,
+    peak: AtomicUsize,
+}
+
+impl ResidentGauge {
+    fn new() -> Self {
+        ResidentGauge { cur: AtomicUsize::new(0), peak: AtomicUsize::new(0) }
+    }
+
+    fn add(&self, bytes: usize) {
+        let now = self.cur.fetch_add(bytes, Ordering::Relaxed) + bytes;
+        self.peak.fetch_max(now, Ordering::Relaxed);
+    }
+
+    /// Saturating: a `Mergeable` whose merge *grows* the payload would
+    /// otherwise subtract more at retirement than was ever added and wrap
+    /// the counter; the gauge stays a (possibly approximate) upper bound
+    /// instead.
+    fn sub(&self, bytes: usize) {
+        let _ = self
+            .cur
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |c| {
+                Some(c.saturating_sub(bytes))
+            });
+    }
+
+    fn peak(&self) -> usize {
+        self.peak.load(Ordering::Relaxed)
+    }
+}
+
+/// The per-key retire sink: called exactly once per key with the merged
+/// value ([`run_job_retire`]); an `Err` fails the job gracefully.
+type RetireFn<'a, K, V> = &'a (dyn Fn(K, V) -> Result<(), String> + Sync);
+
+/// Per-key replay of the fixed merge tree: descend from `node`, stop at
+/// the first occupied slot (it covers its whole subtree — leaked duplicate
+/// task copies below it are stale and must not be consumed, exactly like
+/// the tree reduce's `covered` scan), and merge left-then-right on the way
+/// up.  This visits the same (left, right) pairs in the same order as
+/// [`merge_maps`] over whole slots, so the value a key retires with is
+/// bit-for-bit the value the tree reduce would have put at the root.
+fn merge_key_from<K: Ord, V: Mergeable>(
+    tree: &MergeTree,
+    slots: &[Mutex<Option<BTreeMap<K, V>>>],
+    node: usize,
+    key: &K,
+    merges: &mut usize,
+    gauge: &ResidentGauge,
+) -> Result<Option<V>, MergeError> {
+    if tree.is_empty(node) {
+        return Ok(None);
+    }
+    {
+        let mut slot = slots[node].lock().unwrap();
+        if let Some(map) = slot.as_mut() {
+            let v = map.remove(key);
+            if let Some(v) = &v {
+                gauge.add(v.payload_bytes());
+            }
+            return Ok(v);
+        }
+    }
+    if node >= tree.first_leaf() {
+        return Ok(None);
+    }
+    let left = merge_key_from(tree, slots, 2 * node, key, merges, gauge)?;
+    let right = merge_key_from(tree, slots, 2 * node + 1, key, merges, gauge)?;
+    match (left, right) {
+        (Some(mut l), Some(r)) => {
+            let right_bytes = r.payload_bytes();
+            *merges += 1;
+            l.merge_in(r)?;
+            gauge.sub(right_bytes);
+            Ok(Some(l))
+        }
+        (Some(l), None) => Ok(Some(l)),
+        (None, r) => Ok(r),
+    }
+}
+
 /// Run one MapReduce job over `inputs` (one task per input split).
 ///
 /// `map_fn(ctx, split, emitter)` is called once per task attempt; it must be
@@ -304,7 +389,54 @@ pub fn run_job<I, K, V>(
 ) -> Result<JobOutput<K, V>>
 where
     I: Sync,
-    K: Ord + Send,
+    K: Ord + Clone + Send,
+    V: Mergeable + Send,
+{
+    run_job_core(cfg, inputs, map_fn, None)
+}
+
+/// Run one MapReduce job with **per-key reducer placement**: instead of
+/// level-merging whole slot maps up the tree and accumulating every key in
+/// the leader's output map, each key becomes its own reduce task on the
+/// worker pool — the owning worker replays the fixed merge tree for that
+/// key alone (bit-identical by construction: the per-key replay visits
+/// the same merge pairs in the same order as the slot-map tree) and
+/// **retires** the merged value through `retire` the moment it completes.
+/// The leader therefore never holds the merged output co-resident: with a
+/// [`crate::store::PanelStore`] sink, leader-resident statistics are
+/// bounded by the store's budget, not by k·d².
+///
+/// `retire` is called exactly once per key (first-writer-wins dedup of
+/// straggler duplicates happens at slot flush, same as [`run_job`]); a
+/// retire error fails the job gracefully with the message.
+pub fn run_job_retire<I, K, V, R>(
+    cfg: &EngineConfig,
+    inputs: &[I],
+    map_fn: impl Fn(&TaskCtx, &I, &mut Emitter<K, V>) + Sync,
+    retire: R,
+) -> Result<JobMetrics>
+where
+    I: Sync,
+    K: Ord + Clone + Send,
+    V: Mergeable + Send,
+    R: Fn(K, V) -> Result<(), String> + Sync,
+{
+    let out = run_job_core(cfg, inputs, map_fn, Some(&retire))?;
+    Ok(out.metrics)
+}
+
+/// The one engine body behind [`run_job`] (tree reduce, output at the
+/// root) and [`run_job_retire`] (per-key reduce, output retired into a
+/// sink).  Map and shuffle phases are identical in both modes.
+fn run_job_core<I, K, V>(
+    cfg: &EngineConfig,
+    inputs: &[I],
+    map_fn: impl Fn(&TaskCtx, &I, &mut Emitter<K, V>) + Sync,
+    retire: Option<RetireFn<'_, K, V>>,
+) -> Result<JobOutput<K, V>>
+where
+    I: Sync,
+    K: Ord + Clone + Send,
     V: Mergeable + Send,
 {
     let started = Instant::now();
@@ -327,6 +459,12 @@ where
     map_queue.push_all((0..n_tasks).map(|t| (t, 0)));
     // reduce-tree nodes, pushed level by level after the map phase
     let reduce_queue: NotifyQueue<usize> = NotifyQueue::new();
+    // per-key reduce tasks (retire mode only)
+    let key_queue: NotifyQueue<K> = NotifyQueue::new();
+    // merges executed by per-key reducers (retire mode)
+    let retire_merges = AtomicUsize::new(0);
+    // bytes co-resident across the per-key reducers (retire mode)
+    let reduce_gauge = ResidentGauge::new();
     // merge-tree value slots, heap-indexed (slot 0 unused)
     let slots: Vec<Mutex<Option<BTreeMap<K, V>>>> =
         (0..tree.node_count()).map(|_| Mutex::new(None)).collect();
@@ -355,6 +493,11 @@ where
             let tx = tx.clone();
             let map_queue = &map_queue;
             let reduce_queue = &reduce_queue;
+            let key_queue = &key_queue;
+            let retire_merges = &retire_merges;
+            let reduce_gauge = &reduce_gauge;
+            // `retire` is Option<&dyn Fn…> (Copy): the move closure below
+            // captures its own copy per worker.
             let slots = &slots;
             let flushed = &flushed;
             let level_pending = &level_pending;
@@ -513,38 +656,81 @@ where
                 payload_max.fetch_max(max_entry, Ordering::Relaxed);
                 combined_count.fetch_add(pre_combined, Ordering::Relaxed);
                 flushed.done_one();
-                // reduce phase: execute tree merges as the leader schedules
-                // them.  Jobs within a level touch disjoint slots.
-                while let Some(node) = reduce_queue.pop() {
-                    let left = slots[2 * node].lock().unwrap().take();
-                    let right = slots[2 * node + 1].lock().unwrap().take();
-                    let merged = match (left, right) {
-                        (Some(l), Some(r)) => {
-                            // unwind-guarded: level_pending.done_one() below
-                            // must run even if a merge_in panics
-                            let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
-                                || merge_maps(l, r),
-                            ))
-                            .unwrap_or_else(|payload| {
-                                Err(MergeError::new(panic_message(payload.as_ref())))
-                            });
-                            match res {
-                                Ok(m) => Some(m),
-                                Err(e) => {
-                                    record_merge_failure(
-                                        merge_failure,
-                                        &format!("reduce-tree node {node}"),
-                                        e,
-                                    );
-                                    None
+                match retire {
+                    // reduce phase (tree mode): execute tree merges as the
+                    // leader schedules them.  Jobs within a level touch
+                    // disjoint slots.
+                    None => {
+                        while let Some(node) = reduce_queue.pop() {
+                            let left = slots[2 * node].lock().unwrap().take();
+                            let right = slots[2 * node + 1].lock().unwrap().take();
+                            let merged = match (left, right) {
+                                (Some(l), Some(r)) => {
+                                    // unwind-guarded: level_pending.done_one()
+                                    // below must run even if a merge_in panics
+                                    let res =
+                                        std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                                            || merge_maps(l, r),
+                                        ))
+                                        .unwrap_or_else(|payload| {
+                                            Err(MergeError::new(panic_message(payload.as_ref())))
+                                        });
+                                    match res {
+                                        Ok(m) => Some(m),
+                                        Err(e) => {
+                                            record_merge_failure(
+                                                merge_failure,
+                                                &format!("reduce-tree node {node}"),
+                                                e,
+                                            );
+                                            None
+                                        }
+                                    }
                                 }
-                            }
+                                (Some(l), None) => Some(l),
+                                (None, r) => r,
+                            };
+                            *slots[node].lock().unwrap() = merged;
+                            level_pending.done_one();
                         }
-                        (Some(l), None) => Some(l),
-                        (None, r) => r,
-                    };
-                    *slots[node].lock().unwrap() = merged;
-                    level_pending.done_one();
+                    }
+                    // reduce phase (retire mode): this worker OWNS each key
+                    // it pops — it replays the key's fixed merge tree and
+                    // retires the merged value into the sink the moment the
+                    // key completes, so nothing accumulates in a leader map.
+                    Some(retire_fn) => {
+                        while let Some(key) = key_queue.pop() {
+                            // unwind-guarded like the tree merges: the
+                            // level_pending gate must see every key done
+                            let result =
+                                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                                    let mut merges = 0usize;
+                                    let merged = merge_key_from(
+                                        &tree,
+                                        slots,
+                                        1,
+                                        &key,
+                                        &mut merges,
+                                        reduce_gauge,
+                                    )?;
+                                    retire_merges.fetch_add(merges, Ordering::Relaxed);
+                                    if let Some(v) = merged {
+                                        let bytes = v.payload_bytes();
+                                        let res = retire_fn(key, v);
+                                        reduce_gauge.sub(bytes);
+                                        res.map_err(MergeError::new)?;
+                                    }
+                                    Ok::<(), MergeError>(())
+                                }))
+                                .unwrap_or_else(|payload| {
+                                    Err(MergeError::new(panic_message(payload.as_ref())))
+                                });
+                            if let Err(e) = result {
+                                record_merge_failure(merge_failure, "per-key reduce", e);
+                            }
+                            level_pending.done_one();
+                        }
+                    }
                 }
             });
         }
@@ -622,34 +808,59 @@ where
                     }
                 }
             }
-            // Reduce: execute the merge tree bottom-up, one level at a
-            // time; every node in a level merges in parallel on the pool.
-            // A node is already *covered* when it — or any ancestor — was
-            // pre-combined on a worker; covered subtrees need no merges
-            // (duplicate task copies leaked below a covered node are
-            // simply never consumed).
             let t_reduce = Instant::now();
-            let mut covered = vec![false; tree.node_count()];
-            for node in 1..tree.node_count() {
-                covered[node] = (node > 1 && covered[node >> 1])
-                    || slots[node].lock().unwrap().is_some();
-            }
-            for lvl in (0..tree.depth()).rev() {
-                let jobs: Vec<usize> = tree
-                    .level(lvl)
-                    .filter(|&nd| !tree.is_empty(nd) && !covered[nd])
-                    .collect();
-                if jobs.is_empty() {
-                    continue;
+            match retire {
+                None => {
+                    // Reduce (tree mode): execute the merge tree bottom-up,
+                    // one level at a time; every node in a level merges in
+                    // parallel on the pool.  A node is already *covered*
+                    // when it — or any ancestor — was pre-combined on a
+                    // worker; covered subtrees need no merges (duplicate
+                    // task copies leaked below a covered node are simply
+                    // never consumed).
+                    let mut covered = vec![false; tree.node_count()];
+                    for node in 1..tree.node_count() {
+                        covered[node] = (node > 1 && covered[node >> 1])
+                            || slots[node].lock().unwrap().is_some();
+                    }
+                    for lvl in (0..tree.depth()).rev() {
+                        let jobs: Vec<usize> = tree
+                            .level(lvl)
+                            .filter(|&nd| !tree.is_empty(nd) && !covered[nd])
+                            .collect();
+                        if jobs.is_empty() {
+                            continue;
+                        }
+                        metrics.reduce_merges += jobs.len();
+                        level_pending.add(jobs.len());
+                        reduce_queue.push_all(jobs);
+                        level_pending.wait_zero();
+                    }
                 }
-                metrics.reduce_merges += jobs.len();
-                level_pending.add(jobs.len());
-                reduce_queue.push_all(jobs);
-                level_pending.wait_zero();
+                Some(_) => {
+                    // Reduce (retire mode): scan the flushed slots for the
+                    // key universe (cheap — keys only, no values move), then
+                    // hand each key to an owning worker.  Keys leaked in
+                    // duplicate slots below covered nodes dedup here and
+                    // are never consumed by the per-key replay.
+                    let mut keys: BTreeSet<K> = BTreeSet::new();
+                    for slot in slots.iter().skip(1) {
+                        if let Some(map) = slot.lock().unwrap().as_ref() {
+                            keys.extend(map.keys().cloned());
+                        }
+                    }
+                    let jobs: Vec<K> = keys.into_iter().collect();
+                    if !jobs.is_empty() {
+                        level_pending.add(jobs.len());
+                        key_queue.push_all(jobs);
+                        level_pending.wait_zero();
+                    }
+                }
             }
             metrics.reduce_s = t_reduce.elapsed().as_secs_f64();
         }
         reduce_queue.close();
+        key_queue.close();
     });
 
     if failure.is_none() {
@@ -660,6 +871,8 @@ where
     }
 
     let output = slots[1].lock().unwrap().take().unwrap_or_default();
+    metrics.reduce_merges += retire_merges.load(Ordering::Relaxed);
+    metrics.reduce_resident_bytes_peak = reduce_gauge.peak();
     metrics.shuffle_payloads = payload_count.load(Ordering::Relaxed);
     metrics.shuffle_bytes = payload_bytes.load(Ordering::Relaxed);
     metrics.max_payload_bytes = payload_max.load(Ordering::Relaxed);
@@ -1150,5 +1363,173 @@ mod tests {
         let whole = untiled.output.into_values().next().unwrap();
         assert_eq!(assembled, whole);
         assert_eq!(assembled.syy().to_bits(), whole.syy().to_bits());
+    }
+
+    /// The suffstats workload of [`suffstats_job`] executed through the
+    /// per-key retire reduce, collecting into a map sink (erroring on any
+    /// duplicate retirement).
+    fn suffstats_job_retire(cfg: &EngineConfig) -> BTreeMap<usize, SuffStats> {
+        let p = 3;
+        let k = 4;
+        let rows: Vec<(Vec<f64>, f64)> = (0..700)
+            .map(|i| {
+                let x: Vec<f64> = (0..p).map(|j| ((i * 31 + j * 7) % 11) as f64 / 3.0).collect();
+                let y = x.iter().sum::<f64>() + (i % 5) as f64 / 7.0;
+                (x, y)
+            })
+            .collect();
+        let splits: Vec<(usize, Vec<(Vec<f64>, f64)>)> = rows
+            .chunks(37)
+            .scan(0usize, |off, c| {
+                let s = (*off, c.to_vec());
+                *off += c.len();
+                Some(s)
+            })
+            .collect();
+        let assigner = FoldAssigner::new(k, 123);
+        let sink: Mutex<BTreeMap<usize, SuffStats>> = Mutex::new(BTreeMap::new());
+        run_job_retire(
+            cfg,
+            &splits,
+            move |_ctx, (offset, chunk), em| {
+                for (i, (x, y)) in chunk.iter().enumerate() {
+                    let fold = assigner.fold_of((offset + i) as u64);
+                    em.upsert_with(fold, || SuffStats::new(p), |s| s.push(x, *y));
+                }
+            },
+            |fold, stats| {
+                let mut m = sink.lock().unwrap();
+                if m.contains_key(&fold) {
+                    return Err(format!("fold {fold} retired twice"));
+                }
+                m.insert(fold, stats);
+                Ok(())
+            },
+        )
+        .unwrap();
+        sink.into_inner().unwrap()
+    }
+
+    #[test]
+    fn per_key_retire_reduce_bit_identical_to_tree_reduce() {
+        // The distributed-reduce tentpole invariant: retiring each key from
+        // its own per-key replay of the merge tree produces the exact f64
+        // bit patterns the tree reduce put at the root — across worker
+        // counts, combining on/off, and chaotic fault injection.
+        let baseline = stats_bits(&suffstats_job(&EngineConfig::with_workers(1)).output);
+        for workers in [1usize, 4, 8] {
+            for combine in [false, true] {
+                for chaos in [false, true] {
+                    let mut cfg = EngineConfig::with_workers(workers);
+                    cfg.combine = combine;
+                    if chaos {
+                        cfg.fault = FaultPlan::chaotic(0.3, 99);
+                    }
+                    let retired = suffstats_job_retire(&cfg);
+                    assert_eq!(
+                        stats_bits(&retired),
+                        baseline,
+                        "retire-mode bit drift at w={workers} combine={combine} chaos={chaos}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn retire_reduce_counts_merges_and_inflight_bytes() {
+        // combining off: every task's output reaches the slots, so the
+        // per-key reduce must actually merge (and the in-flight gauge must
+        // see payloads move through the reducers)
+        let data = splits(16, 64);
+        let mut cfg = EngineConfig::with_workers(4);
+        cfg.combine = false;
+        let sink: Mutex<BTreeMap<usize, u64>> = Mutex::new(BTreeMap::new());
+        let metrics = run_job_retire(
+            &cfg,
+            &data,
+            |_ctx, split: &Vec<u64>, em: &mut Emitter<usize, u64>| {
+                for &v in split {
+                    em.emit((v % 7) as usize, 1u64);
+                }
+            },
+            |k, v| {
+                sink.lock().unwrap().insert(k, v);
+                Ok(())
+            },
+        )
+        .unwrap();
+        let out = sink.into_inner().unwrap();
+        assert_eq!(out, linear_reference(&data));
+        assert!(metrics.reduce_merges > 0, "per-key replays must merge");
+        assert!(
+            metrics.reduce_resident_bytes_peak > 0,
+            "reducer in-flight gauge must see the payloads"
+        );
+        // tree mode leaves the retire gauge untouched
+        let tree = counting_job(&cfg, &data);
+        assert_eq!(tree.metrics.reduce_resident_bytes_peak, 0);
+        assert_eq!(tree.output, out);
+    }
+
+    #[test]
+    fn retire_error_fails_the_job_gracefully() {
+        let data = splits(6, 10);
+        for workers in [1usize, 4] {
+            let res = run_job_retire(
+                &EngineConfig::with_workers(workers),
+                &data,
+                |_ctx, split: &Vec<u64>, em: &mut Emitter<usize, u64>| {
+                    for &v in split {
+                        em.emit((v % 3) as usize, 1u64);
+                    }
+                },
+                |k, _v| Err(format!("sink rejected key {k}")),
+            );
+            let err = format!("{:#}", res.expect_err("must fail"));
+            assert!(err.contains("sink rejected key"), "w={workers}: {err}");
+            assert!(err.contains("mapreduce job failed"), "w={workers}: {err}");
+        }
+    }
+
+    #[test]
+    fn retire_mode_single_task_and_empty_jobs() {
+        let sink: Mutex<BTreeMap<usize, u64>> = Mutex::new(BTreeMap::new());
+        let m = run_job_retire(
+            &EngineConfig::with_workers(4),
+            &splits(1, 30),
+            |_ctx, split: &Vec<u64>, em: &mut Emitter<usize, u64>| {
+                for &v in split {
+                    em.emit((v % 7) as usize, 1u64);
+                }
+            },
+            |k, v| {
+                sink.lock().unwrap().insert(k, v);
+                Ok(())
+            },
+        )
+        .unwrap();
+        assert_eq!(m.tasks_completed, 1);
+        let total: u64 = sink.into_inner().unwrap().values().sum();
+        assert_eq!(total, 30);
+        // empty input: no keys, no retirements, no deadlock
+        let sink: Mutex<BTreeMap<usize, u64>> = Mutex::new(BTreeMap::new());
+        let empty: Vec<Vec<u64>> = Vec::new();
+        let m = run_job_retire(
+            &EngineConfig::with_workers(2),
+            &empty,
+            |_ctx, split: &Vec<u64>, em: &mut Emitter<usize, u64>| {
+                for &v in split {
+                    em.emit(0usize, v);
+                }
+            },
+            |k, v| {
+                sink.lock().unwrap().insert(k, v);
+                Ok(())
+            },
+        )
+        .unwrap();
+        assert_eq!(m.tasks_completed, 0);
+        assert!(sink.into_inner().unwrap().is_empty());
     }
 }

@@ -220,8 +220,24 @@ pub struct JobMetrics {
     pub max_payload_bytes: usize,
     /// internal tree nodes pre-merged on workers (combiner effectiveness)
     pub combined_nodes: usize,
-    /// merge-tree nodes the reduce phase still had to compute
+    /// merge-tree nodes the reduce phase still had to compute (tree mode),
+    /// or value merges executed by the per-key reducers (retire mode)
     pub reduce_merges: usize,
+    /// peak bytes of per-key merge state co-resident across the reducers
+    /// (retire-mode jobs only; 0 for tree-mode jobs) — the "reducers" half
+    /// of the co-resident statistic accounting
+    pub reduce_resident_bytes_peak: usize,
+    /// peak bytes of merged statistics resident in the leader's adopted
+    /// panel store (stamped by the job owner from
+    /// [`crate::store::StoreMetrics`]; 0 for jobs without a store sink) —
+    /// with a budgeted spill store this is ≤ max(budget, one panel)
+    pub resident_stat_bytes_peak: usize,
+    /// cumulative bytes the store sink wrote to spill files during the job
+    pub spill_bytes: usize,
+    /// panel loads from spill files during the job
+    pub spill_reads: usize,
+    /// panel writes to spill files during the job
+    pub spill_writes: usize,
     pub per_worker: Vec<WorkerMetrics>,
 }
 

@@ -20,6 +20,12 @@
 //!   level-parallel by the worker pool, with workers pre-combining
 //!   tree-adjacent runs during the map phase — so the O(n_tasks · k · p²)
 //!   merge work no longer serializes on the leader,
+//! * **per-key reducer placement** ([`engine::run_job_retire`]): each key
+//!   becomes its own reduce task owned by a worker that replays the fixed
+//!   tree for that key alone and *retires* the merged value into a sink
+//!   (e.g. the spillable [`crate::store::PanelStore`]) the moment it
+//!   completes — the leader never accumulates the merged output map, so
+//!   leader-resident statistics are bounded by the sink's budget,
 //! * modeled per-job/per-task scheduling overhead ([`job::JobCosts`]) so
 //!   experiments can report *cluster-shaped* time for iterative baselines
 //!   (ADMM pays the job overhead once per iteration; Algorithm 1 pays it
@@ -30,7 +36,7 @@ pub mod fault;
 pub mod job;
 pub mod partition;
 
-pub use engine::{run_job, Emitter, EngineConfig, JobOutput, TaskCtx};
+pub use engine::{run_job, run_job_retire, Emitter, EngineConfig, JobOutput, TaskCtx};
 pub use fault::FaultPlan;
 pub use job::{JobCosts, JobMetrics, MergeError, Mergeable};
 pub use partition::{FoldAssigner, MergeTree};

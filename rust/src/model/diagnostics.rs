@@ -26,13 +26,23 @@ pub struct Diagnostics {
 /// statistic backing — reads only).
 pub fn diagnostics<S: Scatter>(stats: &SuffStats<S>, model: &FittedModel) -> Diagnostics {
     assert_eq!(stats.p(), model.p(), "model/stats width mismatch");
-    let n = stats.count();
+    from_parts(
+        stats.count(),
+        stats.moments().weight(),
+        stats.mse(model.alpha, &model.beta),
+        stats.syy(),
+        model.nnz(),
+    )
+}
+
+/// The arithmetic behind [`diagnostics`], from scalars alone — the panel
+/// store's streaming path ([`crate::store::FoldStore::diagnostics`]) feeds
+/// the identical `(n, w, mse, syy)` doubles through here, so the two
+/// paths produce bit-identical reports.
+pub fn from_parts(n: u64, w: f64, mse: f64, syy: f64, df: usize) -> Diagnostics {
     assert!(n >= 2, "need at least 2 observations");
-    let w = stats.moments().weight();
-    let mse = stats.mse(model.alpha, &model.beta);
-    let y_var = stats.syy() / w;
+    let y_var = syy / w;
     let r2 = if y_var > 0.0 { 1.0 - mse / y_var } else { 0.0 };
-    let df = model.nnz();
     let nf = n as f64;
     let adj_r2 = if nf - df as f64 - 1.0 > 0.0 {
         1.0 - (1.0 - r2) * (nf - 1.0) / (nf - df as f64 - 1.0)

@@ -60,8 +60,15 @@ pub fn default_keep(n: u64, p: usize) -> usize {
 /// therefore be shorter than `m`.  Errors (a named one, no panic) only if
 /// *every* correlation is NaN: there is no sane sub-model to screen to.
 pub fn screen_top_m<S: Scatter>(stats: &SuffStats<S>, m: usize) -> Result<ScreenReport> {
-    let abs_corr = marginal_abs_correlations(stats);
-    let p = stats.p();
+    rank_top_m(marginal_abs_correlations(stats), m)
+}
+
+/// The ranking half of [`screen_top_m`], over an already-computed
+/// |marginal correlation| vector — the ONE home of the keep-set rule, so
+/// the resident path and the panel-store streaming path
+/// ([`crate::store::FoldStore::marginal_abs_corr`]) cannot drift.
+pub fn rank_top_m(abs_corr: Vec<f64>, m: usize) -> Result<ScreenReport> {
+    let p = abs_corr.len();
     let mut order: Vec<usize> = (0..p).filter(|&j| !abs_corr[j].is_nan()).collect();
     anyhow::ensure!(
         !order.is_empty(),

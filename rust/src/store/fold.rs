@@ -1,0 +1,884 @@
+//! The driver's view of a panel store: k fold panel sets plus their merged
+//! total, with every CV-phase statistic computed **streaming**, panel by
+//! panel, through the store's budgeted working set.
+//!
+//! This is the store-side twin of [`crate::cv::FoldStats`] — the same fold
+//! algebra, but no fold statistic is ever materialized whole:
+//!
+//! * the total is merged per panel at [`FoldStore::seal`] (fold order, the
+//!   exact [`crate::stats::Moments::merge`] scalar sequence via
+//!   [`StatPanel::merge`]) and retired back into the store under the
+//!   reserved fold index `k`;
+//! * `total − s_i` runs through ONE reused panel scratch
+//!   ([`crate::stats::tiles::sub_panel_into`] — the bit-pinned row
+//!   restriction of [`crate::stats::Moments::sub_into`]);
+//! * [`FoldStore::quad_form_train`] standardizes straight off the subbed
+//!   panels into a panel-tiled Gram (two passes: scales/xty, then rows) —
+//!   the expressions are copied from [`crate::stats::SuffStats::quad_form`]
+//!   so every Gram entry is bit-identical to the resident path;
+//! * [`FoldStore::mse`] replays [`crate::stats::SuffStats::mse`]'s exact
+//!   accumulation order across panel seams;
+//! * [`FoldStore::subset_train`]/[`FoldStore::subset_fold`] gather
+//!   screened sub-statistics entry-by-entry (verbatim copies — the
+//!   screen-auto path's (m+1)-dim island).
+//!
+//! The driver-resident working set is therefore O(d·b) transients + the
+//! solver's own p-dim Gram, while the fold statistics themselves obey the
+//! store's budget.
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::stats::suffstats::QuadForm;
+use crate::stats::symm::{tri_idx, SymMat};
+use crate::stats::tiles::{assemble_stats_tiled, sub_panel_into, StatPanel, TileLayout};
+use crate::stats::{Moments, Scatter, SuffStats, TiledSymMat};
+
+use super::{PanelKey, PanelStore, StoreMetrics};
+
+/// Replicated per-fold header, cached at seal time: O(d) per fold — the
+/// only whole-fold state the driver keeps resident.
+#[derive(Debug, Clone)]
+struct FoldHeader {
+    n: u64,
+    w: f64,
+    mean: Vec<f64>,
+    /// the (p, p) scatter entry Σ(y−ȳ)² — last double of the last panel
+    syy: f64,
+}
+
+/// Diagonal/last-column profile of one (possibly complemented) fold
+/// statistic: everything standardization and screening need that is O(p),
+/// gathered in one streaming pass.
+#[derive(Debug)]
+struct TrainProfile {
+    n: u64,
+    w: f64,
+    mean: Vec<f64>,
+    /// Sxx\[j,j\] per predictor
+    diag: Vec<f64>,
+    /// Sxy\[j\] per predictor
+    sxy: Vec<f64>,
+    syy: f64,
+}
+
+/// k fold panel sets + merged total behind a [`PanelStore`] handle.
+#[derive(Debug)]
+pub struct FoldStore {
+    store: Box<dyn PanelStore>,
+    k: usize,
+    p: usize,
+    layout: TileLayout,
+    /// per-fold headers (index k = total); filled by [`FoldStore::seal`]
+    headers: Vec<FoldHeader>,
+    sealed: bool,
+}
+
+impl FoldStore {
+    /// Wrap a backing store for `k` folds of p-predictor statistics under
+    /// `layout` (dimension must be p+1).
+    pub fn new(store: Box<dyn PanelStore>, k: usize, p: usize, layout: TileLayout) -> FoldStore {
+        assert_eq!(layout.n(), p + 1, "layout dimension must be p+1");
+        FoldStore { store, k, p, layout, headers: Vec::new(), sealed: false }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    pub fn layout(&self) -> TileLayout {
+        self.layout
+    }
+
+    /// The reserved fold index of the merged total.
+    pub fn total_fold(&self) -> usize {
+        self.k
+    }
+
+    /// Total rows across all folds (available after seal).
+    pub fn n(&self) -> u64 {
+        debug_assert!(self.sealed);
+        self.headers[self.k].n
+    }
+
+    /// Rows in fold `i` (or the total at `i == k`).
+    pub fn fold_count(&self, i: usize) -> u64 {
+        debug_assert!(self.sealed);
+        self.headers[i].n
+    }
+
+    /// Backing-store accounting.
+    pub fn metrics(&self) -> StoreMetrics {
+        self.store.metrics()
+    }
+
+    /// Backing-store resident budget (`None` = unbounded).
+    pub fn budget_bytes(&self) -> Option<usize> {
+        self.store.budget_bytes()
+    }
+
+    /// The engine's retire sink: validate the payload's shape against the
+    /// store's layout, then put it — exactly once per `(fold, panel)` key.
+    /// Errors are `String`s (the engine folds them into a graceful job
+    /// failure with the offending key in the message).
+    pub fn retire(&self, fold: usize, panel: usize, value: StatPanel) -> Result<(), String> {
+        if fold >= self.k {
+            return Err(format!(
+                "tiled statistics job emitted fold {fold}, but k = {}",
+                self.k
+            ));
+        }
+        if panel >= self.layout.n_panels() {
+            return Err(format!(
+                "tiled statistics job emitted panel {panel}, but the layout has {}",
+                self.layout.n_panels()
+            ));
+        }
+        if value.panel != panel {
+            return Err(format!(
+                "reduce key names panel {panel} but the payload carries panel {}",
+                value.panel
+            ));
+        }
+        if value.d != self.layout.n() || value.block != self.layout.block() {
+            return Err(format!(
+                "panel (fold {fold}, panel {panel}): got (d={}, b={}), layout says (d={}, b={})",
+                value.d,
+                value.block,
+                self.layout.n(),
+                self.layout.block()
+            ));
+        }
+        if value.mean.len() != self.layout.n() || value.m2.len() != self.layout.panel_len(panel) {
+            return Err(format!(
+                "panel (fold {fold}, panel {panel}): {}+{} entries, layout says {}+{}",
+                value.mean.len(),
+                value.m2.len(),
+                self.layout.n(),
+                self.layout.panel_len(panel)
+            ));
+        }
+        self.store
+            .put(PanelKey { fold, panel }, value)
+            .map_err(|e| e.to_string())
+    }
+
+    /// Owned copy of one panel (`fold == k` addresses the total).
+    pub fn panel(&self, fold: usize, panel: usize) -> Result<StatPanel> {
+        self.store
+            .get(PanelKey { fold, panel })
+            .map_err(|e| anyhow!("{e}"))
+    }
+
+    /// Validate coverage and header agreement, then merge the per-panel
+    /// total and cache the O(d) fold headers.  Mirrors the invariants of
+    /// `tiles::check_panels` + [`crate::cv::FoldStats::new`]: full panel
+    /// coverage per fold, bit-identical replicated `(n, w, mean)` headers
+    /// (the fixed-merge-tree contract), no empty fold, k ≥ 2 — each a
+    /// named error, never a silently-wrong statistic.
+    pub fn seal(&mut self) -> Result<()> {
+        ensure!(!self.sealed, "panel store already sealed");
+        ensure!(
+            self.k >= 2,
+            "cross validation needs k >= 2 folds, got {}",
+            self.k
+        );
+        let n_panels = self.layout.n_panels();
+        // presence first — no panel reads, just key checks, so missing
+        // panels fail fast by name before any spill I/O
+        for fold in 0..self.k {
+            let present: Vec<usize> = (0..n_panels)
+                .filter(|&t| self.store.contains(PanelKey { fold, panel: t }))
+                .collect();
+            if present.is_empty() {
+                bail!("fold {fold} is empty — k too large for the data?");
+            }
+            if present.len() != n_panels {
+                bail!(
+                    "fold {fold} statistics incomplete: {} of {n_panels} panels \
+                     arrived (have {present:?})",
+                    present.len()
+                );
+            }
+        }
+        // one read per (fold, panel): header validation fused with the
+        // per-panel total merge — the merge is fold order, the exact
+        // scalar sequence FoldStats::new replays (empty.merge(f0) ==
+        // copy of f0)
+        let mut headers: Vec<Option<FoldHeader>> = vec![None; self.k];
+        let mut total_header: Option<FoldHeader> = None;
+        for t in 0..n_panels {
+            let mut acc: Option<StatPanel> = None;
+            for fold in 0..self.k {
+                let pl = self.panel(fold, t)?;
+                match &headers[fold] {
+                    None => {
+                        // t == 0: this panel's header is the fold's reference
+                        if pl.n == 0 {
+                            bail!("fold {fold} is empty — k too large for the data?");
+                        }
+                        headers[fold] = Some(FoldHeader {
+                            n: pl.n,
+                            w: pl.w,
+                            mean: pl.mean.clone(),
+                            syy: 0.0,
+                        });
+                    }
+                    Some(head) => {
+                        let header_ok = pl.n == head.n
+                            && pl.w.to_bits() == head.w.to_bits()
+                            && pl
+                                .mean
+                                .iter()
+                                .zip(&head.mean)
+                                .all(|(a, b)| a.to_bits() == b.to_bits());
+                        ensure!(
+                            header_ok,
+                            "fold {fold}: panel {t} header drifted from panel 0 — \
+                             panels of one fold must replay identical merges \
+                             (n {} vs {})",
+                            pl.n,
+                            head.n
+                        );
+                    }
+                }
+                if t == n_panels - 1 {
+                    let syy = *pl.m2.last().expect("panel has entries");
+                    headers[fold].as_mut().expect("header captured").syy = syy;
+                }
+                match &mut acc {
+                    None => acc = Some(pl),
+                    Some(a) => a
+                        .merge(&pl)
+                        .map_err(|e| anyhow!("merging fold {fold} into the total: {e}"))?,
+                }
+            }
+            let acc = acc.expect("k >= 2 folds");
+            if t == n_panels - 1 {
+                total_header = Some(FoldHeader {
+                    n: acc.n,
+                    w: acc.w,
+                    mean: acc.mean.clone(),
+                    syy: *acc.m2.last().expect("panel has entries"),
+                });
+            }
+            self.store
+                .put(PanelKey { fold: self.k, panel: t }, acc)
+                .map_err(|e| anyhow!("{e}"))?;
+        }
+        let mut headers: Vec<FoldHeader> =
+            headers.into_iter().map(|h| h.expect("every fold validated")).collect();
+        headers.push(total_header.expect("at least one panel"));
+        self.headers = headers;
+        self.sealed = true;
+        Ok(())
+    }
+
+    /// Stream the panels of `total − s_i` (or the total itself when
+    /// `held_out` is `None`) in ascending panel order through one reused
+    /// scratch.  The subtraction is [`sub_panel_into`] — bit-pinned
+    /// against [`crate::stats::Moments::sub_into`].
+    fn for_each_train_panel(
+        &self,
+        held_out: Option<usize>,
+        mut f: impl FnMut(&StatPanel) -> Result<()>,
+    ) -> Result<()> {
+        debug_assert!(self.sealed, "seal() before streaming");
+        let mut scratch: Option<StatPanel> = None;
+        for t in 0..self.layout.n_panels() {
+            let total = self.panel(self.k, t)?;
+            match held_out {
+                None => f(&total)?,
+                Some(i) => {
+                    let part = self.panel(i, t)?;
+                    let out = scratch.get_or_insert_with(|| total.clone());
+                    out.panel = t;
+                    out.m2.resize(self.layout.panel_len(t), 0.0);
+                    sub_panel_into(&total, &part, out)
+                        .map_err(|e| anyhow!("fold {i} complement, panel {t}: {e}"))?;
+                    f(out)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// One pass: gather `(n, w, mean)`, the Sxx diagonal, the Sxy column
+    /// and Syy of a train statistic — everything O(p) that
+    /// standardization and SIS screening read.
+    fn train_profile(&self, held_out: Option<usize>) -> Result<TrainProfile> {
+        let p = self.p;
+        let d = p + 1;
+        let mut diag = vec![0.0; p];
+        let mut sxy = vec![0.0; p];
+        let mut syy = 0.0;
+        let mut header: Option<(u64, f64, Vec<f64>)> = None;
+        self.for_each_train_panel(held_out, |pl| {
+            if header.is_none() {
+                header = Some((pl.n, pl.w, pl.mean.clone()));
+            }
+            let mut k = 0usize;
+            for i in pl.rows() {
+                let tail = &pl.m2[k..k + (d - i)];
+                if i < p {
+                    diag[i] = tail[0];
+                    sxy[i] = tail[d - 1 - i];
+                } else {
+                    syy = tail[0];
+                }
+                k += d - i;
+            }
+            Ok(())
+        })?;
+        let (n, w, mean) = header.expect("layout has at least one panel");
+        Ok(TrainProfile { n, w, mean, diag, sxy, syy })
+    }
+
+    /// The standardized quadratic form of `total − s_i` (`None` ⇒ the
+    /// total), built panel-by-panel into a panel-tiled Gram.  Every entry
+    /// is the exact expression of [`SuffStats::quad_form`] on the same
+    /// doubles, so the result is bit-for-bit the resident path's.
+    pub fn quad_form_train(&self, held_out: Option<usize>) -> Result<QuadForm<TiledSymMat>> {
+        let p = self.p;
+        let d = p + 1;
+        let prof = self.train_profile(held_out)?;
+        ensure!(prof.n >= 2, "need at least 2 observations to standardize");
+        let nf = prof.w;
+        let mut scale = vec![0.0; p];
+        for j in 0..p {
+            let v = prof.diag[j] / nf;
+            scale[j] = if v > 0.0 { v.sqrt() } else { 0.0 };
+        }
+        let mut gram = TiledSymMat::zeros(TileLayout::new(p, self.layout.block()));
+        let mut row = vec![0.0; p];
+        self.for_each_train_panel(held_out, |pl| {
+            let mut k = 0usize;
+            for i in pl.rows() {
+                if i < p {
+                    let sxx_tail = &pl.m2[k..k + (d - i)];
+                    for (t, j) in (i..p).enumerate() {
+                        let denom = scale[i] * scale[j];
+                        row[t] = if denom > 0.0 {
+                            sxx_tail[t] / (nf * denom)
+                        } else if i == j {
+                            1.0
+                        } else {
+                            0.0
+                        };
+                    }
+                    gram.set_row_tail(i, &row[..p - i]);
+                }
+                k += d - i;
+            }
+            Ok(())
+        })?;
+        let mut xty = vec![0.0; p];
+        for j in 0..p {
+            xty[j] = if scale[j] > 0.0 {
+                prof.sxy[j] / (nf * scale[j])
+            } else {
+                0.0
+            };
+        }
+        Ok(QuadForm {
+            p,
+            n: prof.n,
+            gram,
+            xty,
+            y_var: prof.syy / nf,
+            scale,
+            x_mean: prof.mean[..p].to_vec(),
+            y_mean: prof.mean[p],
+        })
+    }
+
+    /// Exact MSE of the original-scale model (α, β) on fold `i`'s data
+    /// (`i == k` scores against the total) — [`SuffStats::mse`]'s exact
+    /// accumulation order, streamed across panel seams.
+    pub fn mse(&self, fold: usize, alpha: f64, beta: &[f64]) -> Result<f64> {
+        Ok(self.mse_many(fold, &[(alpha, beta.to_vec())])?[0])
+    }
+
+    /// Held-out MSE of *many* original-scale models against fold `i` in
+    /// ONE streaming pass over the fold's panels.  Each model's
+    /// accumulators fold the identical doubles in the identical order as a
+    /// standalone [`FoldStore::mse`] call, so the results are bit-for-bit
+    /// the same — but the λ-path scorer loads every panel (and under a
+    /// spill budget, reads every spill file) once per fold instead of once
+    /// per λ.
+    pub fn mse_many(&self, fold: usize, models: &[(f64, Vec<f64>)]) -> Result<Vec<f64>> {
+        let p = self.p;
+        let d = p + 1;
+        debug_assert!(self.sealed);
+        let h = &self.headers[fold];
+        ensure!(h.n > 0, "mse on empty statistics");
+        for (_, beta) in models {
+            ensure!(beta.len() == p, "beta dimension mismatch");
+        }
+        let nf = h.w;
+        let mut quad = vec![0.0; models.len()];
+        let mut cross = vec![0.0; models.len()];
+        let mut syy = 0.0;
+        for t in 0..self.layout.n_panels() {
+            let pl = self.panel(fold, t)?;
+            let mut k = 0usize;
+            for i in pl.rows() {
+                let tail = &pl.m2[k..k + (d - i)];
+                if i < p {
+                    for (m, (_, beta)) in models.iter().enumerate() {
+                        cross[m] += beta[i] * tail[d - 1 - i];
+                        let mut off = 0.0;
+                        for j in (i + 1)..p {
+                            off += tail[j - i] * beta[j];
+                        }
+                        quad[m] += beta[i] * (tail[0] * beta[i] + 2.0 * off);
+                    }
+                } else {
+                    syy = tail[0];
+                }
+                k += d - i;
+            }
+        }
+        Ok(models
+            .iter()
+            .enumerate()
+            .map(|(m, (alpha, beta))| {
+                let xbar_beta: f64 =
+                    h.mean[..p].iter().zip(beta).map(|(mu, b)| mu * b).sum();
+                let e = h.mean[p] - *alpha - xbar_beta;
+                (syy - 2.0 * cross[m] + quad[m] + nf * e * e) / nf
+            })
+            .collect())
+    }
+
+    /// |marginal correlation with y| per predictor of the train statistic
+    /// — [`crate::solver::screen::marginal_abs_correlations`]'s exact
+    /// expression on the streamed profile.
+    pub fn marginal_abs_corr(&self, held_out: Option<usize>) -> Result<Vec<f64>> {
+        let prof = self.train_profile(held_out)?;
+        Ok((0..self.p)
+            .map(|j| {
+                let sxx = prof.diag[j];
+                if sxx > 0.0 && prof.syy > 0.0 {
+                    (prof.sxy[j] / (sxx * prof.syy).sqrt()).abs()
+                } else {
+                    0.0
+                }
+            })
+            .collect())
+    }
+
+    /// Gather the screened (m+1)-dim sub-statistic of `total − s_i`
+    /// (`None` ⇒ the total) — [`SuffStats::subset`]'s verbatim entry
+    /// copies, streamed panel-ascending.
+    pub fn subset_train(&self, held_out: Option<usize>, idx: &[usize]) -> Result<SuffStats<SymMat>> {
+        let mut gather = SubsetGather::new(self.p, self.layout, idx);
+        self.for_each_train_panel(held_out, |pl| {
+            gather.feed(pl);
+            Ok(())
+        })?;
+        gather.finish()
+    }
+
+    /// Gather fold `i`'s screened sub-statistic (`i == k` for the total).
+    pub fn subset_fold(&self, fold: usize, idx: &[usize]) -> Result<SuffStats<SymMat>> {
+        let mut gather = SubsetGather::new(self.p, self.layout, idx);
+        for t in 0..self.layout.n_panels() {
+            let pl = self.panel(fold, t)?;
+            gather.feed(&pl);
+        }
+        gather.finish()
+    }
+
+    /// Goodness-of-fit diagnostics of `model` against the total — the
+    /// streaming twin of [`crate::model::diagnostics()`].
+    pub fn diagnostics(&self, model: &crate::model::FittedModel) -> Result<crate::model::Diagnostics> {
+        assert_eq!(self.p, model.p(), "model/stats width mismatch");
+        debug_assert!(self.sealed);
+        let h = &self.headers[self.k];
+        let mse = self.mse(self.k, model.alpha, &model.beta)?;
+        Ok(crate::model::diagnostics::from_parts(
+            h.n,
+            h.w,
+            mse,
+            h.syy,
+            model.nnz(),
+        ))
+    }
+
+    /// Materialize the resident [`crate::cv::FoldStats`] view — the
+    /// inspection/interop path (`compute_fold_stats*`); the fit path
+    /// streams instead.
+    pub fn to_fold_stats(&self) -> Result<crate::cv::FoldStats<TiledSymMat>> {
+        let n_panels = self.layout.n_panels();
+        let mut folds = Vec::with_capacity(self.k);
+        for fold in 0..self.k {
+            let panels: Vec<StatPanel> = (0..n_panels)
+                .map(|t| self.panel(fold, t))
+                .collect::<Result<_>>()?;
+            folds.push(
+                assemble_stats_tiled(self.p, self.layout, panels)
+                    .map_err(|e| anyhow!("fold {fold}: {e}"))?,
+            );
+        }
+        crate::cv::FoldStats::new(folds)
+    }
+}
+
+/// Streaming implementation of [`SuffStats::subset`]: z-rows arrive in
+/// ascending panel order; every needed entry is copied verbatim, so the
+/// gathered sub-statistic is identical whichever path produced the panels.
+struct SubsetGather<'a> {
+    idx: &'a [usize],
+    p: usize,
+    layout: TileLayout,
+    header: Option<(u64, f64, Vec<f64>)>,
+    m2: SymMat,
+}
+
+impl<'a> SubsetGather<'a> {
+    fn new(p: usize, layout: TileLayout, idx: &'a [usize]) -> Self {
+        assert!(!idx.is_empty(), "empty subset");
+        assert!(
+            idx.windows(2).all(|w| w[0] < w[1]) && *idx.last().unwrap() < p,
+            "subset indices must be strictly increasing and < p"
+        );
+        SubsetGather {
+            idx,
+            p,
+            layout,
+            header: None,
+            m2: SymMat::zeros(idx.len() + 1),
+        }
+    }
+
+    fn zidx(&self, a: usize) -> usize {
+        if a < self.idx.len() {
+            self.idx[a]
+        } else {
+            self.p
+        }
+    }
+
+    fn feed(&mut self, pl: &StatPanel) {
+        if self.header.is_none() {
+            self.header = Some((pl.n, pl.w, pl.mean.clone()));
+        }
+        let d = self.p + 1;
+        let d_sub = self.idx.len() + 1;
+        let rows = pl.rows();
+        for a in 0..d_sub {
+            let i = self.zidx(a);
+            if i < rows.start || i >= rows.end {
+                continue;
+            }
+            let k = tri_idx(d, i, i) - self.layout.offset(pl.panel);
+            let tail = &pl.m2[k..k + (d - i)];
+            for b in a..d_sub {
+                self.m2.set(a, b, tail[self.zidx(b) - i]);
+            }
+        }
+    }
+
+    fn finish(self) -> Result<SuffStats<SymMat>> {
+        let (n, w, full_mean) = self
+            .header
+            .ok_or_else(|| anyhow!("subset gather saw no panels"))?;
+        let d_sub = self.idx.len() + 1;
+        let mut mean = Vec::with_capacity(d_sub);
+        for a in 0..d_sub {
+            mean.push(full_mean[self.zidx(a)]);
+        }
+        Ok(SuffStats::from_moments(
+            self.idx.len(),
+            Moments::from_packed_parts(n, w, mean, self.m2),
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::mem::MemStore;
+    use super::super::spill::SpillStore;
+    use super::super::{panel_bytes, PanelStore};
+    use super::*;
+    use crate::cv::FoldStats;
+    use crate::rng::Rng;
+    use crate::stats::tiles::shard_stats;
+
+    fn random_stats(rng: &mut Rng, p: usize, n: usize) -> SuffStats {
+        let mut s = SuffStats::new(p);
+        for _ in 0..n {
+            let x: Vec<f64> = (0..p).map(|_| rng.normal_ms(3.0, 2.0)).collect();
+            let y = x.iter().sum::<f64>() + rng.normal();
+            s.push(&x, y);
+        }
+        s
+    }
+
+    /// A FoldStore and the equivalent resident FoldStats, from the same
+    /// random fold statistics.
+    fn populated(
+        store: Box<dyn PanelStore>,
+        seed: u64,
+        k: usize,
+        p: usize,
+        block: usize,
+    ) -> (FoldStore, FoldStats<TiledSymMat>) {
+        let mut rng = Rng::seed_from(seed);
+        let layout = TileLayout::new(p + 1, block);
+        let mut fs = FoldStore::new(store, k, p, layout);
+        let mut folds = Vec::new();
+        for fold in 0..k {
+            let s = random_stats(&mut rng, p, 30 + 11 * fold);
+            for pl in shard_stats(&s, layout) {
+                fs.retire(fold, pl.panel, pl).unwrap();
+            }
+            folds.push(s.to_tiled(block));
+        }
+        fs.seal().unwrap();
+        (fs, FoldStats::new(folds).unwrap())
+    }
+
+    fn bits(v: &[f64]) -> Vec<u64> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn streaming_quad_form_and_mse_bit_identical_to_resident() {
+        for (seed, k, p, block) in [(1u64, 3usize, 5usize, 2usize), (2, 4, 6, 7), (3, 2, 3, 1)] {
+            let (fs, resident) = populated(Box::new(MemStore::new()), seed, k, p, block);
+            assert_eq!(fs.n(), resident.n());
+            // total + per-fold complements: Gram, xty, scale bit-identical
+            for held in std::iter::once(None).chain((0..k).map(Some)) {
+                let q_store = fs.quad_form_train(held).unwrap();
+                let q_res = match held {
+                    None => resident.total().quad_form(),
+                    Some(i) => resident.train_for(i).quad_form(),
+                };
+                assert_eq!(q_store.n, q_res.n);
+                assert_eq!(bits(&q_store.xty), bits(&q_res.xty), "xty (held={held:?})");
+                assert_eq!(bits(&q_store.scale), bits(&q_res.scale));
+                assert_eq!(bits(&q_store.x_mean), bits(&q_res.x_mean));
+                assert_eq!(q_store.y_mean.to_bits(), q_res.y_mean.to_bits());
+                assert_eq!(q_store.y_var.to_bits(), q_res.y_var.to_bits());
+                for i in 0..p {
+                    for j in 0..p {
+                        assert_eq!(
+                            Scatter::get(&q_store.gram, i, j).to_bits(),
+                            Scatter::get(&q_res.gram, i, j).to_bits(),
+                            "gram ({i},{j}) seed={seed} held={held:?}"
+                        );
+                    }
+                }
+            }
+            // held-out scoring across panel seams
+            let mut rng = Rng::seed_from(seed ^ 0xA5);
+            let beta: Vec<f64> = (0..p).map(|_| rng.normal()).collect();
+            let alpha = rng.normal();
+            for fold in 0..k {
+                assert_eq!(
+                    fs.mse(fold, alpha, &beta).unwrap().to_bits(),
+                    resident.fold(fold).mse(alpha, &beta).to_bits(),
+                    "fold {fold} mse"
+                );
+            }
+            assert_eq!(
+                fs.mse(fs.total_fold(), alpha, &beta).unwrap().to_bits(),
+                resident.total().mse(alpha, &beta).to_bits()
+            );
+            // the batched λ-path scorer: one panel pass, same bits per model
+            let models: Vec<(f64, Vec<f64>)> = (0..3)
+                .map(|m| {
+                    let s = 1.0 + 0.5 * m as f64;
+                    (alpha * s, beta.iter().map(|b| b * s).collect())
+                })
+                .collect();
+            let many = fs.mse_many(0, &models).unwrap();
+            for (m, (a, b)) in models.iter().enumerate() {
+                assert_eq!(
+                    many[m].to_bits(),
+                    resident.fold(0).mse(*a, b).to_bits(),
+                    "mse_many model {m}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_subset_and_screening_match_resident() {
+        let (fs, resident) = populated(Box::new(MemStore::new()), 7, 3, 6, 2);
+        let idx = vec![0usize, 2, 5];
+        assert_eq!(
+            fs.subset_train(None, &idx).unwrap(),
+            resident.total().subset(&idx)
+        );
+        for fold in 0..3 {
+            assert_eq!(
+                fs.subset_fold(fold, &idx).unwrap(),
+                resident.fold(fold).subset(&idx),
+                "fold {fold} subset"
+            );
+            assert_eq!(
+                fs.subset_train(Some(fold), &idx).unwrap(),
+                resident.train_for(fold).subset(&idx),
+                "train {fold} subset"
+            );
+            let corr = fs.marginal_abs_corr(Some(fold)).unwrap();
+            let want =
+                crate::solver::screen::marginal_abs_correlations(&resident.train_for(fold));
+            assert_eq!(bits(&corr), bits(&want), "fold {fold} correlations");
+        }
+    }
+
+    #[test]
+    fn results_bit_identical_under_a_one_panel_spill_budget() {
+        // same statistics through MemStore and a one-panel SpillStore:
+        // every derived quantity must be bit-for-bit identical, while the
+        // spill store's residency stays within budget
+        let layout = TileLayout::new(6 + 1, 2);
+        let one_panel = {
+            // largest panel of a d=7, b=2 layout plus its header
+            8 * (2 + 7 + layout.max_panel_len())
+        };
+        let (mem_fs, _) = populated(Box::new(MemStore::new()), 9, 3, 6, 2);
+        let spill = SpillStore::new(one_panel).unwrap();
+        let dir = spill.dir().to_path_buf();
+        let (spill_fs, _) = populated(Box::new(spill), 9, 3, 6, 2);
+        for held in [None, Some(0), Some(2)] {
+            let qa = mem_fs.quad_form_train(held).unwrap();
+            let qb = spill_fs.quad_form_train(held).unwrap();
+            assert_eq!(bits(&qa.xty), bits(&qb.xty));
+            for i in 0..6 {
+                for j in 0..6 {
+                    assert_eq!(
+                        Scatter::get(&qa.gram, i, j).to_bits(),
+                        Scatter::get(&qb.gram, i, j).to_bits()
+                    );
+                }
+            }
+        }
+        let m = spill_fs.metrics();
+        assert!(m.resident_bytes_peak <= one_panel, "{} > {one_panel}", m.resident_bytes_peak);
+        assert!(m.spill_reads > 0 && m.spill_writes > 0, "budget must actually spill");
+        drop(spill_fs);
+        assert!(!dir.exists(), "spill dir removed when the fold store drops");
+    }
+
+    #[test]
+    fn seal_rejects_missing_dropped_and_drifted_panels() {
+        let layout = TileLayout::new(5, 2);
+        let mut rng = Rng::seed_from(4);
+        let s = random_stats(&mut rng, 4, 25);
+        // missing panel → "incomplete"
+        let mut fs = FoldStore::new(Box::new(MemStore::new()), 2, 4, layout);
+        for pl in shard_stats(&s, layout) {
+            fs.retire(0, pl.panel, pl).unwrap();
+        }
+        for pl in shard_stats(&s, layout).into_iter().skip(1) {
+            fs.retire(1, pl.panel, pl).unwrap();
+        }
+        let err = format!("{:#}", fs.seal().unwrap_err());
+        assert!(err.contains("incomplete"), "{err}");
+        // empty fold → named error matching the untiled path's message
+        let mut fs = FoldStore::new(Box::new(MemStore::new()), 2, 4, layout);
+        for pl in shard_stats(&s, layout) {
+            fs.retire(0, pl.panel, pl).unwrap();
+        }
+        let err = format!("{:#}", fs.seal().unwrap_err());
+        assert!(err.contains("fold 1 is empty"), "{err}");
+        // header drift → named error
+        let mut fs = FoldStore::new(Box::new(MemStore::new()), 2, 4, layout);
+        for pl in shard_stats(&s, layout) {
+            fs.retire(0, pl.panel, pl).unwrap();
+        }
+        let mut drifted = shard_stats(&s, layout);
+        drifted[1].w += 1.0;
+        for pl in drifted {
+            fs.retire(1, pl.panel, pl).unwrap();
+        }
+        let err = format!("{:#}", fs.seal().unwrap_err());
+        assert!(err.contains("drifted"), "{err}");
+        // double retire → named store error through the sink
+        let fs = FoldStore::new(Box::new(MemStore::new()), 2, 4, layout);
+        let pl = shard_stats(&s, layout).remove(0);
+        fs.retire(0, 0, pl.clone()).unwrap();
+        let err = fs.retire(0, 0, pl).unwrap_err();
+        assert!(err.contains("retired twice"), "{err}");
+    }
+
+    #[test]
+    fn spill_dir_removed_when_seal_fails() {
+        // the error path of the ingest: a fold with missing panels fails
+        // seal, the driver drops the store, and no spilled panel survives
+        let layout = TileLayout::new(5, 1);
+        let mut rng = Rng::seed_from(6);
+        let s = random_stats(&mut rng, 4, 25);
+        let panels = shard_stats(&s, layout);
+        let one = panel_bytes(&panels[0]);
+        let spill = SpillStore::new(one).unwrap();
+        let dir = spill.dir().to_path_buf();
+        let mut fs = FoldStore::new(Box::new(spill), 2, 4, layout);
+        for pl in shard_stats(&s, layout) {
+            fs.retire(0, pl.panel, pl).unwrap();
+        }
+        // fold 1 gets only one panel → seal must fail by name
+        fs.retire(1, 0, panels[0].clone()).unwrap();
+        assert!(std::fs::read_dir(&dir).unwrap().count() > 0, "budget must have spilled");
+        let err = format!("{:#}", fs.seal().unwrap_err());
+        assert!(err.contains("incomplete"), "{err}");
+        drop(fs);
+        assert!(!dir.exists(), "spill dir must be removed on the error path");
+    }
+
+    #[test]
+    fn retire_validates_shapes_by_name() {
+        let layout = TileLayout::new(5, 2);
+        let mut rng = Rng::seed_from(5);
+        let s = random_stats(&mut rng, 4, 20);
+        let fs = FoldStore::new(Box::new(MemStore::new()), 2, 4, layout);
+        let panels = shard_stats(&s, layout);
+        assert!(fs.retire(9, 0, panels[0].clone()).unwrap_err().contains("fold 9"));
+        assert!(fs
+            .retire(0, 99, panels[0].clone())
+            .unwrap_err()
+            .contains("panel 99"));
+        // key/payload panel disagreement
+        assert!(fs
+            .retire(0, 1, panels[0].clone())
+            .unwrap_err()
+            .contains("names panel 1"));
+        // wrong block size
+        let other = shard_stats(&s, TileLayout::new(5, 3)).remove(0);
+        assert!(fs.retire(0, 0, other).unwrap_err().contains("layout says"));
+    }
+
+    #[test]
+    fn to_fold_stats_round_trips_and_total_matches() {
+        let (fs, resident) = populated(Box::new(MemStore::new()), 21, 3, 5, 2);
+        let back = fs.to_fold_stats().unwrap();
+        for fold in 0..3 {
+            assert_eq!(back.fold(fold), resident.fold(fold), "fold {fold}");
+            assert_eq!(fs.fold_count(fold), resident.fold(fold).count());
+        }
+        // the sealed per-panel total equals the resident merge, bit for bit
+        assert_eq!(back.total(), resident.total());
+        let q_store = fs.quad_form_train(None).unwrap();
+        let q_res = resident.total().quad_form();
+        assert_eq!(bits(&q_store.xty), bits(&q_res.xty));
+        // diagnostics stream identically
+        let model = crate::model::FittedModel {
+            alpha: 0.5,
+            beta: vec![0.25; 5],
+            lambda: 0.1,
+            penalty: crate::solver::penalty::Penalty::lasso(),
+            n_train: fs.n(),
+        };
+        let via_store = fs.diagnostics(&model).unwrap();
+        let via_stats = crate::model::diagnostics(resident.total(), &model);
+        assert_eq!(via_store, via_stats);
+    }
+}

@@ -1,0 +1,168 @@
+//! The unbounded in-memory panel store — what the pre-store resident path
+//! held, now behind the [`PanelStore`] trait with residency *accounting*
+//! (so the unbudgeted fit reports the true co-resident bytes the spill
+//! backend is compared against).
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::stats::tiles::StatPanel;
+
+use super::{panel_bytes, PanelKey, PanelStore, StoreError, StoreMetrics, StoreResult};
+
+/// Every panel resident, forever; `budget_bytes()` is `None`.
+#[derive(Debug, Default)]
+pub struct MemStore {
+    inner: Mutex<MemInner>,
+}
+
+#[derive(Debug, Default)]
+struct MemInner {
+    panels: BTreeMap<PanelKey, StatPanel>,
+    metrics: StoreMetrics,
+}
+
+impl MemStore {
+    pub fn new() -> Self {
+        MemStore::default()
+    }
+}
+
+impl PanelStore for MemStore {
+    fn put(&self, key: PanelKey, panel: StatPanel) -> StoreResult<()> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.panels.contains_key(&key) {
+            return Err(StoreError::DoubleRetire(key));
+        }
+        let bytes = panel_bytes(&panel);
+        inner.panels.insert(key, panel);
+        inner.metrics.panels += 1;
+        inner.metrics.resident_bytes += bytes;
+        inner.metrics.resident_bytes_peak = inner
+            .metrics
+            .resident_bytes_peak
+            .max(inner.metrics.resident_bytes);
+        Ok(())
+    }
+
+    fn get(&self, key: PanelKey) -> StoreResult<StatPanel> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .panels
+            .get(&key)
+            .cloned()
+            .ok_or(StoreError::Missing(key))
+    }
+
+    fn contains(&self, key: PanelKey) -> bool {
+        self.inner.lock().unwrap().panels.contains_key(&key)
+    }
+
+    fn keys(&self) -> Vec<PanelKey> {
+        self.inner.lock().unwrap().panels.keys().copied().collect()
+    }
+
+    fn remove(&self, key: PanelKey) -> StoreResult<()> {
+        let mut inner = self.inner.lock().unwrap();
+        let panel = inner.panels.remove(&key).ok_or(StoreError::Missing(key))?;
+        inner.metrics.panels -= 1;
+        inner.metrics.resident_bytes -= panel_bytes(&panel);
+        Ok(())
+    }
+
+    /// Nothing is ever evicted here, so pinning only validates existence.
+    fn pin(&self, key: PanelKey) -> StoreResult<()> {
+        if self.contains(key) {
+            Ok(())
+        } else {
+            Err(StoreError::Missing(key))
+        }
+    }
+
+    fn unpin(&self, key: PanelKey) -> StoreResult<()> {
+        if self.contains(key) {
+            Ok(())
+        } else {
+            Err(StoreError::Missing(key))
+        }
+    }
+
+    fn metrics(&self) -> StoreMetrics {
+        self.inner.lock().unwrap().metrics
+    }
+
+    fn budget_bytes(&self) -> Option<usize> {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::random_panels;
+    use super::*;
+
+    #[test]
+    fn put_get_round_trips_bitwise_and_accounts_residency() {
+        let store = MemStore::new();
+        let panels = random_panels(7, 5, 2, 40);
+        let mut expect_bytes = 0usize;
+        for (t, pl) in panels.iter().enumerate() {
+            expect_bytes += panel_bytes(pl);
+            store.put(PanelKey { fold: 0, panel: t }, pl.clone()).unwrap();
+        }
+        let m = store.metrics();
+        assert_eq!(m.panels, panels.len());
+        assert_eq!(m.resident_bytes, expect_bytes);
+        assert_eq!(m.resident_bytes_peak, expect_bytes);
+        assert_eq!(m.spill_writes, 0);
+        for (t, pl) in panels.iter().enumerate() {
+            let got = store.get(PanelKey { fold: 0, panel: t }).unwrap();
+            assert_eq!(&got, pl);
+            // bit-for-bit, not just value-equal
+            for (a, b) in got.m2.iter().zip(&pl.m2) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+        assert_eq!(store.keys().len(), panels.len());
+    }
+
+    #[test]
+    fn double_retire_and_missing_are_named_errors() {
+        let store = MemStore::new();
+        let pl = random_panels(9, 3, 2, 10).remove(0);
+        let key = PanelKey { fold: 1, panel: 0 };
+        store.put(key, pl.clone()).unwrap();
+        let err = store.put(key, pl).unwrap_err();
+        assert!(err.to_string().contains("retired twice"), "{err}");
+        let err = store.get(PanelKey { fold: 2, panel: 0 }).unwrap_err();
+        assert!(err.to_string().contains("no panel under"), "{err}");
+        assert!(store.remove(PanelKey { fold: 2, panel: 0 }).is_err());
+    }
+
+    #[test]
+    fn remove_releases_resident_bytes() {
+        let store = MemStore::new();
+        let pl = random_panels(3, 4, 5, 20).remove(0);
+        let key = PanelKey { fold: 0, panel: 0 };
+        let bytes = panel_bytes(&pl);
+        store.put(key, pl).unwrap();
+        assert_eq!(store.metrics().resident_bytes, bytes);
+        store.remove(key).unwrap();
+        let m = store.metrics();
+        assert_eq!(m.resident_bytes, 0);
+        assert_eq!(m.panels, 0);
+        assert_eq!(m.resident_bytes_peak, bytes, "peak is a high-water mark");
+    }
+
+    #[test]
+    fn pin_unpin_track_existence() {
+        let store = MemStore::new();
+        let pl = random_panels(5, 3, 4, 15).remove(0);
+        let key = PanelKey { fold: 0, panel: 0 };
+        assert!(store.pin(key).is_err());
+        store.put(key, pl).unwrap();
+        store.pin(key).unwrap();
+        store.unpin(key).unwrap();
+        assert!(store.budget_bytes().is_none());
+    }
+}

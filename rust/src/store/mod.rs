@@ -1,0 +1,217 @@
+//! The spillable panel store — bounded leader residency for merged
+//! statistics.
+//!
+//! PR 4 made every *single* statistic allocation O(d·b); what still grew
+//! with the job was the leader's *co-resident* set: all k fold panel sets
+//! (O(k·d²) doubles) accumulated in the reduce output map and stayed
+//! resident through the whole CV phase.  This module is the other half of
+//! the fix: merged `(fold, panel)` values are **retired** into a
+//! [`PanelStore`] as their per-key reduce completes
+//! ([`crate::mapreduce::engine::run_job_retire`]), and the driver streams
+//! every downstream consumer — fold complements, `quad_form`
+//! standardization, CD seam gathers, screening subsets, tiled-Cholesky
+//! ridge — panel-by-panel through the store ([`FoldStore`]).  With the
+//! spill backend the leader-resident statistic bytes are bounded by
+//! `FitConfig::store_budget_bytes` — O(d·b · panels-in-flight), not
+//! O(k·d²).
+//!
+//! Two backends implement the one trait:
+//! * [`MemStore`] — unbounded in-memory residency (the default; what the
+//!   pre-store resident path held, now with accounting).
+//! * [`SpillStore`] — a resident-panel budget with LRU eviction (pinned
+//!   panels are never evicted), checksummed spill files, and **named
+//!   errors** on short reads, corrupt bytes, vanished files and
+//!   double-retires — never a panic and never a silently-wrong statistic.
+//!
+//! Determinism contract: a panel is immutable once retired; spill and
+//! reload move the exact f64 bit patterns (`to_bits`/`from_bits` through a
+//! checksummed little-endian file), so the fit output is bit-for-bit
+//! independent of the budget, the eviction schedule, and whether a panel
+//! was ever spilled at all (asserted in `tests/integration.rs`).
+
+pub mod fold;
+pub mod mem;
+pub mod spill;
+
+pub use fold::FoldStore;
+pub use mem::MemStore;
+pub use spill::SpillStore;
+
+use crate::stats::tiles::StatPanel;
+
+/// Address of one retired panel: the `(fold, panel)` reduce key.  The
+/// driver reserves `fold == k` for the merged total's panels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct PanelKey {
+    pub fold: usize,
+    pub panel: usize,
+}
+
+impl std::fmt::Display for PanelKey {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "(fold {}, panel {})", self.fold, self.panel)
+    }
+}
+
+/// Resident bytes of one panel as the store accounts them: the wire
+/// payload (count + weight + mean header + packed rows), 8 bytes each.
+pub fn panel_bytes(panel: &StatPanel) -> usize {
+    8 * panel.payload_doubles()
+}
+
+/// Every way a panel store can fail, by name.  The reduce/retire path and
+/// the driver's streaming consumers convert these into graceful job
+/// errors — a corrupt or missing panel must never become a silently-wrong
+/// statistic or a panic across the worker pool.
+#[derive(Debug)]
+pub enum StoreError {
+    /// A key was retired twice — duplicate reduce output (the fixed merge
+    /// tree retires every key exactly once; chaos retries must not change
+    /// that, which `tests` assert).
+    DoubleRetire(PanelKey),
+    /// No panel was ever retired under this key.
+    Missing(PanelKey),
+    /// The panel was spilled but its file has vanished (evicted
+    /// concurrently by another store, or removed externally).
+    SpillFileMissing { key: PanelKey, path: std::path::PathBuf },
+    /// A spill file ended early — truncated write or concurrent truncation.
+    ShortRead { key: PanelKey, expected: usize, got: usize },
+    /// The spill file's checksum does not cover its bytes — bit rot or a
+    /// torn write.
+    ChecksumMismatch { key: PanelKey, computed: u64, stored: u64 },
+    /// The spill file parses but its header contradicts the key or layout.
+    BadHeader { key: PanelKey, detail: String },
+    /// Shape validation at retire time failed (wrong d/block/panel/length
+    /// for the store's layout).
+    BadShape { key: PanelKey, detail: String },
+    /// An OS-level I/O failure, with what the store was doing.
+    Io { context: String, source: std::io::Error },
+}
+
+impl std::fmt::Display for StoreError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StoreError::DoubleRetire(key) => write!(
+                f,
+                "panel store: {key} retired twice — duplicate reduce output"
+            ),
+            StoreError::Missing(key) => write!(
+                f,
+                "panel store: no panel under {key} — dropped or never retired"
+            ),
+            StoreError::SpillFileMissing { key, path } => write!(
+                f,
+                "panel store: spill file for {key} vanished at {path:?} — \
+                 evicted concurrently or removed externally"
+            ),
+            StoreError::ShortRead { key, expected, got } => write!(
+                f,
+                "panel store: short read for {key}: expected {expected} bytes, \
+                 got {got} — truncated spill file"
+            ),
+            StoreError::ChecksumMismatch { key, computed, stored } => write!(
+                f,
+                "panel store: checksum mismatch for {key}: computed \
+                 {computed:#018x}, stored {stored:#018x} — corrupt spill file"
+            ),
+            StoreError::BadHeader { key, detail } => {
+                write!(f, "panel store: bad spill header for {key}: {detail}")
+            }
+            StoreError::BadShape { key, detail } => {
+                write!(f, "panel store: bad panel shape for {key}: {detail}")
+            }
+            StoreError::Io { context, source } => {
+                write!(f, "panel store: {context}: {source}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for StoreError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            StoreError::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
+pub type StoreResult<T> = Result<T, StoreError>;
+
+/// Store accounting — the numbers behind
+/// `FitReport::resident_stat_bytes_peak` and `spill_{bytes,reads,writes}`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StoreMetrics {
+    /// panels currently owned by the store (resident or spilled)
+    pub panels: usize,
+    /// bytes of panels currently resident in memory
+    pub resident_bytes: usize,
+    /// high-water mark of `resident_bytes` — with a [`SpillStore`] this is
+    /// ≤ max(budget, one panel) by construction (evict-before-admit)
+    pub resident_bytes_peak: usize,
+    /// panels currently on disk only
+    pub spilled_panels: usize,
+    /// cumulative bytes written to spill files
+    pub spill_bytes: usize,
+    /// panel loads from spill files
+    pub spill_reads: usize,
+    /// panel writes to spill files
+    pub spill_writes: usize,
+    /// resident panels demoted to disk-only
+    pub evictions: usize,
+}
+
+/// A keyed store of retired statistic panels.  All methods take `&self`
+/// (interior locking): the engine's reducers retire concurrently, and the
+/// parallel CV job's workers read concurrently.
+///
+/// Panels are immutable once retired: `put` is exactly-once per key
+/// ([`StoreError::DoubleRetire`] otherwise) and `get` returns an owned
+/// copy of the identical bit pattern no matter how many times the panel
+/// was spilled and reloaded in between.
+pub trait PanelStore: Send + Sync + std::fmt::Debug {
+    /// Retire a merged panel. Exactly once per key.
+    fn put(&self, key: PanelKey, panel: StatPanel) -> StoreResult<()>;
+    /// Owned copy of a panel, loading it from spill if necessary.
+    fn get(&self, key: PanelKey) -> StoreResult<StatPanel>;
+    /// Whether a panel was retired under `key`.
+    fn contains(&self, key: PanelKey) -> bool;
+    /// Every retired key, ascending.
+    fn keys(&self) -> Vec<PanelKey>;
+    /// Drop a panel entirely (memory and spill file).
+    fn remove(&self, key: PanelKey) -> StoreResult<()>;
+    /// Exempt a panel from eviction (no-op for unbounded backends).
+    ///
+    /// The fit path itself never pins: at the acceptance floor of a
+    /// one-panel budget there is no headroom to hold anything, and the
+    /// streaming consumers work on owned copies.  Pinning exists for
+    /// operators of ≥ 2-panel budgets that want a hot panel (e.g. the
+    /// total's head panel) latched resident across a sweep — the eviction
+    /// invariant (pinned panels are never victims) is unit-tested.
+    fn pin(&self, key: PanelKey) -> StoreResult<()>;
+    /// Make a pinned panel evictable again.
+    fn unpin(&self, key: PanelKey) -> StoreResult<()>;
+    /// Current accounting snapshot.
+    fn metrics(&self) -> StoreMetrics;
+    /// Resident budget in bytes (`None` = unbounded).
+    fn budget_bytes(&self) -> Option<usize>;
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use crate::rng::Rng;
+    use crate::stats::tiles::{shard_stats, StatPanel, TileLayout};
+    use crate::stats::SuffStats;
+
+    /// A deterministic random statistic, sharded into panels.
+    pub fn random_panels(seed: u64, p: usize, block: usize, rows: usize) -> Vec<StatPanel> {
+        let mut rng = Rng::seed_from(seed);
+        let mut s = SuffStats::new(p);
+        for _ in 0..rows {
+            let x: Vec<f64> = (0..p).map(|_| rng.normal_ms(2.0, 3.0)).collect();
+            let y = x.iter().sum::<f64>() + rng.normal();
+            s.push(&x, y);
+        }
+        shard_stats(&s, TileLayout::new(p + 1, block))
+    }
+}

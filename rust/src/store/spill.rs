@@ -1,0 +1,575 @@
+//! The spill-to-disk panel store: a bounded resident-panel budget with LRU
+//! eviction, checksummed panel files, and named errors on every failure
+//! mode a disk can produce.
+//!
+//! Residency invariant (**evict-before-admit**): before a panel is made
+//! resident — at `put`, or when `get` reloads a spilled panel — the store
+//! first evicts least-recently-used *unpinned* panels until the newcomer
+//! fits, so `resident_bytes` never exceeds `max(budget, one panel)`; with
+//! the budget set to exactly one panel the resident set is never more than
+//! that panel.  `StoreMetrics::resident_bytes_peak` records the high-water
+//! mark the acceptance tests assert against.
+//!
+//! Spill files are immutable once written (panels never change after
+//! retirement), so re-evicting a previously-spilled panel is free: the
+//! resident copy is dropped and the existing file stays authoritative.
+//! Every file carries a magic header and an FNV-1a checksum over all
+//! preceding bytes; loads verify length, magic, key agreement and checksum
+//! before a single double enters a statistic ([`StoreError::ShortRead`],
+//! [`StoreError::BadHeader`], [`StoreError::ChecksumMismatch`],
+//! [`StoreError::SpillFileMissing`]).
+//!
+//! Tempdir hygiene: each store owns a unique directory under the OS temp
+//! dir and removes it on [`Drop`] — job completion *and* error paths
+//! (early returns, unwinds) both run the destructor, which the tests
+//! exercise explicitly.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::stats::tiles::StatPanel;
+
+use super::{panel_bytes, PanelKey, PanelStore, StoreError, StoreMetrics, StoreResult};
+
+/// File magic: "PLPANEL1" as a little-endian u64 constant.
+const MAGIC: u64 = 0x504C_5041_4E45_4C31;
+
+/// Unique-per-process suffix for spill directories.
+static STORE_SEQ: AtomicU64 = AtomicU64::new(0);
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+fn push_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Serialize a panel: magic, shape header, f64 payload (bit patterns),
+/// trailing FNV-1a checksum over everything before it.
+pub(crate) fn encode_panel(panel: &StatPanel) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(8 * (9 + panel.mean.len() + panel.m2.len()));
+    push_u64(&mut buf, MAGIC);
+    push_u64(&mut buf, panel.d as u64);
+    push_u64(&mut buf, panel.block as u64);
+    push_u64(&mut buf, panel.panel as u64);
+    push_u64(&mut buf, panel.n);
+    push_u64(&mut buf, panel.w.to_bits());
+    push_u64(&mut buf, panel.mean.len() as u64);
+    push_u64(&mut buf, panel.m2.len() as u64);
+    for &v in &panel.mean {
+        push_u64(&mut buf, v.to_bits());
+    }
+    for &v in &panel.m2 {
+        push_u64(&mut buf, v.to_bits());
+    }
+    let sum = fnv1a(&buf);
+    push_u64(&mut buf, sum);
+    buf
+}
+
+/// Bytes of the fixed header (magic .. m2_len), before the payload.
+const HEADER_BYTES: usize = 8 * 8;
+
+fn read_u64(key: PanelKey, bytes: &[u8], pos: &mut usize) -> StoreResult<u64> {
+    let end = *pos + 8;
+    if end > bytes.len() {
+        return Err(StoreError::ShortRead { key, expected: end, got: bytes.len() });
+    }
+    let v = u64::from_le_bytes(bytes[*pos..end].try_into().unwrap());
+    *pos = end;
+    Ok(v)
+}
+
+/// Parse and verify a spill file.  Order of checks: header presence
+/// (truncation ⇒ [`StoreError::ShortRead`]), magic and key agreement
+/// ([`StoreError::BadHeader`]), total length against the declared payload
+/// (`ShortRead`), then the checksum over every byte before the trailer
+/// ([`StoreError::ChecksumMismatch`]) — only then do doubles materialize.
+pub(crate) fn decode_panel(key: PanelKey, bytes: &[u8]) -> StoreResult<StatPanel> {
+    let mut pos = 0usize;
+    let magic = read_u64(key, bytes, &mut pos)?;
+    if magic != MAGIC {
+        return Err(StoreError::BadHeader {
+            key,
+            detail: format!("magic {magic:#018x}, expected {MAGIC:#018x}"),
+        });
+    }
+    let d = read_u64(key, bytes, &mut pos)? as usize;
+    let block = read_u64(key, bytes, &mut pos)? as usize;
+    let panel = read_u64(key, bytes, &mut pos)? as usize;
+    let n = read_u64(key, bytes, &mut pos)?;
+    let w = f64::from_bits(read_u64(key, bytes, &mut pos)?);
+    let mean_len = read_u64(key, bytes, &mut pos)? as usize;
+    let m2_len = read_u64(key, bytes, &mut pos)? as usize;
+    if panel != key.panel {
+        return Err(StoreError::BadHeader {
+            key,
+            detail: format!("file carries panel {panel}, key names panel {}", key.panel),
+        });
+    }
+    if mean_len != d {
+        return Err(StoreError::BadHeader {
+            key,
+            detail: format!("mean header has {mean_len} entries for d = {d}"),
+        });
+    }
+    let expected = HEADER_BYTES + 8 * (mean_len + m2_len) + 8;
+    if bytes.len() != expected {
+        return Err(StoreError::ShortRead { key, expected, got: bytes.len() });
+    }
+    let body = &bytes[..expected - 8];
+    let stored = u64::from_le_bytes(bytes[expected - 8..].try_into().unwrap());
+    let computed = fnv1a(body);
+    if computed != stored {
+        return Err(StoreError::ChecksumMismatch { key, computed, stored });
+    }
+    let mut mean = Vec::with_capacity(mean_len);
+    for _ in 0..mean_len {
+        mean.push(f64::from_bits(read_u64(key, bytes, &mut pos)?));
+    }
+    let mut m2 = Vec::with_capacity(m2_len);
+    for _ in 0..m2_len {
+        m2.push(f64::from_bits(read_u64(key, bytes, &mut pos)?));
+    }
+    Ok(StatPanel { d, block, panel, n, w, mean, m2 })
+}
+
+/// Bounded-residency panel store backed by checksummed spill files.
+#[derive(Debug)]
+pub struct SpillStore {
+    dir: PathBuf,
+    /// resident budget in bytes (a single over-budget panel is still
+    /// admitted — there is no smaller unit to evict)
+    budget: usize,
+    inner: Mutex<SpillInner>,
+}
+
+#[derive(Debug, Default)]
+struct SpillInner {
+    entries: BTreeMap<PanelKey, Entry>,
+    /// logical LRU clock
+    clock: u64,
+    metrics: StoreMetrics,
+}
+
+#[derive(Debug)]
+struct Entry {
+    /// in-memory copy, if resident
+    resident: Option<StatPanel>,
+    /// accounted resident bytes of this panel
+    bytes: usize,
+    /// a valid spill file exists (panels are immutable, so once written
+    /// the file stays authoritative and re-eviction is free)
+    on_disk: bool,
+    pinned: bool,
+    last_used: u64,
+}
+
+impl SpillStore {
+    /// Create a store with `budget_bytes` of resident budget (clamped to
+    /// ≥ 1) in a fresh unique directory under the OS temp dir.
+    pub fn new(budget_bytes: usize) -> StoreResult<SpillStore> {
+        let seq = STORE_SEQ.fetch_add(1, Ordering::Relaxed);
+        let dir = std::env::temp_dir()
+            .join(format!("plrmr-store-{}-{seq}", std::process::id()));
+        std::fs::create_dir_all(&dir).map_err(|e| StoreError::Io {
+            context: format!("create spill dir {dir:?}"),
+            source: e,
+        })?;
+        Ok(SpillStore {
+            dir,
+            budget: budget_bytes.max(1),
+            inner: Mutex::new(SpillInner::default()),
+        })
+    }
+
+    /// The store's spill directory (removed on drop).
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Where `key`'s panel spills to (exists only after an eviction).
+    pub fn spill_path(&self, key: PanelKey) -> PathBuf {
+        self.dir.join(format!("f{}_p{}.panel", key.fold, key.panel))
+    }
+
+    /// Evict LRU unpinned resident panels until `incoming` more bytes fit
+    /// inside the budget.  If nothing evictable remains the newcomer is
+    /// admitted over budget (a single panel has no smaller unit to shed).
+    fn make_room(&self, inner: &mut SpillInner, incoming: usize) -> StoreResult<()> {
+        while inner.metrics.resident_bytes + incoming > self.budget {
+            let victim = inner
+                .entries
+                .iter()
+                .filter(|(_, e)| e.resident.is_some() && !e.pinned)
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| *k);
+            let Some(key) = victim else { break };
+            self.evict(inner, key)?;
+        }
+        Ok(())
+    }
+
+    fn evict(&self, inner: &mut SpillInner, key: PanelKey) -> StoreResult<()> {
+        let entry = inner.entries.get_mut(&key).expect("evict target exists");
+        // write BEFORE dropping the resident copy: a failed spill (disk
+        // full, dead mount) must leave the panel intact in memory — the
+        // caller sees the Io error and the store stays consistent, just
+        // over budget
+        if !entry.on_disk {
+            let panel = entry.resident.as_ref().expect("evict target resident");
+            let encoded = encode_panel(panel);
+            let path = self.spill_path(key);
+            std::fs::write(&path, &encoded).map_err(|e| StoreError::Io {
+                context: format!("spill {key} to {path:?}"),
+                source: e,
+            })?;
+            entry.on_disk = true;
+            inner.metrics.spill_writes += 1;
+            inner.metrics.spill_bytes += encoded.len();
+        }
+        entry.resident = None;
+        inner.metrics.resident_bytes -= entry.bytes;
+        inner.metrics.spilled_panels += 1;
+        inner.metrics.evictions += 1;
+        Ok(())
+    }
+}
+
+impl Drop for SpillStore {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.dir);
+    }
+}
+
+impl PanelStore for SpillStore {
+    fn put(&self, key: PanelKey, panel: StatPanel) -> StoreResult<()> {
+        let bytes = panel_bytes(&panel);
+        let mut inner = self.inner.lock().unwrap();
+        if inner.entries.contains_key(&key) {
+            return Err(StoreError::DoubleRetire(key));
+        }
+        self.make_room(&mut inner, bytes)?;
+        inner.clock += 1;
+        let last_used = inner.clock;
+        inner.entries.insert(
+            key,
+            Entry { resident: Some(panel), bytes, on_disk: false, pinned: false, last_used },
+        );
+        inner.metrics.panels += 1;
+        inner.metrics.resident_bytes += bytes;
+        inner.metrics.resident_bytes_peak = inner
+            .metrics
+            .resident_bytes_peak
+            .max(inner.metrics.resident_bytes);
+        Ok(())
+    }
+
+    fn get(&self, key: PanelKey) -> StoreResult<StatPanel> {
+        let mut inner = self.inner.lock().unwrap();
+        let (resident, bytes) = match inner.entries.get(&key) {
+            None => return Err(StoreError::Missing(key)),
+            Some(e) => (e.resident.is_some(), e.bytes),
+        };
+        if resident {
+            inner.clock += 1;
+            let clock = inner.clock;
+            let e = inner.entries.get_mut(&key).unwrap();
+            e.last_used = clock;
+            return Ok(e.resident.clone().unwrap());
+        }
+        // spilled: make room first (evict-before-admit), then load+verify
+        self.make_room(&mut inner, bytes)?;
+        let path = self.spill_path(key);
+        let raw = std::fs::read(&path).map_err(|e| {
+            if e.kind() == std::io::ErrorKind::NotFound {
+                StoreError::SpillFileMissing { key, path: path.clone() }
+            } else {
+                StoreError::Io { context: format!("read spill file {path:?}"), source: e }
+            }
+        })?;
+        let panel = decode_panel(key, &raw)?;
+        inner.clock += 1;
+        let clock = inner.clock;
+        let e = inner.entries.get_mut(&key).unwrap();
+        e.resident = Some(panel.clone());
+        e.last_used = clock;
+        inner.metrics.resident_bytes += bytes;
+        inner.metrics.resident_bytes_peak = inner
+            .metrics
+            .resident_bytes_peak
+            .max(inner.metrics.resident_bytes);
+        inner.metrics.spill_reads += 1;
+        inner.metrics.spilled_panels -= 1;
+        Ok(panel)
+    }
+
+    fn contains(&self, key: PanelKey) -> bool {
+        self.inner.lock().unwrap().entries.contains_key(&key)
+    }
+
+    fn keys(&self) -> Vec<PanelKey> {
+        self.inner.lock().unwrap().entries.keys().copied().collect()
+    }
+
+    fn remove(&self, key: PanelKey) -> StoreResult<()> {
+        let mut inner = self.inner.lock().unwrap();
+        let entry = inner.entries.remove(&key).ok_or(StoreError::Missing(key))?;
+        inner.metrics.panels -= 1;
+        if entry.resident.is_some() {
+            inner.metrics.resident_bytes -= entry.bytes;
+        } else {
+            inner.metrics.spilled_panels -= 1;
+        }
+        if entry.on_disk {
+            let path = self.spill_path(key);
+            if let Err(e) = std::fs::remove_file(&path) {
+                if e.kind() != std::io::ErrorKind::NotFound {
+                    return Err(StoreError::Io {
+                        context: format!("remove spill file {path:?}"),
+                        source: e,
+                    });
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn pin(&self, key: PanelKey) -> StoreResult<()> {
+        let mut inner = self.inner.lock().unwrap();
+        match inner.entries.get_mut(&key) {
+            Some(e) => {
+                e.pinned = true;
+                Ok(())
+            }
+            None => Err(StoreError::Missing(key)),
+        }
+    }
+
+    fn unpin(&self, key: PanelKey) -> StoreResult<()> {
+        let mut inner = self.inner.lock().unwrap();
+        match inner.entries.get_mut(&key) {
+            Some(e) => {
+                e.pinned = false;
+                Ok(())
+            }
+            None => Err(StoreError::Missing(key)),
+        }
+    }
+
+    fn metrics(&self) -> StoreMetrics {
+        self.inner.lock().unwrap().metrics
+    }
+
+    fn budget_bytes(&self) -> Option<usize> {
+        Some(self.budget)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::random_panels;
+    use super::*;
+
+    fn key(fold: usize, panel: usize) -> PanelKey {
+        PanelKey { fold, panel }
+    }
+
+    #[test]
+    fn encode_decode_round_trips_bit_for_bit() {
+        for (seed, p, block) in [(1u64, 4usize, 2usize), (2, 7, 3), (3, 1, 5)] {
+            for (t, pl) in random_panels(seed, p, block, 30).into_iter().enumerate() {
+                let bytes = encode_panel(&pl);
+                let back = decode_panel(key(0, t), &bytes).unwrap();
+                assert_eq!(back.n, pl.n);
+                assert_eq!(back.w.to_bits(), pl.w.to_bits());
+                assert_eq!(back.d, pl.d);
+                assert_eq!(back.block, pl.block);
+                for (a, b) in back.mean.iter().zip(&pl.mean) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+                for (a, b) in back.m2.iter().zip(&pl.m2) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn decode_rejects_truncated_flipped_and_mislabeled_bytes() {
+        let pl = random_panels(5, 5, 2, 25).remove(1);
+        let bytes = encode_panel(&pl);
+        // truncation at several cut points → ShortRead, by name
+        for cut in [0usize, 7, HEADER_BYTES - 1, HEADER_BYTES + 3, bytes.len() - 1] {
+            let err = decode_panel(key(0, 1), &bytes[..cut]).unwrap_err();
+            let msg = err.to_string();
+            assert!(msg.contains("short read") || msg.contains("truncated"), "cut={cut}: {msg}");
+        }
+        // a single flipped payload bit → ChecksumMismatch
+        let mut flipped = bytes.clone();
+        let mid = HEADER_BYTES + (flipped.len() - HEADER_BYTES) / 2;
+        flipped[mid] ^= 0x10;
+        let err = decode_panel(key(0, 1), &flipped).unwrap_err();
+        assert!(err.to_string().contains("checksum mismatch"), "{err}");
+        // wrong magic → BadHeader
+        let mut wrong = bytes.clone();
+        wrong[0] ^= 0xFF;
+        let err = decode_panel(key(0, 1), &wrong).unwrap_err();
+        assert!(err.to_string().contains("bad spill header"), "{err}");
+        // key/panel disagreement → BadHeader naming both
+        let err = decode_panel(key(0, 2), &bytes).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("carries panel 1") && msg.contains("panel 2"), "{msg}");
+    }
+
+    #[test]
+    fn budget_bounds_residency_and_reloads_bitwise() {
+        let panels = random_panels(11, 6, 2, 50);
+        assert!(panels.len() >= 3);
+        let one = panel_bytes(&panels[0]); // panel 0 is the largest
+        let store = SpillStore::new(one).unwrap();
+        for (t, pl) in panels.iter().enumerate() {
+            store.put(key(0, t), pl.clone()).unwrap();
+        }
+        let m = store.metrics();
+        assert!(
+            m.resident_bytes_peak <= one,
+            "evict-before-admit must hold the peak ≤ one panel: {} vs {one}",
+            m.resident_bytes_peak
+        );
+        assert_eq!(m.panels, panels.len());
+        assert_eq!(m.spill_writes, panels.len() - 1, "all but the newest spilled");
+        assert!(m.spill_bytes > 0);
+        // reload every panel (round-robin → constant eviction churn) and
+        // verify the doubles never drift a bit
+        for round in 0..2 {
+            for (t, pl) in panels.iter().enumerate() {
+                let got = store.get(key(0, t)).unwrap();
+                for (a, b) in got.m2.iter().zip(&pl.m2) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "round {round} panel {t}");
+                }
+            }
+        }
+        let m = store.metrics();
+        assert!(m.spill_reads >= panels.len(), "reloads must hit the spill files");
+        assert!(m.resident_bytes_peak <= one);
+        // every panel spilled exactly once across all the churn:
+        // re-evicting an already-spilled panel rewrites nothing
+        assert_eq!(m.spill_writes, panels.len(), "files are immutable once written");
+    }
+
+    #[test]
+    fn lru_order_evicts_cold_panels_first() {
+        let panels = random_panels(13, 4, 1, 20); // 5 panels of a d=5 triangle
+        let two = panel_bytes(&panels[0]) + panel_bytes(&panels[1]);
+        let store = SpillStore::new(two).unwrap();
+        store.put(key(0, 0), panels[0].clone()).unwrap();
+        store.put(key(0, 1), panels[1].clone()).unwrap();
+        assert_eq!(store.metrics().spill_writes, 0, "both fit");
+        // touch panel 0 so panel 1 is the LRU victim
+        store.get(key(0, 0)).unwrap();
+        store.put(key(0, 2), panels[2].clone()).unwrap();
+        assert!(store.spill_path(key(0, 1)).exists(), "LRU panel 1 spilled");
+        assert!(!store.spill_path(key(0, 0)).exists(), "hot panel 0 stayed resident");
+    }
+
+    #[test]
+    fn pinned_panels_survive_eviction_pressure() {
+        let panels = random_panels(17, 4, 1, 20);
+        let one = panel_bytes(&panels[0]);
+        let store = SpillStore::new(one).unwrap();
+        store.put(key(0, 0), panels[0].clone()).unwrap();
+        store.pin(key(0, 0)).unwrap();
+        store.put(key(0, 1), panels[1].clone()).unwrap();
+        store.put(key(0, 2), panels[2].clone()).unwrap();
+        // the pinned panel never spilled; pressure fell on the others
+        assert!(!store.spill_path(key(0, 0)).exists());
+        let got = store.get(key(0, 0)).unwrap();
+        assert_eq!(got, panels[0]);
+        store.unpin(key(0, 0)).unwrap();
+        store.put(key(0, 3), panels[3].clone()).unwrap();
+        store.put(key(0, 4), panels[4].clone()).unwrap();
+        assert!(store.spill_path(key(0, 0)).exists(), "unpinned panel is evictable again");
+    }
+
+    #[test]
+    fn corrupt_and_vanished_spill_files_surface_named_errors() {
+        let panels = random_panels(19, 5, 2, 30);
+        let one = panel_bytes(&panels[0]);
+        let store = SpillStore::new(one).unwrap();
+        for (t, pl) in panels.iter().enumerate() {
+            store.put(key(0, t), pl.clone()).unwrap();
+        }
+        // truncate panel 0's spill file → ShortRead
+        let p0 = store.spill_path(key(0, 0));
+        assert!(p0.exists());
+        let bytes = std::fs::read(&p0).unwrap();
+        std::fs::write(&p0, &bytes[..bytes.len() / 2]).unwrap();
+        let err = store.get(key(0, 0)).unwrap_err();
+        assert!(err.to_string().contains("truncated"), "{err}");
+        // bit-flip panel 1's file → ChecksumMismatch
+        let p1 = store.spill_path(key(0, 1));
+        let mut bytes = std::fs::read(&p1).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x01;
+        std::fs::write(&p1, &bytes).unwrap();
+        let err = store.get(key(0, 1)).unwrap_err();
+        assert!(err.to_string().contains("checksum mismatch"), "{err}");
+        // delete panel 2's file (a concurrent eviction/cleanup race) →
+        // SpillFileMissing, not a panic and not silent zeros
+        let p2 = store.spill_path(key(0, 2));
+        std::fs::remove_file(&p2).unwrap();
+        let err = store.get(key(0, 2)).unwrap_err();
+        assert!(err.to_string().contains("vanished"), "{err}");
+    }
+
+    #[test]
+    fn tempdir_removed_on_drop_and_on_unwind() {
+        // completion path
+        let panels = random_panels(23, 4, 2, 20);
+        let one = panel_bytes(&panels[0]);
+        let store = SpillStore::new(one).unwrap();
+        let dir = store.dir().to_path_buf();
+        for (t, pl) in panels.iter().enumerate() {
+            store.put(key(0, t), pl.clone()).unwrap();
+        }
+        assert!(dir.exists() && std::fs::read_dir(&dir).unwrap().count() > 0);
+        drop(store);
+        assert!(!dir.exists(), "spill dir must be removed on completion");
+        // error path: the destructor runs during unwinding too
+        let dir_cell = std::sync::Mutex::new(None::<PathBuf>);
+        let result = std::panic::catch_unwind(|| {
+            let store = SpillStore::new(one).unwrap();
+            *dir_cell.lock().unwrap() = Some(store.dir().to_path_buf());
+            store.put(key(0, 0), panels[0].clone()).unwrap();
+            store.put(key(0, 1), panels[1].clone()).unwrap();
+            panic!("simulated job failure");
+        });
+        assert!(result.is_err());
+        let dir = dir_cell.lock().unwrap().take().unwrap();
+        assert!(!dir.exists(), "spill dir must be removed on error paths");
+    }
+
+    #[test]
+    fn remove_deletes_the_spill_file() {
+        let panels = random_panels(29, 4, 2, 20);
+        let one = panel_bytes(&panels[0]);
+        let store = SpillStore::new(one).unwrap();
+        for (t, pl) in panels.iter().enumerate() {
+            store.put(key(0, t), pl.clone()).unwrap();
+        }
+        let p0 = store.spill_path(key(0, 0));
+        assert!(p0.exists());
+        store.remove(key(0, 0)).unwrap();
+        assert!(!p0.exists());
+        assert!(store.get(key(0, 0)).is_err());
+    }
+}

@@ -87,6 +87,23 @@ fn fit_with_tiled_statistics_block() {
 }
 
 #[test]
+fn fit_with_spillable_store_budget() {
+    let (ok, stdout, stderr) = plrmr(&[
+        "fit", "--synth", "3000,6,0.4,4", "--folds", "5", "--lambdas", "10",
+        "--gram-block", "2", "--store-budget", "512",
+    ]);
+    assert!(ok, "{stderr}");
+    assert!(stdout.contains("panel store spilled"), "{stdout}");
+    assert!(stdout.contains("leader-resident fold statistics"), "{stdout}");
+    // a budget without the tiled path is a named config error, not a panic
+    let (ok, _, stderr) = plrmr(&[
+        "fit", "--synth", "1000,4,0.5,1", "--store-budget", "1024",
+    ]);
+    assert!(!ok);
+    assert!(stderr.contains("gram_block"), "{stderr}");
+}
+
+#[test]
 fn fit_requires_exactly_one_source() {
     let (ok, _, stderr) = plrmr(&["fit"]);
     assert!(!ok);

@@ -321,12 +321,20 @@ fn tiled_fit_is_panel_native_bit_identical_and_alloc_bounded() {
         workers: 4,
         ..FitConfig::default()
     };
+    let k = 5;
     let untiled = Driver::new(base).fit(&data).unwrap();
+    // the co-resident accounting fix: the packed path's leader holds ALL
+    // k fold statistics plus the total (count + weight + mean + triangle
+    // each), not just one triangle — which is exactly the O(k·d²) the
+    // spillable store removes
+    let packed_stat = 8 * (2 + d + tri_len(d));
     assert_eq!(
-        untiled.stat_peak_alloc_bytes,
-        8 * tri_len(d),
-        "packed fit resides in one packed triangle"
+        untiled.resident_stat_bytes_peak,
+        (k + 1) * packed_stat,
+        "packed-path co-residency = k folds + total"
     );
+    assert!(untiled.stat_peak_alloc_bytes > untiled.resident_stat_bytes_peak);
+    assert_eq!(untiled.spill_writes, 0);
     for block in [1usize, 7, d, 64] {
         for workers in [1usize, 4, 8] {
             for chaos in [false, true] {
@@ -344,19 +352,166 @@ fn tiled_fit_is_panel_native_bit_identical_and_alloc_bounded() {
                 assert_eq!(report.cv.fold_err, untiled.cv.fold_err, "{tag}");
                 assert_eq!(report.lambdas, untiled.lambdas, "{tag}");
                 assert_eq!(report.map_metrics.records, 3000, "{tag}");
+                // unbudgeted MemStore: the exact resident panel bytes of
+                // (k folds + total) × all panels, headers included
                 let layout = TileLayout::new(d, block);
-                assert!(
-                    report.stat_peak_alloc_bytes <= 8 * layout.max_panel_len().max(d),
-                    "{tag}: driver peak {} over the O(d·b) panel bound {}",
-                    report.stat_peak_alloc_bytes,
-                    8 * layout.max_panel_len().max(d)
+                let per_fold = 8 * (layout.n_panels() * (2 + d) + tri_len(d));
+                assert_eq!(
+                    report.resident_stat_bytes_peak,
+                    (k + 1) * per_fold,
+                    "{tag}: MemStore resident accounting"
                 );
-                assert!(
-                    report.stat_peak_alloc_bytes < untiled.stat_peak_alloc_bytes
-                        || layout.max_panel_len() == tri_len(d),
-                    "{tag}: tiling must shrink the peak unless b covers d"
-                );
+                assert_eq!(report.spill_writes, 0, "{tag}: unbudgeted must not spill");
             }
+        }
+    }
+}
+
+#[test]
+fn spillable_store_fit_budget_bounded_and_bit_identical() {
+    // The PR's acceptance criterion: with `store_budget_bytes` down to ONE
+    // panel, a full tiled fit (CV included) completes with the leader's
+    // resident statistics ≤ budget — and the fit output is bit-for-bit the
+    // unbudgeted tiled fit and the packed fit, across budgets × workers
+    // {1,4,8} × FaultPlan::chaotic.  Chaos must not be able to drop or
+    // double-retire a panel: a dropped panel fails the fit loudly at
+    // seal time ("incomplete"), a double-retire fails it at the store —
+    // every successful fit below implies full exactly-once coverage.
+    use plrmr::stats::symm::tri_len;
+    use plrmr::stats::tiles::TileLayout;
+
+    let data = generate(&SynthSpec::sparse_linear(3000, 6, 0.4, 13));
+    let d = 6 + 1;
+    let block = 3;
+    let base = FitConfig {
+        folds: 5,
+        n_lambdas: 20,
+        split_rows: 500,
+        workers: 4,
+        ..FitConfig::default()
+    };
+    let packed = Driver::new(base).fit(&data).unwrap();
+    let layout = TileLayout::new(d, block);
+    let one_panel = 8 * (2 + d + layout.max_panel_len());
+    assert!(one_panel < 8 * (2 + d + tri_len(d)), "a panel is smaller than the triangle");
+    let mut chaos_retries = 0usize;
+    for budget in [one_panel, 3 * one_panel, 0] {
+        for workers in [1usize, 4, 8] {
+            for chaos in [false, true] {
+                let fault = if chaos {
+                    FaultPlan::chaotic(0.3, 9)
+                } else {
+                    FaultPlan::none()
+                };
+                let cfg = FitConfig {
+                    gram_block: block,
+                    store_budget_bytes: budget,
+                    workers,
+                    fault,
+                    ..base
+                };
+                let report = Driver::new(cfg).fit(&data).unwrap();
+                let tag = format!("budget={budget} w={workers} chaos={chaos}");
+                assert_eq!(report.model.beta, packed.model.beta, "{tag}");
+                assert_eq!(report.model.alpha, packed.model.alpha, "{tag}");
+                assert_eq!(report.lambda_opt, packed.lambda_opt, "{tag}");
+                assert_eq!(report.cv.fold_err, packed.cv.fold_err, "{tag}");
+                assert_eq!(report.lambdas, packed.lambdas, "{tag}");
+                assert_eq!(report.map_metrics.records, 3000, "{tag}");
+                if budget > 0 {
+                    assert!(
+                        report.resident_stat_bytes_peak <= budget,
+                        "{tag}: resident peak {} over budget",
+                        report.resident_stat_bytes_peak
+                    );
+                    assert!(report.spill_writes > 0, "{tag}: budget must force spills");
+                    assert!(report.spill_reads > 0, "{tag}: CV must reload spilled panels");
+                } else {
+                    assert_eq!(report.spill_writes, 0, "{tag}");
+                }
+                chaos_retries += report.map_metrics.retries;
+            }
+        }
+    }
+    assert!(chaos_retries > 0, "the chaotic plans must actually crash tasks");
+
+    // ridge and elastic-net run the same budgeted path (the ridge Gram is
+    // materialized panel-by-panel from the store into the tiled factor)
+    for pen in [Penalty::ridge(), Penalty::elastic_net(0.3)] {
+        let a = Driver::new(FitConfig { penalty: pen, ..base }).fit(&data).unwrap();
+        let b = Driver::new(FitConfig {
+            penalty: pen,
+            gram_block: block,
+            store_budget_bytes: one_panel,
+            ..base
+        })
+        .fit(&data)
+        .unwrap();
+        assert_eq!(a.model.beta, b.model.beta, "{} under budget", pen.family());
+        assert_eq!(a.lambda_opt, b.lambda_opt);
+        assert!(b.resident_stat_bytes_peak <= one_panel);
+    }
+
+    // screen-auto through the one-panel budget: identical to the packed
+    // screened fit (selection, embedding and all)
+    let screened_packed = Driver::new(FitConfig { screen_auto: 4, ..base })
+        .fit(&data)
+        .unwrap();
+    assert!(screened_packed.screened.is_some(), "p=6 > 4 must screen");
+    let screened_budget = Driver::new(FitConfig {
+        screen_auto: 4,
+        gram_block: block,
+        store_budget_bytes: one_panel,
+        ..base
+    })
+    .fit(&data)
+    .unwrap();
+    assert_eq!(screened_packed.model.beta, screened_budget.model.beta);
+    assert_eq!(screened_packed.lambda_opt, screened_budget.lambda_opt);
+    assert_eq!(
+        screened_packed.screened.as_ref().unwrap().selected,
+        screened_budget.screened.as_ref().unwrap().selected
+    );
+    assert!(screened_budget.resident_stat_bytes_peak <= one_panel);
+}
+
+#[test]
+fn store_built_ridge_gram_solves_bit_identically() {
+    // "including ridge": the quadratic form the store streams panel-by-
+    // panel feeds the tiled Cholesky (linalg::TiledLowerTri) and matches
+    // the packed closed-form ridge bit for bit.
+    use plrmr::solver::ridge::{solve_ridge, solve_ridge_tiled};
+    use plrmr::stats::tiles::{shard_stats, TileLayout};
+    use plrmr::stats::SuffStats;
+    use plrmr::store::{FoldStore, MemStore};
+
+    let p = 24;
+    let block = 5;
+    let k = 3;
+    let layout = TileLayout::new(p + 1, block);
+    let data = generate(&SynthSpec::sparse_linear(2000, p, 0.2, 41));
+    let mut folds: Vec<SuffStats> = (0..k).map(|_| SuffStats::new(p)).collect();
+    for i in 0..data.n() {
+        folds[i % k].push(data.row(i), data.y[i]);
+    }
+    let mut store = FoldStore::new(Box::new(MemStore::new()), k, p, layout);
+    for (fold, s) in folds.iter().enumerate() {
+        for pl in shard_stats(s, layout) {
+            store.retire(fold, pl.panel, pl).unwrap();
+        }
+    }
+    store.seal().unwrap();
+    let q_tiled = store.quad_form_train(None).unwrap();
+    let mut total = folds[0].clone();
+    for f in &folds[1..] {
+        total.merge(f);
+    }
+    let q_packed = total.quad_form();
+    for lambda in [0.01, 0.3, 2.0] {
+        let rt = solve_ridge_tiled(&q_tiled, lambda).unwrap();
+        let rp = solve_ridge(&q_packed, lambda).unwrap();
+        for j in 0..p {
+            assert_eq!(rt[j].to_bits(), rp[j].to_bits(), "ridge λ={lambda} j={j}");
         }
     }
 }
@@ -433,7 +588,9 @@ fn resident_allocation_accounting_on_the_tiled_path() {
         assert_eq!(rt[j].to_bits(), rp[j].to_bits(), "ridge j={j}");
     }
 
-    // the whole driver-side CV path stays panel-bounded (fit-level view)
+    // the whole driver-side CV path streams through the store (fit-level
+    // view): unbudgeted residency is exactly the (k+1) panel sets, and a
+    // one-panel budget collapses it to a single panel
     let cfg = FitConfig {
         folds: 4,
         n_lambdas: 10,
@@ -443,7 +600,15 @@ fn resident_allocation_accounting_on_the_tiled_path() {
         ..FitConfig::default()
     };
     let report = Driver::new(cfg).fit(&data).unwrap();
-    assert!(report.stat_peak_alloc_bytes <= 8 * layout.max_panel_len().max(d));
+    let per_fold = 8 * (layout.n_panels() * (2 + d) + plrmr::stats::symm::tri_len(d));
+    assert_eq!(report.resident_stat_bytes_peak, (4 + 1) * per_fold);
+    let one_panel = 8 * (2 + d + layout.max_panel_len());
+    let budgeted = Driver::new(FitConfig { store_budget_bytes: one_panel, ..cfg })
+        .fit(&data)
+        .unwrap();
+    assert_eq!(budgeted.model.beta, report.model.beta, "budget must not change bits");
+    assert!(budgeted.resident_stat_bytes_peak <= one_panel);
+    assert!(budgeted.spill_writes > 0);
 }
 
 #[test]
