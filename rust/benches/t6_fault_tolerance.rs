@@ -5,6 +5,9 @@
 use plrmr::experiments::{self, ExpOptions};
 
 fn main() {
+    // bench executables are not named `plrmr`, so point the supervisor at
+    // the real CLI binary for the process-isolation section
+    std::env::set_var("PLRMR_WORKER_BIN", env!("CARGO_BIN_EXE_plrmr"));
     let quick = std::env::args().any(|a| a == "--quick");
     let opts = ExpOptions { quick, workers: 0 };
     match experiments::run("t6", opts) {

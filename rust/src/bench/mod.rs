@@ -127,6 +127,7 @@ pub fn render_job_phases(results: &[(String, JobMetrics)]) -> String {
     let mut t = Table::new(vec![
         "run", "map", "shuffle", "reduce", "total", "merge frac",
         "payloads", "bytes", "max key", "pre-combined", "leader merges",
+        "retries", "max attempts", "deadlines", "hb missed",
     ]);
     for (name, m) in results {
         t.row(vec![
@@ -141,6 +142,10 @@ pub fn render_job_phases(results: &[(String, JobMetrics)]) -> String {
             fmt_bytes(m.max_payload_bytes),
             format!("{}", m.combined_nodes),
             format!("{}", m.reduce_merges),
+            format!("{}", m.retries),
+            format!("{}", m.attempts_max),
+            format!("{}", m.deadline_expirations),
+            format!("{}", m.heartbeats_missed),
         ]);
     }
     t.render()
@@ -199,6 +204,9 @@ mod tests {
         assert!(s.contains("| w=4"));
         assert!(s.contains("merge frac"));
         assert!(s.contains("0.400"));
+        assert!(s.contains("retries"));
+        assert!(s.contains("max attempts"));
+        assert!(s.contains("hb missed"));
     }
 
     #[test]

@@ -51,6 +51,18 @@ pub struct FitConfig {
     /// from the statistics — the paper's §4 envelope for p beyond the
     /// Gram-in-memory ceiling.  0 ⇒ never screen automatically.
     pub screen_auto: usize,
+    /// out-of-process worker runtime: number of worker *processes* to
+    /// supervise (0 ⇒ the default in-process thread pool).  Requires the
+    /// tiled statistics path (`gram_block > 0`) — task payloads travel as
+    /// encoded panels.  The fit output is bit-identical to the in-process
+    /// pool at every process count (asserted in `tests/proc_workers.rs`).
+    pub proc_workers: usize,
+    /// worker heartbeat period in ms for the process runtime (0 disables
+    /// heartbeat supervision)
+    pub heartbeat_ms: u64,
+    /// per-attempt task deadline in ms for the process runtime (0 disables
+    /// deadlines)
+    pub task_deadline_ms: u64,
     /// salt for the random fold assignment (Algorithm 1 line 4)
     pub seed: u64,
     /// modeled cluster scheduling costs
@@ -74,6 +86,9 @@ impl Default for FitConfig {
             gram_block: 0,
             store_budget_bytes: 0,
             screen_auto: 4096,
+            proc_workers: 0,
+            heartbeat_ms: 50,
+            task_deadline_ms: 30_000,
             seed: 0x5EED,
             costs: JobCosts::zero(),
             fault: FaultPlan::none(),
@@ -126,6 +141,13 @@ impl FitConfig {
         self
     }
 
+    /// Out-of-process worker count (0 ⇒ in-process thread pool; nonzero
+    /// requires `gram_block > 0`).
+    pub fn with_proc_workers(mut self, n: usize) -> Self {
+        self.proc_workers = n;
+        self
+    }
+
     /// Validate invariants that would otherwise fail deep inside a job.
     pub fn validate(&self) -> Result<()> {
         if self.folds < 2 {
@@ -153,6 +175,12 @@ impl FitConfig {
             bail!(
                 "store_budget_bytes requires the tiled statistics path \
                  (set gram_block > 0)"
+            );
+        }
+        if self.proc_workers > 0 && self.gram_block == 0 {
+            bail!(
+                "proc_workers requires the tiled statistics path \
+                 (set gram_block > 0): task payloads travel as encoded panels"
             );
         }
         Ok(())
@@ -203,6 +231,9 @@ impl FitConfig {
                 "gram_block" => cfg.gram_block = val.parse()?,
                 "store_budget_bytes" => cfg.store_budget_bytes = val.parse()?,
                 "screen_auto" => cfg.screen_auto = val.parse()?,
+                "proc_workers" => cfg.proc_workers = val.parse()?,
+                "heartbeat_ms" => cfg.heartbeat_ms = val.parse()?,
+                "task_deadline_ms" => cfg.task_deadline_ms = val.parse()?,
                 "seed" => cfg.seed = val.parse()?,
                 "tol" => cfg.cd.tol = val.parse()?,
                 "max_sweeps" => cfg.cd.max_sweeps = val.parse()?,
@@ -264,6 +295,23 @@ mod tests {
         assert!(FitConfig::from_kv_pairs("folds=1").is_err());
         assert!(FitConfig::from_kv_pairs("wat=1").is_err());
         assert!(FitConfig::from_kv_pairs("penalty=banana").is_err());
+    }
+
+    #[test]
+    fn proc_workers_require_the_tiled_path_and_parse_from_kv() {
+        let err = FitConfig { proc_workers: 4, ..Default::default() }.validate().unwrap_err();
+        assert!(format!("{err:#}").contains("gram_block"), "{err:#}");
+        FitConfig { proc_workers: 4, gram_block: 8, ..Default::default() }.validate().unwrap();
+        let cfg = FitConfig::from_kv_pairs(
+            "gram_block=4\nproc_workers=2\nheartbeat_ms=25\ntask_deadline_ms=5000\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.proc_workers, 2);
+        assert_eq!(cfg.heartbeat_ms, 25);
+        assert_eq!(cfg.task_deadline_ms, 5000);
+        assert_eq!(FitConfig::default().proc_workers, 0, "process runtime is opt-in");
+        let c = FitConfig::default().with_gram_block(4).with_proc_workers(3);
+        assert_eq!(c.proc_workers, 3);
     }
 
     #[test]

@@ -156,7 +156,11 @@ impl Footprint {
 /// ([`crate::stats::TiledSymMat`]) — the rank-1/rank-4 scatter writes
 /// straight into per-panel scratch, so a mapper never holds a single
 /// O(d²) allocation and emit moves the panels out without a triangle copy.
-struct FoldAccumulator<'a, S: Scatter> {
+/// `pub(crate)` so the out-of-process worker ([`super::procjob`]) runs the
+/// exact same bucketing/flush sequence as an in-process map task — the
+/// per-fold statistics a task produces must be bit-identical in both
+/// runtimes.
+pub(crate) struct FoldAccumulator<'a, S: Scatter> {
     assigner: &'a FoldAssigner,
     bufx: Vec<Vec<f64>>,
     bufy: Vec<Vec<f64>>,
@@ -166,7 +170,7 @@ struct FoldAccumulator<'a, S: Scatter> {
 impl<'a, S: Scatter> FoldAccumulator<'a, S> {
     /// `proto` fixes the statistic shape (p and, when tiled, the panel
     /// layout) every fold accumulator is cloned empty from.
-    fn new(k: usize, p: usize, assigner: &'a FoldAssigner, proto: &SuffStats<S>) -> Self {
+    pub(crate) fn new(k: usize, p: usize, assigner: &'a FoldAssigner, proto: &SuffStats<S>) -> Self {
         FoldAccumulator {
             assigner,
             bufx: (0..k).map(|_| Vec::with_capacity(FOLD_FLUSH_ROWS * p)).collect(),
@@ -194,7 +198,7 @@ impl<'a, S: Scatter> FoldAccumulator<'a, S> {
     }
 
     /// Flush everything and hand back the non-empty per-fold statistics.
-    fn finish(mut self) -> Vec<(usize, SuffStats<S>)> {
+    pub(crate) fn finish(mut self) -> Vec<(usize, SuffStats<S>)> {
         for fold in 0..self.stats.len() {
             self.flush(fold);
         }
@@ -209,8 +213,78 @@ impl<'a, S: Scatter> FoldAccumulator<'a, S> {
 /// Row-feeding facade over [`FoldAccumulator`]: one ingestion closure (in-
 /// memory blocks, synthetic streams, CSV shards) drives either statistic
 /// backing through this object-safe surface.
-trait RowSink {
+pub(crate) trait RowSink {
     fn add(&mut self, row_id: u64, x: &[f64], y: f64);
+}
+
+/// Number of map splits of a streamed synthetic workload.
+pub(crate) fn n_synth_splits(n: usize, split_rows: usize) -> usize {
+    n.div_ceil(split_rows.max(1))
+}
+
+/// Derive split `idx` of a streamed synthetic workload: `split_rows` rows
+/// per split, disjoint global row ranges, and a noise seed derived from the
+/// split index so retried tasks regenerate identical rows.  Shared by the
+/// in-process statistics job and the out-of-process worker
+/// ([`super::procjob`]) — both runtimes MUST derive identical splits for
+/// their statistics to be bit-identical.
+pub(crate) fn synth_split(
+    spec: &SynthSpec,
+    split_rows: usize,
+    idx: usize,
+) -> Option<(SynthSpec, usize)> {
+    let split_rows = split_rows.max(1);
+    let offset = idx.checked_mul(split_rows)?;
+    if offset >= spec.n {
+        return None;
+    }
+    let mut sub = spec.clone();
+    sub.n = split_rows.min(spec.n - offset);
+    sub.seed = spec.seed ^ (0x9E37_79B9 + idx as u64).rotate_left(17);
+    Some((sub, offset))
+}
+
+/// Stream one synthetic split's rows into the sink.  Regenerates the true
+/// β of the PARENT spec: [`SynthStream`] derives β from `sub.seed`, which
+/// the split derivation overrode — so the stream is built manually with
+/// the parent β.
+pub(crate) fn feed_synth_split(
+    parent: &SynthSpec,
+    sub: &SynthSpec,
+    start: usize,
+    acc: &mut dyn RowSink,
+) {
+    let p = parent.p;
+    let mut stream = SynthStream::with_beta(sub, parent.true_beta());
+    let mut row_id = start as u64;
+    while let Some((xb, yb)) = stream.next_block(4096) {
+        for (x, &y) in xb.chunks_exact(p).zip(yb) {
+            acc.add(row_id, x, y);
+            row_id += 1;
+        }
+    }
+}
+
+/// Stream one CSV shard's rows into the sink.  Row ids are
+/// (shard index, local row) so the fold split is stable under retries and
+/// across runtimes.  Panics on shard errors — both engines' unwind guards
+/// convert the panic into a named task failure.
+pub(crate) fn feed_csv_shard(
+    p: usize,
+    shard_idx: usize,
+    path: &std::path::Path,
+    acc: &mut dyn RowSink,
+) {
+    let mut local = 0u64;
+    let (got_p, _rows) = crate::data::csv::stream_csv(path, 4096, |xb, yb| {
+        for (x, &y) in xb.chunks_exact(p).zip(yb) {
+            let row_id = ((shard_idx as u64) << 40) | local;
+            acc.add(row_id, x, y);
+            local += 1;
+        }
+    })
+    .unwrap_or_else(|e| panic!("shard {path:?}: {e:#}"));
+    assert_eq!(got_p, p, "shard {path:?} width {got_p} != expected {p}");
 }
 
 impl<S: Scatter> RowSink for FoldAccumulator<'_, S> {
@@ -347,6 +421,13 @@ impl Driver {
     /// The statistics job over an in-memory dataset, in whichever backing
     /// the config selects (the fit path consumes this directly).
     fn stats_job(&self, data: &Dataset) -> Result<(StatsJob, JobMetrics)> {
+        if self.cfg.proc_workers > 0 {
+            anyhow::bail!(
+                "proc_workers cannot fit an in-memory dataset: worker processes \
+                 do not share the leader's address space — use a streaming source \
+                 (fit_stream / --synth) or shard files (fit_csv_shards / --csv)"
+            );
+        }
         let splits: Vec<crate::data::dataset::DataBlock<'_>> = data
             .blocks(self.cfg.split_rows)
             .collect();
@@ -366,37 +447,23 @@ impl Driver {
     }
 
     /// The statistics job over a streaming synthetic source (backing per
-    /// config; nothing materialized).
+    /// config; nothing materialized).  With `proc_workers` > 0 the splits
+    /// run on supervised worker *processes* ([`super::procjob`]) — each
+    /// worker re-derives its split from the same [`synth_split`] rule, so
+    /// the statistics are bit-identical to the in-process pool's.
     fn stats_job_stream(&self, spec: &SynthSpec) -> Result<(StatsJob, JobMetrics)> {
+        if self.cfg.proc_workers > 0 {
+            let (store, metrics) = super::procjob::stats_synth_proc(&self.cfg, spec)?;
+            return Ok((StatsJob::Stored(store), metrics));
+        }
         let p = spec.p;
         // split specs: same ground-truth β (spec.seed), independent noise
         // streams (derived seeds), disjoint global row ranges.
-        let mut splits = Vec::new();
-        let mut offset = 0usize;
-        let mut idx = 0u64;
-        while offset < spec.n {
-            let rows = self.cfg.split_rows.min(spec.n - offset);
-            let mut sub = spec.clone();
-            sub.n = rows;
-            // IMPORTANT: the generator stream seed is derived from the split
-            // index so retried tasks regenerate identical rows.
-            sub.seed = spec.seed ^ (0x9E37_79B9 + idx).rotate_left(17);
-            splits.push((sub, offset));
-            offset += rows;
-            idx += 1;
-        }
+        let splits: Vec<(SynthSpec, usize)> = (0..n_synth_splits(spec.n, self.cfg.split_rows))
+            .map(|idx| synth_split(spec, self.cfg.split_rows, idx).expect("idx in range"))
+            .collect();
         self.run_stats_job(p, &splits, |_ctx, (sub, start), acc| {
-            // regenerate the true β of the PARENT spec: SynthStream
-            // derives it from sub.seed, which we overrode — so build the
-            // stream manually with the parent β.
-            let mut stream = SynthStream::with_beta(sub, spec.true_beta());
-            let mut row_id = *start as u64;
-            while let Some((xb, yb)) = stream.next_block(4096) {
-                for (x, &y) in xb.chunks_exact(p).zip(yb) {
-                    acc.add(row_id, x, y);
-                    row_id += 1;
-                }
-            }
+            feed_synth_split(spec, sub, *start, acc)
         })
     }
 
@@ -418,20 +485,14 @@ impl Driver {
         shards: &[std::path::PathBuf],
     ) -> Result<(StatsJob, JobMetrics)> {
         anyhow::ensure!(!shards.is_empty(), "no shard files given");
+        if self.cfg.proc_workers > 0 {
+            let (store, metrics) = super::procjob::stats_csv_proc(&self.cfg, p, shards)?;
+            return Ok((StatsJob::Stored(store), metrics));
+        }
         let splits: Vec<(usize, &std::path::PathBuf)> =
             shards.iter().enumerate().collect();
         self.run_stats_job(p, &splits, |_ctx, &(shard_idx, path), acc| {
-            let mut local = 0u64;
-            let (got_p, _rows) = crate::data::csv::stream_csv(path, 4096, |xb, yb| {
-                for (x, &y) in xb.chunks_exact(p).zip(yb) {
-                    // global id = (shard, local row): stable under retries
-                    let row_id = ((shard_idx as u64) << 40) | local;
-                    acc.add(row_id, x, y);
-                    local += 1;
-                }
-            })
-            .unwrap_or_else(|e| panic!("shard {path:?}: {e:#}"));
-            assert_eq!(got_p, p, "shard {path:?} width {got_p} != expected {p}");
+            feed_csv_shard(p, shard_idx, path, acc)
         })
     }
 
@@ -660,13 +721,20 @@ impl Driver {
         let p = store.p();
         let q_total = store.quad_form_train(None)?;
         let lambdas = self.lambda_grid_for(&q_total);
-        let cv = cross_validate_store(
-            store,
-            self.cfg.penalty,
-            &lambdas,
-            self.cfg.cd,
-            &self.cfg.engine(),
-        )?;
+        // with proc workers, the (fold × λ) sweep runs on the supervised
+        // worker processes; the shared fold_errors_store makes the two
+        // runtimes bit-identical (asserted in tests/proc_workers.rs)
+        let cv = if self.cfg.proc_workers > 0 {
+            super::procjob::cv_proc(&self.cfg, store, &lambdas)?
+        } else {
+            cross_validate_store(
+                store,
+                self.cfg.penalty,
+                &lambdas,
+                self.cfg.cd,
+                &self.cfg.engine(),
+            )?
+        };
         let sol = solve_cd(&q_total, self.cfg.penalty, cv.lambda_opt, None, self.cfg.cd);
         let (alpha, beta) = q_total.to_original_scale(&sol.beta);
         let model = FittedModel {
@@ -690,6 +758,11 @@ impl Driver {
     /// the ranking and sweep arithmetic is shared
     /// ([`rank_top_m`], `cv::select::summarize`), so the two paths are
     /// bit-identical.
+    ///
+    /// Runs on the leader even under `proc_workers` > 0: the screened
+    /// (m+1)-dim sub-statistics are gathered entry-by-entry off the
+    /// leader's store and never ship anywhere — process supervision covers
+    /// the statistics job and the exact full-p CV sweep.
     fn select_and_fit_screened_store(
         &self,
         store: &FoldStore,

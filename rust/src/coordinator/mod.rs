@@ -4,5 +4,6 @@
 //! back-transform to original units.
 
 pub mod driver;
+pub mod procjob;
 
 pub use driver::{Driver, FitReport};

@@ -1,0 +1,668 @@
+//! Job payloads and leader-side runners for the **out-of-process** runtime
+//! ([`crate::mapreduce::supervisor`]).
+//!
+//! A proc job ships three things over the worker socket, all in the same
+//! checksummed little-endian dialect as the spill files:
+//!
+//! 1. a **setup** payload, broadcast once per worker connection (the
+//!    [`crate::mapreduce::transport::Message::Job`] frame): the job kind
+//!    plus everything a worker needs to execute *any* task of the job;
+//! 2. **task assignments**, which are bare `(task_id, attempt)` pairs —
+//!    tasks are pure functions of their id, which is what makes SIGKILL
+//!    recovery bit-deterministic (a retried task regenerates the identical
+//!    output);
+//! 3. **task outputs**, whose panel payloads are encoded in the spill-file
+//!    format ([`crate::store::spill::encode_panel`]) — checksummed twice,
+//!    once per layer (frame and panel).
+//!
+//! Bit-determinism across runtimes is by construction, not by luck:
+//!
+//! * a worker's map task runs the *same* [`FoldAccumulator`] bucketing and
+//!   the *same* split derivation ([`synth_split`], [`feed_csv_shard`]) as
+//!   an in-process task;
+//! * the leader replays the merged reduce with the *same*
+//!   [`merge_maps`][crate::mapreduce::engine::merge_maps] function over the
+//!   *same* fixed [`MergeTree`] as the in-process engine — same pairs,
+//!   same order, same doubles;
+//! * the CV sweep calls the *same*
+//!   [`fold_errors_store`][crate::cv::parallel::fold_errors_store] on a
+//!   store rebuilt from identical panel bits.
+//!
+//! `tests/proc_workers.rs` pins the whole fit bit-identical to the
+//! in-process pool across worker counts, kill plans and store budgets.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::config::FitConfig;
+use crate::cv::parallel::{assemble_cv, fold_errors_store, FoldErrors};
+use crate::cv::CvResult;
+use crate::data::synth::SynthSpec;
+use crate::mapreduce::engine::merge_maps;
+use crate::mapreduce::transport::{get_bytes, get_u64, put_u64};
+use crate::mapreduce::{run_proc_job, FoldAssigner, JobMetrics, MergeTree, ProcConfig};
+use crate::solver::cd::CdSettings;
+use crate::solver::penalty::Penalty;
+use crate::stats::tiles::{StatPanel, TileLayout};
+use crate::stats::SuffStats;
+use crate::store::spill::{decode_panel, encode_panel};
+use crate::store::{FoldStore, MemStore, PanelKey, PanelStore, SpillStore};
+
+use super::driver::{feed_csv_shard, feed_synth_split, n_synth_splits, synth_split, FoldAccumulator};
+
+/// Setup-payload kinds (first u64 of every setup payload).
+const JOB_STATS_SYNTH: u64 = 1;
+const JOB_STATS_CSV: u64 = 2;
+const JOB_CV: u64 = 3;
+
+fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    put_u64(buf, v.to_bits());
+}
+
+fn get_f64(bytes: &[u8], pos: &mut usize) -> Result<f64> {
+    Ok(f64::from_bits(get_u64(bytes, pos)?))
+}
+
+// ---------------------------------------------------------------------------
+// setup payloads (leader encodes, worker decodes)
+// ---------------------------------------------------------------------------
+
+fn encode_synth_setup(cfg: &FitConfig, spec: &SynthSpec) -> Vec<u8> {
+    let mut b = Vec::new();
+    put_u64(&mut b, JOB_STATS_SYNTH);
+    put_u64(&mut b, cfg.folds as u64);
+    put_u64(&mut b, cfg.seed);
+    put_u64(&mut b, cfg.gram_block as u64);
+    put_u64(&mut b, cfg.split_rows as u64);
+    put_u64(&mut b, spec.n as u64);
+    put_u64(&mut b, spec.p as u64);
+    put_f64(&mut b, spec.density);
+    put_f64(&mut b, spec.noise_sd);
+    put_f64(&mut b, spec.rho);
+    put_f64(&mut b, spec.x_offset);
+    put_f64(&mut b, spec.x_scale);
+    put_f64(&mut b, spec.intercept);
+    put_u64(&mut b, u64::from(spec.t_df.is_some()));
+    put_f64(&mut b, spec.t_df.unwrap_or(0.0));
+    put_u64(&mut b, spec.seed);
+    b
+}
+
+fn encode_csv_setup(cfg: &FitConfig, p: usize, shards: &[PathBuf]) -> Result<Vec<u8>> {
+    let mut b = Vec::new();
+    put_u64(&mut b, JOB_STATS_CSV);
+    put_u64(&mut b, cfg.folds as u64);
+    put_u64(&mut b, cfg.seed);
+    put_u64(&mut b, cfg.gram_block as u64);
+    put_u64(&mut b, p as u64);
+    put_u64(&mut b, shards.len() as u64);
+    for path in shards {
+        let s = path
+            .to_str()
+            .with_context(|| format!("shard path {path:?} is not valid UTF-8"))?;
+        put_u64(&mut b, s.len() as u64);
+        b.extend_from_slice(s.as_bytes());
+    }
+    Ok(b)
+}
+
+fn encode_cv_setup(cfg: &FitConfig, store: &FoldStore, lambdas: &[f64]) -> Result<Vec<u8>> {
+    let layout = store.layout();
+    let mut b = Vec::new();
+    put_u64(&mut b, JOB_CV);
+    put_u64(&mut b, store.k() as u64);
+    put_u64(&mut b, store.p() as u64);
+    put_u64(&mut b, layout.block() as u64);
+    put_f64(&mut b, cfg.penalty.alpha);
+    put_f64(&mut b, cfg.cd.tol);
+    put_u64(&mut b, cfg.cd.max_sweeps as u64);
+    put_u64(&mut b, u64::from(cfg.cd.active_set));
+    put_u64(&mut b, lambdas.len() as u64);
+    for &l in lambdas {
+        put_f64(&mut b, l);
+    }
+    // every fold's panels: each CV task needs the full fold set anyway
+    // (train_i = total − s_i), so the panels ride in the per-worker setup
+    // broadcast, not in per-task traffic
+    put_u64(&mut b, (store.k() * layout.n_panels()) as u64);
+    for fold in 0..store.k() {
+        for panel in 0..layout.n_panels() {
+            let pl = store.panel(fold, panel)?;
+            let bytes = encode_panel(&pl);
+            put_u64(&mut b, fold as u64);
+            put_u64(&mut b, panel as u64);
+            put_u64(&mut b, bytes.len() as u64);
+            b.extend_from_slice(&bytes);
+        }
+    }
+    Ok(b)
+}
+
+// ---------------------------------------------------------------------------
+// task-output payloads (worker encodes, leader decodes)
+// ---------------------------------------------------------------------------
+
+/// Encode a map task's per-fold tiled statistics as spill-format panels.
+/// The head panel of each fold carries the fold's record accounting
+/// (`rows`); the rest ship unaccounted — exactly the in-process emitter's
+/// `emit_aggregated`/`emit_unaccounted` split.
+fn encode_stats_output(
+    entries: Vec<(usize, SuffStats<crate::stats::TiledSymMat>)>,
+) -> Vec<u8> {
+    let mut flat: Vec<(u64, u64, u64, Vec<u8>)> = Vec::new();
+    for (fold, stats) in entries {
+        let rows = stats.count();
+        let mut panels = stats.into_panels().into_iter();
+        if let Some(head) = panels.next() {
+            flat.push((fold as u64, head.panel as u64, rows, encode_panel(&head)));
+        }
+        for panel in panels {
+            flat.push((fold as u64, panel.panel as u64, 0, encode_panel(&panel)));
+        }
+    }
+    let mut b = Vec::new();
+    put_u64(&mut b, flat.len() as u64);
+    for (fold, panel, rows, bytes) in flat {
+        put_u64(&mut b, fold);
+        put_u64(&mut b, panel);
+        put_u64(&mut b, rows);
+        put_u64(&mut b, bytes.len() as u64);
+        b.extend_from_slice(&bytes);
+    }
+    b
+}
+
+/// Decode one stats-task output into (records, per-key panel map).
+fn decode_stats_output(bytes: &[u8]) -> Result<(u64, BTreeMap<(usize, usize), StatPanel>)> {
+    let mut pos = 0usize;
+    let n_entries = get_u64(bytes, &mut pos)?;
+    let mut rows_total = 0u64;
+    let mut map = BTreeMap::new();
+    for _ in 0..n_entries {
+        let fold = get_u64(bytes, &mut pos)? as usize;
+        let panel = get_u64(bytes, &mut pos)? as usize;
+        rows_total += get_u64(bytes, &mut pos)?;
+        let len = get_u64(bytes, &mut pos)? as usize;
+        let raw = get_bytes(bytes, &mut pos, len)?;
+        let pl = decode_panel(PanelKey { fold, panel }, &raw)
+            .map_err(|e| anyhow!("task output panel (fold {fold}, panel {panel}): {e}"))?;
+        if map.insert((fold, panel), pl).is_some() {
+            bail!("task output repeats key (fold {fold}, panel {panel})");
+        }
+    }
+    Ok((rows_total, map))
+}
+
+fn encode_cv_output(fold: usize, err: &[f64], nnz: &[usize]) -> Vec<u8> {
+    let mut b = Vec::new();
+    put_u64(&mut b, fold as u64);
+    put_u64(&mut b, err.len() as u64);
+    for &e in err {
+        put_f64(&mut b, e);
+    }
+    for &n in nnz {
+        put_u64(&mut b, n as u64);
+    }
+    b
+}
+
+fn decode_cv_output(bytes: &[u8]) -> Result<FoldErrors> {
+    let mut pos = 0usize;
+    let fold = get_u64(bytes, &mut pos)? as usize;
+    let n_l = get_u64(bytes, &mut pos)? as usize;
+    let mut err = Vec::with_capacity(n_l);
+    for _ in 0..n_l {
+        err.push(get_f64(bytes, &mut pos)?);
+    }
+    let mut nnz = Vec::with_capacity(n_l);
+    for _ in 0..n_l {
+        nnz.push(get_u64(bytes, &mut pos)? as usize);
+    }
+    Ok(FoldErrors { fold, err, nnz })
+}
+
+// ---------------------------------------------------------------------------
+// the worker side (runs inside `plrmr worker` processes)
+// ---------------------------------------------------------------------------
+
+/// Execute one task of a proc job — the function the `plrmr worker`
+/// subcommand hands to [`crate::mapreduce::worker_serve`].  Errors come
+/// back as `String`s so they travel the socket as named
+/// [`TaskFailed`][crate::mapreduce::transport::Message::TaskFailed]
+/// messages; panics are caught one layer up.
+pub fn run_worker_task(setup: &[u8], task_id: u64) -> std::result::Result<Vec<u8>, String> {
+    worker_task(setup, task_id).map_err(|e| format!("{e:#}"))
+}
+
+fn worker_task(setup: &[u8], task: u64) -> Result<Vec<u8>> {
+    let mut pos = 0usize;
+    let kind = get_u64(setup, &mut pos)?;
+    match kind {
+        JOB_STATS_SYNTH => worker_stats_synth(setup, &mut pos, task),
+        JOB_STATS_CSV => worker_stats_csv(setup, &mut pos, task),
+        JOB_CV => worker_cv(setup, &mut pos, task),
+        other => bail!("unknown proc job kind {other}"),
+    }
+}
+
+fn worker_stats_synth(setup: &[u8], pos: &mut usize, task: u64) -> Result<Vec<u8>> {
+    let k = get_u64(setup, pos)? as usize;
+    let fold_seed = get_u64(setup, pos)?;
+    let block = get_u64(setup, pos)? as usize;
+    let split_rows = get_u64(setup, pos)? as usize;
+    let spec = SynthSpec {
+        n: get_u64(setup, pos)? as usize,
+        p: get_u64(setup, pos)? as usize,
+        density: get_f64(setup, pos)?,
+        noise_sd: get_f64(setup, pos)?,
+        rho: get_f64(setup, pos)?,
+        x_offset: get_f64(setup, pos)?,
+        x_scale: get_f64(setup, pos)?,
+        intercept: get_f64(setup, pos)?,
+        t_df: {
+            let present = get_u64(setup, pos)? != 0;
+            let v = get_f64(setup, pos)?;
+            present.then_some(v)
+        },
+        seed: get_u64(setup, pos)?,
+    };
+    let (sub, start) = synth_split(&spec, split_rows, task as usize)
+        .ok_or_else(|| anyhow!("task {task} is beyond the split range of n = {}", spec.n))?;
+    let assigner = FoldAssigner::new(k, fold_seed);
+    let proto = SuffStats::new_tiled(spec.p, block);
+    let mut acc = FoldAccumulator::new(k, spec.p, &assigner, &proto);
+    feed_synth_split(&spec, &sub, start, &mut acc);
+    Ok(encode_stats_output(acc.finish()))
+}
+
+fn worker_stats_csv(setup: &[u8], pos: &mut usize, task: u64) -> Result<Vec<u8>> {
+    let k = get_u64(setup, pos)? as usize;
+    let fold_seed = get_u64(setup, pos)?;
+    let block = get_u64(setup, pos)? as usize;
+    let p = get_u64(setup, pos)? as usize;
+    let n_shards = get_u64(setup, pos)? as usize;
+    ensure!(
+        (task as usize) < n_shards,
+        "task {task} is beyond the {n_shards} shard(s)"
+    );
+    let mut path = None;
+    for idx in 0..=(task as usize) {
+        let len = get_u64(setup, pos)? as usize;
+        let raw = get_bytes(setup, pos, len)?;
+        if idx == task as usize {
+            path = Some(PathBuf::from(String::from_utf8_lossy(&raw).into_owned()));
+        }
+    }
+    let path = path.expect("loop reaches the task index");
+    let assigner = FoldAssigner::new(k, fold_seed);
+    let proto = SuffStats::new_tiled(p, block);
+    let mut acc = FoldAccumulator::new(k, p, &assigner, &proto);
+    feed_csv_shard(p, task as usize, &path, &mut acc);
+    Ok(encode_stats_output(acc.finish()))
+}
+
+fn worker_cv(setup: &[u8], pos: &mut usize, task: u64) -> Result<Vec<u8>> {
+    let k = get_u64(setup, pos)? as usize;
+    let p = get_u64(setup, pos)? as usize;
+    let block = get_u64(setup, pos)? as usize;
+    let penalty = Penalty { alpha: get_f64(setup, pos)? };
+    let settings = CdSettings {
+        tol: get_f64(setup, pos)?,
+        max_sweeps: get_u64(setup, pos)? as usize,
+        active_set: get_u64(setup, pos)? != 0,
+    };
+    let n_l = get_u64(setup, pos)? as usize;
+    let mut lambdas = Vec::with_capacity(n_l);
+    for _ in 0..n_l {
+        lambdas.push(get_f64(setup, pos)?);
+    }
+    // rebuild the fold store from the shipped panels; re-sealing replays
+    // the identical per-panel total merge the leader ran, so every derived
+    // statistic is bit-for-bit the leader's
+    let layout = TileLayout::new(p + 1, block);
+    let mut store = FoldStore::new(Box::new(MemStore::new()), k, p, layout);
+    let n_panels = get_u64(setup, pos)? as usize;
+    for _ in 0..n_panels {
+        let fold = get_u64(setup, pos)? as usize;
+        let panel = get_u64(setup, pos)? as usize;
+        let len = get_u64(setup, pos)? as usize;
+        let raw = get_bytes(setup, pos, len)?;
+        let pl = decode_panel(PanelKey { fold, panel }, &raw)
+            .map_err(|e| anyhow!("CV setup panel (fold {fold}, panel {panel}): {e}"))?;
+        store
+            .retire(fold, panel, pl)
+            .map_err(|e| anyhow!("CV setup panel (fold {fold}, panel {panel}): {e}"))?;
+    }
+    store.seal()?;
+    let fold = task as usize;
+    ensure!(fold < k, "CV task {task} but k = {k}");
+    let (err, nnz) = fold_errors_store(&store, fold, penalty, &lambdas, settings)?;
+    Ok(encode_cv_output(fold, &err, &nnz))
+}
+
+// ---------------------------------------------------------------------------
+// the leader side
+// ---------------------------------------------------------------------------
+
+/// Build the supervisor config for this fit — resolving the worker binary
+/// (a named error when the current executable is not `plrmr` and no
+/// `PLRMR_WORKER_BIN` override is set).
+fn proc_config(cfg: &FitConfig) -> Result<ProcConfig> {
+    let bin = crate::mapreduce::worker_binary().context(
+        "proc workers: cannot locate the plrmr worker binary \
+         (set PLRMR_WORKER_BIN, or run from the plrmr executable)",
+    )?;
+    let mut pc = ProcConfig::new(cfg.proc_workers, bin);
+    pc.heartbeat_ms = cfg.heartbeat_ms;
+    pc.task_deadline_ms = cfg.task_deadline_ms;
+    pc.fault = cfg.fault;
+    Ok(pc)
+}
+
+/// Replay the reduce: task-output maps merge bottom-up along the fixed
+/// [`MergeTree`] over task ids with the engine's own
+/// [`merge_maps`][crate::mapreduce::engine::merge_maps] — the same merge
+/// pairs in the same order as the in-process tree reduce, so the merged
+/// panels are bit-identical to that path's by construction.
+fn replay_tree_merge(
+    leaves: Vec<BTreeMap<(usize, usize), StatPanel>>,
+) -> Result<BTreeMap<(usize, usize), StatPanel>> {
+    let n_tasks = leaves.len();
+    ensure!(n_tasks > 0, "no task outputs to merge");
+    let tree = MergeTree::new(n_tasks);
+    let mut slots: Vec<Option<BTreeMap<(usize, usize), StatPanel>>> = Vec::new();
+    slots.resize_with(tree.node_count(), || None);
+    for (t, m) in leaves.into_iter().enumerate() {
+        slots[tree.leaf(t)] = Some(m);
+    }
+    for lvl in (0..tree.depth()).rev() {
+        for node in tree.level(lvl) {
+            let left = slots[2 * node].take();
+            let right = slots[2 * node + 1].take();
+            slots[node] = match (left, right) {
+                (Some(l), Some(r)) => {
+                    Some(merge_maps(l, r).map_err(|e| anyhow!("proc reduce: {e}"))?)
+                }
+                (l, r) => l.or(r),
+            };
+        }
+    }
+    // the root is heap slot 1 in every tree (a single-task tree's root IS
+    // its leaf)
+    Ok(slots[1].take().unwrap_or_default())
+}
+
+/// Shared tail of both stats proc jobs: run the job on the process fleet,
+/// replay the deterministic reduce, retire into a fresh panel store (same
+/// backing selection as the in-process tiled path) and stamp the metrics.
+fn run_stats_proc(
+    cfg: &FitConfig,
+    p: usize,
+    setup: &[u8],
+    n_tasks: usize,
+) -> Result<(FoldStore, JobMetrics)> {
+    let pc = proc_config(cfg)?;
+    let (outputs, mut metrics) = run_proc_job(&pc, setup, n_tasks)?;
+    let t_reduce = Instant::now();
+    let mut leaves = Vec::with_capacity(outputs.len());
+    for (task, bytes) in outputs.iter().enumerate() {
+        let (rows, map) = decode_stats_output(bytes)
+            .with_context(|| format!("stats task {task} output payload"))?;
+        metrics.records += rows;
+        leaves.push(map);
+    }
+    let merged = replay_tree_merge(leaves)?;
+    let layout = TileLayout::new(p + 1, cfg.gram_block);
+    let backing: Box<dyn PanelStore> = if cfg.store_budget_bytes > 0 {
+        Box::new(SpillStore::new(cfg.store_budget_bytes).map_err(anyhow::Error::new)?)
+    } else {
+        Box::new(MemStore::new())
+    };
+    let mut store = FoldStore::new(backing, cfg.folds, p, layout);
+    for ((fold, panel), pl) in merged {
+        store
+            .retire(fold, panel, pl)
+            .map_err(|e| anyhow!("retire (fold {fold}, panel {panel}): {e}"))?;
+    }
+    store.seal()?;
+    metrics.reduce_s = t_reduce.elapsed().as_secs_f64();
+    metrics.real_s += metrics.reduce_s;
+    let sm = store.metrics();
+    metrics.resident_stat_bytes_peak = sm.resident_bytes_peak;
+    metrics.spill_bytes = sm.spill_bytes;
+    metrics.spill_reads = sm.spill_reads;
+    metrics.spill_writes = sm.spill_writes;
+    Ok((store, metrics))
+}
+
+/// The statistics job over a streaming synthetic source, on the process
+/// fleet.  Workers re-derive their splits from the broadcast parent spec.
+pub(crate) fn stats_synth_proc(
+    cfg: &FitConfig,
+    spec: &SynthSpec,
+) -> Result<(FoldStore, JobMetrics)> {
+    let setup = encode_synth_setup(cfg, spec);
+    run_stats_proc(cfg, spec.p, &setup, n_synth_splits(spec.n, cfg.split_rows))
+}
+
+/// The statistics job over CSV shard files, on the process fleet.  One
+/// task per shard; workers stream their own file.
+pub(crate) fn stats_csv_proc(
+    cfg: &FitConfig,
+    p: usize,
+    shards: &[PathBuf],
+) -> Result<(FoldStore, JobMetrics)> {
+    ensure!(!shards.is_empty(), "no shard files given");
+    let setup = encode_csv_setup(cfg, p, shards)?;
+    run_stats_proc(cfg, p, &setup, shards.len())
+}
+
+/// The (fold × λ) CV sweep on the process fleet: the sealed fold panels
+/// broadcast once per worker, one task per fold, per-fold errors assembled
+/// through the same [`assemble_cv`] as every other CV execution.
+pub(crate) fn cv_proc(
+    cfg: &FitConfig,
+    store: &FoldStore,
+    lambdas: &[f64],
+) -> Result<CvResult> {
+    ensure!(!lambdas.is_empty(), "empty lambda grid");
+    let setup = encode_cv_setup(cfg, store, lambdas)?;
+    let pc = proc_config(cfg)?;
+    let k = store.k();
+    let (outputs, _metrics) = run_proc_job(&pc, &setup, k)?;
+    let mut results = Vec::with_capacity(k);
+    for (task, bytes) in outputs.iter().enumerate() {
+        results.push(
+            decode_cv_output(bytes).with_context(|| format!("CV task {task} output payload"))?,
+        );
+    }
+    assemble_cv(lambdas, k, results)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::tiles::shard_stats;
+
+    /// Random tiled fold statistics for codec tests.
+    fn tiled_stats(p: usize, block: usize, rows: usize, seed: u64) -> SuffStats<crate::stats::TiledSymMat> {
+        let mut s = SuffStats::new_tiled(p, block);
+        let mut rng = crate::rng::Rng::seed_from(seed);
+        for _ in 0..rows {
+            let x: Vec<f64> = (0..p).map(|_| rng.normal()).collect();
+            let y = x.iter().sum::<f64>() + rng.normal();
+            s.push(&x, y);
+        }
+        s
+    }
+
+    #[test]
+    fn stats_output_round_trips_bit_exact() {
+        let s0 = tiled_stats(5, 2, 40, 1);
+        let s1 = tiled_stats(5, 2, 31, 2);
+        let bytes = encode_stats_output(vec![(0, s0.clone()), (2, s1.clone())]);
+        let (rows, map) = decode_stats_output(&bytes).unwrap();
+        assert_eq!(rows, 71, "head panels carry the record accounting");
+        let layout = TileLayout::new(6, 2);
+        assert_eq!(map.len(), 2 * layout.n_panels());
+        for (src, fold) in [(&s0, 0usize), (&s1, 2usize)] {
+            for pl in shard_stats(&src.to_packed(), layout) {
+                let got = &map[&(fold, pl.panel)];
+                assert_eq!(got.n, pl.n);
+                assert_eq!(
+                    got.m2.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    pl.m2.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "fold {fold} panel {} doubles", pl.panel
+                );
+            }
+        }
+        // truncation is a named error, never a panic
+        assert!(decode_stats_output(&bytes[..bytes.len() / 2]).is_err());
+    }
+
+    #[test]
+    fn cv_output_round_trips() {
+        let fe = decode_cv_output(&encode_cv_output(3, &[0.5, 0.25, f64::MIN_POSITIVE], &[1, 2, 3]))
+            .unwrap();
+        assert_eq!(fe.fold, 3);
+        assert_eq!(fe.err, vec![0.5, 0.25, f64::MIN_POSITIVE]);
+        assert_eq!(fe.nnz, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn synth_setup_round_trips_through_the_worker_decoder() {
+        let cfg = FitConfig { gram_block: 3, proc_workers: 2, ..FitConfig::default() };
+        let spec = SynthSpec { t_df: Some(5.0), ..SynthSpec::sparse_linear(1000, 7, 0.3, 9) };
+        let setup = encode_synth_setup(&cfg, &spec);
+        let mut pos = 0usize;
+        assert_eq!(get_u64(&setup, &mut pos).unwrap(), JOB_STATS_SYNTH);
+        assert_eq!(get_u64(&setup, &mut pos).unwrap(), cfg.folds as u64);
+        assert_eq!(get_u64(&setup, &mut pos).unwrap(), cfg.seed);
+        assert_eq!(get_u64(&setup, &mut pos).unwrap(), 3);
+        assert_eq!(get_u64(&setup, &mut pos).unwrap(), cfg.split_rows as u64);
+        assert_eq!(get_u64(&setup, &mut pos).unwrap(), 1000);
+        assert_eq!(get_u64(&setup, &mut pos).unwrap(), 7);
+    }
+
+    #[test]
+    fn worker_stats_task_equals_inprocess_accumulation() {
+        // the worker executor on a synth split must reproduce the exact
+        // panels an in-process map task produces for the same split
+        let cfg = FitConfig { gram_block: 2, split_rows: 300, ..FitConfig::default() };
+        let spec = SynthSpec::sparse_linear(700, 4, 0.5, 17);
+        let setup = encode_synth_setup(&cfg, &spec);
+        for task in 0..n_synth_splits(spec.n, cfg.split_rows) as u64 {
+            let out = run_worker_task(&setup, task).unwrap();
+            let (_rows, map) = decode_stats_output(&out).unwrap();
+            // in-process twin
+            let assigner = FoldAssigner::new(cfg.folds, cfg.seed);
+            let proto = SuffStats::new_tiled(spec.p, cfg.gram_block);
+            let mut acc = FoldAccumulator::new(cfg.folds, spec.p, &assigner, &proto);
+            let (sub, start) = synth_split(&spec, cfg.split_rows, task as usize).unwrap();
+            feed_synth_split(&spec, &sub, start, &mut acc);
+            for (fold, stats) in acc.finish() {
+                for pl in stats.into_panels() {
+                    let got = &map[&(fold, pl.panel)];
+                    assert_eq!(got.n, pl.n, "task {task} fold {fold} panel {}", pl.panel);
+                    assert_eq!(
+                        got.m2.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                        pl.m2.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    );
+                }
+            }
+        }
+        // beyond the split range: a named error, not a panic
+        let err = run_worker_task(&setup, 99).unwrap_err();
+        assert!(err.contains("beyond the split range"), "{err}");
+    }
+
+    #[test]
+    fn replay_tree_merge_equals_sequential_merge_for_every_task_count() {
+        // the fixed tree is associativity-shuffled sequential merging; for
+        // the *values* (exact f64 adds through StatPanel::merge) the tree
+        // and any other order agree only when the merge pairs are identical
+        // — so pin the replay against a hand-rolled tree walk
+        for n_tasks in [1usize, 2, 3, 5, 8] {
+            let layout = TileLayout::new(4, 2);
+            let leaves: Vec<BTreeMap<(usize, usize), StatPanel>> = (0..n_tasks)
+                .map(|t| {
+                    let s = tiled_stats(3, 2, 10 + t, 100 + t as u64);
+                    let mut m = BTreeMap::new();
+                    for pl in s.into_panels() {
+                        m.insert((0usize, pl.panel), pl);
+                    }
+                    m
+                })
+                .collect();
+            let merged = replay_tree_merge(leaves.clone()).unwrap();
+            // manual replay over the same tree
+            let tree = MergeTree::new(n_tasks);
+            let mut slots: Vec<Option<BTreeMap<(usize, usize), StatPanel>>> =
+                vec![None; tree.node_count()];
+            for (t, m) in leaves.into_iter().enumerate() {
+                slots[tree.leaf(t)] = Some(m);
+            }
+            for lvl in (0..tree.depth()).rev() {
+                for node in tree.level(lvl) {
+                    let (l, r) = (slots[2 * node].take(), slots[2 * node + 1].take());
+                    slots[node] = match (l, r) {
+                        (Some(l), Some(r)) => Some(merge_maps(l, r).unwrap()),
+                        (l, r) => l.or(r),
+                    };
+                }
+            }
+            let want = slots[1].take().unwrap();
+            assert_eq!(merged.len(), want.len(), "n_tasks={n_tasks}");
+            for (key, pl) in &merged {
+                let w = &want[key];
+                assert_eq!(pl.n, w.n);
+                assert_eq!(
+                    pl.m2.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    w.m2.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "n_tasks={n_tasks} key {key:?}"
+                );
+            }
+            assert_eq!(layout.n_panels(), merged.len());
+        }
+    }
+
+    #[test]
+    fn worker_cv_task_is_bit_identical_to_leader_fold_errors() {
+        // build a sealed fold store, round-trip it through the CV setup
+        // payload + worker executor, and pin the per-fold errors bit-exact
+        let p = 4;
+        let k = 3;
+        let block = 2;
+        let layout = TileLayout::new(p + 1, block);
+        let mut store = FoldStore::new(Box::new(MemStore::new()), k, p, layout);
+        for fold in 0..k {
+            let s = tiled_stats(p, block, 40 + fold * 7, 50 + fold as u64);
+            for pl in s.into_panels() {
+                store.retire(fold, pl.panel, pl).unwrap();
+            }
+        }
+        store.seal().unwrap();
+        let lambdas = [0.5, 0.1, 0.02];
+        let cfg = FitConfig { gram_block: block, folds: k, ..FitConfig::default() };
+        let setup = encode_cv_setup(&cfg, &store, &lambdas).unwrap();
+        for fold in 0..k {
+            let out = run_worker_task(&setup, fold as u64).unwrap();
+            let fe = decode_cv_output(&out).unwrap();
+            let (err, nnz) =
+                fold_errors_store(&store, fold, cfg.penalty, &lambdas, cfg.cd).unwrap();
+            assert_eq!(fe.fold, fold);
+            assert_eq!(
+                fe.err.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                err.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "fold {fold} errors must be bit-identical across runtimes"
+            );
+            assert_eq!(fe.nnz, nnz);
+        }
+        // an out-of-range fold is a named error
+        let err = run_worker_task(&setup, 9).unwrap_err();
+        assert!(err.contains("k = 3"), "{err}");
+    }
+}

@@ -18,14 +18,17 @@ use crate::solver::penalty::Penalty;
 use super::kfold::FoldStats;
 use super::select::CvResult;
 
-/// Per-fold result flowing through the engine.
+/// Per-fold result flowing through the engine.  `pub(crate)` so the
+/// out-of-process CV job ([`crate::coordinator::procjob`]) can rebuild the
+/// exact same values from worker payloads and feed them through the same
+/// [`assemble_cv`].
 #[derive(Debug, Clone)]
-struct FoldErrors {
-    fold: usize,
+pub(crate) struct FoldErrors {
+    pub(crate) fold: usize,
     /// held-out MSE per λ
-    err: Vec<f64>,
+    pub(crate) err: Vec<f64>,
     /// nnz per λ
-    nnz: Vec<usize>,
+    pub(crate) nnz: Vec<usize>,
 }
 
 impl crate::mapreduce::Mergeable for FoldErrors {
@@ -98,7 +101,7 @@ pub fn cross_validate_parallel<S: crate::stats::Scatter>(
 /// zero-initialized MSE column in place, silently dragging the argmin
 /// toward whichever λ the phantom zeros favored; now it is an error that
 /// names the missing folds.
-fn assemble_cv(lambdas: &[f64], k: usize, results: Vec<FoldErrors>) -> Result<CvResult> {
+pub(crate) fn assemble_cv(lambdas: &[f64], k: usize, results: Vec<FoldErrors>) -> Result<CvResult> {
     let n_l = lambdas.len();
     let mut fold_err = vec![vec![0.0; k]; n_l];
     let mut nnz_m = vec![vec![0usize; k]; n_l];
@@ -169,30 +172,49 @@ pub fn cross_validate_store(
         engine,
         &fold_ids,
         |_ctx: &TaskCtx, &fold, em: &mut Emitter<usize, FoldErrors>| {
-            let q = folds
-                .quad_form_train(Some(fold))
-                .unwrap_or_else(|e| panic!("CV fold {fold}: train statistics: {e:#}"));
-            // sweep the whole warm-started path first, then score every λ
-            // in ONE panel pass over the held-out fold (bit-identical to
-            // per-λ scoring; under a spill budget this reads each panel
-            // once per fold instead of once per λ)
-            let mut nnz = Vec::with_capacity(lambdas.len());
-            let mut models = Vec::with_capacity(lambdas.len());
-            let mut warm: Option<Vec<f64>> = None;
-            for &lam in lambdas {
-                let sol = solve_cd(&q, penalty, lam, warm.as_deref(), settings);
-                models.push(q.to_original_scale(&sol.beta));
-                nnz.push(sol.n_active);
-                warm = Some(sol.beta);
-            }
-            let err = folds
-                .mse_many(fold, &models)
-                .unwrap_or_else(|e| panic!("CV fold {fold}: held-out score: {e:#}"));
+            let (err, nnz) = fold_errors_store(folds, fold, penalty, lambdas, settings)
+                .unwrap_or_else(|e| panic!("{e:#}"));
             em.emit(fold, FoldErrors { fold, err, nnz });
         },
     )?;
 
     assemble_cv(lambdas, k, out.output.into_values().collect())
+}
+
+/// One fold's (err, nnz) columns off a panel store — THE function both CV
+/// executions run.  The in-process job above calls it on the shared
+/// `FoldStore`; the out-of-process worker ([`crate::coordinator::procjob`])
+/// calls it on a store it rebuilt from the job payload.  Same function,
+/// same statistics ⇒ bit-identical CV matrices, which the proc-mode tests
+/// assert end to end.
+pub(crate) fn fold_errors_store(
+    folds: &crate::store::FoldStore,
+    fold: usize,
+    penalty: Penalty,
+    lambdas: &[f64],
+    settings: CdSettings,
+) -> Result<(Vec<f64>, Vec<usize>)> {
+    use anyhow::Context;
+    let q = folds
+        .quad_form_train(Some(fold))
+        .with_context(|| format!("CV fold {fold}: train statistics"))?;
+    // sweep the whole warm-started path first, then score every λ in ONE
+    // panel pass over the held-out fold (bit-identical to per-λ scoring;
+    // under a spill budget this reads each panel once per fold instead of
+    // once per λ)
+    let mut nnz = Vec::with_capacity(lambdas.len());
+    let mut models = Vec::with_capacity(lambdas.len());
+    let mut warm: Option<Vec<f64>> = None;
+    for &lam in lambdas {
+        let sol = solve_cd(&q, penalty, lam, warm.as_deref(), settings);
+        models.push(q.to_original_scale(&sol.beta));
+        nnz.push(sol.n_active);
+        warm = Some(sol.beta);
+    }
+    let err = folds
+        .mse_many(fold, &models)
+        .with_context(|| format!("CV fold {fold}: held-out score"))?;
+    Ok((err, nnz))
 }
 
 #[cfg(test)]

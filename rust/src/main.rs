@@ -8,6 +8,9 @@
 //!   experiments        run the reproduction experiments (T1..T5, F1..F3)
 //!   inspect-artifacts  list the AOT HLO artifacts and their shapes
 //!   hlo-fit            fit via the PJRT-accelerated map path (L1/L2 kernels)
+//!   worker             serve map/CV tasks over a Unix socket (spawned by the
+//!                      supervisor when `fit --workers-proc` > 0; not for
+//!                      interactive use)
 //!
 //! Argument parsing is hand-rolled (the offline vendor set has no clap);
 //! every flag is `--name value`.
@@ -46,11 +49,13 @@ commands:
   fit        (--csv FILE[,FILE...] | --synth N,P[,DENSITY[,SEED]])
              [--penalty lasso|ridge|elastic_net:A] [--folds K] [--lambdas L]
              [--workers W] [--seed S] [--gram-block B] [--store-budget BYTES]
+             [--workers-proc W] [--heartbeat-ms MS] [--task-deadline-ms MS]
              [--screen-auto P] [--config FILE] [--out MODEL] [--curve]
   predict    --model MODEL --csv FILE [--out FILE]
   experiments <t1|t2|t3|t4|t5|f1|f2|f3|all> [--quick] [--workers W]
   inspect-artifacts [--dir DIR]
   hlo-fit    --synth N,P[,DENSITY[,SEED]] [--lambda L] [--dir DIR]
+  worker     --socket PATH --worker-id N [--heartbeat-ms MS]  (internal)
 ";
 
 /// Parse `--key value` pairs after the positional args.
@@ -93,6 +98,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "experiments" => cmd_experiments(rest),
         "inspect-artifacts" => cmd_inspect(rest),
         "hlo-fit" => cmd_hlo_fit(rest),
+        "worker" => cmd_worker(rest),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
             Ok(())
@@ -194,6 +200,18 @@ fn build_config(f: &BTreeMap<String, String>) -> Result<FitConfig> {
         // screen-then-fit threshold on p (0 disables auto-screening)
         cfg.screen_auto = t.parse()?;
     }
+    if let Some(w) = f.get("workers-proc") {
+        // out-of-process runtime: W supervised worker *processes* over
+        // Unix sockets, with heartbeats, deadlines and retry-with-backoff
+        // (0 = in-process thread pool, the default)
+        cfg.proc_workers = w.parse()?;
+    }
+    if let Some(ms) = f.get("heartbeat-ms") {
+        cfg.heartbeat_ms = ms.parse()?;
+    }
+    if let Some(ms) = f.get("task-deadline-ms") {
+        cfg.task_deadline_ms = ms.parse()?;
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -237,6 +255,11 @@ fn cmd_fit(args: &[String]) -> Result<()> {
             m.combined_nodes,
             m.reduce_merges,
         );
+        println!(
+            "recovery: {} retries, max {} attempts/task, \
+             {} deadline expirations, {} heartbeats missed",
+            m.retries, m.attempts_max, m.deadline_expirations, m.heartbeats_missed,
+        );
     }
     println!("fold sizes: {:?}", report.fold_sizes);
     println!(
@@ -278,6 +301,28 @@ fn cmd_fit(args: &[String]) -> Result<()> {
         println!("\nsaved model to {out}");
     }
     Ok(())
+}
+
+/// The worker half of the out-of-process runtime: connect back to the
+/// supervisor's socket and serve task attempts until `Shutdown` (or until
+/// the socket dies — e.g. the leader exiting — which is a clean exit too).
+/// Spawned by [`plrmr::mapreduce::run_proc_job`]; runnable by hand only
+/// for debugging.
+fn cmd_worker(args: &[String]) -> Result<()> {
+    let (_, f) = parse_flags(args)?;
+    let socket = PathBuf::from(f.get("socket").context("--socket required")?);
+    let worker_id: u64 = f.get("worker-id").context("--worker-id required")?.parse()?;
+    let heartbeat_ms: u64 = f
+        .get("heartbeat-ms")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(50);
+    plrmr::mapreduce::worker_serve(
+        &socket,
+        worker_id,
+        heartbeat_ms,
+        plrmr::coordinator::procjob::run_worker_task,
+    )
 }
 
 fn cmd_predict(args: &[String]) -> Result<()> {

@@ -259,7 +259,11 @@ impl Gate {
 /// — worker combiners and the reduce tree both call it, so a given tree
 /// node's value is independent of *where* it was computed.  A value-level
 /// merge failure aborts the map merge and fails the job gracefully.
-fn merge_maps<K: Ord, V: Mergeable>(
+///
+/// `pub(crate)` so the out-of-process supervisor's leader-side merge replay
+/// ([`crate::coordinator::procjob`]) uses the *same* function over the same
+/// fixed tree — bit-identity between the two runtimes by construction.
+pub(crate) fn merge_maps<K: Ord, V: Mergeable>(
     mut left: BTreeMap<K, V>,
     right: BTreeMap<K, V>,
 ) -> Result<BTreeMap<K, V>, MergeError> {
@@ -282,8 +286,9 @@ fn record_merge_failure(store: &Mutex<Option<String>>, context: &str, e: MergeEr
     }
 }
 
-/// Best-effort human message from a caught panic payload.
-fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+/// Best-effort human message from a caught panic payload (shared with the
+/// out-of-process worker loop in [`crate::mapreduce::supervisor`]).
+pub(crate) fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
     if let Some(s) = payload.downcast_ref::<&str>() {
         (*s).to_string()
     } else if let Some(s) = payload.downcast_ref::<String>() {
@@ -517,7 +522,10 @@ where
                     let t0 = Instant::now();
                     let mut stalled = false;
                     match fault.roll(task_id, attempt) {
-                        Some(Fault::Crash) => {
+                        // a thread pool cannot SIGKILL one of its own
+                        // threads, so in-process Kill degrades to Crash
+                        // (the supervisor runtime delivers the real signal)
+                        Some(Fault::Crash) | Some(Fault::Kill) => {
                             let _ = tx.send(TaskMsg::Crashed { task_id, attempt, worker_id });
                             continue;
                         }
@@ -769,6 +777,7 @@ where
                 }
                 TaskMsg::Crashed { task_id, attempt, worker_id } => {
                     metrics.retries += 1;
+                    metrics.attempts_max = metrics.attempts_max.max(attempt + 2);
                     metrics.per_worker[worker_id].simulated_crashes += 1;
                     if attempt + 1 >= cfg.fault.max_attempts {
                         failure = Some(format!(
@@ -878,6 +887,7 @@ where
     metrics.max_payload_bytes = payload_max.load(Ordering::Relaxed);
     metrics.combined_nodes = combined_count.load(Ordering::Relaxed);
     metrics.tasks_completed = n_tasks;
+    metrics.attempts_max = metrics.attempts_max.max(1);
     metrics.real_s = started.elapsed().as_secs_f64();
     metrics.modeled_overhead_s = cfg.costs.overhead_s(n_tasks, workers);
     Ok(JobOutput { output, metrics })
@@ -968,6 +978,11 @@ mod tests {
             let chaotic = counting_job(&cfg, &data);
             assert_eq!(clean.output, chaotic.output, "retries must not change output (w={w})");
             assert!(chaotic.metrics.retries > 0, "chaos plan should actually crash");
+            assert!(
+                chaotic.metrics.attempts_max > 1,
+                "a retried task needed more than one attempt"
+            );
+            assert_eq!(clean.metrics.attempts_max, 1, "clean run is first-try everywhere");
         }
     }
 
@@ -1142,6 +1157,7 @@ mod tests {
         let mut cfg = EngineConfig::with_workers(4);
         cfg.fault = FaultPlan {
             crash_prob: 0.0,
+            kill_prob: 0.0,
             straggler_prob: 0.5,
             straggler_delay: Duration::from_millis(2),
             max_attempts: 2,

@@ -5,16 +5,42 @@
 //! recomputes the identical statistics.  The injection here is a pure
 //! function of (seed, task, attempt), so test runs are reproducible and the
 //! engine's exactness-under-retry invariant is assertable.
+//!
+//! Three fault modes exist.  `Crash` and `Straggle` are *simulated* inside
+//! the in-process worker pool.  `Kill` exists for the out-of-process
+//! runtime ([`crate::mapreduce::supervisor`]): the supervisor delivers a
+//! real `SIGKILL` to the live worker process mid-task, so t6 measures
+//! recovery from genuine worker deaths, not simulated ones.  The
+//! in-process engine degrades `Kill` to `Crash` (a thread pool cannot
+//! SIGKILL one of its own threads) — bit-determinism is unaffected either
+//! way because retried attempts recompute identical output.
 
 use std::time::Duration;
 
 use crate::rng::splitmix64;
+
+/// Attempts per task before a job is declared failed, for plans that model
+/// *production* scheduling policy ([`FaultPlan::none`] and
+/// [`FaultPlan::default`]) — Hadoop's classic `mapreduce.map.maxattempts`
+/// default is 4 and we keep the same number.
+pub const DEFAULT_MAX_ATTEMPTS: usize = 4;
+
+/// Attempts per task for *chaos* plans ([`FaultPlan::chaotic`],
+/// [`FaultPlan::kills`]).  Chaos tests inject crash rates up to 1.0 − ε to
+/// assert output invariance under retry, not to model a scheduler; with 4
+/// attempts a 0.5 crash rate would spuriously fail whole jobs (~6% per
+/// task), so chaos plans use an effectively-unbounded retry budget.  Tests
+/// that exercise the *exhaustion* path override `max_attempts` explicitly.
+pub const CHAOS_MAX_ATTEMPTS: usize = 50;
 
 /// What the injector decided for one task attempt.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Fault {
     /// task dies before producing output; the leader must retry it
     Crash,
+    /// the worker *process* running the task is SIGKILLed mid-task
+    /// (out-of-process runtime; simulated as `Crash` in-process)
+    Kill,
     /// task completes but only after an injected stall
     Straggle(Duration),
 }
@@ -24,11 +50,15 @@ pub enum Fault {
 pub struct FaultPlan {
     /// probability a given attempt crashes
     pub crash_prob: f64,
+    /// probability a given attempt gets its worker process SIGKILLed
+    pub kill_prob: f64,
     /// probability a given attempt straggles
     pub straggler_prob: f64,
     /// injected stall length
     pub straggler_delay: Duration,
     /// attempts per task before the job is declared failed
+    /// ([`DEFAULT_MAX_ATTEMPTS`] for production-shaped plans,
+    /// [`CHAOS_MAX_ATTEMPTS`] for chaos plans — see the constants' docs)
     pub max_attempts: usize,
     pub seed: u64,
 }
@@ -38,9 +68,10 @@ impl FaultPlan {
     pub fn none() -> Self {
         FaultPlan {
             crash_prob: 0.0,
+            kill_prob: 0.0,
             straggler_prob: 0.0,
             straggler_delay: Duration::from_millis(0),
-            max_attempts: 4,
+            max_attempts: DEFAULT_MAX_ATTEMPTS,
             seed: 0,
         }
     }
@@ -49,16 +80,27 @@ impl FaultPlan {
     pub fn chaotic(crash_prob: f64, seed: u64) -> Self {
         FaultPlan {
             crash_prob,
+            kill_prob: 0.0,
             straggler_prob: 0.1,
             straggler_delay: Duration::from_millis(1),
-            max_attempts: 50,
+            max_attempts: CHAOS_MAX_ATTEMPTS,
             seed,
+        }
+    }
+
+    /// A process-killing chaos plan: each attempt gets SIGKILLed with
+    /// probability `kill_prob` under the out-of-process runtime (degrades
+    /// to a simulated crash in-process).
+    pub fn kills(kill_prob: f64, seed: u64) -> Self {
+        FaultPlan {
+            kill_prob,
+            ..FaultPlan::chaotic(0.0, seed)
         }
     }
 
     /// Decide the fate of `(task, attempt)` — pure and deterministic.
     pub fn roll(&self, task: usize, attempt: usize) -> Option<Fault> {
-        if self.crash_prob == 0.0 && self.straggler_prob == 0.0 {
+        if self.crash_prob == 0.0 && self.kill_prob == 0.0 && self.straggler_prob == 0.0 {
             return None;
         }
         let mut s = self
@@ -69,7 +111,9 @@ impl FaultPlan {
         let u = (splitmix64(&mut s) >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
         if u < self.crash_prob {
             Some(Fault::Crash)
-        } else if u < self.crash_prob + self.straggler_prob {
+        } else if u < self.crash_prob + self.kill_prob {
+            Some(Fault::Kill)
+        } else if u < self.crash_prob + self.kill_prob + self.straggler_prob {
             Some(Fault::Straggle(self.straggler_delay))
         } else {
             None
@@ -96,6 +140,17 @@ mod tests {
     }
 
     #[test]
+    fn max_attempts_policy_is_documented_and_consistent() {
+        // production-shaped plans use the Hadoop-like default; chaos plans
+        // use the effectively-unbounded chaos budget — both named constants
+        assert_eq!(FaultPlan::none().max_attempts, DEFAULT_MAX_ATTEMPTS);
+        assert_eq!(FaultPlan::default().max_attempts, DEFAULT_MAX_ATTEMPTS);
+        assert_eq!(FaultPlan::chaotic(0.5, 1).max_attempts, CHAOS_MAX_ATTEMPTS);
+        assert_eq!(FaultPlan::kills(0.5, 1).max_attempts, CHAOS_MAX_ATTEMPTS);
+        assert!(DEFAULT_MAX_ATTEMPTS < CHAOS_MAX_ATTEMPTS);
+    }
+
+    #[test]
     fn deterministic_per_task_attempt() {
         let plan = FaultPlan::chaotic(0.3, 42);
         for t in 0..50 {
@@ -114,6 +169,33 @@ mod tests {
             .count();
         let rate = crashes as f64 / n as f64;
         assert!((rate - 0.25).abs() < 0.02, "rate={rate}");
+    }
+
+    #[test]
+    fn kill_rate_is_approximately_requested() {
+        let plan = FaultPlan::kills(0.25, 11);
+        let n = 20_000;
+        let kills = (0..n)
+            .filter(|&t| plan.roll(t, 0) == Some(Fault::Kill))
+            .count();
+        let rate = kills as f64 / n as f64;
+        assert!((rate - 0.25).abs() < 0.02, "rate={rate}");
+        // kill and crash probabilities occupy disjoint slices of u
+        let both = FaultPlan {
+            crash_prob: 0.2,
+            ..FaultPlan::kills(0.2, 13)
+        };
+        let mut crashes = 0usize;
+        let mut kills = 0usize;
+        for t in 0..n {
+            match both.roll(t, 0) {
+                Some(Fault::Crash) => crashes += 1,
+                Some(Fault::Kill) => kills += 1,
+                _ => {}
+            }
+        }
+        assert!((crashes as f64 / n as f64 - 0.2).abs() < 0.02);
+        assert!((kills as f64 / n as f64 - 0.2).abs() < 0.02);
     }
 
     #[test]

@@ -204,6 +204,14 @@ pub struct JobMetrics {
     /// total attempts including retried ones
     pub attempts: usize,
     pub retries: usize,
+    /// most attempts any single task needed (1 = every task first-try)
+    pub attempts_max: usize,
+    /// attempts abandoned because their per-attempt deadline expired
+    /// (out-of-process supervisor only; 0 in-process)
+    pub deadline_expirations: usize,
+    /// attempts abandoned because the worker's heartbeats went silent
+    /// (out-of-process supervisor only; 0 in-process)
+    pub heartbeats_missed: usize,
     pub records: u64,
     /// payloads handed to the leader (tree nodes flushed by workers);
     /// without worker-side combining this is ≥ n_tasks, with it O(workers)

@@ -29,14 +29,23 @@
 //! * modeled per-job/per-task scheduling overhead ([`job::JobCosts`]) so
 //!   experiments can report *cluster-shaped* time for iterative baselines
 //!   (ADMM pays the job overhead once per iteration; Algorithm 1 pays it
-//!   once, full stop).
+//!   once, full stop),
+//! * an **out-of-process runtime** ([`supervisor`] + [`transport`]): real
+//!   worker *processes* connected over Unix-domain sockets, supervised with
+//!   heartbeats, per-attempt deadlines, and retry-with-backoff — so
+//!   [`fault::Fault::Kill`] can SIGKILL a live worker mid-task and the job
+//!   still completes bit-identically (the merge tree is a pure function of
+//!   task ids, never of transport timing).
 
 pub mod engine;
 pub mod fault;
 pub mod job;
 pub mod partition;
+pub mod supervisor;
+pub mod transport;
 
 pub use engine::{run_job, run_job_retire, Emitter, EngineConfig, JobOutput, TaskCtx};
 pub use fault::FaultPlan;
 pub use job::{JobCosts, JobMetrics, MergeError, Mergeable};
 pub use partition::{FoldAssigner, MergeTree};
+pub use supervisor::{run_proc_job, worker_binary, worker_serve, ProcConfig};

@@ -1,0 +1,834 @@
+//! The out-of-process worker runtime: a supervising leader and real worker
+//! *processes* connected over a Unix-domain socket.
+//!
+//! The leader here only schedules — it never maps and never merges.  It
+//! spawns `plrmr worker` processes, broadcasts the job's shared setup,
+//! assigns `(task, attempt)` pairs to idle workers, and collects opaque
+//! output payloads.  Recovery is the whole point:
+//!
+//! * **heartbeats** — workers beat every `heartbeat_ms` from a dedicated
+//!   thread (so a busy map function still beats); a worker with a running
+//!   task whose beats go silent for 3× the period is declared lost,
+//! * **per-attempt deadlines** — an attempt that outlives
+//!   `task_deadline_ms` is abandoned and its worker SIGKILLed (a wedged
+//!   process cannot be trusted to come back),
+//! * **retry with bounded exponential backoff** — a lost attempt requeues
+//!   at `2ms << min(attempt, 5)` up to [`FaultPlan::max_attempts`], after
+//!   which the job fails with a named error carrying the task id, the
+//!   attempt count, and the last fault,
+//! * **real kills** — [`Fault::Kill`] delivers an actual `SIGKILL` to the
+//!   live worker process mid-task; the reaper respawns replacements so the
+//!   fleet holds its size.
+//!
+//! Bit-determinism survives all of it by construction: workers return
+//! whole task outputs (pure functions of the task id), and the leader-side
+//! merge ([`crate::coordinator::procjob`]) replays the same fixed
+//! [`super::partition::MergeTree`] with the same
+//! [`super::engine::merge_maps`] the in-process pool uses — transport
+//! timing never touches a float.
+
+use std::collections::{HashMap, VecDeque};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, RecvTimeoutError};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::engine::panic_message;
+use super::fault::{Fault, FaultPlan};
+use super::job::{JobMetrics, WorkerMetrics};
+use super::transport::{read_frame, write_frame, Message};
+
+/// Task closure run by in-process *thread* workers (test-only stand-ins
+/// that speak the real socket protocol).
+#[cfg(test)]
+type ThreadTask = dyn Fn(&[u8], u64) -> std::result::Result<Vec<u8>, String> + Send + Sync;
+
+/// Configuration for one out-of-process job.
+#[derive(Clone)]
+pub struct ProcConfig {
+    /// worker processes to keep alive
+    pub workers: usize,
+    /// worker heartbeat period in ms (0 disables heartbeat supervision)
+    pub heartbeat_ms: u64,
+    /// per-attempt deadline in ms (0 disables deadlines)
+    pub task_deadline_ms: u64,
+    /// fault injection: `Kill` is a real SIGKILL here, `Crash` is a
+    /// simulated instant loss, `Straggle` is ignored (real processes
+    /// straggle on their own)
+    pub fault: FaultPlan,
+    /// binary spawned as `<worker_bin> worker --socket …`
+    pub worker_bin: PathBuf,
+    /// test-only: run workers as threads speaking the real protocol
+    #[cfg(test)]
+    pub(crate) thread_workers: Option<Arc<ThreadTask>>,
+}
+
+impl ProcConfig {
+    pub fn new(workers: usize, worker_bin: PathBuf) -> Self {
+        ProcConfig {
+            workers: workers.max(1),
+            heartbeat_ms: 50,
+            task_deadline_ms: 30_000,
+            fault: FaultPlan::none(),
+            worker_bin,
+            #[cfg(test)]
+            thread_workers: None,
+        }
+    }
+}
+
+impl std::fmt::Debug for ProcConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ProcConfig")
+            .field("workers", &self.workers)
+            .field("heartbeat_ms", &self.heartbeat_ms)
+            .field("task_deadline_ms", &self.task_deadline_ms)
+            .field("fault", &self.fault)
+            .field("worker_bin", &self.worker_bin)
+            .finish()
+    }
+}
+
+/// Resolve the worker binary to spawn: the `PLRMR_WORKER_BIN` override
+/// (tests and benches point it at the built binary), else the current
+/// executable when it *is* the `plrmr` binary.  `None` inside unit-test
+/// or other host binaries — callers skip the process path gracefully.
+pub fn worker_binary() -> Option<PathBuf> {
+    if let Some(p) = std::env::var_os("PLRMR_WORKER_BIN") {
+        let p = PathBuf::from(p);
+        if p.exists() {
+            return Some(p);
+        }
+    }
+    let exe = std::env::current_exe().ok()?;
+    (exe.file_stem()?.to_str()? == "plrmr").then_some(exe)
+}
+
+/// A bound socket path that unlinks itself on drop.
+struct SocketGuard {
+    path: PathBuf,
+}
+
+impl SocketGuard {
+    fn new() -> SocketGuard {
+        static SEQ: AtomicU64 = AtomicU64::new(0);
+        let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+        let path = std::env::temp_dir()
+            .join(format!("plrmr-sock-{}-{seq}", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        SocketGuard { path }
+    }
+}
+
+impl Drop for SocketGuard {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+/// One spawned worker: a real process, or a test-only thread.
+enum WorkerHandle {
+    Proc(Child),
+    #[cfg(test)]
+    Thread(std::thread::JoinHandle<()>),
+}
+
+impl WorkerHandle {
+    /// Real SIGKILL for processes; threads cannot be killed (test-only).
+    fn kill(&mut self) {
+        match self {
+            WorkerHandle::Proc(c) => {
+                let _ = c.kill();
+            }
+            #[cfg(test)]
+            WorkerHandle::Thread(_) => {}
+        }
+    }
+
+    fn is_dead(&mut self) -> bool {
+        match self {
+            WorkerHandle::Proc(c) => matches!(c.try_wait(), Ok(Some(_))),
+            #[cfg(test)]
+            WorkerHandle::Thread(h) => h.is_finished(),
+        }
+    }
+
+    /// Give the worker a short grace period to exit, then SIGKILL it —
+    /// cleanup must never hang on a wedged process.
+    fn shutdown(self) {
+        match self {
+            WorkerHandle::Proc(mut c) => {
+                let t0 = Instant::now();
+                while t0.elapsed() < Duration::from_millis(500) {
+                    if matches!(c.try_wait(), Ok(Some(_))) {
+                        return;
+                    }
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                let _ = c.kill();
+                let _ = c.wait();
+            }
+            #[cfg(test)]
+            WorkerHandle::Thread(_) => {}
+        }
+    }
+}
+
+fn spawn_worker(cfg: &ProcConfig, socket: &Path, worker_id: u64) -> Result<WorkerHandle> {
+    #[cfg(test)]
+    if let Some(task) = &cfg.thread_workers {
+        let task = Arc::clone(task);
+        let socket = socket.to_path_buf();
+        let hb = cfg.heartbeat_ms;
+        return Ok(WorkerHandle::Thread(std::thread::spawn(move || {
+            let _ = worker_serve(&socket, worker_id, hb, move |setup, t| task(setup, t));
+        })));
+    }
+    let child = Command::new(&cfg.worker_bin)
+        .arg("worker")
+        .arg("--socket")
+        .arg(socket)
+        .arg("--worker-id")
+        .arg(worker_id.to_string())
+        .arg("--heartbeat-ms")
+        .arg(cfg.heartbeat_ms.to_string())
+        .stdin(Stdio::null())
+        .stdout(Stdio::null())
+        .spawn()
+        .with_context(|| format!("spawn worker process {:?}", cfg.worker_bin))?;
+    Ok(WorkerHandle::Proc(child))
+}
+
+/// Events the leader's main loop consumes (reader threads produce them).
+enum Event {
+    Connected { conn: u64, stream: UnixStream },
+    Msg { conn: u64, msg: Message },
+    Disconnected { conn: u64 },
+}
+
+/// One live worker connection as the leader sees it.
+struct Conn {
+    stream: UnixStream,
+    worker_id: Option<u64>,
+    running: Option<Running>,
+    last_beat: Instant,
+}
+
+/// An in-flight task attempt.
+struct Running {
+    task: usize,
+    attempt: usize,
+    assigned: Instant,
+    deadline: Option<Instant>,
+    /// this attempt was chosen for a fault-injected SIGKILL
+    killed: bool,
+}
+
+fn backoff_delay(attempt: usize) -> Duration {
+    Duration::from_millis(2u64 << attempt.min(5))
+}
+
+/// Requeue a lost attempt with backoff, or record the job's named failure
+/// once `max_attempts` is exhausted.
+fn requeue_or_fail(
+    metrics: &mut JobMetrics,
+    backoff: &mut Vec<(Instant, usize, usize)>,
+    failure: &mut Option<String>,
+    max_attempts: usize,
+    task: usize,
+    attempt: usize,
+    fault: &str,
+) {
+    if attempt + 1 >= max_attempts {
+        if failure.is_none() {
+            *failure = Some(format!(
+                "task {task} failed after {} attempts (last fault: {fault})",
+                attempt + 1
+            ));
+        }
+        return;
+    }
+    metrics.retries += 1;
+    metrics.attempts_max = metrics.attempts_max.max(attempt + 2);
+    backoff.push((Instant::now() + backoff_delay(attempt), task, attempt + 1));
+}
+
+/// Run one job on the out-of-process runtime: spawn `cfg.workers` worker
+/// processes, broadcast `setup`, execute `n_tasks` tasks, and return the
+/// raw output payload of every task in task order plus the job's metrics.
+///
+/// The payloads are opaque — encoding, decoding and the deterministic
+/// leader-side merge belong to the caller
+/// ([`crate::coordinator::procjob`]).  On exhausted retries the error
+/// names the task id, the attempt count and the last fault; the function
+/// never hangs (deadlines, heartbeat staleness, a spawn budget and a
+/// startup guard bound every wait).
+pub fn run_proc_job(
+    cfg: &ProcConfig,
+    setup: &[u8],
+    n_tasks: usize,
+) -> Result<(Vec<Vec<u8>>, JobMetrics)> {
+    let started = Instant::now();
+    let workers = cfg.workers.max(1);
+    let mut metrics = JobMetrics {
+        per_worker: vec![WorkerMetrics::default(); workers],
+        ..Default::default()
+    };
+    if n_tasks == 0 {
+        return Ok((Vec::new(), metrics));
+    }
+
+    let sock = SocketGuard::new();
+    let listener = UnixListener::bind(&sock.path)
+        .with_context(|| format!("bind worker socket {:?}", sock.path))?;
+    listener
+        .set_nonblocking(true)
+        .context("set worker socket nonblocking")?;
+
+    let (tx, rx) = mpsc::channel::<Event>();
+    let stop_accept = Arc::new(AtomicBool::new(false));
+    let accept_handle = {
+        let tx = tx.clone();
+        let stop = Arc::clone(&stop_accept);
+        std::thread::spawn(move || {
+            let mut next_conn = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let conn = next_conn;
+                        next_conn += 1;
+                        let _ = stream.set_nonblocking(false);
+                        let Ok(mut read) = stream.try_clone() else { continue };
+                        if tx.send(Event::Connected { conn, stream }).is_err() {
+                            break;
+                        }
+                        let tx = tx.clone();
+                        std::thread::spawn(move || {
+                            while let Ok(msg) = read_frame(&mut read) {
+                                if tx.send(Event::Msg { conn, msg }).is_err() {
+                                    return;
+                                }
+                            }
+                            let _ = tx.send(Event::Disconnected { conn });
+                        });
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                    Err(_) => break,
+                }
+            }
+        })
+    };
+    drop(tx);
+
+    // the spawn budget bounds total process creation so a kill-happy fault
+    // plan can never respawn forever: each attempt loses at most one
+    // worker, and each lost worker is replaced at most once
+    let spawn_budget = workers + n_tasks * cfg.fault.max_attempts + 4;
+    let mut children: HashMap<u64, WorkerHandle> = HashMap::new();
+    let mut next_worker_id = 0u64;
+    let mut spawns_used = 0usize;
+    let mut spawn_failure: Option<String> = None;
+    for _ in 0..workers {
+        match spawn_worker(cfg, &sock.path, next_worker_id) {
+            Ok(h) => {
+                children.insert(next_worker_id, h);
+                next_worker_id += 1;
+                spawns_used += 1;
+            }
+            Err(e) => {
+                spawn_failure = Some(format!("{e:#}"));
+                break;
+            }
+        }
+    }
+
+    let mut conns: HashMap<u64, Conn> = HashMap::new();
+    let mut idle: VecDeque<u64> = VecDeque::new();
+    let mut pending: VecDeque<(usize, usize)> = (0..n_tasks).map(|t| (t, 0)).collect();
+    let mut backoff: Vec<(Instant, usize, usize)> = Vec::new();
+    let mut outputs: Vec<Option<Vec<u8>>> = (0..n_tasks).map(|_| None).collect();
+    let mut completed = 0usize;
+    let mut failure: Option<String> = spawn_failure;
+    let mut any_hello = false;
+
+    while completed < n_tasks && failure.is_none() {
+        // promote backoff entries whose ready time has arrived
+        let now = Instant::now();
+        let mut i = 0;
+        while i < backoff.len() {
+            if backoff[i].0 <= now {
+                let (_, t, a) = backoff.remove(i);
+                pending.push_back((t, a));
+            } else {
+                i += 1;
+            }
+        }
+
+        // assign pending tasks to idle workers
+        while !pending.is_empty() && failure.is_none() {
+            let (task, attempt) = *pending.front().unwrap();
+            let fault = cfg.fault.roll(task, attempt);
+            if matches!(fault, Some(Fault::Crash)) {
+                // simulated instant loss: the attempt dies before it runs
+                pending.pop_front();
+                metrics.attempts += 1;
+                requeue_or_fail(
+                    &mut metrics,
+                    &mut backoff,
+                    &mut failure,
+                    cfg.fault.max_attempts,
+                    task,
+                    attempt,
+                    "injected crash",
+                );
+                continue;
+            }
+            // find a live idle worker (skipping stale idle entries)
+            let conn_id = loop {
+                match idle.pop_front() {
+                    Some(id) if conns.contains_key(&id) => break Some(id),
+                    Some(_) => continue,
+                    None => break None,
+                }
+            };
+            let Some(conn_id) = conn_id else { break };
+            pending.pop_front();
+            let kill = matches!(fault, Some(Fault::Kill));
+            let conn = conns.get_mut(&conn_id).unwrap();
+            let assign =
+                Message::Assign { task_id: task as u64, attempt: attempt as u64 };
+            if write_frame(&mut &conn.stream, &assign).is_err() {
+                // dead socket at assignment: the attempt never ran
+                metrics.attempts += 1;
+                requeue_or_fail(
+                    &mut metrics,
+                    &mut backoff,
+                    &mut failure,
+                    cfg.fault.max_attempts,
+                    task,
+                    attempt,
+                    "worker connection lost at assignment",
+                );
+                conns.remove(&conn_id);
+                continue;
+            }
+            let deadline = (cfg.task_deadline_ms > 0)
+                .then(|| Instant::now() + Duration::from_millis(cfg.task_deadline_ms));
+            conn.running =
+                Some(Running { task, attempt, assigned: Instant::now(), deadline, killed: kill });
+            if kill {
+                // the real thing: SIGKILL the live worker process mid-task;
+                // the Disconnected event requeues, the reaper respawns
+                if let Some(wid) = conn.worker_id {
+                    if let Some(h) = children.get_mut(&wid) {
+                        h.kill();
+                    }
+                }
+            }
+        }
+        if failure.is_some() {
+            break;
+        }
+
+        // collect events (block briefly, then drain whatever queued)
+        let mut events = Vec::new();
+        match rx.recv_timeout(Duration::from_millis(10)) {
+            Ok(ev) => events.push(ev),
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => {
+                failure = Some("supervisor event channel closed".into());
+            }
+        }
+        while let Ok(ev) = rx.try_recv() {
+            events.push(ev);
+        }
+        for ev in events {
+            match ev {
+                Event::Connected { conn, stream } => {
+                    conns.insert(
+                        conn,
+                        Conn { stream, worker_id: None, running: None, last_beat: Instant::now() },
+                    );
+                }
+                Event::Msg { conn, msg } => {
+                    let Some(c) = conns.get_mut(&conn) else { continue };
+                    match msg {
+                        Message::Hello { worker_id } => {
+                            c.worker_id = Some(worker_id);
+                            c.last_beat = Instant::now();
+                            any_hello = true;
+                            if write_frame(&mut &c.stream, &Message::Job { bytes: setup.to_vec() })
+                                .is_ok()
+                            {
+                                idle.push_back(conn);
+                            } else {
+                                conns.remove(&conn);
+                            }
+                        }
+                        Message::Heartbeat { .. } => c.last_beat = Instant::now(),
+                        Message::Output { task_id, bytes, .. } => {
+                            metrics.attempts += 1;
+                            c.last_beat = Instant::now();
+                            if let Some(r) = c.running.take() {
+                                let slot = c.worker_id.unwrap_or(0) as usize % workers;
+                                let w = &mut metrics.per_worker[slot];
+                                w.tasks += 1;
+                                w.busy_s += r.assigned.elapsed().as_secs_f64();
+                            }
+                            idle.push_back(conn);
+                            let task = task_id as usize;
+                            // first completion wins; a straggling duplicate
+                            // is bit-identical by map purity and is dropped
+                            if task < n_tasks && outputs[task].is_none() {
+                                metrics.shuffle_payloads += 1;
+                                metrics.shuffle_bytes += bytes.len();
+                                metrics.max_payload_bytes =
+                                    metrics.max_payload_bytes.max(bytes.len());
+                                outputs[task] = Some(bytes);
+                                completed += 1;
+                            }
+                        }
+                        Message::TaskFailed { task_id, attempt, message } => {
+                            metrics.attempts += 1;
+                            c.running = None;
+                            c.last_beat = Instant::now();
+                            idle.push_back(conn);
+                            let task = task_id as usize;
+                            if task < n_tasks && outputs[task].is_none() {
+                                requeue_or_fail(
+                                    &mut metrics,
+                                    &mut backoff,
+                                    &mut failure,
+                                    cfg.fault.max_attempts,
+                                    task,
+                                    attempt as usize,
+                                    &message,
+                                );
+                            }
+                        }
+                        _ => {}
+                    }
+                }
+                Event::Disconnected { conn } => {
+                    if let Some(c) = conns.remove(&conn) {
+                        if let Some(r) = c.running {
+                            if outputs[r.task].is_none() {
+                                metrics.attempts += 1;
+                                let desc = if r.killed {
+                                    "worker process SIGKILLed mid-task"
+                                } else {
+                                    "worker connection lost mid-task"
+                                };
+                                requeue_or_fail(
+                                    &mut metrics,
+                                    &mut backoff,
+                                    &mut failure,
+                                    cfg.fault.max_attempts,
+                                    r.task,
+                                    r.attempt,
+                                    desc,
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        // deadline and heartbeat supervision (running attempts only)
+        let now = Instant::now();
+        let stale_after = Duration::from_millis(3 * cfg.heartbeat_ms.max(1));
+        let expired: Vec<(u64, bool)> = conns
+            .iter()
+            .filter_map(|(&id, c)| {
+                let r = c.running.as_ref()?;
+                if r.deadline.is_some_and(|d| now >= d) {
+                    Some((id, true))
+                } else if cfg.heartbeat_ms > 0 && now.duration_since(c.last_beat) > stale_after {
+                    Some((id, false))
+                } else {
+                    None
+                }
+            })
+            .collect();
+        for (conn_id, was_deadline) in expired {
+            let Some(c) = conns.remove(&conn_id) else { continue };
+            let r = c.running.expect("expired conn was running");
+            metrics.attempts += 1;
+            let desc = if was_deadline {
+                metrics.deadline_expirations += 1;
+                "per-attempt deadline expired"
+            } else {
+                metrics.heartbeats_missed += 1;
+                "worker heartbeats went silent"
+            };
+            if outputs[r.task].is_none() {
+                requeue_or_fail(
+                    &mut metrics,
+                    &mut backoff,
+                    &mut failure,
+                    cfg.fault.max_attempts,
+                    r.task,
+                    r.attempt,
+                    desc,
+                );
+            }
+            // a wedged or silent worker cannot be trusted to come back
+            if let Some(wid) = c.worker_id {
+                if let Some(h) = children.get_mut(&wid) {
+                    h.kill();
+                }
+            }
+        }
+
+        // reap dead workers; respawn replacements inside the spawn budget
+        let dead: Vec<u64> = children
+            .iter_mut()
+            .filter_map(|(&id, h)| h.is_dead().then_some(id))
+            .collect();
+        for id in dead {
+            children.remove(&id);
+            if completed >= n_tasks || failure.is_some() {
+                continue;
+            }
+            if spawns_used < spawn_budget {
+                match spawn_worker(cfg, &sock.path, next_worker_id) {
+                    Ok(h) => {
+                        children.insert(next_worker_id, h);
+                        next_worker_id += 1;
+                        spawns_used += 1;
+                    }
+                    Err(e) => failure = Some(format!("respawn worker: {e:#}")),
+                }
+            }
+        }
+        if failure.is_none()
+            && completed < n_tasks
+            && children.is_empty()
+            && conns.is_empty()
+            && spawns_used >= spawn_budget
+        {
+            failure = Some(format!(
+                "worker fleet exhausted after {spawns_used} spawns with \
+                 {completed}/{n_tasks} tasks complete"
+            ));
+        }
+        if failure.is_none() && !any_hello && started.elapsed() > Duration::from_secs(30) {
+            failure = Some("no worker process connected within 30s".into());
+        }
+    }
+
+    // orderly teardown on every exit path: ask nicely, then SIGKILL
+    for c in conns.values() {
+        let _ = write_frame(&mut &c.stream, &Message::Shutdown);
+    }
+    stop_accept.store(true, Ordering::Relaxed);
+    for (_, h) in children.drain() {
+        h.shutdown();
+    }
+    let _ = accept_handle.join();
+    drop(rx);
+
+    if let Some(msg) = failure {
+        bail!("mapreduce job failed: {msg}");
+    }
+    metrics.tasks_completed = n_tasks;
+    metrics.attempts_max = metrics.attempts_max.max(1);
+    metrics.map_s = started.elapsed().as_secs_f64();
+    metrics.real_s = metrics.map_s;
+    let outputs = outputs
+        .into_iter()
+        .enumerate()
+        .map(|(t, o)| o.with_context(|| format!("task {t} completed without output")))
+        .collect::<Result<Vec<_>>>()?;
+    Ok((outputs, metrics))
+}
+
+/// Worker side of the protocol: connect to the supervisor's socket, say
+/// hello, heartbeat from a dedicated thread, and run assigned tasks until
+/// a shutdown frame (or a dead socket — the supervisor owns recovery).
+///
+/// `run_task(setup, task_id)` must be a pure function of its arguments so
+/// a retried attempt on another process recomputes identical bytes.  A
+/// panicking task is caught and reported as a named task failure.
+///
+/// Test hooks (env): `PLRMR_WORKER_MUTE` suppresses heartbeats;
+/// `PLRMR_WORKER_STALL_MS` sleeps that long before every *first* attempt
+/// (heartbeats keep flowing) — how the deadline and heartbeat supervision
+/// paths are driven deterministically from the integration tests.
+pub fn worker_serve(
+    socket_path: &Path,
+    worker_id: u64,
+    heartbeat_ms: u64,
+    mut run_task: impl FnMut(&[u8], u64) -> std::result::Result<Vec<u8>, String>,
+) -> Result<()> {
+    let stream = UnixStream::connect(socket_path)
+        .with_context(|| format!("worker {worker_id}: connect {socket_path:?}"))?;
+    let mut read = stream.try_clone().context("clone worker stream")?;
+    let write = Arc::new(Mutex::new(stream));
+    write_frame(&mut *write.lock().unwrap(), &Message::Hello { worker_id })?;
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let mute = std::env::var_os("PLRMR_WORKER_MUTE").is_some();
+    if heartbeat_ms > 0 && !mute {
+        let write = Arc::clone(&write);
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                std::thread::sleep(Duration::from_millis(heartbeat_ms));
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                let sent =
+                    write_frame(&mut *write.lock().unwrap(), &Message::Heartbeat { worker_id });
+                if sent.is_err() {
+                    break;
+                }
+            }
+        });
+    }
+    let stall_ms: u64 = std::env::var("PLRMR_WORKER_STALL_MS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0);
+
+    let mut setup: Option<Vec<u8>> = None;
+    while let Ok(msg) = read_frame(&mut read) {
+        match msg {
+            Message::Job { bytes } => setup = Some(bytes),
+            Message::Assign { task_id, attempt } => {
+                if stall_ms > 0 && attempt == 0 {
+                    std::thread::sleep(Duration::from_millis(stall_ms));
+                }
+                let reply = match setup.as_deref() {
+                    None => Message::TaskFailed {
+                        task_id,
+                        attempt,
+                        message: "task assigned before job setup".into(),
+                    },
+                    Some(setup) => {
+                        let ran = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                            run_task(setup, task_id)
+                        }));
+                        match ran {
+                            Ok(Ok(bytes)) => Message::Output { task_id, attempt, bytes },
+                            Ok(Err(message)) => Message::TaskFailed { task_id, attempt, message },
+                            Err(payload) => Message::TaskFailed {
+                                task_id,
+                                attempt,
+                                message: format!(
+                                    "task panicked: {}",
+                                    panic_message(payload.as_ref())
+                                ),
+                            },
+                        }
+                    }
+                };
+                if write_frame(&mut *write.lock().unwrap(), &reply).is_err() {
+                    break;
+                }
+            }
+            Message::Shutdown => break,
+            _ => {}
+        }
+    }
+    stop.store(true, Ordering::Relaxed);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn echo_cfg(workers: usize) -> ProcConfig {
+        let mut cfg = ProcConfig::new(workers, PathBuf::new());
+        cfg.thread_workers = Some(Arc::new(|setup: &[u8], task: u64| {
+            let mut out = setup.to_vec();
+            out.extend_from_slice(&task.to_le_bytes());
+            Ok(out)
+        }));
+        cfg
+    }
+
+    #[test]
+    fn proc_job_returns_outputs_in_task_order() {
+        for workers in [1usize, 4] {
+            let cfg = echo_cfg(workers);
+            let (outs, m) = run_proc_job(&cfg, b"SETUP", 9).unwrap();
+            assert_eq!(outs.len(), 9);
+            for (t, o) in outs.iter().enumerate() {
+                let mut expect = b"SETUP".to_vec();
+                expect.extend_from_slice(&(t as u64).to_le_bytes());
+                assert_eq!(o, &expect, "task {t} (workers={workers})");
+            }
+            assert_eq!(m.tasks_completed, 9);
+            assert_eq!(m.attempts_max, 1);
+            assert_eq!(m.deadline_expirations, 0);
+            assert_eq!(m.heartbeats_missed, 0);
+            assert_eq!(m.shuffle_payloads, 9);
+        }
+    }
+
+    #[test]
+    fn simulated_crashes_retry_with_backoff_and_converge() {
+        let mut cfg = echo_cfg(3);
+        cfg.fault = FaultPlan::chaotic(0.4, 21);
+        let (outs, m) = run_proc_job(&cfg, b"S", 12).unwrap();
+        assert_eq!(outs.len(), 12);
+        assert!(m.retries > 0, "chaos plan should crash some attempts");
+        assert!(m.attempts_max > 1);
+    }
+
+    #[test]
+    fn exhausted_retries_name_task_attempts_and_fault() {
+        let mut cfg = echo_cfg(2);
+        cfg.fault = FaultPlan { crash_prob: 1.0, max_attempts: 3, ..FaultPlan::chaotic(1.0, 5) };
+        let err = run_proc_job(&cfg, b"S", 4).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("mapreduce job failed"), "{msg}");
+        assert!(msg.contains("task "), "{msg}");
+        assert!(msg.contains("after 3 attempts"), "{msg}");
+        assert!(msg.contains("injected crash"), "{msg}");
+    }
+
+    #[test]
+    fn failing_task_fn_surfaces_its_message_after_retries() {
+        let mut cfg = echo_cfg(2);
+        cfg.fault.max_attempts = 2;
+        cfg.thread_workers = Some(Arc::new(|_setup: &[u8], task: u64| {
+            if task == 1 {
+                Err("synthetic task failure".into())
+            } else {
+                Ok(vec![1])
+            }
+        }));
+        let err = run_proc_job(&cfg, b"S", 3).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("task 1 failed after 2 attempts"), "{msg}");
+        assert!(msg.contains("synthetic task failure"), "{msg}");
+    }
+
+    #[test]
+    fn empty_job_is_a_no_op() {
+        let cfg = echo_cfg(2);
+        let (outs, m) = run_proc_job(&cfg, b"", 0).unwrap();
+        assert!(outs.is_empty());
+        assert_eq!(m.tasks_completed, 0);
+    }
+
+    #[test]
+    fn worker_binary_rejects_non_plrmr_executables() {
+        // inside the unit-test binary, current_exe is the test harness —
+        // the resolver must refuse it rather than spawn tests as workers
+        if std::env::var_os("PLRMR_WORKER_BIN").is_none() {
+            assert_eq!(worker_binary(), None);
+        }
+    }
+}

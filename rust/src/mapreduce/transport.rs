@@ -1,0 +1,286 @@
+//! Framed messages over the worker socket.
+//!
+//! The supervisor and its worker processes speak length-prefixed frames in
+//! the same checksummed little-endian dialect as the spill files
+//! ([`crate::store::spill`]): a magic word, a message type, a payload
+//! length, the payload bytes, and a trailing FNV-1a checksum over
+//! everything before it.  Corruption anywhere — short read, wrong magic,
+//! bad length, flipped bit — surfaces as a named error, never as silently
+//! wrong bytes entering a statistic; the supervisor treats a failed read
+//! exactly like a dead worker (requeue the task, retry elsewhere).
+//!
+//! Payload contents are opaque here.  Task payloads are themselves encoded
+//! panels in the spill-file format (checksummed twice, once per layer) by
+//! [`crate::coordinator::procjob`].
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+use crate::store::spill::fnv1a;
+
+/// Frame magic: "PLFRAME1" as a little-endian u64 constant.
+const FRAME_MAGIC: u64 = 0x504C_4652_414D_4531;
+
+/// Hard cap on a single frame's payload — a corrupt length field must not
+/// become a multi-gigabyte allocation.
+const MAX_PAYLOAD: u64 = 1 << 32;
+
+/// Bytes before the payload: magic, type, payload length.
+const FRAME_HEADER: usize = 24;
+
+/// Everything the supervisor and a worker ever say to each other.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Message {
+    /// worker → supervisor, once per connection: "I exist"
+    Hello { worker_id: u64 },
+    /// worker → supervisor, periodically while alive (including mid-task)
+    Heartbeat { worker_id: u64 },
+    /// supervisor → worker, once per connection: the job's shared setup
+    Job { bytes: Vec<u8> },
+    /// supervisor → worker: run this task attempt
+    Assign { task_id: u64, attempt: u64 },
+    /// worker → supervisor: the task's merged output payload
+    Output { task_id: u64, attempt: u64, bytes: Vec<u8> },
+    /// worker → supervisor: the task failed in a way worth naming
+    /// (the supervisor requeues it like a crash)
+    TaskFailed { task_id: u64, attempt: u64, message: String },
+    /// supervisor → worker: drain and exit cleanly
+    Shutdown,
+}
+
+const TYPE_HELLO: u64 = 1;
+const TYPE_HEARTBEAT: u64 = 2;
+const TYPE_JOB: u64 = 3;
+const TYPE_ASSIGN: u64 = 4;
+const TYPE_OUTPUT: u64 = 5;
+const TYPE_TASK_FAILED: u64 = 6;
+const TYPE_SHUTDOWN: u64 = 7;
+
+/// Append a little-endian u64 (shared by frame and job-payload encoders).
+pub(crate) fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Read a little-endian u64 at `*pos`, advancing it — a named error on
+/// underrun so payload decoders never index past a truncated buffer.
+pub(crate) fn get_u64(bytes: &[u8], pos: &mut usize) -> Result<u64> {
+    let end = *pos + 8;
+    if end > bytes.len() {
+        bail!("payload underrun: need {end} bytes, have {}", bytes.len());
+    }
+    let v = u64::from_le_bytes(bytes[*pos..end].try_into().unwrap());
+    *pos = end;
+    Ok(v)
+}
+
+/// Read `n` raw bytes at `*pos`, advancing it.
+pub(crate) fn get_bytes(bytes: &[u8], pos: &mut usize, n: usize) -> Result<Vec<u8>> {
+    let end = *pos + n;
+    if end > bytes.len() {
+        bail!("payload underrun: need {end} bytes, have {}", bytes.len());
+    }
+    let v = bytes[*pos..end].to_vec();
+    *pos = end;
+    Ok(v)
+}
+
+fn encode_payload(msg: &Message) -> (u64, Vec<u8>) {
+    let mut p = Vec::new();
+    match msg {
+        Message::Hello { worker_id } => {
+            put_u64(&mut p, *worker_id);
+            (TYPE_HELLO, p)
+        }
+        Message::Heartbeat { worker_id } => {
+            put_u64(&mut p, *worker_id);
+            (TYPE_HEARTBEAT, p)
+        }
+        Message::Job { bytes } => (TYPE_JOB, bytes.clone()),
+        Message::Assign { task_id, attempt } => {
+            put_u64(&mut p, *task_id);
+            put_u64(&mut p, *attempt);
+            (TYPE_ASSIGN, p)
+        }
+        Message::Output { task_id, attempt, bytes } => {
+            put_u64(&mut p, *task_id);
+            put_u64(&mut p, *attempt);
+            p.extend_from_slice(bytes);
+            (TYPE_OUTPUT, p)
+        }
+        Message::TaskFailed { task_id, attempt, message } => {
+            put_u64(&mut p, *task_id);
+            put_u64(&mut p, *attempt);
+            p.extend_from_slice(message.as_bytes());
+            (TYPE_TASK_FAILED, p)
+        }
+        Message::Shutdown => (TYPE_SHUTDOWN, p),
+    }
+}
+
+fn decode_payload(msg_type: u64, p: Vec<u8>) -> Result<Message> {
+    let mut pos = 0usize;
+    let msg = match msg_type {
+        TYPE_HELLO => Message::Hello { worker_id: get_u64(&p, &mut pos)? },
+        TYPE_HEARTBEAT => Message::Heartbeat { worker_id: get_u64(&p, &mut pos)? },
+        TYPE_JOB => Message::Job { bytes: p },
+        TYPE_ASSIGN => Message::Assign {
+            task_id: get_u64(&p, &mut pos)?,
+            attempt: get_u64(&p, &mut pos)?,
+        },
+        TYPE_OUTPUT => {
+            let task_id = get_u64(&p, &mut pos)?;
+            let attempt = get_u64(&p, &mut pos)?;
+            Message::Output { task_id, attempt, bytes: p[pos..].to_vec() }
+        }
+        TYPE_TASK_FAILED => {
+            let task_id = get_u64(&p, &mut pos)?;
+            let attempt = get_u64(&p, &mut pos)?;
+            let message = String::from_utf8_lossy(&p[pos..]).into_owned();
+            Message::TaskFailed { task_id, attempt, message }
+        }
+        TYPE_SHUTDOWN => Message::Shutdown,
+        other => bail!("worker frame: unknown message type {other}"),
+    };
+    Ok(msg)
+}
+
+/// Write one checksummed frame.  The checksum covers header and payload,
+/// so a reader verifies the whole frame before interpreting a byte of it.
+pub fn write_frame(w: &mut impl Write, msg: &Message) -> Result<()> {
+    let (msg_type, payload) = encode_payload(msg);
+    let mut buf = Vec::with_capacity(FRAME_HEADER + payload.len() + 8);
+    put_u64(&mut buf, FRAME_MAGIC);
+    put_u64(&mut buf, msg_type);
+    put_u64(&mut buf, payload.len() as u64);
+    buf.extend_from_slice(&payload);
+    let sum = fnv1a(&buf);
+    put_u64(&mut buf, sum);
+    w.write_all(&buf).context("worker frame: write")?;
+    w.flush().context("worker frame: flush")?;
+    Ok(())
+}
+
+/// Read one frame, verifying magic, length bound and checksum before
+/// decoding.  A short read (peer died mid-frame) and a corrupt frame are
+/// both named errors; callers treat either as a dead peer.
+pub fn read_frame(r: &mut impl Read) -> Result<Message> {
+    let mut header = [0u8; FRAME_HEADER];
+    r.read_exact(&mut header).context("worker frame: short read in header")?;
+    let magic = u64::from_le_bytes(header[0..8].try_into().unwrap());
+    if magic != FRAME_MAGIC {
+        bail!("worker frame: bad magic {magic:#018x}, expected {FRAME_MAGIC:#018x}");
+    }
+    let msg_type = u64::from_le_bytes(header[8..16].try_into().unwrap());
+    let payload_len = u64::from_le_bytes(header[16..24].try_into().unwrap());
+    if payload_len > MAX_PAYLOAD {
+        bail!("worker frame: payload length {payload_len} exceeds the {MAX_PAYLOAD} cap");
+    }
+    let mut payload = vec![0u8; payload_len as usize];
+    r.read_exact(&mut payload).context("worker frame: short read in payload")?;
+    let mut trailer = [0u8; 8];
+    r.read_exact(&mut trailer).context("worker frame: short read in checksum")?;
+    let stored = u64::from_le_bytes(trailer);
+    let mut body = Vec::with_capacity(FRAME_HEADER + payload.len());
+    body.extend_from_slice(&header);
+    body.extend_from_slice(&payload);
+    let computed = fnv1a(&body);
+    if computed != stored {
+        bail!(
+            "worker frame: checksum mismatch (computed {computed:#018x}, \
+             stored {stored:#018x}) — corrupt frame"
+        );
+    }
+    decode_payload(msg_type, payload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round_trip(msg: Message) -> Message {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &msg).unwrap();
+        read_frame(&mut buf.as_slice()).unwrap()
+    }
+
+    #[test]
+    fn all_message_kinds_round_trip() {
+        let msgs = vec![
+            Message::Hello { worker_id: 3 },
+            Message::Heartbeat { worker_id: 7 },
+            Message::Job { bytes: vec![1, 2, 3, 255, 0] },
+            Message::Assign { task_id: 42, attempt: 2 },
+            Message::Output { task_id: 9, attempt: 0, bytes: (0..=255).collect() },
+            Message::TaskFailed {
+                task_id: 5,
+                attempt: 3,
+                message: "panel store: checksum mismatch".into(),
+            },
+            Message::Shutdown,
+            Message::Job { bytes: Vec::new() },
+            Message::Output { task_id: 0, attempt: 0, bytes: Vec::new() },
+        ];
+        for msg in msgs {
+            assert_eq!(round_trip(msg.clone()), msg);
+        }
+    }
+
+    #[test]
+    fn frames_stream_back_to_back() {
+        let mut buf = Vec::new();
+        let msgs = [
+            Message::Hello { worker_id: 1 },
+            Message::Assign { task_id: 0, attempt: 0 },
+            Message::Output { task_id: 0, attempt: 0, bytes: vec![9; 100] },
+        ];
+        for m in &msgs {
+            write_frame(&mut buf, m).unwrap();
+        }
+        let mut r = buf.as_slice();
+        for m in &msgs {
+            assert_eq!(&read_frame(&mut r).unwrap(), m);
+        }
+        assert!(read_frame(&mut r).is_err(), "stream exhausted");
+    }
+
+    #[test]
+    fn corruption_is_rejected_by_name() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Message::Output { task_id: 1, attempt: 0, bytes: vec![7; 64] })
+            .unwrap();
+        // flipped payload bit → checksum mismatch
+        let mut flipped = buf.clone();
+        let mid = FRAME_HEADER + 32;
+        flipped[mid] ^= 0x20;
+        let err = read_frame(&mut flipped.as_slice()).unwrap_err();
+        assert!(format!("{err:#}").contains("checksum mismatch"), "{err:#}");
+        // wrong magic → named rejection before any payload is read
+        let mut wrong = buf.clone();
+        wrong[0] ^= 0xFF;
+        let err = read_frame(&mut wrong.as_slice()).unwrap_err();
+        assert!(format!("{err:#}").contains("bad magic"), "{err:#}");
+        // truncation at several cut points → short read, never a panic
+        for cut in [0usize, 10, FRAME_HEADER, FRAME_HEADER + 5, buf.len() - 1] {
+            let err = read_frame(&mut &buf[..cut]).unwrap_err();
+            assert!(format!("{err:#}").contains("short read"), "cut={cut}: {err:#}");
+        }
+        // absurd length field → capped allocation, named error
+        let mut huge = buf.clone();
+        huge[16..24].copy_from_slice(&u64::MAX.to_le_bytes());
+        let err = read_frame(&mut huge.as_slice()).unwrap_err();
+        assert!(format!("{err:#}").contains("cap"), "{err:#}");
+    }
+
+    #[test]
+    fn payload_helpers_bound_their_reads() {
+        let mut buf = Vec::new();
+        put_u64(&mut buf, 77);
+        let mut pos = 0usize;
+        assert_eq!(get_u64(&buf, &mut pos).unwrap(), 77);
+        assert!(get_u64(&buf, &mut pos).is_err(), "underrun is an error");
+        let mut pos = 0usize;
+        assert_eq!(get_bytes(&buf, &mut pos, 8).unwrap().len(), 8);
+        assert!(get_bytes(&buf, &mut pos, 1).is_err());
+    }
+}

@@ -159,6 +159,10 @@ pub struct StoreMetrics {
     pub spill_writes: usize,
     /// resident panels demoted to disk-only
     pub evictions: usize,
+    /// spill loads that failed verification once and were re-read — a
+    /// retry that succeeds was a *transient* partial read; one that fails
+    /// again surfaces the original named error (real bit-rot repeats)
+    pub read_retries: usize,
 }
 
 /// A keyed store of retired statistic panels.  All methods take `&self`

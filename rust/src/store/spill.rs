@@ -39,7 +39,9 @@ const MAGIC: u64 = 0x504C_5041_4E45_4C31;
 /// Unique-per-process suffix for spill directories.
 static STORE_SEQ: AtomicU64 = AtomicU64::new(0);
 
-fn fnv1a(bytes: &[u8]) -> u64 {
+/// FNV-1a over a byte slice — the one checksum shared by spill files and
+/// the worker-socket frames ([`crate::mapreduce::transport`]).
+pub(crate) fn fnv1a(bytes: &[u8]) -> u64 {
     let mut h = 0xcbf2_9ce4_8422_2325u64;
     for &b in bytes {
         h ^= b as u64;
@@ -150,6 +152,11 @@ pub struct SpillStore {
     /// admitted — there is no smaller unit to evict)
     budget: usize,
     inner: Mutex<SpillInner>,
+    /// test hook: truncate the next N raw spill reads *in memory*,
+    /// simulating transient partial reads while the file on disk stays
+    /// intact — exercises the bounded re-read retry in [`SpillStore::get`]
+    #[cfg(test)]
+    truncate_reads: AtomicU64,
 }
 
 #[derive(Debug, Default)]
@@ -188,6 +195,8 @@ impl SpillStore {
             dir,
             budget: budget_bytes.max(1),
             inner: Mutex::new(SpillInner::default()),
+            #[cfg(test)]
+            truncate_reads: AtomicU64::new(0),
         })
     }
 
@@ -289,14 +298,34 @@ impl PanelStore for SpillStore {
         // spilled: make room first (evict-before-admit), then load+verify
         self.make_room(&mut inner, bytes)?;
         let path = self.spill_path(key);
-        let raw = std::fs::read(&path).map_err(|e| {
-            if e.kind() == std::io::ErrorKind::NotFound {
-                StoreError::SpillFileMissing { key, path: path.clone() }
-            } else {
-                StoreError::Io { context: format!("read spill file {path:?}"), source: e }
+        let read_raw = || {
+            std::fs::read(&path).map_err(|e| {
+                if e.kind() == std::io::ErrorKind::NotFound {
+                    StoreError::SpillFileMissing { key, path: path.clone() }
+                } else {
+                    StoreError::Io { context: format!("read spill file {path:?}"), source: e }
+                }
+            })
+        };
+        #[allow(unused_mut)]
+        let mut raw = read_raw()?;
+        #[cfg(test)]
+        if self.truncate_reads.load(Ordering::Relaxed) > 0 {
+            self.truncate_reads.fetch_sub(1, Ordering::Relaxed);
+            raw.truncate(raw.len() / 2);
+        }
+        let panel = match decode_panel(key, &raw) {
+            Ok(panel) => panel,
+            // One bounded re-read: a *transient* partial read (concurrent
+            // flush, page-cache race) heals on the second attempt; real
+            // bit-rot fails identically and surfaces the named error.
+            Err(StoreError::ShortRead { .. }) | Err(StoreError::ChecksumMismatch { .. }) => {
+                inner.metrics.read_retries += 1;
+                let raw = read_raw()?;
+                decode_panel(key, &raw)?
             }
-        })?;
-        let panel = decode_panel(key, &raw)?;
+            Err(e) => return Err(e),
+        };
         inner.clock += 1;
         let clock = inner.clock;
         let e = inner.entries.get_mut(&key).unwrap();
@@ -556,6 +585,32 @@ mod tests {
         assert!(result.is_err());
         let dir = dir_cell.lock().unwrap().take().unwrap();
         assert!(!dir.exists(), "spill dir must be removed on error paths");
+    }
+
+    #[test]
+    fn transient_short_read_heals_with_one_retry() {
+        let panels = random_panels(31, 5, 2, 30);
+        let one = panel_bytes(&panels[0]);
+        let store = SpillStore::new(one).unwrap();
+        for (t, pl) in panels.iter().enumerate() {
+            store.put(key(0, t), pl.clone()).unwrap();
+        }
+        // inject one transient partial read: the first raw read comes back
+        // truncated, the bounded re-read sees the intact file
+        store.truncate_reads.store(1, Ordering::Relaxed);
+        let got = store.get(key(0, 0)).unwrap();
+        for (a, b) in got.m2.iter().zip(&panels[0].m2) {
+            assert_eq!(a.to_bits(), b.to_bits(), "healed panel is bit-identical");
+        }
+        assert_eq!(store.metrics().read_retries, 1, "the heal was counted");
+        // persistent on-disk truncation still fails by name after its one
+        // retry — a retry distinguishes transient from durable corruption
+        let p1 = store.spill_path(key(0, 1));
+        let bytes = std::fs::read(&p1).unwrap();
+        std::fs::write(&p1, &bytes[..bytes.len() / 2]).unwrap();
+        let err = store.get(key(0, 1)).unwrap_err();
+        assert!(err.to_string().contains("truncated"), "{err}");
+        assert_eq!(store.metrics().read_retries, 2);
     }
 
     #[test]

@@ -104,6 +104,26 @@ fn fit_with_spillable_store_budget() {
 }
 
 #[test]
+fn fit_with_worker_processes() {
+    // the spawned CLI *is* the plrmr binary, so the supervisor resolves
+    // itself as the worker executable — no env override needed
+    let (ok, stdout, stderr) = plrmr(&[
+        "fit", "--synth", "3000,6,0.4,4", "--folds", "5", "--lambdas", "10",
+        "--gram-block", "2", "--workers-proc", "2", "--curve",
+    ]);
+    assert!(ok, "{stderr}");
+    assert!(stdout.contains("lambda_opt"), "{stdout}");
+    assert!(stdout.contains("lasso model"), "{stdout}");
+    assert!(stdout.contains("recovery:"), "{stdout}");
+    // process mode without the tiled path is a named config error
+    let (ok, _, stderr) = plrmr(&[
+        "fit", "--synth", "1000,4,0.5,1", "--workers-proc", "2",
+    ]);
+    assert!(!ok);
+    assert!(stderr.contains("gram_block"), "{stderr}");
+}
+
+#[test]
 fn fit_requires_exactly_one_source() {
     let (ok, _, stderr) = plrmr(&["fit"]);
     assert!(!ok);

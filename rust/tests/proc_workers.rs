@@ -1,0 +1,201 @@
+//! Integration tests of the out-of-process worker runtime: real `plrmr
+//! worker` processes over Unix sockets, supervised with heartbeats,
+//! deadlines and retry-with-backoff — and the acceptance property that
+//! none of it ever touches a float: the process-mode fit is bit-identical
+//! to the in-process pool under every worker count, SIGKILL plan and
+//! store budget.
+//!
+//! Every test serializes on `ENV_LOCK`: the worker binary override and the
+//! stall/mute supervision hooks are process-global environment variables
+//! inherited by spawned workers, so concurrent tests would leak each
+//! other's chaos.
+
+use std::path::PathBuf;
+use std::sync::{Mutex, MutexGuard};
+
+use plrmr::config::FitConfig;
+use plrmr::coordinator::Driver;
+use plrmr::data::csv;
+use plrmr::data::synth::{generate, SynthSpec};
+use plrmr::mapreduce::FaultPlan;
+
+static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+/// Take the env lock, point the supervisor at the real CLI binary, and
+/// clear any chaos hooks a previous test set.
+fn proc_env() -> MutexGuard<'static, ()> {
+    let guard = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    std::env::set_var("PLRMR_WORKER_BIN", env!("CARGO_BIN_EXE_plrmr"));
+    std::env::remove_var("PLRMR_WORKER_STALL_MS");
+    std::env::remove_var("PLRMR_WORKER_MUTE");
+    guard
+}
+
+/// A small workload every test shares: 4 map splits, 3 folds, 3 panels.
+fn base_cfg() -> FitConfig {
+    FitConfig {
+        workers: 2,
+        folds: 3,
+        n_lambdas: 8,
+        split_rows: 800,
+        gram_block: 8,
+        seed: 7,
+        ..FitConfig::default()
+    }
+}
+
+fn spec() -> SynthSpec {
+    SynthSpec::sparse_linear(3_000, 16, 0.4, 31)
+}
+
+fn bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn proc_fit_bit_identical_across_workers_kills_and_budgets() {
+    let _env = proc_env();
+    let reference = Driver::new(base_cfg()).fit_stream(&spec()).unwrap();
+    for workers in [1usize, 4, 8] {
+        for budget in [0usize, 4096] {
+            let cfg = FitConfig {
+                proc_workers: workers,
+                store_budget_bytes: budget,
+                fault: FaultPlan::kills(0.25, 99),
+                ..base_cfg()
+            };
+            let report = Driver::new(cfg).fit_stream(&spec()).unwrap();
+            assert_eq!(
+                bits(&report.model.beta),
+                bits(&reference.model.beta),
+                "beta must be bit-identical (workers={workers}, budget={budget})"
+            );
+            assert_eq!(report.model.alpha.to_bits(), reference.model.alpha.to_bits());
+            assert_eq!(report.lambda_opt.to_bits(), reference.lambda_opt.to_bits());
+            assert_eq!(report.fold_sizes, reference.fold_sizes);
+            if budget > 0 {
+                assert!(
+                    report.resident_stat_bytes_peak <= budget,
+                    "leader-resident statistics {} exceed the {budget}-byte budget",
+                    report.resident_stat_bytes_peak
+                );
+                assert!(report.spill_writes > 0, "a {budget}-byte budget must spill");
+            }
+        }
+    }
+}
+
+#[test]
+fn sigkill_mid_job_recovers_bit_identical_with_retries() {
+    let _env = proc_env();
+    // stall first attempts so the SIGKILL lands mid-task, not pre-dispatch
+    std::env::set_var("PLRMR_WORKER_STALL_MS", "40");
+    let reference = Driver::new(base_cfg()).fit_stream(&spec()).unwrap();
+    let cfg = FitConfig {
+        proc_workers: 4,
+        fault: FaultPlan::kills(0.6, 5),
+        ..base_cfg()
+    };
+    let report = Driver::new(cfg).fit_stream(&spec()).unwrap();
+    std::env::remove_var("PLRMR_WORKER_STALL_MS");
+    let m = &report.map_metrics;
+    assert!(m.retries > 0, "a 0.6 kill rate must force retries: {m:?}");
+    assert!(m.attempts_max > 1, "some task must have needed >1 attempt");
+    assert_eq!(
+        bits(&report.model.beta),
+        bits(&reference.model.beta),
+        "SIGKILL recovery changed the model"
+    );
+    assert_eq!(report.map_metrics.records, reference.map_metrics.records);
+}
+
+#[test]
+fn deadline_expirations_are_counted_and_recovered() {
+    let _env = proc_env();
+    std::env::set_var("PLRMR_WORKER_STALL_MS", "500");
+    let reference = Driver::new(base_cfg()).fit_stream(&spec()).unwrap();
+    let cfg = FitConfig {
+        proc_workers: 2,
+        task_deadline_ms: 120,
+        heartbeat_ms: 20,
+        ..base_cfg()
+    };
+    let report = Driver::new(cfg).fit_stream(&spec()).unwrap();
+    std::env::remove_var("PLRMR_WORKER_STALL_MS");
+    let m = &report.map_metrics;
+    assert!(
+        m.deadline_expirations > 0,
+        "stalled first attempts must expire their deadline: {m:?}"
+    );
+    assert!(m.retries > 0);
+    assert_eq!(bits(&report.model.beta), bits(&reference.model.beta));
+}
+
+#[test]
+fn missed_heartbeats_are_counted_and_recovered() {
+    let _env = proc_env();
+    std::env::set_var("PLRMR_WORKER_MUTE", "1");
+    std::env::set_var("PLRMR_WORKER_STALL_MS", "300");
+    let reference = {
+        // the hooks only affect worker *processes*; the in-process
+        // reference is immune, but compute it before chaos anyway
+        Driver::new(base_cfg()).fit_stream(&spec()).unwrap()
+    };
+    let cfg = FitConfig {
+        proc_workers: 2,
+        heartbeat_ms: 30,
+        task_deadline_ms: 10_000,
+        ..base_cfg()
+    };
+    let report = Driver::new(cfg).fit_stream(&spec()).unwrap();
+    std::env::remove_var("PLRMR_WORKER_MUTE");
+    std::env::remove_var("PLRMR_WORKER_STALL_MS");
+    let m = &report.map_metrics;
+    assert!(
+        m.heartbeats_missed > 0,
+        "muted stalled workers must be declared lost by heartbeat: {m:?}"
+    );
+    assert_eq!(bits(&report.model.beta), bits(&reference.model.beta));
+}
+
+#[test]
+fn exhausted_retries_name_the_task_and_attempt_count() {
+    let _env = proc_env();
+    // a shard path that cannot exist: every attempt panics in the worker,
+    // and after max_attempts the job must fail by name — never hang
+    let cfg = FitConfig { proc_workers: 2, ..base_cfg() };
+    let missing = PathBuf::from("/nonexistent/plrmr-shard-that-is-not-there.csv");
+    let err = Driver::new(cfg).fit_csv_shards(16, &[missing]).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("mapreduce job failed"), "{msg}");
+    assert!(msg.contains("task 0 failed after"), "{msg}");
+    assert!(msg.contains("attempts"), "{msg}");
+}
+
+#[test]
+fn csv_shards_proc_fit_matches_inprocess() {
+    let _env = proc_env();
+    let dir = std::env::temp_dir().join(format!("plrmr-proc-csv-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let data = generate(&spec());
+    let shards = csv::write_shards(&data, &dir, "shard", 3).unwrap();
+    let reference = Driver::new(base_cfg()).fit_csv_shards(16, &shards).unwrap();
+    let cfg = FitConfig { proc_workers: 3, fault: FaultPlan::kills(0.3, 11), ..base_cfg() };
+    let report = Driver::new(cfg).fit_csv_shards(16, &shards).unwrap();
+    std::fs::remove_dir_all(&dir).unwrap();
+    assert_eq!(bits(&report.model.beta), bits(&reference.model.beta));
+    assert_eq!(report.map_metrics.records, reference.map_metrics.records);
+}
+
+#[test]
+fn in_memory_fit_under_proc_workers_is_a_named_error() {
+    let _env = proc_env();
+    let cfg = FitConfig { proc_workers: 2, ..base_cfg() };
+    let data = generate(&SynthSpec::sparse_linear(500, 8, 0.4, 3));
+    let err = Driver::new(cfg).fit(&data).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("proc_workers cannot fit an in-memory dataset"),
+        "{msg}"
+    );
+}
