@@ -14,17 +14,21 @@
 //! * **CV wall-clock** — the CV phase runs on the reassembled statistics,
 //!   so tiling must cost ~nothing there; the `shard+assemble` row prices
 //!   the reassembly itself against a full CV sweep.
+//! * **sparse ingest** — nonzero-aware scatter end to end through the
+//!   engine: map wall-clock, shuffle bytes and suppressed (all-zero)
+//!   panels vs the dense path, folds asserted bit-identical.
 //!
 //! Exactness is asserted inline (tiled fold statistics == untiled, bit
 //! for bit) — it is the contract, not a benchmark outcome.
 //!
 //! Run: `cargo bench --bench gram_tiled [-- --quick]`
 
-use plrmr::bench::{bench, fmt_bytes, render, BenchConfig};
+use plrmr::bench::{bench, fmt_bytes, render, render_job_phases, BenchConfig};
 use plrmr::config::FitConfig;
 use plrmr::coordinator::Driver;
 use plrmr::cv::{cross_validate, FoldStats};
 use plrmr::data::synth::{generate, SynthSpec};
+use plrmr::data::Dataset;
 use plrmr::rng::Rng;
 use plrmr::solver::path::lambda_grid;
 use plrmr::solver::{CdSettings, Penalty};
@@ -112,6 +116,69 @@ fn main() {
         ]);
     }
     println!("measured stats job at p={p} (5 folds, 4 workers):\n{}\n", m.render());
+
+    // --- sparse ingest through the engine: map wall-clock, shuffle bytes,
+    //     suppressed panels ---------------------------------------------
+    // End-to-end, so the numbers are honest: centering densifies every
+    // *touched* column, so the win at i.i.d. row density is governed by the
+    // chunk-level support union, not the per-row nonzero count (the raw
+    // kernel bound lives in benches/micro.rs).  The structured row zeroes
+    // half the columns dataset-wide — that is what turns whole panels into
+    // O(d) zero markers (`skipped` column) and shrinks the shuffle.
+    {
+        let p_sp = if quick { 64 } else { 1024 };
+        // block must divide the zeroed half-range below into whole panels
+        let b_sp = if quick { 16 } else { 64 };
+        let spcfg = FitConfig {
+            folds: 5,
+            workers: 4,
+            split_rows: 500,
+            gram_block: b_sp,
+            ..Default::default()
+        };
+        let mut jobs = Vec::new();
+        let mut run_pair = |label: &str, data: &Dataset| {
+            let (fd, md) = Driver::new(spcfg).compute_fold_stats(data).unwrap();
+            let (fs, ms) = Driver::new(spcfg.with_sparse(true)).compute_fold_stats(data).unwrap();
+            // exactness contract, not a benchmark outcome
+            for i in 0..5 {
+                assert_eq!(fd.fold(i), fs.fold(i), "sparse fold {i} drifted ({label})");
+            }
+            jobs.push((format!("dense  {label}"), md));
+            jobs.push((format!("sparse {label}"), ms));
+        };
+        for density in [1.0f64, 0.01, 0.001] {
+            let spec = SynthSpec {
+                x_density: density,
+                ..SynthSpec::sparse_linear(4000, p_sp, 0.2, 7)
+            };
+            run_pair(&format!("nz={density}"), &generate(&spec));
+        }
+        // structured sparsity: columns p/2.. identically zero → the panels
+        // covering them are suppressed end to end
+        let src = generate(&SynthSpec::sparse_linear(4000, p_sp, 0.2, 9));
+        let mut x = src.x.clone();
+        for r in 0..src.n() {
+            for j in p_sp / 2..p_sp {
+                x[r * p_sp + j] = 0.0;
+            }
+        }
+        run_pair("zero cols p/2..", &Dataset::new(p_sp, x, src.y.clone()));
+        let (_, structured_sparse) = jobs.last().unwrap();
+        assert!(
+            structured_sparse.panels_skipped > 0,
+            "structured zero columns must suppress whole panels"
+        );
+        assert!(
+            structured_sparse.shuffle_bytes < jobs[jobs.len() - 2].1.shuffle_bytes,
+            "suppressed panels must shrink the shuffle"
+        );
+        println!(
+            "sparse vs dense ingest at p={p_sp}, b={b_sp} (5 folds, 4 workers;\n\
+             folds asserted bit-identical per row pair):\n{}\n",
+            render_job_phases(&jobs)
+        );
+    }
 
     // --- CV wall-clock + the cost of shard/assemble ---------------------
     let ps_cv: &[usize] = if quick { &[64, 128] } else { &[1024, 4096] };

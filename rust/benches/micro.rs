@@ -1,12 +1,16 @@
 //! Micro-benchmarks of the hot paths (§Perf of EXPERIMENTS.md):
 //!   * `Moments::push` — the mapper inner loop (O(p²)/row)
+//!   * sparse ingest — nonzero-aware scatter vs the dense kernels, at the
+//!     raw rank-1 level (row density) and the `push_block_sparse` map
+//!     path (chunk-level support union), bit-identity asserted inline
 //!   * `Moments::merge` / `Moments::sub` — combiner/CV algebra (O(p²))
 //!   * `solve_cd` cold and warm — the per-(fold, λ) solver
 //!   * full CV sweep — the driver-side phase
 //!   * HLO chunk_stats block + cd_sweep call — the PJRT path (if artifacts
 //!     are built)
 //!
-//! Run: `cargo bench --offline` (all benches) or `cargo bench --bench micro`.
+//! Run: `cargo bench --offline` (all benches) or
+//! `cargo bench --bench micro [-- --quick]`.
 
 use plrmr::bench::{bench, render, render_throughput, BenchConfig};
 use plrmr::cv::{cross_validate, FoldStats};
@@ -14,10 +18,12 @@ use plrmr::data::synth::{generate, SynthSpec};
 use plrmr::rng::Rng;
 use plrmr::solver::path::lambda_grid;
 use plrmr::solver::{solve_cd, CdSettings, Penalty};
+use plrmr::stats::symm::SymMat;
 use plrmr::stats::{Moments, SuffStats};
 
 fn main() {
-    let cfg = BenchConfig::default();
+    let quick = std::env::args().any(|a| a == "--quick");
+    let cfg = if quick { BenchConfig::quick() } else { BenchConfig::default() };
     let mut rows_results = Vec::new();
     let mut op_results = Vec::new();
 
@@ -41,6 +47,99 @@ fn main() {
             m.count()
         });
         rows_results.push((blocked, 4096.0, "rows"));
+    }
+
+    // --- sparse ingest: nonzero-aware scatter vs dense (§Perf) ----------
+    // Two granularities on the same masked blocks:
+    //   * raw rank-1 scatter at *row* density — the kernel bound (only
+    //     idx × idx triangle pairs are touched);
+    //   * `Moments::push_block_sparse` — the map path, where centering
+    //     densifies every touched column, so the chunk-level support
+    //     union governs the win.
+    // The sparse paths are asserted bit-identical to the dense ones
+    // inline — that is the contract (±0.0-skip), not a bench outcome.
+    {
+        let ps: &[usize] = if quick { &[128, 256] } else { &[1024, 4096] };
+        let rows = 48; // one cache chunk at every d here, ≥ BLOCK_MIN_ROWS
+        let srows = 16; // raw-scatter rows (dense rank1 is O(d²) each)
+        for &p in ps {
+            let d = p + 1;
+            for density in [0.01f64, 0.1, 1.0] {
+                let mut rng = Rng::seed_from(90 + p as u64);
+                let mut block: Vec<f64> = (0..rows * d).map(|_| rng.normal()).collect();
+                if density < 1.0 {
+                    for v in block.iter_mut() {
+                        if !rng.coin(density) {
+                            *v = 0.0;
+                        }
+                    }
+                }
+
+                // contract: the sparse map path is bit-identical to dense
+                let mut dm = Moments::new(d);
+                dm.push_block(&block);
+                let mut sm = Moments::new(d);
+                sm.push_block_sparse(&block);
+                assert_eq!(dm.count(), sm.count());
+                let same_bits = |a: &[f64], b: &[f64]| {
+                    a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+                };
+                assert!(
+                    same_bits(dm.mean(), sm.mean())
+                        && same_bits(dm.m2_packed().as_slice(), sm.m2_packed().as_slice()),
+                    "sparse ingest drifted from dense (p={p}, density={density})"
+                );
+
+                let tag = format!("p={p} nz={density}");
+                let dense = bench(&format!("moments_push dense {tag} ({rows} rows)"), cfg, || {
+                    let mut m = Moments::new(d);
+                    m.push_block(&block);
+                    m.count()
+                });
+                rows_results.push((dense, rows as f64, "rows"));
+                let sparse =
+                    bench(&format!("moments_push sparse {tag} ({rows} rows)"), cfg, || {
+                        let mut m = Moments::new(d);
+                        m.push_block_sparse(&block);
+                        m.count()
+                    });
+                rows_results.push((sparse, rows as f64, "rows"));
+
+                // raw scatter kernel at row density; the verification pass
+                // below doubles as the bit-identity check
+                let idx: Vec<Vec<usize>> = block
+                    .chunks_exact(d)
+                    .take(srows)
+                    .map(|r| (0..d).filter(|&j| r[j] != 0.0).collect())
+                    .collect();
+                let mut acc = SymMat::zeros(d);
+                let mut sacc = SymMat::zeros(d);
+                for (r, ix) in block.chunks_exact(d).take(srows).zip(&idx) {
+                    acc.rank1(r, 1.0);
+                    sacc.rank1_sparse(ix, r, 1.0);
+                }
+                assert!(
+                    same_bits(acc.as_slice(), sacc.as_slice()),
+                    "sparse scatter drifted from dense (p={p}, density={density})"
+                );
+                let dscat =
+                    bench(&format!("scatter rank1 dense {tag} ({srows} rows)"), cfg, || {
+                        for r in block.chunks_exact(d).take(srows) {
+                            acc.rank1(r, 1.0);
+                        }
+                        acc.as_slice()[0]
+                    });
+                rows_results.push((dscat, srows as f64, "rows"));
+                let sscat =
+                    bench(&format!("scatter rank1_sparse {tag} ({srows} rows)"), cfg, || {
+                        for (r, ix) in block.chunks_exact(d).take(srows).zip(&idx) {
+                            sacc.rank1_sparse(ix, r, 1.0);
+                        }
+                        sacc.as_slice()[0]
+                    });
+                rows_results.push((sscat, srows as f64, "rows"));
+            }
+        }
     }
 
     // --- merge / sub at p=64 ---

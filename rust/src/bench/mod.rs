@@ -126,8 +126,8 @@ pub fn fmt_bytes(b: usize) -> String {
 pub fn render_job_phases(results: &[(String, JobMetrics)]) -> String {
     let mut t = Table::new(vec![
         "run", "map", "shuffle", "reduce", "total", "merge frac",
-        "payloads", "bytes", "max key", "pre-combined", "leader merges",
-        "retries", "max attempts", "deadlines", "hb missed",
+        "payloads", "bytes", "max key", "skipped", "pre-combined",
+        "leader merges", "retries", "max attempts", "deadlines", "hb missed",
     ]);
     for (name, m) in results {
         t.row(vec![
@@ -140,6 +140,7 @@ pub fn render_job_phases(results: &[(String, JobMetrics)]) -> String {
             format!("{}", m.shuffle_payloads),
             fmt_bytes(m.shuffle_bytes),
             fmt_bytes(m.max_payload_bytes),
+            format!("{}", m.panels_skipped),
             format!("{}", m.combined_nodes),
             format!("{}", m.reduce_merges),
             format!("{}", m.retries),
@@ -198,6 +199,7 @@ mod tests {
             shuffle_payloads: 4,
             combined_nodes: 2,
             reduce_merges: 3,
+            panels_skipped: 7,
             ..Default::default()
         };
         let s = render_job_phases(&[("w=4".to_string(), m)]);
@@ -207,6 +209,8 @@ mod tests {
         assert!(s.contains("retries"));
         assert!(s.contains("max attempts"));
         assert!(s.contains("hb missed"));
+        assert!(s.contains("skipped"), "sparse suppression column present");
+        assert!(s.contains("| 7"), "panels_skipped rendered");
     }
 
     #[test]

@@ -51,6 +51,13 @@ pub struct FitConfig {
     /// from the statistics — the paper's §4 envelope for p beyond the
     /// Gram-in-memory ceiling.  0 ⇒ never screen automatically.
     pub screen_auto: usize,
+    /// sparse-row ingest: route rows through the nonzero-aware scatter
+    /// kernels (`rank1_sparse`/`rank4_sparse`) — map arithmetic follows
+    /// the touched-column union instead of O(d²) per chunk, and on the
+    /// tiled path all-zero panels ship as O(d) markers
+    /// (`JobMetrics::panels_skipped`).  Bit-identical output to the dense
+    /// path on the same data at any setting of the other knobs.
+    pub sparse: bool,
     /// out-of-process worker runtime: number of worker *processes* to
     /// supervise (0 ⇒ the default in-process thread pool).  Requires the
     /// tiled statistics path (`gram_block > 0`) — task payloads travel as
@@ -86,6 +93,7 @@ impl Default for FitConfig {
             gram_block: 0,
             store_budget_bytes: 0,
             screen_auto: 4096,
+            sparse: false,
             proc_workers: 0,
             heartbeat_ms: 50,
             task_deadline_ms: 30_000,
@@ -145,6 +153,13 @@ impl FitConfig {
     /// requires `gram_block > 0`).
     pub fn with_proc_workers(mut self, n: usize) -> Self {
         self.proc_workers = n;
+        self
+    }
+
+    /// Sparse-row ingest (nonzero-aware scatter kernels + empty-panel
+    /// shuffle suppression on the tiled path).
+    pub fn with_sparse(mut self, on: bool) -> Self {
+        self.sparse = on;
         self
     }
 
@@ -231,6 +246,7 @@ impl FitConfig {
                 "gram_block" => cfg.gram_block = val.parse()?,
                 "store_budget_bytes" => cfg.store_budget_bytes = val.parse()?,
                 "screen_auto" => cfg.screen_auto = val.parse()?,
+                "sparse" => cfg.sparse = val.parse()?,
                 "proc_workers" => cfg.proc_workers = val.parse()?,
                 "heartbeat_ms" => cfg.heartbeat_ms = val.parse()?,
                 "task_deadline_ms" => cfg.task_deadline_ms = val.parse()?,
@@ -261,9 +277,12 @@ mod tests {
             .with_folds(5)
             .with_workers(2)
             .with_lambdas(10)
-            .with_seed(7);
+            .with_seed(7)
+            .with_sparse(true);
         assert!(c.penalty.is_ridge());
         assert_eq!((c.folds, c.workers, c.n_lambdas, c.seed), (5, 2, 10, 7));
+        assert!(c.sparse);
+        assert!(!FitConfig::default().sparse, "sparse ingest is opt-in");
     }
 
     #[test]
@@ -278,7 +297,7 @@ mod tests {
     #[test]
     fn kv_parsing() {
         let cfg = FitConfig::from_kv_pairs(
-            "# a comment\npenalty = elastic_net:0.5\nfolds=5\nworkers = 3\nseed=42\ngram_block=16\nstore_budget_bytes=4096\nscreen_auto=0\n",
+            "# a comment\npenalty = elastic_net:0.5\nfolds=5\nworkers = 3\nseed=42\ngram_block=16\nstore_budget_bytes=4096\nscreen_auto=0\nsparse=true\n",
         )
         .unwrap();
         assert_eq!(cfg.penalty.alpha, 0.5);
@@ -288,6 +307,7 @@ mod tests {
         assert_eq!(cfg.gram_block, 16);
         assert_eq!(cfg.store_budget_bytes, 4096);
         assert_eq!(cfg.screen_auto, 0, "screen-auto can be disabled");
+        assert!(cfg.sparse, "sparse parses from kv");
         assert_eq!(FitConfig::default().gram_block, 0, "tiling is opt-in");
         assert_eq!(FitConfig::default().store_budget_bytes, 0, "spilling is opt-in");
         assert!(FitConfig::default().screen_auto > 0, "screening is the default at large p");

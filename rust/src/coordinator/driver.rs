@@ -165,6 +165,10 @@ pub(crate) struct FoldAccumulator<'a, S: Scatter> {
     bufx: Vec<Vec<f64>>,
     bufy: Vec<Vec<f64>>,
     stats: Vec<SuffStats<S>>,
+    /// route flushes through the nonzero-aware scatter kernels
+    /// ([`SuffStats::push_rows_sparse`]) — bit-identical to the dense
+    /// flush, arithmetic proportional to the touched-column union
+    sparse: bool,
 }
 
 impl<'a, S: Scatter> FoldAccumulator<'a, S> {
@@ -176,7 +180,14 @@ impl<'a, S: Scatter> FoldAccumulator<'a, S> {
             bufx: (0..k).map(|_| Vec::with_capacity(FOLD_FLUSH_ROWS * p)).collect(),
             bufy: (0..k).map(|_| Vec::with_capacity(FOLD_FLUSH_ROWS)).collect(),
             stats: (0..k).map(|_| proto.like_empty()).collect(),
+            sparse: false,
         }
+    }
+
+    /// Select the sparse flush path (builder-style; defaults dense).
+    pub(crate) fn with_sparse(mut self, on: bool) -> Self {
+        self.sparse = on;
+        self
     }
 
     #[inline]
@@ -191,7 +202,11 @@ impl<'a, S: Scatter> FoldAccumulator<'a, S> {
 
     fn flush(&mut self, fold: usize) {
         if !self.bufy[fold].is_empty() {
-            self.stats[fold].push_rows(&self.bufx[fold], &self.bufy[fold]);
+            if self.sparse {
+                self.stats[fold].push_rows_sparse(&self.bufx[fold], &self.bufy[fold]);
+            } else {
+                self.stats[fold].push_rows(&self.bufx[fold], &self.bufy[fold]);
+            }
             self.bufx[fold].clear();
             self.bufy[fold].clear();
         }
@@ -356,6 +371,7 @@ impl Driver {
         feed: impl Fn(&TaskCtx, &I, &mut dyn RowSink) + Sync,
     ) -> Result<(StatsJob, JobMetrics)> {
         let k = self.cfg.folds;
+        let sparse = self.cfg.sparse;
         let assigner = FoldAssigner::new(k, self.cfg.seed);
         if self.cfg.gram_block == 0 {
             let proto = SuffStats::new(p);
@@ -363,7 +379,8 @@ impl Driver {
                 &self.cfg.engine(),
                 splits,
                 |ctx: &TaskCtx, split, em: &mut Emitter<usize, SuffStats>| {
-                    let mut acc = FoldAccumulator::new(k, p, &assigner, &proto);
+                    let mut acc =
+                        FoldAccumulator::new(k, p, &assigner, &proto).with_sparse(sparse);
                     feed(ctx, split, &mut acc);
                     for (fold, stats) in acc.finish() {
                         let rows = stats.count();
@@ -386,11 +403,21 @@ impl Driver {
                 &self.cfg.engine(),
                 splits,
                 |ctx: &TaskCtx, split, em: &mut Emitter<(usize, usize), StatPanel>| {
-                    let mut acc = FoldAccumulator::new(k, p, &assigner, &proto);
+                    let mut acc =
+                        FoldAccumulator::new(k, p, &assigner, &proto).with_sparse(sparse);
                     feed(ctx, split, &mut acc);
                     for (fold, stats) in acc.finish() {
                         let rows = stats.count();
-                        let mut panels = stats.into_panels().into_iter();
+                        let mut panels = stats.into_panels();
+                        // sparse ingest: all-+0.0 panels ship as O(d)
+                        // zero markers — the shuffle never carries a
+                        // triangle the data never touched
+                        if sparse {
+                            for panel in &mut panels {
+                                panel.compress_zeros();
+                            }
+                        }
+                        let mut panels = panels.into_iter();
                         // the head panel carries the fold's record
                         // accounting; the rest ship unaccounted (same rows,
                         // more keys)
@@ -414,6 +441,7 @@ impl Driver {
             metrics.spill_bytes = sm.spill_bytes;
             metrics.spill_reads = sm.spill_reads;
             metrics.spill_writes = sm.spill_writes;
+            metrics.panels_skipped = fold_store.zero_panels();
             Ok((StatsJob::Stored(fold_store), metrics))
         }
     }
@@ -1177,6 +1205,83 @@ mod tests {
                 assert!((model.beta[j] - truth[j]).abs() < 0.3, "beta[{j}]");
             }
         }
+    }
+
+    #[test]
+    fn sparse_ingest_is_bit_identical_to_dense_across_the_matrix() {
+        // the tentpole invariant at driver level: `FitConfig::sparse` only
+        // changes the *order of work* (touched-column unions, marker
+        // panels), never the bits — across backings, worker counts,
+        // chaotic faults and store budgets.
+        let spec = SynthSpec {
+            x_density: 0.15,
+            ..SynthSpec::sparse_linear(4000, 6, 0.4, 13)
+        };
+        let data = generate(&spec);
+        let d = 6 + 1;
+        let layout = crate::stats::tiles::TileLayout::new(d, 3);
+        let one_panel = 8 * (2 + d + layout.max_panel_len());
+        let base = small_cfg();
+        for block in [0usize, 3] {
+            for workers in [1usize, 4, 8] {
+                for (fault, budget) in [
+                    (FaultPlan::none(), 0usize),
+                    (FaultPlan::chaotic(0.35, 5), 0),
+                    (FaultPlan::none(), one_panel),
+                ] {
+                    if budget > 0 && block == 0 {
+                        continue; // budgets require the tiled path
+                    }
+                    let cfg = FitConfig {
+                        gram_block: block,
+                        workers,
+                        fault,
+                        store_budget_bytes: budget,
+                        ..base
+                    };
+                    let dense = Driver::new(cfg).fit(&data).unwrap();
+                    let sparse = Driver::new(cfg.with_sparse(true)).fit(&data).unwrap();
+                    let tag = format!("b={block} w={workers} budget={budget}");
+                    assert_eq!(dense.lambda_opt, sparse.lambda_opt, "{tag}");
+                    assert_eq!(dense.model.beta, sparse.model.beta, "{tag}");
+                    assert_eq!(dense.cv.fold_err, sparse.cv.fold_err, "{tag}");
+                    assert_eq!(dense.model.alpha, sparse.model.alpha, "{tag}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_ingest_suppresses_empty_panels_and_shrinks_the_shuffle() {
+        // structured sparsity: columns 3..6 identically zero → the panel
+        // covering exactly those triangle rows is all-+0.0 in every task,
+        // ships as an O(d) zero marker, survives the merge tree as a
+        // marker (zero columns have zero means in every chunk) and is
+        // counted once per fold at the store's retire boundary.
+        let src = generate(&SynthSpec::sparse_linear(4000, 9, 0.4, 17));
+        let mut x = src.x.clone();
+        for r in 0..src.n() {
+            for j in 3..6 {
+                x[r * 9 + j] = 0.0;
+            }
+        }
+        let data = Dataset::new(9, x, src.y.clone());
+        let base = FitConfig { gram_block: 3, ..small_cfg() };
+        let dense = Driver::new(base).fit(&data).unwrap();
+        let sparse = Driver::new(base.with_sparse(true)).fit(&data).unwrap();
+        assert_eq!(dense.model.beta, sparse.model.beta);
+        assert_eq!(dense.lambda_opt, sparse.lambda_opt);
+        assert_eq!(dense.map_metrics.panels_skipped, 0, "dense path never compresses");
+        // d = 10, block = 3 → panel 1 spans triangle rows 3..6 — exactly
+        // the zero columns — so each of the 5 folds retires one marker
+        assert_eq!(sparse.map_metrics.panels_skipped, 5);
+        assert!(
+            sparse.map_metrics.shuffle_bytes < dense.map_metrics.shuffle_bytes,
+            "markers must shrink the shuffle: {} !< {}",
+            sparse.map_metrics.shuffle_bytes,
+            dense.map_metrics.shuffle_bytes
+        );
+        assert_eq!(sparse.map_metrics.records, 4000, "accounting intact under markers");
     }
 
     #[test]

@@ -88,6 +88,10 @@ fn encode_synth_setup(cfg: &FitConfig, spec: &SynthSpec) -> Vec<u8> {
     put_u64(&mut b, u64::from(spec.t_df.is_some()));
     put_f64(&mut b, spec.t_df.unwrap_or(0.0));
     put_u64(&mut b, spec.seed);
+    // appended after the long-stable prefix so older decode expectations
+    // (and the prefix pin in tests) stay byte-for-byte
+    put_f64(&mut b, spec.x_density);
+    put_u64(&mut b, u64::from(cfg.sparse));
     b
 }
 
@@ -98,6 +102,9 @@ fn encode_csv_setup(cfg: &FitConfig, p: usize, shards: &[PathBuf]) -> Result<Vec
     put_u64(&mut b, cfg.seed);
     put_u64(&mut b, cfg.gram_block as u64);
     put_u64(&mut b, p as u64);
+    // before the variable-length shard list: the path decoder stops at its
+    // own task index and never reads past it
+    put_u64(&mut b, u64::from(cfg.sparse));
     put_u64(&mut b, shards.len() as u64);
     for path in shards {
         let s = path
@@ -151,11 +158,21 @@ fn encode_cv_setup(cfg: &FitConfig, store: &FoldStore, lambdas: &[f64]) -> Resul
 /// `emit_aggregated`/`emit_unaccounted` split.
 fn encode_stats_output(
     entries: Vec<(usize, SuffStats<crate::stats::TiledSymMat>)>,
+    sparse: bool,
 ) -> Vec<u8> {
     let mut flat: Vec<(u64, u64, u64, Vec<u8>)> = Vec::new();
     for (fold, stats) in entries {
         let rows = stats.count();
-        let mut panels = stats.into_panels().into_iter();
+        let mut panels = stats.into_panels();
+        // sparse ingest: all-+0.0 panels ship over the socket as O(d) zero
+        // markers — the codec records m2 length explicitly, so markers
+        // round-trip and merge exactly like in-process shuffle payloads
+        if sparse {
+            for panel in &mut panels {
+                panel.compress_zeros();
+            }
+        }
+        let mut panels = panels.into_iter();
         if let Some(head) = panels.next() {
             flat.push((fold as u64, head.panel as u64, rows, encode_panel(&head)));
         }
@@ -268,14 +285,16 @@ fn worker_stats_synth(setup: &[u8], pos: &mut usize, task: u64) -> Result<Vec<u8
             present.then_some(v)
         },
         seed: get_u64(setup, pos)?,
+        x_density: get_f64(setup, pos)?,
     };
+    let sparse = get_u64(setup, pos)? != 0;
     let (sub, start) = synth_split(&spec, split_rows, task as usize)
         .ok_or_else(|| anyhow!("task {task} is beyond the split range of n = {}", spec.n))?;
     let assigner = FoldAssigner::new(k, fold_seed);
     let proto = SuffStats::new_tiled(spec.p, block);
-    let mut acc = FoldAccumulator::new(k, spec.p, &assigner, &proto);
+    let mut acc = FoldAccumulator::new(k, spec.p, &assigner, &proto).with_sparse(sparse);
     feed_synth_split(&spec, &sub, start, &mut acc);
-    Ok(encode_stats_output(acc.finish()))
+    Ok(encode_stats_output(acc.finish(), sparse))
 }
 
 fn worker_stats_csv(setup: &[u8], pos: &mut usize, task: u64) -> Result<Vec<u8>> {
@@ -283,6 +302,7 @@ fn worker_stats_csv(setup: &[u8], pos: &mut usize, task: u64) -> Result<Vec<u8>>
     let fold_seed = get_u64(setup, pos)?;
     let block = get_u64(setup, pos)? as usize;
     let p = get_u64(setup, pos)? as usize;
+    let sparse = get_u64(setup, pos)? != 0;
     let n_shards = get_u64(setup, pos)? as usize;
     ensure!(
         (task as usize) < n_shards,
@@ -299,9 +319,9 @@ fn worker_stats_csv(setup: &[u8], pos: &mut usize, task: u64) -> Result<Vec<u8>>
     let path = path.expect("loop reaches the task index");
     let assigner = FoldAssigner::new(k, fold_seed);
     let proto = SuffStats::new_tiled(p, block);
-    let mut acc = FoldAccumulator::new(k, p, &assigner, &proto);
+    let mut acc = FoldAccumulator::new(k, p, &assigner, &proto).with_sparse(sparse);
     feed_csv_shard(p, task as usize, &path, &mut acc);
-    Ok(encode_stats_output(acc.finish()))
+    Ok(encode_stats_output(acc.finish(), sparse))
 }
 
 fn worker_cv(setup: &[u8], pos: &mut usize, task: u64) -> Result<Vec<u8>> {
@@ -435,6 +455,7 @@ fn run_stats_proc(
     metrics.spill_bytes = sm.spill_bytes;
     metrics.spill_reads = sm.spill_reads;
     metrics.spill_writes = sm.spill_writes;
+    metrics.panels_skipped = store.zero_panels();
     Ok((store, metrics))
 }
 
@@ -503,7 +524,7 @@ mod tests {
     fn stats_output_round_trips_bit_exact() {
         let s0 = tiled_stats(5, 2, 40, 1);
         let s1 = tiled_stats(5, 2, 31, 2);
-        let bytes = encode_stats_output(vec![(0, s0.clone()), (2, s1.clone())]);
+        let bytes = encode_stats_output(vec![(0, s0.clone()), (2, s1.clone())], false);
         let (rows, map) = decode_stats_output(&bytes).unwrap();
         assert_eq!(rows, 71, "head panels carry the record accounting");
         let layout = TileLayout::new(6, 2);
@@ -521,6 +542,52 @@ mod tests {
         }
         // truncation is a named error, never a panic
         assert!(decode_stats_output(&bytes[..bytes.len() / 2]).is_err());
+    }
+
+    #[test]
+    fn sparse_stats_output_ships_zero_markers_over_the_socket() {
+        // rows confined to the first 2 predictors of p = 5, block = 2:
+        // later panels are all-+0.0 and must travel as O(d) markers
+        let mut s = SuffStats::new_tiled(5, 2);
+        let mut rng = crate::rng::Rng::seed_from(3);
+        for _ in 0..40 {
+            let mut x = vec![0.0; 5];
+            x[0] = rng.normal();
+            x[1] = rng.normal();
+            let y = x[0] - x[1] + rng.normal();
+            s.push(&x, y);
+        }
+        let dense_bytes = encode_stats_output(vec![(1, s.clone())], false);
+        let sparse_bytes = encode_stats_output(vec![(1, s.clone())], true);
+        assert!(
+            sparse_bytes.len() < dense_bytes.len(),
+            "markers must shrink the socket payload: {} !< {}",
+            sparse_bytes.len(),
+            dense_bytes.len()
+        );
+        let (rows, map) = decode_stats_output(&sparse_bytes).unwrap();
+        assert_eq!(rows, 40);
+        let src_panels = s.clone().into_panels();
+        let mut markers = 0;
+        for ((_, panel), pl) in &map {
+            let src = &src_panels[*panel];
+            if pl.is_zero_marker() {
+                markers += 1;
+                assert!(src.m2.iter().all(|v| v.to_bits() == 0), "panel {panel}");
+            } else {
+                assert_eq!(
+                    pl.m2.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    src.m2.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                );
+            }
+            assert_eq!(pl.n, src.n);
+            assert_eq!(
+                pl.mean.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                src.mean.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "markers keep the full mean header"
+            );
+        }
+        assert!(markers > 0, "the workload must actually produce markers");
     }
 
     #[test]

@@ -1,16 +1,64 @@
 //! CSV shard I/O — the on-disk interchange for the CLI (`plrmr fit --csv`).
 //!
-//! Format: optional header, then one row per line, comma-separated, the
-//! *last* column is the response y.  Writers shard a dataset into N files
-//! (what a distributed filesystem would hand each mapper).
+//! Dense format: optional header, then one row per line, comma-separated,
+//! the *last* column is the response y.  Sparse format: a first line
+//! `sparse p=<P>` declaring the width, then one `y index:value ...` line
+//! per row carrying only the nonzero entries (strictly ascending indices —
+//! violations surface as the named [`crate::data::sparse::SparseRowError`]s
+//! with file:line context).  Readers auto-detect the format from line 1
+//! and hand back identical dense row-blocks either way, so everything
+//! downstream of the reader is format-agnostic.  Writers shard a dataset
+//! into N files (what a distributed filesystem would hand each mapper).
 
 use std::fs::File;
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::data::dataset::Dataset;
+use crate::data::sparse::validate_indices;
+
+/// Recognize a sparse-format declaration (`sparse p=<P>`) on line 1.
+/// Returns None for anything else (dense header or data).
+fn sparse_header_width(first_line: &str) -> Option<Result<usize>> {
+    let rest = first_line.trim().strip_prefix("sparse")?;
+    if !rest.starts_with(char::is_whitespace) {
+        // e.g. a dense header whose first column is named `sparseness`
+        return None;
+    }
+    Some(
+        rest.trim()
+            .strip_prefix("p=")
+            .ok_or_else(|| anyhow!("sparse header must be `sparse p=<width>`"))
+            .and_then(|w| {
+                w.trim()
+                    .parse::<usize>()
+                    .map_err(|e| anyhow!("bad sparse width {w:?}: {e}"))
+            }),
+    )
+}
+
+/// Parse one `y index:value ...` line against width `p`.
+fn parse_sparse_line(line: &str, p: usize) -> Result<(Vec<usize>, Vec<f64>, f64)> {
+    let mut toks = line.split_whitespace();
+    let y: f64 = toks
+        .next()
+        .context("empty sparse line")?
+        .parse()
+        .map_err(|e| anyhow!("bad y: {e}"))?;
+    let mut idx = Vec::new();
+    let mut vals = Vec::new();
+    for tok in toks {
+        let (i, v) = tok
+            .split_once(':')
+            .with_context(|| format!("expected index:value, got {tok:?}"))?;
+        idx.push(i.parse::<usize>().map_err(|e| anyhow!("bad index {i:?}: {e}"))?);
+        vals.push(v.parse::<f64>().map_err(|e| anyhow!("bad value {v:?}: {e}"))?);
+    }
+    validate_indices(&idx, p).map_err(|e| anyhow!("{e}"))?;
+    Ok((idx, vals, y))
+}
 
 /// Write `data` as a single CSV file with an `x0..x{p-1},y` header.
 pub fn write_csv(data: &Dataset, path: &Path) -> Result<()> {
@@ -44,6 +92,43 @@ pub fn write_shards(data: &Dataset, dir: &Path, stem: &str, k: usize) -> Result<
     Ok(paths)
 }
 
+/// Write `data` in the sparse format: a `sparse p=<P>` header, then one
+/// `y index:value ...` line per row carrying only the nonzero entries.
+/// (A −0.0 entry is dropped like +0.0 and reads back as +0.0.)
+pub fn write_sparse_csv(data: &Dataset, path: &Path) -> Result<()> {
+    let f = File::create(path).with_context(|| format!("create {path:?}"))?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "sparse p={}", data.p)?;
+    for i in 0..data.n() {
+        write!(w, "{}", data.y[i])?;
+        for (j, &v) in data.row(i).iter().enumerate() {
+            if v != 0.0 {
+                write!(w, " {j}:{v}")?;
+            }
+        }
+        writeln!(w)?;
+    }
+    Ok(())
+}
+
+/// Shard `data` into `k` sparse-format files `<stem>.shard-<i>.csv`.
+pub fn write_sparse_shards(
+    data: &Dataset,
+    dir: &Path,
+    stem: &str,
+    k: usize,
+) -> Result<Vec<PathBuf>> {
+    std::fs::create_dir_all(dir)?;
+    let mut paths = Vec::with_capacity(k);
+    for (i, shard) in data.shards(k).iter().enumerate() {
+        let path = dir.join(format!("{stem}.shard-{i}.csv"));
+        let sub = Dataset::new(shard.p, shard.x.to_vec(), shard.y.to_vec());
+        write_sparse_csv(&sub, &path)?;
+        paths.push(path);
+    }
+    Ok(paths)
+}
+
 /// Read a CSV produced by [`write_csv`] (header optional: a first line that
 /// fails to parse as numbers is treated as a header).
 pub fn read_csv(path: &Path) -> Result<Dataset> {
@@ -53,11 +138,31 @@ pub fn read_csv(path: &Path) -> Result<Dataset> {
     let mut y = Vec::new();
     let mut p: Option<usize> = None;
     let mut lineno = 0usize;
+    let mut sparse_p: Option<usize> = None;
     while let Some(line) = lines.next() {
         let line = line?;
         lineno += 1;
         let trimmed = line.trim();
         if trimmed.is_empty() {
+            continue;
+        }
+        if lineno == 1 {
+            if let Some(width) = sparse_header_width(trimmed) {
+                let width = width.with_context(|| format!("{path:?}:1"))?;
+                sparse_p = Some(width);
+                p = Some(width);
+                continue;
+            }
+        }
+        if let Some(width) = sparse_p {
+            let (idx, vals, yv) =
+                parse_sparse_line(trimmed, width).with_context(|| format!("{path:?}:{lineno}"))?;
+            let base = x.len();
+            x.resize(base + width, 0.0);
+            for (&j, &v) in idx.iter().zip(&vals) {
+                x[base + j] = v;
+            }
+            y.push(yv);
             continue;
         }
         let fields: Vec<&str> = trimmed.split(',').collect();
@@ -105,11 +210,39 @@ pub fn stream_csv(
     let mut ybuf: Vec<f64> = Vec::new();
     let mut total = 0usize;
     let mut lineno = 0usize;
+    let mut sparse_p: Option<usize> = None;
     for line in reader.lines() {
         let line = line?;
         lineno += 1;
         let trimmed = line.trim();
         if trimmed.is_empty() {
+            continue;
+        }
+        if lineno == 1 {
+            if let Some(width) = sparse_header_width(trimmed) {
+                let width = width.with_context(|| format!("{path:?}:1"))?;
+                sparse_p = Some(width);
+                p = Some(width);
+                continue;
+            }
+        }
+        if let Some(width) = sparse_p {
+            let (idx, vals, yv) =
+                parse_sparse_line(trimmed, width).with_context(|| format!("{path:?}:{lineno}"))?;
+            // densify into the block buffer: downstream consumers see the
+            // same row-major blocks the dense reader produces
+            let base = xbuf.len();
+            xbuf.resize(base + width, 0.0);
+            for (&j, &v) in idx.iter().zip(&vals) {
+                xbuf[base + j] = v;
+            }
+            ybuf.push(yv);
+            total += 1;
+            if ybuf.len() == block_rows {
+                f(&xbuf, &ybuf);
+                xbuf.clear();
+                ybuf.clear();
+            }
             continue;
         }
         let fields: Vec<&str> = trimmed.split(',').collect();
@@ -157,6 +290,11 @@ pub fn peek_width(path: &Path) -> Result<usize> {
         let trimmed = line.trim();
         if trimmed.is_empty() {
             continue;
+        }
+        if lineno == 0 {
+            if let Some(width) = sparse_header_width(trimmed) {
+                return width.with_context(|| format!("{path:?}:1"));
+            }
         }
         let fields: Vec<&str> = trimmed.split(',').collect();
         let ok = fields.iter().all(|s| s.trim().parse::<f64>().is_ok());
@@ -292,6 +430,103 @@ mod tests {
         std::fs::write(&empty, "").unwrap();
         assert!(stream_csv(&empty, 8, |_, _| {}).is_err());
         assert!(peek_width(&empty).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn sparse_round_trip_bitwise() {
+        // sparse write → auto-detected read reproduces the dense values
+        // exactly (f64 Display round-trips shortest-exact)
+        let mut d = generate(&SynthSpec::sparse_linear(120, 6, 0.5, 14));
+        // zero most entries so the file is genuinely sparse, keep one
+        // all-zero row as the degenerate case
+        for (i, v) in d.x.iter_mut().enumerate() {
+            if i % 3 != 0 {
+                *v = 0.0;
+            }
+        }
+        for v in &mut d.x[..6] {
+            *v = 0.0;
+        }
+        let dir = tmpdir("sparse-rt");
+        let path = dir.join("data.csv");
+        write_sparse_csv(&d, &path).unwrap();
+        assert_eq!(peek_width(&path).unwrap(), 6);
+        let back = read_csv(&path).unwrap();
+        assert_eq!(back.p, 6);
+        assert_eq!(back.n(), 120);
+        for i in 0..d.x.len() {
+            assert_eq!(back.x[i].to_bits(), d.x[i].to_bits(), "x[{i}]");
+        }
+        for i in 0..d.y.len() {
+            assert_eq!(back.y[i].to_bits(), d.y[i].to_bits(), "y[{i}]");
+        }
+        // streaming read produces the same blocks
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        let (p, rows) = stream_csv(&path, 32, |xb, yb| {
+            xs.extend_from_slice(xb);
+            ys.extend_from_slice(yb);
+        })
+        .unwrap();
+        assert_eq!((p, rows), (6, 120));
+        assert_eq!(xs, d.x);
+        assert_eq!(ys, d.y);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn sparse_shards_concatenate() {
+        let mut d = generate(&SynthSpec::sparse_linear(57, 4, 0.5, 3));
+        for (i, v) in d.x.iter_mut().enumerate() {
+            if i % 2 == 0 {
+                *v = 0.0;
+            }
+        }
+        let dir = tmpdir("sparse-shards");
+        let paths = write_sparse_shards(&d, &dir, "w", 3).unwrap();
+        assert_eq!(paths.len(), 3);
+        let back = read_shards(&paths).unwrap();
+        assert_eq!(back.n(), 57);
+        assert_eq!(back.y, d.y);
+        assert_eq!(back.x, d.x);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn sparse_format_errors_are_named_with_location() {
+        let dir = tmpdir("sparse-bad");
+        let cases = [
+            ("dup", "sparse p=4\n1.0 2:1.0 2:2.0\n", "duplicate"),
+            ("unsorted", "sparse p=4\n1.0 3:1.0 1:2.0\n", "unsorted"),
+            ("range", "sparse p=4\n1.0 4:1.0\n", "out of range"),
+            ("pair", "sparse p=4\n1.0 3=1.0\n", "index:value"),
+            ("header", "sparse q=4\n1.0 1:1.0\n", "sparse p=<width>"),
+        ];
+        for (tag, body, needle) in cases {
+            let path = dir.join(format!("{tag}.csv"));
+            std::fs::write(&path, body).unwrap();
+            let err = format!("{:?}", read_csv(&path).unwrap_err());
+            assert!(err.contains(needle), "{tag}: {err}");
+            let err = format!("{:?}", stream_csv(&path, 8, |_, _| {}).unwrap_err());
+            assert!(err.contains(needle), "stream {tag}: {err}");
+        }
+        // data-line errors carry file:line context
+        let path = dir.join("dup.csv");
+        let err = format!("{:?}", read_csv(&path).unwrap_err());
+        assert!(err.contains(":2"), "{err}");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn sparse_all_zero_rows_parse() {
+        let dir = tmpdir("sparse-zero");
+        let path = dir.join("z.csv");
+        std::fs::write(&path, "sparse p=3\n1.5\n-2.5 1:4.0\n").unwrap();
+        let d = read_csv(&path).unwrap();
+        assert_eq!(d.p, 3);
+        assert_eq!(d.y, vec![1.5, -2.5]);
+        assert_eq!(d.x, vec![0.0, 0.0, 0.0, 0.0, 4.0, 0.0]);
         std::fs::remove_dir_all(dir).ok();
     }
 

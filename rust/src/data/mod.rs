@@ -11,6 +11,8 @@
 
 pub mod csv;
 pub mod dataset;
+pub mod sparse;
 pub mod synth;
 
 pub use dataset::{DataBlock, Dataset};
+pub use sparse::{CsrBlock, SparseRow, SparseRowError};

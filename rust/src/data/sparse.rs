@@ -1,0 +1,246 @@
+//! Sparse-row (CSR) representation for the ingest path.
+//!
+//! The workloads the ROADMAP targets (one-hot users/items, n-gram
+//! features) are overwhelmingly sparse, and the sparse scatter kernels
+//! ([`crate::stats::Scatter::rank1_sparse`]) only pay for the columns a
+//! chunk actually touches.  This module is the validated front door: a
+//! [`SparseRow`] is `y` plus strictly-ascending `(index, value)` pairs,
+//! a [`CsrBlock`] is the standard indptr/indices/values block form, and
+//! every malformed input (unsorted, duplicate, out-of-range index) maps
+//! to a named [`SparseRowError`] — never a silent mis-scatter.
+
+use std::fmt;
+
+/// Named validation failures for sparse row input.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SparseRowError {
+    /// Indices must be strictly ascending; `next` followed `prev`.
+    UnsortedIndex { prev: usize, next: usize },
+    /// The same column appeared twice in one row.
+    DuplicateIndex { index: usize },
+    /// A column index at or beyond the declared width `p`.
+    IndexOutOfRange { index: usize, p: usize },
+}
+
+impl fmt::Display for SparseRowError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SparseRowError::UnsortedIndex { prev, next } => {
+                write!(f, "unsorted sparse index: {next} after {prev}")
+            }
+            SparseRowError::DuplicateIndex { index } => {
+                write!(f, "duplicate sparse index {index}")
+            }
+            SparseRowError::IndexOutOfRange { index, p } => {
+                write!(f, "sparse index {index} out of range for p={p}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SparseRowError {}
+
+/// Check one row's index list against the contract the scatter kernels
+/// assume: strictly ascending, unique, all below `p`.
+pub fn validate_indices(idx: &[usize], p: usize) -> Result<(), SparseRowError> {
+    let mut prev: Option<usize> = None;
+    for &j in idx {
+        if j >= p {
+            return Err(SparseRowError::IndexOutOfRange { index: j, p });
+        }
+        if let Some(q) = prev {
+            if j == q {
+                return Err(SparseRowError::DuplicateIndex { index: j });
+            }
+            if j < q {
+                return Err(SparseRowError::UnsortedIndex { prev: q, next: j });
+            }
+        }
+        prev = Some(j);
+    }
+    Ok(())
+}
+
+/// One validated sparse observation: response `y` plus the row's nonzero
+/// `(index, value)` pairs in strictly ascending index order.  An empty
+/// index list is a legal all-zero row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SparseRow {
+    pub y: f64,
+    pub idx: Vec<usize>,
+    pub vals: Vec<f64>,
+}
+
+impl SparseRow {
+    /// Build a row, validating the indices against width `p`.
+    pub fn new(y: f64, idx: Vec<usize>, vals: Vec<f64>, p: usize) -> Result<Self, SparseRowError> {
+        assert_eq!(idx.len(), vals.len(), "index/value length mismatch");
+        validate_indices(&idx, p)?;
+        Ok(SparseRow { y, idx, vals })
+    }
+
+    /// Number of stored nonzeros.
+    pub fn nnz(&self) -> usize {
+        self.idx.len()
+    }
+
+    /// Scatter into a dense row buffer (`out.len()` = p), zeroing the rest.
+    pub fn densify_into(&self, out: &mut [f64]) {
+        out.fill(0.0);
+        for (&j, &v) in self.idx.iter().zip(&self.vals) {
+            out[j] = v;
+        }
+    }
+}
+
+/// Compressed sparse rows: the block form the sparse CSV reader and the
+/// synth generator accumulate into before handing dense row-blocks to the
+/// accumulators.  Row `r`'s pairs live at `indptr[r]..indptr[r+1]`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CsrBlock {
+    p: usize,
+    pub y: Vec<f64>,
+    indptr: Vec<usize>,
+    indices: Vec<usize>,
+    values: Vec<f64>,
+}
+
+impl CsrBlock {
+    pub fn new(p: usize) -> Self {
+        CsrBlock { p, y: Vec::new(), indptr: vec![0], indices: Vec::new(), values: Vec::new() }
+    }
+
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    pub fn n(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Append one row after validating its indices.
+    pub fn push_row(&mut self, y: f64, idx: &[usize], vals: &[f64]) -> Result<(), SparseRowError> {
+        assert_eq!(idx.len(), vals.len(), "index/value length mismatch");
+        validate_indices(idx, self.p)?;
+        self.indices.extend_from_slice(idx);
+        self.values.extend_from_slice(vals);
+        self.indptr.push(self.indices.len());
+        self.y.push(y);
+        Ok(())
+    }
+
+    /// Row `r` as (indices, values, y).
+    pub fn row(&self, r: usize) -> (&[usize], &[f64], f64) {
+        let span = self.indptr[r]..self.indptr[r + 1];
+        (&self.indices[span.clone()], &self.values[span], self.y[r])
+    }
+
+    /// Materialize as a dense row-major (x, y) pair.
+    pub fn to_dense(&self) -> (Vec<f64>, Vec<f64>) {
+        let mut x = vec![0.0; self.n() * self.p];
+        for r in 0..self.n() {
+            let (idx, vals, _) = self.row(r);
+            let out = &mut x[r * self.p..(r + 1) * self.p];
+            for (&j, &v) in idx.iter().zip(vals) {
+                out[j] = v;
+            }
+        }
+        (x, self.y.clone())
+    }
+
+    /// Drop all rows, keeping the allocations (the streaming reader's
+    /// per-block reuse).
+    pub fn clear(&mut self) {
+        self.y.clear();
+        self.indptr.clear();
+        self.indptr.push(0);
+        self.indices.clear();
+        self.values.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn valid_rows_round_trip_through_densify() {
+        let row = SparseRow::new(2.5, vec![1, 4], vec![-3.0, 7.0], 6).unwrap();
+        assert_eq!(row.nnz(), 2);
+        let mut buf = vec![9.9; 6];
+        row.densify_into(&mut buf);
+        assert_eq!(buf, vec![0.0, -3.0, 0.0, 0.0, 7.0, 0.0]);
+    }
+
+    #[test]
+    fn all_zero_row_is_legal() {
+        let row = SparseRow::new(1.0, vec![], vec![], 4).unwrap();
+        assert_eq!(row.nnz(), 0);
+        let mut block = CsrBlock::new(4);
+        block.push_row(1.0, &[], &[]).unwrap();
+        block.push_row(2.0, &[3], &[5.0]).unwrap();
+        let (x, y) = block.to_dense();
+        assert_eq!(x, vec![0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 5.0]);
+        assert_eq!(y, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn named_errors_for_each_malformation() {
+        assert_eq!(
+            SparseRow::new(0.0, vec![3, 1], vec![1.0, 2.0], 5).unwrap_err(),
+            SparseRowError::UnsortedIndex { prev: 3, next: 1 }
+        );
+        assert_eq!(
+            SparseRow::new(0.0, vec![2, 2], vec![1.0, 2.0], 5).unwrap_err(),
+            SparseRowError::DuplicateIndex { index: 2 }
+        );
+        assert_eq!(
+            SparseRow::new(0.0, vec![5], vec![1.0], 5).unwrap_err(),
+            SparseRowError::IndexOutOfRange { index: 5, p: 5 }
+        );
+        // the block form reports the same named errors
+        let mut block = CsrBlock::new(3);
+        assert!(matches!(
+            block.push_row(0.0, &[1, 0], &[1.0, 2.0]),
+            Err(SparseRowError::UnsortedIndex { .. })
+        ));
+        assert_eq!(block.n(), 0, "rejected rows must not land");
+    }
+
+    #[test]
+    fn last_column_is_in_range() {
+        // boundary: index p−1 is legal, p is not
+        assert!(SparseRow::new(0.0, vec![4], vec![1.0], 5).is_ok());
+        assert!(SparseRow::new(0.0, vec![5], vec![1.0], 5).is_err());
+    }
+
+    #[test]
+    fn csr_rows_and_clear() {
+        let mut block = CsrBlock::new(5);
+        block.push_row(1.0, &[0, 4], &[1.0, 2.0]).unwrap();
+        block.push_row(-1.0, &[2], &[3.0]).unwrap();
+        assert_eq!(block.n(), 2);
+        assert_eq!(block.nnz(), 3);
+        let (idx, vals, y) = block.row(1);
+        assert_eq!((idx, vals, y), (&[2usize][..], &[3.0][..], -1.0));
+        block.clear();
+        assert_eq!(block.n(), 0);
+        assert_eq!(block.nnz(), 0);
+        block.push_row(0.5, &[1], &[4.0]).unwrap();
+        assert_eq!(block.row(0).2, 0.5);
+    }
+
+    #[test]
+    fn error_messages_name_the_offense() {
+        let e = SparseRowError::UnsortedIndex { prev: 7, next: 2 };
+        assert!(e.to_string().contains("unsorted"));
+        let e = SparseRowError::DuplicateIndex { index: 3 };
+        assert!(e.to_string().contains("duplicate"));
+        let e = SparseRowError::IndexOutOfRange { index: 9, p: 4 };
+        assert!(e.to_string().contains("out of range"));
+    }
+}

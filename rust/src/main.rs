@@ -45,12 +45,14 @@ const USAGE: &str = "\
 usage: plrmr <command> [--flag value ...]
 
 commands:
-  gen-data   --n N --p P [--density D] [--seed S] [--offset C] --out FILE [--shards K]
+  gen-data   --n N --p P [--density D] [--x-density D] [--seed S] [--offset C]
+             --out FILE [--shards K] [--sparse]
   fit        (--csv FILE[,FILE...] | --synth N,P[,DENSITY[,SEED]])
              [--penalty lasso|ridge|elastic_net:A] [--folds K] [--lambdas L]
              [--workers W] [--seed S] [--gram-block B] [--store-budget BYTES]
              [--workers-proc W] [--heartbeat-ms MS] [--task-deadline-ms MS]
-             [--screen-auto P] [--config FILE] [--out MODEL] [--curve]
+             [--screen-auto P] [--sparse] [--x-density D] [--config FILE]
+             [--out MODEL] [--curve]
   predict    --model MODEL --csv FILE [--out FILE]
   experiments <t1|t2|t3|t4|t5|f1|f2|f3|all> [--quick] [--workers W]
   inspect-artifacts [--dir DIR]
@@ -67,7 +69,7 @@ fn parse_flags(args: &[String]) -> Result<(Vec<String>, BTreeMap<String, String>
         let a = &args[i];
         if let Some(name) = a.strip_prefix("--") {
             // boolean flags
-            if matches!(name, "quick" | "curve") {
+            if matches!(name, "quick" | "curve" | "sparse") {
                 flags.insert(name.to_string(), "true".to_string());
                 i += 1;
                 continue;
@@ -140,17 +142,31 @@ fn cmd_gen_data(args: &[String]) -> Result<()> {
     let density: f64 = f.get("density").map(|s| s.parse()).transpose()?.unwrap_or(0.2);
     let seed: u64 = f.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(42);
     let offset: f64 = f.get("offset").map(|s| s.parse()).transpose()?.unwrap_or(0.0);
+    let x_density: f64 = f.get("x-density").map(|s| s.parse()).transpose()?.unwrap_or(1.0);
     let out = PathBuf::from(f.get("out").context("--out required")?);
-    let spec = SynthSpec { x_offset: offset, ..SynthSpec::sparse_linear(n, p, density, seed) };
+    let spec = SynthSpec {
+        x_offset: offset,
+        x_density,
+        ..SynthSpec::sparse_linear(n, p, density, seed)
+    };
     let data = generate(&spec);
+    let sparse_fmt = f.contains_key("sparse");
     if let Some(k) = f.get("shards") {
         let k: usize = k.parse()?;
         let dir = out.parent().unwrap_or(std::path::Path::new("."));
         let stem = out.file_stem().and_then(|s| s.to_str()).unwrap_or("data");
-        let paths = csv::write_shards(&data, dir, stem, k)?;
+        let paths = if sparse_fmt {
+            csv::write_sparse_shards(&data, dir, stem, k)?
+        } else {
+            csv::write_shards(&data, dir, stem, k)?
+        };
         println!("wrote {} shards under {dir:?}", paths.len());
     } else {
-        csv::write_csv(&data, &out)?;
+        if sparse_fmt {
+            csv::write_sparse_csv(&data, &out)?;
+        } else {
+            csv::write_csv(&data, &out)?;
+        }
         println!("wrote {out:?} ({n} rows, {p} predictors)");
     }
     println!("true beta (nonzeros):");
@@ -212,6 +228,11 @@ fn build_config(f: &BTreeMap<String, String>) -> Result<FitConfig> {
     if let Some(ms) = f.get("task-deadline-ms") {
         cfg.task_deadline_ms = ms.parse()?;
     }
+    if f.contains_key("sparse") {
+        // sparse-row ingest: nonzero-aware scatter kernels + empty-panel
+        // shuffle suppression — bit-identical output to the dense path
+        cfg.sparse = true;
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -229,7 +250,14 @@ fn cmd_fit(args: &[String]) -> Result<()> {
             println!("streaming {} shard file(s), p={p}", paths.len());
             driver.fit_csv_shards(p, &paths)?
         }
-        (None, Some(spec)) => driver.fit_stream(&parse_synth(spec)?)?,
+        (None, Some(spec)) => {
+            let mut spec = parse_synth(spec)?;
+            if let Some(xd) = f.get("x-density") {
+                // entry-level design sparsity (distinct from β's density)
+                spec.x_density = xd.parse()?;
+            }
+            driver.fit_stream(&spec)?
+        }
         _ => bail!("exactly one of --csv or --synth is required"),
     };
     println!(
@@ -255,6 +283,12 @@ fn cmd_fit(args: &[String]) -> Result<()> {
             m.combined_nodes,
             m.reduce_merges,
         );
+        if m.panels_skipped > 0 {
+            println!(
+                "sparse shuffle: {} empty panel(s) suppressed (shipped as O(d) markers)",
+                m.panels_skipped,
+            );
+        }
         println!(
             "recovery: {} retries, max {} attempts/task, \
              {} deadline expirations, {} heartbeats missed",

@@ -246,6 +246,12 @@ pub struct JobMetrics {
     pub spill_reads: usize,
     /// panel writes to spill files during the job
     pub spill_writes: usize,
+    /// sparse ingest: merged (fold, panel) reduce keys that stayed the
+    /// compressed all-zero marker end-to-end — panels no mapper scattered
+    /// into, shipped header-only (O(d) instead of O(d·b) on the wire;
+    /// `shuffle_bytes` reflects the compressed sizes automatically).
+    /// Stamped by the job owner from the store sink; 0 on dense runs.
+    pub panels_skipped: u64,
     pub per_worker: Vec<WorkerMetrics>,
 }
 

@@ -87,6 +87,16 @@ pub trait Scatter: Clone + PartialEq + std::fmt::Debug + Send + Sync + 'static {
     fn rank1(&mut self, delta: &[f64], scale: f64);
     /// Four rank-1 updates at once (the blocked-ingest hot loop).
     fn rank4(&mut self, c0: &[f64], c1: &[f64], c2: &[f64], c3: &[f64]);
+    /// [`Scatter::rank1`] restricted to the nonzero support `idx` (sorted
+    /// ascending, unique; `delta` full-length, read only at `idx`).  The
+    /// sparse-ingest scatter: updates only (i, j) ∈ idx × idx pairs of the
+    /// triangle, in the fixed (i ascending, j ≥ i ascending) order — and is
+    /// bit-identical to `rank1` whenever `delta` is ±0.0 outside `idx`.
+    fn rank1_sparse(&mut self, idx: &[usize], delta: &[f64], scale: f64);
+    /// [`Scatter::rank4`] restricted to the nonzero support `idx` — the
+    /// four centered rows must all be ±0.0 outside `idx` for the dense
+    /// bit-identity to hold (the block-sparse centering invariant).
+    fn rank4_sparse(&mut self, idx: &[usize], c0: &[f64], c1: &[f64], c2: &[f64], c3: &[f64]);
     /// Chan's pairwise merge: A += B + coef·(δ ⊗ δ) (paper eq. 14).
     fn merge_scaled_outer(&mut self, other: &Self, delta: &[f64], coef: f64);
     /// out = A − B − coef·(δ ⊗ δ) — the leave-one-fold-out complement.

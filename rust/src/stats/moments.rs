@@ -293,6 +293,98 @@ impl<S: Scatter> Moments<S> {
         Moments { d, n: b as u64, w: bf, mean, m2, scratch: vec![0.0; d] }
     }
 
+    /// [`Moments::push_block`] for sparse rows stored densely: identical
+    /// chunking, identical Chan merges, but each chunk's scatter runs only
+    /// over the chunk's *touched-column union* U via the `*_sparse` kernels
+    /// — cost O(|U|²/2) per 4 rows instead of O(d²/2).
+    ///
+    /// Bit-identical to the dense path for any input: untouched columns
+    /// have block mean exactly +0.0 and centered entries ±0.0, and adding
+    /// an exactly-±0.0 product to a +0.0 accumulator cannot change its
+    /// bits, so restricting the column sums, the centering, and the
+    /// rank-4/rank-1 scatter to U skips only no-op additions
+    /// (property-tested against `push_block` at every density).
+    pub fn push_block_sparse(&mut self, rows: &[f64]) {
+        assert_eq!(rows.len() % self.d, 0, "block not a multiple of d");
+        let d = self.d;
+        let n = rows.len() / d;
+        if n < BLOCK_MIN_ROWS {
+            for row in rows.chunks_exact(d) {
+                self.push(row);
+            }
+            return;
+        }
+        let max_rows = block_rows(d);
+        for chunk in rows.chunks(max_rows * d) {
+            let b = chunk.len() / d;
+            if b < BLOCK_MIN_ROWS {
+                for row in chunk.chunks_exact(d) {
+                    self.push(row);
+                }
+                continue;
+            }
+            let block = self.block_moments_sparse(b, chunk);
+            self.merge(&block);
+        }
+    }
+
+    /// [`Moments::block_moments`] restricted to the chunk's touched
+    /// columns: one O(b·d) nonzero scan builds the sorted union U, then
+    /// the mean, the centering and the scatter all run over U only.  The
+    /// union must be chunk-level (not per-row): centering densifies every
+    /// touched column, since a zero raw entry in a touched column centers
+    /// to −mean ≠ 0.
+    fn block_moments_sparse(&self, b: usize, chunk: &[f64]) -> Moments<S> {
+        let d = self.d;
+        let bf = b as f64;
+        let mut touched = vec![0u64; d.div_ceil(64)];
+        let mut mean = vec![0.0; d];
+        for row in chunk.chunks_exact(d) {
+            for (i, &v) in row.iter().enumerate() {
+                if v != 0.0 {
+                    touched[i / 64] |= 1u64 << (i % 64);
+                    mean[i] += v;
+                }
+            }
+        }
+        let mut idx = Vec::with_capacity(d);
+        for (word, &bits) in touched.iter().enumerate() {
+            let mut bits = bits;
+            while bits != 0 {
+                idx.push(word * 64 + bits.trailing_zeros() as usize);
+                bits &= bits - 1;
+            }
+        }
+        // divide all d entries: +0.0 / b = +0.0 for the untouched ones,
+        // so the full mean matches the dense path bitwise
+        for m in &mut mean {
+            *m /= bf;
+        }
+        let mut m2 = self.m2.like_zeros();
+        let mut cbuf = vec![0.0; 4 * d];
+        let mut quads = chunk.chunks_exact(4 * d);
+        for quad in quads.by_ref() {
+            // center only at U — the kernels read nothing else, and the
+            // logical centered value outside U is exactly ±0.0
+            for r in 0..4 {
+                for &i in &idx {
+                    cbuf[r * d + i] = quad[r * d + i] - mean[i];
+                }
+            }
+            let (c0, rest) = cbuf.split_at(d);
+            let (c1, rest) = rest.split_at(d);
+            let (c2, c3) = rest.split_at(d);
+            m2.rank4_sparse(&idx, c0, c1, c2, c3);
+        }
+        for row in quads.remainder().chunks_exact(d) {
+            for &i in &idx {
+                cbuf[i] = row[i] - mean[i];
+            }
+            m2.rank1_sparse(&idx, &cbuf[..d], 1.0);
+        }
+        Moments { d, n: b as u64, w: bf, mean, m2, scratch: vec![0.0; d] }
+    }
+
     /// Combiner/reducer pairwise merge (paper eq. 13 + 14).
     pub fn merge(&mut self, other: &Moments<S>) {
         assert_eq!(self.d, other.d, "dimension mismatch in merge");
@@ -720,6 +812,92 @@ mod tests {
                 }
             }
         });
+    }
+
+    #[test]
+    fn sparse_block_path_bitwise_matches_dense_property() {
+        // the whole sparse-ingest claim: push_block_sparse is the same
+        // float sequence as push_block minus provably-no-op additions
+        prop::quick(|rng, _| {
+            let d = 1 + rng.below(7);
+            let n = 1 + rng.below(400);
+            let density = [0.0, 0.05, 0.3, 1.0][rng.below(4)];
+            let mut flat = vec![0.0; n * d];
+            for v in flat.iter_mut() {
+                if rng.uniform() < density {
+                    *v = rng.normal_ms(2.0, 3.0);
+                }
+            }
+            let mut dense = Moments::new(d);
+            dense.push_block(&flat);
+            let mut sparse = Moments::new(d);
+            sparse.push_block_sparse(&flat);
+            assert_eq!(sparse.count(), dense.count());
+            assert_eq!(sparse.weight().to_bits(), dense.weight().to_bits());
+            for i in 0..d {
+                assert_eq!(
+                    sparse.mean()[i].to_bits(),
+                    dense.mean()[i].to_bits(),
+                    "mean[{i}] d={d} n={n} density={density}"
+                );
+                for j in i..d {
+                    assert_eq!(
+                        sparse.m2_at(i, j).to_bits(),
+                        dense.m2_at(i, j).to_bits(),
+                        "m2[{i},{j}] d={d} n={n} density={density}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn sparse_block_path_bitwise_matches_dense_on_tiled_backing() {
+        let mut rng = Rng::seed_from(77);
+        let d = 9;
+        let n = 130;
+        let mut flat = vec![0.0; n * d];
+        for v in flat.iter_mut() {
+            if rng.uniform() < 0.15 {
+                *v = rng.normal();
+            }
+        }
+        for block in [1usize, 2, 4, 9] {
+            let mut dense = Moments::new_tiled(d, block);
+            dense.push_block(&flat);
+            let mut sparse = Moments::new_tiled(d, block);
+            sparse.push_block_sparse(&flat);
+            assert_eq!(sparse, dense, "block={block}");
+            for i in 0..d {
+                for j in i..d {
+                    assert_eq!(
+                        sparse.m2_at(i, j).to_bits(),
+                        dense.m2_at(i, j).to_bits(),
+                        "m2[{i},{j}] block={block}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_block_all_zero_rows_match_dense() {
+        // degenerate input: every row all-zero — the touched union is
+        // empty and the scatter never runs, yet counts/means must agree
+        let d = 5;
+        let flat = vec![0.0; 64 * d];
+        let mut dense = Moments::new(d);
+        dense.push_block(&flat);
+        let mut sparse = Moments::new(d);
+        sparse.push_block_sparse(&flat);
+        assert_eq!(sparse, dense);
+        assert_eq!(sparse.count(), 64);
+        assert!(sparse.mean().iter().all(|v| v.to_bits() == 0));
+        for i in 0..d {
+            for j in i..d {
+                assert_eq!(sparse.m2_at(i, j).to_bits(), 0);
+            }
+        }
     }
 
     #[test]

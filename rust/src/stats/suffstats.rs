@@ -167,6 +167,32 @@ impl<S: Scatter> SuffStats<S> {
         self.zblock = z;
     }
 
+    /// [`SuffStats::push_rows`] for sparse rows stored densely: same
+    /// interleave, same chunking, but each chunk lands in
+    /// [`Moments::push_block_sparse`], whose scatter runs only over the
+    /// chunk's touched-column union.  Bit-identical to `push_rows` at any
+    /// density (the sparse kernels skip only exactly-±0.0 additions);
+    /// the win is O(|U|²) instead of O(d²) map arithmetic per chunk.
+    pub fn push_rows_sparse(&mut self, x: &[f64], y: &[f64]) {
+        let n = y.len();
+        assert_eq!(x.len(), n * self.p, "x must be n*p row-major");
+        let d = self.p + 1;
+        let chunk_rows = super::moments::block_rows(d);
+        let mut z = std::mem::take(&mut self.zblock);
+        let mut r0 = 0;
+        while r0 < n {
+            let r1 = (r0 + chunk_rows).min(n);
+            z.clear();
+            for r in r0..r1 {
+                z.extend_from_slice(&x[r * self.p..(r + 1) * self.p]);
+                z.push(y[r]);
+            }
+            self.inner.push_block_sparse(&z);
+            r0 = r1;
+        }
+        self.zblock = z;
+    }
+
     /// Weighted observation: equivalent to pushing (x, y) `w` times (for
     /// integer w).  Enables importance/frequency-weighted regression with
     /// the same one-pass statistics.
@@ -649,6 +675,39 @@ mod tests {
                 assert_eq!(s.sxy(i).to_bits(), whole.sxy(i).to_bits(), "n={n} i={i}");
                 for j in i..p {
                     assert_eq!(s.sxx(i, j).to_bits(), whole.sxx(i, j).to_bits(), "n={n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn push_rows_sparse_bitwise_equals_push_rows() {
+        // the sparse-ingest entry point must be a bit-identical drop-in
+        // for push_rows at every density, including all-zero rows and
+        // sizes straddling the internal chunk boundary
+        let mut rng = Rng::seed_from(78);
+        let p = 5;
+        for n in [1usize, 15, 16, 255, 256, 257, 600] {
+            for density in [0.0, 0.05, 0.4, 1.0] {
+                let x: Vec<f64> = (0..n * p)
+                    .map(|_| if rng.uniform() < density { rng.normal_ms(1.0, 2.0) } else { 0.0 })
+                    .collect();
+                let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+                let mut a = SuffStats::new(p);
+                a.push_rows(&x, &y);
+                let mut b = SuffStats::new(p);
+                b.push_rows_sparse(&x, &y);
+                assert_eq!(b.count(), a.count(), "n={n} density={density}");
+                assert_eq!(b.syy().to_bits(), a.syy().to_bits(), "n={n} density={density}");
+                for i in 0..p {
+                    assert_eq!(b.sxy(i).to_bits(), a.sxy(i).to_bits(), "n={n} i={i}");
+                    for j in i..p {
+                        assert_eq!(
+                            b.sxx(i, j).to_bits(),
+                            a.sxx(i, j).to_bits(),
+                            "n={n} density={density} ({i},{j})"
+                        );
+                    }
                 }
             }
         }

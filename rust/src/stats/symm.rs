@@ -258,6 +258,49 @@ impl SymMat {
         }
     }
 
+    /// [`SymMat::rank1`] restricted to the nonzero support `idx` (sorted
+    /// ascending, unique): A\[i,j\] += scale·δᵢ·δⱼ only for (i, j) ∈
+    /// idx × idx with j ≥ i.  `delta` stays full-length — only positions
+    /// in `idx` are read.
+    ///
+    /// Bit-safety: every skipped (i, j) pair has δᵢ or δⱼ exactly ±0.0,
+    /// whose product contributes ±0.0 to an accumulator that never goes
+    /// negative-zero under addition — so the packed triangle is
+    /// bit-for-bit what the dense kernel produces (pinned in tests).
+    /// The pair order is fixed (i ascending, then j ≥ i ascending), the
+    /// same order the dense kernel visits the surviving pairs in.
+    pub fn rank1_sparse(&mut self, idx: &[usize], delta: &[f64], scale: f64) {
+        let n = self.n;
+        debug_assert_eq!(delta.len(), n);
+        debug_assert!(idx.windows(2).all(|w| w[0] < w[1]));
+        for (a, &i) in idx.iter().enumerate() {
+            let di = delta[i] * scale;
+            let base = tri_idx(n, i, i);
+            for &j in &idx[a..] {
+                self.data[base + (j - i)] += di * delta[j];
+            }
+        }
+    }
+
+    /// [`SymMat::rank4`] restricted to the nonzero support `idx` (sorted
+    /// ascending, unique): the blocked-ingest hot loop touching only the
+    /// (i, j) ∈ idx × idx pairs of the packed triangle.  The per-entry
+    /// expression and pair order match the dense kernel exactly, so the
+    /// result is bit-identical whenever the `cᵣ` values are ±0.0 outside
+    /// `idx` (the block-sparse centering invariant).
+    pub fn rank4_sparse(&mut self, idx: &[usize], c0: &[f64], c1: &[f64], c2: &[f64], c3: &[f64]) {
+        let n = self.n;
+        debug_assert!(c0.len() == n && c1.len() == n && c2.len() == n && c3.len() == n);
+        debug_assert!(idx.windows(2).all(|w| w[0] < w[1]));
+        for (a, &i) in idx.iter().enumerate() {
+            let (a0, a1, a2, a3) = (c0[i], c1[i], c2[i], c3[i]);
+            let base = tri_idx(n, i, i);
+            for &j in &idx[a..] {
+                self.data[base + (j - i)] += a0 * c0[j] + a1 * c1[j] + a2 * c2[j] + a3 * c3[j];
+            }
+        }
+    }
+
     /// Chan's pairwise merge of scatter matrices (paper eq. 14):
     /// A += B + coef·(δ ⊗ δ), one linear pass over both triangles.
     pub fn merge_scaled_outer(&mut self, other: &SymMat, delta: &[f64], coef: f64) {
@@ -351,6 +394,14 @@ impl super::Scatter for SymMat {
 
     fn rank4(&mut self, c0: &[f64], c1: &[f64], c2: &[f64], c3: &[f64]) {
         SymMat::rank4(self, c0, c1, c2, c3);
+    }
+
+    fn rank1_sparse(&mut self, idx: &[usize], delta: &[f64], scale: f64) {
+        SymMat::rank1_sparse(self, idx, delta, scale);
+    }
+
+    fn rank4_sparse(&mut self, idx: &[usize], c0: &[f64], c1: &[f64], c2: &[f64], c3: &[f64]) {
+        SymMat::rank4_sparse(self, idx, c0, c1, c2, c3);
     }
 
     fn merge_scaled_outer(&mut self, other: &Self, delta: &[f64], coef: f64) {
@@ -500,6 +551,72 @@ mod tests {
         for i in 0..n {
             for j in i..n {
                 assert!((back.get(i, j) - before.get(i, j)).abs() < 1e-12, "({i},{j})");
+            }
+        }
+    }
+
+    /// Random vector that is exactly 0.0 outside a random support set;
+    /// returns (vector, sorted support indices).
+    fn sparse_delta(rng: &mut Rng, n: usize, density: f64) -> (Vec<f64>, Vec<usize>) {
+        let mut v = vec![0.0; n];
+        let mut idx = Vec::new();
+        for j in 0..n {
+            if rng.uniform() < density {
+                v[j] = rng.normal();
+                idx.push(j);
+            }
+        }
+        (v, idx)
+    }
+
+    #[test]
+    fn rank1_sparse_bitwise_matches_dense_kernel() {
+        let mut rng = Rng::seed_from(31);
+        for n in [1usize, 2, 7, 33] {
+            for density in [0.0, 0.05, 0.3, 1.0] {
+                let (delta, idx) = sparse_delta(&mut rng, n, density);
+                // start both from the same random matrix so skipped-pair
+                // bit-safety is checked against nonzero accumulators too
+                let (mut dense, _) = random_sym(&mut rng, n);
+                let mut sparse = dense.clone();
+                dense.rank1(&delta, 1.75);
+                sparse.rank1_sparse(&idx, &delta, 1.75);
+                for (a, b) in dense.as_slice().iter().zip(sparse.as_slice()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "n={n} density={density}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rank4_sparse_bitwise_matches_dense_kernel() {
+        let mut rng = Rng::seed_from(37);
+        for n in [1usize, 4, 9, 33] {
+            for density in [0.0, 0.1, 0.5, 1.0] {
+                // one shared support for the four rows (the block-sparse
+                // centering invariant: every cᵣ is ±0.0 outside the union)
+                let mut idx = Vec::new();
+                for j in 0..n {
+                    if rng.uniform() < density {
+                        idx.push(j);
+                    }
+                }
+                let rows: Vec<Vec<f64>> = (0..4)
+                    .map(|_| {
+                        let mut v = vec![0.0; n];
+                        for &j in &idx {
+                            v[j] = rng.normal();
+                        }
+                        v
+                    })
+                    .collect();
+                let (mut dense, _) = random_sym(&mut rng, n);
+                let mut sparse = dense.clone();
+                dense.rank4(&rows[0], &rows[1], &rows[2], &rows[3]);
+                sparse.rank4_sparse(&idx, &rows[0], &rows[1], &rows[2], &rows[3]);
+                for (a, b) in dense.as_slice().iter().zip(sparse.as_slice()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "n={n} density={density}");
+                }
             }
         }
     }

@@ -232,6 +232,45 @@ impl TiledSymMat {
         }
     }
 
+    /// [`SymMat::rank1_sparse`] on panel storage: row `i` of the triangle
+    /// lives in panel `i / b`, so the scatter touches **only the panels a
+    /// row's nonzero span reaches** — untouched panels are never written.
+    /// Pair order is the fixed (i ascending, j ≥ i ascending) order of the
+    /// dense kernel; bit-identical whenever `delta` is ±0.0 outside `idx`.
+    pub fn rank1_sparse(&mut self, idx: &[usize], delta: &[f64], scale: f64) {
+        let n = self.layout.n;
+        debug_assert_eq!(delta.len(), n);
+        debug_assert!(idx.windows(2).all(|w| w[0] < w[1]));
+        let layout = self.layout;
+        for (a, &i) in idx.iter().enumerate() {
+            let di = delta[i] * scale;
+            let t = i / layout.block;
+            let base = tri_idx(n, i, i) - layout.offset(t);
+            let panel = &mut self.panels[t];
+            for &j in &idx[a..] {
+                panel[base + (j - i)] += di * delta[j];
+            }
+        }
+    }
+
+    /// [`SymMat::rank4_sparse`] on panel storage — four centered rows with
+    /// a shared nonzero support, scattered only into the touched panels.
+    pub fn rank4_sparse(&mut self, idx: &[usize], c0: &[f64], c1: &[f64], c2: &[f64], c3: &[f64]) {
+        let n = self.layout.n;
+        debug_assert!(c0.len() == n && c1.len() == n && c2.len() == n && c3.len() == n);
+        debug_assert!(idx.windows(2).all(|w| w[0] < w[1]));
+        let layout = self.layout;
+        for (a, &i) in idx.iter().enumerate() {
+            let (a0, a1, a2, a3) = (c0[i], c1[i], c2[i], c3[i]);
+            let t = i / layout.block;
+            let base = tri_idx(n, i, i) - layout.offset(t);
+            let panel = &mut self.panels[t];
+            for &j in &idx[a..] {
+                panel[base + (j - i)] += a0 * c0[j] + a1 * c1[j] + a2 * c2[j] + a3 * c3[j];
+            }
+        }
+    }
+
     /// Chan's pairwise merge — [`SymMat::merge_scaled_outer`] per panel.
     pub fn merge_scaled_outer(&mut self, other: &TiledSymMat, delta: &[f64], coef: f64) {
         let n = self.layout.n;
@@ -394,6 +433,14 @@ impl super::Scatter for TiledSymMat {
 
     fn rank4(&mut self, c0: &[f64], c1: &[f64], c2: &[f64], c3: &[f64]) {
         TiledSymMat::rank4(self, c0, c1, c2, c3);
+    }
+
+    fn rank1_sparse(&mut self, idx: &[usize], delta: &[f64], scale: f64) {
+        TiledSymMat::rank1_sparse(self, idx, delta, scale);
+    }
+
+    fn rank4_sparse(&mut self, idx: &[usize], c0: &[f64], c1: &[f64], c2: &[f64], c3: &[f64]) {
+        TiledSymMat::rank4_sparse(self, idx, c0, c1, c2, c3);
     }
 
     fn merge_scaled_outer(&mut self, other: &Self, delta: &[f64], coef: f64) {
@@ -566,6 +613,34 @@ impl StatPanel {
         2 + self.mean.len() + self.m2.len()
     }
 
+    /// True when this panel is a *zero marker*: the header (n, w, mean) is
+    /// real but `m2` is empty, standing for `panel_len` implicit +0.0
+    /// entries.  The sparse emit path compresses all-zero panels to this
+    /// form so untouched panels cost O(d) on the wire instead of O(d·b).
+    pub fn is_zero_marker(&self) -> bool {
+        self.m2.is_empty()
+    }
+
+    /// Compress an all-zero scatter to the marker form: if every `m2`
+    /// entry is bitwise +0.0, drop the payload and return true.  An entry
+    /// of −0.0 blocks compression (the marker materializes as +0.0, which
+    /// would not be bit-identical), keeping the transform conservative.
+    pub fn compress_zeros(&mut self) -> bool {
+        if self.m2.is_empty() || self.m2.iter().any(|v| v.to_bits() != 0) {
+            return false;
+        }
+        self.m2 = Vec::new();
+        true
+    }
+
+    /// Materialize a zero marker back to its explicit +0.0 entries.
+    pub fn materialize_zeros(&mut self) {
+        if self.m2.is_empty() {
+            let len = self.layout().panel_len(self.panel);
+            self.m2 = vec![0.0; len];
+        }
+    }
+
     fn check_shape(&self, other: &StatPanel) -> Result<(), String> {
         if self.d != other.d || self.block != other.block || self.panel != other.panel {
             return Err(format!(
@@ -573,7 +648,10 @@ impl StatPanel {
                 self.d, self.block, self.panel, other.d, other.block, other.panel
             ));
         }
-        if self.m2.len() != other.m2.len() || self.mean.len() != other.mean.len() {
+        let m2_ok = self.m2.len() == other.m2.len()
+            || self.m2.is_empty()
+            || other.m2.is_empty();
+        if !m2_ok || self.mean.len() != other.mean.len() {
             return Err(format!(
                 "StatPanel length mismatch at panel {}: {}+{} vs {}+{} entries",
                 self.panel,
@@ -599,7 +677,8 @@ impl StatPanel {
             self.n = other.n;
             self.w = other.w;
             self.mean.copy_from_slice(&other.mean);
-            self.m2.copy_from_slice(&other.m2);
+            self.m2.clear();
+            self.m2.extend_from_slice(&other.m2);
             return Ok(());
         }
         let d = self.d;
@@ -608,15 +687,37 @@ impl StatPanel {
         let w_other = n / total;
         let coef = m * n / total;
         let delta: Vec<f64> = (0..d).map(|i| other.mean[i] - self.mean[i]).collect();
-        let mut k = 0;
-        for i in self.rows() {
-            let ci = coef * delta[i];
-            let row = &mut self.m2[k..k + (d - i)];
-            let orow = &other.m2[k..k + (d - i)];
-            for ((s, &o), &dj) in row.iter_mut().zip(orow).zip(&delta[i..]) {
-                *s += o + ci * dj;
+        let self_marker = self.m2.is_empty();
+        let other_marker = other.m2.is_empty();
+        if self_marker && other_marker && self.rows().all(|i| delta[i] == 0.0) {
+            // Both sides all-zero with equal means at this panel's rows:
+            // every materialized entry would come out exactly +0.0, so the
+            // merged panel stays a marker (header-only update below).
+            // Unequal means (constant nonzero columns compress too) fall
+            // through to materialization — Chan's cross term is real there.
+        } else {
+            if self_marker {
+                self.materialize_zeros();
             }
-            k += d - i;
+            let mut k = 0;
+            for i in self.rows() {
+                let ci = coef * delta[i];
+                let row = &mut self.m2[k..k + (d - i)];
+                if other_marker {
+                    // The marker's entries are implicit +0.0 — the same
+                    // expression with o = 0.0 is bit-identical to merging
+                    // the materialized zeros.
+                    for (s, &dj) in row.iter_mut().zip(&delta[i..]) {
+                        *s += 0.0 + ci * dj;
+                    }
+                } else {
+                    let orow = &other.m2[k..k + (d - i)];
+                    for ((s, &o), &dj) in row.iter_mut().zip(orow).zip(&delta[i..]) {
+                        *s += o + ci * dj;
+                    }
+                }
+                k += d - i;
+            }
         }
         for (mu, dl) in self.mean.iter_mut().zip(&delta) {
             *mu += dl * w_other;
@@ -637,6 +738,13 @@ pub fn sub_panel_into(
 ) -> Result<(), String> {
     total.check_shape(part)?;
     total.check_shape(out)?;
+    // Markers exist only between the sparse emit path and the store's
+    // retire boundary, which materializes them; the CV complement always
+    // runs on explicit panels.
+    debug_assert!(
+        !total.m2.is_empty() && !part.m2.is_empty() && !out.m2.is_empty(),
+        "sub_panel_into requires materialized panels"
+    );
     if part.n > total.n {
         return Err(format!(
             "panel {}: part has {} rows but total only {}",
@@ -904,6 +1012,182 @@ mod tests {
                 }
             }
         });
+    }
+
+    #[test]
+    fn tiled_sparse_kernels_bitwise_match_dense() {
+        prop::quick(|rng, _| {
+            let n = 1 + rng.below(12);
+            let block = 1 + rng.below(n + 2);
+            let density = [0.0, 0.1, 0.4, 1.0][rng.below(4)];
+            let mut dense = random_sym(rng, n);
+            let mut tiled = TiledSymMat::from_packed(&dense, block);
+            // support-restricted vector: ±0.0 outside idx
+            let mut delta = vec![0.0; n];
+            let mut idx = Vec::new();
+            for (j, dj) in delta.iter_mut().enumerate() {
+                if rng.uniform() < density {
+                    *dj = rng.normal();
+                    idx.push(j);
+                }
+            }
+            dense.rank1(&delta, 1.75);
+            tiled.rank1_sparse(&idx, &delta, 1.75);
+            assert_eq!(tiled.to_packed(), dense, "rank1_sparse drift (n={n} b={block})");
+            // four centered rows sharing the support
+            let mut rows = vec![vec![0.0; n]; 4];
+            for &j in &idx {
+                for r in rows.iter_mut() {
+                    r[j] = rng.normal();
+                }
+            }
+            dense.rank4(&rows[0], &rows[1], &rows[2], &rows[3]);
+            tiled.rank4_sparse(&idx, &rows[0], &rows[1], &rows[2], &rows[3]);
+            assert_eq!(tiled.to_packed(), dense, "rank4_sparse drift (n={n} b={block})");
+        });
+    }
+
+    #[test]
+    fn sparse_scatter_writes_only_spanned_panels() {
+        let mut rng = Rng::seed_from(11);
+        let n = 13;
+        let layout = TileLayout::new(n, 3);
+        let mut tiled = TiledSymMat::zeros(layout);
+        // support confined to the last (ragged) panel's rows
+        let start = layout.rows(layout.n_panels() - 1).start;
+        let idx: Vec<usize> = (start..n).collect();
+        let mut delta = vec![0.0; n];
+        for &j in &idx {
+            delta[j] = rng.normal();
+        }
+        tiled.rank1_sparse(&idx, &delta, 2.5);
+        for t in 0..layout.n_panels() - 1 {
+            assert!(
+                tiled.panels[t].iter().all(|v| v.to_bits() == 0),
+                "panel {t} written despite empty span"
+            );
+        }
+        let mut dense = SymMat::zeros(n);
+        dense.rank1(&delta, 2.5);
+        assert_eq!(tiled.to_packed(), dense);
+    }
+
+    #[test]
+    fn marker_merges_bitwise_match_materialized_merges() {
+        let mut rng = Rng::seed_from(23);
+        for (d, block) in [(5usize, 2usize), (7, 3), (4, 4)] {
+            let layout = TileLayout::new(d, block);
+            for t in 0..layout.n_panels() {
+                let real = StatPanel {
+                    d,
+                    block,
+                    panel: t,
+                    n: 30,
+                    w: 30.0,
+                    mean: prop::normal_vec(&mut rng, d, 1.0),
+                    m2: prop::normal_vec(&mut rng, layout.panel_len(t), 1.0),
+                };
+                let zero = |mean: Vec<f64>| StatPanel {
+                    d,
+                    block,
+                    panel: t,
+                    n: 12,
+                    w: 12.0,
+                    mean,
+                    m2: vec![0.0; layout.panel_len(t)],
+                };
+                // all-zero scatter with nonzero mean: what a constant
+                // column compresses to — the adversarial marker shape
+                let zmean = prop::normal_vec(&mut rng, d, 1.0);
+                let z = zero(zmean.clone());
+                let mut marker = z.clone();
+                assert!(marker.compress_zeros());
+                assert!(marker.is_zero_marker());
+
+                // real ← marker
+                let (mut a, mut b) = (real.clone(), real.clone());
+                a.merge(&z).unwrap();
+                b.merge(&marker).unwrap();
+                assert_eq!(a, b, "real<-marker d={d} b={block} t={t}");
+
+                // marker ← real
+                let (mut c, mut m) = (z.clone(), marker.clone());
+                c.merge(&real).unwrap();
+                m.merge(&real).unwrap();
+                assert_eq!(c, m, "marker<-real d={d} b={block} t={t}");
+
+                // marker ← marker with unequal means at the panel's rows:
+                // Chan's cross term is real, so the result materializes
+                let z2 = zero(prop::normal_vec(&mut rng, d, 1.0));
+                let mut z2m = z2.clone();
+                assert!(z2m.compress_zeros());
+                let (mut ua, mut ub) = (z.clone(), marker.clone());
+                ua.merge(&z2).unwrap();
+                ub.merge(&z2m).unwrap();
+                assert_eq!(ua, ub, "marker<-marker unequal means");
+                assert!(!ub.is_zero_marker(), "nonzero-mean cross term must materialize");
+
+                // marker ← marker with identical means: stays compressed
+                let (mut ea, mut eb) = (z.clone(), marker.clone());
+                ea.merge(&z).unwrap();
+                eb.merge(&marker).unwrap();
+                assert!(eb.is_zero_marker(), "equal-mean marker merge must stay compressed");
+                let mut ebm = eb.clone();
+                ebm.materialize_zeros();
+                assert_eq!(ebm, ea, "equal-mean marker merge header drift");
+
+                // means equal on the panel's rows but differing beyond:
+                // every cross term carries ci = coef·0.0, so it still
+                // stays a marker and still matches the materialized path
+                let r = layout.rows(t);
+                if r.end < d {
+                    let mut mean3 = zmean.clone();
+                    for v in &mut mean3[r.end..] {
+                        *v += 1.0;
+                    }
+                    let z3 = zero(mean3);
+                    let mut z3m = z3.clone();
+                    assert!(z3m.compress_zeros());
+                    let (mut pa, mut pb) = (z.clone(), marker.clone());
+                    pa.merge(&z3).unwrap();
+                    pb.merge(&z3m).unwrap();
+                    assert!(pb.is_zero_marker(), "row-equal means must stay compressed");
+                    let mut pbm = pb.clone();
+                    pbm.materialize_zeros();
+                    assert_eq!(pbm, pa, "row-equal marker merge drift");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn compress_zeros_accepts_only_positive_zero_payloads() {
+        let layout = TileLayout::new(6, 4);
+        let base = StatPanel {
+            d: 6,
+            block: 4,
+            panel: 1,
+            n: 4,
+            w: 4.0,
+            mean: vec![1.0; 6],
+            m2: vec![0.0; layout.panel_len(1)],
+        };
+        let mut p = base.clone();
+        assert!(p.compress_zeros());
+        assert!(p.is_zero_marker());
+        assert_eq!(p.payload_doubles(), 2 + 6);
+        assert!(!p.compress_zeros(), "a marker has nothing left to compress");
+        p.materialize_zeros();
+        assert_eq!(p, base);
+        // a −0.0 entry blocks compression (materializing as +0.0 would
+        // flip its bit), as does any nonzero however small
+        let mut neg = base.clone();
+        neg.m2[0] = -0.0;
+        assert!(!neg.compress_zeros());
+        assert!(!neg.is_zero_marker());
+        let mut nz = base.clone();
+        nz.m2[1] = 1e-300;
+        assert!(!nz.compress_zeros());
     }
 
     #[test]

@@ -26,6 +26,8 @@
 //! solver's own p-dim Gram, while the fold statistics themselves obey the
 //! store's budget.
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
 use anyhow::{anyhow, bail, ensure, Result};
 
 use crate::stats::suffstats::QuadForm;
@@ -71,6 +73,9 @@ pub struct FoldStore {
     /// per-fold headers (index k = total); filled by [`FoldStore::seal`]
     headers: Vec<FoldHeader>,
     sealed: bool,
+    /// retired reduce keys whose merged scatter was still the compressed
+    /// zero marker — the sparse path's `panels_skipped` accounting
+    zero_panels: AtomicU64,
 }
 
 impl FoldStore {
@@ -78,7 +83,15 @@ impl FoldStore {
     /// `layout` (dimension must be p+1).
     pub fn new(store: Box<dyn PanelStore>, k: usize, p: usize, layout: TileLayout) -> FoldStore {
         assert_eq!(layout.n(), p + 1, "layout dimension must be p+1");
-        FoldStore { store, k, p, layout, headers: Vec::new(), sealed: false }
+        FoldStore {
+            store,
+            k,
+            p,
+            layout,
+            headers: Vec::new(),
+            sealed: false,
+            zero_panels: AtomicU64::new(0),
+        }
     }
 
     pub fn k(&self) -> usize {
@@ -152,6 +165,16 @@ impl FoldStore {
                 self.layout.block()
             ));
         }
+        let mut value = value;
+        if value.is_zero_marker() {
+            // sparse emit path: an all-zero panel shipped as an O(d)
+            // header-only marker through the whole merge tree — count it
+            // here (post-merge, so worker counts and fault retries can't
+            // skew the number) and materialize so everything downstream
+            // of the store sees explicit panels
+            value.materialize_zeros();
+            self.zero_panels.fetch_add(1, Ordering::Relaxed);
+        }
         if value.mean.len() != self.layout.n() || value.m2.len() != self.layout.panel_len(panel) {
             return Err(format!(
                 "panel (fold {fold}, panel {panel}): {}+{} entries, layout says {}+{}",
@@ -164,6 +187,15 @@ impl FoldStore {
         self.store
             .put(PanelKey { fold, panel }, value)
             .map_err(|e| e.to_string())
+    }
+
+    /// Retired `(fold, panel)` reduce keys that were still the compressed
+    /// zero marker after the whole merge tree — i.e. panels no mapper ever
+    /// scattered into.  Stamped onto `JobMetrics::panels_skipped` by the
+    /// drivers; deterministic across worker counts, fault plans, and
+    /// runtimes because it is counted at the single retire boundary.
+    pub fn zero_panels(&self) -> u64 {
+        self.zero_panels.load(Ordering::Relaxed)
     }
 
     /// Owned copy of one panel (`fold == k` addresses the total).
@@ -832,6 +864,36 @@ mod tests {
         assert!(err.contains("incomplete"), "{err}");
         drop(fs);
         assert!(!dir.exists(), "spill dir must be removed on the error path");
+    }
+
+    #[test]
+    fn retire_materializes_zero_markers_and_counts_them() {
+        let layout = TileLayout::new(5, 2);
+        let mut rng = Rng::seed_from(8);
+        let s = random_stats(&mut rng, 4, 25);
+        let fs = FoldStore::new(Box::new(MemStore::new()), 2, 4, layout);
+        let mut panels = shard_stats(&s, layout);
+        for pl in panels.clone() {
+            fs.retire(0, pl.panel, pl).unwrap();
+        }
+        assert_eq!(fs.zero_panels(), 0, "real panels must not count");
+        // fold 1: compress an all-zero variant of each panel to a marker
+        let mut markers = 0u64;
+        for pl in panels.iter_mut() {
+            for v in pl.m2.iter_mut() {
+                *v = 0.0;
+            }
+            let mut m = pl.clone();
+            assert!(m.compress_zeros());
+            fs.retire(1, m.panel, m).unwrap();
+            markers += 1;
+        }
+        assert_eq!(fs.zero_panels(), markers);
+        // the stored panel is materialized: full length, exact +0.0
+        let got = fs.panel(1, 0).unwrap();
+        assert_eq!(got.m2.len(), layout.panel_len(0));
+        assert!(got.m2.iter().all(|v| v.to_bits() == 0));
+        assert_eq!(got.n, panels[0].n, "marker header must survive retire");
     }
 
     #[test]

@@ -27,7 +27,7 @@
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Condvar, Mutex};
 
 use crate::stats::tiles::StatPanel;
 
@@ -144,6 +144,14 @@ pub(crate) fn decode_panel(key: PanelKey, bytes: &[u8]) -> StoreResult<StatPanel
     Ok(StatPanel { d, block, panel, n, w, mean, m2 })
 }
 
+/// A per-entry load latch: the first thread to touch a spilled panel
+/// becomes its loader and performs the file read + decode with the store
+/// mutex RELEASED; concurrent readers of the same key park on the latch
+/// instead of serializing every other store operation behind the I/O.
+/// The bool flips to true exactly once, when the load (success or
+/// failure) has been finalized in the entry map.
+type LoadLatch = Arc<(Mutex<bool>, Condvar)>;
+
 /// Bounded-residency panel store backed by checksummed spill files.
 #[derive(Debug)]
 pub struct SpillStore {
@@ -152,6 +160,10 @@ pub struct SpillStore {
     /// admitted — there is no smaller unit to evict)
     budget: usize,
     inner: Mutex<SpillInner>,
+    /// signaled whenever an off-mutex load finalizes: admission control
+    /// waits here when in-flight reservations leave no room under the
+    /// budget and nothing resident is evictable
+    load_done: Condvar,
     /// test hook: truncate the next N raw spill reads *in memory*,
     /// simulating transient partial reads while the file on disk stays
     /// intact — exercises the bounded re-read retry in [`SpillStore::get`]
@@ -178,6 +190,9 @@ struct Entry {
     on_disk: bool,
     pinned: bool,
     last_used: u64,
+    /// present while a loader thread is reading/decoding this panel's
+    /// spill file off-mutex; its resident bytes are already reserved
+    loading: Option<LoadLatch>,
 }
 
 impl SpillStore {
@@ -195,6 +210,7 @@ impl SpillStore {
             dir,
             budget: budget_bytes.max(1),
             inner: Mutex::new(SpillInner::default()),
+            load_done: Condvar::new(),
             #[cfg(test)]
             truncate_reads: AtomicU64::new(0),
         })
@@ -271,7 +287,14 @@ impl PanelStore for SpillStore {
         let last_used = inner.clock;
         inner.entries.insert(
             key,
-            Entry { resident: Some(panel), bytes, on_disk: false, pinned: false, last_used },
+            Entry {
+                resident: Some(panel),
+                bytes,
+                on_disk: false,
+                pinned: false,
+                last_used,
+                loading: None,
+            },
         );
         inner.metrics.panels += 1;
         inner.metrics.resident_bytes += bytes;
@@ -284,19 +307,58 @@ impl PanelStore for SpillStore {
 
     fn get(&self, key: PanelKey) -> StoreResult<StatPanel> {
         let mut inner = self.inner.lock().unwrap();
-        let (resident, bytes) = match inner.entries.get(&key) {
-            None => return Err(StoreError::Missing(key)),
-            Some(e) => (e.resident.is_some(), e.bytes),
+        let bytes = loop {
+            let (resident, bytes, latch) = match inner.entries.get(&key) {
+                None => return Err(StoreError::Missing(key)),
+                Some(e) => (e.resident.is_some(), e.bytes, e.loading.clone()),
+            };
+            if resident {
+                inner.clock += 1;
+                let clock = inner.clock;
+                let e = inner.entries.get_mut(&key).unwrap();
+                e.last_used = clock;
+                return Ok(e.resident.clone().unwrap());
+            }
+            if let Some(latch) = latch {
+                // another thread is already reading this panel's file:
+                // park on ITS latch — not the store mutex — then re-examine
+                // the entry (resident on success; reclaimable on failure)
+                drop(inner);
+                let (done, cv) = &*latch;
+                let mut finished = done.lock().unwrap();
+                while !*finished {
+                    finished = cv.wait(finished).unwrap();
+                }
+                drop(finished);
+                inner = self.inner.lock().unwrap();
+                continue;
+            }
+            // spilled and unclaimed: admit under the budget
+            // (evict-before-admit)
+            self.make_room(&mut inner, bytes)?;
+            if inner.metrics.resident_bytes + bytes > self.budget
+                && inner.entries.values().any(|e| e.loading.is_some())
+            {
+                // in-flight loads hold reservations make_room cannot evict
+                // yet; wait for one to finalize instead of overshooting
+                // the residency bound
+                inner = self.load_done.wait(inner).unwrap();
+                continue;
+            }
+            break bytes;
         };
-        if resident {
-            inner.clock += 1;
-            let clock = inner.clock;
-            let e = inner.entries.get_mut(&key).unwrap();
-            e.last_used = clock;
-            return Ok(e.resident.clone().unwrap());
-        }
-        // spilled: make room first (evict-before-admit), then load+verify
-        self.make_room(&mut inner, bytes)?;
+        // claim the load: reserve the resident bytes and publish the latch,
+        // then perform the file read + checksum/decode with the store
+        // UNLOCKED — other keys' puts/gets proceed concurrently
+        let latch: LoadLatch = Arc::new((Mutex::new(false), Condvar::new()));
+        inner.entries.get_mut(&key).unwrap().loading = Some(latch.clone());
+        inner.metrics.resident_bytes += bytes;
+        inner.metrics.resident_bytes_peak = inner
+            .metrics
+            .resident_bytes_peak
+            .max(inner.metrics.resident_bytes);
+        drop(inner);
+
         let path = self.spill_path(key);
         let read_raw = || {
             std::fs::read(&path).map_err(|e| {
@@ -307,38 +369,61 @@ impl PanelStore for SpillStore {
                 }
             })
         };
-        #[allow(unused_mut)]
-        let mut raw = read_raw()?;
-        #[cfg(test)]
-        if self.truncate_reads.load(Ordering::Relaxed) > 0 {
-            self.truncate_reads.fetch_sub(1, Ordering::Relaxed);
-            raw.truncate(raw.len() / 2);
-        }
-        let panel = match decode_panel(key, &raw) {
-            Ok(panel) => panel,
-            // One bounded re-read: a *transient* partial read (concurrent
-            // flush, page-cache race) heals on the second attempt; real
-            // bit-rot fails identically and surfaces the named error.
-            Err(StoreError::ShortRead { .. }) | Err(StoreError::ChecksumMismatch { .. }) => {
-                inner.metrics.read_retries += 1;
-                let raw = read_raw()?;
-                decode_panel(key, &raw)?
+        let mut retries = 0u64;
+        let result: StoreResult<StatPanel> = (|| {
+            #[allow(unused_mut)]
+            let mut raw = read_raw()?;
+            #[cfg(test)]
+            if self.truncate_reads.load(Ordering::Relaxed) > 0 {
+                self.truncate_reads.fetch_sub(1, Ordering::Relaxed);
+                raw.truncate(raw.len() / 2);
             }
-            Err(e) => return Err(e),
-        };
-        inner.clock += 1;
-        let clock = inner.clock;
-        let e = inner.entries.get_mut(&key).unwrap();
-        e.resident = Some(panel.clone());
-        e.last_used = clock;
-        inner.metrics.resident_bytes += bytes;
-        inner.metrics.resident_bytes_peak = inner
-            .metrics
-            .resident_bytes_peak
-            .max(inner.metrics.resident_bytes);
-        inner.metrics.spill_reads += 1;
-        inner.metrics.spilled_panels -= 1;
-        Ok(panel)
+            match decode_panel(key, &raw) {
+                Ok(panel) => Ok(panel),
+                // One bounded re-read: a *transient* partial read
+                // (concurrent flush, page-cache race) heals on the second
+                // attempt; real bit-rot fails identically and surfaces the
+                // named error.
+                Err(StoreError::ShortRead { .. })
+                | Err(StoreError::ChecksumMismatch { .. }) => {
+                    retries += 1;
+                    let raw = read_raw()?;
+                    decode_panel(key, &raw)
+                }
+                Err(e) => Err(e),
+            }
+        })();
+
+        let mut inner = self.inner.lock().unwrap();
+        inner.metrics.read_retries += retries as usize;
+        match inner.entries.get_mut(&key) {
+            Some(e) => {
+                e.loading = None;
+                match &result {
+                    Ok(panel) => {
+                        inner.clock += 1;
+                        let clock = inner.clock;
+                        let e = inner.entries.get_mut(&key).unwrap();
+                        e.resident = Some(panel.clone());
+                        e.last_used = clock;
+                        inner.metrics.spill_reads += 1;
+                        inner.metrics.spilled_panels -= 1;
+                        // resident bytes were reserved at claim time
+                    }
+                    Err(_) => inner.metrics.resident_bytes -= bytes,
+                }
+            }
+            // removed while loading: give back the reservation — the
+            // decoded panel (if any) still answers THIS call correctly
+            None => inner.metrics.resident_bytes -= bytes,
+        }
+        drop(inner);
+        // release same-key waiters, then budget waiters
+        let (done, cv) = &*latch;
+        *done.lock().unwrap() = true;
+        cv.notify_all();
+        self.load_done.notify_all();
+        result
     }
 
     fn contains(&self, key: PanelKey) -> bool {
@@ -611,6 +696,47 @@ mod tests {
         let err = store.get(key(0, 1)).unwrap_err();
         assert!(err.to_string().contains("truncated"), "{err}");
         assert_eq!(store.metrics().read_retries, 2);
+    }
+
+    #[test]
+    fn concurrent_reloads_stay_bounded_and_bitwise() {
+        // the off-mutex load path: 4 threads hammer overlapping keys
+        // against a one-panel budget.  Same-key readers coalesce on the
+        // per-entry latch, admission control keeps the reservation
+        // accounting under the budget, and every returned panel is
+        // bit-identical to what was put
+        let panels = random_panels(37, 6, 2, 40);
+        let one = panel_bytes(&panels[0]); // panel 0 is the largest
+        let store = SpillStore::new(one).unwrap();
+        for (t, pl) in panels.iter().enumerate() {
+            store.put(key(0, t), pl.clone()).unwrap();
+        }
+        std::thread::scope(|s| {
+            for worker in 0..4usize {
+                let store = &store;
+                let panels = &panels;
+                s.spawn(move || {
+                    for round in 0..8 {
+                        for i in 0..panels.len() {
+                            // stagger so workers collide on the same keys
+                            let t = (i + worker * 2 + round) % panels.len();
+                            let got = store.get(key(0, t)).unwrap();
+                            for (a, b) in got.m2.iter().zip(&panels[t].m2) {
+                                assert_eq!(a.to_bits(), b.to_bits(), "panel {t}");
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        let m = store.metrics();
+        assert!(
+            m.resident_bytes_peak <= one,
+            "evict-before-admit must hold under concurrency: {} vs {one}",
+            m.resident_bytes_peak
+        );
+        assert!(m.spill_reads > 0, "the churn must actually hit the spill files");
+        assert_eq!(m.panels, panels.len(), "no panel lost in the scramble");
     }
 
     #[test]

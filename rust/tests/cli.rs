@@ -124,6 +124,62 @@ fn fit_with_worker_processes() {
 }
 
 #[test]
+fn sparse_gen_fit_and_suppression_render() {
+    let dir = tmp("sparse");
+    let csv = dir.join("sparse.csv");
+    // --sparse gen-data writes the index:value shard format
+    let (ok, _, stderr) = plrmr(&[
+        "gen-data", "--n", "2000", "--p", "6", "--seed", "8",
+        "--x-density", "0.2", "--sparse", "--out", csv.to_str().unwrap(),
+    ]);
+    assert!(ok, "{stderr}");
+    let body = std::fs::read_to_string(&csv).unwrap();
+    assert!(body.starts_with("sparse p=6"), "{}", &body[..body.len().min(40)]);
+    assert!(body.contains(':'), "index:value entries expected");
+
+    // dense-kernel vs nonzero-aware fit of the same file: same λ, same fit
+    let fit = |extra: &[&str]| {
+        let mut args = vec![
+            "fit", "--csv", csv.to_str().unwrap(), "--folds", "5",
+            "--lambdas", "10", "--gram-block", "2", "--curve",
+        ];
+        args.extend_from_slice(extra);
+        plrmr(&args)
+    };
+    let (ok, dense_out, stderr) = fit(&[]);
+    assert!(ok, "{stderr}");
+    let (ok, sparse_out, stderr) = fit(&["--sparse"]);
+    assert!(ok, "{stderr}");
+    let pick = |s: &str, needle: &str| s.lines().find(|l| l.contains(needle)).map(str::to_string);
+    assert_eq!(
+        pick(&dense_out, "lambda_opt"),
+        pick(&sparse_out, "lambda_opt"),
+        "sparse CLI fit drifted"
+    );
+    assert_eq!(pick(&dense_out, "in-sample"), pick(&sparse_out, "in-sample"));
+
+    // structured zeros: columns 2..6 never touched, so whole panels cross
+    // the shuffle as markers and the fit reports the suppression
+    let zcsv = dir.join("zerocols.csv");
+    let mut s = String::from("sparse p=6\n");
+    for i in 0..400 {
+        let x0 = (i as f64 * 0.37).sin();
+        let x1 = (i as f64 * 0.11).cos();
+        let y = 2.0 * x0 - x1 + (i as f64 * 0.05).sin();
+        s.push_str(&format!("{y} 0:{x0} 1:{x1}\n"));
+    }
+    std::fs::write(&zcsv, s).unwrap();
+    let (ok, out, stderr) = plrmr(&[
+        "fit", "--csv", zcsv.to_str().unwrap(), "--folds", "5",
+        "--lambdas", "8", "--gram-block", "2", "--sparse",
+    ]);
+    assert!(ok, "{stderr}");
+    assert!(out.contains("sparse shuffle:"), "{out}");
+    assert!(out.contains("suppressed"), "{out}");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
 fn fit_requires_exactly_one_source() {
     let (ok, _, stderr) = plrmr(&["fit"]);
     assert!(!ok);

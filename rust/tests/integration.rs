@@ -612,6 +612,104 @@ fn resident_allocation_accounting_on_the_tiled_path() {
 }
 
 #[test]
+fn sparse_csv_format_round_trips_and_fits_bit_identically() {
+    // the sparse `index:value` shard format through the whole stack:
+    // write → read back verbatim → file-parallel fit with nonzero-aware
+    // kernels, bit-identical to the dense-format dense-kernel fit
+    let dir = tmp("sparse-csv");
+    let spec = SynthSpec {
+        x_density: 0.15,
+        ..SynthSpec::sparse_linear(6000, 8, 0.4, 61)
+    };
+    let data = generate(&spec);
+    let dense_shards = csv::write_shards(&data, &dir, "d", 4).unwrap();
+    let sparse_shards = csv::write_sparse_shards(&data, &dir, "s", 4).unwrap();
+
+    // the format round-trips exactly (values printed full-precision)
+    let loaded = csv::read_shards(&sparse_shards).unwrap();
+    assert_eq!(loaded, data, "sparse shard round trip");
+
+    // at 15% density the sparse files are much smaller on disk
+    let bytes = |ps: &[std::path::PathBuf]| -> u64 {
+        ps.iter().map(|p| std::fs::metadata(p).unwrap().len()).sum()
+    };
+    assert!(
+        bytes(&sparse_shards) < bytes(&dense_shards) / 2,
+        "sparse format must shrink 15%-dense shards: {} vs {}",
+        bytes(&sparse_shards),
+        bytes(&dense_shards)
+    );
+
+    let cfg = FitConfig::default().with_folds(5).with_lambdas(20).with_workers(4);
+    let dense = Driver::new(cfg).fit_csv_shards(4, &dense_shards).unwrap();
+    for scfg in [
+        cfg.with_sparse(true),
+        cfg.with_sparse(true).with_gram_block(4),
+        cfg.with_sparse(true).with_gram_block(4).with_store_budget(4096),
+    ] {
+        let sparse = Driver::new(scfg).fit_csv_shards(4, &sparse_shards).unwrap();
+        assert_eq!(sparse.model.beta, dense.model.beta, "sparse fit drifted");
+        assert_eq!(sparse.model.alpha, dense.model.alpha);
+        assert_eq!(sparse.lambda_opt, dense.lambda_opt);
+        assert_eq!(sparse.cv.fold_err, dense.cv.fold_err);
+        assert_eq!(sparse.map_metrics.records, 6000);
+    }
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn zero_panels_ship_as_markers_through_the_merge_tree() {
+    // structured sparsity: columns 8.. are identically zero, so the
+    // panels covering them must cross the shuffle as O(d) markers, never
+    // materializing before `FoldStore::retire` — pinned by the payload
+    // accounting: sparse ships the SAME payload count (markers are
+    // shipped, not dropped) for strictly fewer bytes, and every
+    // suppressed panel is counted once at its single retire point
+    use plrmr::stats::tiles::TileLayout;
+
+    let p = 16;
+    let src = generate(&SynthSpec::sparse_linear(4000, p, 0.5, 19));
+    let mut x = src.x.clone();
+    for r in 0..src.n() {
+        for j in 8..p {
+            x[r * p + j] = 0.0;
+        }
+    }
+    let data = plrmr::data::Dataset::new(p, x, src.y.clone());
+    let k = 5;
+    let block = 4;
+    let cfg = FitConfig {
+        folds: k,
+        workers: 4,
+        split_rows: 500,
+        gram_block: block,
+        ..FitConfig::default()
+    };
+    let (fd, dense) = Driver::new(cfg).compute_fold_stats(&data).unwrap();
+    let (fs, sparse) = Driver::new(cfg.with_sparse(true)).compute_fold_stats(&data).unwrap();
+    for i in 0..k {
+        assert_eq!(fd.fold(i), fs.fold(i), "sparse fold {i} drifted");
+    }
+    // d=17, block=4 → panels rows [0..4)[4..8)[8..12)[12..16)[16..17);
+    // columns 8..16 zero → panels 2 and 3 are markers in every fold
+    let layout = TileLayout::new(p + 1, block);
+    assert_eq!(layout.n_panels(), 5);
+    assert_eq!(dense.panels_skipped, 0, "dense path never suppresses");
+    assert_eq!(sparse.panels_skipped, 2 * k, "two all-zero panels × {k} folds");
+    assert_eq!(
+        sparse.shuffle_payloads, dense.shuffle_payloads,
+        "markers are shipped, not dropped"
+    );
+    assert!(
+        sparse.shuffle_bytes < dense.shuffle_bytes,
+        "marker payloads must shrink the shuffle: {} vs {}",
+        sparse.shuffle_bytes,
+        dense.shuffle_bytes
+    );
+    assert_eq!(sparse.records, 4000);
+}
+
+#[test]
 fn hlo_runtime_agrees_with_cpu_when_built() {
     let dir = plrmr::runtime::default_artifacts_dir();
     if !cfg!(feature = "pjrt") || !dir.join("manifest.json").exists() {

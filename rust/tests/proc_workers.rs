@@ -188,6 +188,67 @@ fn csv_shards_proc_fit_matches_inprocess() {
 }
 
 #[test]
+fn sparse_proc_fit_matches_inprocess_and_stamps_suppression() {
+    let _env = proc_env();
+    // synth stream: x_density and the sparse flag ride the setup codec to
+    // the worker processes; the fit must match BOTH the in-process sparse
+    // fit and the dense-kernel fit bit for bit
+    let sspec = SynthSpec { x_density: 0.1, ..spec() };
+    let dense_ref = Driver::new(base_cfg()).fit_stream(&sspec).unwrap();
+    let sparse_ref = Driver::new(base_cfg().with_sparse(true)).fit_stream(&sspec).unwrap();
+    assert_eq!(
+        bits(&sparse_ref.model.beta),
+        bits(&dense_ref.model.beta),
+        "in-process sparse kernels drifted"
+    );
+    let cfg = FitConfig {
+        proc_workers: 3,
+        fault: FaultPlan::kills(0.3, 17),
+        ..base_cfg()
+    }
+    .with_sparse(true);
+    let report = Driver::new(cfg).fit_stream(&sspec).unwrap();
+    assert_eq!(
+        bits(&report.model.beta),
+        bits(&dense_ref.model.beta),
+        "proc-worker sparse fit drifted"
+    );
+    assert_eq!(report.lambda_opt.to_bits(), dense_ref.lambda_opt.to_bits());
+    assert_eq!(report.fold_sizes, dense_ref.fold_sizes);
+
+    // structured zero columns through sparse-format CSV shards: worker
+    // processes must ship the same zero markers and the supervisor must
+    // stamp the same suppression count as the in-process engine
+    let dir = std::env::temp_dir().join(format!("plrmr-proc-sparse-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let src = generate(&spec());
+    let p = 16;
+    let mut x = src.x.clone();
+    for r in 0..src.n() {
+        for j in 8..p {
+            x[r * p + j] = 0.0;
+        }
+    }
+    let data = plrmr::data::Dataset::new(p, x, src.y.clone());
+    let shards = csv::write_sparse_shards(&data, &dir, "z", 3).unwrap();
+    let inproc = Driver::new(base_cfg().with_sparse(true))
+        .fit_csv_shards(p, &shards)
+        .unwrap();
+    let proc_fit = Driver::new(FitConfig { proc_workers: 2, ..base_cfg() }.with_sparse(true))
+        .fit_csv_shards(p, &shards)
+        .unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+    assert_eq!(bits(&proc_fit.model.beta), bits(&inproc.model.beta));
+    // d=17, b=8 → panel 1 covers triangle rows 8..16, all-zero columns:
+    // one marker per fold, counted once at its retire point
+    assert_eq!(inproc.map_metrics.panels_skipped, 3, "one marker panel × 3 folds");
+    assert_eq!(
+        proc_fit.map_metrics.panels_skipped, inproc.map_metrics.panels_skipped,
+        "proc runtime must stamp the same suppression count"
+    );
+}
+
+#[test]
 fn in_memory_fit_under_proc_workers_is_a_named_error() {
     let _env = proc_env();
     let cfg = FitConfig { proc_workers: 2, ..base_cfg() };
