@@ -1,0 +1,47 @@
+//! Thin CLI over [`plrmr::util::detlint`]: lint `rust/src` for
+//! determinism hazards against the repo-root `detlint.allow`.
+//!
+//! Run as `cargo detlint` (see `.cargo/config.toml`); exits nonzero on
+//! any unallowed finding or any stale allowlist entry, so CI can gate on
+//! it exactly like clippy.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use plrmr::util::detlint;
+
+fn main() -> ExitCode {
+    // cargo sets CARGO_MANIFEST_DIR at run time; the compile-time value
+    // is the fallback when the binary is invoked directly
+    let manifest = std::env::var("CARGO_MANIFEST_DIR")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")));
+    let src = manifest.join("src");
+    let allow = manifest.join("../detlint.allow");
+
+    let report = match detlint::run(&src, &allow) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("detlint: {e:#}");
+            return ExitCode::FAILURE;
+        }
+    };
+    for f in &report.findings {
+        eprintln!("{f}");
+    }
+    for u in &report.unused_allows {
+        eprintln!("unused allow entry: {u}");
+    }
+    eprintln!(
+        "detlint: {} file(s) scanned, {} finding(s), {} allowed, {} stale allow entr(ies)",
+        report.files_scanned,
+        report.findings.len(),
+        report.allowed,
+        report.unused_allows.len()
+    );
+    if report.is_clean() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

@@ -60,6 +60,7 @@ pub mod runtime;
 pub mod solver;
 pub mod stats;
 pub mod store;
+pub mod sync;
 pub mod util;
 
 /// Crate-wide result alias.

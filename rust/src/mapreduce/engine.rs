@@ -22,12 +22,14 @@
 //! runs, never which merges run.
 
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
-use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::{Condvar, Mutex};
 use std::time::Instant;
 
 use anyhow::{bail, Result};
+
+use crate::sync::atomic::{AtomicUsize, Ordering};
+use crate::sync::{fetch_max_usize, fetch_sub_saturating_usize, lock_named, wait_named};
+use crate::sync::{Condvar, Mutex};
 
 use super::fault::{Fault, FaultPlan};
 use super::job::{JobCosts, JobMetrics, MergeError, Mergeable, WorkerMetrics};
@@ -186,21 +188,21 @@ impl<T> NotifyQueue<T> {
     }
 
     fn push(&self, item: T) {
-        let mut s = self.state.lock().unwrap();
+        let mut s = lock_named(&self.state, "task queue");
         s.q.push_back(item);
         drop(s);
         self.cv.notify_one();
     }
 
     fn push_all(&self, items: impl IntoIterator<Item = T>) {
-        let mut s = self.state.lock().unwrap();
+        let mut s = lock_named(&self.state, "task queue");
         s.q.extend(items);
         drop(s);
         self.cv.notify_all();
     }
 
     fn pop(&self) -> Option<T> {
-        let mut s = self.state.lock().unwrap();
+        let mut s = lock_named(&self.state, "task queue");
         loop {
             if let Some(item) = s.q.pop_front() {
                 return Some(item);
@@ -208,14 +210,14 @@ impl<T> NotifyQueue<T> {
             if s.closed {
                 return None;
             }
-            s = self.cv.wait(s).unwrap();
+            s = wait_named(&self.cv, s, "task queue");
         }
     }
 
     /// Close the queue and drop anything not yet started; blocked `pop`s
     /// return `None`.
     fn close(&self) {
-        let mut s = self.state.lock().unwrap();
+        let mut s = lock_named(&self.state, "task queue");
         s.q.clear();
         s.closed = true;
         drop(s);
@@ -236,11 +238,11 @@ impl Gate {
     }
 
     fn add(&self, k: usize) {
-        *self.n.lock().unwrap() += k;
+        *lock_named(&self.n, "countdown gate") += k;
     }
 
     fn done_one(&self) {
-        let mut n = self.n.lock().unwrap();
+        let mut n = lock_named(&self.n, "countdown gate");
         *n -= 1;
         if *n == 0 {
             self.cv.notify_all();
@@ -248,9 +250,9 @@ impl Gate {
     }
 
     fn wait_zero(&self) {
-        let mut n = self.n.lock().unwrap();
+        let mut n = lock_named(&self.n, "countdown gate");
         while *n > 0 {
-            n = self.cv.wait(n).unwrap();
+            n = wait_named(&self.cv, n, "countdown gate");
         }
     }
 }
@@ -280,7 +282,7 @@ pub(crate) fn merge_maps<K: Ord, V: Mergeable>(
 
 /// Record the first merge failure (later ones are echoes of the same bug).
 fn record_merge_failure(store: &Mutex<Option<String>>, context: &str, e: MergeError) {
-    let mut slot = store.lock().unwrap();
+    let mut slot = lock_named(store, "merge-failure slot");
     if slot.is_none() {
         *slot = Some(format!("{context}: {e}"));
     }
@@ -313,7 +315,7 @@ impl ResidentGauge {
 
     fn add(&self, bytes: usize) {
         let now = self.cur.fetch_add(bytes, Ordering::Relaxed) + bytes;
-        self.peak.fetch_max(now, Ordering::Relaxed);
+        fetch_max_usize(&self.peak, now);
     }
 
     /// Saturating: a `Mergeable` whose merge *grows* the payload would
@@ -321,11 +323,7 @@ impl ResidentGauge {
     /// the counter; the gauge stays a (possibly approximate) upper bound
     /// instead.
     fn sub(&self, bytes: usize) {
-        let _ = self
-            .cur
-            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |c| {
-                Some(c.saturating_sub(bytes))
-            });
+        fetch_sub_saturating_usize(&self.cur, bytes);
     }
 
     fn peak(&self) -> usize {
@@ -356,7 +354,7 @@ fn merge_key_from<K: Ord, V: Mergeable>(
         return Ok(None);
     }
     {
-        let mut slot = slots[node].lock().unwrap();
+        let mut slot = lock_named(&slots[node], "merge slot");
         if let Some(map) = slot.as_mut() {
             let v = map.remove(key);
             if let Some(v) = &v {
@@ -578,46 +576,45 @@ where
                     // at each node is the value the reduce tree would have
                     // computed anyway.  (unwind-guarded like map_fn: a
                     // panicking merge_in must fail the job, not a gate)
-                    let climbed: Result<_, MergeError> = std::panic::catch_unwind(
-                        std::panic::AssertUnwindSafe(|| {
-                        let mut node = tree.leaf(task_id);
-                        let mut value = emitter.map;
-                        if combine {
-                            while node > 1 {
-                                let sib = tree.sibling(node);
-                                if node & 1 == 0 {
-                                    // left child: an all-padding right sibling
-                                    // merges as a no-op
-                                    if tree.is_empty(sib) {
-                                        node = tree.parent(node);
-                                        continue;
-                                    }
-                                    match combiner.remove(&sib) {
-                                        Some(right) => {
-                                            value = merge_maps(value, right)?;
+                    let climbed: Result<_, MergeError> =
+                        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                            let mut node = tree.leaf(task_id);
+                            let mut value = emitter.map;
+                            if combine {
+                                while node > 1 {
+                                    let sib = tree.sibling(node);
+                                    if node & 1 == 0 {
+                                        // left child: an all-padding right
+                                        // sibling merges as a no-op
+                                        if tree.is_empty(sib) {
                                             node = tree.parent(node);
+                                            continue;
                                         }
-                                        None => break,
-                                    }
-                                } else {
-                                    // right child: the left sibling is never
-                                    // padding (spans are left-aligned)
-                                    match combiner.remove(&sib) {
-                                        Some(left) => {
-                                            value = merge_maps(left, value)?;
-                                            node = tree.parent(node);
+                                        match combiner.remove(&sib) {
+                                            Some(right) => {
+                                                value = merge_maps(value, right)?;
+                                                node = tree.parent(node);
+                                            }
+                                            None => break,
                                         }
-                                        None => break,
+                                    } else {
+                                        // right child: the left sibling is never
+                                        // padding (spans are left-aligned)
+                                        match combiner.remove(&sib) {
+                                            Some(left) => {
+                                                value = merge_maps(left, value)?;
+                                                node = tree.parent(node);
+                                            }
+                                            None => break,
+                                        }
                                     }
                                 }
                             }
-                        }
                             Ok((node, value))
-                        }),
-                    )
-                    .unwrap_or_else(|payload| {
-                        Err(MergeError::new(panic_message(payload.as_ref())))
-                    });
+                        }))
+                        .unwrap_or_else(|payload| {
+                            Err(MergeError::new(panic_message(payload.as_ref())))
+                        });
                     match climbed {
                         Ok((node, value)) => {
                             combiner.insert(node, value);
@@ -639,30 +636,47 @@ where
                 // map queue closed — flush combiner output into the shared
                 // tree slots.  First writer wins; duplicate completions are
                 // bit-identical by the map-purity contract, so ties are
-                // value-neutral.
-                let mut payloads = 0usize;
-                let mut bytes = 0usize;
-                let mut max_entry = 0usize;
-                let mut pre_combined = 0usize;
-                for (node, value) in combiner {
-                    let mut slot = slots[node].lock().unwrap();
-                    if slot.is_none() {
-                        for v in value.values() {
-                            let b = std::mem::size_of::<K>() + v.payload_bytes();
-                            bytes += b;
-                            max_entry = max_entry.max(b);
-                        }
-                        *slot = Some(value);
-                        payloads += 1;
-                        if node < tree.first_leaf() {
-                            pre_combined += 1;
+                // value-neutral.  Unwind-guarded: `payload_bytes()` is user
+                // trait code running while we HOLD a slot mutex — a panic
+                // here must still reach `flushed.done_one()` (or the leader
+                // deadlocks at the flush gate) and must fail the job by
+                // name (the poisoned slot is recovered by `lock_named` on
+                // every later access).
+                let flush = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+                    let mut payloads = 0usize;
+                    let mut bytes = 0usize;
+                    let mut max_entry = 0usize;
+                    let mut pre_combined = 0usize;
+                    for (node, value) in combiner {
+                        let mut slot = lock_named(&slots[node], "merge slot");
+                        if slot.is_none() {
+                            for v in value.values() {
+                                let b = std::mem::size_of::<K>() + v.payload_bytes();
+                                bytes += b;
+                                max_entry = max_entry.max(b);
+                            }
+                            *slot = Some(value);
+                            payloads += 1;
+                            if node < tree.first_leaf() {
+                                pre_combined += 1;
+                            }
                         }
                     }
+                    (payloads, bytes, max_entry, pre_combined)
+                }));
+                match flush {
+                    Ok((payloads, bytes, max_entry, pre_combined)) => {
+                        payload_count.fetch_add(payloads, Ordering::Relaxed);
+                        payload_bytes.fetch_add(bytes, Ordering::Relaxed);
+                        fetch_max_usize(payload_max, max_entry);
+                        combined_count.fetch_add(pre_combined, Ordering::Relaxed);
+                    }
+                    Err(payload) => record_merge_failure(
+                        merge_failure,
+                        "combiner flush",
+                        MergeError::new(panic_message(payload.as_ref())),
+                    ),
                 }
-                payload_count.fetch_add(payloads, Ordering::Relaxed);
-                payload_bytes.fetch_add(bytes, Ordering::Relaxed);
-                payload_max.fetch_max(max_entry, Ordering::Relaxed);
-                combined_count.fetch_add(pre_combined, Ordering::Relaxed);
                 flushed.done_one();
                 match retire {
                     // reduce phase (tree mode): execute tree merges as the
@@ -670,8 +684,8 @@ where
                     // disjoint slots.
                     None => {
                         while let Some(node) = reduce_queue.pop() {
-                            let left = slots[2 * node].lock().unwrap().take();
-                            let right = slots[2 * node + 1].lock().unwrap().take();
+                            let left = lock_named(&slots[2 * node], "merge slot").take();
+                            let right = lock_named(&slots[2 * node + 1], "merge slot").take();
                             let merged = match (left, right) {
                                 (Some(l), Some(r)) => {
                                     // unwind-guarded: level_pending.done_one()
@@ -698,7 +712,7 @@ where
                                 (Some(l), None) => Some(l),
                                 (None, r) => r,
                             };
-                            *slots[node].lock().unwrap() = merged;
+                            *lock_named(&slots[node], "merge slot") = merged;
                             level_pending.done_one();
                         }
                     }
@@ -830,7 +844,7 @@ where
                     let mut covered = vec![false; tree.node_count()];
                     for node in 1..tree.node_count() {
                         covered[node] = (node > 1 && covered[node >> 1])
-                            || slots[node].lock().unwrap().is_some();
+                            || lock_named(&slots[node], "merge slot").is_some();
                     }
                     for lvl in (0..tree.depth()).rev() {
                         let jobs: Vec<usize> = tree
@@ -854,7 +868,7 @@ where
                     // are never consumed by the per-key replay.
                     let mut keys: BTreeSet<K> = BTreeSet::new();
                     for slot in slots.iter().skip(1) {
-                        if let Some(map) = slot.lock().unwrap().as_ref() {
+                        if let Some(map) = lock_named(slot, "merge slot").as_ref() {
                             keys.extend(map.keys().cloned());
                         }
                     }
@@ -873,13 +887,13 @@ where
     });
 
     if failure.is_none() {
-        failure = merge_failure.lock().unwrap().take();
+        failure = lock_named(&merge_failure, "merge-failure slot").take();
     }
     if let Some(msg) = failure {
         bail!("mapreduce job failed: {msg}");
     }
 
-    let output = slots[1].lock().unwrap().take().unwrap_or_default();
+    let output = lock_named(&slots[1], "merge slot").take().unwrap_or_default();
     metrics.reduce_merges += retire_merges.load(Ordering::Relaxed);
     metrics.reduce_resident_bytes_peak = reduce_gauge.peak();
     metrics.shuffle_payloads = payload_count.load(Ordering::Relaxed);
@@ -891,6 +905,160 @@ where
     metrics.real_s = started.elapsed().as_secs_f64();
     metrics.modeled_overhead_s = cfg.costs.overhead_s(n_tasks, workers);
     Ok(JobOutput { output, metrics })
+}
+
+/// Bounded loom models of the engine's slot/queue protocols.  Compiled
+/// only under `RUSTFLAGS="--cfg loom"` with the `loom` crate added (the
+/// CI `loom` job does both); every test is named `loom_…` so the job can
+/// select them with `cargo test --lib loom_`.
+#[cfg(all(test, loom))]
+mod loom_models {
+    use super::*;
+    use crate::sync::Arc;
+
+    /// Preemption bound 2 covers every lost-wakeup/deadlock shape these
+    /// small protocols can express while keeping each model in the
+    /// thousands-of-interleavings range (loom prints the explored count
+    /// per model under `--nocapture`).
+    fn check(model: impl Fn() + Send + Sync + 'static) {
+        let mut builder = loom::model::Builder::new();
+        builder.preemption_bound = Some(2);
+        builder.check(model);
+    }
+
+    /// Task-queue protocol: every pushed item is consumed exactly once,
+    /// `close` wakes every parked consumer, and no interleaving loses a
+    /// wakeup (a lost wakeup parks a consumer forever and loom reports
+    /// the deadlock).
+    #[test]
+    fn loom_task_queue_drains_and_closes_without_lost_wakeups() {
+        check(|| {
+            let q = Arc::new(NotifyQueue::new());
+            let consumed = Arc::new(Gate::new(2));
+            let seen = Arc::new(Mutex::new(Vec::new()));
+            let consumers: Vec<_> = (0..2)
+                .map(|_| {
+                    let q = Arc::clone(&q);
+                    let consumed = Arc::clone(&consumed);
+                    let seen = Arc::clone(&seen);
+                    loom::thread::spawn(move || {
+                        while let Some(item) = q.pop() {
+                            lock_named(&seen, "loom seen").push(item);
+                            consumed.done_one();
+                        }
+                    })
+                })
+                .collect();
+            q.push(1usize);
+            q.push_all([2usize]);
+            // the leader's shape: wait for full consumption (the flush
+            // gate), then close the queue so blocked pops return None
+            consumed.wait_zero();
+            q.close();
+            for c in consumers {
+                c.join().unwrap();
+            }
+            let mut got = std::mem::take(&mut *lock_named(&seen, "loom seen"));
+            got.sort_unstable();
+            assert_eq!(got, vec![1, 2], "each item popped exactly once");
+        });
+    }
+
+    /// Merge-slot protocol: a combined root and a chaos duplicate of the
+    /// same root (plus a stale task copy leaked below it) race to flush —
+    /// first writer wins, the root materializes exactly once, and the
+    /// per-key replay never consumes the duplicate under the covered node.
+    #[test]
+    fn loom_merge_slot_claim_covers_duplicates_exactly_once() {
+        check(|| {
+            let tree = MergeTree::new(2);
+            let slots: Arc<Vec<Mutex<Option<BTreeMap<usize, u64>>>>> =
+                Arc::new((0..tree.node_count()).map(|_| Mutex::new(None)).collect());
+            let a = {
+                let slots = Arc::clone(&slots);
+                loom::thread::spawn(move || {
+                    // worker A combined both tasks up to the root: 10 + 11
+                    let mut m = BTreeMap::new();
+                    m.insert(0usize, 21u64);
+                    let mut slot = lock_named(&slots[1], "merge slot");
+                    if slot.is_none() {
+                        *slot = Some(m);
+                    }
+                })
+            };
+            let b = {
+                let slots = Arc::clone(&slots);
+                let leaf = tree.leaf(0);
+                loom::thread::spawn(move || {
+                    // straggler B: a bit-identical duplicate of the root
+                    // (duplicate completions ARE identical by map purity)…
+                    let mut dup = BTreeMap::new();
+                    dup.insert(0usize, 21u64);
+                    let mut slot = lock_named(&slots[1], "merge slot");
+                    if slot.is_none() {
+                        *slot = Some(dup);
+                    }
+                    drop(slot);
+                    // …and a stale single-task copy below the covered root
+                    let mut stale = BTreeMap::new();
+                    stale.insert(0usize, 10u64);
+                    let mut slot = lock_named(&slots[leaf], "merge slot");
+                    if slot.is_none() {
+                        *slot = Some(stale);
+                    }
+                })
+            };
+            a.join().unwrap();
+            b.join().unwrap();
+            let gauge = ResidentGauge::new();
+            let mut merges = 0usize;
+            let got = merge_key_from(&tree, &slots, 1, &0usize, &mut merges, &gauge)
+                .unwrap()
+                .expect("root value present");
+            assert_eq!(got, 21, "the merged root, whichever writer won");
+            assert_eq!(merges, 0, "the stale copy below the root is never consumed");
+        });
+    }
+
+    /// Per-key reduce: two owning reducers replay *different* keys through
+    /// the SAME slot mutexes concurrently — both terminate (identical
+    /// root-down lock order), each key merges its own fragments exactly
+    /// once, and the shared residency gauge never loses an update.
+    #[test]
+    fn loom_concurrent_key_replays_share_slots_without_interference() {
+        check(|| {
+            let tree = MergeTree::new(2);
+            let slots: Arc<Vec<Mutex<Option<BTreeMap<usize, u64>>>>> =
+                Arc::new((0..tree.node_count()).map(|_| Mutex::new(None)).collect());
+            for (leaf_task, (v0, v1)) in [(1u64, 5u64), (2, 7)].into_iter().enumerate() {
+                let mut m = BTreeMap::new();
+                m.insert(0usize, v0);
+                m.insert(1usize, v1);
+                *lock_named(&slots[tree.leaf(leaf_task)], "merge slot") = Some(m);
+            }
+            let gauge = Arc::new(ResidentGauge::new());
+            let reducers: Vec<_> = [0usize, 1]
+                .into_iter()
+                .map(|key| {
+                    let slots = Arc::clone(&slots);
+                    let gauge = Arc::clone(&gauge);
+                    loom::thread::spawn(move || {
+                        let tree = MergeTree::new(2);
+                        let mut merges = 0usize;
+                        let v = merge_key_from(&tree, &slots, 1, &key, &mut merges, &gauge)
+                            .unwrap()
+                            .expect("key present in both leaves");
+                        assert_eq!(merges, 1, "one merge per key, key {key}");
+                        v
+                    })
+                })
+                .collect();
+            let got: Vec<u64> =
+                reducers.into_iter().map(|h| h.join().unwrap()).collect();
+            assert_eq!(got, vec![3, 12]);
+            assert!(gauge.peak() >= 8, "the gauge saw payloads move");
+        });
+    }
 }
 
 #[cfg(test)]
@@ -1281,6 +1449,81 @@ mod tests {
         }
     }
 
+    /// A payload whose byte accounting panics.  `payload_bytes()` is the
+    /// one piece of user trait code the engine runs while HOLDING a
+    /// merge-slot mutex (the combiner flush), so this drives the
+    /// poisoned-lock path deterministically on every worker.
+    #[derive(Debug)]
+    struct PoisonBytes;
+
+    impl Mergeable for PoisonBytes {
+        fn merge_in(&mut self, _other: Self) -> Result<(), MergeError> {
+            Ok(())
+        }
+        fn payload_bytes(&self) -> usize {
+            panic!("payload accounting panicked");
+        }
+    }
+
+    #[test]
+    fn panic_under_a_held_merge_slot_fails_by_name_not_poison_cascade() {
+        // Regression (PR 8 satellite): a panic inside the combiner flush
+        // used to unwind with the slot mutex held — stranding the flush
+        // gate (leader deadlock) and poisoning the slot so the next
+        // `.lock().unwrap()` panicked a different, innocent worker.  With
+        // the unwind guard + poison-recovering `lock_named`, the job must
+        // return the ORIGINAL panic message at every worker count.
+        let inputs: Vec<u64> = (0..8).collect();
+        for workers in [1usize, 4, 8] {
+            let res = run_job(
+                &EngineConfig::with_workers(workers),
+                &inputs,
+                |_c: &TaskCtx, &v, em: &mut Emitter<usize, PoisonBytes>| {
+                    em.emit((v % 3) as usize, PoisonBytes);
+                },
+            );
+            let err = format!("{:#}", res.expect_err("must fail"));
+            assert!(err.contains("combiner flush"), "w={workers}: {err}");
+            assert!(err.contains("payload accounting panicked"), "w={workers}: {err}");
+            assert!(err.contains("mapreduce job failed"), "w={workers}: {err}");
+        }
+    }
+
+    /// A value whose merge panics outright (worse than `Unique`'s clean
+    /// `Err`): the pool must fail the job by name in both reduce modes.
+    #[derive(Debug)]
+    struct PanicMerge;
+
+    impl Mergeable for PanicMerge {
+        fn merge_in(&mut self, _other: Self) -> Result<(), MergeError> {
+            panic!("merge_in panicked");
+        }
+    }
+
+    #[test]
+    fn panicking_merge_fails_job_by_name_in_both_reduce_modes() {
+        let inputs: Vec<u64> = (0..8).collect();
+        let mut cfg = EngineConfig::with_workers(4);
+        cfg.combine = false; // force the merges into the reduce phase
+        let res = run_job(&cfg, &inputs, |_c: &TaskCtx, &_v, em: &mut Emitter<usize, PanicMerge>| {
+            em.emit(0usize, PanicMerge);
+        });
+        let err = format!("{:#}", res.expect_err("tree mode must fail"));
+        assert!(err.contains("reduce-tree node"), "{err}");
+        assert!(err.contains("merge_in panicked"), "{err}");
+        let res = run_job_retire(
+            &cfg,
+            &inputs,
+            |_c: &TaskCtx, &_v, em: &mut Emitter<usize, PanicMerge>| {
+                em.emit(0usize, PanicMerge);
+            },
+            |_k, _v| Ok(()),
+        );
+        let err = format!("{:#}", res.expect_err("retire mode must fail"));
+        assert!(err.contains("per-key reduce"), "{err}");
+        assert!(err.contains("merge_in panicked"), "{err}");
+    }
+
     #[test]
     fn suffstats_shuffle_bytes_are_packed_size() {
         // the acceptance-criterion accounting: a SuffStats payload ships
@@ -1403,7 +1646,10 @@ mod tests {
             })
             .collect();
         let assigner = FoldAssigner::new(k, 123);
-        let sink: Mutex<BTreeMap<usize, SuffStats>> = Mutex::new(BTreeMap::new());
+        // test sinks use std::sync::Mutex explicitly: they want
+        // `into_inner()` and are not part of any modeled protocol
+        let sink: std::sync::Mutex<BTreeMap<usize, SuffStats>> =
+            std::sync::Mutex::new(BTreeMap::new());
         run_job_retire(
             cfg,
             &splits,
@@ -1460,7 +1706,7 @@ mod tests {
         let data = splits(16, 64);
         let mut cfg = EngineConfig::with_workers(4);
         cfg.combine = false;
-        let sink: Mutex<BTreeMap<usize, u64>> = Mutex::new(BTreeMap::new());
+        let sink: std::sync::Mutex<BTreeMap<usize, u64>> = std::sync::Mutex::new(BTreeMap::new());
         let metrics = run_job_retire(
             &cfg,
             &data,
@@ -1510,7 +1756,7 @@ mod tests {
 
     #[test]
     fn retire_mode_single_task_and_empty_jobs() {
-        let sink: Mutex<BTreeMap<usize, u64>> = Mutex::new(BTreeMap::new());
+        let sink: std::sync::Mutex<BTreeMap<usize, u64>> = std::sync::Mutex::new(BTreeMap::new());
         let m = run_job_retire(
             &EngineConfig::with_workers(4),
             &splits(1, 30),
@@ -1529,7 +1775,7 @@ mod tests {
         let total: u64 = sink.into_inner().unwrap().values().sum();
         assert_eq!(total, 30);
         // empty input: no keys, no retirements, no deadlock
-        let sink: Mutex<BTreeMap<usize, u64>> = Mutex::new(BTreeMap::new());
+        let sink: std::sync::Mutex<BTreeMap<usize, u64>> = std::sync::Mutex::new(BTreeMap::new());
         let empty: Vec<Vec<u64>> = Vec::new();
         let m = run_job_retire(
             &EngineConfig::with_workers(2),

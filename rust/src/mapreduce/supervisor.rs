@@ -27,16 +27,19 @@
 //! [`super::engine::merge_maps`] the in-process pool uses — transport
 //! timing never touches a float.
 
-use std::collections::{HashMap, VecDeque};
+// children/conns are BTreeMaps so scheduling scans and teardown walk
+// workers in id order — assignment and log order reproduce run-to-run
+use std::collections::{BTreeMap, VecDeque};
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::{Path, PathBuf};
 use std::process::{Child, Command, Stdio};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{self, RecvTimeoutError};
-use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
+
+use crate::sync::atomic::{AtomicBool, Ordering};
+use crate::sync::{lock_named, Arc, Mutex};
 
 use super::engine::panic_message;
 use super::fault::{Fault, FaultPlan};
@@ -44,7 +47,9 @@ use super::job::{JobMetrics, WorkerMetrics};
 use super::transport::{read_frame, write_frame, Message};
 
 /// Task closure run by in-process *thread* workers (test-only stand-ins
-/// that speak the real socket protocol).
+/// that speak the real socket protocol).  Held in a `std::sync::Arc`
+/// (not the shim's): loom's `Arc` cannot unsize-coerce to `dyn Fn`, and
+/// the closure is configuration, not modeled protocol state.
 #[cfg(test)]
 type ThreadTask = dyn Fn(&[u8], u64) -> std::result::Result<Vec<u8>, String> + Send + Sync;
 
@@ -65,7 +70,7 @@ pub struct ProcConfig {
     pub worker_bin: PathBuf,
     /// test-only: run workers as threads speaking the real protocol
     #[cfg(test)]
-    pub(crate) thread_workers: Option<Arc<ThreadTask>>,
+    pub(crate) thread_workers: Option<std::sync::Arc<ThreadTask>>,
 }
 
 impl ProcConfig {
@@ -116,8 +121,10 @@ struct SocketGuard {
 
 impl SocketGuard {
     fn new() -> SocketGuard {
-        static SEQ: AtomicU64 = AtomicU64::new(0);
-        let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+        // std, not the shim: loom atomics are not const-constructible and
+        // a process-global uniqueness counter is not modeled state
+        static SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+        let seq = SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         let path = std::env::temp_dir()
             .join(format!("plrmr-sock-{}-{seq}", std::process::id()));
         let _ = std::fs::remove_file(&path);
@@ -182,7 +189,7 @@ impl WorkerHandle {
 fn spawn_worker(cfg: &ProcConfig, socket: &Path, worker_id: u64) -> Result<WorkerHandle> {
     #[cfg(test)]
     if let Some(task) = &cfg.thread_workers {
-        let task = Arc::clone(task);
+        let task = std::sync::Arc::clone(task);
         let socket = socket.to_path_buf();
         let hb = cfg.heartbeat_ms;
         return Ok(WorkerHandle::Thread(std::thread::spawn(move || {
@@ -331,7 +338,7 @@ pub fn run_proc_job(
     // plan can never respawn forever: each attempt loses at most one
     // worker, and each lost worker is replaced at most once
     let spawn_budget = workers + n_tasks * cfg.fault.max_attempts + 4;
-    let mut children: HashMap<u64, WorkerHandle> = HashMap::new();
+    let mut children: BTreeMap<u64, WorkerHandle> = BTreeMap::new();
     let mut next_worker_id = 0u64;
     let mut spawns_used = 0usize;
     let mut spawn_failure: Option<String> = None;
@@ -349,7 +356,7 @@ pub fn run_proc_job(
         }
     }
 
-    let mut conns: HashMap<u64, Conn> = HashMap::new();
+    let mut conns: BTreeMap<u64, Conn> = BTreeMap::new();
     let mut idle: VecDeque<u64> = VecDeque::new();
     let mut pending: VecDeque<(usize, usize)> = (0..n_tasks).map(|t| (t, 0)).collect();
     let mut backoff: Vec<(Instant, usize, usize)> = Vec::new();
@@ -630,7 +637,8 @@ pub fn run_proc_job(
         let _ = write_frame(&mut &c.stream, &Message::Shutdown);
     }
     stop_accept.store(true, Ordering::Relaxed);
-    for (_, h) in children.drain() {
+    // consume by move (BTreeMap has no `drain`); children is done after this
+    for (_, h) in children {
         h.shutdown();
     }
     let _ = accept_handle.join();
@@ -673,7 +681,7 @@ pub fn worker_serve(
         .with_context(|| format!("worker {worker_id}: connect {socket_path:?}"))?;
     let mut read = stream.try_clone().context("clone worker stream")?;
     let write = Arc::new(Mutex::new(stream));
-    write_frame(&mut *write.lock().unwrap(), &Message::Hello { worker_id })?;
+    write_frame(&mut *lock_named(&write, "worker write stream"), &Message::Hello { worker_id })?;
 
     let stop = Arc::new(AtomicBool::new(false));
     let mute = std::env::var_os("PLRMR_WORKER_MUTE").is_some();
@@ -686,8 +694,10 @@ pub fn worker_serve(
                 if stop.load(Ordering::Relaxed) {
                     break;
                 }
-                let sent =
-                    write_frame(&mut *write.lock().unwrap(), &Message::Heartbeat { worker_id });
+                let sent = write_frame(
+                    &mut *lock_named(&write, "worker write stream"),
+                    &Message::Heartbeat { worker_id },
+                );
                 if sent.is_err() {
                     break;
                 }
@@ -731,7 +741,7 @@ pub fn worker_serve(
                         }
                     }
                 };
-                if write_frame(&mut *write.lock().unwrap(), &reply).is_err() {
+                if write_frame(&mut *lock_named(&write, "worker write stream"), &reply).is_err() {
                     break;
                 }
             }
@@ -749,7 +759,7 @@ mod tests {
 
     fn echo_cfg(workers: usize) -> ProcConfig {
         let mut cfg = ProcConfig::new(workers, PathBuf::new());
-        cfg.thread_workers = Some(Arc::new(|setup: &[u8], task: u64| {
+        cfg.thread_workers = Some(std::sync::Arc::new(|setup: &[u8], task: u64| {
             let mut out = setup.to_vec();
             out.extend_from_slice(&task.to_le_bytes());
             Ok(out)
@@ -802,7 +812,7 @@ mod tests {
     fn failing_task_fn_surfaces_its_message_after_retries() {
         let mut cfg = echo_cfg(2);
         cfg.fault.max_attempts = 2;
-        cfg.thread_workers = Some(Arc::new(|_setup: &[u8], task: u64| {
+        cfg.thread_workers = Some(std::sync::Arc::new(|_setup: &[u8], task: u64| {
             if task == 1 {
                 Err("synthetic task failure".into())
             } else {

@@ -4,9 +4,9 @@
 //! backend is compared against).
 
 use std::collections::BTreeMap;
-use std::sync::Mutex;
 
 use crate::stats::tiles::StatPanel;
+use crate::sync::{lock_named, Mutex};
 
 use super::{panel_bytes, PanelKey, PanelStore, StoreError, StoreMetrics, StoreResult};
 
@@ -30,7 +30,7 @@ impl MemStore {
 
 impl PanelStore for MemStore {
     fn put(&self, key: PanelKey, panel: StatPanel) -> StoreResult<()> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = lock_named(&self.inner, "mem store");
         if inner.panels.contains_key(&key) {
             return Err(StoreError::DoubleRetire(key));
         }
@@ -46,7 +46,7 @@ impl PanelStore for MemStore {
     }
 
     fn get(&self, key: PanelKey) -> StoreResult<StatPanel> {
-        let inner = self.inner.lock().unwrap();
+        let inner = lock_named(&self.inner, "mem store");
         inner
             .panels
             .get(&key)
@@ -55,15 +55,15 @@ impl PanelStore for MemStore {
     }
 
     fn contains(&self, key: PanelKey) -> bool {
-        self.inner.lock().unwrap().panels.contains_key(&key)
+        lock_named(&self.inner, "mem store").panels.contains_key(&key)
     }
 
     fn keys(&self) -> Vec<PanelKey> {
-        self.inner.lock().unwrap().panels.keys().copied().collect()
+        lock_named(&self.inner, "mem store").panels.keys().copied().collect()
     }
 
     fn remove(&self, key: PanelKey) -> StoreResult<()> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = lock_named(&self.inner, "mem store");
         let panel = inner.panels.remove(&key).ok_or(StoreError::Missing(key))?;
         inner.metrics.panels -= 1;
         inner.metrics.resident_bytes -= panel_bytes(&panel);
@@ -88,7 +88,7 @@ impl PanelStore for MemStore {
     }
 
     fn metrics(&self) -> StoreMetrics {
-        self.inner.lock().unwrap().metrics
+        lock_named(&self.inner, "mem store").metrics
     }
 
     fn budget_bytes(&self) -> Option<usize> {

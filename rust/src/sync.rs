@@ -1,0 +1,161 @@
+//! The one concurrency surface of the crate: a `std`/`loom` switching shim
+//! plus the poison-propagating lock helpers every protocol path goes
+//! through.
+//!
+//! Normally `Mutex`, `Condvar`, `Arc` and the atomics re-export straight
+//! from `std::sync`.  Under `RUSTFLAGS="--cfg loom"` (the CI `loom` job)
+//! they re-export from the `loom` model checker instead, so the engine's
+//! task queue, the merge-tree slots, and the spill store's admission
+//! protocol can be exhaustively model-checked over bounded interleavings
+//! — see the `loom_models` modules in [`crate::mapreduce::engine`] and
+//! [`crate::store::spill`].  The `loom` crate is intentionally *not* a
+//! manifest dependency: the normal build never needs it, and the loom CI
+//! job `cargo add`s it before setting the cfg.
+//!
+//! ## Poison policy
+//!
+//! A worker that panics while holding a lock poisons it; the *next*
+//! `.lock().unwrap()` would then panic a different, innocent thread,
+//! cascading one bug into a pool-wide crash (and deadlocking the leader's
+//! gates, which count on every worker surviving to its `done_one`).  The
+//! engine already converts panics into a recorded, named job failure at
+//! every unwind boundary, so the state under a poisoned lock is exactly
+//! as consistent as the recorded failure says it is.  [`lock_named`] and
+//! [`wait_named`] therefore *recover* the guard from a poisoned lock and
+//! keep going — the job still fails, but with the original panic message,
+//! not `PoisonError` noise from a bystander thread.
+//!
+//! Raw `.lock().unwrap()` outside this module (test modules aside) is a
+//! detlint error (`raw-lock`), which is what keeps the policy total.
+//!
+//! ## What stays on `std`
+//!
+//! `static` atomics (spill-dir and socket-path sequence counters) stay on
+//! `std::sync::atomic` even under loom: loom atomics are not
+//! const-constructible and process-global counters are not part of any
+//! modeled protocol.
+
+#[cfg(not(loom))]
+pub use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+#[cfg(loom)]
+pub use loom::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+/// Atomics matching the `Mutex`/`Condvar` selection above.
+pub mod atomic {
+    #[cfg(not(loom))]
+    pub use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+
+    #[cfg(loom)]
+    pub use loom::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+}
+
+/// Lock `m`, recovering the guard if the mutex is poisoned.
+///
+/// `name` identifies the lock in debug contexts (and makes every call
+/// site say what it is guarding); the data is as consistent as the
+/// already-recorded failure of whichever thread panicked — see the module
+/// docs for why recovery is the right policy here.
+pub fn lock_named<'a, T>(m: &'a Mutex<T>, _name: &'static str) -> MutexGuard<'a, T> {
+    match m.lock() {
+        Ok(guard) => guard,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// Block on `cv` with `guard`, recovering the guard if the mutex was
+/// poisoned while we slept.  Same policy as [`lock_named`].
+pub fn wait_named<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    _name: &'static str,
+) -> MutexGuard<'a, T> {
+    match cv.wait(guard) {
+        Ok(guard) => guard,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// Lock-free max update (`a = max(a, val)`, relaxed) via compare-exchange.
+///
+/// `std`'s `fetch_max` is not in loom's atomic API, so the shim provides
+/// the one formulation that model-checks and runs identically on both.
+pub fn fetch_max_usize(a: &atomic::AtomicUsize, val: usize) {
+    use atomic::Ordering;
+    let mut cur = a.load(Ordering::Relaxed);
+    while val > cur {
+        match a.compare_exchange_weak(cur, val, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(now) => cur = now,
+        }
+    }
+}
+
+/// Lock-free saturating subtract (`a = a.saturating_sub(val)`, relaxed).
+/// Same compare-exchange formulation as [`fetch_max_usize`], for the same
+/// loom-portability reason (`fetch_update` is std-only).
+pub fn fetch_sub_saturating_usize(a: &atomic::AtomicUsize, val: usize) {
+    use atomic::Ordering;
+    let mut cur = a.load(Ordering::Relaxed);
+    loop {
+        let next = cur.saturating_sub(val);
+        match a.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(now) => cur = now,
+        }
+    }
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lock_named_recovers_a_poisoned_mutex() {
+        let m = Arc::new(Mutex::new(7usize));
+        let m2 = Arc::clone(&m);
+        let panicked = std::thread::spawn(move || {
+            let _guard = lock_named(&m2, "about to poison");
+            panic!("poisoning the mutex");
+        })
+        .join();
+        assert!(panicked.is_err(), "the poisoning thread must have panicked");
+        assert!(m.lock().is_err(), "the mutex really is poisoned");
+        // recovery: the guard comes back with the pre-panic state intact
+        assert_eq!(*lock_named(&m, "after poison"), 7);
+        *lock_named(&m, "after poison") = 8;
+        assert_eq!(*lock_named(&m, "after poison"), 8);
+    }
+
+    #[test]
+    fn wait_named_observes_the_notified_state() {
+        let pair = Arc::new((Mutex::new(false), Condvar::new()));
+        let pair2 = Arc::clone(&pair);
+        let waiter = std::thread::spawn(move || {
+            let (flag, cv) = &*pair2;
+            let mut ready = lock_named(flag, "ready flag");
+            while !*ready {
+                ready = wait_named(cv, ready, "ready flag");
+            }
+        });
+        {
+            let (flag, cv) = &*pair;
+            *lock_named(flag, "ready flag") = true;
+            cv.notify_all();
+        }
+        waiter.join().unwrap();
+    }
+
+    #[test]
+    fn fetch_max_and_saturating_sub_helpers() {
+        let a = atomic::AtomicUsize::new(5);
+        fetch_max_usize(&a, 3);
+        assert_eq!(a.load(atomic::Ordering::Relaxed), 5);
+        fetch_max_usize(&a, 9);
+        assert_eq!(a.load(atomic::Ordering::Relaxed), 9);
+        fetch_sub_saturating_usize(&a, 4);
+        assert_eq!(a.load(atomic::Ordering::Relaxed), 5);
+        fetch_sub_saturating_usize(&a, 100);
+        assert_eq!(a.load(atomic::Ordering::Relaxed), 0, "saturates, never wraps");
+    }
+}

@@ -1,0 +1,462 @@
+//! `detlint` — the in-repo determinism linter.
+//!
+//! The bit-identity matrix (packed = tiled = spilled = screened = sparse =
+//! proc-workers, bit for bit) is enforced *dynamically* by tests; this
+//! module is the static counterpart.  It walks `rust/src` and flags the
+//! hazard patterns that historically break run-to-run reproducibility:
+//!
+//! * **`raw-lock`** — `.lock().unwrap()` / `.lock().expect(…)` anywhere
+//!   outside [`crate::sync`].  Raw lock+unwrap turns one worker's panic
+//!   into a `PoisonError` cascade in innocent threads; the shim's
+//!   `lock_named`/`wait_named` carry the poison policy instead.
+//! * **`hash-collection`** — `HashMap`/`HashSet`.  Their iteration order
+//!   is randomized per process; any walk that feeds emitted, merged,
+//!   scheduled or logged output reorders run-to-run.  Use
+//!   `BTreeMap`/`BTreeSet`, or name the exception in the allowlist.
+//! * **`time-in-keyed`** — `Instant::now`/`SystemTime::now` inside keyed
+//!   paths (map/merge/store/solver code).  Wall-clock metrics around a
+//!   phase are fine (and allowlisted); time *inside* keyed logic is how
+//!   timing sneaks into payloads.
+//! * **`rand-nondet`** — `thread_rng`/`from_entropy`/`RandomState`/
+//!   `rand::random` inside keyed paths.  All randomness must come from
+//!   the crate's seeded [`crate::rng`].
+//! * **`float-accum`** — `.sum::<f64>()`-style iterator accumulation in
+//!   keyed paths outside the sanctioned kernel modules (`stats/*`, where
+//!   summation order is pinned and Kahan-compensated).  Unpinned float
+//!   accumulation is exactly the non-associativity the fixed merge tree
+//!   exists to contain.
+//!
+//! Scanning is line-based and deliberately dumb: comments are stripped
+//! (everything from the first `//`), and a file stops being scanned at
+//! its trailing `#[cfg(test…)] mod …` block — tests may use whatever they
+//! like.  Every surviving exception must be named in `detlint.allow`
+//! (`rule path-suffix  # justification`), and unused allow entries are
+//! themselves errors, so the list cannot rot.
+//!
+//! Run it as `cargo detlint` (alias for `cargo run --bin detlint`); CI
+//! runs it beside clippy.  The library half lives here so a unit test can
+//! assert the current tree is clean (`detlint_passes_on_the_current_tree`).
+
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// Path prefixes (relative to `src/`, `/`-separated) considered *keyed*:
+/// code on these paths computes, merges, stores or schedules the
+/// deterministic statistics and therefore gets the stricter rule set.
+pub const KEYED_PREFIXES: &[&str] =
+    &["mapreduce/", "store/", "stats/", "cv/", "solver/", "coordinator/", "data/"];
+
+/// Where a rule applies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Scope {
+    /// every scanned file
+    All,
+    /// files under [`KEYED_PREFIXES`]
+    Keyed,
+    /// keyed files minus the sanctioned float-kernel modules (`stats/`)
+    KeyedNonKernel,
+}
+
+struct Rule {
+    name: &'static str,
+    needles: &'static [&'static str],
+    scope: Scope,
+    why: &'static str,
+}
+
+const RULES: &[Rule] = &[
+    Rule {
+        name: "raw-lock",
+        needles: &[".lock().unwrap()", ".lock().expect("],
+        scope: Scope::All,
+        why: "bypasses the poison policy; use crate::sync::{lock_named, wait_named}",
+    },
+    Rule {
+        name: "hash-collection",
+        needles: &["HashMap", "HashSet"],
+        scope: Scope::All,
+        why: "iteration order is randomized per process; use BTreeMap/BTreeSet",
+    },
+    Rule {
+        name: "time-in-keyed",
+        needles: &["Instant::now", "SystemTime::now"],
+        scope: Scope::Keyed,
+        why: "wall-clock reads on a keyed path can leak timing into keyed logic",
+    },
+    Rule {
+        name: "rand-nondet",
+        needles: &["thread_rng", "from_entropy", "RandomState", "rand::random"],
+        scope: Scope::Keyed,
+        why: "unseeded randomness on a keyed path; use the seeded crate::rng",
+    },
+    Rule {
+        name: "float-accum",
+        needles: &[".sum::<f64>(", ".sum::<f32>(", ".product::<f64>(", ".product::<f32>("],
+        scope: Scope::KeyedNonKernel,
+        why: "unpinned float accumulation outside the sanctioned stats kernels",
+    },
+];
+
+/// One hazard the linter found (after allowlist filtering, in [`Report`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// rule name, e.g. `raw-lock`
+    pub rule: &'static str,
+    /// path relative to the scanned root, `/`-separated
+    pub path: String,
+    /// 1-based line number
+    pub line: usize,
+    /// the offending line, comment-stripped and trimmed
+    pub excerpt: String,
+    /// one-line rationale for the rule
+    pub why: &'static str,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {}\n    {}",
+            self.path, self.line, self.rule, self.why, self.excerpt
+        )
+    }
+}
+
+/// One parsed `detlint.allow` entry: `rule path-suffix  # justification`.
+#[derive(Debug, Clone)]
+struct Allow {
+    rule: String,
+    suffix: String,
+    line: usize,
+    used: bool,
+}
+
+/// The outcome of one linter run.
+#[derive(Debug, Default)]
+pub struct Report {
+    /// hazards NOT covered by the allowlist — each one fails the run
+    pub findings: Vec<Finding>,
+    /// hazards suppressed by a named allowlist entry
+    pub allowed: usize,
+    /// allowlist entries that matched nothing — each one fails the run,
+    /// so stale exceptions cannot linger unreviewed
+    pub unused_allows: Vec<String>,
+    /// files scanned (sanity signal that the walk found the tree)
+    pub files_scanned: usize,
+}
+
+impl Report {
+    pub fn is_clean(&self) -> bool {
+        self.findings.is_empty() && self.unused_allows.is_empty()
+    }
+}
+
+/// Run the linter over every `.rs` file under `src_root`, filtering
+/// through the allowlist at `allow_path` (a missing allowlist is an empty
+/// one).  Deterministic by construction: files are visited in sorted
+/// path order, lines top to bottom, rules in declaration order.
+pub fn run(src_root: &Path, allow_path: &Path) -> Result<Report> {
+    let mut allows = parse_allowlist(allow_path)?;
+    let mut files = Vec::new();
+    collect_rs_files(src_root, src_root, &mut files)?;
+    files.sort();
+
+    let mut report = Report::default();
+    for rel in &files {
+        if !scan_whole_file(rel) {
+            continue;
+        }
+        report.files_scanned += 1;
+        let text = fs::read_to_string(src_root.join(rel))
+            .with_context(|| format!("read {rel} under {src_root:?}"))?;
+        for finding in scan_file(rel, &text) {
+            match allows
+                .iter_mut()
+                .find(|a| a.rule == finding.rule && finding.path.ends_with(&a.suffix))
+            {
+                Some(a) => {
+                    a.used = true;
+                    report.allowed += 1;
+                }
+                None => report.findings.push(finding),
+            }
+        }
+    }
+    for a in &allows {
+        if !a.used {
+            report
+                .unused_allows
+                .push(format!("{} {} (detlint.allow line {})", a.rule, a.suffix, a.line));
+        }
+    }
+    Ok(report)
+}
+
+/// Files the linter never scans: its own sources (whose rule tables
+/// contain every needle verbatim) and the thin CLI wrapper around them.
+fn scan_whole_file(rel: &str) -> bool {
+    rel != "util/detlint.rs" && !rel.starts_with("bin/")
+}
+
+/// Rule-level exemptions: `sync.rs` IS the sanctioned lock surface.
+fn rule_applies(rule: &Rule, rel: &str) -> bool {
+    if rule.name == "raw-lock" && rel == "sync.rs" {
+        return false;
+    }
+    match rule.scope {
+        Scope::All => true,
+        Scope::Keyed => KEYED_PREFIXES.iter().any(|p| rel.starts_with(p)),
+        Scope::KeyedNonKernel => {
+            KEYED_PREFIXES.iter().any(|p| rel.starts_with(p)) && !rel.starts_with("stats/")
+        }
+    }
+}
+
+fn scan_file(rel: &str, text: &str) -> Vec<Finding> {
+    let lines: Vec<&str> = text.lines().collect();
+    let mut findings = Vec::new();
+    for (idx, raw) in lines.iter().enumerate() {
+        if starts_test_module(&lines, idx) {
+            break;
+        }
+        // strip line comments (also covers `///` and `//!` docs); a `//`
+        // inside a string literal truncates the scan of that line, which
+        // can only hide, never invent, a finding
+        let code = raw.split("//").next().unwrap_or("").trim();
+        if code.is_empty() {
+            continue;
+        }
+        for rule in RULES {
+            if !rule_applies(rule, rel) {
+                continue;
+            }
+            if rule.needles.iter().any(|n| code.contains(n)) {
+                findings.push(Finding {
+                    rule: rule.name,
+                    path: rel.to_string(),
+                    line: idx + 1,
+                    excerpt: code.to_string(),
+                    why: rule.why,
+                });
+            }
+        }
+    }
+    findings
+}
+
+/// True when line `idx` opens the file's test block: a `#[cfg(…test…)]`
+/// attribute whose next substantive line (skipping further attributes and
+/// comments) declares a `mod`.  Scanning stops there — everything below
+/// is test code, exempt by design.  `#[cfg(test)]` on individual items
+/// (fields, helpers) does NOT stop the scan.
+fn starts_test_module(lines: &[&str], idx: usize) -> bool {
+    let t = lines[idx].trim();
+    if !(t.starts_with("#[cfg(") && t.contains("test")) {
+        return false;
+    }
+    for next in lines.iter().skip(idx + 1) {
+        let n = next.trim();
+        if n.is_empty() || n.starts_with("#[") || n.starts_with("//") {
+            continue;
+        }
+        return ["mod ", "pub mod ", "pub(crate) mod "].iter().any(|p| n.starts_with(p));
+    }
+    false
+}
+
+fn collect_rs_files(root: &Path, dir: &Path, out: &mut Vec<String>) -> Result<()> {
+    let entries =
+        fs::read_dir(dir).with_context(|| format!("walk source directory {dir:?}"))?;
+    for entry in entries {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs_files(root, &path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            let rel = path
+                .strip_prefix(root)
+                .unwrap_or(&path)
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy())
+                .collect::<Vec<_>>()
+                .join("/");
+            out.push(rel);
+        }
+    }
+    Ok(())
+}
+
+fn parse_allowlist(path: &Path) -> Result<Vec<Allow>> {
+    let Ok(text) = fs::read_to_string(path) else {
+        return Ok(Vec::new());
+    };
+    let known: Vec<&str> = RULES.iter().map(|r| r.name).collect();
+    let mut allows = Vec::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let (Some(rule), Some(suffix), None) = (parts.next(), parts.next(), parts.next()) else {
+            bail!(
+                "detlint.allow line {}: expected `rule path-suffix  # justification`, got {raw:?}",
+                idx + 1
+            );
+        };
+        if !known.contains(&rule) {
+            bail!(
+                "detlint.allow line {}: unknown rule {rule:?} (known: {})",
+                idx + 1,
+                known.join(", ")
+            );
+        }
+        let justification = raw.split('#').nth(1).map(str::trim).unwrap_or("");
+        if justification.is_empty() {
+            bail!(
+                "detlint.allow line {}: every exception needs a `# justification`",
+                idx + 1
+            );
+        }
+        allows.push(Allow {
+            rule: rule.to_string(),
+            suffix: suffix.to_string(),
+            line: idx + 1,
+            used: false,
+        });
+    }
+    Ok(allows)
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+
+    /// Unique scratch dir per fixture (no tempfile dep in this crate).
+    fn fixture(files: &[(&str, &str)], allow: &str) -> (PathBuf, PathBuf) {
+        static SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+        let seq = SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let root = std::env::temp_dir()
+            .join(format!("plrmr-detlint-{}-{seq}", std::process::id()));
+        let src = root.join("src");
+        for (rel, text) in files {
+            let path = src.join(rel);
+            fs::create_dir_all(path.parent().unwrap()).unwrap();
+            fs::write(path, text).unwrap();
+        }
+        let allow_path = root.join("detlint.allow");
+        fs::write(&allow_path, allow).unwrap();
+        (src, allow_path)
+    }
+
+    fn rules_hit(report: &Report) -> Vec<&'static str> {
+        report.findings.iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn each_rule_fires_in_its_scope_and_not_outside() {
+        let (src, allow) = fixture(
+            &[
+                ("mapreduce/engine.rs", "fn f() { let _g = m.lock().unwrap(); }\n"),
+                ("store/spill.rs", "use std::collections::HashMap;\n"),
+                ("solver/cd.rs", "let t = Instant::now();\nlet s: f64 = xs.iter().sum::<f64>();\n"),
+                ("cv/folds.rs", "let r = thread_rng();\n"),
+                // out of scope: timing in util/, accumulation in stats/
+                ("util/timer.rs", "let t = Instant::now();\n"),
+                ("stats/kahan.rs", "let s: f64 = xs.iter().sum::<f64>();\n"),
+                ("sync.rs", "let g = m.lock().unwrap();\n"),
+            ],
+            "",
+        );
+        let report = run(&src, &allow).unwrap();
+        let mut hit = rules_hit(&report);
+        hit.sort();
+        assert_eq!(
+            hit,
+            vec!["float-accum", "hash-collection", "rand-nondet", "raw-lock", "time-in-keyed"]
+        );
+        assert_eq!(report.findings.len(), 5, "{:#?}", report.findings);
+        assert_eq!(report.files_scanned, 7);
+        let _ = fs::remove_dir_all(src.parent().unwrap());
+    }
+
+    #[test]
+    fn comments_and_trailing_test_modules_are_exempt() {
+        let text = "\
+// HashMap in a comment is fine
+/// so is .lock().unwrap() in docs
+fn real() {}
+#[cfg(test)]
+mod tests {
+    use std::collections::HashMap; // tests may hash
+    fn t() { let _g = m.lock().unwrap(); }
+}
+";
+        let (src, allow) = fixture(&[("mapreduce/engine.rs", text)], "");
+        let report = run(&src, &allow).unwrap();
+        assert!(report.is_clean(), "{:#?}", report.findings);
+        let _ = fs::remove_dir_all(src.parent().unwrap());
+    }
+
+    #[test]
+    fn cfg_test_on_an_item_does_not_stop_the_scan() {
+        let text = "\
+#[cfg(test)]
+type ThreadTask = u8;
+fn real() { let _g = m.lock().unwrap(); }
+";
+        let (src, allow) = fixture(&[("mapreduce/supervisor.rs", text)], "");
+        let report = run(&src, &allow).unwrap();
+        assert_eq!(rules_hit(&report), vec!["raw-lock"], "{:#?}", report.findings);
+        let _ = fs::remove_dir_all(src.parent().unwrap());
+    }
+
+    #[test]
+    fn allowlist_suppresses_by_suffix_and_flags_unused_entries() {
+        let (src, allow) = fixture(
+            &[("runtime/client.rs", "use std::collections::HashMap;\n")],
+            "hash-collection runtime/client.rs  # reviewed: cache keyed by path, never iterated\n\
+             raw-lock store/spill.rs            # stale entry, matches nothing\n",
+        );
+        let report = run(&src, &allow).unwrap();
+        assert!(report.findings.is_empty(), "{:#?}", report.findings);
+        assert_eq!(report.allowed, 1);
+        assert_eq!(report.unused_allows.len(), 1, "{:?}", report.unused_allows);
+        assert!(report.unused_allows[0].contains("store/spill.rs"));
+        assert!(!report.is_clean(), "unused entries must fail the run");
+        let _ = fs::remove_dir_all(src.parent().unwrap());
+    }
+
+    #[test]
+    fn allowlist_rejects_malformed_and_unjustified_entries() {
+        let (src, allow) = fixture(&[("a.rs", "fn a() {}\n")], "raw-lock\n");
+        assert!(run(&src, &allow).is_err(), "one-token entry must be rejected");
+        fs::write(&allow, "raw-lock store/spill.rs\n").unwrap();
+        let err = run(&src, &allow).unwrap_err().to_string();
+        assert!(err.contains("justification"), "{err}");
+        fs::write(&allow, "no-such-rule store/spill.rs # why\n").unwrap();
+        let err = run(&src, &allow).unwrap_err().to_string();
+        assert!(err.contains("unknown rule"), "{err}");
+        let _ = fs::remove_dir_all(src.parent().unwrap());
+    }
+
+    /// The self-check the CI step relies on: the crate's own tree, with
+    /// the checked-in allowlist, is clean.  If this fails, either remove
+    /// the hazard or add a *justified* entry to `detlint.allow`.
+    #[test]
+    fn detlint_passes_on_the_current_tree() {
+        let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let report = run(&manifest.join("src"), &manifest.join("../detlint.allow")).unwrap();
+        assert!(report.files_scanned > 20, "walk found only {} files", report.files_scanned);
+        let mut msg = String::new();
+        for f in &report.findings {
+            msg.push_str(&format!("{f}\n"));
+        }
+        for u in &report.unused_allows {
+            msg.push_str(&format!("unused allow entry: {u}\n"));
+        }
+        assert!(report.is_clean(), "detlint found hazards:\n{msg}");
+    }
+}

@@ -7,6 +7,7 @@
 //! experiments harness, and a tiny seeded property-testing loop ([`prop`])
 //! standing in for `proptest`.
 
+pub mod detlint;
 pub mod json;
 pub mod prop;
 pub mod table;
