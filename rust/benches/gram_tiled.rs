@@ -262,47 +262,63 @@ fn main() {
     };
     let mut spill_t = Table::new(vec![
         "store budget",
+        "prefetch",
         "resident peak",
         "spilled",
         "writes",
         "reads",
+        "pf issued",
+        "pf hit rate",
         "fit wall-clock",
     ]);
     let mut reference: Option<Vec<f64>> = None;
-    for (label, budget) in [
-        ("unbounded (mem)", 0usize),
-        ("8 panels", 8 * one_panel),
-        ("1 panel", one_panel),
+    for (label, budget, prefetch) in [
+        ("unbounded (mem)", 0usize, true),
+        ("8 panels", 8 * one_panel, false),
+        ("8 panels", 8 * one_panel, true),
+        ("1 panel", one_panel, false),
+        ("1 panel", one_panel, true),
     ] {
-        let cfg = FitConfig { store_budget_bytes: budget, ..sbase };
+        let cfg = FitConfig { store_budget_bytes: budget, ..sbase }.with_prefetch(prefetch);
         let t0 = std::time::Instant::now();
         let report = Driver::new(cfg).fit(&sdata).unwrap();
         let dt = t0.elapsed().as_secs_f64();
-        // exactness contract, not a benchmark outcome: the budget must
-        // never change a bit of the fit
+        // exactness contract, not a benchmark outcome: neither the budget
+        // nor the readahead may change a bit of the fit
         match &reference {
             None => reference = Some(report.model.beta.clone()),
-            Some(beta) => assert_eq!(&report.model.beta, beta, "budget changed the fit"),
+            Some(beta) => {
+                assert_eq!(&report.model.beta, beta, "budget/prefetch changed the fit")
+            }
         }
         if budget > 0 {
+            // exact admission: readahead never loosens the residency bound
             assert!(
-                report.resident_stat_bytes_peak <= budget,
+                report.resident_stat_bytes_peak <= budget.max(one_panel),
                 "resident {} over budget {budget}",
                 report.resident_stat_bytes_peak
             );
         }
+        let hit_rate = if report.prefetch_issued > 0 {
+            sig(report.prefetch_hits as f64 / report.prefetch_issued as f64, 3)
+        } else {
+            "-".to_string()
+        };
         spill_t.row(vec![
             label.to_string(),
+            if prefetch { "on" } else { "off" }.to_string(),
             fmt_bytes(report.resident_stat_bytes_peak),
             fmt_bytes(report.spill_bytes),
             format!("{}", report.spill_writes),
             format!("{}", report.spill_reads),
+            format!("{}", report.prefetch_issued),
+            hit_rate,
             plrmr::util::timer::fmt_secs(dt),
         ]);
     }
     println!(
         "spillable panel store at p={p_s}, b={b_s} (5 folds, CV on the worker\n\
-         pool; fit asserted bit-identical across budgets):\n{}\n",
+         pool; fit asserted bit-identical across budgets and prefetch on/off):\n{}\n",
         spill_t.render()
     );
 

@@ -142,6 +142,83 @@ fn main() {
         }
     }
 
+    // --- SIMD scatter microkernel vs the scalar oracle (§Perf) ----------
+    // Both paths run the identical mul-then-add expression per element
+    // (no FMA, no reassociation), so they are bit-identical by
+    // construction — asserted inline on every shape before timing.  The
+    // headline row is rank-4 dense at the largest p: the mapper's blocked
+    // centered-gram flush spends its time there.
+    {
+        use plrmr::stats::simd::{self, KernelMode};
+        let ps: &[usize] = if quick { &[128, 256] } else { &[1024, 4096] };
+        if !simd::simd_available() {
+            eprintln!("(no AVX2 on this host — forced-simd rows fall back to scalar)");
+        }
+        let same_bits =
+            |a: &[f64], b: &[f64]| a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits());
+        for &p in ps {
+            let d = p + 1;
+            let mut rng = Rng::seed_from(140 + p as u64);
+            let c: Vec<Vec<f64>> =
+                (0..4).map(|_| (0..d).map(|_| rng.normal()).collect()).collect();
+            // 10%-support sparse index set, sorted ascending as the
+            // kernels require
+            let idx: Vec<usize> = (0..d).filter(|_| rng.coin(0.1)).collect();
+
+            // contract first: a forced-scalar and a forced-simd pass over
+            // every kernel shape must agree bit-for-bit
+            let run_all = |mode: KernelMode| {
+                simd::set_kernel_override(mode);
+                let mut acc = SymMat::zeros(d);
+                acc.rank1(&c[0], 1.0);
+                acc.rank4(&c[0], &c[1], &c[2], &c[3]);
+                acc.rank1_sparse(&idx, &c[1], 1.0);
+                acc.rank4_sparse(&idx, &c[0], &c[1], &c[2], &c[3]);
+                simd::set_kernel_override(KernelMode::Auto);
+                acc
+            };
+            let oracle = run_all(KernelMode::Scalar);
+            let vector = run_all(KernelMode::Simd);
+            assert!(
+                same_bits(oracle.as_slice(), vector.as_slice()),
+                "SIMD kernels drifted from the scalar oracle (p={p})"
+            );
+
+            let mut rank4_means = Vec::new();
+            for (mode, name) in [(KernelMode::Scalar, "scalar"), (KernelMode::Simd, "simd")] {
+                simd::set_kernel_override(mode);
+                let mut acc = SymMat::zeros(d);
+                let r4 = bench(&format!("scatter rank4 dense {name} p={p}"), cfg, || {
+                    acc.rank4(&c[0], &c[1], &c[2], &c[3]);
+                    acc.as_slice()[0]
+                });
+                rank4_means.push(r4.mean_s);
+                op_results.push(r4);
+                let mut acc = SymMat::zeros(d);
+                op_results.push(bench(&format!("scatter rank1 dense {name} p={p}"), cfg, || {
+                    acc.rank1(&c[0], 1.0);
+                    acc.as_slice()[0]
+                }));
+                let mut acc = SymMat::zeros(d);
+                op_results.push(bench(
+                    &format!("scatter rank4_sparse {name} p={p} nz=0.1"),
+                    cfg,
+                    || {
+                        acc.rank4_sparse(&idx, &c[0], &c[1], &c[2], &c[3]);
+                        acc.as_slice()[0]
+                    },
+                ));
+                simd::set_kernel_override(KernelMode::Auto);
+            }
+            if simd::simd_available() && rank4_means[1] > 0.0 {
+                println!(
+                    "scatter rank4 dense p={p}: simd is {}x scalar",
+                    plrmr::util::table::sig(rank4_means[0] / rank4_means[1], 3)
+                );
+            }
+        }
+    }
+
     // --- merge / sub at p=64 ---
     {
         let p = 64;

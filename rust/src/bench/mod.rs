@@ -128,6 +128,7 @@ pub fn render_job_phases(results: &[(String, JobMetrics)]) -> String {
         "run", "map", "shuffle", "reduce", "total", "merge frac",
         "payloads", "bytes", "max key", "skipped", "pre-combined",
         "leader merges", "retries", "max attempts", "deadlines", "hb missed",
+        "pf issued", "pf hits", "pf wasted",
     ]);
     for (name, m) in results {
         t.row(vec![
@@ -147,6 +148,9 @@ pub fn render_job_phases(results: &[(String, JobMetrics)]) -> String {
             format!("{}", m.attempts_max),
             format!("{}", m.deadline_expirations),
             format!("{}", m.heartbeats_missed),
+            format!("{}", m.prefetch_issued),
+            format!("{}", m.prefetch_hits),
+            format!("{}", m.prefetch_wasted),
         ]);
     }
     t.render()
@@ -200,6 +204,8 @@ mod tests {
             combined_nodes: 2,
             reduce_merges: 3,
             panels_skipped: 7,
+            prefetch_issued: 5,
+            prefetch_hits: 4,
             ..Default::default()
         };
         let s = render_job_phases(&[("w=4".to_string(), m)]);
@@ -211,6 +217,9 @@ mod tests {
         assert!(s.contains("hb missed"));
         assert!(s.contains("skipped"), "sparse suppression column present");
         assert!(s.contains("| 7"), "panels_skipped rendered");
+        assert!(s.contains("pf issued"), "prefetch columns present");
+        assert!(s.contains("| 5"), "prefetch_issued rendered");
+        assert!(s.contains("| 4"), "prefetch_hits rendered");
     }
 
     #[test]

@@ -10,6 +10,7 @@ use anyhow::{bail, Context, Result};
 use crate::mapreduce::{EngineConfig, FaultPlan, JobCosts};
 use crate::solver::cd::CdSettings;
 use crate::solver::penalty::Penalty;
+use crate::stats::simd::KernelMode;
 
 /// Everything Algorithm 1 needs.
 #[derive(Debug, Clone, Copy)]
@@ -58,6 +59,17 @@ pub struct FitConfig {
     /// (`JobMetrics::panels_skipped`).  Bit-identical output to the dense
     /// path on the same data at any setting of the other knobs.
     pub sparse: bool,
+    /// spill-store readahead: when the panel store spills
+    /// (`store_budget_bytes > 0`), a background prefetcher loads upcoming
+    /// panels along the driver's deterministic access plan ahead of
+    /// compute.  Purely an optimization — output is bit-identical either
+    /// way and the residency bound is unchanged (`--no-prefetch` for A/B)
+    pub prefetch: bool,
+    /// scatter microkernel selection ([`crate::stats::simd`]): `Auto`
+    /// (default) uses the SIMD kernel when the CPU supports it, `Scalar` /
+    /// `Simd` force one side — both produce bit-identical statistics; the
+    /// override exists for A/B benches and the bit-identity tests
+    pub kernel: KernelMode,
     /// out-of-process worker runtime: number of worker *processes* to
     /// supervise (0 ⇒ the default in-process thread pool).  Requires the
     /// tiled statistics path (`gram_block > 0`) — task payloads travel as
@@ -94,6 +106,8 @@ impl Default for FitConfig {
             store_budget_bytes: 0,
             screen_auto: 4096,
             sparse: false,
+            prefetch: true,
+            kernel: KernelMode::Auto,
             proc_workers: 0,
             heartbeat_ms: 50,
             task_deadline_ms: 30_000,
@@ -160,6 +174,18 @@ impl FitConfig {
     /// shuffle suppression on the tiled path).
     pub fn with_sparse(mut self, on: bool) -> Self {
         self.sparse = on;
+        self
+    }
+
+    /// Spill-store readahead (`false` ⇒ demand loads only).
+    pub fn with_prefetch(mut self, on: bool) -> Self {
+        self.prefetch = on;
+        self
+    }
+
+    /// Scatter microkernel selection (`Auto` / `Scalar` / `Simd`).
+    pub fn with_kernel(mut self, mode: KernelMode) -> Self {
+        self.kernel = mode;
         self
     }
 
@@ -247,6 +273,11 @@ impl FitConfig {
                 "store_budget_bytes" => cfg.store_budget_bytes = val.parse()?,
                 "screen_auto" => cfg.screen_auto = val.parse()?,
                 "sparse" => cfg.sparse = val.parse()?,
+                "prefetch" => cfg.prefetch = val.parse()?,
+                "kernel" => {
+                    cfg.kernel = KernelMode::parse(val)
+                        .with_context(|| format!("unknown kernel mode {val:?} (auto|scalar|simd)"))?
+                }
                 "proc_workers" => cfg.proc_workers = val.parse()?,
                 "heartbeat_ms" => cfg.heartbeat_ms = val.parse()?,
                 "task_deadline_ms" => cfg.task_deadline_ms = val.parse()?,
@@ -332,6 +363,23 @@ mod tests {
         assert_eq!(FitConfig::default().proc_workers, 0, "process runtime is opt-in");
         let c = FitConfig::default().with_gram_block(4).with_proc_workers(3);
         assert_eq!(c.proc_workers, 3);
+    }
+
+    #[test]
+    fn prefetch_and_kernel_knobs_default_and_parse() {
+        let d = FitConfig::default();
+        assert!(d.prefetch, "readahead is on by default");
+        assert_eq!(d.kernel, KernelMode::Auto, "kernel dispatch is auto by default");
+        let c = FitConfig::default()
+            .with_prefetch(false)
+            .with_kernel(KernelMode::Scalar);
+        assert!(!c.prefetch);
+        assert_eq!(c.kernel, KernelMode::Scalar);
+        let cfg = FitConfig::from_kv_pairs("prefetch=false\nkernel=simd\n").unwrap();
+        assert!(!cfg.prefetch);
+        assert_eq!(cfg.kernel, KernelMode::Simd);
+        let err = FitConfig::from_kv_pairs("kernel=banana").unwrap_err();
+        assert!(format!("{err:#}").contains("kernel mode"), "{err:#}");
     }
 
     #[test]

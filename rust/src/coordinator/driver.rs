@@ -82,6 +82,15 @@ pub struct FitReport {
     pub spill_reads: usize,
     /// panel writes to spill files across the whole fit
     pub spill_writes: usize,
+    /// background prefetch loads the panel store issued across the fit
+    /// (0 unbudgeted or with `--no-prefetch`)
+    pub prefetch_issued: usize,
+    /// demand panel reads that found their panel already resident because
+    /// readahead loaded it first
+    pub prefetch_hits: usize,
+    /// prefetched panels evicted or removed before any demand read — a
+    /// spill read spent for nothing
+    pub prefetch_wasted: usize,
     /// SIS screening outcome when the `screen_auto` path engaged (p over
     /// the threshold); `None` for the exact full-p fit
     pub screened: Option<ScreenReport>,
@@ -112,6 +121,9 @@ struct Footprint {
     spill_bytes: usize,
     spill_reads: usize,
     spill_writes: usize,
+    prefetch_issued: usize,
+    prefetch_hits: usize,
+    prefetch_wasted: usize,
 }
 
 impl Footprint {
@@ -126,6 +138,9 @@ impl Footprint {
             spill_bytes: 0,
             spill_reads: 0,
             spill_writes: 0,
+            prefetch_issued: 0,
+            prefetch_hits: 0,
+            prefetch_wasted: 0,
         }
     }
 
@@ -146,6 +161,9 @@ impl Footprint {
             spill_bytes: sm.spill_bytes,
             spill_reads: sm.spill_reads,
             spill_writes: sm.spill_writes,
+            prefetch_issued: sm.prefetch_issued,
+            prefetch_hits: sm.prefetch_hits,
+            prefetch_wasted: sm.prefetch_wasted,
         }
     }
 }
@@ -340,6 +358,13 @@ impl Driver {
     /// [`FitConfig::validate`] for recoverable handling).
     pub fn new(cfg: FitConfig) -> Self {
         cfg.validate().expect("invalid FitConfig");
+        // Pin the scatter kernel process-wide when the config forces one
+        // (`Auto` leaves runtime detection / the PLRMR_KERNEL env override
+        // in charge) — both paths produce bit-identical statistics, this
+        // only selects which instruction sequence computes them.
+        if cfg.kernel != crate::stats::simd::KernelMode::Auto {
+            crate::stats::simd::set_kernel_override(cfg.kernel);
+        }
         Driver { cfg }
     }
 
@@ -394,7 +419,11 @@ impl Driver {
             let layout = TileLayout::new(p + 1, self.cfg.gram_block);
             let proto = SuffStats::new_tiled(p, self.cfg.gram_block);
             let backing: Box<dyn PanelStore> = if self.cfg.store_budget_bytes > 0 {
-                Box::new(SpillStore::new(self.cfg.store_budget_bytes).map_err(anyhow::Error::new)?)
+                Box::new(
+                    SpillStore::new(self.cfg.store_budget_bytes)
+                        .map_err(anyhow::Error::new)?
+                        .with_prefetch(self.cfg.prefetch),
+                )
             } else {
                 Box::new(MemStore::new())
             };
@@ -441,6 +470,9 @@ impl Driver {
             metrics.spill_bytes = sm.spill_bytes;
             metrics.spill_reads = sm.spill_reads;
             metrics.spill_writes = sm.spill_writes;
+            metrics.prefetch_issued = sm.prefetch_issued;
+            metrics.prefetch_hits = sm.prefetch_hits;
+            metrics.prefetch_wasted = sm.prefetch_wasted;
             metrics.panels_skipped = fold_store.zero_panels();
             Ok((StatsJob::Stored(fold_store), metrics))
         }
@@ -614,6 +646,9 @@ impl Driver {
             spill_bytes: footprint.spill_bytes,
             spill_reads: footprint.spill_reads,
             spill_writes: footprint.spill_writes,
+            prefetch_issued: footprint.prefetch_issued,
+            prefetch_hits: footprint.prefetch_hits,
+            prefetch_wasted: footprint.prefetch_wasted,
             screened,
         }
     }
@@ -873,6 +908,9 @@ impl Driver {
             spill_bytes: footprint.spill_bytes,
             spill_reads: footprint.spill_reads,
             spill_writes: footprint.spill_writes,
+            prefetch_issued: footprint.prefetch_issued,
+            prefetch_hits: footprint.prefetch_hits,
+            prefetch_wasted: footprint.prefetch_wasted,
             screened,
         })
     }

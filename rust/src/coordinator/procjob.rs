@@ -437,7 +437,11 @@ fn run_stats_proc(
     let merged = replay_tree_merge(leaves)?;
     let layout = TileLayout::new(p + 1, cfg.gram_block);
     let backing: Box<dyn PanelStore> = if cfg.store_budget_bytes > 0 {
-        Box::new(SpillStore::new(cfg.store_budget_bytes).map_err(anyhow::Error::new)?)
+        Box::new(
+            SpillStore::new(cfg.store_budget_bytes)
+                .map_err(anyhow::Error::new)?
+                .with_prefetch(cfg.prefetch),
+        )
     } else {
         Box::new(MemStore::new())
     };
@@ -455,6 +459,9 @@ fn run_stats_proc(
     metrics.spill_bytes = sm.spill_bytes;
     metrics.spill_reads = sm.spill_reads;
     metrics.spill_writes = sm.spill_writes;
+    metrics.prefetch_issued = sm.prefetch_issued;
+    metrics.prefetch_hits = sm.prefetch_hits;
+    metrics.prefetch_wasted = sm.prefetch_wasted;
     metrics.panels_skipped = store.zero_panels();
     Ok((store, metrics))
 }

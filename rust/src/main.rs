@@ -52,6 +52,7 @@ commands:
              [--workers W] [--seed S] [--gram-block B] [--store-budget BYTES]
              [--workers-proc W] [--heartbeat-ms MS] [--task-deadline-ms MS]
              [--screen-auto P] [--sparse] [--x-density D] [--config FILE]
+             [--kernel auto|scalar|simd] [--no-prefetch]
              [--out MODEL] [--curve]
   predict    --model MODEL --csv FILE [--out FILE]
   experiments <t1|t2|t3|t4|t5|f1|f2|f3|all> [--quick] [--workers W]
@@ -69,7 +70,7 @@ fn parse_flags(args: &[String]) -> Result<(Vec<String>, BTreeMap<String, String>
         let a = &args[i];
         if let Some(name) = a.strip_prefix("--") {
             // boolean flags
-            if matches!(name, "quick" | "curve" | "sparse") {
+            if matches!(name, "quick" | "curve" | "sparse" | "no-prefetch") {
                 flags.insert(name.to_string(), "true".to_string());
                 i += 1;
                 continue;
@@ -233,6 +234,17 @@ fn build_config(f: &BTreeMap<String, String>) -> Result<FitConfig> {
         // shuffle suppression — bit-identical output to the dense path
         cfg.sparse = true;
     }
+    if f.contains_key("no-prefetch") {
+        // disable the spill store's readahead (results are bit-identical
+        // either way; this is the A/B knob for the prefetch pipeline)
+        cfg.prefetch = false;
+    }
+    if let Some(k) = f.get("kernel") {
+        // pin the scatter microkernel: auto (runtime detection, the
+        // default), scalar, or simd — all bit-identical by construction
+        cfg.kernel = plrmr::stats::simd::KernelMode::parse(k)
+            .with_context(|| format!("unknown kernel mode {k:?} (auto|scalar|simd)"))?;
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -307,6 +319,14 @@ fn cmd_fit(args: &[String]) -> Result<()> {
             plrmr::bench::fmt_bytes(report.spill_bytes),
             report.spill_writes,
             report.spill_reads,
+        );
+    }
+    if report.prefetch_issued > 0 {
+        println!(
+            "panel prefetch: {} issued, {} demand hits, {} wasted",
+            report.prefetch_issued,
+            report.prefetch_hits,
+            report.prefetch_wasted,
         );
     }
     if let Some(s) = &report.screened {

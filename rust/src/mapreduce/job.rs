@@ -252,6 +252,15 @@ pub struct JobMetrics {
     /// `shuffle_bytes` reflects the compressed sizes automatically).
     /// Stamped by the job owner from the store sink; 0 on dense runs.
     pub panels_skipped: u64,
+    /// spill-store readahead claims issued by the background prefetcher
+    /// (stamped by the job owner from [`crate::store::StoreMetrics`]; 0
+    /// without a spill sink or with `--no-prefetch`)
+    pub prefetch_issued: usize,
+    /// demand panel reads that found their panel already prefetched
+    pub prefetch_hits: usize,
+    /// prefetched panels evicted or removed before any demand read —
+    /// readahead that cost a spill read for nothing
+    pub prefetch_wasted: usize,
     pub per_worker: Vec<WorkerMetrics>,
 }
 

@@ -29,12 +29,18 @@
 //!   pair becomes its own reduce key, so no shuffle payload or merge-tree
 //!   slot ever holds more than O(d·b) doubles — bit-identical to the
 //!   untiled packed path at every block size.
+//! * [`simd`] — the scatter microkernels: the rank-1/rank-4 row bodies
+//!   (dense and sparse) both backings delegate to, vectorized with a fixed
+//!   per-element mul-then-add order so the SIMD path is bit-identical to
+//!   the scalar oracle by construction (`--kernel` / `PLRMR_KERNEL`
+//!   force either side).
 //! * [`naive`] — the textbook raw-sum accumulator, kept as the numerically
 //!   fragile comparator for experiment T4.
 
 pub mod kahan;
 pub mod moments;
 pub mod naive;
+pub mod simd;
 pub mod suffstats;
 pub mod symm;
 pub mod tiles;

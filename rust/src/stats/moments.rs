@@ -257,6 +257,8 @@ impl<S: Scatter> Moments<S> {
     /// outer-product updates: each packed-m2 element is touched once per
     /// FOUR rows (4× the arithmetic intensity of the streaming rank-1
     /// path), with all five streams (m2 row + 4 centered rows) contiguous.
+    /// The `rank4`/`rank1` calls land in [`crate::stats::simd`] through
+    /// the backing, so this flush is what the vector path accelerates.
     fn block_moments(&self, b: usize, chunk: &[f64]) -> Moments<S> {
         let d = self.d;
         let bf = b as f64;

@@ -1,0 +1,589 @@
+//! The deterministic scatter microkernels: one home for the row bodies of
+//! `rank1`/`rank4` and their `_sparse` twins, shared by BOTH [`super::Scatter`]
+//! backings ([`super::SymMat`] row loops and [`super::TiledSymMat`] panel
+//! rows delegate here), with an AVX2 vectorization that is **bit-identical
+//! to the scalar path by construction**.
+//!
+//! Why vectorizing is bit-safe at all: every packed-triangle element is
+//! updated independently —
+//!
+//! ```text
+//! rank1:  m[t] += di * dj[t]
+//! rank4:  m[t] += ((a0*r0[t] + a1*r1[t]) + a2*r2[t]) + a3*r3[t]
+//! ```
+//!
+//! — there is no cross-element dependency and no reduction, so a SIMD lane
+//! may evaluate element `t` as long as it evaluates the *identical scalar
+//! expression*: explicit multiply then add (`_mm256_mul_pd` +
+//! `_mm256_add_pd`, never `_mm256_fmadd_pd` — FMA contracts the rounding
+//! step and drifts the low bits), left-associated in the rank-4 sum, with
+//! the remainder elements falling through to the very scalar loop the
+//! vector body replaces.  No horizontal reductions exist anywhere.
+//!
+//! The sparse kernels vectorize by **run detection**: consecutive support
+//! indices `j, j+1, …` address consecutive elements in both the source
+//! (`delta[j]`) and the destination (`row[j − i]`), so each maximal run is
+//! handed to the dense row kernel and singletons stay scalar — the per-pair
+//! expression and the fixed `(i ascending, j ≥ i ascending)` order are
+//! untouched.
+//!
+//! Dispatch: runtime AVX2 detection (`is_x86_feature_detected!`), overridden
+//! by [`set_kernel_override`] (the driver wires `--kernel scalar|simd|auto`
+//! through it) or the `PLRMR_KERNEL` environment variable when no explicit
+//! override is set — CI runs the `kernel_bit_identity_*` suite once forced
+//! scalar and once forced SIMD.  Forcing [`KernelMode::Simd`] on a host
+//! without AVX2 falls back to scalar (executing unsupported instructions
+//! would be UB, and the two paths are bitwise-equal anyway).
+//!
+//! detlint: this module is the sanctioned-kernel boundary for SIMD — the
+//! `simd-intrinsics` rule confines `std::arch`/`target_feature`/intrinsic
+//! `unsafe` to this file, exactly as float accumulation is confined to
+//! `stats/`.  The scalar kernels stay `pub` as the property-test oracle.
+
+// the dispatch-mode cell is a const-init static, not part of a modeled
+// lock protocol — it stays on std atomics even under `--cfg loom`
+// (same policy as the spill-dir sequence counter)
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Which kernel the scatter row loops dispatch to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KernelMode {
+    /// runtime feature detection picks (the default)
+    #[default]
+    Auto,
+    /// force the portable scalar kernels (the oracle path)
+    Scalar,
+    /// force the SIMD kernels (falls back to scalar on hosts without AVX2)
+    Simd,
+}
+
+impl KernelMode {
+    /// Parse a CLI/env spelling (`auto` | `scalar` | `simd`).
+    pub fn parse(s: &str) -> Option<KernelMode> {
+        match s {
+            "auto" => Some(KernelMode::Auto),
+            "scalar" => Some(KernelMode::Scalar),
+            "simd" => Some(KernelMode::Simd),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            KernelMode::Auto => "auto",
+            KernelMode::Scalar => "scalar",
+            KernelMode::Simd => "simd",
+        }
+    }
+}
+
+/// 0 = unset (consult `PLRMR_KERNEL`, then auto-detect); else mode + 1.
+static OVERRIDE: AtomicU8 = AtomicU8::new(0);
+/// memoized `PLRMR_KERNEL` parse: 0 = not read yet; else mode + 1.
+static ENV_MODE: AtomicU8 = AtomicU8::new(0);
+
+fn encode(mode: KernelMode) -> u8 {
+    match mode {
+        KernelMode::Auto => 1,
+        KernelMode::Scalar => 2,
+        KernelMode::Simd => 3,
+    }
+}
+
+fn decode(v: u8) -> Option<KernelMode> {
+    match v {
+        1 => Some(KernelMode::Auto),
+        2 => Some(KernelMode::Scalar),
+        3 => Some(KernelMode::Simd),
+        _ => None,
+    }
+}
+
+/// Pin the dispatch mode for this process (the `--kernel` knob).  An
+/// explicit override wins over the `PLRMR_KERNEL` environment variable.
+pub fn set_kernel_override(mode: KernelMode) {
+    OVERRIDE.store(encode(mode), Ordering::Relaxed);
+}
+
+fn env_mode() -> KernelMode {
+    match decode(ENV_MODE.load(Ordering::Relaxed)) {
+        Some(m) => m,
+        None => {
+            let m = std::env::var("PLRMR_KERNEL")
+                .ok()
+                .and_then(|s| KernelMode::parse(&s))
+                .unwrap_or(KernelMode::Auto);
+            // benign race: every thread parses the same env to the same mode
+            ENV_MODE.store(encode(m), Ordering::Relaxed);
+            m
+        }
+    }
+}
+
+/// The mode dispatch will use: explicit override, else `PLRMR_KERNEL`,
+/// else [`KernelMode::Auto`].
+pub fn kernel_mode() -> KernelMode {
+    decode(OVERRIDE.load(Ordering::Relaxed)).unwrap_or_else(env_mode)
+}
+
+/// Does this host have the AVX2 kernels at all?
+pub fn simd_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Will the row kernels actually vectorize right now?  (Mode + detection —
+/// what the benches print next to their SIMD-vs-scalar ratios.)
+pub fn simd_active() -> bool {
+    match kernel_mode() {
+        KernelMode::Scalar => false,
+        KernelMode::Auto | KernelMode::Simd => simd_available(),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// scalar oracles — the exact row bodies the backings used before this module
+// ---------------------------------------------------------------------------
+
+/// `row[t] += di * tail[t]` — the [`super::SymMat::rank1`] row body.
+pub fn rank1_row_scalar(row: &mut [f64], tail: &[f64], di: f64) {
+    for (m, &dj) in row.iter_mut().zip(tail) {
+        *m += di * dj;
+    }
+}
+
+/// `row[t] += a0*r0[t] + a1*r1[t] + a2*r2[t] + a3*r3[t]` (left-associated)
+/// — the [`super::SymMat::rank4`] row body.
+#[allow(clippy::too_many_arguments)]
+pub fn rank4_row_scalar(
+    row: &mut [f64],
+    r0: &[f64],
+    r1: &[f64],
+    r2: &[f64],
+    r3: &[f64],
+    a0: f64,
+    a1: f64,
+    a2: f64,
+    a3: f64,
+) {
+    for (t, m) in row.iter_mut().enumerate() {
+        *m += a0 * r0[t] + a1 * r1[t] + a2 * r2[t] + a3 * r3[t];
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 kernels — mul-then-add, fixed per-element order, scalar remainder
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::{
+        _mm256_add_pd, _mm256_loadu_pd, _mm256_mul_pd, _mm256_set1_pd, _mm256_storeu_pd,
+    };
+
+    /// f64 lanes per AVX2 vector.
+    pub const LANES: usize = 4;
+
+    /// # Safety
+    /// Caller must have verified AVX2 is available on this host.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn rank1_row(row: &mut [f64], tail: &[f64], di: f64) {
+        debug_assert!(tail.len() >= row.len());
+        let n = row.len();
+        let vd = _mm256_set1_pd(di);
+        let mut t = 0usize;
+        while t + LANES <= n {
+            let m = _mm256_loadu_pd(row.as_ptr().add(t));
+            let x = _mm256_loadu_pd(tail.as_ptr().add(t));
+            // m + (di * x): the scalar `*m += di * dj`, one rounding per op
+            let s = _mm256_add_pd(m, _mm256_mul_pd(vd, x));
+            _mm256_storeu_pd(row.as_mut_ptr().add(t), s);
+            t += LANES;
+        }
+        while t < n {
+            *row.get_unchecked_mut(t) += di * *tail.get_unchecked(t);
+            t += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 is available on this host.
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn rank4_row(
+        row: &mut [f64],
+        r0: &[f64],
+        r1: &[f64],
+        r2: &[f64],
+        r3: &[f64],
+        a0: f64,
+        a1: f64,
+        a2: f64,
+        a3: f64,
+    ) {
+        debug_assert!(
+            r0.len() >= row.len()
+                && r1.len() >= row.len()
+                && r2.len() >= row.len()
+                && r3.len() >= row.len()
+        );
+        let n = row.len();
+        let (v0, v1) = (_mm256_set1_pd(a0), _mm256_set1_pd(a1));
+        let (v2, v3) = (_mm256_set1_pd(a2), _mm256_set1_pd(a3));
+        let mut t = 0usize;
+        while t + LANES <= n {
+            let m = _mm256_loadu_pd(row.as_ptr().add(t));
+            let x0 = _mm256_loadu_pd(r0.as_ptr().add(t));
+            let x1 = _mm256_loadu_pd(r1.as_ptr().add(t));
+            let x2 = _mm256_loadu_pd(r2.as_ptr().add(t));
+            let x3 = _mm256_loadu_pd(r3.as_ptr().add(t));
+            // ((a0*x0 + a1*x1) + a2*x2) + a3*x3 — the scalar body's exact
+            // left association, each product and sum rounded once
+            let mut s = _mm256_add_pd(_mm256_mul_pd(v0, x0), _mm256_mul_pd(v1, x1));
+            s = _mm256_add_pd(s, _mm256_mul_pd(v2, x2));
+            s = _mm256_add_pd(s, _mm256_mul_pd(v3, x3));
+            _mm256_storeu_pd(row.as_mut_ptr().add(t), _mm256_add_pd(m, s));
+            t += LANES;
+        }
+        while t < n {
+            *row.get_unchecked_mut(t) += a0 * *r0.get_unchecked(t)
+                + a1 * *r1.get_unchecked(t)
+                + a2 * *r2.get_unchecked(t)
+                + a3 * *r3.get_unchecked(t);
+            t += 1;
+        }
+    }
+}
+
+/// Run the AVX2 rank-1 row kernel if the host supports it (ignoring the
+/// dispatch mode).  Returns `false` untouched otherwise — the explicit
+/// SIMD half of the bit-identity tests and benches.
+pub fn rank1_row_simd(row: &mut [f64], tail: &[f64], di: f64) -> bool {
+    #[cfg(target_arch = "x86_64")]
+    if simd_available() {
+        // SAFETY: AVX2 presence just verified at runtime
+        unsafe { avx2::rank1_row(row, tail, di) };
+        return true;
+    }
+    let _ = (row, tail, di);
+    false
+}
+
+/// Run the AVX2 rank-4 row kernel if the host supports it (ignoring the
+/// dispatch mode).  Returns `false` untouched otherwise.
+#[allow(clippy::too_many_arguments)]
+pub fn rank4_row_simd(
+    row: &mut [f64],
+    r0: &[f64],
+    r1: &[f64],
+    r2: &[f64],
+    r3: &[f64],
+    a0: f64,
+    a1: f64,
+    a2: f64,
+    a3: f64,
+) -> bool {
+    #[cfg(target_arch = "x86_64")]
+    if simd_available() {
+        // SAFETY: AVX2 presence just verified at runtime
+        unsafe { avx2::rank4_row(row, r0, r1, r2, r3, a0, a1, a2, a3) };
+        return true;
+    }
+    let _ = (row, r0, r1, r2, r3, a0, a1, a2, a3);
+    false
+}
+
+// ---------------------------------------------------------------------------
+// dispatching row kernels — what SymMat and TiledSymMat call
+// ---------------------------------------------------------------------------
+
+/// Dispatching rank-1 row scatter: `row[t] += di * tail[t]`.
+#[inline]
+pub fn rank1_row(row: &mut [f64], tail: &[f64], di: f64) {
+    if simd_active() && rank1_row_simd(row, tail, di) {
+        return;
+    }
+    rank1_row_scalar(row, tail, di);
+}
+
+/// Dispatching rank-4 row scatter (left-associated mul-then-add).
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub fn rank4_row(
+    row: &mut [f64],
+    r0: &[f64],
+    r1: &[f64],
+    r2: &[f64],
+    r3: &[f64],
+    a0: f64,
+    a1: f64,
+    a2: f64,
+    a3: f64,
+) {
+    if simd_active() && rank4_row_simd(row, r0, r1, r2, r3, a0, a1, a2, a3) {
+        return;
+    }
+    rank4_row_scalar(row, r0, r1, r2, r3, a0, a1, a2, a3);
+}
+
+// ---------------------------------------------------------------------------
+// sparse row kernels — run detection over the support, dense kernel per run
+// ---------------------------------------------------------------------------
+
+/// The length of the maximal consecutive run starting at `idx[0]`.
+#[inline]
+fn run_len(idx: &[usize]) -> usize {
+    let mut b = 1;
+    while b < idx.len() && idx[b] == idx[b - 1] + 1 {
+        b += 1;
+    }
+    b
+}
+
+/// Sparse rank-1 row scatter: `row[j − i] += di * delta[j]` for every
+/// `j ∈ idx` (sorted ascending, all ≥ `i`).  `row` is the packed tail of
+/// triangle row `i` (element 0 is the diagonal).  Consecutive support
+/// indices address consecutive elements on both sides, so each maximal run
+/// goes through the dense dispatching kernel; pair order is unchanged.
+pub fn rank1_sparse_row(row: &mut [f64], i: usize, idx: &[usize], delta: &[f64], di: f64) {
+    let mut a = 0;
+    while a < idx.len() {
+        let len = run_len(&idx[a..]);
+        let j0 = idx[a];
+        rank1_row(&mut row[j0 - i..j0 - i + len], &delta[j0..j0 + len], di);
+        a += len;
+    }
+}
+
+/// Sparse rank-4 row scatter — four sources sharing the support, same run
+/// decomposition as [`rank1_sparse_row`].
+#[allow(clippy::too_many_arguments)]
+pub fn rank4_sparse_row(
+    row: &mut [f64],
+    i: usize,
+    idx: &[usize],
+    c0: &[f64],
+    c1: &[f64],
+    c2: &[f64],
+    c3: &[f64],
+    a0: f64,
+    a1: f64,
+    a2: f64,
+    a3: f64,
+) {
+    let mut a = 0;
+    while a < idx.len() {
+        let len = run_len(&idx[a..]);
+        let j0 = idx[a];
+        rank4_row(
+            &mut row[j0 - i..j0 - i + len],
+            &c0[j0..j0 + len],
+            &c1[j0..j0 + len],
+            &c2[j0..j0 + len],
+            &c3[j0..j0 + len],
+            a0,
+            a1,
+            a2,
+            a3,
+        );
+        a += len;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    /// Adversarial row lengths around the 4-lane width: empty, sub-lane,
+    /// exact multiples, one-off either side, and long rows.
+    const SHAPES: [usize; 13] = [0, 1, 2, 3, 4, 5, 7, 8, 9, 31, 32, 33, 257];
+
+    fn vecs(rng: &mut Rng, n: usize) -> Vec<f64> {
+        (0..n).map(|_| rng.normal_ms(0.5, 2.0)).collect()
+    }
+
+    fn bits(v: &[f64]) -> Vec<u64> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    /// Random strictly-ascending support over 0..n, mixing singletons and
+    /// runs (the shapes the run detector must split correctly).
+    fn support(rng: &mut Rng, n: usize, density: f64) -> Vec<usize> {
+        (0..n).filter(|_| rng.coin(density)).collect()
+    }
+
+    #[test]
+    fn kernel_bit_identity_rank1_rows_dispatch_and_simd_match_scalar() {
+        let mut rng = Rng::seed_from(11);
+        for &n in &SHAPES {
+            let tail = vecs(&mut rng, n);
+            let di = rng.normal_ms(1.0, 3.0);
+            let base = vecs(&mut rng, n);
+            let mut want = base.clone();
+            rank1_row_scalar(&mut want, &tail, di);
+            // the dispatching kernel, under whatever mode is in effect
+            let mut got = base.clone();
+            rank1_row(&mut got, &tail, di);
+            assert_eq!(bits(&got), bits(&want), "dispatch n={n}");
+            // the explicit SIMD kernel, when this host has it
+            let mut got = base.clone();
+            if rank1_row_simd(&mut got, &tail, di) {
+                assert_eq!(bits(&got), bits(&want), "simd n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_bit_identity_rank4_rows_dispatch_and_simd_match_scalar() {
+        let mut rng = Rng::seed_from(12);
+        for &n in &SHAPES {
+            let rows: Vec<Vec<f64>> = (0..4).map(|_| vecs(&mut rng, n)).collect();
+            let a: Vec<f64> = (0..4).map(|_| rng.normal_ms(-1.0, 2.0)).collect();
+            let base = vecs(&mut rng, n);
+            let mut want = base.clone();
+            rank4_row_scalar(
+                &mut want, &rows[0], &rows[1], &rows[2], &rows[3], a[0], a[1], a[2], a[3],
+            );
+            let mut got = base.clone();
+            rank4_row(&mut got, &rows[0], &rows[1], &rows[2], &rows[3], a[0], a[1], a[2], a[3]);
+            assert_eq!(bits(&got), bits(&want), "dispatch n={n}");
+            let mut got = base.clone();
+            if rank4_row_simd(&mut got, &rows[0], &rows[1], &rows[2], &rows[3], a[0], a[1], a[2], a[3])
+            {
+                assert_eq!(bits(&got), bits(&want), "simd n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_bit_identity_sparse_rows_match_scalar_pair_loop() {
+        let mut rng = Rng::seed_from(13);
+        for &n in &[1usize, 3, 4, 7, 16, 33, 100] {
+            for &density in &[0.0, 0.05, 0.3, 1.0] {
+                for i in [0usize, n / 2, n - 1] {
+                    let delta = vecs(&mut rng, n);
+                    let di = rng.normal();
+                    let idx: Vec<usize> = support(&mut rng, n, density)
+                        .into_iter()
+                        .filter(|&j| j >= i)
+                        .collect();
+                    // the scalar pair loop the backings ran before this
+                    // module existed — the oracle
+                    let base = vecs(&mut rng, n - i);
+                    let mut want = base.clone();
+                    for &j in &idx {
+                        want[j - i] += di * delta[j];
+                    }
+                    let mut got = base.clone();
+                    rank1_sparse_row(&mut got, i, &idx, &delta, di);
+                    assert_eq!(bits(&got), bits(&want), "rank1 n={n} i={i} d={density}");
+
+                    let c: Vec<Vec<f64>> = (0..4).map(|_| vecs(&mut rng, n)).collect();
+                    let a: Vec<f64> = (0..4).map(|_| rng.normal()).collect();
+                    let mut want = base.clone();
+                    for &j in &idx {
+                        want[j - i] +=
+                            a[0] * c[0][j] + a[1] * c[1][j] + a[2] * c[2][j] + a[3] * c[3][j];
+                    }
+                    let mut got = base;
+                    rank4_sparse_row(
+                        &mut got, i, &idx, &c[0], &c[1], &c[2], &c[3], a[0], a[1], a[2], a[3],
+                    );
+                    assert_eq!(bits(&got), bits(&want), "rank4 n={n} i={i} d={density}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_bit_identity_scatter_backings_match_scalar_oracle() {
+        // full-backing check across panel seams: SymMat and TiledSymMat
+        // (block sizes that split rows mid-triangle) against a hand-rolled
+        // scalar replay — the backings dispatch through this module, so
+        // this pins the delegation itself, not just the row kernels
+        use crate::stats::{Scatter, SymMat, TileLayout, TiledSymMat};
+        let mut rng = Rng::seed_from(14);
+        for &(n, block) in &[(5usize, 2usize), (9, 4), (33, 8), (6, 1)] {
+            let delta = vecs(&mut rng, n);
+            let scale = rng.normal_ms(1.0, 0.5);
+            let c: Vec<Vec<f64>> = (0..4).map(|_| vecs(&mut rng, n)).collect();
+            let idx = support(&mut rng, n, 0.4);
+
+            let mut packed = SymMat::zeros(n);
+            let mut tiled = TiledSymMat::zeros(TileLayout::new(n, block));
+            packed.rank1(&delta, scale);
+            tiled.rank1(&delta, scale);
+            packed.rank4(&c[0], &c[1], &c[2], &c[3]);
+            tiled.rank4(&c[0], &c[1], &c[2], &c[3]);
+            if !idx.is_empty() {
+                packed.rank1_sparse(&idx, &delta, scale);
+                tiled.rank1_sparse(&idx, &delta, scale);
+            }
+
+            // scalar oracle on a dense square
+            let mut want = vec![vec![0.0f64; n]; n];
+            for i in 0..n {
+                let di = delta[i] * scale;
+                for j in i..n {
+                    want[i][j] += di * delta[j];
+                }
+            }
+            for i in 0..n {
+                let (a0, a1, a2, a3) = (c[0][i], c[1][i], c[2][i], c[3][i]);
+                for j in i..n {
+                    want[i][j] += a0 * c[0][j] + a1 * c[1][j] + a2 * c[2][j] + a3 * c[3][j];
+                }
+            }
+            for (a, &i) in idx.iter().enumerate() {
+                let di = delta[i] * scale;
+                for &j in &idx[a..] {
+                    want[i][j] += di * delta[j];
+                }
+            }
+            for i in 0..n {
+                for j in i..n {
+                    assert_eq!(
+                        Scatter::get(&packed, i, j).to_bits(),
+                        want[i][j].to_bits(),
+                        "packed ({i},{j}) n={n}"
+                    );
+                    assert_eq!(
+                        Scatter::get(&tiled, i, j).to_bits(),
+                        want[i][j].to_bits(),
+                        "tiled ({i},{j}) n={n} b={block}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_bit_identity_empty_support_and_empty_rows_are_noops() {
+        let mut row: Vec<f64> = vec![1.5, -2.5];
+        let before = bits(&row);
+        rank1_sparse_row(&mut row, 3, &[], &[0.0; 8], 2.0);
+        rank4_sparse_row(&mut row, 3, &[], &[0.0; 8], &[0.0; 8], &[0.0; 8], &[0.0; 8], 1.0, 2.0, 3.0, 4.0);
+        assert_eq!(bits(&row), before, "empty support must not touch the row");
+        let mut empty: Vec<f64> = vec![];
+        rank1_row(&mut empty, &[], 1.0);
+        rank4_row(&mut empty, &[], &[], &[], &[], 1.0, 1.0, 1.0, 1.0);
+    }
+
+    #[test]
+    fn kernel_mode_parses_and_reports() {
+        assert_eq!(KernelMode::parse("auto"), Some(KernelMode::Auto));
+        assert_eq!(KernelMode::parse("scalar"), Some(KernelMode::Scalar));
+        assert_eq!(KernelMode::parse("simd"), Some(KernelMode::Simd));
+        assert_eq!(KernelMode::parse("avx512"), None);
+        for m in [KernelMode::Auto, KernelMode::Scalar, KernelMode::Simd] {
+            assert_eq!(KernelMode::parse(m.as_str()), Some(m));
+        }
+    }
+}

@@ -221,9 +221,11 @@ impl SymMat {
     //
     // Each iterates rows of the packed triangle contiguously — one linear
     // pass over p(p+1)/2 doubles, the cache-blocked layout the mapper and
-    // merge paths stream.  Loop bodies and iteration order are the exact
-    // ones the dense-era `stats::moments` used, so results are bit-for-bit
-    // unchanged.
+    // merge paths stream.  The row bodies live in [`super::simd`] (one
+    // microkernel shared with the tiled backing, vectorized where the host
+    // allows); the kernels there replay the exact per-element expressions
+    // and order the dense-era `stats::moments` used, so results are
+    // bit-for-bit unchanged.
 
     /// A += scale·(δ ⊗ δ) on the upper triangle — the streaming rank-1
     /// scatter update (paper eq. 15).
@@ -233,10 +235,7 @@ impl SymMat {
         let mut k = 0;
         for i in 0..n {
             let di = delta[i] * scale;
-            let row = &mut self.data[k..k + (n - i)];
-            for (m, &dj) in row.iter_mut().zip(&delta[i..]) {
-                *m += di * dj;
-            }
+            super::simd::rank1_row(&mut self.data[k..k + (n - i)], &delta[i..], di);
             k += n - i;
         }
     }
@@ -249,11 +248,17 @@ impl SymMat {
         let mut k = 0;
         for i in 0..n {
             let (a0, a1, a2, a3) = (c0[i], c1[i], c2[i], c3[i]);
-            let row = &mut self.data[k..k + (n - i)];
-            let (r0, r1, r2, r3) = (&c0[i..], &c1[i..], &c2[i..], &c3[i..]);
-            for (t, m) in row.iter_mut().enumerate() {
-                *m += a0 * r0[t] + a1 * r1[t] + a2 * r2[t] + a3 * r3[t];
-            }
+            super::simd::rank4_row(
+                &mut self.data[k..k + (n - i)],
+                &c0[i..],
+                &c1[i..],
+                &c2[i..],
+                &c3[i..],
+                a0,
+                a1,
+                a2,
+                a3,
+            );
             k += n - i;
         }
     }
@@ -276,9 +281,13 @@ impl SymMat {
         for (a, &i) in idx.iter().enumerate() {
             let di = delta[i] * scale;
             let base = tri_idx(n, i, i);
-            for &j in &idx[a..] {
-                self.data[base + (j - i)] += di * delta[j];
-            }
+            super::simd::rank1_sparse_row(
+                &mut self.data[base..base + (n - i)],
+                i,
+                &idx[a..],
+                delta,
+                di,
+            );
         }
     }
 
@@ -295,9 +304,19 @@ impl SymMat {
         for (a, &i) in idx.iter().enumerate() {
             let (a0, a1, a2, a3) = (c0[i], c1[i], c2[i], c3[i]);
             let base = tri_idx(n, i, i);
-            for &j in &idx[a..] {
-                self.data[base + (j - i)] += a0 * c0[j] + a1 * c1[j] + a2 * c2[j] + a3 * c3[j];
-            }
+            super::simd::rank4_sparse_row(
+                &mut self.data[base..base + (n - i)],
+                i,
+                &idx[a..],
+                c0,
+                c1,
+                c2,
+                c3,
+                a0,
+                a1,
+                a2,
+                a3,
+            );
         }
     }
 

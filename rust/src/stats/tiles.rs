@@ -203,10 +203,7 @@ impl TiledSymMat {
             let mut k = 0;
             for i in rows {
                 let di = delta[i] * scale;
-                let row = &mut panel[k..k + (n - i)];
-                for (m, &dj) in row.iter_mut().zip(&delta[i..]) {
-                    *m += di * dj;
-                }
+                super::simd::rank1_row(&mut panel[k..k + (n - i)], &delta[i..], di);
                 k += n - i;
             }
         }
@@ -222,11 +219,17 @@ impl TiledSymMat {
             let mut k = 0;
             for i in rows {
                 let (a0, a1, a2, a3) = (c0[i], c1[i], c2[i], c3[i]);
-                let row = &mut panel[k..k + (n - i)];
-                let (r0, r1, r2, r3) = (&c0[i..], &c1[i..], &c2[i..], &c3[i..]);
-                for (s, m) in row.iter_mut().enumerate() {
-                    *m += a0 * r0[s] + a1 * r1[s] + a2 * r2[s] + a3 * r3[s];
-                }
+                super::simd::rank4_row(
+                    &mut panel[k..k + (n - i)],
+                    &c0[i..],
+                    &c1[i..],
+                    &c2[i..],
+                    &c3[i..],
+                    a0,
+                    a1,
+                    a2,
+                    a3,
+                );
                 k += n - i;
             }
         }
@@ -247,9 +250,13 @@ impl TiledSymMat {
             let t = i / layout.block;
             let base = tri_idx(n, i, i) - layout.offset(t);
             let panel = &mut self.panels[t];
-            for &j in &idx[a..] {
-                panel[base + (j - i)] += di * delta[j];
-            }
+            super::simd::rank1_sparse_row(
+                &mut panel[base..base + (n - i)],
+                i,
+                &idx[a..],
+                delta,
+                di,
+            );
         }
     }
 
@@ -265,9 +272,19 @@ impl TiledSymMat {
             let t = i / layout.block;
             let base = tri_idx(n, i, i) - layout.offset(t);
             let panel = &mut self.panels[t];
-            for &j in &idx[a..] {
-                panel[base + (j - i)] += a0 * c0[j] + a1 * c1[j] + a2 * c2[j] + a3 * c3[j];
-            }
+            super::simd::rank4_sparse_row(
+                &mut panel[base..base + (n - i)],
+                i,
+                &idx[a..],
+                c0,
+                c1,
+                c2,
+                c3,
+                a0,
+                a1,
+                a2,
+                a3,
+            );
         }
     }
 

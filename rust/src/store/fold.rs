@@ -205,6 +205,17 @@ impl FoldStore {
             .map_err(|e| anyhow!("{e}"))
     }
 
+    /// Hand the backing store the exact key sequence the caller is about
+    /// to stream, so a spill backend can prefetch ahead of compute.  Every
+    /// streaming consumer below installs its own plan right before its
+    /// panel loop — the orders are pure functions of (k, layout), which is
+    /// what makes the readahead *exact*.  Purely advisory: concurrent
+    /// consumers (the parallel CV workers) overwrite each other's plans,
+    /// which costs wasted readahead but never changes a bit of output.
+    fn install_plan(&self, plan: Vec<PanelKey>) {
+        self.store.set_plan(plan);
+    }
+
     /// Validate coverage and header agreement, then merge the per-panel
     /// total and cache the O(d) fold headers.  Mirrors the invariants of
     /// `tiles::check_panels` + [`crate::cv::FoldStats::new`]: full panel
@@ -240,6 +251,11 @@ impl FoldStore {
         // per-panel total merge — the merge is fold order, the exact
         // scalar sequence FoldStats::new replays (empty.merge(f0) ==
         // copy of f0)
+        self.install_plan(
+            (0..n_panels)
+                .flat_map(|t| (0..self.k).map(move |fold| PanelKey { fold, panel: t }))
+                .collect(),
+        );
         let mut headers: Vec<Option<FoldHeader>> = vec![None; self.k];
         let mut total_header: Option<FoldHeader> = None;
         for t in 0..n_panels {
@@ -319,6 +335,15 @@ impl FoldStore {
         mut f: impl FnMut(&StatPanel) -> Result<()>,
     ) -> Result<()> {
         debug_assert!(self.sealed, "seal() before streaming");
+        self.install_plan(
+            (0..self.layout.n_panels())
+                .flat_map(|t| {
+                    let total = PanelKey { fold: self.k, panel: t };
+                    std::iter::once(total)
+                        .chain(held_out.map(|i| PanelKey { fold: i, panel: t }))
+                })
+                .collect(),
+        );
         let mut scratch: Option<StatPanel> = None;
         for t in 0..self.layout.n_panels() {
             let total = self.panel(self.k, t)?;
@@ -454,6 +479,11 @@ impl FoldStore {
         let mut quad = vec![0.0; models.len()];
         let mut cross = vec![0.0; models.len()];
         let mut syy = 0.0;
+        self.install_plan(
+            (0..self.layout.n_panels())
+                .map(|t| PanelKey { fold, panel: t })
+                .collect(),
+        );
         for t in 0..self.layout.n_panels() {
             let pl = self.panel(fold, t)?;
             let mut k = 0usize;
@@ -518,6 +548,11 @@ impl FoldStore {
     /// Gather fold `i`'s screened sub-statistic (`i == k` for the total).
     pub fn subset_fold(&self, fold: usize, idx: &[usize]) -> Result<SuffStats<SymMat>> {
         let mut gather = SubsetGather::new(self.p, self.layout, idx);
+        self.install_plan(
+            (0..self.layout.n_panels())
+                .map(|t| PanelKey { fold, panel: t })
+                .collect(),
+        );
         for t in 0..self.layout.n_panels() {
             let pl = self.panel(fold, t)?;
             gather.feed(&pl);
@@ -546,6 +581,11 @@ impl FoldStore {
     /// streams instead.
     pub fn to_fold_stats(&self) -> Result<crate::cv::FoldStats<TiledSymMat>> {
         let n_panels = self.layout.n_panels();
+        self.install_plan(
+            (0..self.k)
+                .flat_map(|fold| (0..n_panels).map(move |t| PanelKey { fold, panel: t }))
+                .collect(),
+        );
         let mut folds = Vec::with_capacity(self.k);
         for fold in 0..self.k {
             let panels: Vec<StatPanel> = (0..n_panels)

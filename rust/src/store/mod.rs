@@ -163,6 +163,15 @@ pub struct StoreMetrics {
     /// retry that succeeds was a *transient* partial read; one that fails
     /// again surfaces the original named error (real bit-rot repeats)
     pub read_retries: usize,
+    /// background prefetch loads started (claims of a panel's load latch
+    /// by the prefetcher rather than a demand `get`)
+    pub prefetch_issued: usize,
+    /// demand `get`s that found their panel already resident because a
+    /// prefetch loaded it first
+    pub prefetch_hits: usize,
+    /// prefetched panels evicted or removed before any demand `get`
+    /// touched them — readahead that cost a spill read for nothing
+    pub prefetch_wasted: usize,
 }
 
 /// A keyed store of retired statistic panels.  All methods take `&self`
@@ -199,6 +208,15 @@ pub trait PanelStore: Send + Sync + std::fmt::Debug {
     fn metrics(&self) -> StoreMetrics;
     /// Resident budget in bytes (`None` = unbounded).
     fn budget_bytes(&self) -> Option<usize>;
+    /// Advisory readahead plan: the exact key sequence the caller is about
+    /// to `get`, in order.  Backends with a prefetcher ([`SpillStore`])
+    /// load upcoming spilled panels in the background; unbounded backends
+    /// ignore it.  Purely an optimization hint — results are bit-identical
+    /// with or without a plan, and a stale plan (another consumer
+    /// installed its own) only costs wasted readahead.
+    fn set_plan(&self, plan: Vec<PanelKey>) {
+        let _ = plan;
+    }
 }
 
 #[cfg(test)]

@@ -5,10 +5,22 @@
 //! Normally `Mutex`, `Condvar`, `Arc` and the atomics re-export straight
 //! from `std::sync`.  Under `RUSTFLAGS="--cfg loom"` (the CI `loom` job)
 //! they re-export from the `loom` model checker instead, so the engine's
-//! task queue, the merge-tree slots, and the spill store's admission
-//! protocol can be exhaustively model-checked over bounded interleavings
-//! — see the `loom_models` modules in [`crate::mapreduce::engine`] and
-//! [`crate::store::spill`].  The `loom` crate is intentionally *not* a
+//! task queue, the merge-tree slots, and the spill store's admission and
+//! prefetch protocols can be exhaustively model-checked over bounded
+//! interleavings — see the `loom_models` modules in
+//! [`crate::mapreduce::engine`] and [`crate::store::spill`].
+//!
+//! ## Named protocols
+//!
+//! Every `lock_named`/`wait_named` site names the protocol it belongs to;
+//! the current set: `"task queue"` / `"countdown gate"` / `"merge slot"` /
+//! `"merge-failure slot"` (engine), `"worker write stream"` (process
+//! supervision), `"mem store"`, `"spill store"` / `"panel load latch"` /
+//! `"spill admission"` (store residency), `"prefetch planner"` (the
+//! prefetcher's work-arrival wait — woken by `set_plan` and demand `get`s,
+//! never by load completions, so readahead can never outrank a demand
+//! admission), and `"prefetch thread"` (the background thread's join
+//! handle).  The `loom` crate is intentionally *not* a
 //! manifest dependency: the normal build never needs it, and the loom CI
 //! job `cargo add`s it before setting the cfg.
 //!

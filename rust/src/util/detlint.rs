@@ -25,6 +25,12 @@
 //!   summation order is pinned and Kahan-compensated).  Unpinned float
 //!   accumulation is exactly the non-associativity the fixed merge tree
 //!   exists to contain.
+//! * **`simd-intrinsics`** — `std::arch`/`core::arch`/`target_feature`
+//!   anywhere outside [`crate::stats::simd`].  That module is the ONE
+//!   sanctioned vector-kernel boundary: its kernels are mul-then-add with
+//!   a fixed per-element order (no FMA, no horizontal reductions) and are
+//!   property-tested bit-identical to the scalar oracles.  Intrinsics
+//!   sprinkled anywhere else would not carry those proofs.
 //!
 //! Scanning is line-based and deliberately dumb: comments are stripped
 //! (everything from the first `//`), and a file stops being scanned at
@@ -97,6 +103,12 @@ const RULES: &[Rule] = &[
         needles: &[".sum::<f64>(", ".sum::<f32>(", ".product::<f64>(", ".product::<f32>("],
         scope: Scope::KeyedNonKernel,
         why: "unpinned float accumulation outside the sanctioned stats kernels",
+    },
+    Rule {
+        name: "simd-intrinsics",
+        needles: &["std::arch", "core::arch", "target_feature"],
+        scope: Scope::All,
+        why: "vector intrinsics outside the sanctioned stats/simd.rs microkernel boundary",
     },
 ];
 
@@ -201,9 +213,13 @@ fn scan_whole_file(rel: &str) -> bool {
     rel != "util/detlint.rs" && !rel.starts_with("bin/")
 }
 
-/// Rule-level exemptions: `sync.rs` IS the sanctioned lock surface.
+/// Rule-level exemptions: `sync.rs` IS the sanctioned lock surface, and
+/// `stats/simd.rs` IS the sanctioned vector-kernel boundary.
 fn rule_applies(rule: &Rule, rel: &str) -> bool {
     if rule.name == "raw-lock" && rel == "sync.rs" {
+        return false;
+    }
+    if rule.name == "simd-intrinsics" && rel == "stats/simd.rs" {
         return false;
     }
     match rule.scope {
@@ -363,10 +379,13 @@ mod tests {
                 ("store/spill.rs", "use std::collections::HashMap;\n"),
                 ("solver/cd.rs", "let t = Instant::now();\nlet s: f64 = xs.iter().sum::<f64>();\n"),
                 ("cv/folds.rs", "let r = thread_rng();\n"),
-                // out of scope: timing in util/, accumulation in stats/
+                ("data/ingest.rs", "use std::arch::x86_64::_mm256_add_pd;\n"),
+                // out of scope: timing in util/, accumulation in stats/,
+                // locks in sync.rs, intrinsics in stats/simd.rs
                 ("util/timer.rs", "let t = Instant::now();\n"),
                 ("stats/kahan.rs", "let s: f64 = xs.iter().sum::<f64>();\n"),
                 ("sync.rs", "let g = m.lock().unwrap();\n"),
+                ("stats/simd.rs", "use core::arch::x86_64::_mm256_mul_pd;\n"),
             ],
             "",
         );
@@ -375,10 +394,17 @@ mod tests {
         hit.sort();
         assert_eq!(
             hit,
-            vec!["float-accum", "hash-collection", "rand-nondet", "raw-lock", "time-in-keyed"]
+            vec![
+                "float-accum",
+                "hash-collection",
+                "rand-nondet",
+                "raw-lock",
+                "simd-intrinsics",
+                "time-in-keyed"
+            ]
         );
-        assert_eq!(report.findings.len(), 5, "{:#?}", report.findings);
-        assert_eq!(report.files_scanned, 7);
+        assert_eq!(report.findings.len(), 6, "{:#?}", report.findings);
+        assert_eq!(report.files_scanned, 9);
         let _ = fs::remove_dir_all(src.parent().unwrap());
     }
 
