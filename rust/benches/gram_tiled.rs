@@ -35,6 +35,7 @@ use plrmr::solver::{CdSettings, Penalty};
 use plrmr::stats::symm::tri_len;
 use plrmr::stats::tiles::{assemble_stats, shard_stats, TileLayout};
 use plrmr::stats::{Scatter, SuffStats};
+use plrmr::util::json::Value;
 use plrmr::util::table::{sig, Table};
 
 /// SuffStats chunk filled from a deterministic stream.
@@ -321,6 +322,34 @@ fn main() {
          pool; fit asserted bit-identical across budgets and prefetch on/off):\n{}\n",
         spill_t.render()
     );
+
+    // --- machine-readable phase summary (--quick, the CI shape) ---------
+    // One traced fit → BENCH_gram_tiled.json: per-phase duration stats and
+    // skew from `trace::analyze`, plus the fit's own metrics JSON — the
+    // regenerable evidence behind EXPERIMENTS.md §Observability.
+    if quick {
+        plrmr::trace::set_enabled(true);
+        let report = Driver::new(sbase).fit(&sdata).unwrap();
+        plrmr::trace::set_enabled(false);
+        // observe-only contract: tracing may not change a bit of the fit
+        if let Some(beta) = &reference {
+            assert_eq!(&report.model.beta, beta, "tracing changed the fit");
+        }
+        let mut events = plrmr::trace::drain();
+        plrmr::trace::canonicalize(&mut events);
+        let analysis = plrmr::trace::analyze::analyze(&events);
+        let mut root = std::collections::BTreeMap::new();
+        root.insert("bench".to_string(), Value::Str("gram_tiled".to_string()));
+        root.insert("trace".to_string(), analysis.to_json());
+        root.insert("fit".to_string(), report.to_json());
+        let path = "BENCH_gram_tiled.json";
+        std::fs::write(path, Value::Obj(root).render()).expect("write bench json");
+        println!(
+            "wrote {path} (map skew {} across {} events)\n",
+            sig(analysis.map_skew(), 3),
+            analysis.events
+        );
+    }
 
     // arithmetic envelope at paper scale: what the leader must hold
     // resident, unbounded vs budgeted (5 folds + total, headers included)

@@ -7,11 +7,9 @@
 //! `plrmr experiments` CLI both print through this, so numbers in
 //! EXPERIMENTS.md are regenerable from either entry point.
 
-use std::time::Instant;
-
 use crate::mapreduce::JobMetrics;
 use crate::util::table::{sig, Table};
-use crate::util::timer::fmt_secs;
+use crate::util::timer::{fmt_secs, Timer};
 
 /// Statistics of one benchmarked operation.
 #[derive(Debug, Clone)]
@@ -65,9 +63,9 @@ pub fn bench<T>(name: &str, cfg: BenchConfig, mut f: impl FnMut() -> T) -> Bench
     let mut times = Vec::with_capacity(cfg.max_samples);
     let mut spent = 0.0;
     while times.len() < cfg.max_samples && (spent < cfg.budget_s || times.is_empty()) {
-        let t0 = Instant::now();
+        let t0 = Timer::start();
         black_box(f());
-        let dt = t0.elapsed().as_secs_f64();
+        let dt = t0.elapsed_s();
         times.push(dt);
         spent += dt;
     }
@@ -128,7 +126,7 @@ pub fn render_job_phases(results: &[(String, JobMetrics)]) -> String {
         "run", "map", "shuffle", "reduce", "total", "merge frac",
         "payloads", "bytes", "max key", "skipped", "pre-combined",
         "leader merges", "retries", "max attempts", "deadlines", "hb missed",
-        "pf issued", "pf hits", "pf wasted",
+        "pf issued", "pf hits", "pf wasted", "rd retries", "skew",
     ]);
     for (name, m) in results {
         t.row(vec![
@@ -151,6 +149,8 @@ pub fn render_job_phases(results: &[(String, JobMetrics)]) -> String {
             format!("{}", m.prefetch_issued),
             format!("{}", m.prefetch_hits),
             format!("{}", m.prefetch_wasted),
+            format!("{}", m.read_retries),
+            sig(m.worker_skew(), 3),
         ]);
     }
     t.render()
@@ -220,6 +220,64 @@ mod tests {
         assert!(s.contains("pf issued"), "prefetch columns present");
         assert!(s.contains("| 5"), "prefetch_issued rendered");
         assert!(s.contains("| 4"), "prefetch_hits rendered");
+    }
+
+    #[test]
+    fn job_phase_render_golden_covers_every_column() {
+        use crate::mapreduce::job::WorkerMetrics;
+        let m = JobMetrics {
+            real_s: 2.0,
+            map_s: 1.0,
+            shuffle_s: 0.5,
+            reduce_s: 0.5,
+            shuffle_payloads: 11,
+            shuffle_bytes: 2048,
+            max_payload_bytes: 1024,
+            panels_skipped: 0, // zero-valued counters must still render
+            combined_nodes: 13,
+            reduce_merges: 17,
+            retries: 0,
+            attempts_max: 1,
+            deadline_expirations: 19,
+            heartbeats_missed: 23,
+            prefetch_issued: 29,
+            prefetch_hits: 0,
+            prefetch_wasted: 31,
+            read_retries: 37,
+            per_worker: vec![
+                WorkerMetrics { busy_s: 3.0, ..Default::default() },
+                WorkerMetrics { busy_s: 1.0, ..Default::default() },
+            ],
+            ..Default::default()
+        };
+        let s = render_job_phases(&[("golden".to_string(), m)]);
+        for header in [
+            "run", "map", "shuffle", "reduce", "total", "merge frac", "payloads",
+            "bytes", "max key", "skipped", "pre-combined", "leader merges",
+            "retries", "max attempts", "deadlines", "hb missed",
+            "pf issued", "pf hits", "pf wasted", "rd retries", "skew",
+        ] {
+            assert!(s.contains(header), "missing column {header:?}");
+        }
+        assert!(s.contains("| golden"));
+        // unit boundaries: exactly 1024 B is 1.00 KiB, not 1024 B
+        assert!(s.contains("2.00 KiB"), "shuffle_bytes = 2048 renders in KiB");
+        assert!(s.contains("1.00 KiB"), "max_payload_bytes = 1024 renders in KiB");
+        for v in ["| 11 ", "| 13 ", "| 17 ", "| 19 ", "| 23 ", "| 29 ", "| 31 ", "| 37 "] {
+            assert!(s.contains(v), "missing value {v:?}");
+        }
+        assert!(s.contains("| 0 "), "zero-valued counters render as 0, not blank");
+        // busy 3.0 vs 1.0 → skew = max/mean = 3/2
+        assert!(s.contains("1.50"), "worker skew rendered: {s}");
+    }
+
+    #[test]
+    fn fmt_bytes_boundaries() {
+        assert_eq!(fmt_bytes(0), "0 B");
+        assert_eq!(fmt_bytes(1023), "1023 B");
+        assert_eq!(fmt_bytes(1024), "1.00 KiB", "exactly one KiB selects the KiB unit");
+        assert_eq!(fmt_bytes(1024 * 1024), "1.00 MiB");
+        assert_eq!(fmt_bytes(1024 * 1024 * 1024), "1.00 GiB");
     }
 
     #[test]

@@ -38,6 +38,7 @@ use crate::stats::symm::tri_len;
 use crate::stats::tiles::{StatPanel, TileLayout};
 use crate::stats::{Scatter, SuffStats};
 use crate::store::{FoldStore, MemStore, PanelStore, SpillStore};
+use crate::trace;
 
 /// Everything a fit returns: the model, the CV curve, and job accounting.
 #[derive(Debug, Clone)]
@@ -91,9 +92,117 @@ pub struct FitReport {
     /// prefetched panels evicted or removed before any demand read — a
     /// spill read spent for nothing
     pub prefetch_wasted: usize,
+    /// spill-file reads that needed the bounded second attempt across the
+    /// whole fit (transient partial reads healed by the re-read; real
+    /// corruption surfaces as a named error instead)
+    pub read_retries: usize,
     /// SIS screening outcome when the `screen_auto` path engaged (p over
     /// the threshold); `None` for the exact full-p fit
     pub screened: Option<ScreenReport>,
+}
+
+impl FitReport {
+    /// The store-activity lines of the fit rendering (spill traffic,
+    /// prefetch outcome, read retries) — ONE helper shared by every
+    /// frontend path (in-process and proc-mode fits render through the
+    /// same `fit` subcommand), so the two runtimes can never drift apart.
+    /// Lines for zero-valued counters are omitted.
+    pub fn store_activity_lines(&self) -> Vec<String> {
+        let mut lines = Vec::new();
+        if self.spill_writes > 0 {
+            lines.push(format!(
+                "panel store spilled {} ({} writes, {} reads back)",
+                crate::bench::fmt_bytes(self.spill_bytes),
+                self.spill_writes,
+                self.spill_reads,
+            ));
+        }
+        if self.prefetch_issued > 0 {
+            lines.push(format!(
+                "panel prefetch: {} issued, {} demand hits, {} wasted",
+                self.prefetch_issued, self.prefetch_hits, self.prefetch_wasted,
+            ));
+        }
+        if self.read_retries > 0 {
+            lines.push(format!(
+                "spill read retries: {} transient partial read(s) healed by the bounded re-read",
+                self.read_retries,
+            ));
+        }
+        lines
+    }
+
+    /// Machine-readable dump for `fit --metrics-json`: selection outcome,
+    /// job phase metrics (including the worker busy-time skew) and the
+    /// store counters, rendered through [`crate::util::json`].
+    pub fn to_json(&self) -> crate::util::json::Value {
+        use crate::util::json::Value;
+        use std::collections::BTreeMap;
+        fn num(v: f64) -> Value {
+            Value::Num(v)
+        }
+        let m = &self.map_metrics;
+        let mut job = BTreeMap::new();
+        job.insert("real_s".to_string(), num(m.real_s));
+        job.insert("map_s".to_string(), num(m.map_s));
+        job.insert("shuffle_s".to_string(), num(m.shuffle_s));
+        job.insert("reduce_s".to_string(), num(m.reduce_s));
+        job.insert("records".to_string(), num(m.records as f64));
+        job.insert("tasks_completed".to_string(), num(m.tasks_completed as f64));
+        job.insert("attempts".to_string(), num(m.attempts as f64));
+        job.insert("retries".to_string(), num(m.retries as f64));
+        job.insert("attempts_max".to_string(), num(m.attempts_max as f64));
+        job.insert("deadline_expirations".to_string(), num(m.deadline_expirations as f64));
+        job.insert("heartbeats_missed".to_string(), num(m.heartbeats_missed as f64));
+        job.insert("shuffle_payloads".to_string(), num(m.shuffle_payloads as f64));
+        job.insert("shuffle_bytes".to_string(), num(m.shuffle_bytes as f64));
+        job.insert("max_payload_bytes".to_string(), num(m.max_payload_bytes as f64));
+        job.insert("combined_nodes".to_string(), num(m.combined_nodes as f64));
+        job.insert("reduce_merges".to_string(), num(m.reduce_merges as f64));
+        job.insert("panels_skipped".to_string(), num(m.panels_skipped as f64));
+        job.insert("worker_skew".to_string(), num(m.worker_skew()));
+        let mut store = BTreeMap::new();
+        store.insert(
+            "resident_stat_bytes_peak".to_string(),
+            num(self.resident_stat_bytes_peak as f64),
+        );
+        store.insert("spill_bytes".to_string(), num(self.spill_bytes as f64));
+        store.insert("spill_reads".to_string(), num(self.spill_reads as f64));
+        store.insert("spill_writes".to_string(), num(self.spill_writes as f64));
+        store.insert("prefetch_issued".to_string(), num(self.prefetch_issued as f64));
+        store.insert("prefetch_hits".to_string(), num(self.prefetch_hits as f64));
+        store.insert("prefetch_wasted".to_string(), num(self.prefetch_wasted as f64));
+        store.insert("read_retries".to_string(), num(self.read_retries as f64));
+        let d = &self.diagnostics;
+        let mut diag = BTreeMap::new();
+        diag.insert("mse".to_string(), num(d.mse));
+        diag.insert("rmse".to_string(), num(d.rmse));
+        diag.insert("r2".to_string(), num(d.r2));
+        diag.insert("adj_r2".to_string(), num(d.adj_r2));
+        diag.insert("df".to_string(), num(d.df as f64));
+        let mut root = BTreeMap::new();
+        root.insert("lambda_opt".to_string(), num(self.lambda_opt));
+        root.insert("alpha".to_string(), num(self.model.alpha));
+        root.insert(
+            "nnz".to_string(),
+            num(self.model.beta.iter().filter(|b| **b != 0.0).count() as f64),
+        );
+        root.insert("p".to_string(), num(self.model.beta.len() as f64));
+        root.insert("n_lambdas".to_string(), num(self.lambdas.len() as f64));
+        root.insert("data_passes".to_string(), num(self.data_passes as f64));
+        root.insert(
+            "fold_sizes".to_string(),
+            Value::Arr(self.fold_sizes.iter().map(|&s| num(s as f64)).collect()),
+        );
+        root.insert(
+            "stat_peak_alloc_bytes".to_string(),
+            num(self.stat_peak_alloc_bytes as f64),
+        );
+        root.insert("job".to_string(), Value::Obj(job));
+        root.insert("store".to_string(), Value::Obj(store));
+        root.insert("diagnostics".to_string(), Value::Obj(diag));
+        Value::Obj(root)
+    }
 }
 
 /// Rows buffered per fold before a blocked flush into the statistics
@@ -124,6 +233,7 @@ struct Footprint {
     prefetch_issued: usize,
     prefetch_hits: usize,
     prefetch_wasted: usize,
+    read_retries: usize,
 }
 
 impl Footprint {
@@ -141,6 +251,7 @@ impl Footprint {
             prefetch_issued: 0,
             prefetch_hits: 0,
             prefetch_wasted: 0,
+            read_retries: 0,
         }
     }
 
@@ -164,6 +275,7 @@ impl Footprint {
             prefetch_issued: sm.prefetch_issued,
             prefetch_hits: sm.prefetch_hits,
             prefetch_wasted: sm.prefetch_wasted,
+            read_retries: sm.read_retries,
         }
     }
 }
@@ -473,6 +585,7 @@ impl Driver {
             metrics.prefetch_issued = sm.prefetch_issued;
             metrics.prefetch_hits = sm.prefetch_hits;
             metrics.prefetch_wasted = sm.prefetch_wasted;
+            metrics.read_retries = sm.read_retries;
             metrics.panels_skipped = fold_store.zero_panels();
             Ok((StatsJob::Stored(fold_store), metrics))
         }
@@ -576,7 +689,11 @@ impl Driver {
         p: usize,
         shards: &[std::path::PathBuf],
     ) -> Result<FitReport> {
+        let ev0 = trace::enabled().then(trace::now_us);
         let (job, metrics) = self.stats_job_csv(p, shards)?;
+        if let Some(start_us) = ev0 {
+            trace::emit_span("driver", "stats-job", "map-reduce".into(), 0, start_us, metrics.records);
+        }
         self.fit_job(job, metrics)
     }
 
@@ -596,6 +713,17 @@ impl Driver {
     /// stored panels stream through the budgeted working set; resident
     /// packed statistics go through the generic path.
     fn fit_job(&self, job: StatsJob, metrics: JobMetrics) -> Result<FitReport> {
+        if trace::enabled() {
+            // which scatter microkernel this fit dispatches to (config mode
+            // as the key; n = 1 when the SIMD path is actually active)
+            trace::emit_instant(
+                "kernel",
+                "dispatch",
+                self.cfg.kernel.as_str().to_string(),
+                0,
+                u64::from(crate::stats::simd::simd_active()),
+            );
+        }
         match job {
             StatsJob::Packed(folds) => self.select_and_fit(&folds, metrics),
             StatsJob::Stored(store) => self.select_and_fit_store(&store, metrics),
@@ -649,6 +777,7 @@ impl Driver {
             prefetch_issued: footprint.prefetch_issued,
             prefetch_hits: footprint.prefetch_hits,
             prefetch_wasted: footprint.prefetch_wasted,
+            read_retries: footprint.read_retries,
             screened,
         }
     }
@@ -667,11 +796,37 @@ impl Driver {
             return self.select_and_fit_screened(folds, map_metrics);
         }
         let p = folds.p();
+        let ev0 = trace::enabled().then(trace::now_us);
         let q_total = folds.total().quad_form();
+        if let Some(start_us) = ev0 {
+            trace::emit_span("driver", "standardize", "total".into(), 0, start_us, p as u64);
+        }
         let lambdas = self.lambda_grid_for(&q_total);
+        let ev0 = trace::enabled().then(trace::now_us);
         let cv = cross_validate(folds, self.cfg.penalty, &lambdas, self.cfg.cd)?;
+        if let Some(start_us) = ev0 {
+            trace::emit_span(
+                "driver",
+                "cv",
+                format!("k{}", folds.k()),
+                0,
+                start_us,
+                lambdas.len() as u64,
+            );
+        }
         // final fit at λ_opt on ALL data (see kfold.rs on the line-24 typo)
+        let ev0 = trace::enabled().then(trace::now_us);
         let sol = solve_cd(&q_total, self.cfg.penalty, cv.lambda_opt, None, self.cfg.cd);
+        if let Some(start_us) = ev0 {
+            trace::emit_span(
+                "driver",
+                "final-solve",
+                format!("l={:.6}", cv.lambda_opt),
+                0,
+                start_us,
+                sol.sweeps as u64,
+            );
+        }
         let (alpha, beta) = q_total.to_original_scale(&sol.beta);
         let model = FittedModel {
             alpha,
@@ -720,6 +875,7 @@ impl Driver {
         let lambdas = self.lambda_grid_for(&q_total);
         // per-fold screening + sweep: support chosen from the training
         // complement only (no selection leakage into the CV curve)
+        let ev0 = trace::enabled().then(trace::now_us);
         let n_l = lambdas.len();
         let mut fold_err = vec![vec![0.0; k]; n_l];
         let mut nnz = vec![vec![0usize; k]; n_l];
@@ -738,6 +894,9 @@ impl Driver {
                 nnz[li][i] = sol.n_active;
                 warm = Some(sol.beta);
             }
+        }
+        if let Some(start_us) = ev0 {
+            trace::emit_span("driver", "screen", format!("m{m}"), 0, start_us, k as u64);
         }
         let cv = crate::cv::select::summarize(&lambdas, fold_err, nnz)?;
         // final fit: screen on ALL data, solve at λ_opt, embed into R^p
@@ -782,11 +941,16 @@ impl Driver {
             return self.select_and_fit_screened_store(store, map_metrics);
         }
         let p = store.p();
+        let ev0 = trace::enabled().then(trace::now_us);
         let q_total = store.quad_form_train(None)?;
+        if let Some(start_us) = ev0 {
+            trace::emit_span("driver", "standardize", "total".into(), 0, start_us, p as u64);
+        }
         let lambdas = self.lambda_grid_for(&q_total);
         // with proc workers, the (fold × λ) sweep runs on the supervised
         // worker processes; the shared fold_errors_store makes the two
         // runtimes bit-identical (asserted in tests/proc_workers.rs)
+        let ev0 = trace::enabled().then(trace::now_us);
         let cv = if self.cfg.proc_workers > 0 {
             super::procjob::cv_proc(&self.cfg, store, &lambdas)?
         } else {
@@ -798,7 +962,28 @@ impl Driver {
                 &self.cfg.engine(),
             )?
         };
+        if let Some(start_us) = ev0 {
+            trace::emit_span(
+                "driver",
+                "cv",
+                format!("k{}", store.k()),
+                0,
+                start_us,
+                lambdas.len() as u64,
+            );
+        }
+        let ev0 = trace::enabled().then(trace::now_us);
         let sol = solve_cd(&q_total, self.cfg.penalty, cv.lambda_opt, None, self.cfg.cd);
+        if let Some(start_us) = ev0 {
+            trace::emit_span(
+                "driver",
+                "final-solve",
+                format!("l={:.6}", cv.lambda_opt),
+                0,
+                start_us,
+                sol.sweeps as u64,
+            );
+        }
         let (alpha, beta) = q_total.to_original_scale(&sol.beta);
         let model = FittedModel {
             alpha,
@@ -837,6 +1022,7 @@ impl Driver {
         let total_report = rank_top_m(store.marginal_abs_corr(None)?, m)?;
         let q_total = store.subset_train(None, &total_report.selected)?.quad_form();
         let lambdas = self.lambda_grid_for(&q_total);
+        let ev0 = trace::enabled().then(trace::now_us);
         let n_l = lambdas.len();
         let mut fold_err = vec![vec![0.0; k]; n_l];
         let mut nnz = vec![vec![0usize; k]; n_l];
@@ -853,6 +1039,9 @@ impl Driver {
                 nnz[li][i] = sol.n_active;
                 warm = Some(sol.beta);
             }
+        }
+        if let Some(start_us) = ev0 {
+            trace::emit_span("driver", "screen", format!("m{m}"), 0, start_us, k as u64);
         }
         let cv = crate::cv::select::summarize(&lambdas, fold_err, nnz)?;
         let sol = solve_cd(&q_total, self.cfg.penalty, cv.lambda_opt, None, self.cfg.cd);
@@ -911,19 +1100,28 @@ impl Driver {
             prefetch_issued: footprint.prefetch_issued,
             prefetch_hits: footprint.prefetch_hits,
             prefetch_wasted: footprint.prefetch_wasted,
+            read_retries: footprint.read_retries,
             screened,
         })
     }
 
     /// Algorithm 1, end to end, over an in-memory dataset.
     pub fn fit(&self, data: &Dataset) -> Result<FitReport> {
+        let ev0 = trace::enabled().then(trace::now_us);
         let (job, metrics) = self.stats_job(data)?;
+        if let Some(start_us) = ev0 {
+            trace::emit_span("driver", "stats-job", "map-reduce".into(), 0, start_us, metrics.records);
+        }
         self.fit_job(job, metrics)
     }
 
     /// Algorithm 1, end to end, over a streaming synthetic source.
     pub fn fit_stream(&self, spec: &SynthSpec) -> Result<FitReport> {
+        let ev0 = trace::enabled().then(trace::now_us);
         let (job, metrics) = self.stats_job_stream(spec)?;
+        if let Some(start_us) = ev0 {
+            trace::emit_span("driver", "stats-job", "map-reduce".into(), 0, start_us, metrics.records);
+        }
         self.fit_job(job, metrics)
     }
 }

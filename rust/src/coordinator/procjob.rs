@@ -33,7 +33,6 @@
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
-use std::time::Instant;
 
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
@@ -50,6 +49,7 @@ use crate::stats::tiles::{StatPanel, TileLayout};
 use crate::stats::SuffStats;
 use crate::store::spill::{decode_panel, encode_panel};
 use crate::store::{FoldStore, MemStore, PanelKey, PanelStore, SpillStore};
+use crate::util::timer::Timer;
 
 use super::driver::{feed_csv_shard, feed_synth_split, n_synth_splits, synth_split, FoldAccumulator};
 
@@ -426,7 +426,7 @@ fn run_stats_proc(
 ) -> Result<(FoldStore, JobMetrics)> {
     let pc = proc_config(cfg)?;
     let (outputs, mut metrics) = run_proc_job(&pc, setup, n_tasks)?;
-    let t_reduce = Instant::now();
+    let t_reduce = Timer::start();
     let mut leaves = Vec::with_capacity(outputs.len());
     for (task, bytes) in outputs.iter().enumerate() {
         let (rows, map) = decode_stats_output(bytes)
@@ -452,7 +452,7 @@ fn run_stats_proc(
             .map_err(|e| anyhow!("retire (fold {fold}, panel {panel}): {e}"))?;
     }
     store.seal()?;
-    metrics.reduce_s = t_reduce.elapsed().as_secs_f64();
+    metrics.reduce_s = t_reduce.elapsed_s();
     metrics.real_s += metrics.reduce_s;
     let sm = store.metrics();
     metrics.resident_stat_bytes_peak = sm.resident_bytes_peak;
@@ -462,6 +462,7 @@ fn run_stats_proc(
     metrics.prefetch_issued = sm.prefetch_issued;
     metrics.prefetch_hits = sm.prefetch_hits;
     metrics.prefetch_wasted = sm.prefetch_wasted;
+    metrics.read_retries = sm.read_retries;
     metrics.panels_skipped = store.zero_panels();
     Ok((store, metrics))
 }

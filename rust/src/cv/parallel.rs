@@ -205,8 +205,21 @@ pub(crate) fn fold_errors_store(
     let mut nnz = Vec::with_capacity(lambdas.len());
     let mut models = Vec::with_capacity(lambdas.len());
     let mut warm: Option<Vec<f64>> = None;
-    for &lam in lambdas {
+    for (li, &lam) in lambdas.iter().enumerate() {
+        // one trace span per (fold, λ) CV cell — shared by every runtime
+        // (in-process pool and proc workers), observe-only
+        let ev0 = crate::trace::enabled().then(crate::trace::now_us);
         let sol = solve_cd(&q, penalty, lam, warm.as_deref(), settings);
+        if let Some(start_us) = ev0 {
+            crate::trace::emit_span(
+                "cv",
+                "cell",
+                format!("f{fold}.l{li}"),
+                0,
+                start_us,
+                sol.sweeps as u64,
+            );
+        }
         models.push(q.to_original_scale(&sol.beta));
         nnz.push(sol.n_active);
         warm = Some(sol.beta);

@@ -144,7 +144,20 @@ pub fn cross_validate<S: crate::stats::Scatter>(
         let held = folds.fold(i);
         let mut warm: Option<Vec<f64>> = None;
         for (li, &lam) in lambdas.iter().enumerate() {
+            // one trace span per (fold, λ) CV cell — same key shape as the
+            // store-backed sweep (`fold_errors_store`), observe-only
+            let ev0 = crate::trace::enabled().then(crate::trace::now_us);
             let sol = solve_cd(&q, penalty, lam, warm.as_deref(), settings);
+            if let Some(start_us) = ev0 {
+                crate::trace::emit_span(
+                    "cv",
+                    "cell",
+                    format!("f{i}.l{li}"),
+                    0,
+                    start_us,
+                    sol.sweeps as u64,
+                );
+            }
             let (alpha, beta) = q.to_original_scale(&sol.beta);
             fold_err[li][i] = held.mse(alpha, &beta);
             nnz[li][i] = sol.n_active;

@@ -61,6 +61,7 @@ pub mod solver;
 pub mod stats;
 pub mod store;
 pub mod sync;
+pub mod trace;
 pub mod util;
 
 /// Crate-wide result alias.

@@ -53,6 +53,8 @@ commands:
              [--workers-proc W] [--heartbeat-ms MS] [--task-deadline-ms MS]
              [--screen-auto P] [--sparse] [--x-density D] [--config FILE]
              [--kernel auto|scalar|simd] [--no-prefetch]
+             [--trace FILE.jsonl] [--trace-chrome FILE.json]
+             [--metrics-json FILE] [--trace-summary]
              [--out MODEL] [--curve]
   predict    --model MODEL --csv FILE [--out FILE]
   experiments <t1|t2|t3|t4|t5|f1|f2|f3|all> [--quick] [--workers W]
@@ -70,7 +72,7 @@ fn parse_flags(args: &[String]) -> Result<(Vec<String>, BTreeMap<String, String>
         let a = &args[i];
         if let Some(name) = a.strip_prefix("--") {
             // boolean flags
-            if matches!(name, "quick" | "curve" | "sparse" | "no-prefetch") {
+            if matches!(name, "quick" | "curve" | "sparse" | "no-prefetch" | "trace-summary") {
                 flags.insert(name.to_string(), "true".to_string());
                 i += 1;
                 continue;
@@ -252,6 +254,15 @@ fn build_config(f: &BTreeMap<String, String>) -> Result<FitConfig> {
 fn cmd_fit(args: &[String]) -> Result<()> {
     let (_, f) = parse_flags(args)?;
     let cfg = build_config(&f)?;
+    // observability: any trace flag turns the sink on for this fit; the
+    // fit output is bit-identical either way (tests/trace_observe.rs)
+    let trace_jsonl = f.get("trace").map(PathBuf::from);
+    let trace_chrome = f.get("trace-chrome").map(PathBuf::from);
+    let tracing =
+        trace_jsonl.is_some() || trace_chrome.is_some() || f.contains_key("trace-summary");
+    if tracing {
+        plrmr::trace::set_enabled(true);
+    }
     let driver = Driver::new(cfg);
     let report = match (f.get("csv"), f.get("synth")) {
         (Some(paths), None) => {
@@ -271,6 +282,12 @@ fn cmd_fit(args: &[String]) -> Result<()> {
             driver.fit_stream(&spec)?
         }
         _ => bail!("exactly one of --csv or --synth is required"),
+    };
+    let trace_events = if tracing {
+        plrmr::trace::set_enabled(false);
+        Some(plrmr::trace::drain())
+    } else {
+        None
     };
     println!(
         "map phase: {} rows in {} ({} rows/s, {} tasks, {} retries)",
@@ -313,21 +330,10 @@ fn cmd_fit(args: &[String]) -> Result<()> {
         plrmr::bench::fmt_bytes(report.stat_peak_alloc_bytes),
         plrmr::bench::fmt_bytes(report.resident_stat_bytes_peak),
     );
-    if report.spill_writes > 0 {
-        println!(
-            "panel store spilled {} ({} writes, {} reads back)",
-            plrmr::bench::fmt_bytes(report.spill_bytes),
-            report.spill_writes,
-            report.spill_reads,
-        );
-    }
-    if report.prefetch_issued > 0 {
-        println!(
-            "panel prefetch: {} issued, {} demand hits, {} wasted",
-            report.prefetch_issued,
-            report.prefetch_hits,
-            report.prefetch_wasted,
-        );
+    // spill / prefetch / read-retry lines — the helper is shared with the
+    // proc-mode rendering path so the two can never drift apart
+    for line in report.store_activity_lines() {
+        println!("{line}");
     }
     if let Some(s) = &report.screened {
         println!(
@@ -353,6 +359,38 @@ fn cmd_fit(args: &[String]) -> Result<()> {
     if let Some(out) = f.get("out") {
         report.model.save(std::path::Path::new(out))?;
         println!("\nsaved model to {out}");
+    }
+    if let Some(events) = &trace_events {
+        if let Some(path) = &trace_jsonl {
+            plrmr::trace::write_events(path, events)?;
+            println!("\nwrote {} trace event(s) to {}", events.len(), path.display());
+        }
+        if let Some(path) = &trace_chrome {
+            plrmr::trace::write_chrome(path, events)?;
+            println!(
+                "wrote Chrome trace to {} (load in Perfetto or chrome://tracing)",
+                path.display()
+            );
+        }
+        if f.contains_key("trace-summary") {
+            let analysis = plrmr::trace::analyze::analyze(events);
+            let dropped = plrmr::trace::dropped();
+            println!(
+                "\ntrace summary: {} event(s){}",
+                analysis.events,
+                if dropped > 0 {
+                    format!(" ({dropped} dropped by full rings)")
+                } else {
+                    String::new()
+                }
+            );
+            println!("{}", analysis.render());
+        }
+    }
+    if let Some(path) = f.get("metrics-json") {
+        std::fs::write(path, report.to_json().render())
+            .with_context(|| format!("write metrics JSON {path}"))?;
+        println!("wrote metrics JSON to {path}");
     }
     Ok(())
 }
@@ -463,9 +501,9 @@ fn cmd_hlo_fit(args: &[String]) -> Result<()> {
         )
     })?;
     let mut stats = SuffStats::new(spec.p);
-    let t0 = std::time::Instant::now();
+    let t0 = plrmr::util::timer::Timer::start();
     mapper.fold_rows(&data.x, &data.y, &mut stats)?;
-    let hlo_s = t0.elapsed().as_secs_f64();
+    let hlo_s = t0.elapsed_s();
     println!(
         "HLO map path: {} blocks x {} rows on PJRT ({}), {} tail rows on CPU, {}",
         mapper.hlo_blocks,

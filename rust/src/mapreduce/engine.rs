@@ -23,13 +23,14 @@
 
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::sync::mpsc;
-use std::time::Instant;
 
 use anyhow::{bail, Result};
 
 use crate::sync::atomic::{AtomicUsize, Ordering};
 use crate::sync::{fetch_max_usize, fetch_sub_saturating_usize, lock_named, wait_named};
 use crate::sync::{Condvar, Mutex};
+use crate::trace;
+use crate::util::timer::Timer;
 
 use super::fault::{Fault, FaultPlan};
 use super::job::{JobCosts, JobMetrics, MergeError, Mergeable, WorkerMetrics};
@@ -442,7 +443,7 @@ where
     K: Ord + Clone + Send,
     V: Mergeable + Send,
 {
-    let started = Instant::now();
+    let started = Timer::start();
     let n_tasks = inputs.len();
     let workers = cfg.workers.max(1);
     if n_tasks == 0 {
@@ -517,13 +518,23 @@ where
                 // construction (collapsing consumes both children)
                 let mut combiner: BTreeMap<usize, BTreeMap<K, V>> = BTreeMap::new();
                 while let Some((task_id, attempt)) = map_queue.pop() {
-                    let t0 = Instant::now();
+                    let t0 = Timer::start();
+                    let ev0 = trace::enabled().then(trace::now_us);
                     let mut stalled = false;
                     match fault.roll(task_id, attempt) {
                         // a thread pool cannot SIGKILL one of its own
                         // threads, so in-process Kill degrades to Crash
                         // (the supervisor runtime delivers the real signal)
                         Some(Fault::Crash) | Some(Fault::Kill) => {
+                            if trace::enabled() {
+                                trace::emit_instant(
+                                    "engine",
+                                    "crash",
+                                    format!("t{task_id}.a{attempt}"),
+                                    worker_id as u64,
+                                    attempt as u64,
+                                );
+                            }
                             let _ = tx.send(TaskMsg::Crashed { task_id, attempt, worker_id });
                             continue;
                         }
@@ -557,7 +568,7 @@ where
                                 task_id,
                                 worker_id,
                                 records: 0,
-                                busy_s: t0.elapsed().as_secs_f64(),
+                                busy_s: t0.elapsed_s(),
                                 stalled,
                             });
                             continue;
@@ -625,11 +636,21 @@ where
                             e,
                         ),
                     }
+                    if let Some(start_us) = ev0 {
+                        trace::emit_span(
+                            "engine",
+                            "map",
+                            format!("t{task_id}.a{attempt}"),
+                            worker_id as u64,
+                            start_us,
+                            emitter.records as u64,
+                        );
+                    }
                     let _ = tx.send(TaskMsg::Done {
                         task_id,
                         worker_id,
                         records: emitter.records,
-                        busy_s: t0.elapsed().as_secs_f64(),
+                        busy_s: t0.elapsed_s(),
                         stalled,
                     });
                 }
@@ -642,6 +663,7 @@ where
                 // deadlocks at the flush gate) and must fail the job by
                 // name (the poisoned slot is recovered by `lock_named` on
                 // every later access).
+                let flush_ev0 = trace::enabled().then(trace::now_us);
                 let flush = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
                     let mut payloads = 0usize;
                     let mut bytes = 0usize;
@@ -670,6 +692,16 @@ where
                         payload_bytes.fetch_add(bytes, Ordering::Relaxed);
                         fetch_max_usize(payload_max, max_entry);
                         combined_count.fetch_add(pre_combined, Ordering::Relaxed);
+                        if let Some(start_us) = flush_ev0 {
+                            trace::emit_span(
+                                "engine",
+                                "flush",
+                                format!("w{worker_id}"),
+                                worker_id as u64,
+                                start_us,
+                                payloads as u64,
+                            );
+                        }
                     }
                     Err(payload) => record_merge_failure(
                         merge_failure,
@@ -684,6 +716,7 @@ where
                     // disjoint slots.
                     None => {
                         while let Some(node) = reduce_queue.pop() {
+                            let merge_ev0 = trace::enabled().then(trace::now_us);
                             let left = lock_named(&slots[2 * node], "merge slot").take();
                             let right = lock_named(&slots[2 * node + 1], "merge slot").take();
                             let merged = match (left, right) {
@@ -713,6 +746,16 @@ where
                                 (None, r) => r,
                             };
                             *lock_named(&slots[node], "merge slot") = merged;
+                            if let Some(start_us) = merge_ev0 {
+                                trace::emit_span(
+                                    "engine",
+                                    "merge",
+                                    format!("L{}.n{node}", node.ilog2()),
+                                    worker_id as u64,
+                                    start_us,
+                                    2,
+                                );
+                            }
                             level_pending.done_one();
                         }
                     }
@@ -722,6 +765,7 @@ where
                     // key completes, so nothing accumulates in a leader map.
                     Some(retire_fn) => {
                         while let Some(key) = key_queue.pop() {
+                            let retire_ev0 = trace::enabled().then(trace::now_us);
                             // unwind-guarded like the tree merges: the
                             // level_pending gate must see every key done
                             let result =
@@ -749,6 +793,16 @@ where
                                 });
                             if let Err(e) = result {
                                 record_merge_failure(merge_failure, "per-key reduce", e);
+                            }
+                            if let Some(start_us) = retire_ev0 {
+                                trace::emit_span(
+                                    "engine",
+                                    "retire",
+                                    format!("w{worker_id}"),
+                                    worker_id as u64,
+                                    start_us,
+                                    1,
+                                );
                             }
                             level_pending.done_one();
                         }
@@ -804,13 +858,13 @@ where
                 }
             }
         }
-        metrics.map_s = started.elapsed().as_secs_f64();
+        metrics.map_s = started.elapsed_s();
         map_queue.close();
 
         if failure.is_none() {
             // Shuffle: wait until every worker has flushed its combiner.
             flushed.wait_zero();
-            metrics.shuffle_s = started.elapsed().as_secs_f64() - metrics.map_s;
+            metrics.shuffle_s = started.elapsed_s() - metrics.map_s;
             // Account attempts that finished after coverage (straggling
             // duplicates); their sends happened-before the flush gate.
             while let Ok(msg) = rx.try_recv() {
@@ -831,7 +885,7 @@ where
                     }
                 }
             }
-            let t_reduce = Instant::now();
+            let t_reduce = Timer::start();
             match retire {
                 None => {
                     // Reduce (tree mode): execute the merge tree bottom-up,
@@ -880,7 +934,7 @@ where
                     }
                 }
             }
-            metrics.reduce_s = t_reduce.elapsed().as_secs_f64();
+            metrics.reduce_s = t_reduce.elapsed_s();
         }
         reduce_queue.close();
         key_queue.close();
@@ -902,7 +956,7 @@ where
     metrics.combined_nodes = combined_count.load(Ordering::Relaxed);
     metrics.tasks_completed = n_tasks;
     metrics.attempts_max = metrics.attempts_max.max(1);
-    metrics.real_s = started.elapsed().as_secs_f64();
+    metrics.real_s = started.elapsed_s();
     metrics.modeled_overhead_s = cfg.costs.overhead_s(n_tasks, workers);
     Ok(JobOutput { output, metrics })
 }

@@ -261,6 +261,9 @@ pub struct JobMetrics {
     /// prefetched panels evicted or removed before any demand read —
     /// readahead that cost a spill read for nothing
     pub prefetch_wasted: usize,
+    /// spill-file reads that needed the bounded second attempt (transient
+    /// partial read healed; stamped from [`crate::store::StoreMetrics`])
+    pub read_retries: usize,
     pub per_worker: Vec<WorkerMetrics>,
 }
 
@@ -285,6 +288,28 @@ impl JobMetrics {
             (self.shuffle_s + self.reduce_s) / self.real_s
         } else {
             0.0
+        }
+    }
+
+    /// Busy-time skew across workers: max(busy_s) / mean(busy_s).  1.0 is
+    /// a perfectly balanced fleet; large values mean one worker carried
+    /// the job.  1.0 when there is no per-worker accounting or no work.
+    pub fn worker_skew(&self) -> f64 {
+        if self.per_worker.is_empty() {
+            return 1.0;
+        }
+        // display-only statistic; plain left-to-right accumulation over the
+        // fixed per_worker order (not a keyed payload)
+        let (mut total, mut max) = (0.0f64, 0.0f64);
+        for w in &self.per_worker {
+            total += w.busy_s;
+            max = max.max(w.busy_s);
+        }
+        let mean = total / self.per_worker.len() as f64;
+        if mean > 0.0 {
+            max / mean
+        } else {
+            1.0
         }
     }
 }

@@ -40,6 +40,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::sync::atomic::{AtomicBool, Ordering};
 use crate::sync::{lock_named, Arc, Mutex};
+use crate::trace;
 
 use super::engine::panic_message;
 use super::fault::{Fault, FaultPlan};
@@ -204,6 +205,10 @@ fn spawn_worker(cfg: &ProcConfig, socket: &Path, worker_id: u64) -> Result<Worke
         .arg(worker_id.to_string())
         .arg("--heartbeat-ms")
         .arg(cfg.heartbeat_ms.to_string())
+        // propagate the leader's tracing state explicitly ("0" overrides
+        // any stale inherited value); the worker ships drained batches
+        // back as TraceBatch frames
+        .env("PLRMR_TRACE", if trace::enabled() { "1" } else { "0" })
         .stdin(Stdio::null())
         .stdout(Stdio::null())
         .spawn()
@@ -345,6 +350,15 @@ pub fn run_proc_job(
     for _ in 0..workers {
         match spawn_worker(cfg, &sock.path, next_worker_id) {
             Ok(h) => {
+                if trace::enabled() {
+                    trace::emit_instant(
+                        "proc",
+                        "spawn",
+                        format!("w{next_worker_id}"),
+                        next_worker_id,
+                        0,
+                    );
+                }
                 children.insert(next_worker_id, h);
                 next_worker_id += 1;
                 spawns_used += 1;
@@ -428,6 +442,15 @@ pub fn run_proc_job(
             }
             let deadline = (cfg.task_deadline_ms > 0)
                 .then(|| Instant::now() + Duration::from_millis(cfg.task_deadline_ms));
+            if trace::enabled() {
+                trace::emit_instant(
+                    "proc",
+                    "assign",
+                    format!("t{task}.a{attempt}"),
+                    conn.worker_id.unwrap_or(0),
+                    u64::from(kill),
+                );
+            }
             conn.running =
                 Some(Running { task, attempt, assigned: Instant::now(), deadline, killed: kill });
             if kill {
@@ -436,6 +459,15 @@ pub fn run_proc_job(
                 if let Some(wid) = conn.worker_id {
                     if let Some(h) = children.get_mut(&wid) {
                         h.kill();
+                        if trace::enabled() {
+                            trace::emit_instant(
+                                "proc",
+                                "kill",
+                                format!("t{task}.a{attempt}"),
+                                wid,
+                                attempt as u64,
+                            );
+                        }
                     }
                 }
             }
@@ -471,6 +503,15 @@ pub fn run_proc_job(
                             c.worker_id = Some(worker_id);
                             c.last_beat = Instant::now();
                             any_hello = true;
+                            if trace::enabled() {
+                                trace::emit_instant(
+                                    "proc",
+                                    "hello",
+                                    format!("w{worker_id}"),
+                                    worker_id,
+                                    0,
+                                );
+                            }
                             if write_frame(&mut &c.stream, &Message::Job { bytes: setup.to_vec() })
                                 .is_ok()
                             {
@@ -480,9 +521,18 @@ pub fn run_proc_job(
                             }
                         }
                         Message::Heartbeat { .. } => c.last_beat = Instant::now(),
-                        Message::Output { task_id, bytes, .. } => {
+                        Message::Output { task_id, attempt, bytes } => {
                             metrics.attempts += 1;
                             c.last_beat = Instant::now();
+                            if trace::enabled() {
+                                trace::emit_instant(
+                                    "proc",
+                                    "output",
+                                    format!("t{task_id}.a{attempt}"),
+                                    c.worker_id.unwrap_or(0),
+                                    bytes.len() as u64,
+                                );
+                            }
                             if let Some(r) = c.running.take() {
                                 let slot = c.worker_id.unwrap_or(0) as usize % workers;
                                 let w = &mut metrics.per_worker[slot];
@@ -506,6 +556,15 @@ pub fn run_proc_job(
                             metrics.attempts += 1;
                             c.running = None;
                             c.last_beat = Instant::now();
+                            if trace::enabled() {
+                                trace::emit_instant(
+                                    "proc",
+                                    "task-failed",
+                                    format!("t{task_id}.a{attempt}"),
+                                    c.worker_id.unwrap_or(0),
+                                    attempt,
+                                );
+                            }
                             idle.push_back(conn);
                             let task = task_id as usize;
                             if task < n_tasks && outputs[task].is_none() {
@@ -520,6 +579,14 @@ pub fn run_proc_job(
                                 );
                             }
                         }
+                        // observe-only: a worker's drained event batch joins
+                        // the leader's sink; a batch that fails to decode is
+                        // dropped (tracing must never fail a job)
+                        Message::TraceBatch { bytes, .. } => {
+                            if let Ok(events) = trace::decode_events(&bytes) {
+                                trace::ingest(events);
+                            }
+                        }
                         _ => {}
                     }
                 }
@@ -528,6 +595,15 @@ pub fn run_proc_job(
                         if let Some(r) = c.running {
                             if outputs[r.task].is_none() {
                                 metrics.attempts += 1;
+                                if trace::enabled() {
+                                    trace::emit_instant(
+                                        "proc",
+                                        "requeue",
+                                        format!("t{}.a{}", r.task, r.attempt),
+                                        c.worker_id.unwrap_or(0),
+                                        u64::from(r.killed),
+                                    );
+                                }
                                 let desc = if r.killed {
                                     "worker process SIGKILLed mid-task"
                                 } else {
@@ -576,6 +652,15 @@ pub fn run_proc_job(
                 metrics.heartbeats_missed += 1;
                 "worker heartbeats went silent"
             };
+            if trace::enabled() {
+                trace::emit_instant(
+                    "proc",
+                    if was_deadline { "deadline" } else { "hb-silent" },
+                    format!("t{}.a{}", r.task, r.attempt),
+                    c.worker_id.unwrap_or(0),
+                    r.attempt as u64,
+                );
+            }
             if outputs[r.task].is_none() {
                 requeue_or_fail(
                     &mut metrics,
@@ -608,6 +693,15 @@ pub fn run_proc_job(
             if spawns_used < spawn_budget {
                 match spawn_worker(cfg, &sock.path, next_worker_id) {
                     Ok(h) => {
+                        if trace::enabled() {
+                            trace::emit_instant(
+                                "proc",
+                                "respawn",
+                                format!("w{next_worker_id}"),
+                                next_worker_id,
+                                id,
+                            );
+                        }
                         children.insert(next_worker_id, h);
                         next_worker_id += 1;
                         spawns_used += 1;
@@ -708,6 +802,15 @@ pub fn worker_serve(
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(0);
+    // a *process* worker whose leader traces: collect events here too and
+    // ship the drained batch after every task output.  Test-only thread
+    // workers share the leader's sink directly and must NOT ship (they
+    // would drain and re-send the leader's own events), which the env-var
+    // gate guarantees — the flag only exists in a spawned worker process.
+    let ship_trace = std::env::var("PLRMR_TRACE").ok().as_deref() == Some("1");
+    if ship_trace {
+        trace::set_enabled(true);
+    }
 
     let mut setup: Option<Vec<u8>> = None;
     while let Ok(msg) = read_frame(&mut read) {
@@ -743,6 +846,27 @@ pub fn worker_serve(
                 };
                 if write_frame(&mut *lock_named(&write, "worker write stream"), &reply).is_err() {
                     break;
+                }
+                if ship_trace {
+                    // flush this task's events right behind its Output
+                    // frame; shipping is best-effort (a dead socket is the
+                    // supervisor's problem, not the trace layer's).  Events
+                    // born in this process get relabeled onto this worker's
+                    // lane so the Perfetto view has one lane per process.
+                    let mut events = trace::drain();
+                    for e in &mut events {
+                        e.worker = worker_id;
+                    }
+                    if !events.is_empty() {
+                        let batch = Message::TraceBatch {
+                            worker_id,
+                            bytes: trace::encode_events(&events),
+                        };
+                        let _ = write_frame(
+                            &mut *lock_named(&write, "worker write stream"),
+                            &batch,
+                        );
+                    }
                 }
             }
             Message::Shutdown => break,

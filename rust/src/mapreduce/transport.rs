@@ -47,6 +47,10 @@ pub enum Message {
     TaskFailed { task_id: u64, attempt: u64, message: String },
     /// supervisor → worker: drain and exit cleanly
     Shutdown,
+    /// worker → supervisor: a drained batch of trace events (opaque here;
+    /// encoded by [`crate::trace::encode_events`]).  Observe-only — the
+    /// supervisor ingests it into its own sink and nothing else reads it.
+    TraceBatch { worker_id: u64, bytes: Vec<u8> },
 }
 
 const TYPE_HELLO: u64 = 1;
@@ -56,6 +60,7 @@ const TYPE_ASSIGN: u64 = 4;
 const TYPE_OUTPUT: u64 = 5;
 const TYPE_TASK_FAILED: u64 = 6;
 const TYPE_SHUTDOWN: u64 = 7;
+const TYPE_TRACE_BATCH: u64 = 8;
 
 /// Append a little-endian u64 (shared by frame and job-payload encoders).
 pub(crate) fn put_u64(buf: &mut Vec<u8>, v: u64) {
@@ -115,6 +120,11 @@ fn encode_payload(msg: &Message) -> (u64, Vec<u8>) {
             (TYPE_TASK_FAILED, p)
         }
         Message::Shutdown => (TYPE_SHUTDOWN, p),
+        Message::TraceBatch { worker_id, bytes } => {
+            put_u64(&mut p, *worker_id);
+            p.extend_from_slice(bytes);
+            (TYPE_TRACE_BATCH, p)
+        }
     }
 }
 
@@ -140,6 +150,10 @@ fn decode_payload(msg_type: u64, p: Vec<u8>) -> Result<Message> {
             Message::TaskFailed { task_id, attempt, message }
         }
         TYPE_SHUTDOWN => Message::Shutdown,
+        TYPE_TRACE_BATCH => {
+            let worker_id = get_u64(&p, &mut pos)?;
+            Message::TraceBatch { worker_id, bytes: p[pos..].to_vec() }
+        }
         other => bail!("worker frame: unknown message type {other}"),
     };
     Ok(msg)
@@ -220,6 +234,8 @@ mod tests {
             Message::Shutdown,
             Message::Job { bytes: Vec::new() },
             Message::Output { task_id: 0, attempt: 0, bytes: Vec::new() },
+            Message::TraceBatch { worker_id: 2, bytes: vec![8, 0, 0, 7] },
+            Message::TraceBatch { worker_id: 0, bytes: Vec::new() },
         ];
         for msg in msgs {
             assert_eq!(round_trip(msg.clone()), msg);

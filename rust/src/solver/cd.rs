@@ -18,6 +18,7 @@
 
 use crate::stats::suffstats::QuadForm;
 use crate::stats::Scatter;
+use crate::trace;
 
 use super::penalty::{soft_threshold, Penalty};
 
@@ -105,6 +106,9 @@ pub fn solve_cd<S: Scatter>(
     settings: CdSettings,
 ) -> CdSolution {
     assert!(lambda >= 0.0, "lambda must be nonnegative");
+    // observe-only: the span records wall time as payload; nothing below
+    // reads it back
+    let ev0 = trace::enabled().then(trace::now_us);
     let p = q.p;
     let la = lambda * penalty.alpha;
     let lr = lambda * (1.0 - penalty.alpha);
@@ -180,6 +184,9 @@ pub fn solve_cd<S: Scatter>(
 
     let n_active = beta.iter().filter(|b| **b != 0.0).count();
     let objective = objective(q, penalty, lambda, &beta);
+    if let Some(start_us) = ev0 {
+        trace::emit_span("solver", "cd", format!("l={lambda:.6}"), 0, start_us, sweeps as u64);
+    }
     CdSolution { beta, sweeps, converged, n_active, objective }
 }
 

@@ -26,10 +26,15 @@ pub fn solve_ridge(q: &QuadForm, lambda: f64) -> Result<Vec<f64>, String> {
 /// (property-tested below).
 pub fn solve_ridge_blocked(q: &QuadForm, lambda: f64, block: usize) -> Result<Vec<f64>, String> {
     assert!(lambda >= 0.0);
+    let ev0 = crate::trace::enabled().then(crate::trace::now_us);
     let mut a = q.gram.clone();
     a.add_diag(lambda);
     let l = cholesky_packed_blocked(&a, block, 0.0)?;
-    Ok(chol_solve_packed(&l, &q.xty))
+    let beta = chol_solve_packed(&l, &q.xty);
+    if let Some(start_us) = ev0 {
+        crate::trace::emit_span("solver", "ridge", format!("l={lambda:.6}"), 0, start_us, q.p as u64);
+    }
+    Ok(beta)
 }
 
 /// Ridge on a *panel-tiled* quadratic form: the shifted Gram, its
@@ -39,10 +44,15 @@ pub fn solve_ridge_blocked(q: &QuadForm, lambda: f64, block: usize) -> Result<Ve
 /// (identical recurrence and loop order; property-tested below).
 pub fn solve_ridge_tiled(q: &QuadForm<TiledSymMat>, lambda: f64) -> Result<Vec<f64>, String> {
     assert!(lambda >= 0.0);
+    let ev0 = crate::trace::enabled().then(crate::trace::now_us);
     let mut a = q.gram.clone();
     a.add_diag(lambda);
     let l = cholesky_tiled_factor(&a, 0.0)?;
-    Ok(chol_solve_tiled(&l, &q.xty))
+    let beta = chol_solve_tiled(&l, &q.xty);
+    if let Some(start_us) = ev0 {
+        crate::trace::emit_span("solver", "ridge", format!("l={lambda:.6}"), 0, start_us, q.p as u64);
+    }
+    Ok(beta)
 }
 
 /// Solve ridge for a whole λ grid, reusing nothing but the factor structure

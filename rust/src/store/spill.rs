@@ -50,6 +50,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::stats::tiles::StatPanel;
 use crate::sync::{lock_named, wait_named, Arc, Condvar, Mutex};
+use crate::trace;
 
 use super::{panel_bytes, PanelKey, PanelStore, StoreError, StoreMetrics, StoreResult};
 
@@ -295,6 +296,15 @@ impl Shared {
             entry.on_disk = true;
             inner.metrics.spill_writes += 1;
             inner.metrics.spill_bytes += encoded.len();
+            if trace::enabled() {
+                trace::emit_instant(
+                    "store",
+                    "spill-write",
+                    format!("f{}.p{}", key.fold, key.panel),
+                    0,
+                    encoded.len() as u64,
+                );
+            }
         }
         entry.resident = None;
         if entry.prefetched {
@@ -302,10 +312,28 @@ impl Shared {
             // displaced before the consumer arrived
             entry.prefetched = false;
             inner.metrics.prefetch_wasted += 1;
+            if trace::enabled() {
+                trace::emit_instant(
+                    "store",
+                    "prefetch-wasted",
+                    format!("f{}.p{}", key.fold, key.panel),
+                    0,
+                    0,
+                );
+            }
         }
         inner.metrics.resident_bytes -= entry.bytes;
         inner.metrics.spilled_panels += 1;
         inner.metrics.evictions += 1;
+        if trace::enabled() {
+            trace::emit_instant(
+                "store",
+                "evict",
+                format!("f{}.p{}", key.fold, key.panel),
+                0,
+                entry.bytes as u64,
+            );
+        }
         Ok(())
     }
 
@@ -364,6 +392,15 @@ impl Shared {
         let (result, retries) = loaded;
         let mut inner = lock_named(&self.inner, "spill store");
         inner.metrics.read_retries += retries as usize;
+        if retries > 0 && trace::enabled() {
+            trace::emit_instant(
+                "store",
+                "read-retry",
+                format!("f{}.p{}", key.fold, key.panel),
+                0,
+                retries,
+            );
+        }
         let out = match inner.entries.get_mut(&key) {
             Some(e) => {
                 e.loading = None;
@@ -384,6 +421,15 @@ impl Shared {
                         };
                         inner.metrics.spill_reads += 1;
                         inner.metrics.spilled_panels -= 1;
+                        if trace::enabled() {
+                            trace::emit_instant(
+                                "store",
+                                "spill-read",
+                                format!("f{}.p{}", key.fold, key.panel),
+                                0,
+                                retries,
+                            );
+                        }
                         // resident bytes were reserved at claim time
                         Ok(copy)
                     }
@@ -449,6 +495,15 @@ impl Shared {
                 .resident_bytes_peak
                 .max(inner.metrics.resident_bytes);
             inner.metrics.prefetch_issued += 1;
+            if trace::enabled() {
+                trace::emit_instant(
+                    "store",
+                    "prefetch-issue",
+                    format!("f{}.p{}", key.fold, key.panel),
+                    0,
+                    bytes as u64,
+                );
+            }
             return Some((key, bytes, latch));
         }
         None
@@ -630,6 +685,15 @@ impl PanelStore for SpillStore {
             .metrics
             .resident_bytes_peak
             .max(inner.metrics.resident_bytes);
+        if trace::enabled() {
+            trace::emit_instant(
+                "store",
+                "admit",
+                format!("f{}.p{}", key.fold, key.panel),
+                0,
+                bytes as u64,
+            );
+        }
         Ok(())
     }
 
@@ -655,6 +719,15 @@ impl PanelStore for SpillStore {
                 let panel = e.resident.clone().unwrap();
                 if was_prefetched {
                     inner.metrics.prefetch_hits += 1;
+                    if trace::enabled() {
+                        trace::emit_instant(
+                            "store",
+                            "prefetch-hit",
+                            format!("f{}.p{}", key.fold, key.panel),
+                            0,
+                            0,
+                        );
+                    }
                 }
                 return Ok(panel);
             }
@@ -721,6 +794,15 @@ impl PanelStore for SpillStore {
             inner.metrics.resident_bytes -= entry.bytes;
             if entry.prefetched {
                 inner.metrics.prefetch_wasted += 1;
+                if trace::enabled() {
+                    trace::emit_instant(
+                        "store",
+                        "prefetch-wasted",
+                        format!("f{}.p{}", key.fold, key.panel),
+                        0,
+                        0,
+                    );
+                }
             }
         } else {
             inner.metrics.spilled_panels -= 1;

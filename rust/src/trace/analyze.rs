@@ -1,0 +1,318 @@
+//! Post-run trace analysis: per-phase duration histograms, skew ratios,
+//! straggler tables and the merge-tree critical path.
+//!
+//! Everything here is pure arithmetic over an event slice — deterministic
+//! given the events, integer-indexed percentiles (no interpolation), and
+//! rendered through [`crate::util::table`] so `fit --trace-summary` and
+//! the bench harness print the same shapes that land in
+//! `BENCH_gram_tiled.json`.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Value;
+use crate::util::table::{sig, Table};
+use crate::util::timer::fmt_secs;
+
+use super::TraceEvent;
+
+/// Duration summary of one `(phase, name)` span population.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PhaseStat {
+    pub phase: String,
+    pub name: String,
+    pub count: usize,
+    pub total_us: u64,
+    pub median_us: u64,
+    pub p90_us: u64,
+    pub p99_us: u64,
+    pub max_us: u64,
+}
+
+impl PhaseStat {
+    /// Skew ratio p99/median — 1.0 means perfectly even task durations;
+    /// large values mean a straggling tail.  1.0 when the median is 0.
+    pub fn skew(&self) -> f64 {
+        if self.median_us == 0 {
+            1.0
+        } else {
+            self.p99_us as f64 / self.median_us as f64
+        }
+    }
+}
+
+/// The post-run analysis rendered by `fit --trace-summary`.
+#[derive(Debug, Clone, Default)]
+pub struct Analysis {
+    /// one row per `(phase, name)` with at least one span event
+    pub phases: Vec<PhaseStat>,
+    /// longest map span + Σ over merge-tree levels of that level's longest
+    /// merge — the serial floor of the job under infinite workers
+    pub critical_path_us: u64,
+    /// top span events by duration, deterministically tie-broken
+    pub stragglers: Vec<TraceEvent>,
+    /// total events analyzed (spans + instants)
+    pub events: usize,
+}
+
+/// Integer-indexed percentile of an ascending-sorted slice (nearest-rank,
+/// no interpolation — deterministic for any input).
+fn percentile(sorted: &[u64], pct: u64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let idx = ((sorted.len() - 1) as u64 * pct) / 100;
+    sorted[idx as usize]
+}
+
+/// How many stragglers the table keeps.
+const TOP_N: usize = 8;
+
+/// Analyze an event stream (order-insensitive; instants contribute to the
+/// event count but not to duration statistics).
+pub fn analyze(events: &[TraceEvent]) -> Analysis {
+    let mut groups: BTreeMap<(String, String), Vec<u64>> = BTreeMap::new();
+    for ev in events {
+        if ev.dur_us > 0 {
+            groups
+                .entry((ev.phase.clone(), ev.name.clone()))
+                .or_default()
+                .push(ev.dur_us);
+        }
+    }
+    let mut phases = Vec::with_capacity(groups.len());
+    for ((phase, name), mut durs) in groups {
+        durs.sort_unstable();
+        phases.push(PhaseStat {
+            phase,
+            name,
+            count: durs.len(),
+            total_us: durs.iter().sum(),
+            median_us: percentile(&durs, 50),
+            p90_us: percentile(&durs, 90),
+            p99_us: percentile(&durs, 99),
+            max_us: *durs.last().unwrap(),
+        });
+    }
+
+    // critical path through the merge tree: the longest map leaf, then the
+    // longest merge at every level (levels run in parallel within
+    // themselves but serially with respect to each other)
+    let longest_map = events
+        .iter()
+        .filter(|e| e.phase == "engine" && e.name == "map")
+        .map(|e| e.dur_us)
+        .max()
+        .unwrap_or(0);
+    let mut level_max: BTreeMap<u64, u64> = BTreeMap::new();
+    for ev in events {
+        if ev.phase == "engine" && ev.name == "merge" {
+            if let Some(lvl) = parse_merge_level(&ev.key) {
+                let slot = level_max.entry(lvl).or_insert(0);
+                *slot = (*slot).max(ev.dur_us);
+            }
+        }
+    }
+    let critical_path_us = longest_map + level_max.values().sum::<u64>();
+
+    let mut spans: Vec<&TraceEvent> = events.iter().filter(|e| e.dur_us > 0).collect();
+    spans.sort_by(|a, b| {
+        b.dur_us
+            .cmp(&a.dur_us)
+            .then_with(|| (&a.phase, &a.key, &a.name, a.worker).cmp(&(&b.phase, &b.key, &b.name, b.worker)))
+    });
+    let stragglers = spans.into_iter().take(TOP_N).cloned().collect();
+
+    Analysis { phases, critical_path_us, stragglers, events: events.len() }
+}
+
+/// `"L2.n5"` → `Some(2)`; anything else → `None`.
+fn parse_merge_level(key: &str) -> Option<u64> {
+    let rest = key.strip_prefix('L')?;
+    let (lvl, _) = rest.split_once('.')?;
+    lvl.parse().ok()
+}
+
+impl Analysis {
+    /// Skew ratio of one `(phase, name)` population, if it was observed.
+    pub fn skew_of(&self, phase: &str, name: &str) -> Option<f64> {
+        self.phases
+            .iter()
+            .find(|p| p.phase == phase && p.name == name)
+            .map(PhaseStat::skew)
+    }
+
+    /// The headline skew — map-task spans if present, else the worst skew
+    /// across all populations, else 1.0 (used by the bench JSON).
+    pub fn map_skew(&self) -> f64 {
+        self.skew_of("engine", "map").unwrap_or_else(|| {
+            self.phases.iter().map(|p| p.skew()).fold(1.0, f64::max)
+        })
+    }
+
+    /// Render the phase-histogram and straggler tables (the
+    /// `fit --trace-summary` body).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let mut t = Table::new(vec![
+            "phase", "event", "count", "total", "median", "p90", "p99", "max", "skew",
+        ]);
+        for p in &self.phases {
+            t.row(vec![
+                p.phase.clone(),
+                p.name.clone(),
+                format!("{}", p.count),
+                fmt_secs(p.total_us as f64 / 1e6),
+                fmt_secs(p.median_us as f64 / 1e6),
+                fmt_secs(p.p90_us as f64 / 1e6),
+                fmt_secs(p.p99_us as f64 / 1e6),
+                fmt_secs(p.max_us as f64 / 1e6),
+                sig(p.skew(), 3),
+            ]);
+        }
+        out.push_str(&t.render());
+        out.push_str(&format!(
+            "\ncritical path (longest map + per-level longest merges): {}\n",
+            fmt_secs(self.critical_path_us as f64 / 1e6)
+        ));
+        if !self.stragglers.is_empty() {
+            out.push_str("\ntop stragglers:\n");
+            let mut s = Table::new(vec!["phase", "event", "key", "worker", "dur", "n"]);
+            for ev in &self.stragglers {
+                s.row(vec![
+                    ev.phase.clone(),
+                    ev.name.clone(),
+                    ev.key.clone(),
+                    format!("{}", ev.worker),
+                    fmt_secs(ev.dur_us as f64 / 1e6),
+                    format!("{}", ev.n),
+                ]);
+            }
+            out.push_str(&s.render());
+        }
+        out
+    }
+
+    /// Machine-readable form for `BENCH_gram_tiled.json` and friends.
+    pub fn to_json(&self) -> Value {
+        let mut phases = Vec::with_capacity(self.phases.len());
+        for p in &self.phases {
+            let mut m = std::collections::BTreeMap::new();
+            m.insert("phase".to_string(), Value::Str(p.phase.clone()));
+            m.insert("event".to_string(), Value::Str(p.name.clone()));
+            m.insert("count".to_string(), Value::Num(p.count as f64));
+            m.insert("total_us".to_string(), Value::Num(p.total_us as f64));
+            m.insert("median_us".to_string(), Value::Num(p.median_us as f64));
+            m.insert("p90_us".to_string(), Value::Num(p.p90_us as f64));
+            m.insert("p99_us".to_string(), Value::Num(p.p99_us as f64));
+            m.insert("max_us".to_string(), Value::Num(p.max_us as f64));
+            m.insert("skew".to_string(), Value::Num(p.skew()));
+            phases.push(Value::Obj(m));
+        }
+        let mut root = std::collections::BTreeMap::new();
+        root.insert("events".to_string(), Value::Num(self.events as f64));
+        root.insert("critical_path_us".to_string(), Value::Num(self.critical_path_us as f64));
+        root.insert("map_skew".to_string(), Value::Num(self.map_skew()));
+        root.insert("phases".to_string(), Value::Arr(phases));
+        Value::Obj(root)
+    }
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::super::TraceEvent;
+    use super::*;
+
+    fn ev(phase: &str, name: &str, key: &str, worker: u64, dur: u64) -> TraceEvent {
+        TraceEvent {
+            phase: phase.into(),
+            name: name.into(),
+            key: key.into(),
+            worker,
+            seq: 0,
+            start_us: 0,
+            dur_us: dur,
+            n: 0,
+        }
+    }
+
+    fn fixture() -> Vec<TraceEvent> {
+        vec![
+            // 4 map spans, one straggler
+            ev("engine", "map", "t0.a0", 0, 100),
+            ev("engine", "map", "t1.a0", 1, 110),
+            ev("engine", "map", "t2.a0", 2, 105),
+            ev("engine", "map", "t3.a0", 3, 1000),
+            // two merge levels: max 50 at L1, max 30 at L0
+            ev("engine", "merge", "L1.n2", 0, 50),
+            ev("engine", "merge", "L1.n3", 1, 40),
+            ev("engine", "merge", "L0.n1", 0, 30),
+            // an instant contributes to the count only
+            TraceEvent { dur_us: 0, ..ev("proc", "spawn", "w0", 0, 0) },
+        ]
+    }
+
+    #[test]
+    fn percentiles_are_nearest_rank() {
+        let xs = [10, 20, 30, 40];
+        assert_eq!(percentile(&xs, 50), 20);
+        assert_eq!(percentile(&xs, 99), 30, "(n-1)*99/100 = 2 for n = 4");
+        assert_eq!(percentile(&xs, 100), 40);
+        assert_eq!(percentile(&[], 50), 0);
+    }
+
+    #[test]
+    fn analysis_computes_skew_and_critical_path() {
+        let a = analyze(&fixture());
+        assert_eq!(a.events, 8);
+        let map = a.phases.iter().find(|p| p.name == "map").unwrap();
+        assert_eq!(map.count, 4);
+        assert_eq!(map.median_us, 105);
+        assert_eq!(map.max_us, 1000);
+        assert!(map.skew() > 1.0);
+        // 1000 (longest map) + 50 (L1) + 30 (L0)
+        assert_eq!(a.critical_path_us, 1080);
+        // straggler table leads with the slow map task
+        assert_eq!(a.stragglers[0].key, "t3.a0");
+        assert!(a.skew_of("engine", "merge").is_some());
+        assert!(a.skew_of("engine", "nope").is_none());
+        assert!(a.map_skew() > 1.0);
+    }
+
+    #[test]
+    fn analysis_is_emission_order_insensitive() {
+        let mut rev = fixture();
+        rev.reverse();
+        let a = analyze(&fixture());
+        let b = analyze(&rev);
+        assert_eq!(a.phases, b.phases);
+        assert_eq!(a.critical_path_us, b.critical_path_us);
+        assert_eq!(
+            a.stragglers.iter().map(|e| e.key.clone()).collect::<Vec<_>>(),
+            b.stragglers.iter().map(|e| e.key.clone()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn render_and_json_carry_the_tables() {
+        let a = analyze(&fixture());
+        let s = a.render();
+        assert!(s.contains("critical path"));
+        assert!(s.contains("top stragglers"));
+        assert!(s.contains("t3.a0"));
+        assert!(s.contains("skew"));
+        let j = a.to_json().render();
+        let parsed = Value::parse(&j).unwrap();
+        assert!(parsed.get("map_skew").unwrap().as_f64().unwrap() > 1.0);
+        assert_eq!(parsed.get("critical_path_us").unwrap().as_usize().unwrap(), 1080);
+        assert!(!parsed.get("phases").unwrap().as_arr().unwrap().is_empty());
+    }
+
+    #[test]
+    fn empty_stream_is_benign() {
+        let a = analyze(&[]);
+        assert_eq!(a.critical_path_us, 0);
+        assert!(a.phases.is_empty() && a.stragglers.is_empty());
+        assert_eq!(a.map_skew(), 1.0);
+        assert!(a.render().contains("critical path"));
+    }
+}

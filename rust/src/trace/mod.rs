@@ -1,0 +1,590 @@
+//! Deterministic-safe tracing — the observability layer under the engine,
+//! supervisor, stores, driver, CV sweep and CD solver.
+//!
+//! Every layer emits [`TraceEvent`]s into a process-global sink of
+//! per-worker bounded ring buffers (append goes through the
+//! [`crate::sync`] shim's `lock_named`, sharded by worker lane so the hot
+//! paths never contend on one mutex).  Wall-clock timestamps are **payload
+//! only**: they ride along for humans and Perfetto, but no key, merge
+//! order or payload byte is ever derived from them — the
+//! `wallclock-outside-trace` detlint rule fences `Instant::now` into
+//! `util/timer.rs` and this module so time cannot leak back into keyed
+//! logic.  Tracing is observe-only by contract: `tests/trace_observe.rs`
+//! pins the fit bit-identical with tracing off / on / exporting.
+//!
+//! ## Event taxonomy
+//!
+//! | phase    | names                                            | key shape      |
+//! |----------|--------------------------------------------------|----------------|
+//! | `engine` | `map`, `crash`, `flush`, `merge`, `retire`       | `t3.a0`, `L2.n5`, `w2` |
+//! | `proc`   | `spawn`, `hello`, `assign`, `output`, `task-failed`, `deadline`, `hb-silent`, `kill`, `requeue`, `respawn` | `w2`, `t3.a1` |
+//! | `store`  | `admit`, `evict`, `spill-write`, `spill-read`, `read-retry`, `prefetch-issue`, `prefetch-hit`, `prefetch-wasted` | `f1.p7` |
+//! | `driver` | `stats-job`, `standardize`, `cv`, `screen`, `final-solve` | phase-specific |
+//! | `cv`     | `cell`                                           | `f1.l12`       |
+//! | `solver` | `cd`, `ridge`                                    | `l=0.031250`   |
+//! | `kernel` | `dispatch`                                       | `auto`/`simd`/`scalar` |
+//!
+//! In proc mode a worker process drains its sink after every task and
+//! ships the batch to the leader as a
+//! [`TraceBatch`][crate::mapreduce::transport::Message::TraceBatch] frame
+//! (same checksummed dialect as every other frame); the leader ingests the
+//! batch into its own sink, so one `drain()` at export time sees the whole
+//! fleet.
+//!
+//! ## Exporters
+//!
+//! * [`write_events`] — JSONL, one event per line, canonically ordered by
+//!   `(phase, key, name, worker)` with `seq` reassigned to the canonical
+//!   index.  Timestamps are ordinary fields, so two runs of the same fit
+//!   diff clean except for the `start_us`/`dur_us` columns.
+//! * [`write_chrome`] — Chrome trace-event JSON (`ph:"X"` spans,
+//!   `ph:"i"` instants, one `tid` lane per worker), loadable in Perfetto
+//!   or `chrome://tracing`.
+//! * [`analyze`][mod@analyze] — post-run skew/straggler/critical-path
+//!   analysis rendered by `fit --trace-summary` and the bench harness.
+//!
+//! Under `--cfg loom` the sink compiles to no-ops (loom's `Mutex` is not
+//! usable outside a model run); the loom models never trace.
+
+pub mod analyze;
+
+use std::fmt;
+use std::fs;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Value;
+
+/// One trace event.  `dur_us == 0` marks an instant event; anything else
+/// is a span.  `seq` breaks ties deterministically once events are
+/// canonicalized — it is an occurrence index, not a timestamp.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// layer: `engine`, `proc`, `store`, `driver`, `cv`, `solver`, `kernel`
+    pub phase: String,
+    /// event name within the layer (see the module-level taxonomy table)
+    pub name: String,
+    /// deterministic key — task/attempt, tree node, panel, λ index …
+    pub key: String,
+    /// lane: engine worker index or proc worker id; leader-side events use 0
+    pub worker: u64,
+    /// canonical occurrence index (assigned by [`canonicalize`])
+    pub seq: u64,
+    /// wall-clock start, µs since the process trace epoch — payload only
+    pub start_us: u64,
+    /// span duration in µs; 0 for instant events — payload only
+    pub dur_us: u64,
+    /// free count payload: rows, sweeps, bytes, attempt …
+    pub n: u64,
+}
+
+impl fmt::Display for TraceEvent {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}/{} {} w{} n={} +{}µs {}µs",
+            self.phase, self.name, self.key, self.worker, self.n, self.start_us, self.dur_us
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the process-global sink
+// ---------------------------------------------------------------------------
+
+#[cfg(not(loom))]
+mod sink {
+    use std::collections::VecDeque;
+    use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+    use std::sync::OnceLock;
+    use std::time::Instant;
+
+    use crate::sync::{lock_named, Mutex};
+
+    use super::TraceEvent;
+
+    /// Worker lanes hash into this many independently locked buffers.
+    const SHARDS: usize = 16;
+
+    /// Ring capacity per shard — oldest events drop first, counted, so a
+    /// pathological fit can never let the sink grow without bound.
+    const SHARD_CAP: usize = 1 << 14;
+
+    struct Sink {
+        shards: Vec<Mutex<VecDeque<TraceEvent>>>,
+        dropped: AtomicU64,
+    }
+
+    // process-global counters stay on std atomics by the same policy as
+    // the spill-dir / socket-path counters (see crate::sync module docs)
+    static ENABLED: AtomicBool = AtomicBool::new(false);
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    static SINK: OnceLock<Sink> = OnceLock::new();
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+    fn sink() -> &'static Sink {
+        SINK.get_or_init(|| Sink {
+            shards: (0..SHARDS).map(|_| Mutex::new(VecDeque::new())).collect(),
+            dropped: AtomicU64::new(0),
+        })
+    }
+
+    /// Turn event collection on or off, process-wide.  Off is the default
+    /// and costs one relaxed atomic load per (guarded) call site.
+    pub fn set_enabled(on: bool) {
+        // pin the epoch the moment tracing first turns on, so start_us
+        // offsets are comparable across the whole run
+        if on {
+            let _ = EPOCH.get_or_init(Instant::now);
+        }
+        ENABLED.store(on, Ordering::Relaxed);
+    }
+
+    pub fn enabled() -> bool {
+        ENABLED.load(Ordering::Relaxed)
+    }
+
+    /// µs since the trace epoch (the first `set_enabled(true)` of the
+    /// process).  Timestamp payload only — never feeds keyed logic.
+    pub fn now_us() -> u64 {
+        let epoch = EPOCH.get_or_init(Instant::now);
+        epoch.elapsed().as_micros() as u64
+    }
+
+    /// Append one event (no-op while disabled).  Sharded by worker lane;
+    /// the ring drops its oldest event when full.
+    pub fn push(mut ev: TraceEvent) {
+        if !enabled() {
+            return;
+        }
+        ev.seq = SEQ.fetch_add(1, Ordering::Relaxed);
+        let s = sink();
+        let mut ring = lock_named(&s.shards[(ev.worker as usize) % SHARDS], "trace ring");
+        if ring.len() >= SHARD_CAP {
+            ring.pop_front();
+            s.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        ring.push_back(ev);
+    }
+
+    /// Take every buffered event out of the sink, in emission (`seq`)
+    /// order.  Used by workers to ship batches and by the leader at
+    /// export time.
+    pub fn drain() -> Vec<TraceEvent> {
+        let s = sink();
+        let mut out = Vec::new();
+        for shard in &s.shards {
+            out.extend(lock_named(shard, "trace ring").drain(..));
+        }
+        out.sort_by_key(|e| e.seq);
+        out
+    }
+
+    /// Events dropped by full rings since process start.
+    pub fn dropped() -> u64 {
+        sink().dropped.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(loom)]
+mod sink {
+    use super::TraceEvent;
+
+    pub fn set_enabled(_on: bool) {}
+    pub fn enabled() -> bool {
+        false
+    }
+    pub fn now_us() -> u64 {
+        0
+    }
+    pub fn push(_ev: TraceEvent) {}
+    pub fn drain() -> Vec<TraceEvent> {
+        Vec::new()
+    }
+    pub fn dropped() -> u64 {
+        0
+    }
+}
+
+pub use sink::{drain, dropped, enabled, now_us, set_enabled};
+
+/// Emit a span event: `start_us` from an earlier [`now_us`], duration
+/// computed here.  Call sites guard with [`enabled`] so key formatting
+/// costs nothing while tracing is off.
+pub fn emit_span(phase: &str, name: &str, key: String, worker: u64, start_us: u64, n: u64) {
+    sink::push(TraceEvent {
+        phase: phase.to_string(),
+        name: name.to_string(),
+        key,
+        worker,
+        seq: 0,
+        start_us,
+        dur_us: now_us().saturating_sub(start_us).max(1),
+        n,
+    });
+}
+
+/// Emit an instant event (duration 0).
+pub fn emit_instant(phase: &str, name: &str, key: String, worker: u64, n: u64) {
+    sink::push(TraceEvent {
+        phase: phase.to_string(),
+        name: name.to_string(),
+        key,
+        worker,
+        seq: 0,
+        start_us: now_us(),
+        dur_us: 0,
+        n,
+    });
+}
+
+/// Ingest a batch shipped from a worker process (a decoded
+/// `TraceBatch` payload): events re-enter this process's sink in batch
+/// order, keeping their originating lane.
+pub fn ingest(events: Vec<TraceEvent>) {
+    for ev in events {
+        sink::push(ev);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// canonical ordering
+// ---------------------------------------------------------------------------
+
+/// Sort events into the canonical deterministic order — `(phase, key,
+/// name, worker, seq)` — and reassign `seq` to the canonical index.  Two
+/// runs of the same fit produce the same canonical stream except for the
+/// timestamp payload fields.
+pub fn canonicalize(events: &mut Vec<TraceEvent>) {
+    events.sort_by(|a, b| {
+        (&a.phase, &a.key, &a.name, a.worker, a.seq)
+            .cmp(&(&b.phase, &b.key, &b.name, b.worker, b.seq))
+    });
+    for (i, ev) in events.iter_mut().enumerate() {
+        ev.seq = i as u64;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// binary codec (the TraceBatch wire payload)
+// ---------------------------------------------------------------------------
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn get_u64(bytes: &[u8], pos: &mut usize) -> Result<u64> {
+    let end = *pos + 8;
+    if end > bytes.len() {
+        bail!("trace batch underrun: need {end} bytes, have {}", bytes.len());
+    }
+    let v = u64::from_le_bytes(bytes[*pos..end].try_into().unwrap());
+    *pos = end;
+    Ok(v)
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u64(buf, s.len() as u64);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn get_str(bytes: &[u8], pos: &mut usize) -> Result<String> {
+    let len = get_u64(bytes, pos)? as usize;
+    let end = *pos + len;
+    if end > bytes.len() {
+        bail!("trace batch underrun: need {end} bytes, have {}", bytes.len());
+    }
+    let s = String::from_utf8(bytes[*pos..end].to_vec())
+        .context("trace batch: string field is not UTF-8")?;
+    *pos = end;
+    Ok(s)
+}
+
+/// Encode a batch of events in the little-endian length-prefixed dialect
+/// (the opaque payload of a `TraceBatch` frame).
+pub fn encode_events(events: &[TraceEvent]) -> Vec<u8> {
+    let mut b = Vec::new();
+    put_u64(&mut b, events.len() as u64);
+    for ev in events {
+        put_str(&mut b, &ev.phase);
+        put_str(&mut b, &ev.name);
+        put_str(&mut b, &ev.key);
+        put_u64(&mut b, ev.worker);
+        put_u64(&mut b, ev.seq);
+        put_u64(&mut b, ev.start_us);
+        put_u64(&mut b, ev.dur_us);
+        put_u64(&mut b, ev.n);
+    }
+    b
+}
+
+/// Decode a batch encoded by [`encode_events`]; every underrun or bad
+/// string is a named error, never a panic.
+pub fn decode_events(bytes: &[u8]) -> Result<Vec<TraceEvent>> {
+    let mut pos = 0usize;
+    let count = get_u64(bytes, &mut pos)? as usize;
+    let mut out = Vec::with_capacity(count.min(1 << 20));
+    for _ in 0..count {
+        out.push(TraceEvent {
+            phase: get_str(bytes, &mut pos)?,
+            name: get_str(bytes, &mut pos)?,
+            key: get_str(bytes, &mut pos)?,
+            worker: get_u64(bytes, &mut pos)?,
+            seq: get_u64(bytes, &mut pos)?,
+            start_us: get_u64(bytes, &mut pos)?,
+            dur_us: get_u64(bytes, &mut pos)?,
+            n: get_u64(bytes, &mut pos)?,
+        });
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// JSONL exporter
+// ---------------------------------------------------------------------------
+
+fn event_to_json(ev: &TraceEvent) -> Value {
+    let mut m = std::collections::BTreeMap::new();
+    m.insert("phase".to_string(), Value::Str(ev.phase.clone()));
+    m.insert("name".to_string(), Value::Str(ev.name.clone()));
+    m.insert("key".to_string(), Value::Str(ev.key.clone()));
+    m.insert("worker".to_string(), Value::Num(ev.worker as f64));
+    m.insert("seq".to_string(), Value::Num(ev.seq as f64));
+    m.insert("start_us".to_string(), Value::Num(ev.start_us as f64));
+    m.insert("dur_us".to_string(), Value::Num(ev.dur_us as f64));
+    m.insert("n".to_string(), Value::Num(ev.n as f64));
+    Value::Obj(m)
+}
+
+fn event_from_json(v: &Value) -> Result<TraceEvent> {
+    let field = |k: &str| v.get(k).with_context(|| format!("trace JSONL: missing field {k:?}"));
+    let s = |k: &str| -> Result<String> {
+        Ok(field(k)?.as_str().with_context(|| format!("trace JSONL: field {k:?} not a string"))?.to_string())
+    };
+    let u = |k: &str| -> Result<u64> {
+        let n = field(k)?.as_f64().with_context(|| format!("trace JSONL: field {k:?} not a number"))?;
+        Ok(n as u64)
+    };
+    Ok(TraceEvent {
+        phase: s("phase")?,
+        name: s("name")?,
+        key: s("key")?,
+        worker: u("worker")?,
+        seq: u("seq")?,
+        start_us: u("start_us")?,
+        dur_us: u("dur_us")?,
+        n: u("n")?,
+    })
+}
+
+/// Write events as JSONL: one canonical-ordered event per line.  The
+/// canonical order is deterministic run-to-run; only the timestamp fields
+/// (`start_us`/`dur_us`) differ between runs of the same fit.
+pub fn write_events(path: &Path, events: &[TraceEvent]) -> Result<()> {
+    let mut canon = events.to_vec();
+    canonicalize(&mut canon);
+    let mut out = String::new();
+    for ev in &canon {
+        out.push_str(&event_to_json(ev).render());
+        out.push('\n');
+    }
+    fs::write(path, out).with_context(|| format!("write trace JSONL {path:?}"))
+}
+
+/// Read a JSONL trace back — the inverse of [`write_events`] for
+/// canonicalized streams (`read_events(write_events(ev)) == ev`).
+pub fn read_events(path: &Path) -> Result<Vec<TraceEvent>> {
+    let text = fs::read_to_string(path).with_context(|| format!("read trace JSONL {path:?}"))?;
+    let mut out = Vec::new();
+    for (idx, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = Value::parse(line)
+            .map_err(|e| anyhow::anyhow!("trace JSONL line {}: {e}", idx + 1))?;
+        out.push(event_from_json(&v)?);
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Chrome trace-event exporter
+// ---------------------------------------------------------------------------
+
+/// Render events as Chrome trace-event JSON (the Perfetto /
+/// `chrome://tracing` format): spans are `ph:"X"` complete events with one
+/// `tid` lane per worker, instants are `ph:"i"` thread-scoped marks, and
+/// the deterministic key/count ride in `args`.
+pub fn chrome_json(events: &[TraceEvent]) -> Value {
+    let mut canon = events.to_vec();
+    canonicalize(&mut canon);
+    let mut arr = Vec::with_capacity(canon.len());
+    for ev in &canon {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("name".to_string(), Value::Str(format!("{}/{} {}", ev.phase, ev.name, ev.key)));
+        m.insert("cat".to_string(), Value::Str(ev.phase.clone()));
+        m.insert("pid".to_string(), Value::Num(1.0));
+        m.insert("tid".to_string(), Value::Num(ev.worker as f64));
+        m.insert("ts".to_string(), Value::Num(ev.start_us as f64));
+        if ev.dur_us > 0 {
+            m.insert("ph".to_string(), Value::Str("X".to_string()));
+            m.insert("dur".to_string(), Value::Num(ev.dur_us as f64));
+        } else {
+            m.insert("ph".to_string(), Value::Str("i".to_string()));
+            m.insert("s".to_string(), Value::Str("t".to_string()));
+        }
+        let mut args = std::collections::BTreeMap::new();
+        args.insert("key".to_string(), Value::Str(ev.key.clone()));
+        args.insert("n".to_string(), Value::Num(ev.n as f64));
+        args.insert("seq".to_string(), Value::Num(ev.seq as f64));
+        m.insert("args".to_string(), Value::Obj(args));
+        arr.push(Value::Obj(m));
+    }
+    let mut root = std::collections::BTreeMap::new();
+    root.insert("traceEvents".to_string(), Value::Arr(arr));
+    root.insert("displayTimeUnit".to_string(), Value::Str("ms".to_string()));
+    Value::Obj(root)
+}
+
+/// Write the Chrome trace-event JSON file for [`chrome_json`].
+pub fn write_chrome(path: &Path, events: &[TraceEvent]) -> Result<()> {
+    fs::write(path, chrome_json(events).render())
+        .with_context(|| format!("write Chrome trace {path:?}"))
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+
+    fn ev(phase: &str, name: &str, key: &str, worker: u64, start: u64, dur: u64, n: u64) -> TraceEvent {
+        TraceEvent {
+            phase: phase.into(),
+            name: name.into(),
+            key: key.into(),
+            worker,
+            seq: 0,
+            start_us: start,
+            dur_us: dur,
+            n,
+        }
+    }
+
+    fn sample() -> Vec<TraceEvent> {
+        vec![
+            ev("engine", "map", "t1.a0", 2, 10, 40, 512),
+            ev("engine", "map", "t0.a0", 1, 11, 35, 512),
+            ev("engine", "merge", "L1.n2", 1, 60, 9, 2),
+            ev("proc", "spawn", "w0", 0, 0, 0, 1),
+            ev("store", "spill-write", "f0.p3", 0, 70, 5, 4096),
+            ev("solver", "cd", "l=0.0313", 0, 90, 12, 17),
+        ]
+    }
+
+    #[test]
+    fn canonical_order_is_total_and_reassigns_seq() {
+        let mut a = sample();
+        let mut b = sample();
+        b.reverse();
+        canonicalize(&mut a);
+        canonicalize(&mut b);
+        assert_eq!(a, b, "canonical order is independent of emission order");
+        for (i, ev) in a.iter().enumerate() {
+            assert_eq!(ev.seq, i as u64);
+        }
+    }
+
+    #[test]
+    fn binary_codec_round_trips_bit_exact() {
+        let mut events = sample();
+        canonicalize(&mut events);
+        let bytes = encode_events(&events);
+        assert_eq!(decode_events(&bytes).unwrap(), events);
+        // truncation anywhere is a named error, never a panic
+        for cut in [0usize, 7, 8, 20, bytes.len() - 1] {
+            assert!(decode_events(&bytes[..cut]).is_err(), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn jsonl_round_trips_through_the_schema() {
+        let dir = std::env::temp_dir().join(format!("plrmr-trace-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("events.jsonl");
+        let mut events = sample();
+        canonicalize(&mut events);
+        write_events(&path, &events).unwrap();
+        let back = read_events(&path).unwrap();
+        assert_eq!(back, events, "read_events(write_events(ev)) == ev");
+        // every line parses standalone
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), events.len());
+        for line in text.lines() {
+            Value::parse(line).unwrap();
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn jsonl_bytes_are_stable_for_identical_streams() {
+        let dir = std::env::temp_dir().join(format!("plrmr-trace-stable-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let (p1, p2) = (dir.join("a.jsonl"), dir.join("b.jsonl"));
+        // emission order differs; canonical bytes must not
+        let mut a = sample();
+        let mut b = sample();
+        b.rotate_left(3);
+        a.iter_mut().for_each(|e| e.seq = 99);
+        write_events(&p1, &a).unwrap();
+        write_events(&p2, &b).unwrap();
+        assert_eq!(std::fs::read(&p1).unwrap(), std::fs::read(&p2).unwrap());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn chrome_export_is_well_formed_json_with_lanes() {
+        let v = chrome_json(&sample());
+        let rendered = v.render();
+        let parsed = Value::parse(&rendered).unwrap();
+        let evs = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(evs.len(), 6);
+        let mut span_seen = false;
+        let mut instant_seen = false;
+        for e in evs {
+            match e.get("ph").unwrap().as_str().unwrap() {
+                "X" => {
+                    span_seen = true;
+                    assert!(e.get("dur").unwrap().as_f64().unwrap() > 0.0);
+                }
+                "i" => instant_seen = true,
+                other => panic!("unexpected ph {other:?}"),
+            }
+            assert!(e.get("tid").is_some(), "one lane per worker");
+        }
+        assert!(span_seen && instant_seen);
+    }
+
+    #[test]
+    fn sink_collects_and_drains_in_emission_order() {
+        // the sink is process-global; drain whatever other tests left, run
+        // our sequence, and filter to this test's marker phase
+        set_enabled(true);
+        let _ = drain();
+        let t0 = now_us();
+        emit_span("test-sink", "alpha", "k0".into(), 3, t0, 7);
+        emit_instant("test-sink", "beta", "k1".into(), 5, 9);
+        ingest(vec![ev("test-sink", "gamma", "k2", 8, 1, 2, 3)]);
+        set_enabled(false);
+        let got: Vec<TraceEvent> =
+            drain().into_iter().filter(|e| e.phase == "test-sink").collect();
+        assert_eq!(got.len(), 3);
+        assert_eq!(got[0].name, "alpha");
+        assert!(got[0].dur_us >= 1, "span durations are clamped positive");
+        assert_eq!(got[1].name, "beta");
+        assert_eq!(got[1].dur_us, 0);
+        assert_eq!(got[2].worker, 8, "ingested events keep their lane");
+        // disabled sink drops silently
+        emit_instant("test-sink", "late", "k3".into(), 0, 0);
+        assert!(drain().iter().all(|e| e.phase != "test-sink"));
+    }
+}

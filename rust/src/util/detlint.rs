@@ -31,6 +31,12 @@
 //!   a fixed per-element order (no FMA, no horizontal reductions) and are
 //!   property-tested bit-identical to the scalar oracles.  Intrinsics
 //!   sprinkled anywhere else would not carry those proofs.
+//! * **`wallclock-outside-trace`** — `Instant::now`/`SystemTime::now`
+//!   anywhere outside [`crate::trace`] (where wall-clock is a sanctioned
+//!   *event payload*, never keyed data) and the allowlisted timing
+//!   surfaces (`util/timer.rs`, supervision deadlines).  Everything else
+//!   takes time through `util::timer::Timer` or `trace::now_us`, so a
+//!   grep for `Instant::now` enumerates every clock in the tree.
 //!
 //! Scanning is line-based and deliberately dumb: comments are stripped
 //! (everything from the first `//`), and a file stops being scanned at
@@ -109,6 +115,12 @@ const RULES: &[Rule] = &[
         needles: &["std::arch", "core::arch", "target_feature"],
         scope: Scope::All,
         why: "vector intrinsics outside the sanctioned stats/simd.rs microkernel boundary",
+    },
+    Rule {
+        name: "wallclock-outside-trace",
+        needles: &["Instant::now", "SystemTime::now"],
+        scope: Scope::All,
+        why: "raw wall-clock outside trace/; use util::timer::Timer or trace::now_us",
     },
 ];
 
@@ -213,13 +225,17 @@ fn scan_whole_file(rel: &str) -> bool {
     rel != "util/detlint.rs" && !rel.starts_with("bin/")
 }
 
-/// Rule-level exemptions: `sync.rs` IS the sanctioned lock surface, and
-/// `stats/simd.rs` IS the sanctioned vector-kernel boundary.
+/// Rule-level exemptions: `sync.rs` IS the sanctioned lock surface,
+/// `stats/simd.rs` IS the sanctioned vector-kernel boundary, and `trace/`
+/// IS the sanctioned wall-clock payload surface.
 fn rule_applies(rule: &Rule, rel: &str) -> bool {
     if rule.name == "raw-lock" && rel == "sync.rs" {
         return false;
     }
     if rule.name == "simd-intrinsics" && rel == "stats/simd.rs" {
+        return false;
+    }
+    if rule.name == "wallclock-outside-trace" && rel.starts_with("trace/") {
         return false;
     }
     match rule.scope {
@@ -377,15 +393,20 @@ mod tests {
             &[
                 ("mapreduce/engine.rs", "fn f() { let _g = m.lock().unwrap(); }\n"),
                 ("store/spill.rs", "use std::collections::HashMap;\n"),
+                // the Instant line fires BOTH time-in-keyed (keyed path)
+                // and wallclock-outside-trace (everywhere)
                 ("solver/cd.rs", "let t = Instant::now();\nlet s: f64 = xs.iter().sum::<f64>();\n"),
                 ("cv/folds.rs", "let r = thread_rng();\n"),
                 ("data/ingest.rs", "use std::arch::x86_64::_mm256_add_pd;\n"),
-                // out of scope: timing in util/, accumulation in stats/,
-                // locks in sync.rs, intrinsics in stats/simd.rs
+                // util/ is outside the keyed scope (no time-in-keyed) but
+                // still inside wallclock-outside-trace's Scope::All
                 ("util/timer.rs", "let t = Instant::now();\n"),
+                // out of scope: accumulation in stats/, locks in sync.rs,
+                // intrinsics in stats/simd.rs, wall-clock in trace/
                 ("stats/kahan.rs", "let s: f64 = xs.iter().sum::<f64>();\n"),
                 ("sync.rs", "let g = m.lock().unwrap();\n"),
                 ("stats/simd.rs", "use core::arch::x86_64::_mm256_mul_pd;\n"),
+                ("trace/mod.rs", "let t = Instant::now();\n"),
             ],
             "",
         );
@@ -400,11 +421,13 @@ mod tests {
                 "rand-nondet",
                 "raw-lock",
                 "simd-intrinsics",
-                "time-in-keyed"
+                "time-in-keyed",
+                "wallclock-outside-trace",
+                "wallclock-outside-trace"
             ]
         );
-        assert_eq!(report.findings.len(), 6, "{:#?}", report.findings);
-        assert_eq!(report.files_scanned, 9);
+        assert_eq!(report.findings.len(), 8, "{:#?}", report.findings);
+        assert_eq!(report.files_scanned, 10);
         let _ = fs::remove_dir_all(src.parent().unwrap());
     }
 

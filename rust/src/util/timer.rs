@@ -48,6 +48,11 @@ pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
 
 /// Human-friendly duration formatting for logs/tables.
 pub fn fmt_secs(s: f64) -> String {
+    if !s.is_finite() {
+        // NaN/±inf would otherwise fall through the < chain into the
+        // minutes arm and print "NaNm" — surface the value undisguised
+        return format!("{s}s");
+    }
     if s < 1e-6 {
         format!("{:.1}ns", s * 1e9)
     } else if s < 1e-3 {
@@ -87,5 +92,19 @@ mod tests {
         assert!(fmt_secs(5e-2).ends_with("ms"));
         assert!(fmt_secs(5.0).ends_with('s'));
         assert!(fmt_secs(600.0).ends_with('m'));
+    }
+
+    #[test]
+    fn fmt_boundaries_and_guards() {
+        // exact unit boundaries pick the larger unit (the `<` chain)
+        assert_eq!(fmt_secs(0.0), "0.0ns");
+        assert_eq!(fmt_secs(1e-6), "1.0µs");
+        assert_eq!(fmt_secs(1e-3), "1.00ms");
+        assert_eq!(fmt_secs(1.0), "1.00s");
+        assert_eq!(fmt_secs(119.999), "120.00s", "just under the minutes cut stays seconds");
+        assert_eq!(fmt_secs(120.0), "2.0m", "exactly 120s flips to minutes");
+        // non-finite inputs never masquerade as minutes
+        assert_eq!(fmt_secs(f64::NAN), "NaNs");
+        assert_eq!(fmt_secs(f64::INFINITY), "infs");
     }
 }

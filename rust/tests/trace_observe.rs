@@ -1,0 +1,238 @@
+//! Observe-only contract of the trace subsystem: enabling tracing,
+//! draining the sink and exporting the artifacts may not change a single
+//! bit of the fit — across worker counts, injected chaos, store budgets
+//! and the out-of-process runtime — and the exported JSONL / Chrome files
+//! are stable and well-formed.
+//!
+//! Tracing state is process-global (one sink per test binary), so every
+//! test serializes on `TRACE_LOCK` and starts from a disabled, empty sink.
+
+use std::path::PathBuf;
+use std::sync::{Mutex, MutexGuard};
+
+use plrmr::config::FitConfig;
+use plrmr::coordinator::Driver;
+use plrmr::data::synth::{generate, SynthSpec};
+use plrmr::data::Dataset;
+use plrmr::mapreduce::FaultPlan;
+use plrmr::trace;
+use plrmr::util::json::Value;
+
+static TRACE_LOCK: Mutex<()> = Mutex::new(());
+
+/// Take the trace lock and reset the process-global sink to (disabled,
+/// empty) so no test sees another's events.
+fn trace_guard() -> MutexGuard<'static, ()> {
+    let guard = TRACE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    trace::set_enabled(false);
+    let _ = trace::drain();
+    guard
+}
+
+/// A small workload every test shares: 4 map splits, 3 folds, 2 panels.
+fn base_cfg() -> FitConfig {
+    FitConfig {
+        workers: 2,
+        folds: 3,
+        n_lambdas: 8,
+        split_rows: 600,
+        gram_block: 8,
+        seed: 7,
+        ..FitConfig::default()
+    }
+}
+
+fn data() -> Dataset {
+    generate(&SynthSpec::sparse_linear(2_400, 12, 0.4, 31))
+}
+
+fn bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("plrmr-trace-{}-{name}", std::process::id()))
+}
+
+/// Run one traced fit and hand back (report, drained events).
+fn traced_fit(cfg: FitConfig, data: &Dataset) -> (plrmr::coordinator::FitReport, Vec<trace::TraceEvent>) {
+    trace::set_enabled(true);
+    let report = Driver::new(cfg).fit(data).unwrap();
+    trace::set_enabled(false);
+    (report, trace::drain())
+}
+
+#[test]
+fn tracing_is_observe_only_across_workers_chaos_and_budgets() {
+    let _g = trace_guard();
+    let data = data();
+    // untraced reference — the repo's bit-identity matrix already pins
+    // this fit across workers/budgets/chaos, so one reference suffices
+    let reference = Driver::new(base_cfg()).fit(&data).unwrap();
+    for workers in [1usize, 4, 8] {
+        for budget in [0usize, 4096] {
+            let cfg = FitConfig {
+                workers,
+                store_budget_bytes: budget,
+                fault: FaultPlan::chaotic(0.3, 99),
+                ..base_cfg()
+            };
+            let (report, events) = traced_fit(cfg, &data);
+            assert!(
+                !events.is_empty(),
+                "a traced fit must emit events (workers={workers}, budget={budget})"
+            );
+            assert_eq!(
+                bits(&report.model.beta),
+                bits(&reference.model.beta),
+                "tracing changed the fit (workers={workers}, budget={budget})"
+            );
+            assert_eq!(report.model.alpha.to_bits(), reference.model.alpha.to_bits());
+            assert_eq!(report.lambda_opt.to_bits(), reference.lambda_opt.to_bits());
+            assert_eq!(report.fold_sizes, reference.fold_sizes);
+            // the taxonomy actually covers the layers exercised here
+            for (phase, name) in [("engine", "map"), ("engine", "merge"), ("driver", "stats-job"), ("cv", "cell"), ("solver", "cd")] {
+                assert!(
+                    events.iter().any(|e| e.phase == phase && e.name == name),
+                    "missing {phase}/{name} events (workers={workers}, budget={budget})"
+                );
+            }
+            if budget > 0 {
+                assert!(
+                    events.iter().any(|e| e.phase == "store" && e.name == "spill-write"),
+                    "a {budget}-byte budget must emit spill-write events"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn proc_mode_ships_worker_events_and_stays_observe_only() {
+    let _g = trace_guard();
+    std::env::set_var("PLRMR_WORKER_BIN", env!("CARGO_BIN_EXE_plrmr"));
+    std::env::remove_var("PLRMR_WORKER_STALL_MS");
+    std::env::remove_var("PLRMR_WORKER_MUTE");
+    let spec = SynthSpec::sparse_linear(2_400, 12, 0.4, 31);
+    let reference = Driver::new(base_cfg()).fit_stream(&spec).unwrap();
+    trace::set_enabled(true);
+    let cfg = FitConfig { proc_workers: 2, fault: FaultPlan::kills(0.25, 99), ..base_cfg() };
+    let report = Driver::new(cfg).fit_stream(&spec).unwrap();
+    trace::set_enabled(false);
+    let events = trace::drain();
+    assert_eq!(
+        bits(&report.model.beta),
+        bits(&reference.model.beta),
+        "proc-mode tracing changed the fit"
+    );
+    // worker processes ship their engine events back as TraceBatch frames
+    assert!(
+        events.iter().any(|e| e.phase == "engine" && e.name == "map"),
+        "worker-side map events must arrive at the leader sink"
+    );
+    // the leader's own supervision timeline is interleaved in the same sink
+    assert!(
+        events.iter().any(|e| e.phase == "proc" && e.name == "spawn"),
+        "supervisor lifecycle events missing"
+    );
+    assert!(
+        events.iter().any(|e| e.phase == "proc" && e.name == "output"),
+        "task output events missing"
+    );
+}
+
+#[test]
+fn jsonl_is_byte_stable_run_to_run_modulo_timestamps() {
+    let _g = trace_guard();
+    let data = data();
+    let cfg = FitConfig { workers: 1, ..base_cfg() };
+    let mut dumps = Vec::new();
+    for run in 0..2 {
+        let (_, mut events) = traced_fit(cfg, &data);
+        // timestamps are the ONE sanctioned nondeterministic payload;
+        // zero them and the serialized stream must match byte for byte
+        for ev in &mut events {
+            ev.start_us = 0;
+            ev.dur_us = 0;
+        }
+        let path = tmp(&format!("stable-{run}.jsonl"));
+        trace::write_events(&path, &events).unwrap();
+        dumps.push(std::fs::read(&path).unwrap());
+        let _ = std::fs::remove_file(&path);
+    }
+    assert!(!dumps[0].is_empty());
+    assert_eq!(
+        dumps[0], dumps[1],
+        "canonical JSONL must be byte-stable at workers=1 once timestamps are zeroed"
+    );
+}
+
+#[test]
+fn multi_worker_canonical_structure_is_stable() {
+    let _g = trace_guard();
+    let data = data();
+    let cfg = FitConfig { workers: 4, ..base_cfg() };
+    // the worker lane is scheduling-dependent under a real thread pool, so
+    // compare the canonical structure (phase, name, key, n) — everything
+    // except timestamps and lane assignment
+    let shape = |events: &[trace::TraceEvent]| {
+        let mut v: Vec<(String, String, String, u64)> = events
+            .iter()
+            .map(|e| (e.phase.clone(), e.name.clone(), e.key.clone(), e.n))
+            .collect();
+        v.sort();
+        v
+    };
+    let (_, a) = traced_fit(cfg, &data);
+    let (_, b) = traced_fit(cfg, &data);
+    assert!(!a.is_empty());
+    assert_eq!(shape(&a), shape(&b), "canonical event structure drifted run-to-run");
+}
+
+#[test]
+fn exporters_round_trip_and_chrome_is_well_formed() {
+    let _g = trace_guard();
+    let data = data();
+    let (_, raw) = traced_fit(base_cfg(), &data);
+    let events = {
+        let mut e = raw;
+        trace::canonicalize(&mut e);
+        e
+    };
+
+    // JSONL: read_events(write_events(ev)) == ev for canonical streams
+    let jsonl = tmp("roundtrip.jsonl");
+    trace::write_events(&jsonl, &events).unwrap();
+    let back = trace::read_events(&jsonl).unwrap();
+    let _ = std::fs::remove_file(&jsonl);
+    assert_eq!(back, events, "JSONL round-trip must be lossless");
+
+    // binary codec (the TraceBatch payload) round-trips too
+    assert_eq!(trace::decode_events(&trace::encode_events(&events)).unwrap(), events);
+
+    // Chrome export: valid JSON, traceEvents array, one lane per worker,
+    // spans are ph:"X" with a dur, instants ph:"i"
+    let chrome = tmp("roundtrip-chrome.json");
+    trace::write_chrome(&chrome, &events).unwrap();
+    let text = std::fs::read_to_string(&chrome).unwrap();
+    let _ = std::fs::remove_file(&chrome);
+    let v = Value::parse(&text).unwrap();
+    let arr = v.get("traceEvents").unwrap().as_arr().unwrap();
+    assert_eq!(arr.len(), events.len());
+    for ev in arr {
+        let ph = ev.get("ph").unwrap().as_str().unwrap();
+        assert!(ph == "X" || ph == "i", "unexpected phase type {ph:?}");
+        if ph == "X" {
+            assert!(ev.get("dur").unwrap().as_f64().unwrap() >= 1.0);
+        }
+        assert!(ev.get("args").unwrap().get("key").is_some());
+    }
+
+    // the analyzer consumes the same stream and renders the summary tables
+    let analysis = trace::analyze::analyze(&events);
+    assert_eq!(analysis.events, events.len());
+    assert!(analysis.map_skew() >= 1.0);
+    let rendered = analysis.render();
+    assert!(rendered.contains("critical path"));
+    assert!(rendered.contains("top stragglers"));
+}
